@@ -1,0 +1,66 @@
+//! Cluster-scale sweep: the headline experiment (Figs. 9/10 condensed) on
+//! the simulator — DistCA vs WLB-ideal across models, context lengths and
+//! GPU counts, averaged over sampled batches.
+//!
+//! Run: `cargo run --release --example cluster_sweep [n_batches]`
+
+use distca::config::{run::DataDist, ClusterConfig, ModelConfig};
+use distca::data::distributions::sampler_for;
+use distca::metrics::{comparison_table, ComparisonRow};
+use distca::sim::strategies::{run_distca, run_wlb_ideal, SimParams};
+use distca::sim::IterationReport;
+use distca::util::rng::Rng;
+
+fn main() {
+    let n_batches: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(5);
+
+    let grid: &[(&str, usize, usize)] = &[
+        ("llama-8b", 128 * 1024, 64),
+        ("llama-8b", 256 * 1024, 128),
+        ("llama-8b", 512 * 1024, 256),
+        ("llama-34b", 128 * 1024, 64),
+        ("llama-34b", 256 * 1024, 128),
+        ("llama-34b", 512 * 1024, 256),
+    ];
+
+    for dist in [DataDist::Pretrain, DataDist::ProLong] {
+        let mut rows = Vec::new();
+        for &(model_name, max_doc, n_gpus) in grid {
+            let model = ModelConfig::by_name(model_name).unwrap();
+            let cluster = ClusterConfig::h200(n_gpus / 8);
+            let params = SimParams::new(model, cluster, 8, 1);
+            let batch_tokens = (n_gpus / 8) * max_doc.min(131_072) * 2;
+            let mut wlb_reports = Vec::new();
+            let mut ca_reports = Vec::new();
+            for b in 0..n_batches {
+                let mut rng = Rng::new(0xFEEDu64 + b as u64 * 7919 + max_doc as u64);
+                let docs =
+                    sampler_for(dist, max_doc).sample_tokens(&mut rng, batch_tokens, 0);
+                wlb_reports.push(run_wlb_ideal(&docs, max_doc, &params));
+                ca_reports.push(run_distca(&docs, max_doc, &params));
+            }
+            rows.push(ComparisonRow {
+                model: model_name.into(),
+                max_doc_len: max_doc,
+                n_gpus,
+                dataset: dist.name().into(),
+                baseline: IterationReport::average(&wlb_reports),
+                distca: IterationReport::average(&ca_reports),
+            });
+        }
+        comparison_table(
+            &format!("DistCA vs WLB-ideal — {} (avg of {n_batches} batches)", dist.name()),
+            &rows,
+        )
+        .print();
+        let speedups: Vec<f64> = rows.iter().map(|r| r.speedup()).collect();
+        println!(
+            "speedup range: {:.2}x - {:.2}x (paper: 1.05-1.35x)\n",
+            speedups.iter().cloned().fold(f64::INFINITY, f64::min),
+            speedups.iter().cloned().fold(0.0, f64::max)
+        );
+    }
+}

@@ -1,0 +1,227 @@
+"""AOT lowering: python runs ONCE here; rust owns the request path.
+
+Emits HLO **text** (not serialized protos — the image's xla_extension
+0.5.1 rejects jax≥0.5's 64-bit instruction ids; the text parser reassigns
+ids; see /opt/xla-example/README.md) for:
+
+  * ``train_step.hlo.txt``  — tiny-LM fwd+bwd+AdamW over a packed stream;
+  * ``init_params.hlo.txt`` — parameter initialization from a PRNG key;
+  * ``ca_fwd_<Tq>x<Tkv>_h<H>kv<Hkv>d<D>.hlo.txt`` — the batched CA-task
+    kernel at the shapes the attention servers serve;
+  * ``pre_ca.hlo.txt`` / ``post_ca.hlo.txt`` — one layer's context-
+    independent halves (the disaggregation boundary);
+  * ``profiler_grid.json``  — measured CA latency grid for the rust
+    scheduler's profiler (CPU interpret-mode timings: *shape* calibration
+    only; absolute numbers are testbed-specific by design);
+  * ``manifest.json``       — shapes/dtypes of every artifact.
+
+Usage:  python -m compile.aot --outdir ../artifacts [--profile]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.core_attention import BLOCK_Q, ca_task_batch_prebuilt
+
+# The packed-stream length of one train step (tokens per step).
+TRAIN_T = 512
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write(outdir: str, name: str, text: str) -> None:
+    path = os.path.join(outdir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {name}: {len(text) / 1e6:.2f} MB")
+
+
+def lower_train_step(outdir: str, manifest: dict) -> None:
+    cfg = M.tiny_100m()
+    n = M.n_params(cfg)
+    pspec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    sspec = jax.ShapeDtypeStruct((), jnp.int32)
+    tokspec = jax.ShapeDtypeStruct((TRAIN_T,), jnp.int32)
+    bmspec = jax.ShapeDtypeStruct((TRAIN_T // BLOCK_Q, 4), jnp.int32)
+
+    def step(params, m, v, s, tokens, targets, bm):
+        return M.train_step(params, m, v, s, tokens, targets, bm, cfg)
+
+    lowered = jax.jit(step, donate_argnums=(0, 1, 2)).lower(
+        pspec, pspec, pspec, sspec, tokspec, tokspec, bmspec
+    )
+    write(outdir, "train_step.hlo.txt", to_hlo_text(lowered))
+    manifest["train_step"] = {
+        "n_params": n,
+        "tokens_per_step": TRAIN_T,
+        "block_q": BLOCK_Q,
+        "inputs": ["params[n]", "m[n]", "v[n]", "step[]", "tokens[T]",
+                   "targets[T]", "block_meta[T/128,4]"],
+        "outputs": ["params[n]", "m[n]", "v[n]", "step[]", "loss[]"],
+        "model": cfg._asdict(),
+    }
+
+    def init(seed):
+        key = jax.random.PRNGKey(seed)
+        return (M.init_params(key, cfg),)
+
+    lowered = jax.jit(init).lower(jax.ShapeDtypeStruct((), jnp.int32))
+    write(outdir, "init_params.hlo.txt", to_hlo_text(lowered))
+
+
+def lower_ca_kernels(outdir: str, manifest: dict) -> None:
+    cfg = M.tiny_100m()
+    h, hkv, d = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    shapes = [(512, 1024), (1024, 1024), (1024, 2048)]
+    entries = []
+    for tq, tkv in shapes:
+        qs = jax.ShapeDtypeStruct((tq, h, d), jnp.float32)
+        ks = jax.ShapeDtypeStruct((tkv, hkv, d), jnp.float32)
+        bm = jax.ShapeDtypeStruct((tq // BLOCK_Q, 4), jnp.int32)
+
+        def ca(q, k, v, meta):
+            return (ca_task_batch_prebuilt(q, k, v, meta),)
+
+        lowered = jax.jit(ca).lower(qs, ks, ks, bm)
+        name = f"ca_fwd_{tq}x{tkv}_h{h}kv{hkv}d{d}.hlo.txt"
+        write(outdir, name, to_hlo_text(lowered))
+        entries.append({"file": name, "tq": tq, "tkv": tkv,
+                        "heads": h, "kv_heads": hkv, "head_dim": d})
+    manifest["ca_kernels"] = entries
+
+
+def lower_layer_halves(outdir: str, manifest: dict) -> None:
+    cfg = M.tiny_100m()
+    t = TRAIN_T
+    hd = cfg.hidden
+    hq = cfg.n_heads * cfg.head_dim
+    hkv = cfg.kv_heads * cfg.head_dim
+    i = cfg.intermediate
+
+    def pre(x, ln1, wq, wk, wv, positions):
+        p = {"l0.ln1": ln1, "l0.wq": wq, "l0.wk": wk, "l0.wv": wv}
+        return M.pre_ca(x, p, 0, cfg, positions)
+
+    lowered = jax.jit(pre).lower(
+        jax.ShapeDtypeStruct((t, hd), jnp.float32),
+        jax.ShapeDtypeStruct((hd,), jnp.float32),
+        jax.ShapeDtypeStruct((hd, hq), jnp.float32),
+        jax.ShapeDtypeStruct((hd, hkv), jnp.float32),
+        jax.ShapeDtypeStruct((hd, hkv), jnp.float32),
+        jax.ShapeDtypeStruct((t,), jnp.int32),
+    )
+    write(outdir, "pre_ca.hlo.txt", to_hlo_text(lowered))
+
+    def post(x, attn, wo, ln2, wg, wu, wd):
+        p = {"l0.wo": wo, "l0.ln2": ln2, "l0.w_gate": wg, "l0.w_up": wu,
+             "l0.w_down": wd}
+        return (M.post_ca(x, attn, p, 0, cfg),)
+
+    lowered = jax.jit(post).lower(
+        jax.ShapeDtypeStruct((t, hd), jnp.float32),
+        jax.ShapeDtypeStruct((t, cfg.n_heads, cfg.head_dim), jnp.float32),
+        jax.ShapeDtypeStruct((hq, hd), jnp.float32),
+        jax.ShapeDtypeStruct((hd,), jnp.float32),
+        jax.ShapeDtypeStruct((hd, i), jnp.float32),
+        jax.ShapeDtypeStruct((hd, i), jnp.float32),
+        jax.ShapeDtypeStruct((i, hd), jnp.float32),
+    )
+    write(outdir, "post_ca.hlo.txt", to_hlo_text(lowered))
+    manifest["layer_halves"] = {"tokens": t, "model": cfg._asdict()}
+
+
+def profile_grid(outdir: str, manifest: dict) -> None:
+    """Measure the interpret-mode kernel over a (q, kv) grid.
+
+    These are CPU timings — they calibrate the *shape* of the profiler
+    (the 128-token knee, saturation onset), not absolute TPU performance;
+    DESIGN.md §8 carries the VMEM/MXU analysis for real hardware. The
+    rust scheduler defaults to its analytic H200 profile and can load
+    this grid with --profiler-grid.
+    """
+    cfg = M.tiny_100m()
+    h, hkv, d = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    q_grid = [128, 256, 512, 1024]
+    kv_grid = [128, 256, 512, 1024, 2048]
+    lat = []
+    rng = np.random.default_rng(0)
+    for tq in q_grid:
+        row = []
+        for tkv in kv_grid:
+            q = rng.standard_normal((tq, h, d)).astype(np.float32)
+            k = rng.standard_normal((max(tkv, tq), hkv, d)).astype(np.float32)
+            v = k.copy()
+            kvlen = max(tkv, tq)
+            meta = np.array([[0, tq, 0, kvlen]], dtype=np.int32)
+            bm = jnp.asarray(
+                __import__(
+                    "compile.kernels.core_attention", fromlist=["x"]
+                ).block_meta_from_tasks(meta, tq)
+            )
+            fn = jax.jit(lambda a, b, c, m: ca_task_batch_prebuilt(a, b, c, m))
+            out = fn(q, k, v, bm)
+            out.block_until_ready()
+            t0 = time.perf_counter()
+            iters = 3
+            for _ in range(iters):
+                fn(q, k, v, bm).block_until_ready()
+            row.append((time.perf_counter() - t0) / iters)
+        lat.append(row)
+    flops_rate = 4.0 * h * d * q_grid[-1] * kv_grid[-1] / lat[-1][-1]
+    grid = {
+        "q_grid": q_grid,
+        "kv_grid": kv_grid,
+        "latency": lat,
+        "peak_flops": flops_rate,
+        "h_q": h * d,
+        "note": "CPU interpret-mode timings: shape calibration only",
+    }
+    with open(os.path.join(outdir, "profiler_grid.json"), "w") as f:
+        json.dump(grid, f, indent=1)
+    print("  wrote profiler_grid.json")
+    manifest["profiler_grid"] = {"q_grid": q_grid, "kv_grid": kv_grid}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--profile", action="store_true",
+                    help="also measure the CPU profiler grid (slow)")
+    ap.add_argument("--skip-train", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+    manifest: dict = {}
+    print("lowering CA kernels...")
+    lower_ca_kernels(args.outdir, manifest)
+    print("lowering layer halves...")
+    lower_layer_halves(args.outdir, manifest)
+    if not args.skip_train:
+        print("lowering train step (tiny-100m)...")
+        lower_train_step(args.outdir, manifest)
+    if args.profile:
+        print("profiling CA grid (interpret mode)...")
+        profile_grid(args.outdir, manifest)
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

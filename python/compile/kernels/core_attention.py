@@ -1,0 +1,326 @@
+"""L1: the Pallas packed-varlen causal core-attention kernel.
+
+This is the repo's FlashAttention-2 stand-in (DESIGN.md §Hardware-
+Adaptation): the paper's CUDA varlen kernel — one threadblock per
+128-token tile, shared-memory staging, warp softmax — becomes a Pallas
+grid over ``(q_block, head)`` with VMEM tiles expressed through BlockSpec,
+online softmax over KV tiles on the VPU, and (on a real TPU) 128×128 MXU
+matmuls. The kernel consumes a *fused batch of CA-tasks* — the
+composability property (§3.3) CAD relies on: shards from any document,
+DP replica, or PP stage re-batched into one high-occupancy call.
+
+Layout contract (shared with ``ref.py`` and the rust attention server):
+  * ``q``: ``[total_q, n_heads, d]``, tasks packed back-to-back, each
+    task's rows 128-aligned (padding rows between tasks are allowed and
+    produce zeros);
+  * ``k``/``v``: ``[total_kv, n_kv_heads, d]``;
+  * ``block_meta``: ``[total_q // BLOCK_Q, 4]`` int32 per **query block**:
+    ``(kv_ofs, kv_len, diag, valid)`` where ``diag`` is the causal offset
+    of the block's first row (that row may attend ``kv_ofs … kv_ofs+diag``)
+    and ``valid`` is 0 for padding blocks.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the same schedule to plain HLO (see
+/opt/xla-example/README.md). Real-TPU efficiency is argued analytically in
+DESIGN.md §8 from the VMEM footprint of these BlockSpecs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Tile sizes: 128 matches both FA2's tile (paper Fig. 5) and the MXU edge.
+BLOCK_Q = 128
+BLOCK_KV = 128
+
+NEG_INF = -1e30
+
+
+def _ca_kernel(meta_ref, q_ref, k_ref, v_ref, o_ref, lse_ref, *, kv_tiles, scale):
+    """One (q_block, head) grid cell: online-softmax over KV tiles.
+
+    ``q_ref``: [BLOCK_Q, d] VMEM tile of this block's queries (one head).
+    ``k_ref``/``v_ref``: [total_kv, d] — full packed KV for this head
+    (interpret mode; a real-TPU variant would stream tiles via BlockSpec).
+    ``meta_ref``: [4] int32 for this q block.
+    """
+    kv_ofs = meta_ref[0, 0]
+    kv_len = meta_ref[0, 1]
+    diag = meta_ref[0, 2]
+    valid = meta_ref[0, 3]
+
+    q = q_ref[:, 0, :].astype(jnp.float32) * scale  # [BQ, d]
+    d = q.shape[-1]
+
+    def body(t, carry):
+        acc, m_i, l_i = carry
+        start = kv_ofs + t * BLOCK_KV
+        k_tile = pl.load(
+            k_ref, (pl.dslice(start, BLOCK_KV), 0, slice(None))
+        ).astype(jnp.float32)
+        v_tile = pl.load(
+            v_ref, (pl.dslice(start, BLOCK_KV), 0, slice(None))
+        ).astype(jnp.float32)
+        s = q @ k_tile.T  # [BQ, BKV]
+        # Mask: key j (local to the task: t*BKV + col) must satisfy
+        #   j <= diag + row   and   j < kv_len.
+        j = t * BLOCK_KV + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        r = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        mask = (j <= diag + r) & (j < kv_len)
+        s = jnp.where(mask, s, NEG_INF)
+        # Online softmax update.
+        m_new = jnp.maximum(m_i, s.max(axis=-1))
+        alpha = jnp.exp(m_i - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_i * alpha + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + p @ v_tile
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((BLOCK_Q, d), jnp.float32)
+    m0 = jnp.full((BLOCK_Q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((BLOCK_Q,), jnp.float32)
+    # Only tiles overlapping [0, kv_len) contribute; we bound the loop by
+    # the task's tile count so fused batches don't pay for each other's
+    # context (the composability requirement).
+    n_tiles = jnp.minimum(
+        jax.lax.div(kv_len + BLOCK_KV - 1, BLOCK_KV), jnp.int32(kv_tiles)
+    )
+    acc, m_i, l_i = jax.lax.fori_loop(
+        0,
+        n_tiles,
+        body,
+        (acc0, m0, l0),
+        unroll=False,
+    )
+    out = acc / jnp.maximum(l_i, 1e-20)[:, None]
+    out = jnp.where(valid > 0, out, 0.0)
+    o_ref[:, 0, :] = out.astype(o_ref.dtype)
+    # Log-sum-exp per row, saved for the backward kernel (the only
+    # per-row state CA keeps — the paper's "statelessness": O(l), not
+    # O(l²)).
+    lse = jnp.where(valid > 0, m_i + jnp.log(jnp.maximum(l_i, 1e-20)), 0.0)
+    lse_ref[:, 0] = lse.astype(lse_ref.dtype)
+
+
+def block_meta_from_tasks(meta, total_q):
+    """Expand per-task metadata ``(q_ofs, q_len, kv_ofs, kv_len)`` into the
+    per-q-block array the kernel consumes. Task q ranges must be
+    BLOCK_Q-aligned (the paper's 128-multiple sharding rule)."""
+    n_blocks = total_q // BLOCK_Q
+    out = np.zeros((n_blocks, 4), dtype=np.int32)
+    for q_ofs, q_len, kv_ofs, kv_len in np.asarray(meta):
+        if q_len == 0:
+            continue
+        assert q_ofs % BLOCK_Q == 0 and q_len % BLOCK_Q == 0, (
+            f"task q range ({q_ofs}, {q_len}) must be {BLOCK_Q}-aligned"
+        )
+        assert q_len <= kv_len
+        for b in range(q_len // BLOCK_Q):
+            blk = q_ofs // BLOCK_Q + b
+            # first row of this block sits at task-local position
+            # (kv_len - q_len) + b*BLOCK_Q in the context
+            diag = (kv_len - q_len) + b * BLOCK_Q
+            out[blk] = (kv_ofs, kv_len, diag, 1)
+    return out
+
+
+def _ca_bwd_kernel(
+    meta_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, dq_ref, dk_ref, dv_ref,
+    *, kv_tiles, scale, group,
+):
+    """FlashAttention-style backward for one (q_block, head) grid cell.
+
+    Recomputes P tile-by-tile from the saved per-row log-sum-exp (the
+    IO-aware recomputation of Dao et al. 2022 — nothing quadratic was
+    stored), producing this block's dQ and accumulating dK/dV into the
+    shared (per-KV-head) output blocks. Grid cells execute sequentially,
+    making the read-modify-write accumulation well-defined.
+    """
+    i = pl.program_id(0)
+    h = pl.program_id(1)
+    kv_ofs = meta_ref[0, 0]
+    kv_len = meta_ref[0, 1]
+    diag = meta_ref[0, 2]
+    valid = meta_ref[0, 3]
+
+    # First visitor of this dK/dV block zeroes it (q block 0 of the first
+    # query head mapped to this KV head).
+    @pl.when((i == 0) & (h % group == 0))
+    def _zero():
+        dk_ref[...] = jnp.zeros_like(dk_ref)
+        dv_ref[...] = jnp.zeros_like(dv_ref)
+
+    q = q_ref[:, 0, :].astype(jnp.float32) * scale
+    do = do_ref[:, 0, :].astype(jnp.float32)
+    lse = lse_ref[:, 0].astype(jnp.float32)
+    d = q.shape[-1]
+    # D_r = rowsum(dO ∘ O); O is recomputed implicitly: D = Σ_j P_rj
+    # (dO·v_j) — computed in the loop to avoid needing O as an input.
+    # First pass computes D; second applies it. Single pass trick: D can
+    # be computed from dO and O, but O = P·V needs the same loop — so run
+    # the loop once accumulating both O·dO rowsum and the gradients with
+    # a two-phase fori_loop.
+
+    def d_pass(t, acc):
+        start = kv_ofs + t * BLOCK_KV
+        k_t = pl.load(k_ref, (pl.dslice(start, BLOCK_KV), 0, slice(None))).astype(jnp.float32)
+        v_t = pl.load(v_ref, (pl.dslice(start, BLOCK_KV), 0, slice(None))).astype(jnp.float32)
+        s = q @ k_t.T
+        j = t * BLOCK_KV + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        r = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        mask = (j <= diag + r) & (j < kv_len)
+        p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)
+        return acc + (p * (do @ v_t.T)).sum(axis=-1)
+
+    n_tiles = jnp.minimum(
+        jax.lax.div(kv_len + BLOCK_KV - 1, BLOCK_KV), jnp.int32(kv_tiles)
+    )
+    dvec = jax.lax.fori_loop(0, n_tiles, d_pass, jnp.zeros((BLOCK_Q,), jnp.float32))
+
+    def grad_pass(t, dq_acc):
+        start = kv_ofs + t * BLOCK_KV
+        k_t = pl.load(k_ref, (pl.dslice(start, BLOCK_KV), 0, slice(None))).astype(jnp.float32)
+        v_t = pl.load(v_ref, (pl.dslice(start, BLOCK_KV), 0, slice(None))).astype(jnp.float32)
+        s = q @ k_t.T
+        j = t * BLOCK_KV + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        r = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        mask = (j <= diag + r) & (j < kv_len)
+        p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)
+        dp = do @ v_t.T
+        ds = p * (dp - dvec[:, None])  # [BQ, BKV]
+        dq_acc = dq_acc + ds @ k_t * scale
+        # Accumulate dK, dV (read-modify-write on shared blocks).
+        if True:
+            dk_old = pl.load(dk_ref, (pl.dslice(start, BLOCK_KV), 0, slice(None)))
+            pl.store(
+                dk_ref,
+                (pl.dslice(start, BLOCK_KV), 0, slice(None)),
+                dk_old + (ds.T @ q).astype(dk_ref.dtype),
+            )
+            dv_old = pl.load(dv_ref, (pl.dslice(start, BLOCK_KV), 0, slice(None)))
+            pl.store(
+                dv_ref,
+                (pl.dslice(start, BLOCK_KV), 0, slice(None)),
+                dv_old + (p.T @ do).astype(dv_ref.dtype),
+            )
+        return dq_acc
+
+    dq = jax.lax.fori_loop(0, n_tiles, grad_pass, jnp.zeros((BLOCK_Q, d), jnp.float32))
+    dq = jnp.where(valid > 0, dq, 0.0)
+    dq_ref[:, 0, :] = dq.astype(dq_ref.dtype)
+
+
+def _fwd_pallas(q, k, v, block_meta, interpret):
+    total_q, n_heads, d = q.shape
+    total_kv, n_kv_heads, _ = k.shape
+    assert total_q % BLOCK_Q == 0
+    assert total_kv % BLOCK_KV == 0
+    group = n_heads // n_kv_heads
+    kv_tiles = total_kv // BLOCK_KV
+    scale = 1.0 / np.sqrt(d)
+
+    grid = (total_q // BLOCK_Q, n_heads)
+    kernel = functools.partial(_ca_kernel, kv_tiles=kv_tiles, scale=scale)
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 4), lambda i, h: (i, 0)),
+            pl.BlockSpec((BLOCK_Q, 1, d), lambda i, h: (i, h, 0)),
+            pl.BlockSpec((total_kv, 1, d), lambda i, h, g=group: (0, h // g, 0)),
+            pl.BlockSpec((total_kv, 1, d), lambda i, h, g=group: (0, h // g, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_Q, 1, d), lambda i, h: (i, h, 0)),
+            pl.BlockSpec((BLOCK_Q, 1), lambda i, h: (i, h)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(q.shape, q.dtype),
+            jax.ShapeDtypeStruct((total_q, n_heads), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_meta, q, k, v)
+    return o, lse
+
+
+def _bwd_pallas(q, k, v, do, lse, block_meta, interpret):
+    total_q, n_heads, d = q.shape
+    total_kv, n_kv_heads, _ = k.shape
+    group = n_heads // n_kv_heads
+    kv_tiles = total_kv // BLOCK_KV
+    scale = 1.0 / np.sqrt(d)
+    grid = (total_q // BLOCK_Q, n_heads)
+    kernel = functools.partial(
+        _ca_bwd_kernel, kv_tiles=kv_tiles, scale=scale, group=group
+    )
+    dq, dk, dv = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 4), lambda i, h: (i, 0)),
+            pl.BlockSpec((BLOCK_Q, 1, d), lambda i, h: (i, h, 0)),
+            pl.BlockSpec((total_kv, 1, d), lambda i, h, g=group: (0, h // g, 0)),
+            pl.BlockSpec((total_kv, 1, d), lambda i, h, g=group: (0, h // g, 0)),
+            pl.BlockSpec((BLOCK_Q, 1, d), lambda i, h: (i, h, 0)),
+            pl.BlockSpec((BLOCK_Q, 1), lambda i, h: (i, h)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_Q, 1, d), lambda i, h: (i, h, 0)),
+            pl.BlockSpec((total_kv, 1, d), lambda i, h, g=group: (0, h // g, 0)),
+            pl.BlockSpec((total_kv, 1, d), lambda i, h, g=group: (0, h // g, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(q.shape, q.dtype),
+            jax.ShapeDtypeStruct((total_kv, n_kv_heads, d), jnp.float32),
+            jax.ShapeDtypeStruct((total_kv, n_kv_heads, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_meta, q, k, v, do, lse)
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _ca(q, k, v, block_meta, interpret=True):
+    o, _ = _fwd_pallas(q, k, v, block_meta, interpret)
+    return o
+
+
+def _ca_fwd_rule(q, k, v, block_meta, interpret):
+    o, lse = _fwd_pallas(q, k, v, block_meta, interpret)
+    return o, (q, k, v, lse, block_meta)
+
+
+def _ca_bwd_rule(interpret, residuals, do):
+    q, k, v, lse, block_meta = residuals
+    dq, dk, dv = _bwd_pallas(q, k, v, do, lse, block_meta, interpret)
+    return dq, dk, dv, None
+
+
+_ca.defvjp(_ca_fwd_rule, _ca_bwd_rule)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _run(q, k, v, block_meta, interpret=True):
+    return _ca(q, k, v, block_meta, interpret)
+
+
+def ca_task_batch(q, k, v, meta, interpret=True):
+    """Run a fused batch of CA-tasks through the Pallas kernel.
+
+    Same contract as ``ref.ca_task_batch_reference`` but task q ranges
+    must be 128-aligned. ``meta`` is per-task; block expansion happens
+    host-side (the rust coordinator ships per-block metadata directly).
+    """
+    block_meta = jnp.asarray(block_meta_from_tasks(meta, q.shape[0]))
+    return _run(q, k, v, block_meta, interpret=interpret)
+
+
+def ca_task_batch_prebuilt(q, k, v, block_meta, interpret=True):
+    """AOT entry point: per-block metadata as a traced input so one
+    compiled artifact serves any task composition of the same shape."""
+    return _run(q, k, v, block_meta, interpret=interpret)

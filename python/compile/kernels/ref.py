@@ -1,0 +1,89 @@
+"""Pure-jnp correctness oracle for the packed-varlen causal core-attention
+kernel.
+
+Semantics (paper §4.1): a *CA-task* ``t`` is the core attention of a query
+shard ``q(t)`` — rows ``[q_ofs, q_ofs + q_len)`` of the packed Q buffer —
+against its causal KV context ``kv(t)`` — rows ``[kv_ofs, kv_ofs + kv_len)``
+of the packed KV buffer. The query rows correspond to the *last* ``q_len``
+positions of the context (positions ``kv_len - q_len … kv_len - 1`` of the
+document prefix), so local query row ``r`` may attend keys ``0 … kv_len -
+q_len + r``.
+
+A batch of CA-tasks is described by an int32 metadata array of shape
+``[n_tasks, 4]`` with columns ``(q_ofs, q_len, kv_ofs, kv_len)``. Rows of Q
+not covered by any task are padding and produce zero output.
+
+GQA: query head ``h`` reads KV head ``h // (n_heads // n_kv_heads)``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def ca_task_batch_reference(q, k, v, meta):
+    """Reference packed CA over a batch of CA-tasks.
+
+    Args:
+      q: ``[total_q, n_heads, d]`` queries (unscaled — this reference
+        applies the ``1/sqrt(d)`` scaling itself).
+      k, v: ``[total_kv, n_kv_heads, d]`` packed context tensors.
+      meta: ``[n_tasks, 4]`` int32 ``(q_ofs, q_len, kv_ofs, kv_len)``.
+
+    Returns:
+      ``[total_q, n_heads, d]`` outputs; padding rows are zero.
+    """
+    q = jnp.asarray(q)
+    k = jnp.asarray(k)
+    v = jnp.asarray(v)
+    meta = np.asarray(meta)
+    _, n_heads, d = q.shape
+    n_kv_heads = k.shape[1]
+    assert n_heads % n_kv_heads == 0, "GQA requires n_heads % n_kv_heads == 0"
+    group = n_heads // n_kv_heads
+    scale = 1.0 / np.sqrt(d)
+
+    out = jnp.zeros_like(q)
+    for q_ofs, q_len, kv_ofs, kv_len in meta:
+        if q_len == 0:
+            continue
+        assert q_len <= kv_len, "a causal task's context includes its own rows"
+        qt = q[q_ofs : q_ofs + q_len]          # [q_len, H, d]
+        kt = k[kv_ofs : kv_ofs + kv_len]       # [kv_len, Hkv, d]
+        vt = v[kv_ofs : kv_ofs + kv_len]
+        # Expand KV heads for GQA.
+        kt = jnp.repeat(kt, group, axis=1)     # [kv_len, H, d]
+        vt = jnp.repeat(vt, group, axis=1)
+        scores = jnp.einsum("qhd,khd->hqk", qt.astype(jnp.float32),
+                            kt.astype(jnp.float32)) * scale
+        # Causal mask with shard offset: row r attends j <= kv_len - q_len + r.
+        rows = np.arange(int(q_len))[:, None]
+        cols = np.arange(int(kv_len))[None, :]
+        mask = cols <= (int(kv_len) - int(q_len)) + rows
+        scores = jnp.where(mask[None, :, :], scores, NEG_INF)
+        p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+        p = p / p.sum(axis=-1, keepdims=True)
+        o = jnp.einsum("hqk,khd->qhd", p, vt.astype(jnp.float32))
+        out = out.at[q_ofs : q_ofs + q_len].set(o.astype(q.dtype))
+    return out
+
+
+def whole_doc_meta(doc_lens):
+    """Metadata for whole documents packed back-to-back (q and kv share the
+    packing): each document is one CA-task over its own rows."""
+    meta = []
+    ofs = 0
+    for length in doc_lens:
+        meta.append((ofs, length, ofs, length))
+        ofs += length
+    return np.array(meta, dtype=np.int32)
+
+
+def dense_causal_reference(x_q, x_k, x_v):
+    """Plain single-document causal attention (cross-check helper)."""
+    l = x_q.shape[0]
+    meta = np.array([[0, l, 0, l]], dtype=np.int32)
+    return ca_task_batch_reference(x_q, x_k, x_v, meta)

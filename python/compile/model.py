@@ -1,0 +1,234 @@
+"""L2: the JAX transformer, split at the core-attention boundary.
+
+The paper's layer taxonomy (§2.1) is explicit in the code:
+
+* ``pre_ca``   — RMSNorm → QKV projection → RoPE   (context-independent);
+* ``core_attention`` — the L1 Pallas kernel         (context-dependent,
+  stateless: no parameters, no saved activations beyond softmax stats);
+* ``post_ca``  — o-proj → residual → RMSNorm → SwiGLU FFN → residual
+  (context-independent).
+
+Two consumers:
+* the *disaggregation artifacts*: ``pre_ca`` / ``core_attention`` /
+  ``post_ca`` lowered separately so the rust coordinator can dispatch the
+  CA of any microbatch to any attention server (examples/
+  attention_server_demo);
+* the *end-to-end tiny LM*: a ~100M-parameter model whose full
+  AdamW train step lowers to one HLO for examples/train_e2e. Parameters
+  travel as a single flat f32 vector so the rust driver stays simple and
+  copy-free (buffers are fed back without host round-trips).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.core_attention import ca_task_batch_prebuilt, block_meta_from_tasks
+
+
+class ModelCfg(NamedTuple):
+    n_layers: int
+    hidden: int
+    n_heads: int
+    head_dim: int
+    kv_heads: int
+    intermediate: int
+    vocab: int
+
+
+def tiny_100m() -> ModelCfg:
+    """The e2e training model (~106M params; matches rust
+    `ModelConfig::tiny_100m`)."""
+    return ModelCfg(
+        n_layers=8, hidden=768, n_heads=12, head_dim=64, kv_heads=12,
+        intermediate=2048, vocab=32_000,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameter flattening: one f32 vector <-> per-layer views.
+# ---------------------------------------------------------------------------
+
+def param_shapes(cfg: ModelCfg):
+    """Ordered (name, shape) list of all parameters."""
+    h, hq = cfg.hidden, cfg.n_heads * cfg.head_dim
+    hkv = cfg.kv_heads * cfg.head_dim
+    i = cfg.intermediate
+    shapes = [("embed", (cfg.vocab, h))]
+    for l in range(cfg.n_layers):
+        shapes += [
+            (f"l{l}.ln1", (h,)),
+            (f"l{l}.wq", (h, hq)),
+            (f"l{l}.wk", (h, hkv)),
+            (f"l{l}.wv", (h, hkv)),
+            (f"l{l}.wo", (hq, h)),
+            (f"l{l}.ln2", (h,)),
+            (f"l{l}.w_gate", (h, i)),
+            (f"l{l}.w_up", (h, i)),
+            (f"l{l}.w_down", (i, h)),
+        ]
+    shapes += [("ln_f", (h,)), ("head", (h, cfg.vocab))]
+    return shapes
+
+
+def n_params(cfg: ModelCfg) -> int:
+    return sum(int(np.prod(s)) for _, s in param_shapes(cfg))
+
+
+def unflatten(flat, cfg: ModelCfg):
+    """Slice the flat vector into a dict of named views (no copies under
+    jit — XLA fuses the slices)."""
+    views = {}
+    ofs = 0
+    for name, shape in param_shapes(cfg):
+        size = int(np.prod(shape))
+        views[name] = flat[ofs : ofs + size].reshape(shape)
+        ofs += size
+    return views
+
+
+def init_params(key, cfg: ModelCfg):
+    """Scaled-normal init, returned as one flat f32 vector."""
+    parts = []
+    for name, shape in param_shapes(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith((".ln1", ".ln2")) or name == "ln_f":
+            parts.append(jnp.ones(shape, jnp.float32).reshape(-1))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else 1
+            std = 0.02 if name in ("embed", "head") else 1.0 / np.sqrt(fan_in)
+            parts.append(
+                (jax.random.normal(sub, shape, jnp.float32) * std).reshape(-1)
+            )
+    return jnp.concatenate(parts)
+
+
+# ---------------------------------------------------------------------------
+# Layer pieces.
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x, positions, base=10_000.0):
+    """Rotary position embedding over the last dim of [T, H, d]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = base ** (-np.arange(0, half, dtype=np.float32) / half)
+    angles = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [T, half]
+    cos = jnp.cos(angles)[:, None, :]
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def pre_ca(x, p, l, cfg: ModelCfg, positions):
+    """Context-independent front half: norm → qkv → rope.
+
+    ``x``: [T, hidden]; returns (q [T,H,d], k [T,Hkv,d], v [T,Hkv,d]).
+    """
+    xn = rms_norm(x, p[f"l{l}.ln1"])
+    q = (xn @ p[f"l{l}.wq"]).reshape(-1, cfg.n_heads, cfg.head_dim)
+    k = (xn @ p[f"l{l}.wk"]).reshape(-1, cfg.kv_heads, cfg.head_dim)
+    v = (xn @ p[f"l{l}.wv"]).reshape(-1, cfg.kv_heads, cfg.head_dim)
+    q = rope(q, positions)
+    k = rope(k, positions)
+    return q, k, v
+
+
+def post_ca(x, attn_out, p, l, cfg: ModelCfg):
+    """Context-independent back half: o-proj → residual → norm → SwiGLU."""
+    h = x + attn_out.reshape(x.shape[0], -1) @ p[f"l{l}.wo"]
+    hn = rms_norm(h, p[f"l{l}.ln2"])
+    gated = jax.nn.silu(hn @ p[f"l{l}.w_gate"]) * (hn @ p[f"l{l}.w_up"])
+    return h + gated @ p[f"l{l}.w_down"]
+
+
+def lm_forward(flat_params, tokens, block_meta, cfg: ModelCfg, interpret=True):
+    """Tiny-LM forward over a packed token stream.
+
+    ``tokens``: [T] int32 packed documents; ``block_meta``: the CA-task
+    block metadata describing document boundaries (built by the data
+    loader — in production, by the rust coordinator). Positions restart at
+    each task's context start so RoPE sees document-local positions.
+    """
+    p = unflatten(flat_params, cfg)
+    T = tokens.shape[0]
+    # Document-local positions: block_meta rows are per 128-token block:
+    # (kv_ofs, kv_len, diag, valid); local position of row r in block b is
+    # diag[b] + r (its index in the document prefix).
+    diag = block_meta[:, 2]
+    positions = (
+        jnp.repeat(diag, 128) + jnp.tile(jnp.arange(128, dtype=jnp.int32), T // 128)
+    )
+    x = p["embed"][tokens]
+    for l in range(cfg.n_layers):
+        q, k, v = pre_ca(x, p, l, cfg, positions)
+        attn = ca_task_batch_prebuilt(q, k, v, block_meta, interpret=interpret)
+        x = post_ca(x, attn, p, l, cfg)
+    x = rms_norm(x, p["ln_f"])
+    return x @ p["head"]
+
+
+def lm_loss(flat_params, tokens, targets, block_meta, cfg: ModelCfg, interpret=True):
+    """Mean next-token cross-entropy (targets = tokens shifted by the data
+    loader; padding positions carry target -1 and are masked)."""
+    logits = lm_forward(flat_params, tokens, block_meta, cfg, interpret)
+    valid = targets >= 0
+    tgt = jnp.maximum(targets, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[:, None], axis=-1)[:, 0]
+    return (nll * valid).sum() / jnp.maximum(valid.sum(), 1)
+
+
+# ---------------------------------------------------------------------------
+# AdamW train step (lowered to one HLO for the rust driver).
+# ---------------------------------------------------------------------------
+
+def train_step(flat_params, m, v, step, tokens, targets, block_meta,
+               cfg: ModelCfg, lr=3e-4, beta1=0.9, beta2=0.95, eps=1e-8,
+               weight_decay=0.01, interpret=True):
+    """One fwd+bwd+AdamW update. All state is flat f32 vectors.
+
+    Returns (params', m', v', step', loss).
+    """
+    loss, grads = jax.value_and_grad(lm_loss)(
+        flat_params, tokens, targets, block_meta, cfg, interpret
+    )
+    step = step + 1
+    m = beta1 * m + (1.0 - beta1) * grads
+    v = beta2 * v + (1.0 - beta2) * grads * grads
+    m_hat = m / (1.0 - beta1 ** step.astype(jnp.float32))
+    v_hat = v / (1.0 - beta2 ** step.astype(jnp.float32))
+    update = m_hat / (jnp.sqrt(v_hat) + eps) + weight_decay * flat_params
+    return flat_params - lr * update, m, v, step, loss
+
+
+# ---------------------------------------------------------------------------
+# Helpers shared with tests / aot.
+# ---------------------------------------------------------------------------
+
+def packed_batch_meta(doc_lens, total_q):
+    """Whole-document CA-task metadata for a packed stream, expanded to
+    block form."""
+    meta = []
+    ofs = 0
+    for L in doc_lens:
+        assert L % 128 == 0, "test/packing granularity"
+        meta.append((ofs, L, ofs, L))
+        ofs += L
+    return block_meta_from_tasks(np.array(meta, dtype=np.int32), total_q)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+def jit_train_step(flat_params, m, v, step, tokens, targets, block_meta,
+                   cfg: ModelCfg, interpret=True):
+    return train_step(flat_params, m, v, step, tokens, targets, block_meta,
+                      cfg, interpret=interpret)

@@ -1,0 +1,195 @@
+"""L1 correctness: the Pallas packed-varlen causal CA kernel vs the
+pure-jnp oracle — forward, backward, GQA, padding, and hypothesis sweeps
+over shapes/dtypes (the paper's composability claim, §3.3: any 128-aligned
+re-batching of shards computes the same numbers)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.core_attention import (
+    BLOCK_Q,
+    block_meta_from_tasks,
+    ca_task_batch,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed=0, dtype=np.float32):
+    return np.random.default_rng(seed).standard_normal(shape).astype(dtype)
+
+
+def run_both(q, k, v, meta, atol=2e-5):
+    out_k = np.asarray(ca_task_batch(q, k, v, meta))
+    out_r = np.asarray(ref.ca_task_batch_reference(q, k, v, meta))
+    np.testing.assert_allclose(out_k, out_r, atol=atol, rtol=2e-4)
+    return out_k
+
+
+class TestForward:
+    def test_single_whole_doc(self):
+        q = rand((256, 4, 32), 1)
+        k = rand((256, 4, 32), 2)
+        v = rand((256, 4, 32), 3)
+        meta = np.array([[0, 256, 0, 256]], dtype=np.int32)
+        run_both(q, k, v, meta)
+
+    def test_two_docs_packed(self):
+        q = rand((256, 2, 16), 4)
+        k = rand((256, 2, 16), 5)
+        v = rand((256, 2, 16), 6)
+        meta = ref.whole_doc_meta([128, 128])
+        run_both(q, k, v, meta)
+
+    def test_shard_with_context_offset(self):
+        # A later shard of a document: q rows are the LAST 128 positions
+        # of a 384-token context (the CA-task definition).
+        q = rand((128, 2, 16), 7)
+        k = rand((384, 2, 16), 8)
+        v = rand((384, 2, 16), 9)
+        meta = np.array([[0, 128, 0, 384]], dtype=np.int32)
+        run_both(q, k, v, meta)
+
+    def test_gqa_heads(self):
+        q = rand((128, 8, 16), 10)
+        k = rand((128, 2, 16), 11)
+        v = rand((128, 2, 16), 12)
+        meta = np.array([[0, 128, 0, 128]], dtype=np.int32)
+        run_both(q, k, v, meta)
+
+    def test_padding_blocks_zero(self):
+        q = rand((384, 2, 16), 13)
+        k = rand((384, 2, 16), 14)
+        v = rand((384, 2, 16), 15)
+        meta = np.array([[0, 128, 0, 128]], dtype=np.int32)
+        out = np.asarray(ca_task_batch(q, k, v, meta))
+        assert np.all(out[128:] == 0.0)
+
+    def test_fused_batch_equals_separate_calls(self):
+        # Composability: two tasks fused in one call == two separate calls.
+        q = rand((256, 2, 16), 16)
+        k = rand((512, 2, 16), 17)
+        v = rand((512, 2, 16), 18)
+        fused_meta = np.array(
+            [[0, 128, 0, 256], [128, 128, 256, 256]], dtype=np.int32
+        )
+        fused = np.asarray(ca_task_batch(q, k, v, fused_meta))
+        a = np.asarray(
+            ca_task_batch(q[:128], k[:256], v[:256],
+                          np.array([[0, 128, 0, 256]], dtype=np.int32))
+        )
+        b = np.asarray(
+            ca_task_batch(q[128:], k[256:], v[256:],
+                          np.array([[0, 128, 0, 256]], dtype=np.int32))
+        )
+        np.testing.assert_allclose(fused[:128], a, atol=1e-6)
+        np.testing.assert_allclose(fused[128:], b, atol=1e-6)
+
+    def test_sharding_invariance(self):
+        # Splitting one document's CA into two CA-tasks must reproduce the
+        # whole-document numbers (divisibility, §3.3).
+        q = rand((256, 2, 16), 19)
+        k = rand((256, 2, 16), 20)
+        v = rand((256, 2, 16), 21)
+        whole = np.asarray(
+            ca_task_batch(q, k, v, np.array([[0, 256, 0, 256]], np.int32))
+        )
+        split = np.asarray(
+            ca_task_batch(
+                q, k, v,
+                np.array([[0, 128, 0, 128], [128, 128, 0, 256]], np.int32),
+            )
+        )
+        np.testing.assert_allclose(whole, split, atol=2e-6)
+
+    def test_misaligned_task_rejected(self):
+        q = rand((256, 2, 16), 22)
+        meta = np.array([[0, 100, 0, 100]], dtype=np.int32)
+        with pytest.raises(AssertionError):
+            block_meta_from_tasks(meta, 256)
+
+
+class TestBackward:
+    def _grads(self, fn, q, k, v):
+        return jax.grad(lambda a, b, c: (fn(a, b, c) ** 2).sum(),
+                        argnums=(0, 1, 2))(q, k, v)
+
+    def test_grads_match_reference(self):
+        q = rand((256, 4, 32), 30)
+        k = rand((384, 2, 32), 31)
+        v = rand((384, 2, 32), 32)
+        meta = np.array([[0, 128, 0, 256], [128, 128, 256, 128]], np.int32)
+        gk = self._grads(lambda a, b, c: ca_task_batch(a, b, c, meta), q, k, v)
+        gr = self._grads(
+            lambda a, b, c: ref.ca_task_batch_reference(a, b, c, meta), q, k, v
+        )
+        for a, b in zip(gk, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=5e-5, rtol=1e-3)
+
+    def test_padding_rows_get_zero_grad(self):
+        q = rand((256, 2, 16), 33)
+        k = rand((256, 2, 16), 34)
+        v = rand((256, 2, 16), 35)
+        meta = np.array([[0, 128, 0, 128]], np.int32)
+        dq, _, _ = self._grads(
+            lambda a, b, c: ca_task_batch(a, b, c, meta), q, k, v
+        )
+        assert np.all(np.asarray(dq)[128:] == 0.0)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n_tasks=st.integers(1, 3),
+    heads=st.sampled_from([(2, 2), (4, 2), (8, 2)]),
+    d=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shapes(n_tasks, heads, d, seed):
+    """Random task compositions: kernel == oracle."""
+    h, hkv = heads
+    rng = np.random.default_rng(seed)
+    meta = []
+    q_ofs = 0
+    kv_ofs = 0
+    for _ in range(n_tasks):
+        q_len = 128 * int(rng.integers(1, 3))
+        extra_ctx = 128 * int(rng.integers(0, 3))
+        kv_len = q_len + extra_ctx
+        meta.append((q_ofs, q_len, kv_ofs, kv_len))
+        q_ofs += q_len
+        kv_ofs += kv_len
+    meta = np.array(meta, dtype=np.int32)
+    q = rng.standard_normal((q_ofs, h, d)).astype(np.float32)
+    k = rng.standard_normal((max(kv_ofs, 128), hkv, d)).astype(np.float32)
+    v = rng.standard_normal((max(kv_ofs, 128), hkv, d)).astype(np.float32)
+    run_both(q, k, v, meta, atol=5e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_softmax_rows_sum_to_one(seed):
+    """With V = identity-ish columns, output rows are convex combinations:
+    each row of |O| must be bounded by max |V| (softmax weights sum to 1)."""
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((128, 2, 16)).astype(np.float32)
+    k = rng.standard_normal((256, 2, 16)).astype(np.float32)
+    v = np.ones((256, 2, 16), dtype=np.float32)
+    meta = np.array([[0, 128, 0, 256]], np.int32)
+    out = np.asarray(ca_task_batch(q, k, v, meta))
+    np.testing.assert_allclose(out, np.ones_like(out), atol=1e-5)
+
+
+def test_block_meta_expansion():
+    meta = np.array([[0, 256, 0, 384]], np.int32)
+    bm = block_meta_from_tasks(meta, 512)
+    assert bm.shape == (4, 4)
+    # two valid blocks with advancing diag, two padding blocks
+    assert list(bm[0]) == [0, 384, 128, 1]
+    assert list(bm[1]) == [0, 384, 256, 1]
+    assert bm[2][3] == 0 and bm[3][3] == 0
+    assert BLOCK_Q == 128

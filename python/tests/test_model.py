@@ -1,0 +1,198 @@
+"""L2 correctness: the transformer split at the CA boundary, the flat
+parameter vector plumbing, and the AdamW train step (loss decreases on
+learnable synthetic data)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels.core_attention import block_meta_from_tasks
+
+jax.config.update("jax_platform_name", "cpu")
+
+SMALL = M.ModelCfg(n_layers=2, hidden=64, n_heads=4, head_dim=16,
+                   kv_heads=2, intermediate=128, vocab=128)
+
+
+def small_batch(T=256, seed=0):
+    rng = np.random.default_rng(seed)
+    tokens = rng.integers(0, SMALL.vocab, T).astype(np.int32)
+    targets = np.roll(tokens, -1).astype(np.int32)
+    bm = jnp.asarray(M.packed_batch_meta([T], T))
+    return jnp.asarray(tokens), jnp.asarray(targets), bm
+
+
+class TestParams:
+    def test_param_count_tiny_is_about_100m(self):
+        n = M.n_params(M.tiny_100m())
+        assert 90e6 < n < 130e6, n
+
+    def test_unflatten_covers_everything(self):
+        flat = M.init_params(jax.random.PRNGKey(0), SMALL)
+        views = M.unflatten(flat, SMALL)
+        total = sum(int(np.prod(v.shape)) for v in views.views()) if hasattr(views, "views") else sum(int(np.prod(v.shape)) for v in views.values())
+        assert total == flat.shape[0] == M.n_params(SMALL)
+
+    def test_norm_weights_init_to_one(self):
+        flat = M.init_params(jax.random.PRNGKey(0), SMALL)
+        views = M.unflatten(flat, SMALL)
+        np.testing.assert_array_equal(np.asarray(views["l0.ln1"]), 1.0)
+        np.testing.assert_array_equal(np.asarray(views["ln_f"]), 1.0)
+
+    def test_init_deterministic(self):
+        a = M.init_params(jax.random.PRNGKey(7), SMALL)
+        b = M.init_params(jax.random.PRNGKey(7), SMALL)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestForward:
+    def test_logit_shape(self):
+        flat = M.init_params(jax.random.PRNGKey(0), SMALL)
+        tokens, _, bm = small_batch()
+        logits = M.lm_forward(flat, tokens, bm, SMALL)
+        assert logits.shape == (256, SMALL.vocab)
+
+    def test_causality(self):
+        # Changing a future token must not change earlier logits.
+        flat = M.init_params(jax.random.PRNGKey(0), SMALL)
+        tokens, _, bm = small_batch()
+        base = np.asarray(M.lm_forward(flat, tokens, bm, SMALL))
+        mutated = np.asarray(tokens).copy()
+        mutated[200] = (mutated[200] + 1) % SMALL.vocab
+        out = np.asarray(M.lm_forward(flat, jnp.asarray(mutated), bm, SMALL))
+        np.testing.assert_allclose(base[:200], out[:200], atol=1e-5)
+        assert np.abs(base[200:] - out[200:]).max() > 1e-6
+
+    def test_document_isolation(self):
+        # Two packed docs: mutating doc 1 must not affect doc 0's logits
+        # (the attention mask blocks cross-document attention — the whole
+        # point of document packing, §1).
+        flat = M.init_params(jax.random.PRNGKey(1), SMALL)
+        T = 256
+        tokens, _, _ = small_batch(T)
+        bm = jnp.asarray(M.packed_batch_meta([128, 128], T))
+        base = np.asarray(M.lm_forward(flat, tokens, bm, SMALL))
+        mutated = np.asarray(tokens).copy()
+        mutated[130] = (mutated[130] + 1) % SMALL.vocab
+        out = np.asarray(M.lm_forward(flat, jnp.asarray(mutated), bm, SMALL))
+        np.testing.assert_allclose(base[:128], out[:128], atol=1e-5)
+
+    def test_positions_restart_per_document(self):
+        # Two identical docs packed together produce identical logits —
+        # only true if RoPE positions restart at each document.
+        flat = M.init_params(jax.random.PRNGKey(2), SMALL)
+        doc = np.random.default_rng(3).integers(0, SMALL.vocab, 128)
+        tokens = jnp.asarray(np.concatenate([doc, doc]).astype(np.int32))
+        bm = jnp.asarray(M.packed_batch_meta([128, 128], 256))
+        out = np.asarray(M.lm_forward(flat, tokens, bm, SMALL))
+        np.testing.assert_allclose(out[:128], out[128:], atol=2e-4)
+
+
+class TestPrePostSplit:
+    def test_pre_ca_shapes(self):
+        flat = M.init_params(jax.random.PRNGKey(0), SMALL)
+        p = M.unflatten(flat, SMALL)
+        x = jnp.zeros((128, SMALL.hidden))
+        pos = jnp.arange(128, dtype=jnp.int32)
+        q, k, v = M.pre_ca(x, p, 0, SMALL, pos)
+        assert q.shape == (128, SMALL.n_heads, SMALL.head_dim)
+        assert k.shape == (128, SMALL.kv_heads, SMALL.head_dim)
+        assert v.shape == k.shape
+
+    def test_post_ca_residual(self):
+        # With zero attention output and zero FFN effect paths unchanged?
+        # post_ca(x, 0) = x + norm-path FFN output; check shape and finite.
+        flat = M.init_params(jax.random.PRNGKey(0), SMALL)
+        p = M.unflatten(flat, SMALL)
+        x = jnp.ones((128, SMALL.hidden))
+        attn = jnp.zeros((128, SMALL.n_heads, SMALL.head_dim))
+        y = M.post_ca(x, attn, p, 0, SMALL)
+        assert y.shape == x.shape
+        assert bool(jnp.isfinite(y).all())
+
+    def test_split_composes_to_full_layer(self):
+        # pre_ca -> kernel -> post_ca must equal one fused layer pass
+        # (the disaggregation boundary does not change numerics).
+        from compile.kernels.core_attention import ca_task_batch_prebuilt
+        flat = M.init_params(jax.random.PRNGKey(5), SMALL)
+        p = M.unflatten(flat, SMALL)
+        T = 128
+        x = jax.random.normal(jax.random.PRNGKey(6), (T, SMALL.hidden))
+        pos = jnp.arange(T, dtype=jnp.int32)
+        bm = jnp.asarray(M.packed_batch_meta([T], T))
+        q, k, v = M.pre_ca(x, p, 0, SMALL, pos)
+        attn = ca_task_batch_prebuilt(q, k, v, bm)
+        y_split = M.post_ca(x, attn, p, 0, SMALL)
+        # "fused": same calls inline (they ARE the layer definition) —
+        # mutate nothing and expect bit-equal.
+        q2, k2, v2 = M.pre_ca(x, p, 0, SMALL, pos)
+        attn2 = ca_task_batch_prebuilt(q2, k2, v2, bm)
+        y_full = M.post_ca(x, attn2, p, 0, SMALL)
+        np.testing.assert_array_equal(np.asarray(y_split), np.asarray(y_full))
+
+
+class TestTrainStep:
+    def test_loss_decreases(self):
+        flat = M.init_params(jax.random.PRNGKey(0), SMALL)
+        tokens, targets, bm = small_batch()
+        m = jnp.zeros_like(flat)
+        v = jnp.zeros_like(flat)
+        s = jnp.zeros((), jnp.int32)
+        losses = []
+        for _ in range(8):
+            flat, m, v, s, loss = M.jit_train_step(
+                flat, m, v, s, tokens, targets, bm, SMALL
+            )
+            losses.append(float(loss))
+        assert losses[-1] < losses[0], losses
+        assert int(s) == 8
+
+    def test_masked_targets_ignored(self):
+        flat = M.init_params(jax.random.PRNGKey(0), SMALL)
+        tokens, targets, bm = small_batch()
+        t_masked = np.asarray(targets).copy()
+        t_masked[100:] = -1
+        full = float(M.lm_loss(flat, tokens, targets, bm, SMALL))
+        part = float(M.lm_loss(flat, tokens, jnp.asarray(t_masked), bm, SMALL))
+        assert part != pytest.approx(full)
+        assert np.isfinite(part)
+
+    def test_loss_starts_near_uniform(self):
+        flat = M.init_params(jax.random.PRNGKey(0), SMALL)
+        tokens, targets, bm = small_batch()
+        loss = float(M.lm_loss(flat, tokens, targets, bm, SMALL))
+        assert abs(loss - np.log(SMALL.vocab)) < 1.0
+
+
+class TestRope:
+    def test_rotation_preserves_norm(self):
+        x = np.random.default_rng(0).standard_normal((16, 2, 32)).astype(np.float32)
+        pos = jnp.arange(16, dtype=jnp.int32)
+        y = np.asarray(M.rope(jnp.asarray(x), pos))
+        np.testing.assert_allclose(
+            np.linalg.norm(y, axis=-1), np.linalg.norm(x, axis=-1), rtol=1e-5
+        )
+
+    def test_position_zero_is_identity(self):
+        x = np.random.default_rng(1).standard_normal((1, 2, 32)).astype(np.float32)
+        y = np.asarray(M.rope(jnp.asarray(x), jnp.zeros(1, jnp.int32)))
+        np.testing.assert_allclose(y, x, atol=1e-6)
+
+
+def test_aot_hlo_text_is_parseable_text():
+    """The AOT path must emit HLO *text* (the 0.5.1-compatible interchange)."""
+    from compile.aot import to_hlo_text
+    def f(a, b):
+        return (a @ b,)
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    text = to_hlo_text(jax.jit(f).lower(spec, spec))
+    assert "HloModule" in text
+    assert "dot(" in text or "dot " in text
+
+
+def test_block_meta_positions_used_by_model():
+    bm = M.packed_batch_meta([128, 256], 384)
+    assert bm.shape == (3, 4)
+    assert list(bm[:, 2]) == [0, 0, 128]  # diag restarts per doc

@@ -1,0 +1,78 @@
+//! Figure 10 / Table 4: full 4D parallelism (with PP) — DistCA's
+//! tick-aligned schedule (pooling CA across PP stages and DP groups,
+//! repurposing warm-up/drain bubbles as attention-server time) vs
+//! WLB-ideal under 1F1B. Paper: 1.15-1.30x (8B Pretrain), 1.10-1.35x
+//! (8B ProLong), up to 1.15x/1.25x on 34B.
+
+use distca::config::run::{DataDist, RunConfig};
+use distca::config::{ClusterConfig, ModelConfig};
+use distca::data::distributions::sampler_for;
+use distca::metrics::{comparison_table, ComparisonRow};
+use distca::sim::strategies::{run_distca, run_wlb_ideal, SimParams};
+use distca::sim::IterationReport;
+use distca::util::rng::Rng;
+
+fn main() {
+    let quick = std::env::var("DISTCA_BENCH_QUICK").is_ok();
+    let n_batches = if quick { 2 } else { 6 };
+    let grid = RunConfig::table4_grid();
+
+    for dist in [DataDist::Pretrain, DataDist::ProLong] {
+        let mut rows = Vec::new();
+        for rc in &grid {
+            if quick && rc.n_gpus > 128 {
+                continue;
+            }
+            if rc.n_gpus > 256 && std::env::var("DISTCA_BENCH_FULL").is_err() {
+                continue; // 512-GPU rows only under DISTCA_BENCH_FULL
+            }
+            let model = ModelConfig::by_name(&rc.model).unwrap();
+            let cluster = ClusterConfig::h200(rc.n_gpus / 8);
+            let params = SimParams::new(model, cluster, rc.tp, rc.pp);
+            // Every DP group needs several microbatches for the pipeline
+            // to fill; size the sampled batch accordingly.
+            let n_groups = rc.n_gpus / rc.tp / rc.pp;
+            let mb_chunk = rc.chunk_tokens / 4;
+            let batch_tokens =
+                (rc.batch_size * rc.chunk_tokens / 8).max(n_groups * mb_chunk * 2 * rc.pp);
+            let mut wlb = Vec::new();
+            let mut ca = Vec::new();
+            for b in 0..n_batches {
+                let mut rng =
+                    Rng::new(1000 + b as u64 * 37 + rc.max_doc_len as u64 + rc.n_gpus as u64);
+                let docs = sampler_for(dist, rc.max_doc_len)
+                    .sample_tokens(&mut rng, batch_tokens, 0);
+                wlb.push(run_wlb_ideal(&docs, mb_chunk, &params));
+                ca.push(run_distca(&docs, mb_chunk, &params));
+            }
+            rows.push(ComparisonRow {
+                model: rc.model.clone(),
+                max_doc_len: rc.max_doc_len,
+                n_gpus: rc.n_gpus,
+                dataset: dist.name().into(),
+                baseline: IterationReport::average(&wlb),
+                distca: IterationReport::average(&ca),
+            });
+        }
+        comparison_table(
+            &format!("Fig. 10 / Table 4 — 4D parallel (with PP), {}", dist.name()),
+            &rows,
+        )
+        .print();
+        let sp: Vec<f64> = rows.iter().map(|r| r.speedup()).collect();
+        let lo = sp.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = sp.iter().cloned().fold(0.0f64, f64::max);
+        println!(
+            "{}: speedup {lo:.2}x-{hi:.2}x  (paper 8B: {}, 34B up to {})\n",
+            dist.name(),
+            match dist {
+                DataDist::Pretrain => "1.15-1.30x",
+                DataDist::ProLong => "1.10-1.35x",
+            },
+            match dist {
+                DataDist::Pretrain => "1.15x",
+                DataDist::ProLong => "1.25x",
+            }
+        );
+    }
+}

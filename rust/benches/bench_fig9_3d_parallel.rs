@@ -1,0 +1,64 @@
+//! Figure 9 / Table 3: 3D parallelism (no PP) — DistCA vs WLB-ideal over
+//! the paper's full grid (model × MaxDocLen × #GPU × dataset), average of
+//! sampled batches. Paper: 1.07-1.20x (Pretrain), 1.05-1.12x (ProLong).
+
+use distca::config::run::{DataDist, RunConfig};
+use distca::config::{ClusterConfig, ModelConfig};
+use distca::data::distributions::sampler_for;
+use distca::metrics::{comparison_table, ComparisonRow};
+use distca::sim::strategies::{run_distca, run_wlb_ideal, SimParams};
+use distca::sim::IterationReport;
+use distca::util::rng::Rng;
+
+fn main() {
+    let quick = std::env::var("DISTCA_BENCH_QUICK").is_ok();
+    let n_batches = if quick { 2 } else { 8 };
+    let grid = RunConfig::table3_grid();
+
+    for dist in [DataDist::Pretrain, DataDist::ProLong] {
+        let mut rows = Vec::new();
+        for rc in &grid {
+            if quick && rc.n_gpus > 128 {
+                continue;
+            }
+            let model = ModelConfig::by_name(&rc.model).unwrap();
+            let cluster = ClusterConfig::h200(rc.n_gpus / 8);
+            let params = SimParams::new(model, cluster, rc.tp, 1);
+            let batch_tokens = rc.batch_size * rc.chunk_tokens / 2;
+            let mut wlb = Vec::new();
+            let mut ca = Vec::new();
+            for b in 0..n_batches {
+                let mut rng =
+                    Rng::new(900 + b as u64 * 101 + rc.max_doc_len as u64 + rc.n_gpus as u64);
+                let docs = sampler_for(dist, rc.max_doc_len)
+                    .sample_tokens(&mut rng, batch_tokens, 0);
+                wlb.push(run_wlb_ideal(&docs, rc.chunk_tokens / 2, &params));
+                ca.push(run_distca(&docs, rc.chunk_tokens / 2, &params));
+            }
+            rows.push(ComparisonRow {
+                model: rc.model.clone(),
+                max_doc_len: rc.max_doc_len,
+                n_gpus: rc.n_gpus,
+                dataset: dist.name().into(),
+                baseline: IterationReport::average(&wlb),
+                distca: IterationReport::average(&ca),
+            });
+        }
+        comparison_table(
+            &format!("Fig. 9 / Table 3 — 3D parallel (no PP), {}", dist.name()),
+            &rows,
+        )
+        .print();
+        let sp: Vec<f64> = rows.iter().map(|r| r.speedup()).collect();
+        let lo = sp.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = sp.iter().cloned().fold(0.0f64, f64::max);
+        println!(
+            "{}: speedup {lo:.2}x-{hi:.2}x  (paper: {})\n",
+            dist.name(),
+            match dist {
+                DataDist::Pretrain => "1.07-1.20x",
+                DataDist::ProLong => "1.05-1.12x",
+            }
+        );
+    }
+}

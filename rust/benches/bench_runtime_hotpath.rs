@@ -1,0 +1,49 @@
+//! Runtime hot path on the real PJRT backend: fused CA batch execution
+//! latency (the attention server's serving primitive) and executable-
+//! cache effectiveness. Skips when artifacts are absent.
+
+use distca::bench::BenchRunner;
+use distca::runtime::ca_exec::{synthetic_task, CaExecutor};
+use distca::runtime::{artifacts_available, artifacts_dir, Runtime};
+use distca::util::rng::Rng;
+
+fn main() {
+    if !artifacts_available() {
+        println!("skipping runtime hotpath bench: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::cpu().expect("PJRT");
+    let dir = artifacts_dir();
+    let mut runner = BenchRunner::new("runtime hot path (CPU PJRT)");
+
+    // Executable cache: second load must be ~free.
+    let t0 = std::time::Instant::now();
+    let _ = CaExecutor::load(&rt, &dir, 512, 1024, 12, 12, 64).unwrap();
+    let cold = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let exec = CaExecutor::load(&rt, &dir, 512, 1024, 12, 12, 64).unwrap();
+    let warm = t0.elapsed().as_secs_f64();
+    println!(
+        "executable load: cold {:.1} ms, cached {:.3} ms ({}x)\n",
+        cold * 1e3,
+        warm * 1e3,
+        (cold / warm.max(1e-9)) as u64
+    );
+
+    let mut rng = Rng::new(3);
+    let one = vec![synthetic_task(&mut rng, 512, 1024, 12, 12, 64)];
+    runner.bench_with_units("CA fused batch 1x(512q,1024kv)", 512.0, || {
+        exec.run_batch(&rt, &one).unwrap()
+    });
+    let four = vec![
+        synthetic_task(&mut rng, 128, 256, 12, 12, 64),
+        synthetic_task(&mut rng, 128, 256, 12, 12, 64),
+        synthetic_task(&mut rng, 128, 256, 12, 12, 64),
+        synthetic_task(&mut rng, 128, 256, 12, 12, 64),
+    ];
+    runner.bench_with_units("CA fused batch 4x(128q,256kv)", 512.0, || {
+        exec.run_batch(&rt, &four).unwrap()
+    });
+    runner.finish();
+    println!("fused-batch latency is the attention server's tick budget (§4.1).");
+}

@@ -1,0 +1,46 @@
+//! L3 hot path: the §4.2 greedy scheduler itself. The paper runs it on
+//! CPU, prefetching the next batch's plan while the current batch
+//! computes — so it must stay well under one iteration's wall-clock.
+//! Target: <1 ms per microbatch schedule at 64 servers, sub-100 ms at
+//! 512-GPU scale. §Perf in EXPERIMENTS.md tracks before/after.
+
+use distca::bench::BenchRunner;
+use distca::config::{run::DataDist, ClusterConfig, ModelConfig};
+use distca::coordinator::scheduler::items_from_chunks;
+use distca::coordinator::{schedule, Profiler, SchedulerCfg};
+use distca::data::distributions::sampler_for;
+use distca::model::FlopsModel;
+use distca::sim::strategies::distca_placement;
+use distca::util::rng::Rng;
+
+fn main() {
+    let model = ModelConfig::llama3_8b();
+    let f = FlopsModel::new(&model);
+    let mut runner = BenchRunner::new("scheduler hot path");
+
+    for &(n_servers, max_doc, tokens) in &[
+        (8usize, 131_072usize, 1_048_576usize),
+        (32, 131_072, 4_194_304),
+        (64, 524_288, 8_388_608),
+        (128, 524_288, 16_777_216),
+    ] {
+        let cluster = ClusterConfig::h200(n_servers);
+        let prof = Profiler::analytic(&f, &cluster);
+        let mut rng = Rng::new(42);
+        let docs =
+            sampler_for(DataDist::Pretrain, max_doc).sample_tokens(&mut rng, tokens, 0);
+        let chunks = distca_placement(&docs, n_servers);
+        let items = items_from_chunks(&chunks);
+        let cfg = SchedulerCfg::default();
+        let label = format!(
+            "schedule n={n_servers} items={} ({}M tok)",
+            items.len(),
+            tokens / 1_048_576
+        );
+        runner.bench_with_units(&label, items.len() as f64, || {
+            schedule(&items, n_servers, &f, &prof, &model, &cfg)
+        });
+    }
+    runner.finish();
+    println!("target: <1 ms at 8-64 servers; <100 ms at 128+ (prefetched off the critical path).");
+}

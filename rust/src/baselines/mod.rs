@@ -1,0 +1,73 @@
+//! Baseline balancing schemes the paper compares against (§3.2, §6.1).
+//!
+//! The strategy *executors* live in [`crate::sim::strategies`] (they share
+//! the simulator's cost primitives); this module holds the baseline
+//! *algorithms* themselves plus re-exports:
+//!
+//! * fixed-size packing — `data::pack_fixed`;
+//! * variable-length (WLB) chunking — `data::pack_variable_length`;
+//! * per-document head-tail CP — `parallel::cp`;
+//! * naive contiguous CP slicing ([`naive_cp_slices`]) — kept as the
+//!   strawman §2.2 dismisses, used by tests/benches to demonstrate why
+//!   head-tail pairing exists.
+
+use crate::model::FlopsModel;
+
+pub use crate::data::{pack_fixed, pack_variable_length};
+pub use crate::parallel::cp::per_document_cp_shards;
+pub use crate::sim::strategies::{
+    run_distca, run_packed_dp, run_perdoc_cp, run_wlb_ideal, wlb_sweep,
+};
+
+/// Naive CP: slice the *concatenated chunk* (not each document) into `c`
+/// contiguous equal slices. Under a causal mask early slices do less work
+/// — the imbalance head-tail sharding fixes (§2.2).
+/// Returns per-rank (q_len, q_offset) pairs for a chunk of `tokens`.
+pub fn naive_cp_slices(tokens: usize, c: usize) -> Vec<(usize, usize)> {
+    assert!(c >= 1);
+    let base = tokens / c;
+    let mut out = Vec::with_capacity(c);
+    let mut off = 0usize;
+    for r in 0..c {
+        let len = if r == c - 1 { tokens - off } else { base };
+        out.push((len, off));
+        off += len;
+    }
+    out
+}
+
+/// Per-rank forward CA FLOPs under naive slicing (for the comparison).
+pub fn naive_cp_flops(tokens: usize, c: usize, f: &FlopsModel) -> Vec<f64> {
+    naive_cp_slices(tokens, c)
+        .into_iter()
+        .map(|(len, off)| f.ca_task_fwd(len, off))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::util::stats;
+
+    #[test]
+    fn naive_slices_cover() {
+        for &(t, c) in &[(1000usize, 3usize), (4096, 4), (7, 2)] {
+            let slices = naive_cp_slices(t, c);
+            assert_eq!(slices.iter().map(|s| s.0).sum::<usize>(), t);
+            assert_eq!(slices.len(), c);
+        }
+    }
+
+    #[test]
+    fn naive_cp_is_imbalanced_headtail_is_not() {
+        let f = FlopsModel::new(&ModelConfig::llama3_8b());
+        let naive = naive_cp_flops(65536, 8, &f);
+        assert!(stats::imbalance_ratio(&naive) > 1.5, "naive {naive:?}");
+        let ht: Vec<f64> = per_document_cp_shards(0, 65536, 8)
+            .iter()
+            .map(|s| s.ca_fwd_flops(&f))
+            .collect();
+        assert!(stats::imbalance_ratio(&ht) < 1.01, "head-tail {ht:?}");
+    }
+}

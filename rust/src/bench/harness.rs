@@ -1,0 +1,163 @@
+//! Timing harness used by all `rust/benches/*` binaries.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+use crate::util::tables::{secs, Table};
+
+/// One benchmark's timing result.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    /// Optional user-supplied work units per iteration (e.g. tokens) to
+    /// derive throughput.
+    pub units_per_iter: Option<f64>,
+}
+
+impl Measurement {
+    pub fn throughput(&self) -> Option<f64> {
+        self.units_per_iter.map(|u| u / self.mean_s)
+    }
+}
+
+/// Collects benchmarks and prints a summary table.
+pub struct BenchRunner {
+    suite: String,
+    warmup: usize,
+    min_iters: usize,
+    min_time: Duration,
+    results: Vec<Measurement>,
+}
+
+impl BenchRunner {
+    pub fn new(suite: &str) -> Self {
+        // Honour a quick mode so `cargo bench` finishes fast in CI; callers
+        // can override via env.
+        let quick = std::env::var("DISTCA_BENCH_QUICK").is_ok();
+        Self {
+            suite: suite.to_string(),
+            warmup: if quick { 1 } else { 3 },
+            min_iters: if quick { 3 } else { 10 },
+            min_time: Duration::from_millis(if quick { 50 } else { 300 }),
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_iters(mut self, min_iters: usize) -> Self {
+        self.min_iters = min_iters;
+        self
+    }
+
+    /// Time `f`, which performs one full iteration of the workload and
+    /// returns an observable value (preventing dead-code elimination).
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &Measurement {
+        self.bench_units(name, None, &mut f)
+    }
+
+    /// Like [`bench`], with `units` work items per iteration for
+    /// throughput reporting.
+    pub fn bench_with_units<T, F: FnMut() -> T>(
+        &mut self,
+        name: &str,
+        units: f64,
+        mut f: F,
+    ) -> &Measurement {
+        self.bench_units(name, Some(units), &mut f)
+    }
+
+    fn bench_units<T>(
+        &mut self,
+        name: &str,
+        units: Option<f64>,
+        f: &mut dyn FnMut() -> T,
+    ) -> &Measurement {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters || start.elapsed() < self.min_time {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+            if samples.len() >= 10_000 {
+                break; // enough precision; avoid unbounded loops on tiny fns
+            }
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean_s: stats::mean(&samples),
+            p50_s: stats::percentile(&samples, 50.0),
+            p95_s: stats::percentile(&samples, 95.0),
+            min_s: stats::min(&samples),
+            units_per_iter: units,
+        };
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Render the timing summary for all registered benchmarks.
+    pub fn finish(&self) {
+        let mut t = Table::new(
+            &format!("bench suite: {}", self.suite),
+            &["benchmark", "iters", "mean", "p50", "p95", "min", "throughput"],
+        );
+        for m in &self.results {
+            t.row(&[
+                m.name.clone(),
+                m.iters.to_string(),
+                secs(m.mean_s),
+                secs(m.p50_s),
+                secs(m.p95_s),
+                secs(m.min_s),
+                m.throughput()
+                    .map(|tp| format!("{tp:.3e} units/s"))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        t.print();
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("DISTCA_BENCH_QUICK", "1");
+        let mut r = BenchRunner::new("test");
+        let m = r
+            .bench("spin", || {
+                let mut acc = 0u64;
+                for i in 0..10_000u64 {
+                    acc = acc.wrapping_add(i * i);
+                }
+                acc
+            })
+            .clone();
+        assert!(m.iters >= 3);
+        assert!(m.mean_s > 0.0);
+        assert!(m.p95_s >= m.p50_s);
+        assert!(m.min_s <= m.mean_s);
+    }
+
+    #[test]
+    fn throughput_derived_from_units() {
+        std::env::set_var("DISTCA_BENCH_QUICK", "1");
+        let mut r = BenchRunner::new("test");
+        let m = r.bench_with_units("u", 100.0, || 1 + 1).clone();
+        let tp = m.throughput().unwrap();
+        assert!(tp > 0.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Benches are plain binaries (`harness = false`); each builds a
+//! [`BenchRunner`], registers closures, and prints a timing table plus the
+//! paper-figure tables. Methodology: warm-up runs, then timed iterations
+//! until both a minimum iteration count and a minimum wall-clock budget
+//! are met; report mean / p50 / p95 / throughput.
+
+pub mod harness;
+
+pub use harness::{BenchRunner, Measurement};

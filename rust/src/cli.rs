@@ -1,0 +1,211 @@
+//! Command-line argument parsing (the offline vendor set has no `clap`).
+//!
+//! Supports the subcommand + `--flag value` / `--flag=value` / boolean
+//! `--flag` grammar the `distca` launcher uses, with typed accessors,
+//! defaults, required-argument errors, and generated usage text.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "cli error: {}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Declarative description of one flag (for usage text + validation).
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_bool: bool,
+}
+
+/// Parsed arguments: subcommand, flags, and positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding argv[0]) against the flag specs.
+    /// The first non-flag token is the subcommand.
+    pub fn parse(raw: &[String], specs: &[FlagSpec]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        let known: BTreeMap<&str, &FlagSpec> = specs.iter().map(|s| (s.name, s)).collect();
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = known
+                    .get(name.as_str())
+                    .ok_or_else(|| CliError(format!("unknown flag --{name}")))?;
+                if spec.is_bool {
+                    if let Some(v) = inline_val {
+                        let b = v.parse::<bool>().map_err(|_| {
+                            CliError(format!("--{name} expects true/false, got `{v}`"))
+                        })?;
+                        args.bools.insert(name, b);
+                    } else {
+                        args.bools.insert(name, true);
+                    }
+                } else {
+                    let value = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("--{name} needs a value")))?
+                        }
+                    };
+                    args.flags.insert(name, value);
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok.clone());
+            } else {
+                args.positionals.push(tok.clone());
+            }
+            i += 1;
+        }
+        // Fill defaults.
+        for spec in specs {
+            if !spec.is_bool {
+                if let Some(d) = spec.default {
+                    args.flags.entry(spec.name.to_string()).or_insert_with(|| d.to_string());
+                }
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn req(&self, name: &str) -> Result<&str, CliError> {
+        self.get(name)
+            .ok_or_else(|| CliError(format!("missing required flag --{name}")))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.bools.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{name}: cannot parse `{s}`"))),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        Ok(self.get_parse::<usize>(name)?.unwrap_or(default))
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        Ok(self.get_parse::<f64>(name)?.unwrap_or(default))
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        Ok(self.get_parse::<u64>(name)?.unwrap_or(default))
+    }
+}
+
+/// Render usage text from subcommand list + flag specs.
+pub fn usage(program: &str, subcommands: &[(&str, &str)], specs: &[FlagSpec]) -> String {
+    let mut out = format!("usage: {program} <subcommand> [flags]\n\nsubcommands:\n");
+    for (name, help) in subcommands {
+        out.push_str(&format!("  {name:<22} {help}\n"));
+    }
+    out.push_str("\nflags:\n");
+    for s in specs {
+        let default = s
+            .default
+            .map(|d| format!(" (default: {d})"))
+            .unwrap_or_default();
+        out.push_str(&format!("  --{:<20} {}{default}\n", s.name, s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<FlagSpec> {
+        vec![
+            FlagSpec { name: "model", help: "model name", default: Some("llama-8b"), is_bool: false },
+            FlagSpec { name: "gpus", help: "gpu count", default: None, is_bool: false },
+            FlagSpec { name: "verbose", help: "verbose", default: None, is_bool: true },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = Args::parse(&sv(&["simulate", "--gpus", "64", "--verbose"]), &specs()).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.get("gpus"), Some("64"));
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.get("model"), Some("llama-8b")); // default filled
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::parse(&sv(&["x", "--gpus=128"]), &specs()).unwrap();
+        assert_eq!(a.get_usize("gpus", 0).unwrap(), 128);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(Args::parse(&sv(&["x", "--nope", "1"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(Args::parse(&sv(&["x", "--gpus"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = Args::parse(&sv(&["x", "--gpus", "8"]), &specs()).unwrap();
+        assert_eq!(a.get_usize("gpus", 1).unwrap(), 8);
+        assert_eq!(a.get_f64("gpus", 0.0).unwrap(), 8.0);
+        let bad = Args::parse(&sv(&["x", "--gpus", "abc"]), &specs()).unwrap();
+        assert!(bad.get_usize("gpus", 1).is_err());
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = Args::parse(&sv(&["run", "file1", "file2"]), &specs()).unwrap();
+        assert_eq!(a.positionals, vec!["file1", "file2"]);
+    }
+
+    #[test]
+    fn usage_mentions_everything() {
+        let u = usage("distca", &[("simulate", "run simulator")], &specs());
+        assert!(u.contains("simulate"));
+        assert!(u.contains("--model"));
+        assert!(u.contains("default: llama-8b"));
+    }
+}

@@ -1,0 +1,187 @@
+//! Cluster hardware description: DGX H200 nodes with NVLink intra-node and
+//! InfiniBand inter-node fabric, matching the paper's testbed (§6.1 and
+//! Appendix A's bandwidth/MFU assumptions).
+
+use crate::util::json::{Json, JsonError};
+
+/// Hardware model for a homogeneous GPU cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    pub name: String,
+    /// GPUs per node (8 for DGX H200).
+    pub gpus_per_node: usize,
+    /// Number of nodes.
+    pub n_nodes: usize,
+    /// Per-GPU peak dense BF16/FP16 throughput, FLOP/s (H200: 990e12).
+    pub peak_flops: f64,
+    /// Achievable MFU for context-independent (GEMM-heavy) layers.
+    /// Appendix A assumes 50%.
+    pub mfu_linear: f64,
+    /// Achievable MFU for the fused varlen attention kernel at shard
+    /// lengths ≥ the 128-token tile (Fig. 5 plateau).
+    pub mfu_attention: f64,
+    /// Per-GPU HBM capacity in bytes (H200: 140 GB usable per §6.1).
+    pub hbm_bytes: f64,
+    /// Intra-node (NVLink) per-GPU bandwidth, bytes/s.
+    pub nvlink_bw: f64,
+    /// Inter-node (InfiniBand) per-GPU bandwidth, bytes/s. Appendix A
+    /// assumes 50 GB/s.
+    pub ib_bw: f64,
+    /// Fixed per-message latency for inter-node transfers, seconds.
+    pub ib_latency: f64,
+    /// Fixed per-message latency for intra-node transfers, seconds.
+    pub nvlink_latency: f64,
+}
+
+impl ClusterConfig {
+    /// DGX H200 cluster with the paper's assumptions.
+    pub fn h200(n_nodes: usize) -> Self {
+        Self {
+            name: format!("dgx-h200-x{n_nodes}"),
+            gpus_per_node: 8,
+            n_nodes,
+            peak_flops: 990e12,
+            mfu_linear: 0.50,
+            mfu_attention: 0.55,
+            hbm_bytes: 140e9,
+            nvlink_bw: 450e9,
+            ib_bw: 50e9,
+            ib_latency: 5e-6,
+            nvlink_latency: 1e-6,
+        }
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.gpus_per_node * self.n_nodes
+    }
+
+    /// Effective FLOP/s for context-independent layers on one GPU.
+    pub fn linear_flops(&self) -> f64 {
+        self.peak_flops * self.mfu_linear
+    }
+
+    /// Effective FLOP/s for fused core-attention kernels on one GPU.
+    pub fn attention_flops(&self) -> f64 {
+        self.peak_flops * self.mfu_attention
+    }
+
+    /// Transfer time for `bytes` between two GPUs; `same_node` picks the
+    /// link. A simple α-β model: latency + bytes/bandwidth.
+    pub fn transfer_time(&self, bytes: f64, same_node: bool) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        if same_node {
+            self.nvlink_latency + bytes / self.nvlink_bw
+        } else {
+            self.ib_latency + bytes / self.ib_bw
+        }
+    }
+
+    /// Ring all-gather time across `n` ranks where each rank contributes
+    /// `bytes`: (n-1)/n * total / bw on the bottleneck link.
+    pub fn allgather_time(&self, bytes_per_rank: f64, n: usize, cross_node: bool) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let bw = if cross_node { self.ib_bw } else { self.nvlink_bw };
+        let lat = if cross_node { self.ib_latency } else { self.nvlink_latency };
+        let total = bytes_per_rank * n as f64;
+        (n - 1) as f64 * lat + (n - 1) as f64 / n as f64 * total / bw
+    }
+
+    /// Node index of a global GPU rank.
+    pub fn node_of(&self, gpu: usize) -> usize {
+        gpu / self.gpus_per_node
+    }
+
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("gpus_per_node", Json::Num(self.gpus_per_node as f64)),
+            ("n_nodes", Json::Num(self.n_nodes as f64)),
+            ("peak_flops", Json::Num(self.peak_flops)),
+            ("mfu_linear", Json::Num(self.mfu_linear)),
+            ("mfu_attention", Json::Num(self.mfu_attention)),
+            ("hbm_bytes", Json::Num(self.hbm_bytes)),
+            ("nvlink_bw", Json::Num(self.nvlink_bw)),
+            ("ib_bw", Json::Num(self.ib_bw)),
+            ("ib_latency", Json::Num(self.ib_latency)),
+            ("nvlink_latency", Json::Num(self.nvlink_latency)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        let f = |k: &str| -> Result<f64, JsonError> {
+            v.req(k)?
+                .as_f64()
+                .ok_or_else(|| JsonError(format!("field `{k}` must be a number")))
+        };
+        Ok(Self {
+            name: v
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| JsonError("`name` must be a string".into()))?
+                .to_string(),
+            gpus_per_node: f("gpus_per_node")? as usize,
+            n_nodes: f("n_nodes")? as usize,
+            peak_flops: f("peak_flops")?,
+            mfu_linear: f("mfu_linear")?,
+            mfu_attention: f("mfu_attention")?,
+            hbm_bytes: f("hbm_bytes")?,
+            nvlink_bw: f("nvlink_bw")?,
+            ib_bw: f("ib_bw")?,
+            ib_latency: f("ib_latency")?,
+            nvlink_latency: f("nvlink_latency")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h200_defaults_match_paper() {
+        let c = ClusterConfig::h200(8);
+        assert_eq!(c.n_gpus(), 64);
+        assert_eq!(c.peak_flops, 990e12);
+        assert_eq!(c.ib_bw, 50e9);
+        assert_eq!(c.mfu_linear, 0.50);
+    }
+
+    #[test]
+    fn transfer_time_monotone_in_bytes() {
+        let c = ClusterConfig::h200(2);
+        assert!(c.transfer_time(1e9, false) > c.transfer_time(1e6, false));
+        assert!(c.transfer_time(1e9, true) < c.transfer_time(1e9, false));
+        assert_eq!(c.transfer_time(0.0, false), 0.0);
+    }
+
+    #[test]
+    fn allgather_scales() {
+        let c = ClusterConfig::h200(4);
+        assert_eq!(c.allgather_time(1e6, 1, true), 0.0);
+        let t8 = c.allgather_time(1e6, 8, true);
+        let t16 = c.allgather_time(1e6, 16, true);
+        assert!(t16 > t8);
+    }
+
+    #[test]
+    fn node_topology() {
+        let c = ClusterConfig::h200(2);
+        assert!(c.same_node(0, 7));
+        assert!(!c.same_node(7, 8));
+        assert_eq!(c.node_of(15), 1);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ClusterConfig::h200(16);
+        assert_eq!(ClusterConfig::from_json(&c.to_json()).unwrap(), c);
+    }
+}

@@ -1,0 +1,12 @@
+//! Configuration: model architectures (paper Table 2 + Appendix Table 5),
+//! cluster hardware (DGX H200 nodes, NVLink/InfiniBand), and training-run
+//! settings (paper Tables 3 & 4). All configs round-trip through the JSON
+//! substrate so runs are scriptable from files.
+
+pub mod cluster;
+pub mod models;
+pub mod run;
+
+pub use cluster::ClusterConfig;
+pub use models::ModelConfig;
+pub use run::RunConfig;

@@ -1,0 +1,204 @@
+//! Model architecture configurations (paper Table 2 and Appendix Table 5).
+
+use crate::util::json::{Json, JsonError};
+
+/// Transformer architecture description. Field names follow the paper:
+/// `hidden` (h), `n_heads`, `head_dim` (Hdim), `gqa_groups` — the number of
+/// KV heads (Table 2's "GQA" column), `intermediate` (i) — the SwiGLU FFN
+/// width.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub n_layers: usize,
+    pub hidden: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    /// Number of key-value heads (GQA). `h_kv = kv_heads * head_dim`.
+    pub kv_heads: usize,
+    /// FFN intermediate size (gated MLP).
+    pub intermediate: usize,
+    pub vocab: usize,
+    /// Bytes per element of activations/weights in the training dtype.
+    pub dtype_bytes: usize,
+}
+
+impl ModelConfig {
+    /// Llama-3-8B (Table 2: 32 layers, h=4096, 32 heads, hdim 128, 8 KV heads).
+    pub fn llama3_8b() -> Self {
+        Self {
+            name: "llama-8b".into(),
+            n_layers: 32,
+            hidden: 4096,
+            n_heads: 32,
+            head_dim: 128,
+            kv_heads: 8,
+            intermediate: 14336,
+            vocab: 128_256,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// Llama-34B (Table 2: 48 layers, h=8192, 64 heads, hdim 128, 16 KV
+    /// heads; Appendix Table 5: h_kv=2048, intermediate=22016).
+    pub fn llama_34b() -> Self {
+        Self {
+            name: "llama-34b".into(),
+            n_layers: 48,
+            hidden: 8192,
+            n_heads: 64,
+            head_dim: 128,
+            kv_heads: 16,
+            intermediate: 22016,
+            vocab: 128_256,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// The ~100M-parameter tiny LM trained end-to-end by
+    /// `examples/train_e2e` on the CPU PJRT backend (~106M params;
+    /// mirrors `python/compile/model.py::tiny_100m`).
+    pub fn tiny_100m() -> Self {
+        Self {
+            name: "tiny-100m".into(),
+            n_layers: 8,
+            hidden: 768,
+            n_heads: 12,
+            head_dim: 64,
+            kv_heads: 12,
+            intermediate: 2048,
+            vocab: 32_000,
+            dtype_bytes: 4, // f32 on CPU
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "llama-8b" | "llama-3-8b" | "8b" => Some(Self::llama3_8b()),
+            "llama-34b" | "34b" => Some(Self::llama_34b()),
+            "tiny-100m" | "tiny" => Some(Self::tiny_100m()),
+            _ => None,
+        }
+    }
+
+    /// Query hidden size `h_q = n_heads * head_dim`.
+    pub fn h_q(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    /// Key-value hidden size `h_kv = kv_heads * head_dim` (per K or V).
+    pub fn h_kv(&self) -> usize {
+        self.kv_heads * self.head_dim
+    }
+
+    /// Bytes of Q per token.
+    pub fn q_bytes_per_token(&self) -> usize {
+        self.h_q() * self.dtype_bytes
+    }
+
+    /// Bytes of K+V per token (both tensors).
+    pub fn kv_bytes_per_token(&self) -> usize {
+        2 * self.h_kv() * self.dtype_bytes
+    }
+
+    /// Total parameter count (embeddings + per-layer weights + head),
+    /// ignoring norms' negligible vectors.
+    pub fn param_count(&self) -> u64 {
+        let h = self.hidden as u64;
+        let hq = self.h_q() as u64;
+        let hkv = self.h_kv() as u64;
+        let i = self.intermediate as u64;
+        let per_layer = h * hq          // q proj
+            + 2 * h * hkv               // k, v proj
+            + hq * h                    // o proj
+            + 3 * h * i; // gated FFN: gate, up, down
+        let emb = self.vocab as u64 * h;
+        emb + self.n_layers as u64 * per_layer + emb // tied-head counted separately
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("n_layers", Json::Num(self.n_layers as f64)),
+            ("hidden", Json::Num(self.hidden as f64)),
+            ("n_heads", Json::Num(self.n_heads as f64)),
+            ("head_dim", Json::Num(self.head_dim as f64)),
+            ("kv_heads", Json::Num(self.kv_heads as f64)),
+            ("intermediate", Json::Num(self.intermediate as f64)),
+            ("vocab", Json::Num(self.vocab as f64)),
+            ("dtype_bytes", Json::Num(self.dtype_bytes as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        let u = |k: &str| -> Result<usize, JsonError> {
+            v.req(k)?
+                .as_usize()
+                .ok_or_else(|| JsonError(format!("field `{k}` must be a non-negative integer")))
+        };
+        Ok(Self {
+            name: v
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| JsonError("`name` must be a string".into()))?
+                .to_string(),
+            n_layers: u("n_layers")?,
+            hidden: u("hidden")?,
+            n_heads: u("n_heads")?,
+            head_dim: u("head_dim")?,
+            kv_heads: u("kv_heads")?,
+            intermediate: u("intermediate")?,
+            vocab: u("vocab")?,
+            dtype_bytes: u("dtype_bytes")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_constants() {
+        let m8 = ModelConfig::llama3_8b();
+        assert_eq!((m8.n_layers, m8.hidden, m8.n_heads, m8.head_dim, m8.kv_heads),
+                   (32, 4096, 32, 128, 8));
+        let m34 = ModelConfig::llama_34b();
+        assert_eq!((m34.n_layers, m34.hidden, m34.n_heads, m34.head_dim, m34.kv_heads),
+                   (48, 8192, 64, 128, 16));
+        // Appendix Table 5
+        assert_eq!(m34.h_kv(), 2048);
+        assert_eq!(m34.intermediate, 22016);
+    }
+
+    #[test]
+    fn hq_hkv() {
+        let m = ModelConfig::llama_34b();
+        assert_eq!(m.h_q(), 8192);
+        assert_eq!(m.h_kv(), 2048);
+        // Appendix A: size_q = 16KB (bf16), size_kv = 4KB per tensor
+        assert_eq!(m.q_bytes_per_token(), 16 * 1024);
+        assert_eq!(m.kv_bytes_per_token(), 2 * 4 * 1024);
+    }
+
+    #[test]
+    fn tiny_is_about_100m_params() {
+        let m = ModelConfig::tiny_100m();
+        let p = m.param_count();
+        assert!(p > 40_000_000 && p < 150_000_000, "params = {p}");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = ModelConfig::llama3_8b();
+        let j = m.to_json();
+        let back = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(ModelConfig::by_name("llama-8b").is_some());
+        assert!(ModelConfig::by_name("34b").is_some());
+        assert!(ModelConfig::by_name("gpt-99").is_none());
+    }
+}

@@ -1,0 +1,261 @@
+//! Training-run configuration: the experiment grid of paper Tables 3 & 4
+//! (model × MaxDocLen × batch size × #GPU), parallelism degrees, data
+//! distribution, and scheduler knobs.
+
+use crate::util::json::{Json, JsonError};
+
+/// Which input-length distribution to sample (§6.1 "Input data").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataDist {
+    /// Pretrain corpus with long-document upsampling (Fu et al., 2024).
+    Pretrain,
+    /// ProLong-like mixture, heavier on long documents (Gao et al., 2025).
+    ProLong,
+}
+
+impl DataDist {
+    pub fn from_str(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "pretrain" => Some(DataDist::Pretrain),
+            "prolong" => Some(DataDist::ProLong),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DataDist::Pretrain => "Pretrain",
+            DataDist::ProLong => "ProLong",
+        }
+    }
+}
+
+/// The balancing strategy under evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Fixed-size packing + plain DP (memory-balanced, compute-imbalanced).
+    Packed,
+    /// Per-document head-tail context parallelism at a fixed CP degree.
+    PerDocCp,
+    /// WLB-LLM: variable-length chunks + adaptive per-doc CP, reported at
+    /// the best DP×CP configuration ("WLB-ideal").
+    WlbIdeal,
+    /// Core attention disaggregation (this paper).
+    DistCa,
+}
+
+impl Strategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Packed => "Packed+DP",
+            Strategy::PerDocCp => "PerDocCP",
+            Strategy::WlbIdeal => "WLB-ideal",
+            Strategy::DistCa => "DistCA",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "packed" | "dp" => Some(Strategy::Packed),
+            "cp" | "perdoccp" | "per-doc-cp" => Some(Strategy::PerDocCp),
+            "wlb" | "wlb-ideal" => Some(Strategy::WlbIdeal),
+            "distca" | "cad" => Some(Strategy::DistCa),
+            _ => None,
+        }
+    }
+}
+
+/// One experiment configuration row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    pub model: String,
+    /// Maximum document length in tokens (128K/256K/384K/512K in Tables 3-4).
+    pub max_doc_len: usize,
+    /// Number of data chunks per global batch (paper "Batch Size").
+    pub batch_size: usize,
+    /// Tokens per chunk. In the paper this equals MaxDocLen (a chunk must
+    /// be able to hold the longest document).
+    pub chunk_tokens: usize,
+    pub n_gpus: usize,
+    pub tp: usize,
+    pub pp: usize,
+    pub cp: usize,
+    pub data: DataDist,
+    pub strategy: Strategy,
+    /// Scheduler imbalance tolerance ε (§4.2 / Fig. 12).
+    pub tolerance: f64,
+    /// PRNG seed for data sampling.
+    pub seed: u64,
+    /// Number of sampled batches to average over (paper uses 30).
+    pub n_batches: usize,
+}
+
+impl RunConfig {
+    pub fn new(model: &str, max_doc_len: usize, batch_size: usize, n_gpus: usize) -> Self {
+        Self {
+            model: model.to_string(),
+            max_doc_len,
+            batch_size,
+            chunk_tokens: max_doc_len,
+            n_gpus,
+            tp: 8,
+            pp: 1,
+            cp: 1,
+            data: DataDist::Pretrain,
+            strategy: Strategy::DistCa,
+            tolerance: 0.10,
+            seed: 0x5EED,
+            n_batches: 30,
+        }
+    }
+
+    /// DP degree implied by the other parallelism degrees.
+    pub fn dp(&self) -> usize {
+        assert!(
+            self.tp * self.pp * self.cp != 0 && self.n_gpus % (self.tp * self.pp * self.cp) == 0,
+            "gpus {} not divisible by tp*pp*cp {}",
+            self.n_gpus,
+            self.tp * self.pp * self.cp
+        );
+        self.n_gpus / (self.tp * self.pp * self.cp)
+    }
+
+    /// Total tokens in one global batch.
+    pub fn tokens_per_batch(&self) -> usize {
+        self.batch_size * self.chunk_tokens
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("max_doc_len", Json::Num(self.max_doc_len as f64)),
+            ("batch_size", Json::Num(self.batch_size as f64)),
+            ("chunk_tokens", Json::Num(self.chunk_tokens as f64)),
+            ("n_gpus", Json::Num(self.n_gpus as f64)),
+            ("tp", Json::Num(self.tp as f64)),
+            ("pp", Json::Num(self.pp as f64)),
+            ("cp", Json::Num(self.cp as f64)),
+            ("data", Json::Str(self.data.name().into())),
+            ("strategy", Json::Str(self.strategy.name().into())),
+            ("tolerance", Json::Num(self.tolerance)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("n_batches", Json::Num(self.n_batches as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        let u = |k: &str| -> Result<usize, JsonError> {
+            v.req(k)?
+                .as_usize()
+                .ok_or_else(|| JsonError(format!("`{k}` must be an integer")))
+        };
+        let s = |k: &str| -> Result<String, JsonError> {
+            Ok(v.req(k)?
+                .as_str()
+                .ok_or_else(|| JsonError(format!("`{k}` must be a string")))?
+                .to_string())
+        };
+        Ok(Self {
+            model: s("model")?,
+            max_doc_len: u("max_doc_len")?,
+            batch_size: u("batch_size")?,
+            chunk_tokens: u("chunk_tokens")?,
+            n_gpus: u("n_gpus")?,
+            tp: u("tp")?,
+            pp: u("pp")?,
+            cp: u("cp")?,
+            data: DataDist::from_str(&s("data")?)
+                .ok_or_else(|| JsonError("bad `data`".into()))?,
+            strategy: Strategy::from_str(&s("strategy")?)
+                .ok_or_else(|| JsonError("bad `strategy`".into()))?,
+            tolerance: v
+                .req("tolerance")?
+                .as_f64()
+                .ok_or_else(|| JsonError("`tolerance` must be a number".into()))?,
+            seed: v
+                .req("seed")?
+                .as_u64()
+                .ok_or_else(|| JsonError("`seed` must be an integer".into()))?,
+            n_batches: u("n_batches")?,
+        })
+    }
+
+    /// Paper Table 3 grid (3D parallel, no PP).
+    pub fn table3_grid() -> Vec<RunConfig> {
+        let mut grid = Vec::new();
+        let rows: &[(&str, usize, [usize; 3])] = &[
+            ("llama-8b", 128 * 1024, [8, 16, 32]),
+            ("llama-8b", 256 * 1024, [4, 8, 16]),
+            ("llama-8b", 512 * 1024, [2, 4, 8]),
+            ("llama-34b", 128 * 1024, [4, 8, 16]),
+            ("llama-34b", 256 * 1024, [2, 4, 8]),
+            ("llama-34b", 512 * 1024, [2, 4, 8]),
+        ];
+        for (model, mdl, bss) in rows {
+            for (bs, gpus) in bss.iter().zip([64usize, 128, 256]) {
+                grid.push(RunConfig::new(model, *mdl, *bs, gpus));
+            }
+        }
+        grid
+    }
+
+    /// Paper Table 4 grid (4D parallel, with PP).
+    pub fn table4_grid() -> Vec<RunConfig> {
+        let mut grid = Vec::new();
+        let rows: &[(&str, usize, [usize; 3], [usize; 3])] = &[
+            ("llama-8b", 128 * 1024, [32, 64, 128], [64, 128, 256]),
+            ("llama-8b", 256 * 1024, [16, 32, 32], [64, 128, 256]),
+            ("llama-8b", 512 * 1024, [8, 8, 16], [64, 128, 256]),
+            ("llama-34b", 128 * 1024, [32, 64, 128], [128, 256, 512]),
+            ("llama-34b", 256 * 1024, [16, 32, 32], [128, 256, 512]),
+            ("llama-34b", 384 * 1024, [8, 8, 16], [128, 256, 512]),
+        ];
+        for (model, mdl, bss, gpuss) in rows {
+            for (bs, gpus) in bss.iter().zip(gpuss.iter()) {
+                let mut rc = RunConfig::new(model, *mdl, *bs, *gpus);
+                rc.pp = if *model == "llama-34b" { 4 } else { 2 };
+                grid.push(rc);
+            }
+        }
+        grid
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dp_derived() {
+        let mut rc = RunConfig::new("llama-8b", 131072, 8, 64);
+        assert_eq!(rc.dp(), 8); // 64 / (tp=8)
+        rc.pp = 2;
+        assert_eq!(rc.dp(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn indivisible_topology_panics() {
+        let mut rc = RunConfig::new("llama-8b", 131072, 8, 64);
+        rc.tp = 7;
+        rc.dp();
+    }
+
+    #[test]
+    fn grids_match_paper_row_counts() {
+        assert_eq!(RunConfig::table3_grid().len(), 18);
+        assert_eq!(RunConfig::table4_grid().len(), 18);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let rc = RunConfig::new("llama-34b", 262144, 4, 128);
+        assert_eq!(RunConfig::from_json(&rc.to_json()).unwrap(), rc);
+    }
+
+    #[test]
+    fn tokens_per_batch() {
+        let rc = RunConfig::new("llama-8b", 131072, 8, 64);
+        assert_eq!(rc.tokens_per_batch(), 8 * 131072);
+    }
+}

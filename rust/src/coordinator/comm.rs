@@ -1,0 +1,188 @@
+//! Communication models from the paper's appendices.
+//!
+//! * [`max_partition_bound`] — Appendix A: the largest number of shards a
+//!   document can be split into before the per-layer Q/KV dispatch can no
+//!   longer hide under the context-independent compute
+//!   (`s ≤ 2(tB − h_q)/h_kv − 1`). With Llama-34B, IB at 50 GB/s and 50%
+//!   MFU this evaluates to ≈ 31.
+//! * [`migration_comm`] — Appendix B: the minimal communication volume
+//!   `v(·)` for migrating `ΔF` FLOPs out of a head-tail Item, and the
+//!   optimal sub-shard size `n_q` achieving it.
+
+use crate::config::{ClusterConfig, ModelConfig};
+
+/// Appendix A: time to compute one token's context-independent layers.
+pub fn token_linear_time(m: &ModelConfig, cluster: &ClusterConfig) -> f64 {
+    let h = m.hidden as f64;
+    let h_kv = m.h_kv() as f64;
+    let i = m.intermediate as f64;
+    let flops = 2.0 * h * (2.0 * h + h_kv + 3.0 * i);
+    flops / cluster.linear_flops()
+}
+
+/// Appendix A: upper bound on the number of shards `s` a document can be
+/// partitioned into with communication fully overlapped:
+/// `s ≤ 2(tB − size_q)/size_kv − 1`, where `t` is the per-token
+/// context-independent compute time, `B` the network bandwidth, and
+/// `size_q`/`size_kv` the per-token Q and per-tensor KV byte sizes.
+pub fn max_partition_bound(m: &ModelConfig, cluster: &ClusterConfig) -> f64 {
+    let t = token_linear_time(m, cluster);
+    let b = cluster.ib_bw;
+    let size_q = m.q_bytes_per_token() as f64;
+    // Note: the paper's formula uses `h_kv` per-tensor (4 KB for 34B) but
+    // its worked example lands at ≈31, which is only consistent with the
+    // *combined* K+V byte count (8 KB) — physically correct, since both
+    // tensors are transferred. We follow the worked example.
+    let size_kv = m.kv_bytes_per_token() as f64; // K and V combined
+    2.0 * (t * b - size_q) / size_kv - 1.0
+}
+
+/// Result of Appendix B's minimal-communication shard selection.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MigrationComm {
+    /// Query tokens (per half) of the sub-shard to migrate.
+    pub n_q: f64,
+    /// Communication bytes for the migration.
+    pub bytes: f64,
+}
+
+/// Appendix B (head-tail form): given an Item with per-half query width
+/// `l_q_half` whose halves span a document of length `l_doc` starting at
+/// head offset `i` (so per-half KV reach `l_kv = l_doc - i` for the tail),
+/// find the sub-shard carrying the fraction `alpha = ΔF/F_item` of the
+/// Item's FLOPs with minimal communication.
+///
+/// Using the paper's parametrization: an Item owns head `[i, j)` and tail
+/// `[l-j, l-i)`; `L_q = j - i` (per-half width), `n_kv = j` for the head
+/// half, and a sub-shard keeping the *outer* ranges `[i, i+n_q)` +
+/// `[l-i-n_q, l-i)` costs
+/// `Comm(n_q) = L_doc·size_kv + ½·size_q·(n_q(2+β) − αβ·L_q(2L_kv−L_q)/n_q)`
+/// — decreasing in `n_q` over the feasible range, so the optimum sits at
+/// the smallest feasible `n_q`:
+/// `n_q_min = L_kv − sqrt(L_kv² − α(2L_kv − L_q)L_q)`.
+pub fn migration_comm(
+    alpha: f64,
+    l_q: f64,
+    l_kv: f64,
+    l_doc: f64,
+    size_q: f64,
+    size_kv: f64,
+) -> MigrationComm {
+    assert!((0.0..=1.0 + 1e-9).contains(&alpha), "alpha out of range: {alpha}");
+    assert!(l_q > 0.0 && l_kv >= l_q, "bad geometry l_q={l_q} l_kv={l_kv}");
+    let beta = size_kv / size_q;
+    let disc = l_kv * l_kv - alpha * (2.0 * l_kv - l_q) * l_q;
+    let n_q_min = if disc <= 0.0 {
+        l_q // degenerate: take the whole Item
+    } else {
+        (l_kv - disc.sqrt()).min(l_q).max(0.0)
+    };
+    let n_q = n_q_min.max(1.0);
+    let bytes = l_doc * size_kv
+        + 0.5
+            * size_q
+            * (n_q * (2.0 + beta) - alpha * beta * l_q * (2.0 * l_kv - l_q) / n_q);
+    MigrationComm {
+        n_q,
+        bytes: bytes.max(0.0),
+    }
+}
+
+/// Exact byte count for migrating an [`super::item::Item`] to a remote
+/// server: Q for both halves in, KV prefix `[0, l - i)` in, O back.
+/// This is what the scheduler and the all-to-all plan actually use; the
+/// closed form above is used for *ranking* candidates cheaply (and tested
+/// to agree in ordering).
+pub fn item_migration_bytes(item: &super::item::Item, m: &ModelConfig) -> f64 {
+    let q = item.q_tokens() * m.q_bytes_per_token();
+    let kv = item.kv_context_tokens() * m.kv_bytes_per_token();
+    let o = item.q_tokens() * m.q_bytes_per_token();
+    (q + kv + o) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::item::Item;
+
+    #[test]
+    fn appendix_a_llama34b_is_31() {
+        // Appendix A works the example: t ≈ 2.796 µs, B = 50 GB/s,
+        // size_q = 16 KB, size_kv = 4 KB ⇒ s ≈ 31.
+        let m = ModelConfig::llama_34b();
+        let c = ClusterConfig::h200(1);
+        let t = token_linear_time(&m, &c);
+        assert!((t - 2.796e-6).abs() < 0.05e-6, "t = {t}");
+        let s = max_partition_bound(&m, &c);
+        assert!((s - 31.0).abs() < 2.5, "s = {s}");
+    }
+
+    #[test]
+    fn bound_increases_for_larger_models() {
+        // Appendix A: t scales quadratically with hidden size, so larger
+        // models admit more shards.
+        let c = ClusterConfig::h200(1);
+        let s8 = max_partition_bound(&ModelConfig::llama3_8b(), &c);
+        let s34 = max_partition_bound(&ModelConfig::llama_34b(), &c);
+        assert!(s34 > s8, "s34 {s34} <= s8 {s8}");
+    }
+
+    #[test]
+    fn bound_increases_with_bandwidth() {
+        let m = ModelConfig::llama_34b();
+        let mut c = ClusterConfig::h200(1);
+        let s50 = max_partition_bound(&m, &c);
+        c.ib_bw = 100e9;
+        let s100 = max_partition_bound(&m, &c);
+        assert!(s100 > s50);
+    }
+
+    #[test]
+    fn migration_comm_monotone_in_alpha() {
+        // More FLOPs migrated ⇒ at least as many bytes.
+        let mut prev = 0.0;
+        for k in 1..=10 {
+            let alpha = k as f64 / 10.0;
+            let mc = migration_comm(alpha, 4096.0, 8192.0, 16384.0, 16384.0, 8192.0);
+            assert!(mc.bytes >= prev - 1.0, "alpha {alpha}: {} < {prev}", mc.bytes);
+            prev = mc.bytes;
+        }
+    }
+
+    #[test]
+    fn migration_full_item_takes_whole_width() {
+        let mc = migration_comm(1.0, 4096.0, 8192.0, 16384.0, 16384.0, 8192.0);
+        assert!((mc.n_q - 4096.0).abs() < 1.0, "n_q = {}", mc.n_q);
+    }
+
+    #[test]
+    fn migration_small_alpha_small_shard() {
+        let mc = migration_comm(0.05, 4096.0, 8192.0, 16384.0, 16384.0, 8192.0);
+        assert!(mc.n_q < 4096.0 * 0.25, "n_q = {}", mc.n_q);
+    }
+
+    #[test]
+    fn exact_item_bytes() {
+        let m = ModelConfig::llama_34b();
+        let it = Item::whole_doc(0, 8192, 0);
+        let bytes = item_migration_bytes(&it, &m);
+        // Q+O: 2 * 8192 tok * 16KB; KV: 8192 tok * 8KB
+        let expect = (2.0 * 8192.0 * 16384.0) + (8192.0 * 8192.0);
+        assert!((bytes - expect).abs() < 1.0, "{bytes} vs {expect}");
+    }
+
+    #[test]
+    fn splitting_outer_costs_less_kv_than_inner() {
+        // The outer shard keeps KV reach l - i; the inner shard's reach is
+        // smaller — matching Appendix B's preference ordering.
+        let m = ModelConfig::llama3_8b();
+        let it = Item::whole_doc(0, 32768, 0);
+        let (outer, inner) = it.split_outer(8192);
+        let b_outer = item_migration_bytes(&outer, &m);
+        let b_inner = item_migration_bytes(&inner, &m);
+        // outer has fewer q tokens but full KV reach; inner has more q but
+        // shallower KV. Both must be positive and distinct.
+        assert!(b_outer > 0.0 && b_inner > 0.0 && b_outer != b_inner);
+        assert!(outer.kv_context_tokens() > inner.kv_context_tokens());
+    }
+}

@@ -1,0 +1,325 @@
+//! Scheduling units (§4.2 "Scheduling units") and CA-tasks (§4.1).
+//!
+//! An [`Item`] is a document or a shard of one, kept in **head-tail**
+//! form (Appendix B): the Item `(l, i, j)` owns the query tokens
+//! `[i, j)` *and* the mirror range `[l-j, l-i)` of a length-`l` document.
+//! A whole document is `(l, 0, ⌈l/2⌉)`. Head-tail pairing makes FLOPs a
+//! function of width only (not position), which is what keeps
+//! FLOPs-based cost estimation accurate (Appendix B's closing remark) —
+//! and the pair algebra is closed under splitting:
+//! `(l, i, j) → (l, i, k) + (l, k, j)`.
+//!
+//! Each Item maps to (up to) two [`CaTask`]s — one per half — each being
+//! a query shard plus its causal KV context `kv(t) = context(q(t))`.
+
+use crate::model::FlopsModel;
+
+/// Attention-kernel block size in tokens: shards must be multiples of
+/// this or they underfill kernel tiles (Fig. 5's 128-token knee).
+pub const BLOCK_TOKENS: usize = 128;
+
+/// A head-tail scheduling unit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Item {
+    pub doc: u32,
+    /// Full document length `l`.
+    pub doc_len: usize,
+    /// Head range start (`i` in Appendix B).
+    pub i: usize,
+    /// Head range end (`j`); the tail range is `[l-j, l-i)`.
+    pub j: usize,
+    /// Logical device that computes this Item's context-independent
+    /// layers (where its Q/K/V are produced and its O must return).
+    pub home: usize,
+}
+
+impl Item {
+    /// A whole document as one Item. For odd lengths the head gets the
+    /// extra token (ranges `[0, ⌈l/2⌉)` + `[⌊l/2⌋... )` overlap by one iff
+    /// l is odd — avoided by requiring even `l`; corpus lengths are
+    /// 16-aligned per `data::distributions`).
+    pub fn whole_doc(doc: u32, doc_len: usize, home: usize) -> Item {
+        assert!(doc_len % 2 == 0, "document length must be even, got {doc_len}");
+        Item {
+            doc,
+            doc_len,
+            i: 0,
+            j: doc_len / 2,
+            home,
+        }
+    }
+
+    /// Query tokens owned (both halves).
+    pub fn q_tokens(&self) -> usize {
+        2 * (self.j - self.i)
+    }
+
+    /// Width of each half.
+    pub fn half_width(&self) -> usize {
+        self.j - self.i
+    }
+
+    /// Forward CA FLOPs of both halves (exact causal accounting).
+    pub fn ca_fwd_flops(&self, f: &FlopsModel) -> f64 {
+        f.ca_headtail_fwd(self.doc_len, self.i, self.j)
+    }
+
+    /// Forward+backward CA FLOPs.
+    pub fn ca_train_flops(&self, f: &FlopsModel) -> f64 {
+        self.ca_fwd_flops(f) * (1.0 + crate::model::flops::CA_BWD_FACTOR)
+    }
+
+    /// KV context tokens required if this Item executes away from home:
+    /// the tail half `[l-j, l-i)` needs `KV[0, l-i)`, which subsumes the
+    /// head's `KV[0, j)` whenever `j ≤ l-i` (always true for `j ≤ l/2`).
+    pub fn kv_context_tokens(&self) -> usize {
+        self.doc_len - self.i
+    }
+
+    /// Split into `(l, i, k)` and `(l, k, j)` at head position `k`.
+    /// Both sub-Items inherit `home`.
+    pub fn split_at(&self, k: usize) -> (Item, Item) {
+        assert!(self.i < k && k < self.j, "split point {k} outside ({}, {})", self.i, self.j);
+        (
+            Item { j: k, ..*self },
+            Item { i: k, ..*self },
+        )
+    }
+
+    /// Split so the *outer* sub-Item (the one containing positions `i`
+    /// and `l-i`, i.e. the cheapest KV-wise to keep remote) has `n_q`
+    /// query tokens. `n_q` must be even and < q_tokens().
+    pub fn split_outer(&self, n_q: usize) -> (Item, Item) {
+        assert!(n_q % 2 == 0 && n_q > 0 && n_q < self.q_tokens());
+        self.split_at(self.i + n_q / 2)
+    }
+
+    /// Round a desired query-token count to the kernel block grid
+    /// (multiples of `2·BLOCK_TOKENS` — each half a multiple of 128),
+    /// clamped to `[2·BLOCK, q_tokens - 2·BLOCK]` so both sides of a
+    /// split stay block-aligned and non-empty. Returns `None` if the Item
+    /// is too small to split on the grid.
+    pub fn quantize_split(&self, desired_q: usize) -> Option<usize> {
+        let grid = 2 * BLOCK_TOKENS;
+        if self.q_tokens() < 2 * grid {
+            return None;
+        }
+        let max_q = self.q_tokens() - grid;
+        let q = (desired_q / grid).max(1) * grid;
+        Some(q.clamp(grid, max_q - max_q % grid))
+    }
+
+    /// The CA-tasks of this Item: head shard + tail shard (merged into
+    /// one when the ranges touch, i.e. the Item is a whole document).
+    pub fn ca_tasks(&self) -> Vec<CaTask> {
+        let l = self.doc_len;
+        if self.j * 2 == l && self.i == 0 {
+            // Whole document: one contiguous task [0, l).
+            return vec![CaTask {
+                doc: self.doc,
+                q_start: 0,
+                q_len: l,
+                kv_len: l,
+                home: self.home,
+            }];
+        }
+        let head = CaTask {
+            doc: self.doc,
+            q_start: self.i,
+            q_len: self.j - self.i,
+            kv_len: self.j,
+            home: self.home,
+        };
+        let tail = CaTask {
+            doc: self.doc,
+            q_start: l - self.j,
+            q_len: self.j - self.i,
+            kv_len: l - self.i,
+            home: self.home,
+        };
+        if head.q_start + head.q_len == tail.q_start {
+            // Adjacent halves (whole-doc-with-offset); merge.
+            return vec![CaTask {
+                doc: self.doc,
+                q_start: head.q_start,
+                q_len: head.q_len + tail.q_len,
+                kv_len: tail.kv_len,
+                home: self.home,
+            }];
+        }
+        vec![head, tail]
+    }
+}
+
+/// A core-attention task `t`: the CA computation of query shard `q(t)`
+/// (rows `[q_start, q_start+q_len)` of a document) against its causal
+/// context `kv(t) = KV[0, kv_len)` where `kv_len = q_start + q_len`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CaTask {
+    pub doc: u32,
+    pub q_start: usize,
+    pub q_len: usize,
+    /// Context length: `q_start + q_len` under the causal mask.
+    pub kv_len: usize,
+    /// Device where Q/K/V live and O must return.
+    pub home: usize,
+}
+
+impl CaTask {
+    /// Forward FLOPs (exact causal).
+    pub fn fwd_flops(&self, f: &FlopsModel) -> f64 {
+        f.ca_task_fwd(self.q_len, self.q_start)
+    }
+
+    /// Bytes that must move if executed on a server other than `home`:
+    /// Q in, KV context in, O out.
+    pub fn remote_bytes(&self, q_bytes_per_tok: usize, kv_bytes_per_tok: usize) -> f64 {
+        (self.q_len * q_bytes_per_tok      // Q in
+            + self.kv_len * kv_bytes_per_tok // KV context in
+            + self.q_len * q_bytes_per_tok)  // O back
+            as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::util::quickcheck::{check, ensure};
+    use crate::util::rng::Rng;
+
+    fn fm() -> FlopsModel {
+        FlopsModel::new(&ModelConfig::llama3_8b())
+    }
+
+    #[test]
+    fn whole_doc_flops_match_document() {
+        let f = fm();
+        let it = Item::whole_doc(0, 8192, 0);
+        let whole = f.ca_doc_fwd(8192);
+        assert!((it.ca_fwd_flops(&f) - whole).abs() / whole < 1e-12);
+        assert_eq!(it.q_tokens(), 8192);
+        assert_eq!(it.kv_context_tokens(), 8192);
+    }
+
+    #[test]
+    fn split_conserves_tokens_and_flops() {
+        let f = fm();
+        let it = Item::whole_doc(0, 16384, 0);
+        let (a, b) = it.split_at(2048);
+        assert_eq!(a.q_tokens() + b.q_tokens(), it.q_tokens());
+        let sum = a.ca_fwd_flops(&f) + b.ca_fwd_flops(&f);
+        let whole = it.ca_fwd_flops(&f);
+        assert!((sum - whole).abs() / whole < 1e-12);
+    }
+
+    #[test]
+    fn split_outer_width() {
+        let it = Item::whole_doc(0, 16384, 0);
+        let (outer, inner) = it.split_outer(4096);
+        assert_eq!(outer.q_tokens(), 4096);
+        assert_eq!(inner.q_tokens(), 16384 - 4096);
+        // The outer piece needs more KV context (it holds the latest
+        // tokens of the doc).
+        assert!(outer.kv_context_tokens() > inner.kv_context_tokens());
+    }
+
+    #[test]
+    fn recursive_splits_conserve() {
+        let f = fm();
+        check(
+            60,
+            |r: &mut Rng| {
+                let l = r.gen_range(8, 512) * 256; // even, big enough
+                let splits = r.gen_range(0, 4);
+                (l, splits)
+            },
+            |&(l, splits)| {
+                let it = Item::whole_doc(0, l as usize, 0);
+                let mut items = vec![it];
+                let mut rng = Rng::new(l ^ splits);
+                for _ in 0..splits {
+                    // Split the widest item if possible.
+                    items.sort_by_key(|x| std::cmp::Reverse(x.q_tokens()));
+                    let top = items[0];
+                    if let Some(q) = top.quantize_split(top.q_tokens() / 2) {
+                        let (a, b) = top.split_outer(q);
+                        items[0] = a;
+                        items.push(b);
+                    }
+                    let _ = rng.next_u64();
+                }
+                let tok: usize = items.iter().map(|x| x.q_tokens()).sum();
+                let fl: f64 = items.iter().map(|x| x.ca_fwd_flops(&f)).sum();
+                let whole = it.ca_fwd_flops(&f);
+                ensure(tok == it.q_tokens(), format!("tokens {tok}"))?;
+                ensure(
+                    (fl - whole).abs() / whole < 1e-9,
+                    format!("flops {fl} vs {whole}"),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn quantize_split_block_aligned() {
+        let it = Item::whole_doc(0, 16384, 0);
+        for want in [1, 200, 4000, 16000] {
+            if let Some(q) = it.quantize_split(want) {
+                assert_eq!(q % (2 * BLOCK_TOKENS), 0);
+                assert!(q >= 2 * BLOCK_TOKENS);
+                assert!(it.q_tokens() - q >= 2 * BLOCK_TOKENS);
+            }
+        }
+        // Too small to split:
+        let small = Item::whole_doc(1, 256, 0);
+        assert!(small.quantize_split(128).is_none());
+    }
+
+    #[test]
+    fn ca_tasks_whole_doc_single() {
+        let it = Item::whole_doc(0, 4096, 3);
+        let ts = it.ca_tasks();
+        assert_eq!(ts.len(), 1);
+        assert_eq!(ts[0].q_len, 4096);
+        assert_eq!(ts[0].kv_len, 4096);
+        assert_eq!(ts[0].home, 3);
+    }
+
+    #[test]
+    fn ca_tasks_shard_pair() {
+        let it = Item::whole_doc(0, 16384, 0);
+        let (outer, inner) = it.split_outer(4096);
+        let ts = outer.ca_tasks();
+        assert_eq!(ts.len(), 2);
+        // head [0, 2048) with kv 2048; tail [14336, 16384) with kv 16384
+        assert_eq!((ts[0].q_start, ts[0].q_len, ts[0].kv_len), (0, 2048, 2048));
+        assert_eq!((ts[1].q_start, ts[1].q_len, ts[1].kv_len), (14336, 2048, 16384));
+        // inner pair merges into its own head-tail
+        let ti = inner.ca_tasks();
+        assert_eq!(ti.len(), 1); // [2048, 8192) + [8192, 14336) are adjacent
+        assert_eq!((ti[0].q_start, ti[0].q_len, ti[0].kv_len), (2048, 12288, 14336));
+    }
+
+    #[test]
+    fn ca_tasks_flops_match_item() {
+        let f = fm();
+        let it = Item::whole_doc(0, 32768, 0);
+        let (outer, inner) = it.split_outer(8192);
+        for x in [outer, inner] {
+            let task_sum: f64 = x.ca_tasks().iter().map(|t| t.fwd_flops(&f)).sum();
+            let item_flops = x.ca_fwd_flops(&f);
+            assert!(
+                (task_sum - item_flops).abs() / item_flops < 1e-9,
+                "{task_sum} vs {item_flops}"
+            );
+        }
+    }
+
+    #[test]
+    fn remote_bytes_counts_q_kv_o() {
+        let t = CaTask { doc: 0, q_start: 0, q_len: 100, kv_len: 100, home: 0 };
+        let b = t.remote_bytes(10, 4);
+        assert_eq!(b, (100 * 10 + 100 * 4 + 100 * 10) as f64);
+    }
+}

@@ -1,0 +1,26 @@
+//! The paper's contribution: core attention disaggregation (CAD).
+//!
+//! * [`item`] — the scheduling unit algebra: head-tail [`item::Item`]s
+//!   (documents or 128-aligned shards) and the [`item::CaTask`]s they map
+//!   to;
+//! * [`profiler`] — CA latency prediction: a (q_len × kv_len) grid with
+//!   bilinear interpolation and a saturation region (§4.2 "Profiler"),
+//!   either analytic (Fig. 5 shaped) or loaded from measured JSON;
+//! * [`comm`] — Appendix A's max-partition bound and Appendix B's
+//!   closed-form minimal-communication shard selection `v(·)`;
+//! * [`scheduler`] — the communication-aware greedy balancer (§4.2);
+//! * [`pingpong`] — the Fig.-7 overlap timeline (§4.1);
+//! * [`plan`] — the scheduler's output: CA-task → attention-server
+//!   assignments plus the all-to-all byte matrix.
+
+pub mod comm;
+pub mod item;
+pub mod pingpong;
+pub mod plan;
+pub mod profiler;
+pub mod scheduler;
+
+pub use item::{CaTask, Item, BLOCK_TOKENS};
+pub use plan::Plan;
+pub use profiler::Profiler;
+pub use scheduler::{schedule, SchedulerCfg};

@@ -1,0 +1,156 @@
+//! Ping-pong execution (§4.1, Fig. 7): overlap the CA dispatch/return
+//! communication of one nano-batch with the computation of the other.
+//!
+//! Each microbatch is split into two equal-token nano-batches, "ping" and
+//! "pong". Per transformer layer, the GPU timeline alternates:
+//!
+//! ```text
+//! compute:  CA(i,0) CA(i,1) | postCA(i,0)+preCA(i+1,0) | postCA(i,1)+preCA(i+1,1) | CA(i+1,0) ...
+//! comm:     exit(i,0)/enter(i+1,0) run UNDER the (i,1)-side compute and vice versa
+//! ```
+//!
+//! [`layer_time`] computes the per-layer makespan of this schedule given
+//! the four primitive durations, and its degenerate variants model the
+//! Fig.-11 ablations: `single_stream` (communication serializes with
+//! compute) and `signal_only` (communication is free — the pure
+//! compute-imbalance floor).
+
+/// Primitive durations for one *nano-batch* at one layer (seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NanoCosts {
+    /// Context-independent compute around the CA boundary
+    /// (post-CA of layer i fused with pre-CA of layer i+1).
+    pub linear: f64,
+    /// Core-attention execution on this GPU's attention-server role
+    /// (its share of the fused batched kernel).
+    pub ca: f64,
+    /// Dispatch communication (Q/KV out + in) for this nano-batch.
+    pub comm_in: f64,
+    /// Return communication (O back).
+    pub comm_out: f64,
+}
+
+impl NanoCosts {
+    pub fn total_comm(&self) -> f64 {
+        self.comm_in + self.comm_out
+    }
+}
+
+/// Per-layer time under the ping-pong schedule: each nano-batch's
+/// communication overlaps the *other* nano-batch's compute. The layer
+/// completes when both nano-batches' compute and comm are done; comm for
+/// nano `a` can hide under compute of nano `b` (and vice versa), so the
+/// makespan is `max(total_compute, compute_a + comm_b, compute_b +
+/// comm_a)` reduced to the standard two-stage overlap bound:
+/// `max(C_total, max_i(comm_i) + compute_other_floor)` — we model it as
+/// the critical path of the Fig.-7 DAG.
+pub fn layer_time_pingpong(ping: NanoCosts, pong: NanoCosts) -> f64 {
+    // Compute occupies the GPU serially: CA(0), CA(1), lin(0), lin(1).
+    let compute_total = ping.ca + pong.ca + ping.linear + pong.linear;
+    // Ping's comm must fit under pong's compute slots and vice versa;
+    // if comm exceeds the available overlap window it extends the
+    // critical path.
+    let ping_window = pong.ca + pong.linear;
+    let pong_window = ping.ca + ping.linear;
+    let ping_spill = (ping.total_comm() - ping_window).max(0.0);
+    let pong_spill = (pong.total_comm() - pong_window).max(0.0);
+    compute_total + ping_spill + pong_spill
+}
+
+/// Per-layer time with communication on the same stream (no overlap) —
+/// the "Single Stream" ablation of Fig. 11.
+pub fn layer_time_single_stream(ping: NanoCosts, pong: NanoCosts) -> f64 {
+    ping.ca + pong.ca + ping.linear + pong.linear + ping.total_comm() + pong.total_comm()
+}
+
+/// Per-layer time when communication is free (1-byte "Signal" ablation):
+/// the floor set purely by compute balance.
+pub fn layer_time_signal(ping: NanoCosts, pong: NanoCosts) -> f64 {
+    ping.ca + pong.ca + ping.linear + pong.linear
+}
+
+/// Split a microbatch's costs into two equal nano-batches. Token counts
+/// divide evenly; CA and comm divide with the tokens (CA-tasks are
+/// token-divisible — the same composability that enables CAD).
+pub fn split_nano(linear: f64, ca: f64, comm_in: f64, comm_out: f64) -> (NanoCosts, NanoCosts) {
+    let half = |x: f64| x / 2.0;
+    let n = NanoCosts {
+        linear: half(linear),
+        ca: half(ca),
+        comm_in: half(comm_in),
+        comm_out: half(comm_out),
+    };
+    (n, n)
+}
+
+/// Whether communication is fully hidden at these costs.
+pub fn fully_overlapped(ping: NanoCosts, pong: NanoCosts) -> bool {
+    (layer_time_pingpong(ping, pong) - layer_time_signal(ping, pong)).abs() < 1e-12
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nano(linear: f64, ca: f64, cin: f64, cout: f64) -> NanoCosts {
+        NanoCosts { linear, ca, comm_in: cin, comm_out: cout }
+    }
+
+    #[test]
+    fn small_comm_fully_hidden() {
+        let (p, q) = split_nano(10.0, 6.0, 2.0, 1.0);
+        assert!(fully_overlapped(p, q));
+        assert_eq!(layer_time_pingpong(p, q), layer_time_signal(p, q));
+    }
+
+    #[test]
+    fn large_comm_spills() {
+        // Comm bigger than the other nano's compute window must extend
+        // the makespan, but by less than serial execution.
+        let p = nano(1.0, 1.0, 10.0, 5.0);
+        let q = nano(1.0, 1.0, 10.0, 5.0);
+        let pp = layer_time_pingpong(p, q);
+        let ss = layer_time_single_stream(p, q);
+        let sig = layer_time_signal(p, q);
+        assert!(pp > sig);
+        assert!(pp < ss);
+        // exact: compute 4, windows 2 each, spill (15-2)*2 = 26 -> 30
+        assert!((pp - 30.0).abs() < 1e-9);
+        assert!((ss - 34.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_stream_penalty_shape() {
+        // Fig. 11: single stream is 10-17% slower when comm ≈ 10-17% of
+        // compute.
+        let comm = 0.15;
+        let (p, q) = split_nano(0.7, 0.3, comm, comm * 0.3);
+        let pp = layer_time_pingpong(p, q);
+        let ss = layer_time_single_stream(p, q);
+        let ratio = ss / pp;
+        assert!(ratio > 1.10 && ratio < 1.25, "ratio {ratio}");
+    }
+
+    #[test]
+    fn signal_is_lower_bound() {
+        for seed in 0..20u64 {
+            let mut r = crate::util::rng::Rng::new(seed);
+            let p = nano(r.next_f64(), r.next_f64(), r.next_f64(), r.next_f64());
+            let q = nano(r.next_f64(), r.next_f64(), r.next_f64(), r.next_f64());
+            let sig = layer_time_signal(p, q);
+            let pp = layer_time_pingpong(p, q);
+            let ss = layer_time_single_stream(p, q);
+            assert!(sig <= pp + 1e-12);
+            assert!(pp <= ss + 1e-12);
+        }
+    }
+
+    #[test]
+    fn split_halves_everything() {
+        let (p, q) = split_nano(8.0, 4.0, 2.0, 1.0);
+        assert_eq!(p, q);
+        assert_eq!(p.linear, 4.0);
+        assert_eq!(p.ca, 2.0);
+        assert_eq!(p.total_comm(), 1.5);
+    }
+}

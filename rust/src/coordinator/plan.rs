@@ -1,0 +1,230 @@
+//! Scheduler output (§4.1): the CA-task → attention-server assignment and
+//! the all-to-all communication it implies.
+
+use crate::config::ModelConfig;
+use crate::model::FlopsModel;
+
+use super::item::Item;
+
+/// One scheduled Item: where its CA executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Assignment {
+    pub item: Item,
+    pub server: usize,
+}
+
+impl Assignment {
+    pub fn is_local(&self) -> bool {
+        self.item.home == self.server
+    }
+}
+
+/// A complete schedule for one microbatch / PP tick.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub n_servers: usize,
+    pub assignments: Vec<Assignment>,
+    /// Estimated CA execution time per server (seconds).
+    pub server_load: Vec<f64>,
+    /// Ideal per-server load F̄ (seconds).
+    pub target_load: f64,
+    /// Dispatch bytes `comm[src][dst]`: Q+KV sent from home `src` to
+    /// server `dst` (dst ≠ src entries only).
+    pub comm_matrix: Vec<Vec<f64>>,
+    /// Output-return bytes `ret[server][home]`.
+    pub return_matrix: Vec<Vec<f64>>,
+}
+
+impl Plan {
+    /// Build the comm matrices from assignments.
+    pub fn with_comm(mut self, m: &ModelConfig) -> Plan {
+        let n = self.n_servers;
+        let mut comm = vec![vec![0.0; n]; n];
+        let mut ret = vec![vec![0.0; n]; n];
+        for a in &self.assignments {
+            if a.is_local() {
+                continue;
+            }
+            let q = (a.item.q_tokens() * m.q_bytes_per_token()) as f64;
+            let kv = (a.item.kv_context_tokens() * m.kv_bytes_per_token()) as f64;
+            comm[a.item.home][a.server] += q + kv;
+            ret[a.server][a.item.home] += q; // O is Q-shaped
+        }
+        self.comm_matrix = comm;
+        self.return_matrix = ret;
+        self
+    }
+
+    /// Total bytes moved (dispatch + return).
+    pub fn total_comm_bytes(&self) -> f64 {
+        let d: f64 = self.comm_matrix.iter().flatten().sum();
+        let r: f64 = self.return_matrix.iter().flatten().sum();
+        d + r
+    }
+
+    /// Max bytes any single server sends or receives in the dispatch
+    /// all-to-all — the straggler link (§3.3: spread communication-heavy
+    /// shards across destinations).
+    pub fn max_link_bytes(&self) -> f64 {
+        let n = self.n_servers;
+        let mut mx: f64 = 0.0;
+        for s in 0..n {
+            let send: f64 = self.comm_matrix[s].iter().sum::<f64>()
+                + self.return_matrix[s].iter().sum::<f64>();
+            let recv: f64 = (0..n)
+                .map(|o| self.comm_matrix[o][s] + self.return_matrix[o][s])
+                .sum();
+            mx = mx.max(send).max(recv);
+        }
+        mx
+    }
+
+    /// `max load / mean load` across servers.
+    pub fn imbalance(&self) -> f64 {
+        crate::util::stats::imbalance_ratio(&self.server_load)
+    }
+
+    /// Fraction of items that stayed home.
+    pub fn local_fraction(&self) -> f64 {
+        if self.assignments.is_empty() {
+            return 1.0;
+        }
+        self.assignments.iter().filter(|a| a.is_local()).count() as f64
+            / self.assignments.len() as f64
+    }
+
+    /// Invariant checks used by tests and the property suite:
+    /// * every document's query tokens are covered exactly once;
+    /// * every assignment's server index is valid;
+    /// * CA FLOPs are conserved vs. the original docs.
+    pub fn validate(&self, original: &[Item], f: &FlopsModel) -> Result<(), String> {
+        for a in &self.assignments {
+            if a.server >= self.n_servers {
+                return Err(format!("assignment to invalid server {}", a.server));
+            }
+        }
+        // Token conservation per document.
+        use std::collections::BTreeMap;
+        let mut orig_tokens: BTreeMap<u32, usize> = BTreeMap::new();
+        let mut orig_flops: BTreeMap<u32, f64> = BTreeMap::new();
+        for it in original {
+            *orig_tokens.entry(it.doc).or_default() += it.q_tokens();
+            *orig_flops.entry(it.doc).or_insert(0.0) += it.ca_fwd_flops(f);
+        }
+        let mut got_tokens: BTreeMap<u32, usize> = BTreeMap::new();
+        let mut got_flops: BTreeMap<u32, f64> = BTreeMap::new();
+        for a in &self.assignments {
+            *got_tokens.entry(a.item.doc).or_default() += a.item.q_tokens();
+            *got_flops.entry(a.item.doc).or_insert(0.0) += a.item.ca_fwd_flops(f);
+        }
+        if orig_tokens != got_tokens {
+            return Err(format!(
+                "token conservation violated: {orig_tokens:?} vs {got_tokens:?}"
+            ));
+        }
+        for (doc, &fl) in &orig_flops {
+            let got = got_flops.get(doc).copied().unwrap_or(0.0);
+            if (got - fl).abs() / fl.max(1.0) > 1e-6 {
+                return Err(format!("flops conservation violated for doc {doc}: {fl} vs {got}"));
+            }
+        }
+        // No overlapping ranges within a document.
+        let mut ranges: BTreeMap<u32, Vec<(usize, usize)>> = BTreeMap::new();
+        for a in &self.assignments {
+            for t in a.item.ca_tasks() {
+                ranges
+                    .entry(t.doc)
+                    .or_default()
+                    .push((t.q_start, t.q_start + t.q_len));
+            }
+        }
+        for (doc, mut rs) in ranges {
+            rs.sort();
+            for w in rs.windows(2) {
+                if w[0].1 > w[1].0 {
+                    return Err(format!("doc {doc}: overlapping q ranges {w:?}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn plan_with(assignments: Vec<Assignment>, n: usize) -> Plan {
+        Plan {
+            n_servers: n,
+            assignments,
+            server_load: vec![1.0; n],
+            target_load: 1.0,
+            comm_matrix: vec![],
+            return_matrix: vec![],
+        }
+        .with_comm(&ModelConfig::llama3_8b())
+    }
+
+    #[test]
+    fn local_assignments_cost_no_comm() {
+        let it = Item::whole_doc(0, 4096, 1);
+        let p = plan_with(vec![Assignment { item: it, server: 1 }], 4);
+        assert_eq!(p.total_comm_bytes(), 0.0);
+        assert_eq!(p.local_fraction(), 1.0);
+    }
+
+    #[test]
+    fn remote_assignment_populates_matrices() {
+        let m = ModelConfig::llama3_8b();
+        let it = Item::whole_doc(0, 4096, 0);
+        let p = plan_with(vec![Assignment { item: it, server: 2 }], 4);
+        let q = (4096 * m.q_bytes_per_token()) as f64;
+        let kv = (4096 * m.kv_bytes_per_token()) as f64;
+        assert_eq!(p.comm_matrix[0][2], q + kv);
+        assert_eq!(p.return_matrix[2][0], q);
+        assert_eq!(p.total_comm_bytes(), 2.0 * q + kv);
+        assert!(p.max_link_bytes() > 0.0);
+    }
+
+    #[test]
+    fn validate_catches_lost_tokens() {
+        let f = crate::model::FlopsModel::new(&ModelConfig::llama3_8b());
+        let orig = vec![Item::whole_doc(0, 8192, 0)];
+        let (a, _b) = orig[0].split_at(2048);
+        // Plan drops piece b.
+        let p = plan_with(vec![Assignment { item: a, server: 0 }], 2);
+        assert!(p.validate(&orig, &f).is_err());
+    }
+
+    #[test]
+    fn validate_catches_duplicates() {
+        let f = crate::model::FlopsModel::new(&ModelConfig::llama3_8b());
+        let orig = vec![Item::whole_doc(0, 8192, 0)];
+        let p = plan_with(
+            vec![
+                Assignment { item: orig[0], server: 0 },
+                Assignment { item: orig[0], server: 1 },
+            ],
+            2,
+        );
+        assert!(p.validate(&orig, &f).is_err());
+    }
+
+    #[test]
+    fn validate_accepts_exact_partition() {
+        let f = crate::model::FlopsModel::new(&ModelConfig::llama3_8b());
+        let orig = vec![Item::whole_doc(0, 8192, 0), Item::whole_doc(1, 4096, 1)];
+        let (a, b) = orig[0].split_at(1024);
+        let p = plan_with(
+            vec![
+                Assignment { item: a, server: 1 },
+                Assignment { item: b, server: 0 },
+                Assignment { item: orig[1], server: 1 },
+            ],
+            2,
+        );
+        p.validate(&orig, &f).unwrap();
+    }
+}

@@ -1,0 +1,299 @@
+//! CA-task latency prediction (§4.2 "Profiler").
+//!
+//! The scheduler costs CA-tasks with a profiler: a grid of measured
+//! (q_len × kv_len) → latency points, queried by bilinear interpolation;
+//! in the saturation region (kernel at peak throughput) cost falls back
+//! to `flops / max_throughput`.
+//!
+//! Two constructions:
+//! * [`Profiler::analytic`] — Fig.-5-shaped model: peak throughput for
+//!   shards ≥ the 128-token tile, padding-waste throughput collapse below
+//!   it (a q-shard of `q < 128` occupies a whole tile ⇒ effective FLOPs
+//!   are computed at `⌈q/128⌉·128` rows);
+//! * [`Profiler::from_json`] — measured grid emitted by
+//!   `python/compile/aot.py --profile` (interpret-mode Pallas timings),
+//!   same JSON schema.
+
+use crate::config::ClusterConfig;
+use crate::model::FlopsModel;
+use crate::util::json::{Json, JsonError};
+
+use super::item::BLOCK_TOKENS;
+
+/// Latency grid over (q_len, kv_len).
+#[derive(Debug, Clone)]
+pub struct Profiler {
+    /// Grid coordinates, ascending.
+    pub q_grid: Vec<f64>,
+    pub kv_grid: Vec<f64>,
+    /// `latency[qi][ki]` seconds for one forward CA call.
+    pub latency: Vec<Vec<f64>>,
+    /// Peak sustained throughput (FLOP/s) — the saturation region rate.
+    pub peak_flops: f64,
+    /// FLOPs model used to convert shapes → FLOPs.
+    pub h_q: f64,
+}
+
+impl Profiler {
+    /// Analytic Fig.-5 model from the cluster's attention MFU.
+    pub fn analytic(f: &FlopsModel, cluster: &ClusterConfig) -> Profiler {
+        let peak = cluster.attention_flops();
+        let q_grid: Vec<f64> = [
+            16usize, 32, 64, 128, 256, 512, 1024, 2048, 4096, 8192, 16384, 32768, 65536,
+            131072,
+        ]
+        .iter()
+        .map(|&x| x as f64)
+        .collect();
+        let kv_grid = q_grid.clone();
+        let mut latency = vec![vec![0.0; kv_grid.len()]; q_grid.len()];
+        for (qi, &q) in q_grid.iter().enumerate() {
+            for (ki, &kv) in kv_grid.iter().enumerate() {
+                latency[qi][ki] = Self::analytic_latency(f.h_q, peak, q, kv);
+            }
+        }
+        Profiler {
+            q_grid,
+            kv_grid,
+            latency,
+            peak_flops: peak,
+            h_q: f.h_q,
+        }
+    }
+
+    /// (query, key) pair count of a causal CA-task shape: `q` query rows
+    /// whose context reaches `kv` keys — rows attend to `kv-q+1 … kv`
+    /// keys, a trapezoid of `q·kv − q(q−1)/2` pairs. Modern varlen
+    /// kernels skip the empty causal half, so cost tracks this, not the
+    /// `q·kv` rectangle.
+    pub fn causal_pairs(q: f64, kv: f64) -> f64 {
+        let kv = kv.max(q); // a task's context includes its own rows
+        q * kv - q * (q - 1.0) / 2.0
+    }
+
+    /// One grid point of the analytic model: causal FLOPs at tile-padded
+    /// shapes over peak throughput, plus a fixed kernel-launch floor.
+    fn analytic_latency(h_q: f64, peak: f64, q: f64, kv: f64) -> f64 {
+        let block = BLOCK_TOKENS as f64;
+        let q_pad = (q / block).ceil() * block;
+        let kv_pad = (kv / block).ceil() * block;
+        let flops = 4.0 * h_q * Self::causal_pairs(q_pad, kv_pad);
+        const LAUNCH_OVERHEAD: f64 = 4e-6;
+        LAUNCH_OVERHEAD + flops / peak
+    }
+
+    /// Load a measured grid from JSON:
+    /// `{"q_grid": [...], "kv_grid": [...], "latency": [[...]], "peak_flops": x, "h_q": x}`.
+    pub fn from_json(v: &Json) -> Result<Profiler, JsonError> {
+        let q_grid = v
+            .req("q_grid")?
+            .as_f64_vec()
+            .ok_or_else(|| JsonError("q_grid must be an array".into()))?;
+        let kv_grid = v
+            .req("kv_grid")?
+            .as_f64_vec()
+            .ok_or_else(|| JsonError("kv_grid must be an array".into()))?;
+        let lat_rows = v
+            .req("latency")?
+            .as_arr()
+            .ok_or_else(|| JsonError("latency must be an array".into()))?;
+        let mut latency = Vec::with_capacity(lat_rows.len());
+        for row in lat_rows {
+            latency.push(
+                row.as_f64_vec()
+                    .ok_or_else(|| JsonError("latency rows must be arrays".into()))?,
+            );
+        }
+        if latency.len() != q_grid.len()
+            || latency.iter().any(|r| r.len() != kv_grid.len())
+        {
+            return Err(JsonError("latency shape mismatch".into()));
+        }
+        Ok(Profiler {
+            q_grid,
+            kv_grid,
+            latency,
+            peak_flops: v
+                .req("peak_flops")?
+                .as_f64()
+                .ok_or_else(|| JsonError("peak_flops must be a number".into()))?,
+            h_q: v
+                .req("h_q")?
+                .as_f64()
+                .ok_or_else(|| JsonError("h_q must be a number".into()))?,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "q_grid",
+                Json::Arr(self.q_grid.iter().map(|&x| Json::Num(x)).collect()),
+            ),
+            (
+                "kv_grid",
+                Json::Arr(self.kv_grid.iter().map(|&x| Json::Num(x)).collect()),
+            ),
+            (
+                "latency",
+                Json::Arr(
+                    self.latency
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(|&x| Json::Num(x)).collect()))
+                        .collect(),
+                ),
+            ),
+            ("peak_flops", Json::Num(self.peak_flops)),
+            ("h_q", Json::Num(self.h_q)),
+        ])
+    }
+
+    /// Predicted forward latency of a CA shape by bilinear interpolation
+    /// over the four nearest grid points; saturation-region shapes
+    /// (predicted throughput ≥ peak) use `flops/peak` directly (§4.2).
+    pub fn predict(&self, q_len: f64, kv_len: f64) -> f64 {
+        let interp = self.bilinear(q_len.max(1.0), kv_len.max(1.0));
+        let flops = 4.0 * self.h_q * Self::causal_pairs(q_len, kv_len);
+        let floor = flops / self.peak_flops;
+        // If interpolation claims super-peak throughput, clamp to peak.
+        interp.max(floor)
+    }
+
+    /// Predicted latency of a whole *fused batch* of CA-tasks: shards are
+    /// batched into one kernel call, so cost is the sum of per-task tile
+    /// work (composability, §3.3) plus one launch.
+    pub fn predict_batch(&self, shapes: &[(f64, f64)]) -> f64 {
+        if shapes.is_empty() {
+            return 0.0;
+        }
+        let per_task: f64 = shapes.iter().map(|&(q, kv)| self.predict(q, kv)).sum();
+        // One fused launch replaces per-task launches: subtract the
+        // repeated floor (approximated by the smallest grid latency).
+        let launch = self.latency[0][0].min(4e-6);
+        per_task - launch * (shapes.len() - 1) as f64
+    }
+
+    /// Effective throughput (useful FLOP/s) at a shape — the Fig. 5
+    /// y-axis: *useful* (unpadded) causal FLOPs over predicted latency.
+    pub fn throughput(&self, q_len: f64, kv_len: f64) -> f64 {
+        let flops = 4.0 * self.h_q * Self::causal_pairs(q_len, kv_len);
+        flops / self.predict(q_len, kv_len)
+    }
+
+    fn bracket(grid: &[f64], x: f64) -> (usize, usize, f64) {
+        if x <= grid[0] {
+            return (0, 0, 0.0);
+        }
+        if x >= *grid.last().unwrap() {
+            let n = grid.len() - 1;
+            return (n, n, 0.0);
+        }
+        let hi = grid.partition_point(|&g| g < x);
+        let lo = hi - 1;
+        let frac = (x - grid[lo]) / (grid[hi] - grid[lo]);
+        (lo, hi, frac)
+    }
+
+    fn bilinear(&self, q: f64, kv: f64) -> f64 {
+        let (q0, q1, fq) = Self::bracket(&self.q_grid, q);
+        let (k0, k1, fk) = Self::bracket(&self.kv_grid, kv);
+        let l00 = self.latency[q0][k0];
+        let l01 = self.latency[q0][k1];
+        let l10 = self.latency[q1][k0];
+        let l11 = self.latency[q1][k1];
+        let top = l00 * (1.0 - fk) + l01 * fk;
+        let bot = l10 * (1.0 - fk) + l11 * fk;
+        top * (1.0 - fq) + bot * fq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn prof() -> Profiler {
+        Profiler::analytic(
+            &FlopsModel::new(&ModelConfig::llama3_8b()),
+            &ClusterConfig::h200(1),
+        )
+    }
+
+    #[test]
+    fn grid_points_exact() {
+        let p = prof();
+        // At a grid point, prediction equals the stored latency (up to the
+        // saturation clamp).
+        let qi = 7; // 2048
+        let ki = 9; // 8192
+        let pred = p.predict(p.q_grid[qi], p.kv_grid[ki]);
+        assert!((pred - p.latency[qi][ki]).abs() / pred < 1e-9);
+    }
+
+    #[test]
+    fn fig5_throughput_knee_at_128() {
+        // Fig. 5: throughput collapses below the 128-token tile and
+        // plateaus above it.
+        let p = prof();
+        let kv = 32_768.0;
+        let t16 = p.throughput(16.0, kv);
+        let t64 = p.throughput(64.0, kv);
+        let t128 = p.throughput(128.0, kv);
+        let t1024 = p.throughput(1024.0, kv);
+        assert!(t16 < 0.25 * t128, "16-token shard should waste >75% of tile");
+        assert!(t64 < 0.75 * t128);
+        // plateau: ≥128 within 10% of each other (launch overhead shrinks)
+        assert!((t1024 - t128).abs() / t1024 < 0.15, "t128={t128} t1024={t1024}");
+    }
+
+    #[test]
+    fn interpolation_between_grid_points() {
+        let p = prof();
+        let a = p.predict(2048.0, 8192.0);
+        let b = p.predict(4096.0, 8192.0);
+        let mid = p.predict(3072.0, 8192.0);
+        assert!(a < mid && mid < b, "{a} {mid} {b}");
+    }
+
+    #[test]
+    fn saturation_region_uses_peak() {
+        let p = prof();
+        // Far beyond grid: latency ≥ flops/peak and close to it.
+        let q = 200_000.0;
+        let kv = 200_000.0;
+        let flops = 4.0 * p.h_q * Profiler::causal_pairs(q, kv);
+        let pred = p.predict(q, kv);
+        assert!(pred >= flops / p.peak_flops * 0.999);
+        assert!(pred <= flops / p.peak_flops * 1.10, "should be near peak");
+    }
+
+    #[test]
+    fn batch_cheaper_than_separate_calls() {
+        let p = prof();
+        let shapes = vec![(512.0, 4096.0); 16];
+        let fused = p.predict_batch(&shapes);
+        let separate: f64 = shapes.iter().map(|&(q, kv)| p.predict(q, kv)).sum();
+        assert!(fused <= separate);
+        assert!(fused > 0.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = prof();
+        let j = p.to_json();
+        let q = Profiler::from_json(&j).unwrap();
+        assert_eq!(p.q_grid, q.q_grid);
+        assert_eq!(p.latency, q.latency);
+        let shape = (3000.0, 12000.0);
+        assert!((p.predict(shape.0, shape.1) - q.predict(shape.0, shape.1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_json_shape_mismatch_rejected() {
+        let j = crate::util::json::parse(
+            r#"{"q_grid":[1,2],"kv_grid":[1],"latency":[[1.0]],"peak_flops":1.0,"h_q":1.0}"#,
+        )
+        .unwrap();
+        assert!(Profiler::from_json(&j).is_err());
+    }
+}

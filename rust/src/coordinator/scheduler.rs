@@ -1,0 +1,507 @@
+//! Communication-aware greedy scheduling (§4.2).
+//!
+//! Input: a batch of head-tail [`Item`]s (each resident on its home
+//! device) and the number of attention servers. Output: a [`Plan`]
+//! assigning every (possibly split) Item to a server such that
+//!
+//! 1. per-server CA load is within `ε·F̄` of the ideal `F̄`, and
+//! 2. communication volume is greedily minimized: each migration picks
+//!    the candidate with the highest priority `E = ΔF_max / V_comm`
+//!    (compute moved per byte), where `ΔF_max = min(F_item, S_source,
+//!    D_destination)` and partial moves use Appendix B's
+//!    minimal-communication outer sub-shard.
+//!
+//! A useful identity (proved in `item.rs` tests): a head-tail Item's CA
+//! FLOPs are *exactly proportional to its width* — `pairs = W·(l+1)` —
+//! so a ΔF-sized sub-shard is simply `α·W` wide, and the KV prefix
+//! `[0, l-i)` is a fixed per-item transfer cost regardless of how little
+//! Q moves. The E-ranking therefore naturally prefers (a) whole-item
+//! moves, (b) long documents (quadratic compute per linear KV bytes),
+//! exactly the behaviours §3.3 calls out.
+
+use crate::config::ModelConfig;
+use crate::model::FlopsModel;
+
+use super::item::Item;
+use super::plan::{Assignment, Plan};
+use super::profiler::Profiler;
+
+/// Scheduler knobs.
+#[derive(Debug, Clone)]
+pub struct SchedulerCfg {
+    /// Imbalance tolerance ε (§4.2 step 3, Fig. 12): stop balancing a
+    /// server once its load is within `ε·F̄`.
+    pub tolerance: f64,
+    /// Minimum migration efficiency (FLOPs per byte) to accept a move;
+    /// below this, remaining moves are "insignificant migrations".
+    pub min_efficiency: f64,
+    /// Safety valve on migration rounds.
+    pub max_moves: usize,
+    /// Per-server dispatch bandwidth (bytes/s). When non-zero, the
+    /// scheduler refuses migrations whose cumulative receive time at the
+    /// destination would exceed the per-layer overlap window — the
+    /// Appendix A condition `t·l ≥ bytes/B` that keeps communication
+    /// hideable under the ping-pong schedule. 0 disables the check.
+    pub server_bw: f64,
+    /// Extra per-layer compute (seconds) available to hide communication
+    /// under, beyond the CA target itself (the context-independent
+    /// layers' time — Appendix A's `t·l`).
+    pub extra_window: f64,
+    /// Fraction of the window communication may fill (headroom).
+    pub overlap_frac: f64,
+}
+
+impl Default for SchedulerCfg {
+    fn default() -> Self {
+        Self {
+            tolerance: 0.10,
+            min_efficiency: 1.0, // 1 FLOP per byte is far below any useful move
+            max_moves: 100_000,
+            server_bw: 0.0,
+            extra_window: 0.0,
+            overlap_frac: 1.0,
+        }
+    }
+}
+
+/// Estimated execution cost (seconds) of an Item's CA on a server.
+fn item_cost(item: &Item, prof: &Profiler) -> f64 {
+    item.ca_tasks()
+        .iter()
+        .map(|t| prof.predict(t.q_len as f64, t.kv_len as f64))
+        .sum()
+}
+
+/// Dispatch bytes to move an Item away from home: Q both halves + KV
+/// prefix + O return.
+fn item_bytes(item: &Item, m: &ModelConfig) -> f64 {
+    super::comm::item_migration_bytes(item, m)
+}
+
+/// Schedule a batch of Items onto `n_servers` attention servers.
+///
+/// Items whose `home >= n_servers` panic: homes and servers share the
+/// same index space (in-place attention servers, §4.1).
+pub fn schedule(
+    items: &[Item],
+    n_servers: usize,
+    f: &FlopsModel,
+    prof: &Profiler,
+    m: &ModelConfig,
+    cfg: &SchedulerCfg,
+) -> Plan {
+    assert!(n_servers > 0);
+    // Per-server worklists, seeded at home. Costs are cached alongside
+    // each item: the candidate scan touches every item per move, and
+    // profiler interpolation dominated the profile before caching
+    // (see EXPERIMENTS.md §Perf).
+    let mut server_items: Vec<Vec<(Item, f64)>> = vec![Vec::new(); n_servers];
+    let mut load = vec![0.0f64; n_servers];
+    for it in items {
+        assert!(it.home < n_servers, "item home {} >= n_servers {n_servers}", it.home);
+        let cost = item_cost(it, prof);
+        load[it.home] += cost;
+        server_items[it.home].push((*it, cost));
+    }
+    let total: f64 = load.iter().sum();
+    let target = total / n_servers as f64;
+    let tol = cfg.tolerance * target;
+    // Appendix-A overlap window: how many dispatch bytes a destination
+    // may receive per layer and still hide them under compute.
+    let hide_bytes_cap = if cfg.server_bw > 0.0 {
+        cfg.overlap_frac * (target + cfg.extra_window) * cfg.server_bw
+    } else {
+        f64::INFINITY
+    };
+    let mut recv_bytes = vec![0.0f64; n_servers];
+
+    // Track which (server, item) pairs migrated away from home — those
+    // already paid their KV transfer and can be re-split for free-ish,
+    // but we keep the model simple: every remote item's bytes are counted
+    // once, at final plan construction.
+    let mut moves = 0usize;
+    loop {
+        if moves >= cfg.max_moves {
+            break;
+        }
+        // Most-deficit destination first (step 1: sort by descending deficit).
+        let (dst, deficit) = match (0..n_servers)
+            .map(|s| (s, target - load[s]))
+            .filter(|&(_, d)| d > tol)
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        {
+            Some(x) => x,
+            None => break, // all servers within tolerance
+        };
+
+        // Step 2: best candidate across all surplus sources.
+        // (src, idx, move_cost, efficiency, dispatch_bytes)
+        let mut best: Option<(usize, usize, f64, f64, f64)> = None;
+        for src in 0..n_servers {
+            let surplus = load[src] - target;
+            if surplus <= 0.0 || src == dst {
+                continue;
+            }
+            for (idx, &(ref it, f_item)) in server_items[src].iter().enumerate() {
+                if f_item <= 0.0 {
+                    continue;
+                }
+                let df_max = f_item.min(surplus).min(deficit);
+                if df_max <= 0.0 {
+                    continue;
+                }
+                // Communication: moving to the item's own home is free
+                // (it executes where its tensors live).
+                let (bytes, movable) = if it.home == dst {
+                    (1.0, df_max) // epsilon bytes => enormous E
+                } else if df_max >= f_item * 0.999 {
+                    (item_bytes(it, m), f_item)
+                } else {
+                    // Partial move: Appendix B — KV prefix is fixed, Q/O
+                    // scale with the migrated width. Quantize to the
+                    // 128-token grid; skip unsplittable items.
+                    let alpha = df_max / f_item;
+                    let desired_q = (alpha * it.q_tokens() as f64) as usize;
+                    match it.quantize_split(desired_q) {
+                        None => (item_bytes(it, m), f_item), // too small: whole move only
+                        Some(q) => {
+                            let (outer, _) = it.split_outer(q);
+                            (item_bytes(&outer, m), f_item * q as f64 / it.q_tokens() as f64)
+                        }
+                    }
+                };
+                // Don't overshoot the destination badly.
+                if movable > deficit * 1.5 && movable < f_item * 0.999 {
+                    continue;
+                }
+                // Appendix-A overlap check: the destination must still be
+                // able to hide its cumulative dispatch traffic.
+                if it.home != dst && recv_bytes[dst] + bytes > hide_bytes_cap {
+                    continue;
+                }
+                let flops_moved = it.ca_fwd_flops(f) * (movable / f_item);
+                let eff = flops_moved / bytes;
+                if best.map_or(true, |(_, _, _, be, _)| eff > be) {
+                    best = Some((src, idx, movable, eff, bytes));
+                }
+            }
+        }
+
+        let (src, idx, move_cost, eff, move_bytes) = match best {
+            Some(b) => b,
+            None => break, // nothing movable
+        };
+        if eff < cfg.min_efficiency {
+            break; // step 3: remaining moves are not worth their bytes
+        }
+
+        let (it, f_item) = server_items[src][idx];
+        if it.home != dst {
+            recv_bytes[dst] += move_bytes;
+        }
+        if move_cost >= f_item * 0.999 {
+            // Whole-item migration.
+            server_items[src].swap_remove(idx);
+            server_items[dst].push((it, f_item));
+            load[src] -= f_item;
+            load[dst] += f_item;
+        } else {
+            let alpha = move_cost / f_item;
+            let desired_q = (alpha * it.q_tokens() as f64) as usize;
+            let q = match it.quantize_split(desired_q) {
+                Some(q) => q,
+                None => break, // defensive; shouldn't happen
+            };
+            let (outer, inner) = it.split_outer(q);
+            let c_outer = item_cost(&outer, prof);
+            let c_inner = item_cost(&inner, prof);
+            server_items[src][idx] = (inner, c_inner);
+            server_items[dst].push((outer, c_outer));
+            load[src] += c_inner - f_item;
+            load[dst] += c_outer;
+        }
+        moves += 1;
+    }
+
+    let mut assignments = Vec::with_capacity(items.len());
+    for (s, list) in server_items.iter().enumerate() {
+        for (it, _) in list {
+            assignments.push(Assignment { item: *it, server: s });
+        }
+    }
+    Plan {
+        n_servers,
+        assignments,
+        server_load: load,
+        target_load: target,
+        comm_matrix: vec![],
+        return_matrix: vec![],
+    }
+    .with_comm(m)
+}
+
+/// Convenience: build Items from packed chunks, one home device per chunk
+/// (the device that runs the chunk's context-independent layers).
+pub fn items_from_chunks(chunks: &[crate::data::Chunk]) -> Vec<Item> {
+    let mut items = Vec::new();
+    for (dev, chunk) in chunks.iter().enumerate() {
+        for p in &chunk.pieces {
+            // Pieces that are slices of a split document enter as
+            // head-tail items over their own slice (the slice is the
+            // schedulable unit; its causal context is handled at CA-task
+            // level through the offset).
+            let mut len = p.len;
+            if len % 2 != 0 {
+                len -= 1; // drop an odd token from scheduling granularity
+            }
+            if len == 0 {
+                continue;
+            }
+            if p.offset == 0 {
+                items.push(Item::whole_doc(p.doc, len, dev));
+            } else {
+                // A mid-document slice [offset, offset+len): represent as
+                // an Item of the *virtual* document [0, offset+len) whose
+                // head-tail ranges cover exactly this slice. Choosing
+                // i = offset, j = offset + len/2 gives head+tail =
+                // [offset, offset+len) when mirrored about the slice end:
+                // doc_len' = 2·offset + len keeps tail = [offset+len/2,
+                // offset+len).
+                let virt_len = 2 * p.offset + len;
+                items.push(Item {
+                    doc: p.doc,
+                    doc_len: virt_len,
+                    i: p.offset,
+                    j: p.offset + len / 2,
+                    home: dev,
+                });
+            }
+        }
+    }
+    items
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, ModelConfig};
+    use crate::coordinator::item::BLOCK_TOKENS;
+    use crate::util::quickcheck::{check, ensure};
+    use crate::util::rng::Rng;
+
+    fn setup() -> (FlopsModel, Profiler, ModelConfig) {
+        let m = ModelConfig::llama3_8b();
+        let f = FlopsModel::new(&m);
+        let prof = Profiler::analytic(&f, &ClusterConfig::h200(1));
+        (f, prof, m)
+    }
+
+    fn whole(doc: u32, len: usize, home: usize) -> Item {
+        Item::whole_doc(doc, len, home)
+    }
+
+    #[test]
+    fn already_balanced_no_moves() {
+        let (f, prof, m) = setup();
+        let items = vec![whole(0, 8192, 0), whole(1, 8192, 1)];
+        let plan = schedule(&items, 2, &f, &prof, &m, &SchedulerCfg::default());
+        assert_eq!(plan.local_fraction(), 1.0);
+        assert_eq!(plan.total_comm_bytes(), 0.0);
+        plan.validate(&items, &f).unwrap();
+    }
+
+    #[test]
+    fn fig1_imbalance_resolved() {
+        // The motivating example: one 4×1K chunk vs one 1×4K chunk.
+        let (f, prof, m) = setup();
+        let mut items = vec![whole(0, 4096, 0)];
+        for d in 1..=4 {
+            items.push(whole(d, 1024, 1));
+        }
+        let before: f64 = {
+            let l0: f64 = items[..1].iter().map(|i| i.ca_fwd_flops(&f)).sum();
+            let l1: f64 = items[1..].iter().map(|i| i.ca_fwd_flops(&f)).sum();
+            l0 / l1
+        };
+        assert!(before > 3.5, "premise: imbalance ~4x, got {before}");
+        let plan = schedule(&items, 2, &f, &prof, &m, &SchedulerCfg::default());
+        plan.validate(&items, &f).unwrap();
+        assert!(
+            plan.imbalance() < 1.0 + 0.12,
+            "imbalance {} should be within tolerance",
+            plan.imbalance()
+        );
+        assert!(plan.total_comm_bytes() > 0.0, "must have moved something");
+    }
+
+    #[test]
+    fn tolerance_respected_when_feasible() {
+        let (f, prof, m) = setup();
+        let mut rng = Rng::new(99);
+        let mut items = Vec::new();
+        for d in 0..32 {
+            let len = (rng.gen_range(8, 256) * 256) as usize;
+            items.push(whole(d, len, (d % 8) as usize));
+        }
+        for &tol in &[0.05, 0.1, 0.3] {
+            let cfg = SchedulerCfg { tolerance: tol, ..Default::default() };
+            let plan = schedule(&items, 8, &f, &prof, &m, &cfg);
+            plan.validate(&items, &f).unwrap();
+            let max = plan.server_load.iter().cloned().fold(0.0, f64::max);
+            assert!(
+                max <= plan.target_load * (1.0 + tol) + 1e-9,
+                "tol {tol}: max {max} > target {} * (1+tol)",
+                plan.target_load
+            );
+        }
+    }
+
+    #[test]
+    fn lower_tolerance_more_comm() {
+        // Fig. 12's trade-off: tighter balance costs more bytes.
+        let (f, prof, m) = setup();
+        let mut rng = Rng::new(7);
+        let mut items = Vec::new();
+        for d in 0..48 {
+            let len = (rng.gen_range(4, 200) * 256) as usize;
+            items.push(whole(d, len, (d % 8) as usize));
+        }
+        let comm_at = |tol: f64| {
+            let cfg = SchedulerCfg { tolerance: tol, ..Default::default() };
+            schedule(&items, 8, &f, &prof, &m, &cfg).total_comm_bytes()
+        };
+        let tight = comm_at(0.01);
+        let loose = comm_at(0.40);
+        assert!(tight >= loose, "tight {tight} < loose {loose}");
+    }
+
+    #[test]
+    fn splits_are_block_aligned() {
+        let (f, prof, m) = setup();
+        // One giant doc on server 0, nothing elsewhere: must split.
+        let items = vec![whole(0, 65536, 0)];
+        let plan = schedule(&items, 4, &f, &prof, &m, &SchedulerCfg::default());
+        plan.validate(&items, &f).unwrap();
+        assert!(plan.assignments.len() > 1, "giant doc must be split");
+        for a in &plan.assignments {
+            // every shard half is a multiple of 128 except possibly the
+            // innermost remainder piece (document tail)
+            let w = a.item.half_width();
+            if a.item.i != 0 || a.item.j * 2 != a.item.doc_len {
+                // split pieces: outer ones start at i multiple of 128
+                assert_eq!(a.item.i % BLOCK_TOKENS, 0, "i not aligned: {:?}", a.item);
+            }
+            assert!(w > 0);
+        }
+        assert!(plan.imbalance() < 1.15, "imbalance {}", plan.imbalance());
+    }
+
+    #[test]
+    fn migration_prefers_long_documents() {
+        // §3.3: the scheduler shards long docs (high FLOPs/byte), not
+        // short ones.
+        let (f, prof, m) = setup();
+        let mut items = vec![whole(0, 32768, 0), whole(1, 32768, 0)];
+        for d in 2..18 {
+            items.push(whole(d, 2048, 0));
+        }
+        // server 1 idle; migrations should come from the long docs.
+        let plan = schedule(&items, 2, &f, &prof, &m, &SchedulerCfg::default());
+        plan.validate(&items, &f).unwrap();
+        let migrated_short = plan
+            .assignments
+            .iter()
+            .filter(|a| !a.is_local() && a.item.doc >= 2)
+            .count();
+        let migrated_long = plan
+            .assignments
+            .iter()
+            .filter(|a| !a.is_local() && a.item.doc < 2)
+            .count();
+        assert!(
+            migrated_long > 0 && migrated_short <= migrated_long,
+            "long {migrated_long} short {migrated_short}"
+        );
+    }
+
+    #[test]
+    fn conservation_property() {
+        let (f, prof, m) = setup();
+        check(
+            30,
+            |r: &mut Rng| {
+                let n = r.gen_index(1, 24);
+                (0..n as u64)
+                    .map(|_d| {
+                        (
+                            r.gen_range(1, 128) * 256, // len
+                            r.gen_range(0, 4),          // home
+                        )
+                    })
+                    .map(|(l, h)| (l, h))
+                    .collect::<Vec<(u64, u64)>>()
+            },
+            |spec| {
+                let items: Vec<Item> = spec
+                    .iter()
+                    .enumerate()
+                    .map(|(d, &(l, h))| whole(d as u32, l as usize, h as usize))
+                    .collect();
+                if items.is_empty() {
+                    return Ok(());
+                }
+                let plan = schedule(&items, 4, &f, &prof, &m, &SchedulerCfg::default());
+                plan.validate(&items, &f).map_err(|e| e)?;
+                ensure(
+                    plan.assignments.len() >= items.len(),
+                    "assignments cannot shrink",
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn single_server_identity() {
+        let (f, prof, m) = setup();
+        let items = vec![whole(0, 4096, 0), whole(1, 8192, 0)];
+        let plan = schedule(&items, 1, &f, &prof, &m, &SchedulerCfg::default());
+        assert_eq!(plan.assignments.len(), 2);
+        assert_eq!(plan.total_comm_bytes(), 0.0);
+    }
+
+    #[test]
+    fn empty_batch() {
+        let (f, prof, m) = setup();
+        let plan = schedule(&[], 4, &f, &prof, &m, &SchedulerCfg::default());
+        assert!(plan.assignments.is_empty());
+        assert_eq!(plan.imbalance(), 1.0);
+    }
+
+    #[test]
+    fn items_from_chunks_roundtrip() {
+        let docs = vec![
+            crate::data::Document::new(0, 4096),
+            crate::data::Document::new(1, 6144),
+        ];
+        let chunks = crate::data::pack_fixed(&docs, 5120);
+        let items = items_from_chunks(&chunks);
+        let total: usize = items.iter().map(|i| i.q_tokens()).sum();
+        assert_eq!(total, 4096 + 6144);
+        // Homes match chunk indices.
+        assert!(items.iter().all(|i| (i.home) < chunks.len()));
+    }
+
+    #[test]
+    fn midslice_item_flops_match_taskwise() {
+        // An Item built from a mid-document slice must cost exactly the
+        // causal FLOPs of that slice.
+        let (f, _prof, _m) = setup();
+        let chunks = crate::data::pack_fixed(&[crate::data::Document::new(0, 10000)], 4096);
+        let items = items_from_chunks(&chunks);
+        let got: f64 = items.iter().map(|i| i.ca_fwd_flops(&f)).sum();
+        // Slices: [0,4096) offset 0 (even), [4096,8192) offset 4096,
+        // [8192,10000) len 1808 even. Expected via ca_task_fwd:
+        let expect = f.ca_task_fwd(4096, 0) + f.ca_task_fwd(4096, 4096) + f.ca_task_fwd(1808, 8192);
+        assert!((got - expect).abs() / expect < 1e-9, "{got} vs {expect}");
+    }
+}

@@ -1,0 +1,249 @@
+//! Document-length distributions (§6.1 "Input data").
+//!
+//! * **Pretrain**: a heavy-tailed pretraining length distribution with
+//!   long documents *upsampled* following Fu et al. (2024): sample from a
+//!   truncated power law, then randomly filter out documents below a
+//!   threshold with some probability, which shifts mass to the tail.
+//! * **ProLong**: the mixture Gao et al. (2025) found best for long-
+//!   context training — a substantial share of very long documents mixed
+//!   with ordinary short ones. Compared to Pretrain it has a *higher
+//!   fraction of long documents* (the paper leans on this: Pretrain's many
+//!   short docs are the harder case for WLB).
+//!
+//! All lengths are clamped to `[min_len, max_doc_len]` and rounded to a
+//! multiple of 16 tokens (tokenizer-chunk granularity; keeps packing
+//! arithmetic tidy without affecting any result's shape).
+
+use crate::util::rng::Rng;
+
+use super::Document;
+
+/// Common interface for the corpus samplers.
+pub trait DocLenSampler {
+    /// Sample one document length in tokens.
+    fn sample_len(&self, rng: &mut Rng) -> usize;
+
+    /// Upper bound on lengths this sampler emits.
+    fn max_len(&self) -> usize;
+
+    /// Sample documents until `budget_tokens` is reached (last doc
+    /// truncated to fit, mirroring how corpora are chunked to a token
+    /// budget). Ids are sequential starting at `id0`.
+    fn sample_tokens(&self, rng: &mut Rng, budget_tokens: usize, id0: u32) -> Vec<Document> {
+        let mut docs = Vec::new();
+        let mut total = 0usize;
+        let mut id = id0;
+        while total < budget_tokens {
+            let mut len = self.sample_len(rng);
+            if total + len > budget_tokens {
+                len = budget_tokens - total;
+                if len < MIN_DOC_LEN {
+                    // Merge the residue into the previous doc rather than
+                    // emitting an untrainable fragment.
+                    if let Some(last) = docs.last_mut() {
+                        let last: &mut Document = last;
+                        last.len += len;
+                    }
+                    break;
+                }
+            }
+            docs.push(Document::new(id, len));
+            id += 1;
+            total += len;
+        }
+        docs
+    }
+}
+
+/// Minimum document length emitted (tokens).
+pub const MIN_DOC_LEN: usize = 64;
+
+fn quantize(len: f64, max_len: usize) -> usize {
+    let l = (len as usize).clamp(MIN_DOC_LEN, max_len);
+    (l / 16).max(1) * 16
+}
+
+/// Pretrain distribution with long-document upsampling.
+#[derive(Debug, Clone)]
+pub struct PretrainSampler {
+    pub max_doc_len: usize,
+    /// Power-law shape for the body (larger ⇒ shorter docs dominate).
+    pub alpha: f64,
+    /// Scale of the power law (typical short-doc length).
+    pub x_min: f64,
+    /// Probability of *dropping* a document shorter than
+    /// `upsample_threshold` and resampling — the Fu et al. filter.
+    pub drop_short_prob: f64,
+    pub upsample_threshold: usize,
+}
+
+impl PretrainSampler {
+    pub fn new(max_doc_len: usize) -> Self {
+        Self {
+            max_doc_len,
+            alpha: 1.1,
+            x_min: 512.0,
+            drop_short_prob: 0.55,
+            upsample_threshold: 32_768.min(max_doc_len / 4).max(2048),
+        }
+    }
+}
+
+impl DocLenSampler for PretrainSampler {
+    fn sample_len(&self, rng: &mut Rng) -> usize {
+        // Rejection loop implements the "randomly filter out documents
+        // shorter than a threshold" upsampling.
+        for _ in 0..64 {
+            let raw = rng.gen_pareto(self.x_min, self.alpha);
+            let len = quantize(raw, self.max_doc_len);
+            if len < self.upsample_threshold && rng.gen_bool(self.drop_short_prob) {
+                continue;
+            }
+            return len;
+        }
+        quantize(self.x_min, self.max_doc_len)
+    }
+
+    fn max_len(&self) -> usize {
+        self.max_doc_len
+    }
+}
+
+/// ProLong-style mixture: explicit long-document component.
+#[derive(Debug, Clone)]
+pub struct ProLongSampler {
+    pub max_doc_len: usize,
+    /// Probability a document comes from the long component.
+    pub long_frac: f64,
+    /// Short component: lognormal body.
+    pub short_mu: f64,
+    pub short_sigma: f64,
+}
+
+impl ProLongSampler {
+    pub fn new(max_doc_len: usize) -> Self {
+        Self {
+            max_doc_len,
+            long_frac: 0.35,
+            short_mu: 8.2,   // exp(8.2) ≈ 3.6K tokens typical short doc
+            short_sigma: 1.0,
+        }
+    }
+}
+
+impl DocLenSampler for ProLongSampler {
+    fn sample_len(&self, rng: &mut Rng) -> usize {
+        if rng.gen_bool(self.long_frac) {
+            // Long component: uniform in log-space over the top two octaves
+            // up to max_doc_len — many docs at or near the context limit.
+            let hi = self.max_doc_len as f64;
+            let lo = hi / 8.0;
+            let len = lo * (hi / lo).powf(rng.next_f64());
+            quantize(len, self.max_doc_len)
+        } else {
+            quantize(
+                rng.gen_lognormal(self.short_mu, self.short_sigma),
+                self.max_doc_len,
+            )
+        }
+    }
+
+    fn max_len(&self) -> usize {
+        self.max_doc_len
+    }
+}
+
+/// Build the sampler named by a [`crate::config::run::DataDist`].
+pub fn sampler_for(
+    dist: crate::config::run::DataDist,
+    max_doc_len: usize,
+) -> Box<dyn DocLenSampler> {
+    match dist {
+        crate::config::run::DataDist::Pretrain => Box::new(PretrainSampler::new(max_doc_len)),
+        crate::config::run::DataDist::ProLong => Box::new(ProLongSampler::new(max_doc_len)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frac_long(lens: &[usize], thresh: usize) -> f64 {
+        lens.iter().filter(|&&l| l >= thresh).count() as f64 / lens.len() as f64
+    }
+
+    #[test]
+    fn lengths_within_bounds_and_quantized() {
+        let mut rng = Rng::new(1);
+        let s = PretrainSampler::new(131_072);
+        for _ in 0..2000 {
+            let l = s.sample_len(&mut rng);
+            assert!(l >= MIN_DOC_LEN && l <= 131_072);
+            assert_eq!(l % 16, 0);
+        }
+    }
+
+    #[test]
+    fn prolong_has_more_long_docs_than_pretrain() {
+        // §6.2: "Pretrain contains a higher proportion of short documents".
+        let mut rng = Rng::new(2);
+        let max = 131_072;
+        let p: Vec<usize> = {
+            let s = PretrainSampler::new(max);
+            (0..4000).map(|_| s.sample_len(&mut rng)).collect()
+        };
+        let q: Vec<usize> = {
+            let s = ProLongSampler::new(max);
+            (0..4000).map(|_| s.sample_len(&mut rng)).collect()
+        };
+        let thresh = max / 8;
+        assert!(
+            frac_long(&q, thresh) > frac_long(&p, thresh) + 0.05,
+            "prolong {:.3} vs pretrain {:.3}",
+            frac_long(&q, thresh),
+            frac_long(&p, thresh)
+        );
+    }
+
+    #[test]
+    fn upsampling_shifts_mass_to_tail() {
+        let mut rng = Rng::new(3);
+        let max = 131_072;
+        let mut with = PretrainSampler::new(max);
+        with.drop_short_prob = 0.8;
+        let mut without = PretrainSampler::new(max);
+        without.drop_short_prob = 0.0;
+        let a: Vec<usize> = (0..4000).map(|_| with.sample_len(&mut rng)).collect();
+        let b: Vec<usize> = (0..4000).map(|_| without.sample_len(&mut rng)).collect();
+        let mean_a = a.iter().sum::<usize>() as f64 / a.len() as f64;
+        let mean_b = b.iter().sum::<usize>() as f64 / b.len() as f64;
+        assert!(mean_a > mean_b, "upsampled mean {mean_a} <= raw mean {mean_b}");
+    }
+
+    #[test]
+    fn sample_tokens_hits_budget() {
+        let mut rng = Rng::new(4);
+        let s = ProLongSampler::new(65_536);
+        let docs = s.sample_tokens(&mut rng, 1_000_000, 0);
+        let total: usize = docs.iter().map(|d| d.len).sum();
+        assert_eq!(total, 1_000_000);
+        // ids sequential
+        for (i, d) in docs.iter().enumerate() {
+            assert_eq!(d.id as usize, i);
+        }
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let s = PretrainSampler::new(131_072);
+        let a: Vec<usize> = {
+            let mut r = Rng::new(7);
+            (0..100).map(|_| s.sample_len(&mut r)).collect()
+        };
+        let b: Vec<usize> = {
+            let mut r = Rng::new(7);
+            (0..100).map(|_| s.sample_len(&mut r)).collect()
+        };
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,24 @@
+//! Synthetic workload generation: document-length distributions matching
+//! the paper's two input distributions (§6.1), and document packing
+//! schemes (fixed-size chunks and WLB-style variable-length chunks).
+
+pub mod distributions;
+pub mod packing;
+
+pub use distributions::{DocLenSampler, ProLongSampler, PretrainSampler};
+pub use packing::{pack_fixed, pack_variable_length, Chunk};
+
+/// A document: just its id and token length (content never affects the
+/// paper's experiments; `examples/train_e2e` generates real token ids
+/// separately).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Document {
+    pub id: u32,
+    pub len: usize,
+}
+
+impl Document {
+    pub fn new(id: u32, len: usize) -> Self {
+        Self { id, len }
+    }
+}

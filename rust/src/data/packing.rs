@@ -1,0 +1,287 @@
+//! Document packing (§1, §3.1, §3.2).
+//!
+//! * [`pack_fixed`] — standard fixed-size packing: first-fit-decreasing
+//!   into chunks of exactly `chunk_tokens` tokens (documents are split
+//!   across chunk boundaries when necessary, as Megatron does). Memory is
+//!   balanced (`Σl` equal), attention compute is not (`Σl²` varies).
+//! * [`pack_variable_length`] — WLB-LLM-style variable-length chunking:
+//!   redistribute documents across a fixed number of chunks to equalize
+//!   `Σl²` (attention FLOPs), letting token counts `Σl` diverge — bounded
+//!   by a per-chunk memory cap.
+
+use crate::model::FlopsModel;
+
+use super::Document;
+
+/// A packed chunk: the (id, length)-pieces it holds. A piece may be a
+/// *slice* of a document that crossed a chunk boundary; `offset` is its
+/// start position within the original document (needed for causal CA
+/// accounting).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Chunk {
+    pub pieces: Vec<Piece>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Piece {
+    pub doc: u32,
+    /// Start offset of this piece within its document.
+    pub offset: usize,
+    pub len: usize,
+}
+
+impl Chunk {
+    pub fn tokens(&self) -> usize {
+        self.pieces.iter().map(|p| p.len).sum()
+    }
+
+    /// Forward CA FLOPs of this chunk under a causal mask (each piece
+    /// attends to its in-document prefix).
+    pub fn ca_flops(&self, f: &FlopsModel) -> f64 {
+        self.pieces
+            .iter()
+            .map(|p| f.ca_task_fwd(p.len, p.offset))
+            .sum()
+    }
+
+    /// `Σ l²`-style attention load using exact causal accounting.
+    pub fn attention_load(&self, f: &FlopsModel) -> f64 {
+        self.ca_flops(f)
+    }
+}
+
+/// Fixed-size packing: greedy first-fit in arrival order, splitting
+/// documents at chunk boundaries. Every chunk except possibly the last
+/// has exactly `chunk_tokens` tokens.
+pub fn pack_fixed(docs: &[Document], chunk_tokens: usize) -> Vec<Chunk> {
+    assert!(chunk_tokens > 0);
+    let mut chunks = Vec::new();
+    let mut current = Chunk::default();
+    let mut room = chunk_tokens;
+    for d in docs {
+        let mut offset = 0usize;
+        let mut remaining = d.len;
+        while remaining > 0 {
+            let take = remaining.min(room);
+            current.pieces.push(Piece {
+                doc: d.id,
+                offset,
+                len: take,
+            });
+            offset += take;
+            remaining -= take;
+            room -= take;
+            if room == 0 {
+                chunks.push(std::mem::take(&mut current));
+                room = chunk_tokens;
+            }
+        }
+    }
+    if !current.pieces.is_empty() {
+        chunks.push(current);
+    }
+    chunks
+}
+
+/// WLB-LLM-style variable-length chunking: place whole documents onto
+/// `n_chunks` chunks, greedily assigning each document (longest first) to
+/// the chunk with the smallest attention load, subject to a token cap per
+/// chunk. Documents longer than `token_cap` are split at the cap (they
+/// cannot fit anywhere whole).
+///
+/// Returns the chunks; token counts across chunks generally diverge —
+/// that is the method's memory-imbalance cost (Fig. 4a).
+pub fn pack_variable_length(
+    docs: &[Document],
+    n_chunks: usize,
+    token_cap: usize,
+    f: &FlopsModel,
+) -> Vec<Chunk> {
+    assert!(n_chunks > 0 && token_cap > 0);
+    let mut chunks = vec![Chunk::default(); n_chunks];
+    let mut loads = vec![0.0f64; n_chunks];
+    let mut tokens = vec![0usize; n_chunks];
+
+    // Longest-processing-time-first greedy on attention load.
+    let mut order: Vec<&Document> = docs.iter().collect();
+    order.sort_by(|a, b| b.len.cmp(&a.len).then(a.id.cmp(&b.id)));
+
+    for d in order {
+        let mut offset = 0usize;
+        let mut remaining = d.len;
+        while remaining > 0 {
+            // Pick the least-loaded chunk that still has token room.
+            let mut best: Option<usize> = None;
+            for c in 0..n_chunks {
+                if tokens[c] >= token_cap {
+                    continue;
+                }
+                if best.map_or(true, |b| loads[c] < loads[b]) {
+                    best = Some(c);
+                }
+            }
+            let c = match best {
+                Some(c) => c,
+                None => {
+                    // All chunks at cap: spill round-robin onto the least
+                    // token-loaded chunk (models the "memory cap reached"
+                    // regime of §3.2 where balance becomes infeasible).
+                    (0..n_chunks).min_by_key(|&c| tokens[c]).unwrap()
+                }
+            };
+            let room = token_cap.saturating_sub(tokens[c]).max(1);
+            let take = remaining.min(room);
+            let piece = Piece {
+                doc: d.id,
+                offset,
+                len: take,
+            };
+            loads[c] += f.ca_task_fwd(piece.len, piece.offset);
+            tokens[c] += take;
+            chunks[c].pieces.push(piece);
+            offset += take;
+            remaining -= take;
+        }
+    }
+    chunks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::util::quickcheck::{check, ensure};
+    use crate::util::rng::Rng;
+    use crate::util::stats;
+
+    fn fm() -> FlopsModel {
+        FlopsModel::new(&ModelConfig::llama3_8b())
+    }
+
+    fn docs_of(lens: &[usize]) -> Vec<Document> {
+        lens.iter()
+            .enumerate()
+            .map(|(i, &l)| Document::new(i as u32, l))
+            .collect()
+    }
+
+    #[test]
+    fn fixed_pack_exact_chunks() {
+        let chunks = pack_fixed(&docs_of(&[1000, 1000, 1000, 1000]), 2000);
+        assert_eq!(chunks.len(), 2);
+        assert!(chunks.iter().all(|c| c.tokens() == 2000));
+    }
+
+    #[test]
+    fn fixed_pack_splits_long_docs() {
+        let chunks = pack_fixed(&docs_of(&[5000]), 2000);
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(chunks[0].tokens(), 2000);
+        assert_eq!(chunks[2].tokens(), 1000);
+        // offsets continue across chunks
+        assert_eq!(chunks[1].pieces[0].offset, 2000);
+        assert_eq!(chunks[2].pieces[0].offset, 4000);
+    }
+
+    #[test]
+    fn fixed_pack_conserves_tokens() {
+        check(
+            60,
+            |r: &mut Rng| {
+                let n = r.gen_index(1, 20);
+                (0..n).map(|_| r.gen_range(64, 8192)).collect::<Vec<u64>>()
+            },
+            |lens| {
+                let docs: Vec<Document> = lens
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &l)| Document::new(i as u32, l as usize))
+                    .collect();
+                let total: usize = docs.iter().map(|d| d.len).sum();
+                let chunks = pack_fixed(&docs, 4096);
+                let packed: usize = chunks.iter().map(|c| c.tokens()).sum();
+                ensure(packed == total, format!("{packed} != {total}"))
+            },
+        );
+    }
+
+    #[test]
+    fn fixed_pack_balanced_memory_imbalanced_compute() {
+        // The Fig. 1 situation: equal tokens per chunk but very unequal CA.
+        let f = fm();
+        let docs = docs_of(&[4096, 1024, 1024, 1024, 1024]);
+        let chunks = pack_fixed(&docs, 4096);
+        assert_eq!(chunks.len(), 2);
+        assert_eq!(chunks[0].tokens(), chunks[1].tokens());
+        let a = chunks[0].ca_flops(&f);
+        let b = chunks[1].ca_flops(&f);
+        assert!(a / b > 3.5, "CA imbalance should be ~4x, got {}", a / b);
+    }
+
+    #[test]
+    fn variable_length_balances_compute() {
+        let f = fm();
+        // Long docs arriving adjacent: fixed packing co-locates them in
+        // one chunk (heavy) while other chunks hold only shorts (light).
+        // Redistribution fixes the compute imbalance.
+        let mut lens = vec![16384usize, 16384];
+        lens.extend(std::iter::repeat(2048).take(32));
+        let docs = docs_of(&lens);
+        let fixed = pack_fixed(&docs, 32768);
+        let varlen = pack_variable_length(&docs, fixed.len(), usize::MAX, &f);
+        let fixed_loads: Vec<f64> = fixed.iter().map(|c| c.ca_flops(&f)).collect();
+        let var_loads: Vec<f64> = varlen.iter().map(|c| c.ca_flops(&f)).collect();
+        assert!(
+            stats::imbalance_ratio(&var_loads) < stats::imbalance_ratio(&fixed_loads),
+            "varlen {:?} should beat fixed {:?}",
+            stats::imbalance_ratio(&var_loads),
+            stats::imbalance_ratio(&fixed_loads)
+        );
+    }
+
+    #[test]
+    fn variable_length_diverges_memory() {
+        // Balancing Σl² makes Σl diverge (Fig. 4a): chunks holding a long
+        // document get few tokens, chunks holding only shorts get many.
+        let f = fm();
+        let mut lens = vec![16384usize, 16384];
+        lens.extend(std::iter::repeat(2048).take(32));
+        let docs = docs_of(&lens);
+        let varlen = pack_variable_length(&docs, 4, usize::MAX, &f);
+        let tokens: Vec<f64> = varlen.iter().map(|c| c.tokens() as f64).collect();
+        assert!(stats::divergence(&tokens) > 1.05, "tokens {tokens:?}");
+    }
+
+    #[test]
+    fn variable_length_respects_cap_when_feasible() {
+        let f = fm();
+        let docs = docs_of(&[1000, 1000, 1000, 1000, 1000, 1000, 1000, 1000]);
+        let chunks = pack_variable_length(&docs, 4, 2000, &f);
+        for c in &chunks {
+            assert!(c.tokens() <= 2000, "chunk over cap: {}", c.tokens());
+        }
+    }
+
+    #[test]
+    fn variable_length_conserves_tokens() {
+        check(
+            60,
+            |r: &mut Rng| {
+                let n = r.gen_index(1, 24);
+                (0..n).map(|_| r.gen_range(64, 16384)).collect::<Vec<u64>>()
+            },
+            |lens| {
+                let f = fm();
+                let docs: Vec<Document> = lens
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &l)| Document::new(i as u32, l as usize))
+                    .collect();
+                let total: usize = docs.iter().map(|d| d.len).sum();
+                let chunks = pack_variable_length(&docs, 4, 32768, &f);
+                let packed: usize = chunks.iter().map(|c| c.tokens()).sum();
+                ensure(packed == total, format!("{packed} != {total}"))
+            },
+        );
+    }
+}

@@ -1,0 +1,122 @@
+//! Pluggable transport for the real (CPU) disaggregated execution path.
+//!
+//! The paper's NVSHMEM all-to-all becomes, on this testbed, an in-process
+//! channel fabric between attention-server worker threads: same message
+//! discipline (tagged point-to-point sends, per-destination queues),
+//! different wire. The byte accounting feeding the simulator is identical
+//! either way.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+
+/// A tagged message: raw f32 payload plus an opaque task tag.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Message {
+    pub src: usize,
+    pub tag: u64,
+    pub payload: Vec<f32>,
+}
+
+/// Point-to-point transport between `n` ranks.
+pub trait Transport: Send + Sync {
+    fn n_ranks(&self) -> usize;
+    /// Send `msg` to `dst` (non-blocking).
+    fn send(&self, dst: usize, msg: Message);
+    /// Receive the next message addressed to `rank` (blocking).
+    fn recv(&self, rank: usize) -> Message;
+    /// Try to receive without blocking.
+    fn try_recv(&self, rank: usize) -> Option<Message>;
+}
+
+/// In-process channel fabric.
+pub struct ChannelTransport {
+    senders: Vec<Sender<Message>>,
+    receivers: Vec<Mutex<Receiver<Message>>>,
+}
+
+impl ChannelTransport {
+    pub fn new(n: usize) -> Self {
+        let mut senders = Vec::with_capacity(n);
+        let mut receivers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            receivers.push(Mutex::new(rx));
+        }
+        Self { senders, receivers }
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn n_ranks(&self) -> usize {
+        self.senders.len()
+    }
+
+    fn send(&self, dst: usize, msg: Message) {
+        self.senders[dst].send(msg).expect("receiver dropped");
+    }
+
+    fn recv(&self, rank: usize) -> Message {
+        self.receivers[rank]
+            .lock()
+            .unwrap()
+            .recv()
+            .expect("all senders dropped")
+    }
+
+    fn try_recv(&self, rank: usize) -> Option<Message> {
+        self.receivers[rank].lock().unwrap().try_recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn point_to_point() {
+        let t = ChannelTransport::new(2);
+        t.send(1, Message { src: 0, tag: 7, payload: vec![1.0, 2.0] });
+        let m = t.recv(1);
+        assert_eq!(m.src, 0);
+        assert_eq!(m.tag, 7);
+        assert_eq!(m.payload, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn try_recv_nonblocking() {
+        let t = ChannelTransport::new(1);
+        assert!(t.try_recv(0).is_none());
+        t.send(0, Message { src: 0, tag: 1, payload: vec![] });
+        assert!(t.try_recv(0).is_some());
+    }
+
+    #[test]
+    fn cross_thread_exchange() {
+        let t = Arc::new(ChannelTransport::new(4));
+        let mut handles = Vec::new();
+        for rank in 0..4usize {
+            let t = Arc::clone(&t);
+            handles.push(std::thread::spawn(move || {
+                // every rank sends its id to every other rank
+                for dst in 0..4 {
+                    if dst != rank {
+                        t.send(dst, Message { src: rank, tag: rank as u64, payload: vec![rank as f32] });
+                    }
+                }
+                let mut got = Vec::new();
+                for _ in 0..3 {
+                    got.push(t.recv(rank).src);
+                }
+                got.sort_unstable();
+                got
+            }));
+        }
+        for (rank, h) in handles.into_iter().enumerate() {
+            let got = h.join().unwrap();
+            let expect: Vec<usize> = (0..4).filter(|&r| r != rank).collect();
+            assert_eq!(got, expect);
+        }
+    }
+}

@@ -1,0 +1,38 @@
+//! # DistCA — Core Attention Disaggregation
+//!
+//! Reproduction of *"Efficient Long-context Language Model Training by
+//! Core Attention Disaggregation"* (CS.LG 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: the communication-aware greedy
+//!   scheduler over token-level CA-tasks ([`coordinator`]), attention
+//!   servers ([`server`]), ping-pong overlap, pipeline integration
+//!   ([`parallel`]), a discrete-event cluster simulator ([`sim`]) standing
+//!   in for the paper's 512×H200 testbed, the baselines it compares
+//!   against ([`baselines`]), and a PJRT runtime ([`runtime`]) that
+//!   executes the AOT-compiled JAX/Pallas artifacts on the real CPU
+//!   backend.
+//! * **L2 (python/compile/model.py)** — the JAX transformer split at the
+//!   core-attention boundary, lowered once to HLO text.
+//! * **L1 (python/compile/kernels/)** — the Pallas packed-varlen causal
+//!   core-attention kernel (the FlashAttention stand-in), validated
+//!   against a pure-jnp oracle.
+//!
+//! Python never runs on the request path: `make artifacts` lowers
+//! everything to `artifacts/*.hlo.txt`, and the `distca` binary is
+//! self-contained afterwards.
+
+pub mod baselines;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exchange;
+pub mod metrics;
+pub mod model;
+pub mod parallel;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod util;

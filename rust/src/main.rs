@@ -1,0 +1,323 @@
+//! `distca` — the launcher.
+//!
+//! Subcommands:
+//!   simulate   one training iteration under a strategy on the simulated
+//!              H200 cluster (the paper's testbed substitute)
+//!   compare    DistCA vs WLB-ideal on one configuration
+//!   schedule   run the §4.2 scheduler on a sampled batch and dump the
+//!              plan (optionally as JSON)
+//!   train      end-to-end tiny-LM training through the AOT artifacts
+//!   bound      Appendix A max-partition bound for a model/bandwidth
+//!   info       print model/cluster configuration tables
+
+use distca::cli::{usage, Args, FlagSpec};
+use distca::config::run::{DataDist, Strategy};
+use distca::config::{ClusterConfig, ModelConfig};
+use distca::coordinator::scheduler::items_from_chunks;
+use distca::coordinator::{schedule, Profiler, SchedulerCfg};
+use distca::data::distributions::sampler_for;
+use distca::model::FlopsModel;
+use distca::runtime::train::{MarkovCorpus, TrainDriver};
+use distca::sim::strategies::{
+    distca_placement, run_distca, run_packed_dp, run_perdoc_cp, run_wlb_ideal, SimParams,
+};
+use distca::util::json::Json;
+use distca::util::rng::Rng;
+use distca::util::tables::{bytes, f as fmt_f, secs, Table};
+
+const SUBCOMMANDS: &[(&str, &str)] = &[
+    ("simulate", "simulate one iteration under --strategy"),
+    ("compare", "DistCA vs WLB-ideal on one configuration"),
+    ("schedule", "run the scheduler on a sampled batch; print the plan"),
+    ("train", "train the tiny LM end-to-end via AOT artifacts"),
+    ("bound", "Appendix A max-partition bound"),
+    ("info", "print model & cluster configs"),
+];
+
+fn specs() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec { name: "model", help: "llama-8b | llama-34b | tiny-100m", default: Some("llama-8b"), is_bool: false },
+        FlagSpec { name: "gpus", help: "number of GPUs (multiple of 8)", default: Some("64"), is_bool: false },
+        FlagSpec { name: "max-doc-len", help: "max document length (tokens)", default: Some("131072"), is_bool: false },
+        FlagSpec { name: "tokens", help: "tokens per batch (default: 2 chunks)", default: None, is_bool: false },
+        FlagSpec { name: "strategy", help: "packed | cp | wlb | distca", default: Some("distca"), is_bool: false },
+        FlagSpec { name: "data", help: "pretrain | prolong", default: Some("pretrain"), is_bool: false },
+        FlagSpec { name: "tp", help: "tensor-parallel degree", default: Some("8"), is_bool: false },
+        FlagSpec { name: "pp", help: "pipeline-parallel degree", default: Some("1"), is_bool: false },
+        FlagSpec { name: "cp", help: "context-parallel degree (cp strategy)", default: Some("4"), is_bool: false },
+        FlagSpec { name: "tolerance", help: "scheduler imbalance tolerance", default: Some("0.10"), is_bool: false },
+        FlagSpec { name: "seed", help: "PRNG seed", default: Some("42"), is_bool: false },
+        FlagSpec { name: "batches", help: "batches to average", default: Some("5"), is_bool: false },
+        FlagSpec { name: "steps", help: "train steps (train)", default: Some("100"), is_bool: false },
+        FlagSpec { name: "json", help: "emit JSON instead of tables", default: None, is_bool: true },
+        FlagSpec { name: "verbose", help: "debug logging", default: None, is_bool: true },
+    ]
+}
+
+fn main() {
+    distca::util::logging::init_from_env();
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&raw, &specs()) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n\n{}", usage("distca", SUBCOMMANDS, &specs()));
+            std::process::exit(2);
+        }
+    };
+    if args.get_bool("verbose") {
+        distca::util::logging::set_level(distca::util::logging::Level::Debug);
+    }
+    let result = match args.subcommand.as_deref() {
+        Some("simulate") => cmd_simulate(&args),
+        Some("compare") => cmd_compare(&args),
+        Some("schedule") => cmd_schedule(&args),
+        Some("train") => cmd_train(&args),
+        Some("bound") => cmd_bound(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            println!("{}", usage("distca", SUBCOMMANDS, &specs()));
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+struct Setup {
+    model: ModelConfig,
+    params: SimParams,
+    max_doc: usize,
+    tokens: usize,
+    data: DataDist,
+    seed: u64,
+    batches: usize,
+}
+
+fn setup(args: &Args) -> anyhow::Result<Setup> {
+    let model = ModelConfig::by_name(args.req("model")?)
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let gpus = args.get_usize("gpus", 64)?;
+    anyhow::ensure!(gpus % 8 == 0, "--gpus must be a multiple of 8");
+    let tp = args.get_usize("tp", 8)?;
+    let pp = args.get_usize("pp", 1)?;
+    let max_doc = args.get_usize("max-doc-len", 131_072)?;
+    let tokens = args.get_usize("tokens", 2 * max_doc * (gpus / 64).max(1))?;
+    let mut params = SimParams::new(model.clone(), ClusterConfig::h200(gpus / 8), tp, pp);
+    params.tolerance = args.get_f64("tolerance", 0.10)?;
+    Ok(Setup {
+        model,
+        params,
+        max_doc,
+        tokens,
+        data: DataDist::from_str(args.req("data")?)
+            .ok_or_else(|| anyhow::anyhow!("unknown data distribution"))?,
+        seed: args.get_u64("seed", 42)?,
+        batches: args.get_usize("batches", 5)?,
+    })
+}
+
+fn report_row(t: &mut Table, r: &distca::sim::IterationReport) {
+    t.row(&[
+        r.strategy.clone(),
+        r.config.clone(),
+        secs(r.iter_time),
+        format!("{:.3e}", r.throughput()),
+        fmt_f(r.idle_fraction() * 100.0, 1),
+        fmt_f(r.memory_divergence(), 2),
+        bytes(r.comm_bytes),
+        if r.oom { "OOM".into() } else { "-".into() },
+    ]);
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let s = setup(args)?;
+    let strategy = Strategy::from_str(args.req("strategy")?)
+        .ok_or_else(|| anyhow::anyhow!("unknown strategy"))?;
+    let cp = args.get_usize("cp", 4)?;
+    let mut reports = Vec::new();
+    for b in 0..s.batches {
+        let mut rng = Rng::new(s.seed + b as u64 * 7919);
+        let docs = sampler_for(s.data, s.max_doc).sample_tokens(&mut rng, s.tokens, 0);
+        reports.push(match strategy {
+            Strategy::Packed => run_packed_dp(&docs, s.max_doc, &s.params),
+            Strategy::PerDocCp => run_perdoc_cp(&docs, s.max_doc, cp, &s.params),
+            Strategy::WlbIdeal => run_wlb_ideal(&docs, s.max_doc, &s.params),
+            Strategy::DistCa => run_distca(&docs, s.max_doc, &s.params),
+        });
+    }
+    let avg = distca::sim::IterationReport::average(&reports);
+    if args.get_bool("json") {
+        println!("{}", avg.to_json().to_string_pretty());
+    } else {
+        let mut t = Table::new(
+            &format!("{} on {} GPUs, {} (avg of {})", strategy.name(),
+                     s.params.cluster.n_gpus(), s.data.name(), s.batches),
+            &["strategy", "config", "iter", "tok/s", "idle%", "mem div", "comm", "oom"],
+        );
+        report_row(&mut t, &avg);
+        t.print();
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> anyhow::Result<()> {
+    let s = setup(args)?;
+    let mut wlb = Vec::new();
+    let mut ca = Vec::new();
+    for b in 0..s.batches {
+        let mut rng = Rng::new(s.seed + b as u64 * 7919);
+        let docs = sampler_for(s.data, s.max_doc).sample_tokens(&mut rng, s.tokens, 0);
+        wlb.push(run_wlb_ideal(&docs, s.max_doc, &s.params));
+        ca.push(run_distca(&docs, s.max_doc, &s.params));
+    }
+    let wlb = distca::sim::IterationReport::average(&wlb);
+    let ca = distca::sim::IterationReport::average(&ca);
+    if args.get_bool("json") {
+        let j = Json::obj(vec![
+            ("baseline", wlb.to_json()),
+            ("distca", ca.to_json()),
+            ("speedup", Json::Num(wlb.iter_time / ca.iter_time)),
+        ]);
+        println!("{}", j.to_string_pretty());
+    } else {
+        let mut t = Table::new(
+            &format!("{} | {} GPUs | maxdoc {}K | {}", s.model.name,
+                     s.params.cluster.n_gpus(), s.max_doc / 1024, s.data.name()),
+            &["strategy", "config", "iter", "tok/s", "idle%", "mem div", "comm", "oom"],
+        );
+        report_row(&mut t, &wlb);
+        report_row(&mut t, &ca);
+        t.print();
+        println!("speedup: {:.2}x", wlb.iter_time / ca.iter_time);
+    }
+    Ok(())
+}
+
+fn cmd_schedule(args: &Args) -> anyhow::Result<()> {
+    let s = setup(args)?;
+    let n = s.params.n_logical();
+    let mut rng = Rng::new(s.seed);
+    let docs = sampler_for(s.data, s.max_doc).sample_tokens(&mut rng, s.tokens, 0);
+    let chunks = distca_placement(&docs, n);
+    let items = items_from_chunks(&chunks);
+    let f = FlopsModel::new(&s.model);
+    let prof = Profiler::analytic(&f, &s.params.cluster);
+    let t0 = std::time::Instant::now();
+    let plan = schedule(
+        &items, n, &f, &prof, &s.model,
+        &SchedulerCfg { tolerance: s.params.tolerance, ..Default::default() },
+    );
+    let dt = t0.elapsed();
+    if args.get_bool("json") {
+        let servers: Vec<Json> = (0..n)
+            .map(|srv| {
+                Json::obj(vec![
+                    ("server", Json::Num(srv as f64)),
+                    ("load_s", Json::Num(plan.server_load[srv])),
+                    (
+                        "tasks",
+                        Json::Num(
+                            plan.assignments.iter().filter(|a| a.server == srv).count() as f64,
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        let j = Json::obj(vec![
+            ("n_servers", Json::Num(n as f64)),
+            ("imbalance", Json::Num(plan.imbalance())),
+            ("total_comm_bytes", Json::Num(plan.total_comm_bytes())),
+            ("local_fraction", Json::Num(plan.local_fraction())),
+            ("schedule_time_s", Json::Num(dt.as_secs_f64())),
+            ("servers", Json::Arr(servers)),
+        ]);
+        println!("{}", j.to_string_pretty());
+    } else {
+        let mut t = Table::new(
+            &format!("plan: {} items -> {} servers in {}", items.len(), n, secs(dt.as_secs_f64())),
+            &["server", "CA load", "vs target", "tasks"],
+        );
+        for srv in 0..n {
+            t.row(&[
+                srv.to_string(),
+                secs(plan.server_load[srv]),
+                format!("{:+.1}%", (plan.server_load[srv] / plan.target_load - 1.0) * 100.0),
+                plan.assignments.iter().filter(|a| a.server == srv).count().to_string(),
+            ]);
+        }
+        t.print();
+        println!(
+            "imbalance {:.3} | dispatch {} | {:.0}% local",
+            plan.imbalance(),
+            bytes(plan.total_comm_bytes()),
+            plan.local_fraction() * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let steps = args.get_usize("steps", 100)?;
+    anyhow::ensure!(
+        distca::runtime::artifacts_available(),
+        "artifacts missing — run `make artifacts`"
+    );
+    let driver = TrainDriver::load(&distca::runtime::artifacts_dir())?;
+    println!("params: {} (~{:.0}M)", driver.n_params(), driver.n_params() as f64 / 1e6);
+    let corpus = MarkovCorpus::new(2048, 0.9, 42);
+    let report = driver.train(&corpus, steps, args.get_u64("seed", 42)?, |s, l| {
+        if s % 10 == 0 {
+            println!("step {s:>4}  loss {l:.4}");
+        }
+    })?;
+    println!(
+        "loss {:.4} -> {:.4} (floor {:.3}) | {:.2}s/step",
+        report.first_loss(),
+        report.last_loss(),
+        report.entropy_floor,
+        report.secs_per_step
+    );
+    Ok(())
+}
+
+fn cmd_bound(args: &Args) -> anyhow::Result<()> {
+    let model = ModelConfig::by_name(args.req("model")?)
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let cluster = ClusterConfig::h200(1);
+    let s = distca::coordinator::comm::max_partition_bound(&model, &cluster);
+    let t = distca::coordinator::comm::token_linear_time(&model, &cluster);
+    println!(
+        "{}: t = {:.3} us/token, IB {} GB/s  =>  s <= {:.1}",
+        model.name,
+        t * 1e6,
+        cluster.ib_bw / 1e9,
+        s
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let gpus = args.get_usize("gpus", 64)?;
+    let mut t = Table::new("models (Table 2)", &["name", "layers", "hidden", "heads", "hdim", "kv", "ffn", "params"]);
+    for m in [ModelConfig::llama3_8b(), ModelConfig::llama_34b(), ModelConfig::tiny_100m()] {
+        t.row(&[
+            m.name.clone(),
+            m.n_layers.to_string(),
+            m.hidden.to_string(),
+            m.n_heads.to_string(),
+            m.head_dim.to_string(),
+            m.kv_heads.to_string(),
+            m.intermediate.to_string(),
+            format!("{:.1}B", m.param_count() as f64 / 1e9),
+        ]);
+    }
+    t.print();
+    let c = ClusterConfig::h200(gpus / 8);
+    println!(
+        "cluster: {} ({} GPUs, {:.0} TFLOP/s bf16/GPU, NVLink {:.0} GB/s, IB {:.0} GB/s, HBM {:.0} GB)",
+        c.name, c.n_gpus(), c.peak_flops / 1e12, c.nvlink_bw / 1e9, c.ib_bw / 1e9, c.hbm_bytes / 1e9
+    );
+    Ok(())
+}

@@ -1,0 +1,135 @@
+//! Experiment metrics & report assembly: speedup tables (Figs. 9/10),
+//! scaling series, and MFU accounting.
+
+use crate::sim::IterationReport;
+use crate::util::tables::{f as fmt_f, Table};
+
+/// Speedup of `ours` over `baseline` — the paper defines it as
+/// "average duration of WLB-LLM runs over DistCA".
+pub fn speedup(baseline: &IterationReport, ours: &IterationReport) -> f64 {
+    if ours.iter_time <= 0.0 {
+        return 0.0;
+    }
+    baseline.iter_time / ours.iter_time
+}
+
+/// Model FLOPs utilization of a run: useful training FLOPs over available
+/// device FLOPs.
+pub fn mfu(report: &IterationReport, useful_flops: f64, peak_flops_total: f64) -> f64 {
+    if report.iter_time <= 0.0 || peak_flops_total <= 0.0 {
+        return 0.0;
+    }
+    useful_flops / (report.iter_time * peak_flops_total)
+}
+
+/// A row of a Fig. 9 / Fig. 10 style comparison.
+#[derive(Debug, Clone)]
+pub struct ComparisonRow {
+    pub model: String,
+    pub max_doc_len: usize,
+    pub n_gpus: usize,
+    pub dataset: String,
+    pub baseline: IterationReport,
+    pub distca: IterationReport,
+}
+
+impl ComparisonRow {
+    pub fn speedup(&self) -> f64 {
+        speedup(&self.baseline, &self.distca)
+    }
+}
+
+/// Render a set of comparison rows the way the paper's figures read.
+pub fn comparison_table(title: &str, rows: &[ComparisonRow]) -> Table {
+    let mut t = Table::new(
+        title,
+        &[
+            "model", "MaxDocLen", "#GPU", "data", "baseline", "base tok/s", "DistCA tok/s",
+            "speedup", "base idle%", "CA idle%", "base memdiv", "CA memdiv",
+        ],
+    );
+    for r in rows {
+        t.row(&[
+            r.model.clone(),
+            format!("{}K", r.max_doc_len / 1024),
+            r.n_gpus.to_string(),
+            r.dataset.clone(),
+            r.baseline.config.clone(),
+            format!("{:.3e}", r.baseline.throughput()),
+            format!("{:.3e}", r.distca.throughput()),
+            format!("{:.2}x", r.speedup()),
+            fmt_f(r.baseline.idle_fraction() * 100.0, 1),
+            fmt_f(r.distca.idle_fraction() * 100.0, 1),
+            fmt_f(r.baseline.memory_divergence(), 2),
+            fmt_f(r.distca.memory_divergence(), 2),
+        ]);
+    }
+    t
+}
+
+/// Weak-scaling efficiency: throughput(n) / (n/n0 · throughput(n0)).
+pub fn weak_scaling_efficiency(series: &[(usize, f64)]) -> Vec<(usize, f64)> {
+    if series.is_empty() {
+        return vec![];
+    }
+    let (n0, t0) = series[0];
+    series
+        .iter()
+        .map(|&(n, t)| (n, t / (t0 * n as f64 / n0 as f64)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rep(iter: f64) -> IterationReport {
+        IterationReport {
+            strategy: "x".into(),
+            iter_time: iter,
+            tokens: 1000,
+            device_busy: vec![iter],
+            device_mem: vec![1.0],
+            comm_bytes: 0.0,
+            comm_exposed: 0.0,
+            oom: false,
+            config: "c".into(),
+        }
+    }
+
+    #[test]
+    fn speedup_is_baseline_over_ours() {
+        assert!((speedup(&rep(2.0), &rep(1.0)) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mfu_bounds() {
+        let r = rep(1.0);
+        let m = mfu(&r, 0.5e15, 1e15);
+        assert!((m - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weak_scaling_perfect_is_one() {
+        let s = vec![(64usize, 100.0), (128, 200.0), (256, 400.0)];
+        for (_, e) in weak_scaling_efficiency(&s) {
+            assert!((e - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn table_renders() {
+        let row = ComparisonRow {
+            model: "llama-8b".into(),
+            max_doc_len: 131072,
+            n_gpus: 64,
+            dataset: "Pretrain".into(),
+            baseline: rep(2.0),
+            distca: rep(1.5),
+        };
+        let t = comparison_table("fig9", &[row]);
+        let rendered = t.render();
+        assert!(rendered.contains("1.33x"));
+        assert!(rendered.contains("128K"));
+    }
+}

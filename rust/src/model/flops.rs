@@ -1,0 +1,236 @@
+//! FLOP accounting for transformer components (paper Table 1, §3.1,
+//! Appendix A).
+//!
+//! Conventions: all functions return *forward-pass* FLOPs for **one
+//! transformer layer** unless suffixed `_train` (forward + backward) or
+//! `_model` (× n_layers). Backward of the linear layers costs 2× forward;
+//! backward of CA with an IO-aware kernel costs ~2.5× forward because the
+//! kernel recomputes the score matrix (Dao et al., 2022).
+
+use crate::config::ModelConfig;
+
+/// Backward/forward ratio for GEMM layers.
+pub const LINEAR_BWD_FACTOR: f64 = 2.0;
+/// Backward/forward ratio for core attention with recomputation.
+pub const CA_BWD_FACTOR: f64 = 2.5;
+
+/// Analytic FLOPs model bound to a model configuration.
+#[derive(Debug, Clone)]
+pub struct FlopsModel {
+    /// Query hidden size `h_q = n_heads · head_dim`.
+    pub h_q: f64,
+    /// CA quadratic coefficient α (per layer, forward, causal):
+    /// `CA_fwd(l) = 2·h_q·l²` — two matmuls (QKᵀ and PV) of `2·h_q·l²`
+    /// FLOPs each over the causal half of the score matrix.
+    pub alpha: f64,
+    /// Linear coefficient β (per layer, forward): Appendix A's
+    /// `2h(2h + h_kv + 3i)` per token.
+    pub beta: f64,
+    pub n_layers: f64,
+}
+
+impl FlopsModel {
+    pub fn new(m: &ModelConfig) -> Self {
+        let h = m.hidden as f64;
+        let h_kv = m.h_kv() as f64;
+        let i = m.intermediate as f64;
+        let h_q = m.h_q() as f64;
+        Self {
+            h_q,
+            alpha: 2.0 * h_q,
+            beta: 2.0 * h * (2.0 * h + h_kv + 3.0 * i),
+            n_layers: m.n_layers as f64,
+        }
+    }
+
+    // ---------------- context-independent (linear) layers ----------------
+
+    /// Forward FLOPs of one layer's context-independent part for `tokens`.
+    pub fn linear_fwd(&self, tokens: usize) -> f64 {
+        self.beta * tokens as f64
+    }
+
+    /// Forward+backward FLOPs of one layer's context-independent part.
+    pub fn linear_train(&self, tokens: usize) -> f64 {
+        self.linear_fwd(tokens) * (1.0 + LINEAR_BWD_FACTOR)
+    }
+
+    // ------------------------- core attention ----------------------------
+
+    /// Exact forward CA FLOPs of a *CA-task*: `n_q` query tokens whose
+    /// first query sits at absolute position `q_offset` inside its
+    /// document (causal mask ⇒ query at position p attends to p+1 keys).
+    ///
+    /// Σ_{j=0}^{n_q-1} (q_offset + j + 1) context tokens, 4·h_q FLOPs per
+    /// (query, key) pair (two matmuls × multiply-add).
+    pub fn ca_task_fwd(&self, n_q: usize, q_offset: usize) -> f64 {
+        let n = n_q as f64;
+        let o = q_offset as f64;
+        let pairs = n * o + n * (n + 1.0) / 2.0;
+        4.0 * self.h_q * pairs
+    }
+
+    /// Forward CA FLOPs of a whole causal document of length `l`:
+    /// `ca_task_fwd(l, 0) = 2·h_q·l·(l+1) ≈ α·l²`.
+    pub fn ca_doc_fwd(&self, l: usize) -> f64 {
+        self.ca_task_fwd(l, 0)
+    }
+
+    /// Forward+backward CA FLOPs of a document.
+    pub fn ca_doc_train(&self, l: usize) -> f64 {
+        self.ca_doc_fwd(l) * (1.0 + CA_BWD_FACTOR)
+    }
+
+    /// Forward+backward CA FLOPs of a CA-task.
+    pub fn ca_task_train(&self, n_q: usize, q_offset: usize) -> f64 {
+        self.ca_task_fwd(n_q, q_offset) * (1.0 + CA_BWD_FACTOR)
+    }
+
+    /// Forward CA FLOPs of a *head-tail* item (per-document CP style,
+    /// §2.2 / Appendix B): the pair of shards `[i, j)` and
+    /// `[l-j, l-i)` of a length-`l` document. Head-tail pairing keeps
+    /// per-pair FLOPs identical across ranks.
+    pub fn ca_headtail_fwd(&self, l: usize, i: usize, j: usize) -> f64 {
+        assert!(i <= j && 2 * j <= l + 1, "bad head-tail bounds i={i} j={j} l={l}");
+        let head = self.ca_task_fwd(j - i, i);
+        let tail = self.ca_task_fwd(j - i, l - j);
+        head + tail
+    }
+
+    // ------------------------- whole chunks -------------------------------
+
+    /// Forward FLOPs for one layer over a packed chunk of documents.
+    pub fn chunk_fwd(&self, doc_lens: &[usize]) -> f64 {
+        let tokens: usize = doc_lens.iter().sum();
+        let ca: f64 = doc_lens.iter().map(|&l| self.ca_doc_fwd(l)).sum();
+        self.linear_fwd(tokens) + ca
+    }
+
+    /// Training FLOPs for the full model over a packed chunk.
+    pub fn chunk_train_model(&self, doc_lens: &[usize]) -> f64 {
+        let tokens: usize = doc_lens.iter().sum();
+        let ca: f64 = doc_lens.iter().map(|&l| self.ca_doc_train(l)).sum();
+        self.n_layers * (self.linear_train(tokens) + ca)
+    }
+
+    /// The paper's `FLOPs(l) = αl² + βl` approximation (forward, per layer).
+    pub fn approx_fwd(&self, l: usize) -> f64 {
+        let lf = l as f64;
+        self.alpha * lf * lf / 2.0 * 2.0 / 2.0 + self.beta * lf
+        // note: αl² with α=2·h_q counts the causal half exactly in the
+        // l→∞ limit; kept in this form to mirror §3.1.
+    }
+
+    /// Time to execute `flops` at an effective rate (helper for cost
+    /// models; rate from `ClusterConfig::{linear,attention}_flops`).
+    pub fn time_at(flops: f64, effective_rate: f64) -> f64 {
+        flops / effective_rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m8() -> FlopsModel {
+        FlopsModel::new(&ModelConfig::llama3_8b())
+    }
+
+    #[test]
+    fn appendix_a_beta_for_34b() {
+        // Appendix A: per-token context-independent FLOPs for Llama-34B
+        // = 2h(2h + h_kv + 3i) = 1320·2^20.
+        let f = FlopsModel::new(&ModelConfig::llama_34b());
+        assert_eq!(f.beta, 1320.0 * (1u64 << 20) as f64);
+    }
+
+    #[test]
+    fn ca_doc_is_quadratic() {
+        let f = m8();
+        let f1 = f.ca_doc_fwd(1024);
+        let f2 = f.ca_doc_fwd(2048);
+        let ratio = f2 / f1;
+        assert!((ratio - 4.0).abs() < 0.01, "ratio {ratio}");
+    }
+
+    #[test]
+    fn linear_is_linear() {
+        let f = m8();
+        assert!((f.linear_fwd(2048) / f.linear_fwd(1024) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fig1_example_4x1k_vs_1x4k() {
+        // Figure 1: a 1×4K chunk has ~4× the CA FLOPs of a 4×1K chunk.
+        let f = m8();
+        let one_4k = f.ca_doc_fwd(4096);
+        let four_1k = 4.0 * f.ca_doc_fwd(1024);
+        let ratio = one_4k / four_1k;
+        assert!((ratio - 4.0).abs() < 0.01, "ratio {ratio}");
+    }
+
+    #[test]
+    fn shards_partition_document_exactly() {
+        // Splitting a doc into CA-tasks conserves total CA FLOPs.
+        let f = m8();
+        let l = 8192;
+        let whole = f.ca_doc_fwd(l);
+        let parts: f64 = [(0usize, 1024usize), (1024, 4096), (5120, 3072)]
+            .iter()
+            .map(|&(off, n)| f.ca_task_fwd(n, off))
+            .sum();
+        assert!((whole - parts).abs() / whole < 1e-12);
+    }
+
+    #[test]
+    fn later_shards_cost_more() {
+        let f = m8();
+        assert!(f.ca_task_fwd(1024, 4096) > f.ca_task_fwd(1024, 0));
+    }
+
+    #[test]
+    fn headtail_pairs_balanced() {
+        // Head-tail shard pairs of equal width have equal FLOPs regardless
+        // of which pair — the CP balancing property from §2.2.
+        let f = m8();
+        let l = 16384;
+        let w = 1024;
+        let a = f.ca_headtail_fwd(l, 0, w);
+        let b = f.ca_headtail_fwd(l, w, 2 * w);
+        let c = f.ca_headtail_fwd(l, 2 * w, 3 * w);
+        assert!((a - b).abs() / a < 1e-9, "a={a} b={b}");
+        assert!((b - c).abs() / b < 1e-9);
+    }
+
+    #[test]
+    fn headtail_covers_whole_doc() {
+        let f = m8();
+        let l = 4096;
+        let c = 4; // 2c = 8 shards of width l/(2c)=512
+        let width = l / (2 * c);
+        let total: f64 = (0..c)
+            .map(|r| f.ca_headtail_fwd(l, r * width, (r + 1) * width))
+            .sum();
+        let whole = f.ca_doc_fwd(l);
+        assert!((total - whole).abs() / whole < 1e-9);
+    }
+
+    #[test]
+    fn train_factors() {
+        let f = m8();
+        assert!((f.ca_doc_train(100) / f.ca_doc_fwd(100) - 3.5).abs() < 1e-12);
+        assert!((f.linear_train(100) / f.linear_fwd(100) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chunk_flops_compose() {
+        let f = m8();
+        let lens = [1000usize, 2000, 3000];
+        let total = f.chunk_fwd(&lens);
+        let by_hand = f.linear_fwd(6000)
+            + f.ca_doc_fwd(1000)
+            + f.ca_doc_fwd(2000)
+            + f.ca_doc_fwd(3000);
+        assert!((total - by_hand).abs() < 1.0);
+    }
+}

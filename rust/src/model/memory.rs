@@ -1,0 +1,215 @@
+//! Activation / weight / KV memory accounting (paper §3.1 `M(l) = γ·l`
+//! and the Fig. 3b breakdown).
+//!
+//! What is tracked, per GPU:
+//! * **weights + optimizer**: parameters, gradients, and Adam moments,
+//!   sharded over TP (and PP stages);
+//! * **activations**: per-token tensors saved for backward — dominated by
+//!   the context-independent layers (FFN intermediates especially);
+//!   core attention itself saves only O(l) softmax statistics;
+//! * **gathered KV**: per-document CP must all-gather every document's
+//!   K/V; the *last* CP rank holds the full document's aggregated KV for
+//!   backward (§3.2), which is the term that explodes in Fig. 3b.
+
+use crate::config::{ClusterConfig, ModelConfig};
+
+/// Per-GPU memory usage in bytes, broken down Fig.-3b style.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MemoryBreakdown {
+    pub weights_optimizer: f64,
+    pub activations: f64,
+    pub gathered_kv: f64,
+}
+
+impl MemoryBreakdown {
+    pub fn total(&self) -> f64 {
+        self.weights_optimizer + self.activations + self.gathered_kv
+    }
+
+    /// Fraction of total taken by the gathered-KV term (the Fig. 3b series).
+    pub fn kv_fraction(&self) -> f64 {
+        let t = self.total();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.gathered_kv / t
+        }
+    }
+}
+
+/// Analytic memory model bound to a model + dtype.
+#[derive(Debug, Clone)]
+pub struct MemoryModel {
+    /// γ: activation bytes per token per layer.
+    pub gamma_per_layer: f64,
+    pub n_layers: f64,
+    /// K+V bytes per token per layer.
+    pub kv_bytes_per_layer: f64,
+    /// Total parameter bytes (dtype) for the full model.
+    pub param_bytes: f64,
+    /// Multiplier for weights + grads + Adam moments (mixed precision:
+    /// bf16 weights/grads + fp32 master + 2 fp32 moments ≈ 2+2+4+4+4 = 16
+    /// bytes/param ⇒ factor 8 over bf16 param bytes).
+    pub optimizer_factor: f64,
+}
+
+impl MemoryModel {
+    pub fn new(m: &ModelConfig) -> Self {
+        let b = m.dtype_bytes as f64;
+        let h = m.hidden as f64;
+        let h_q = m.h_q() as f64;
+        let h_kv = m.h_kv() as f64;
+        let i = m.intermediate as f64;
+        // Saved-for-backward tensors per token per layer (selective
+        // recompute of the CA score matrix assumed, Megatron-style):
+        //   ln1 input (h) + q (h_q) + k,v (2·h_kv) + CA out (h_q)
+        //   + o-proj out (h) + ln2 input (h) + gate,up (2·i) + act (i)
+        let gamma = b * (3.0 * h + 2.0 * h_q + 2.0 * h_kv + 3.0 * i);
+        Self {
+            gamma_per_layer: gamma,
+            n_layers: m.n_layers as f64,
+            kv_bytes_per_layer: 2.0 * h_kv * b,
+            param_bytes: m.param_count() as f64 * b,
+            optimizer_factor: 8.0,
+        }
+    }
+
+    /// γ for the whole model: activation bytes per token across layers.
+    pub fn gamma(&self) -> f64 {
+        self.gamma_per_layer * self.n_layers
+    }
+
+    /// Activation memory for `tokens` resident tokens (all layers),
+    /// divided by the TP degree (TP shards activations too).
+    pub fn activations(&self, tokens: usize, tp: usize) -> f64 {
+        self.gamma() * tokens as f64 / tp as f64
+    }
+
+    /// Weights+optimizer per GPU under TP×PP sharding.
+    pub fn weights_optimizer(&self, tp: usize, pp: usize) -> f64 {
+        self.param_bytes * self.optimizer_factor / (tp * pp) as f64
+    }
+
+    /// Gathered-KV bytes on the *worst* CP rank for a set of documents:
+    /// the last rank of each document's CP group holds the full document
+    /// KV for backward (§3.2), across all layers of its PP stage.
+    pub fn gathered_kv_worst(&self, doc_lens: &[usize], tp: usize, layers_resident: f64) -> f64 {
+        let tokens: usize = doc_lens.iter().sum();
+        self.kv_bytes_per_layer * layers_resident * tokens as f64 / tp as f64
+    }
+
+    /// Full Fig.-3b style breakdown for one GPU.
+    ///
+    /// `resident_tokens`: tokens whose context-independent layers this GPU
+    /// computes; `gathered_kv_tokens`: token-layers of remote KV gathered
+    /// and retained for backward on this GPU.
+    pub fn breakdown(
+        &self,
+        resident_tokens: usize,
+        gathered_kv_tokens: f64,
+        tp: usize,
+        pp: usize,
+    ) -> MemoryBreakdown {
+        let layers_per_stage = self.n_layers / pp as f64;
+        MemoryBreakdown {
+            weights_optimizer: self.weights_optimizer(tp, pp),
+            activations: self.gamma_per_layer * layers_per_stage * resident_tokens as f64
+                / tp as f64,
+            gathered_kv: self.kv_bytes_per_layer * gathered_kv_tokens / tp as f64,
+        }
+    }
+
+    /// Does a token load fit in HBM? (used by the simulator's OOM checks)
+    pub fn fits(
+        &self,
+        cluster: &ClusterConfig,
+        resident_tokens: usize,
+        gathered_kv_tokens: f64,
+        tp: usize,
+        pp: usize,
+    ) -> bool {
+        self.breakdown(resident_tokens, gathered_kv_tokens, tp, pp).total()
+            <= cluster.hbm_bytes
+    }
+
+    /// Max resident tokens per GPU given HBM, TP, PP (no gathered KV).
+    pub fn max_tokens_per_gpu(&self, cluster: &ClusterConfig, tp: usize, pp: usize) -> usize {
+        let budget = cluster.hbm_bytes - self.weights_optimizer(tp, pp);
+        if budget <= 0.0 {
+            return 0;
+        }
+        let layers_per_stage = self.n_layers / pp as f64;
+        (budget / (self.gamma_per_layer * layers_per_stage / tp as f64)) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mm8() -> MemoryModel {
+        MemoryModel::new(&ModelConfig::llama3_8b())
+    }
+
+    #[test]
+    fn activation_linear_in_tokens() {
+        let m = mm8();
+        let a = m.activations(1000, 8);
+        let b = m.activations(2000, 8);
+        assert!((b / a - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tp_shards_activations() {
+        let m = mm8();
+        assert!((m.activations(1000, 1) / m.activations(1000, 8) - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ca_saves_no_quadratic_state() {
+        // M(l) must be exactly linear: doubling tokens doubles the total
+        // even for one giant document (Table 1's Memory column for CA = 0).
+        let m = mm8();
+        let b1 = m.breakdown(131_072, 0.0, 8, 1);
+        let b2 = m.breakdown(262_144, 0.0, 8, 1);
+        assert!(((b2.activations / b1.activations) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn breakdown_total_is_sum() {
+        let m = mm8();
+        let b = m.breakdown(100_000, 50_000.0, 8, 2);
+        assert!(
+            (b.total() - (b.weights_optimizer + b.activations + b.gathered_kv)).abs() < 1.0
+        );
+        assert!(b.kv_fraction() > 0.0 && b.kv_fraction() < 1.0);
+    }
+
+    #[test]
+    fn kv_fraction_grows_with_gathered_tokens() {
+        // The Fig. 3b effect: more gathered KV (higher CP degree holding
+        // whole documents) -> larger KV share of memory.
+        let m = mm8();
+        let lo = m.breakdown(65_536, 65_536.0 * 32.0, 8, 1).kv_fraction();
+        let hi = m.breakdown(65_536, 65_536.0 * 32.0 * 8.0, 8, 1).kv_fraction();
+        assert!(hi > lo);
+    }
+
+    #[test]
+    fn fits_and_budget() {
+        let m = mm8();
+        let c = ClusterConfig::h200(1);
+        let cap = m.max_tokens_per_gpu(&c, 8, 1);
+        assert!(cap > 0);
+        assert!(m.fits(&c, cap / 2, 0.0, 8, 1));
+        assert!(!m.fits(&c, cap * 2, 0.0, 8, 1));
+    }
+
+    #[test]
+    fn pp_divides_weights_and_stage_layers() {
+        let m = mm8();
+        let w1 = m.weights_optimizer(8, 1);
+        let w4 = m.weights_optimizer(8, 4);
+        assert!((w1 / w4 - 4.0).abs() < 1e-9);
+    }
+}

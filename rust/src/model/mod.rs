@@ -1,0 +1,20 @@
+//! Analytic model cost accounting — the paper's Table 1 / §3.1 formalism.
+//!
+//! Everything the scheduler, baselines, and simulator reason about reduces
+//! to two functions of document length `l`:
+//!
+//! * compute:  `FLOPs(l) = α·l² + β·l` — `α·l²` is core attention (CA),
+//!   `β·l` is the context-independent layers (GEMM-dominated);
+//! * memory:   `M(l) = γ·l` — activations saved for backward, dominated by
+//!   the context-independent layers because IO-aware attention kernels do
+//!   not materialize `P`.
+//!
+//! [`flops`] derives α/β from a [`ModelConfig`] and provides exact causal
+//! shard-level CA FLOPs (what CA-tasks are costed with); [`memory`]
+//! derives γ and the per-component breakdown used by Fig. 3b.
+
+pub mod flops;
+pub mod memory;
+
+pub use flops::FlopsModel;
+pub use memory::MemoryModel;

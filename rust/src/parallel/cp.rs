@@ -1,0 +1,189 @@
+//! Per-document context parallelism with head-tail shard assignment
+//! (§2.2, §3.2).
+//!
+//! A document of length `l` under CP degree `c` is cut into `2c` width-
+//! `l/(2c)` slices; rank `i` receives slice `i` and slice `2c-1-i`. Under
+//! a causal mask the early slice is cheap and the late slice expensive, so
+//! each rank's pair has identical FLOPs — compute-balanced *within* the
+//! document. The costs (§3.2): tiny shards for short documents (kernel
+//! under-utilization below the 128-token tile), an all-gather of KV linear
+//! in the global token count, and full-document KV retention on the last
+//! rank.
+
+use crate::model::FlopsModel;
+
+/// One CP shard: a (head, tail) pair of query ranges of a document.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CpShard {
+    pub doc: u32,
+    pub doc_len: usize,
+    pub cp_rank: usize,
+    /// Head slice `[head_start, head_start + width)`.
+    pub head_start: usize,
+    /// Tail slice `[tail_start, tail_start + width)`.
+    pub tail_start: usize,
+    pub width: usize,
+    /// Residue tokens appended to the last rank when `l` is not divisible
+    /// by `2c` (kept on the tail).
+    pub extra: usize,
+}
+
+impl CpShard {
+    /// Total query tokens this rank holds for the document.
+    pub fn tokens(&self) -> usize {
+        2 * self.width + self.extra
+    }
+
+    /// Forward CA FLOPs of the pair (exact causal accounting).
+    pub fn ca_fwd_flops(&self, f: &FlopsModel) -> f64 {
+        let mut flops = f.ca_task_fwd(self.width, self.head_start)
+            + f.ca_task_fwd(self.width + self.extra, self.tail_start);
+        if self.width == 0 && self.extra > 0 {
+            // degenerate: whole doc in `extra`
+            flops = f.ca_task_fwd(self.extra, self.tail_start);
+        }
+        flops
+    }
+
+    /// Smallest contiguous slice width this rank computes — the quantity
+    /// that falls under the kernel's 128-token tile for short documents.
+    pub fn min_slice(&self) -> usize {
+        if self.width == 0 {
+            self.extra
+        } else {
+            self.width
+        }
+    }
+}
+
+/// Shard one document across `c` CP ranks, head-tail style.
+pub fn per_document_cp_shards(doc: u32, doc_len: usize, c: usize) -> Vec<CpShard> {
+    assert!(c >= 1);
+    if c == 1 {
+        return vec![CpShard {
+            doc,
+            doc_len,
+            cp_rank: 0,
+            head_start: 0,
+            tail_start: 0,
+            width: 0,
+            extra: doc_len,
+        }];
+    }
+    let width = doc_len / (2 * c);
+    let residue = doc_len - width * 2 * c;
+    (0..c)
+        .map(|i| {
+            let head_start = i * width;
+            // Tail slice index 2c-1-i occupies [(2c-1-i)·w, (2c-i)·w); the
+            // residue rides on rank 0's tail (the final slice of the doc).
+            let tail_idx = 2 * c - 1 - i;
+            let extra = if i == 0 { residue } else { 0 };
+            CpShard {
+                doc,
+                doc_len,
+                cp_rank: i,
+                head_start,
+                tail_start: tail_idx * width,
+                width,
+                extra,
+            }
+        })
+        .collect()
+}
+
+/// KV bytes all-gathered per CP rank per layer for a set of documents:
+/// every rank needs every document's full KV (cost linear in global
+/// tokens, §3.2 / Fig. 3a).
+pub fn cp_allgather_bytes_per_rank(total_tokens: usize, kv_bytes_per_token: usize) -> f64 {
+    total_tokens as f64 * kv_bytes_per_token as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::util::quickcheck::{check, ensure};
+    use crate::util::rng::Rng;
+
+    fn fm() -> FlopsModel {
+        FlopsModel::new(&ModelConfig::llama3_8b())
+    }
+
+    #[test]
+    fn shards_cover_document() {
+        for &(len, c) in &[(8192usize, 4usize), (8200, 4), (1024, 8), (999, 2)] {
+            let shards = per_document_cp_shards(0, len, c);
+            let total: usize = shards.iter().map(|s| s.tokens()).sum();
+            assert_eq!(total, len, "len={len} c={c}");
+        }
+    }
+
+    #[test]
+    fn headtail_flops_balanced_across_ranks() {
+        let f = fm();
+        let shards = per_document_cp_shards(0, 65_536, 8);
+        let flops: Vec<f64> = shards.iter().map(|s| s.ca_fwd_flops(&f)).collect();
+        let mx = flops.iter().cloned().fold(f64::MIN, f64::max);
+        let mn = flops.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(mx / mn < 1.001, "head-tail pairs should balance: {flops:?}");
+    }
+
+    #[test]
+    fn naive_slicing_would_be_imbalanced() {
+        // Sanity check of the premise: contiguous equal slices are NOT
+        // balanced under a causal mask (why head-tail pairing exists).
+        let f = fm();
+        let l = 65_536;
+        let c = 8;
+        let w = l / c;
+        let naive: Vec<f64> = (0..c).map(|i| f.ca_task_fwd(w, i * w)).collect();
+        let mx = naive.iter().cloned().fold(f64::MIN, f64::max);
+        let mn = naive.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(mx / mn > 5.0, "naive slices should diverge: {naive:?}");
+    }
+
+    #[test]
+    fn shard_flops_sum_to_document() {
+        check(
+            50,
+            |r: &mut Rng| {
+                (
+                    r.gen_range(256, 100_000),
+                    r.gen_range(1, 17),
+                )
+            },
+            |&(len, c)| {
+                let f = fm();
+                let shards = per_document_cp_shards(0, len as usize, c as usize);
+                let total: f64 = shards.iter().map(|s| s.ca_fwd_flops(&f)).sum();
+                let whole = f.ca_doc_fwd(len as usize);
+                ensure(
+                    (total - whole).abs() / whole < 1e-6,
+                    format!("len={len} c={c}: shards {total} != doc {whole}"),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn short_docs_make_tiny_shards() {
+        // §3.2: per-document CP cuts short docs into sub-tile slices.
+        let shards = per_document_cp_shards(0, 1024, 8);
+        assert!(shards.iter().all(|s| s.min_slice() < 128));
+    }
+
+    #[test]
+    fn cp1_is_whole_doc() {
+        let shards = per_document_cp_shards(3, 5000, 1);
+        assert_eq!(shards.len(), 1);
+        assert_eq!(shards[0].tokens(), 5000);
+    }
+
+    #[test]
+    fn allgather_linear_in_tokens() {
+        let a = cp_allgather_bytes_per_rank(1000, 1024);
+        let b = cp_allgather_bytes_per_rank(2000, 1024);
+        assert_eq!(b, 2.0 * a);
+    }
+}

@@ -1,0 +1,12 @@
+//! Parallelization structures (§2.2): the 4D DP×TP×PP×CP topology, rank
+//! mapping, per-document head-tail context-parallel sharding, and
+//! pipeline-parallel schedules (1F1B, interleaved, and the paper's
+//! same-phase-per-tick DistCA variant from §4.1 / Fig. 8).
+
+pub mod cp;
+pub mod pipeline;
+pub mod topology;
+
+pub use cp::{per_document_cp_shards, CpShard};
+pub use pipeline::{distca_ticks, one_f_one_b, PipeOp, PipePhase, PipeSchedule};
+pub use topology::Topology;

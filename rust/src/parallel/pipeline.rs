@@ -1,0 +1,329 @@
+//! Pipeline-parallel schedules (§2.2, §4.1, Fig. 8).
+//!
+//! Three schedules are modeled:
+//! * **GPipe** — all forwards, then all backwards (large bubbles);
+//! * **1F1B** — Megatron's memory-efficient schedule: per-stage warm-up
+//!   forwards, steady-state alternation, drain backwards;
+//! * **DistCA same-phase ticks** — the paper's variant: within a logical
+//!   tick *every* stage runs the same phase (all-forward or all-backward),
+//!   realized by deferring selected backward microbatches into the drain
+//!   bubbles; the tick count is unchanged vs. 1F1B. Phase alignment is
+//!   what lets every GPU switch roles (compute ↔ attention server)
+//!   simultaneously, and warm-up/drain idle slots become pure attention-
+//!   server ticks.
+//!
+//! A schedule is a per-stage *ordered op list*; actual timing (with
+//! unequal per-microbatch durations — the whole point of the paper) is
+//! produced by the simulator, which respects inter-stage dependencies.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipePhase {
+    Forward,
+    Backward,
+}
+
+/// One pipeline operation: stage executes `phase` of microbatch `mb`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PipeOp {
+    pub mb: usize,
+    pub phase: PipePhase,
+}
+
+/// A pipeline schedule: `ops[s]` is the execution order on stage `s`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PipeSchedule {
+    pub n_stages: usize,
+    pub n_microbatches: usize,
+    pub ops: Vec<Vec<PipeOp>>,
+    /// For the DistCA variant: the global tick phases (every stage runs
+    /// `tick_phases[t]` at tick `t`, or idles). Empty for async schedules.
+    pub tick_phases: Vec<PipePhase>,
+    /// For the DistCA variant: `tick_ops[t][s]` = microbatch stage `s`
+    /// runs at tick `t` (`None` = idle = pure attention-server tick).
+    pub tick_ops: Vec<Vec<Option<usize>>>,
+}
+
+impl PipeSchedule {
+    /// Sanity: every stage sees every microbatch exactly once per phase,
+    /// and within a stage fwd(mb) precedes bwd(mb).
+    pub fn validate(&self) -> Result<(), String> {
+        for (s, ops) in self.ops.iter().enumerate() {
+            let mut fwd_pos = vec![usize::MAX; self.n_microbatches];
+            let mut bwd_pos = vec![usize::MAX; self.n_microbatches];
+            for (i, op) in ops.iter().enumerate() {
+                let slot = match op.phase {
+                    PipePhase::Forward => &mut fwd_pos,
+                    PipePhase::Backward => &mut bwd_pos,
+                };
+                if slot[op.mb] != usize::MAX {
+                    return Err(format!("stage {s}: duplicate {op:?}"));
+                }
+                slot[op.mb] = i;
+            }
+            for mb in 0..self.n_microbatches {
+                if fwd_pos[mb] == usize::MAX || bwd_pos[mb] == usize::MAX {
+                    return Err(format!("stage {s}: microbatch {mb} missing an op"));
+                }
+                if fwd_pos[mb] > bwd_pos[mb] {
+                    return Err(format!("stage {s}: bwd before fwd for mb {mb}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// GPipe: all forwards then all backwards.
+pub fn gpipe(n_stages: usize, n_microbatches: usize) -> PipeSchedule {
+    let ops = (0..n_stages)
+        .map(|_| {
+            let mut v: Vec<PipeOp> = (0..n_microbatches)
+                .map(|mb| PipeOp { mb, phase: PipePhase::Forward })
+                .collect();
+            v.extend((0..n_microbatches).map(|mb| PipeOp { mb, phase: PipePhase::Backward }));
+            v
+        })
+        .collect();
+    PipeSchedule {
+        n_stages,
+        n_microbatches,
+        ops,
+        tick_phases: vec![],
+        tick_ops: vec![],
+    }
+}
+
+/// Megatron 1F1B. Stage `s` (0-indexed from the first stage) runs
+/// `w = min(p-1-s, m)` warm-up forwards, then alternates 1F1B, then
+/// drains the remaining backwards.
+pub fn one_f_one_b(n_stages: usize, n_microbatches: usize) -> PipeSchedule {
+    let p = n_stages;
+    let m = n_microbatches;
+    let mut ops = Vec::with_capacity(p);
+    for s in 0..p {
+        let w = (p - 1 - s).min(m);
+        let mut v = Vec::with_capacity(2 * m);
+        for mb in 0..w {
+            v.push(PipeOp { mb, phase: PipePhase::Forward });
+        }
+        let mut next_f = w;
+        let mut next_b = 0;
+        while next_f < m {
+            v.push(PipeOp { mb: next_f, phase: PipePhase::Forward });
+            next_f += 1;
+            v.push(PipeOp { mb: next_b, phase: PipePhase::Backward });
+            next_b += 1;
+        }
+        while next_b < m {
+            v.push(PipeOp { mb: next_b, phase: PipePhase::Backward });
+            next_b += 1;
+        }
+        ops.push(v);
+    }
+    PipeSchedule {
+        n_stages,
+        n_microbatches,
+        ops,
+        tick_phases: vec![],
+        tick_ops: vec![],
+    }
+}
+
+/// The paper's same-phase-per-tick schedule (Fig. 8, right).
+///
+/// Construction: forward microbatches flow as a wavefront (stage `s` runs
+/// fwd of mb `k` on the `(s+k)`-th *forward* tick); backward wavefronts
+/// flow upward (stage `s` runs bwd of mb `k` on the `(p-1-s+k)`-th
+/// *backward* tick). The global tick sequence runs `p-1` forward ticks of
+/// warm-up, then alternates F/B while forwards remain, then drains with
+/// backward ticks. Relative to 1F1B this *defers* some backwards into
+/// what would otherwise be drain bubbles; total ticks = 2(m + p - 1),
+/// identical to 1F1B's span with unit ops.
+pub fn distca_ticks(n_stages: usize, n_microbatches: usize) -> PipeSchedule {
+    let p = n_stages;
+    let m = n_microbatches;
+    // Emit the global phase sequence.
+    let mut phases = Vec::new();
+    let mut f_emitted = 0usize; // forward ticks emitted
+    let mut b_emitted = 0usize;
+    let f_total = m + p - 1; // ticks on which some stage runs a forward
+    let b_total = m + p - 1;
+    while f_emitted < f_total || b_emitted < b_total {
+        // A backward tick `b` is useful iff its earliest dependency is met:
+        // bwd wavefront b serves mb k=b at the last stage, which needs fwd
+        // tick f = b + p - 1 completed, i.e. f_emitted >= b + p.
+        let can_b = b_emitted < b_total && f_emitted >= (b_emitted + p).min(f_total);
+        let need_f = f_emitted < f_total;
+        if need_f && !can_b {
+            phases.push(PipePhase::Forward);
+            f_emitted += 1;
+        } else if can_b && need_f {
+            // steady state: alternate, backward first (it was deferred
+            // longest) then forward.
+            phases.push(PipePhase::Backward);
+            b_emitted += 1;
+            phases.push(PipePhase::Forward);
+            f_emitted += 1;
+        } else {
+            phases.push(PipePhase::Backward);
+            b_emitted += 1;
+        }
+    }
+    // Fill per-tick per-stage microbatches and per-stage op order.
+    let mut tick_ops: Vec<Vec<Option<usize>>> = Vec::with_capacity(phases.len());
+    let mut ops: Vec<Vec<PipeOp>> = vec![Vec::new(); p];
+    let mut f_idx = 0usize;
+    let mut b_idx = 0usize;
+    for &phase in &phases {
+        let mut row = vec![None; p];
+        match phase {
+            PipePhase::Forward => {
+                for s in 0..p {
+                    if f_idx >= s && f_idx - s < m {
+                        let mb = f_idx - s;
+                        row[s] = Some(mb);
+                        ops[s].push(PipeOp { mb, phase });
+                    }
+                }
+                f_idx += 1;
+            }
+            PipePhase::Backward => {
+                for s in 0..p {
+                    let lead = p - 1 - s;
+                    if b_idx >= lead && b_idx - lead < m {
+                        let mb = b_idx - lead;
+                        row[s] = Some(mb);
+                        ops[s].push(PipeOp { mb, phase });
+                    }
+                }
+                b_idx += 1;
+            }
+        }
+        tick_ops.push(row);
+    }
+    PipeSchedule {
+        n_stages,
+        n_microbatches,
+        ops,
+        tick_phases: phases,
+        tick_ops,
+    }
+}
+
+/// Idle slots in a tick-aligned schedule — warm-up/drain holes the paper
+/// repurposes as pure attention-server time (§4.1).
+pub fn idle_ticks(s: &PipeSchedule) -> usize {
+    s.tick_ops
+        .iter()
+        .map(|row| row.iter().filter(|op| op.is_none()).count())
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpipe_valid() {
+        gpipe(4, 8).validate().unwrap();
+    }
+
+    #[test]
+    fn one_f_one_b_valid() {
+        for (p, m) in [(2, 4), (4, 8), (4, 4), (8, 16), (1, 3)] {
+            one_f_one_b(p, m).validate().unwrap_or_else(|e| panic!("p={p} m={m}: {e}"));
+        }
+    }
+
+    #[test]
+    fn distca_valid() {
+        for (p, m) in [(2, 4), (4, 8), (4, 4), (8, 16), (1, 3), (3, 5)] {
+            distca_ticks(p, m).validate().unwrap_or_else(|e| panic!("p={p} m={m}: {e}"));
+        }
+    }
+
+    #[test]
+    fn one_f_one_b_first_stage_warmup() {
+        let s = one_f_one_b(4, 8);
+        // Stage 0 warm-up: 3 forwards before the first backward.
+        let first_b = s.ops[0]
+            .iter()
+            .position(|o| o.phase == PipePhase::Backward)
+            .unwrap();
+        assert_eq!(first_b, 4); // 3 warmup + 1 steady fwd
+        // Last stage alternates immediately.
+        assert_eq!(s.ops[3][0].phase, PipePhase::Forward);
+        assert_eq!(s.ops[3][1].phase, PipePhase::Backward);
+    }
+
+    #[test]
+    fn distca_tick_count_matches_1f1b_span() {
+        // §4.1: "without increasing the number of ticks per iteration":
+        // 2(m + p - 1) unit ticks.
+        for (p, m) in [(2usize, 4usize), (4, 8), (4, 16)] {
+            let s = distca_ticks(p, m);
+            assert_eq!(s.tick_phases.len(), 2 * (m + p - 1), "p={p} m={m}");
+        }
+    }
+
+    #[test]
+    fn distca_ticks_phase_aligned() {
+        // Within a tick, all active stages run the same phase by
+        // construction; verify rows match tick_phases lengths.
+        let s = distca_ticks(4, 8);
+        assert_eq!(s.tick_ops.len(), s.tick_phases.len());
+        for row in &s.tick_ops {
+            assert_eq!(row.len(), 4);
+        }
+    }
+
+    #[test]
+    fn distca_dependencies_hold() {
+        // fwd wavefront: stage s runs mb k at forward-tick s+k, so at any
+        // prefix of ticks, if stage s has run fwd(k), stage s-1 must have.
+        let p = 4;
+        let m = 6;
+        let s = distca_ticks(p, m);
+        let mut done_f = vec![vec![false; m]; p];
+        let mut done_b = vec![vec![false; m]; p];
+        for (t, row) in s.tick_ops.iter().enumerate() {
+            for stage in 0..p {
+                if let Some(mb) = row[stage] {
+                    match s.tick_phases[t] {
+                        PipePhase::Forward => {
+                            if stage > 0 {
+                                assert!(done_f[stage - 1][mb],
+                                    "t={t} stage={stage} mb={mb}: upstream fwd missing");
+                            }
+                            done_f[stage][mb] = true;
+                        }
+                        PipePhase::Backward => {
+                            assert!(done_f[stage][mb],
+                                "t={t} stage={stage} mb={mb}: bwd before fwd");
+                            if stage + 1 < p {
+                                assert!(done_b[stage + 1][mb],
+                                    "t={t} stage={stage} mb={mb}: downstream bwd missing");
+                            }
+                            done_b[stage][mb] = true;
+                        }
+                    }
+                }
+            }
+        }
+        assert!(done_b.iter().all(|v| v.iter().all(|&b| b)));
+    }
+
+    #[test]
+    fn distca_has_idle_warmup_slots() {
+        let s = distca_ticks(4, 8);
+        assert!(idle_ticks(&s) > 0, "warm-up/drain must leave server ticks");
+    }
+
+    #[test]
+    fn single_stage_degenerates() {
+        let s = distca_ticks(1, 4);
+        s.validate().unwrap();
+        assert_eq!(s.tick_phases.len(), 8);
+        assert_eq!(idle_ticks(&s), 0);
+    }
+}

@@ -1,0 +1,172 @@
+//! 4D parallel topology: rank ↔ (dp, pp, cp, tp) coordinate mapping over a
+//! physical cluster. Rank order follows Megatron convention: TP innermost
+//! (contiguous GPUs in a node), then CP, then PP, then DP outermost.
+
+use crate::config::ClusterConfig;
+
+/// Parallel topology descriptor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    pub dp: usize,
+    pub pp: usize,
+    pub cp: usize,
+    pub tp: usize,
+}
+
+/// A coordinate in the 4D mesh.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Coord {
+    pub dp: usize,
+    pub pp: usize,
+    pub cp: usize,
+    pub tp: usize,
+}
+
+impl Topology {
+    pub fn new(dp: usize, pp: usize, cp: usize, tp: usize) -> Self {
+        assert!(dp * pp * cp * tp > 0, "zero-size topology");
+        Self { dp, pp, cp, tp }
+    }
+
+    /// Build from a run config and validate against the cluster size.
+    pub fn from_degrees(n_gpus: usize, tp: usize, pp: usize, cp: usize) -> Self {
+        assert!(
+            n_gpus % (tp * pp * cp) == 0,
+            "{n_gpus} GPUs not divisible by tp*pp*cp = {}",
+            tp * pp * cp
+        );
+        Self::new(n_gpus / (tp * pp * cp), pp, cp, tp)
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.dp * self.pp * self.cp * self.tp
+    }
+
+    /// Global rank of a coordinate (TP fastest-varying).
+    pub fn rank_of(&self, c: Coord) -> usize {
+        assert!(c.dp < self.dp && c.pp < self.pp && c.cp < self.cp && c.tp < self.tp);
+        ((c.dp * self.pp + c.pp) * self.cp + c.cp) * self.tp + c.tp
+    }
+
+    /// Coordinate of a global rank.
+    pub fn coord_of(&self, rank: usize) -> Coord {
+        assert!(rank < self.world_size());
+        let tp = rank % self.tp;
+        let rest = rank / self.tp;
+        let cp = rest % self.cp;
+        let rest = rest / self.cp;
+        let pp = rest % self.pp;
+        let dp = rest / self.pp;
+        Coord { dp, pp, cp, tp }
+    }
+
+    /// Ranks forming the DP group of a coordinate (vary dp, fix others).
+    pub fn dp_group(&self, c: Coord) -> Vec<usize> {
+        (0..self.dp)
+            .map(|dp| self.rank_of(Coord { dp, ..c }))
+            .collect()
+    }
+
+    /// Ranks forming the CP group of a coordinate.
+    pub fn cp_group(&self, c: Coord) -> Vec<usize> {
+        (0..self.cp)
+            .map(|cp| self.rank_of(Coord { cp, ..c }))
+            .collect()
+    }
+
+    /// Ranks forming the PP group (the pipeline) of a coordinate.
+    pub fn pp_group(&self, c: Coord) -> Vec<usize> {
+        (0..self.pp)
+            .map(|pp| self.rank_of(Coord { pp, ..c }))
+            .collect()
+    }
+
+    /// Ranks forming the TP group of a coordinate.
+    pub fn tp_group(&self, c: Coord) -> Vec<usize> {
+        (0..self.tp)
+            .map(|tp| self.rank_of(Coord { tp, ..c }))
+            .collect()
+    }
+
+    /// Is a TP group contained in one node? (§2.2: TP beyond a node is
+    /// unaffordable; the paper fixes TP=8 = one DGX node.)
+    pub fn tp_within_node(&self, cluster: &ClusterConfig) -> bool {
+        self.tp <= cluster.gpus_per_node && cluster.gpus_per_node % self.tp == 0
+    }
+
+    /// Number of "model replicas" whose attention-server pools DistCA can
+    /// draw from: every GPU participates, so this is just world size; kept
+    /// as a named method for readability at call sites.
+    pub fn n_attention_servers(&self) -> usize {
+        self.world_size()
+    }
+
+    /// Logical device index (dp, cp) that owns context-independent
+    /// compute — used when TP groups act as one logical device (all TP
+    /// ranks hold the same tokens).
+    pub fn n_logical_devices(&self) -> usize {
+        self.dp * self.pp * self.cp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_coord_roundtrip() {
+        let t = Topology::new(4, 2, 2, 8);
+        for rank in 0..t.world_size() {
+            let c = t.coord_of(rank);
+            assert_eq!(t.rank_of(c), rank);
+        }
+    }
+
+    #[test]
+    fn tp_contiguous() {
+        let t = Topology::new(2, 2, 1, 8);
+        let c = t.coord_of(0);
+        let group = t.tp_group(c);
+        assert_eq!(group, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn group_sizes() {
+        let t = Topology::new(4, 2, 2, 8);
+        let c = t.coord_of(17);
+        assert_eq!(t.dp_group(c).len(), 4);
+        assert_eq!(t.pp_group(c).len(), 2);
+        assert_eq!(t.cp_group(c).len(), 2);
+        assert_eq!(t.tp_group(c).len(), 8);
+    }
+
+    #[test]
+    fn groups_share_fixed_coords() {
+        let t = Topology::new(4, 2, 2, 8);
+        let c = t.coord_of(33);
+        for &r in &t.dp_group(c) {
+            let rc = t.coord_of(r);
+            assert_eq!((rc.pp, rc.cp, rc.tp), (c.pp, c.cp, c.tp));
+        }
+    }
+
+    #[test]
+    fn from_degrees() {
+        let t = Topology::from_degrees(64, 8, 2, 2);
+        assert_eq!(t.dp, 2);
+        assert_eq!(t.world_size(), 64);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_degrees_indivisible() {
+        Topology::from_degrees(60, 8, 2, 2);
+    }
+
+    #[test]
+    fn tp_node_check() {
+        let c = ClusterConfig::h200(4);
+        assert!(Topology::new(4, 1, 1, 8).tp_within_node(&c));
+        assert!(!Topology::new(2, 1, 1, 16).tp_within_node(&c));
+    }
+}

@@ -1,0 +1,169 @@
+//! CA-task execution on the real (CPU PJRT) backend: the attention-server
+//! compute primitive.
+//!
+//! One `CaExecutor` wraps one compiled `ca_fwd_<Tq>x<Tkv>_*.hlo.txt`
+//! artifact. Attention servers batch their assigned CA-tasks into the
+//! artifact's packed layout (padding to the fixed AOT shape — one
+//! compiled executable per size variant, §Runtime in DESIGN.md) and run
+//! a single fused kernel call, exactly the composability contract the
+//! kernel exposes.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::client::{literal_f32, literal_i32, Runtime};
+
+/// Kernel block size (matches `python/compile/kernels/core_attention.py`).
+pub const BLOCK_Q: usize = 128;
+
+/// One CA-task's tensors, in the packed layout.
+#[derive(Debug, Clone)]
+pub struct CaTaskTensors {
+    /// `[q_len, n_heads, d]` flattened.
+    pub q: Vec<f32>,
+    /// `[kv_len, n_kv_heads, d]` flattened (K).
+    pub k: Vec<f32>,
+    /// same shape as `k` (V).
+    pub v: Vec<f32>,
+    pub q_len: usize,
+    pub kv_len: usize,
+}
+
+/// A compiled fused-CA executable of fixed packed shape.
+pub struct CaExecutor {
+    exe: std::sync::Arc<xla::PjRtLoadedExecutable>,
+    pub tq: usize,
+    pub tkv: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+}
+
+impl CaExecutor {
+    /// Load `ca_fwd_<tq>x<tkv>_h<h>kv<hkv>d<d>.hlo.txt` from `dir`.
+    pub fn load(
+        rt: &Runtime,
+        dir: &Path,
+        tq: usize,
+        tkv: usize,
+        n_heads: usize,
+        n_kv_heads: usize,
+        head_dim: usize,
+    ) -> Result<CaExecutor> {
+        let name = format!("ca_fwd_{tq}x{tkv}_h{n_heads}kv{n_kv_heads}d{head_dim}.hlo.txt");
+        let exe = rt.load(&dir.join(name))?;
+        Ok(CaExecutor {
+            exe,
+            tq,
+            tkv,
+            n_heads,
+            n_kv_heads,
+            head_dim,
+        })
+    }
+
+    fn q_row(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    fn kv_row(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    /// Execute a fused batch of CA-tasks. Tasks are packed back-to-back
+    /// (q rows must be BLOCK_Q-aligned per task); the remainder of the
+    /// fixed AOT shape is padding (valid=0 blocks produce zeros).
+    /// Returns each task's output rows `[q_len, n_heads, d]`.
+    pub fn run_batch(&self, rt: &Runtime, tasks: &[CaTaskTensors]) -> Result<Vec<Vec<f32>>> {
+        let q_row = self.q_row();
+        let kv_row = self.kv_row();
+        let mut q = vec![0.0f32; self.tq * q_row];
+        let mut k = vec![0.0f32; self.tkv * kv_row];
+        let mut v = vec![0.0f32; self.tkv * kv_row];
+        let n_blocks = self.tq / BLOCK_Q;
+        let mut meta = vec![0i32; n_blocks * 4];
+
+        let mut q_ofs = 0usize;
+        let mut kv_ofs = 0usize;
+        for t in tasks {
+            anyhow::ensure!(t.q_len % BLOCK_Q == 0, "task q_len {} not aligned", t.q_len);
+            anyhow::ensure!(t.q_len <= t.kv_len, "q_len > kv_len");
+            anyhow::ensure!(q_ofs + t.q_len <= self.tq, "batch overflows Tq={}", self.tq);
+            anyhow::ensure!(kv_ofs + t.kv_len <= self.tkv, "batch overflows Tkv={}", self.tkv);
+            anyhow::ensure!(t.q.len() == t.q_len * q_row, "q payload shape");
+            anyhow::ensure!(t.k.len() == t.kv_len * kv_row, "k payload shape");
+            q[q_ofs * q_row..(q_ofs + t.q_len) * q_row].copy_from_slice(&t.q);
+            k[kv_ofs * kv_row..(kv_ofs + t.kv_len) * kv_row].copy_from_slice(&t.k);
+            v[kv_ofs * kv_row..(kv_ofs + t.kv_len) * kv_row].copy_from_slice(&t.v);
+            for b in 0..t.q_len / BLOCK_Q {
+                let blk = q_ofs / BLOCK_Q + b;
+                meta[blk * 4] = kv_ofs as i32;
+                meta[blk * 4 + 1] = t.kv_len as i32;
+                meta[blk * 4 + 2] = (t.kv_len - t.q_len + b * BLOCK_Q) as i32;
+                meta[blk * 4 + 3] = 1;
+            }
+            q_ofs += t.q_len;
+            kv_ofs += t.kv_len;
+        }
+
+        let inputs = [
+            literal_f32(&q, &[self.tq as i64, self.n_heads as i64, self.head_dim as i64])?,
+            literal_f32(&k, &[self.tkv as i64, self.n_kv_heads as i64, self.head_dim as i64])?,
+            literal_f32(&v, &[self.tkv as i64, self.n_kv_heads as i64, self.head_dim as i64])?,
+            literal_i32(&meta, &[n_blocks as i64, 4])?,
+        ];
+        let out = rt.execute_tuple(&self.exe, &inputs).context("CA execute")?;
+        anyhow::ensure!(out.len() == 1, "CA artifact returns one tensor");
+        let flat: Vec<f32> = out[0].to_vec::<f32>()?;
+
+        let mut results = Vec::with_capacity(tasks.len());
+        let mut ofs = 0usize;
+        for t in tasks {
+            results.push(flat[ofs * q_row..(ofs + t.q_len) * q_row].to_vec());
+            ofs += t.q_len;
+        }
+        Ok(results)
+    }
+
+    /// Can this executor hold the batch?
+    pub fn fits(&self, tasks: &[CaTaskTensors]) -> bool {
+        let q: usize = tasks.iter().map(|t| t.q_len).sum();
+        let kv: usize = tasks.iter().map(|t| t.kv_len).sum();
+        q <= self.tq && kv <= self.tkv
+    }
+}
+
+/// Generate a deterministic pseudo-random CA task (test/demo helper).
+pub fn synthetic_task(
+    rng: &mut crate::util::rng::Rng,
+    q_len: usize,
+    kv_len: usize,
+    n_heads: usize,
+    n_kv_heads: usize,
+    head_dim: usize,
+) -> CaTaskTensors {
+    let mut fill = |n: usize| -> Vec<f32> {
+        (0..n).map(|_| rng.gen_f64(-1.0, 1.0) as f32).collect()
+    };
+    CaTaskTensors {
+        q: fill(q_len * n_heads * head_dim),
+        k: fill(kv_len * n_kv_heads * head_dim),
+        v: fill(kv_len * n_kv_heads * head_dim),
+        q_len,
+        kv_len,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_task_shapes() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let t = synthetic_task(&mut rng, 128, 256, 4, 2, 16);
+        assert_eq!(t.q.len(), 128 * 4 * 16);
+        assert_eq!(t.k.len(), 256 * 2 * 16);
+    }
+}

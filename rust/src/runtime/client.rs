@@ -1,0 +1,116 @@
+//! PJRT client wrapper with an executable cache.
+//!
+//! Wire: `HloModuleProto::from_text_file` → `XlaComputation::from_proto`
+//! → `client.compile` → `execute`. Compilation is the expensive step
+//! (seconds for the train step), so executables are cached by path — the
+//! steady-state request path is execute-only (§Perf).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+/// Shared PJRT runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached).
+    pub fn load(&self, path: &Path) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(path) {
+            return Ok(std::sync::Arc::clone(exe));
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(path.to_path_buf(), std::sync::Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Execute with literal inputs; unwraps the 1-element replica/partition
+    /// nesting and returns the output buffers.
+    pub fn execute(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut out = exe.execute::<xla::Literal>(inputs).context("execute")?;
+        anyhow::ensure!(!out.is_empty() && !out[0].is_empty(), "empty result");
+        Ok(out.remove(0))
+    }
+
+    /// Execute a `return_tuple=True` artifact and decompose the tuple.
+    pub fn execute_tuple(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let bufs = self.execute(exe, inputs)?;
+        let lit = bufs[0].to_literal_sync().context("device->host")?;
+        lit.to_tuple().context("untuple")
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Scalar literals.
+pub fn scalar_i32(x: i32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_builders_check_shape() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        let i = literal_i32(&[1, 2], &[2]).unwrap();
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![1, 2]);
+    }
+
+    // PJRT-dependent tests live in rust/tests/integration_runtime.rs and
+    // skip when artifacts are absent.
+}

@@ -1,0 +1,25 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `make artifacts`) and executes them on the CPU PJRT client.
+//! Python never runs here — HLO text is the only thing that crosses the
+//! language boundary (see /opt/xla-example/README.md for why text, not
+//! serialized protos).
+
+pub mod ca_exec;
+pub mod client;
+pub mod train;
+
+pub use ca_exec::CaExecutor;
+pub use client::Runtime;
+pub use train::{TrainDriver, TrainReport};
+
+/// Default artifacts directory, overridable via `DISTCA_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("DISTCA_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+/// True if the AOT artifacts exist (integration tests skip otherwise).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("train_step.hlo.txt").exists()
+}

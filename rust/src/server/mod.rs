@@ -1,0 +1,226 @@
+//! Attention servers (§4.1): the worker pool that *executes* CA-tasks.
+//!
+//! On the paper's testbed an attention server is a GPU role; here each
+//! server is a worker thread owning a compiled fused-CA executable
+//! (in-place time-sharing becomes thread scheduling on the host CPU —
+//! same control structure, different silicon). The coordinator:
+//!
+//!  1. runs the §4.2 scheduler to get a [`Plan`],
+//!  2. dispatches each assignment's Q/KV tensors over the [`Transport`]
+//!     (the NVSHMEM all-to-all stand-in),
+//!  3. servers batch everything they received for a tick into ONE fused
+//!     kernel call (composability) and send outputs home,
+//!  4. the coordinator reassembles per-document outputs.
+//!
+//! `examples/attention_server_demo` drives this end-to-end and checks the
+//! disaggregated result bit-for-bit against a monolithic kernel call.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::exchange::transport::{ChannelTransport, Message, Transport};
+use crate::runtime::ca_exec::{CaExecutor, CaTaskTensors};
+use crate::runtime::Runtime;
+
+// NOTE: the `xla` crate's PJRT handles are intentionally !Send (Rc + raw
+// pointers), so every server thread owns a *private* PJRT client — which
+// is the honest analogue of the paper's setup anyway: each attention
+// server is an independent device with its own compiled executable.
+
+/// A CA request as shipped to a server: tensors plus routing tag.
+struct WireTask {
+    tensors: CaTaskTensors,
+    /// (doc, q_start) packed into the message tag for reassembly.
+    tag: u64,
+    home: usize,
+}
+
+fn pack_tag(doc: u32, q_start: u32) -> u64 {
+    ((doc as u64) << 32) | q_start as u64
+}
+
+fn unpack_tag(tag: u64) -> (u32, u32) {
+    ((tag >> 32) as u32, tag as u32)
+}
+
+/// Serialize a task into one message payload:
+/// [q_len, kv_len, q..., k..., v...].
+fn encode(t: &WireTask) -> Message {
+    let mut payload = Vec::with_capacity(2 + t.tensors.q.len() + 2 * t.tensors.k.len());
+    payload.push(t.tensors.q_len as f32);
+    payload.push(t.tensors.kv_len as f32);
+    payload.extend_from_slice(&t.tensors.q);
+    payload.extend_from_slice(&t.tensors.k);
+    payload.extend_from_slice(&t.tensors.v);
+    Message { src: t.home, tag: t.tag, payload }
+}
+
+fn decode(msg: &Message, n_heads: usize, n_kv_heads: usize, d: usize) -> (CaTaskTensors, u64, usize) {
+    let q_len = msg.payload[0] as usize;
+    let kv_len = msg.payload[1] as usize;
+    let q_sz = q_len * n_heads * d;
+    let kv_sz = kv_len * n_kv_heads * d;
+    let base = 2;
+    (
+        CaTaskTensors {
+            q: msg.payload[base..base + q_sz].to_vec(),
+            k: msg.payload[base + q_sz..base + q_sz + kv_sz].to_vec(),
+            v: msg.payload[base + q_sz + kv_sz..base + q_sz + 2 * kv_sz].to_vec(),
+            q_len,
+            kv_len,
+        },
+        msg.tag,
+        msg.src,
+    )
+}
+
+/// A dispatched CA-task description for the demo pool: which server runs
+/// it, plus its tensors and identity.
+pub struct DispatchedTask {
+    pub doc: u32,
+    pub q_start: usize,
+    pub server: usize,
+    pub home: usize,
+    pub tensors: CaTaskTensors,
+}
+
+/// Output of one CA-task, keyed for reassembly.
+#[derive(Debug, Clone)]
+pub struct TaskOutput {
+    pub doc: u32,
+    pub q_start: usize,
+    pub o: Vec<f32>,
+}
+
+/// Run a set of dispatched CA-tasks across `n_servers` worker threads,
+/// each executing ONE fused batch on its own [`CaExecutor`], returning
+/// outputs to their home ranks over the transport.
+///
+/// The runtime (PJRT client) is shared; compiled executables are cached
+/// inside it, so each thread's `CaExecutor::load` is a cache hit after
+/// the first.
+pub fn run_disaggregated(
+    artifacts: &std::path::Path,
+    n_servers: usize,
+    tasks: Vec<DispatchedTask>,
+    tq: usize,
+    tkv: usize,
+    n_heads: usize,
+    n_kv_heads: usize,
+    head_dim: usize,
+) -> Result<Vec<TaskOutput>> {
+    let fabric = Arc::new(ChannelTransport::new(2 * n_servers));
+    // Ranks [0, n) are servers; ranks [n, 2n) are the home-side receive
+    // queues for outputs.
+    let mut expected_outputs = 0usize;
+    let mut per_server_count = vec![0usize; n_servers];
+    for t in &tasks {
+        per_server_count[t.server] += 1;
+        expected_outputs += 1;
+    }
+    // Dispatch phase (the all-to-all).
+    for t in &tasks {
+        let wire = WireTask {
+            tensors: t.tensors.clone(),
+            tag: pack_tag(t.doc, t.q_start as u32),
+            home: t.home,
+        };
+        fabric.send(t.server, encode(&wire));
+    }
+
+    // Server phase: worker threads batch + execute + return.
+    let mut handles = Vec::new();
+    for s in 0..n_servers {
+        let fabric = Arc::clone(&fabric);
+        let artifacts = artifacts.to_path_buf();
+        let n_tasks = per_server_count[s];
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            if n_tasks == 0 {
+                return Ok(());
+            }
+            let rt = Runtime::cpu()?;
+            let exec = CaExecutor::load(&rt, &artifacts, tq, tkv, n_heads, n_kv_heads, head_dim)
+                .context("loading CA executable")?;
+            let mut batch = Vec::with_capacity(n_tasks);
+            let mut tags = Vec::with_capacity(n_tasks);
+            let mut homes = Vec::with_capacity(n_tasks);
+            for _ in 0..n_tasks {
+                let msg = fabric.recv(s);
+                let (tensors, tag, home) = decode(&msg, n_heads, n_kv_heads, head_dim);
+                batch.push(tensors);
+                tags.push(tag);
+                homes.push(home);
+            }
+            anyhow::ensure!(
+                CaExecutor::fits(&exec, &batch),
+                "server {s}: batch exceeds artifact shape"
+            );
+            let outputs = exec.run_batch(&rt, &batch)?;
+            for ((o, tag), home) in outputs.into_iter().zip(tags).zip(homes) {
+                fabric.send(
+                    n_servers + home,
+                    Message { src: s, tag, payload: o },
+                );
+            }
+            Ok(())
+        }));
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow::anyhow!("server thread panicked"))??;
+    }
+
+    // Gather phase: collect outputs from each home queue.
+    let mut outputs = Vec::with_capacity(expected_outputs);
+    let mut received = 0usize;
+    'outer: for home in 0..n_servers {
+        while let Some(msg) = fabric.try_recv(n_servers + home) {
+            let (doc, q_start) = unpack_tag(msg.tag);
+            outputs.push(TaskOutput { doc, q_start: q_start as usize, o: msg.payload });
+            received += 1;
+            if received == expected_outputs {
+                break 'outer;
+            }
+        }
+    }
+    anyhow::ensure!(
+        outputs.len() == expected_outputs,
+        "lost outputs: {} of {expected_outputs}",
+        outputs.len()
+    );
+    Ok(outputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tag_roundtrip() {
+        let tag = pack_tag(0xDEAD, 0xBEEF);
+        assert_eq!(unpack_tag(tag), (0xDEAD, 0xBEEF));
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let t = WireTask {
+            tensors: CaTaskTensors {
+                q: vec![1.0; 128 * 2 * 4],
+                k: vec![2.0; 256 * 1 * 4],
+                v: vec![3.0; 256 * 1 * 4],
+                q_len: 128,
+                kv_len: 256,
+            },
+            tag: pack_tag(3, 128),
+            home: 1,
+        };
+        let msg = encode(&t);
+        let (tensors, tag, home) = decode(&msg, 2, 1, 4);
+        assert_eq!(tensors.q_len, 128);
+        assert_eq!(tensors.kv_len, 256);
+        assert_eq!(tensors.q, t.tensors.q);
+        assert_eq!(tensors.v, t.tensors.v);
+        assert_eq!(tag, t.tag);
+        assert_eq!(home, 1);
+    }
+}

@@ -1,0 +1,18 @@
+//! Discrete-event cluster simulator — the substitute for the paper's
+//! 64–512 H200 testbed (see DESIGN.md §2).
+//!
+//! The simulator executes *the same plans* the real coordinator emits:
+//! a training iteration becomes a dependency DAG of compute tasks (pinned
+//! to devices) and communication tasks (pinned to links), scheduled
+//! as-soon-as-possible by [`engine::Engine`]. Strategy executors in
+//! [`strategies`] build the DAG for each balancing scheme — plain packed
+//! DP, per-document CP, WLB-ideal, and DistCA — and [`report`] collects
+//! the quantities the paper plots (iteration time, idle fraction, memory
+//! divergence, communication share).
+
+pub mod engine;
+pub mod report;
+pub mod strategies;
+
+pub use engine::{Engine, TaskId};
+pub use report::IterationReport;

@@ -1,0 +1,149 @@
+//! Simulation outputs: the per-iteration quantities the paper reports.
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Result of simulating one training iteration (or the average of many).
+#[derive(Debug, Clone)]
+pub struct IterationReport {
+    pub strategy: String,
+    /// End-to-end iteration time (seconds).
+    pub iter_time: f64,
+    /// Total tokens processed this iteration.
+    pub tokens: usize,
+    /// Per logical-device *compute busy* time (seconds) — used for the
+    /// idle-fraction metric of Fig. 4b.
+    pub device_busy: Vec<f64>,
+    /// Per logical-device peak memory (bytes, per GPU within the device's
+    /// TP group).
+    pub device_mem: Vec<f64>,
+    /// Total communication volume (bytes) attributable to the balancing
+    /// scheme (CP all-gather or CAD dispatch).
+    pub comm_bytes: f64,
+    /// Communication time NOT hidden by compute (seconds).
+    pub comm_exposed: f64,
+    /// Did any device exceed HBM?
+    pub oom: bool,
+    /// Free-form config description (e.g. "dp=4 cp=2").
+    pub config: String,
+}
+
+impl IterationReport {
+    /// Tokens per second.
+    pub fn throughput(&self) -> f64 {
+        if self.iter_time <= 0.0 {
+            return 0.0;
+        }
+        self.tokens as f64 / self.iter_time
+    }
+
+    /// Fig. 4b's metric: mean idle time / iteration time across devices.
+    pub fn idle_fraction(&self) -> f64 {
+        if self.iter_time <= 0.0 || self.device_busy.is_empty() {
+            return 0.0;
+        }
+        let mean_busy = stats::mean(&self.device_busy);
+        (1.0 - mean_busy / self.iter_time).max(0.0)
+    }
+
+    /// Fig. 4a's metric: max/min memory across devices.
+    pub fn memory_divergence(&self) -> f64 {
+        if self.device_mem.is_empty() {
+            return 1.0;
+        }
+        stats::divergence(&self.device_mem)
+    }
+
+    pub fn max_memory(&self) -> f64 {
+        stats::max(&self.device_mem)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("strategy", Json::Str(self.strategy.clone())),
+            ("config", Json::Str(self.config.clone())),
+            ("iter_time_s", Json::Num(self.iter_time)),
+            ("tokens", Json::Num(self.tokens as f64)),
+            ("throughput_tok_s", Json::Num(self.throughput())),
+            ("idle_fraction", Json::Num(self.idle_fraction())),
+            ("memory_divergence", Json::Num(self.memory_divergence())),
+            ("max_memory_bytes", Json::Num(self.max_memory())),
+            ("comm_bytes", Json::Num(self.comm_bytes)),
+            ("comm_exposed_s", Json::Num(self.comm_exposed)),
+            ("oom", Json::Bool(self.oom)),
+        ])
+    }
+
+    /// Average several per-batch reports (paper: mean over 30 sampled
+    /// batches). OOM if any batch OOMs; memory is the max.
+    pub fn average(reports: &[IterationReport]) -> IterationReport {
+        assert!(!reports.is_empty());
+        let n = reports.len() as f64;
+        let ndev = reports[0].device_busy.len();
+        let mut busy = vec![0.0; ndev];
+        let mut mem = vec![0.0f64; reports[0].device_mem.len()];
+        for r in reports {
+            for (i, b) in r.device_busy.iter().enumerate() {
+                busy[i] += b / n;
+            }
+            for (i, m) in r.device_mem.iter().enumerate() {
+                mem[i] = mem[i].max(*m);
+            }
+        }
+        IterationReport {
+            strategy: reports[0].strategy.clone(),
+            iter_time: reports.iter().map(|r| r.iter_time).sum::<f64>() / n,
+            tokens: (reports.iter().map(|r| r.tokens).sum::<usize>() as f64 / n) as usize,
+            device_busy: busy,
+            device_mem: mem,
+            comm_bytes: reports.iter().map(|r| r.comm_bytes).sum::<f64>() / n,
+            comm_exposed: reports.iter().map(|r| r.comm_exposed).sum::<f64>() / n,
+            oom: reports.iter().any(|r| r.oom),
+            config: reports[0].config.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rep(iter: f64, busy: Vec<f64>) -> IterationReport {
+        IterationReport {
+            strategy: "test".into(),
+            iter_time: iter,
+            tokens: 1000,
+            device_busy: busy,
+            device_mem: vec![1e9, 2e9],
+            comm_bytes: 0.0,
+            comm_exposed: 0.0,
+            oom: false,
+            config: String::new(),
+        }
+    }
+
+    #[test]
+    fn throughput_and_idle() {
+        let r = rep(2.0, vec![2.0, 1.0]);
+        assert_eq!(r.throughput(), 500.0);
+        assert!((r.idle_fraction() - 0.25).abs() < 1e-12);
+        assert_eq!(r.memory_divergence(), 2.0);
+    }
+
+    #[test]
+    fn average_combines() {
+        let a = rep(1.0, vec![1.0, 1.0]);
+        let b = rep(3.0, vec![3.0, 1.0]);
+        let avg = IterationReport::average(&[a, b]);
+        assert_eq!(avg.iter_time, 2.0);
+        assert_eq!(avg.device_busy, vec![2.0, 1.0]);
+        assert!(!avg.oom);
+    }
+
+    #[test]
+    fn json_has_fields() {
+        let j = rep(1.0, vec![1.0]).to_json();
+        assert!(j.get("throughput_tok_s").is_some());
+        assert!(j.get("idle_fraction").is_some());
+    }
+}

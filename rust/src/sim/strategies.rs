@@ -1,0 +1,850 @@
+//! Strategy executors: build and time one training iteration under each
+//! balancing scheme. All strategies share the same cost primitives
+//! ([`SimParams`]) so comparisons isolate the *scheduling* differences —
+//! exactly the paper's experimental design.
+//!
+//! Conventions:
+//! * a **logical device** is one TP group (TP=8 ⇒ one DGX node): TP
+//!   shards every GEMM and attention head-wise over the same tokens, so
+//!   the group acts as a single device with `tp×` the FLOP rate;
+//! * CA time is predicted by the [`Profiler`] (captures the Fig.-5
+//!   sub-128-token tile penalty); linear time by the analytic β model;
+//! * backward costs 2× (linear) / 2.5× (CA, recompute) forward;
+//! * inter-device traffic crosses InfiniBand (logical device = node).
+
+use crate::config::{ClusterConfig, ModelConfig};
+use crate::coordinator::{schedule, Item, Plan, Profiler, SchedulerCfg};
+use crate::coordinator::pingpong::{
+    layer_time_pingpong, layer_time_signal, layer_time_single_stream, split_nano,
+};
+use crate::coordinator::scheduler::items_from_chunks;
+use crate::data::{pack_fixed, pack_variable_length, Chunk, Document};
+use crate::model::flops::{CA_BWD_FACTOR, LINEAR_BWD_FACTOR};
+use crate::model::{FlopsModel, MemoryModel};
+use crate::parallel::pipeline::{distca_ticks, one_f_one_b, PipePhase};
+use crate::sim::engine::Engine;
+use crate::sim::report::IterationReport;
+
+/// Communication-handling ablation (Fig. 11).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommMode {
+    /// Ping-pong overlap (DistCA proper).
+    PingPong,
+    /// Communication serialized with compute ("Single Stream").
+    SingleStream,
+    /// 1-byte messages — pure compute-balance floor ("Signal").
+    Signal,
+}
+
+/// Shared cost primitives for one simulated configuration.
+#[derive(Debug, Clone)]
+pub struct SimParams {
+    pub model: ModelConfig,
+    pub cluster: ClusterConfig,
+    pub f: FlopsModel,
+    pub mem: MemoryModel,
+    pub prof: Profiler,
+    pub tp: usize,
+    pub pp: usize,
+    /// Scheduler tolerance ε (DistCA only).
+    pub tolerance: f64,
+    pub comm_mode: CommMode,
+}
+
+impl SimParams {
+    pub fn new(model: ModelConfig, cluster: ClusterConfig, tp: usize, pp: usize) -> SimParams {
+        let f = FlopsModel::new(&model);
+        let mem = MemoryModel::new(&model);
+        let prof = Profiler::analytic(&f, &cluster);
+        SimParams {
+            model,
+            cluster,
+            f,
+            mem,
+            prof,
+            tp,
+            pp,
+            // With the Appendix-A overlap guard in the scheduler, tighter
+            // balance is free whenever communication hides — Fig. 12
+            // sweeps ε explicitly; 0.02 is the tuned default.
+            tolerance: 0.02,
+            comm_mode: CommMode::PingPong,
+        }
+    }
+
+    /// Logical devices (TP groups) in the cluster.
+    pub fn n_logical(&self) -> usize {
+        self.cluster.n_gpus() / self.tp
+    }
+
+    /// Aggregate linear-layer FLOP rate of one logical device.
+    pub fn rate_linear(&self) -> f64 {
+        self.tp as f64 * self.cluster.linear_flops()
+    }
+
+    /// Forward time of one layer's context-independent part for `tokens`
+    /// on one logical device.
+    pub fn linear_layer_fwd(&self, tokens: usize) -> f64 {
+        self.f.linear_fwd(tokens) / self.rate_linear()
+    }
+
+    /// Forward CA time of a set of pieces (doc slices) on one logical
+    /// device, one layer, via the profiler (TP splits the heads).
+    pub fn ca_layer_fwd_pieces(&self, pieces: &[(usize, usize)]) -> f64 {
+        let shapes: Vec<(f64, f64)> = pieces
+            .iter()
+            .map(|&(q, kv)| (q as f64, kv as f64))
+            .collect();
+        self.prof.predict_batch(&shapes) / self.tp as f64
+    }
+
+    /// Layers resident on one PP stage.
+    pub fn layers_per_stage(&self) -> f64 {
+        self.model.n_layers as f64 / self.pp as f64
+    }
+
+    /// Full fwd+bwd time of one *chunk* passing through one PP stage
+    /// (all its layers), given its linear tokens and CA piece shapes.
+    fn stage_time(&self, tokens: usize, pieces: &[(usize, usize)], phase: PipePhase) -> f64 {
+        let lin = self.linear_layer_fwd(tokens);
+        let ca = self.ca_layer_fwd_pieces(pieces);
+        let per_layer = match phase {
+            PipePhase::Forward => lin + ca,
+            PipePhase::Backward => lin * LINEAR_BWD_FACTOR + ca * CA_BWD_FACTOR,
+        };
+        per_layer * self.layers_per_stage()
+    }
+}
+
+/// CA piece shapes (q_len, kv_len) of a packed chunk under causal masking.
+fn chunk_pieces(chunk: &Chunk) -> Vec<(usize, usize)> {
+    chunk
+        .pieces
+        .iter()
+        .map(|p| (p.len, p.offset + p.len))
+        .collect()
+}
+
+/// Assign `chunks` to `n_groups` DP groups round-robin, returning the
+/// per-group microbatch lists (chunk indices).
+fn assign_round_robin(n_chunks: usize, n_groups: usize) -> Vec<Vec<usize>> {
+    let mut groups = vec![Vec::new(); n_groups];
+    for c in 0..n_chunks {
+        groups[c % n_groups].push(c);
+    }
+    groups
+}
+
+/// Per-GPU memory of a stage holding `resident_tokens` of activations
+/// plus `kv_tokens` gathered KV token-layers.
+fn device_mem(p: &SimParams, resident_tokens: usize, kv_tokens: f64) -> f64 {
+    p.mem
+        .breakdown(resident_tokens, kv_tokens, p.tp, p.pp)
+        .total()
+}
+
+// ---------------------------------------------------------------------
+// Baseline 1: fixed-size packing + plain DP (with optional PP).
+// ---------------------------------------------------------------------
+
+/// Simulate one iteration of fixed-size packing + DP (+PP when `p.pp>1`).
+pub fn run_packed_dp(docs: &[Document], chunk_tokens: usize, p: &SimParams) -> IterationReport {
+    let chunks = pack_fixed(docs, chunk_tokens);
+    run_chunks_dp(&chunks, chunk_tokens, p, "Packed+DP", 1)
+}
+
+/// Shared DP/PP executor for chunk-per-microbatch strategies at a given
+/// CP degree (`cp=1` ⇒ no CP). Used by packed-DP, per-doc CP, and WLB.
+fn run_chunks_dp(
+    chunks: &[Chunk],
+    chunk_tokens: usize,
+    p: &SimParams,
+    name: &str,
+    cp: usize,
+) -> IterationReport {
+    let n_logical = p.n_logical();
+    assert!(n_logical % (p.pp * cp) == 0, "logical {n_logical} not divisible");
+    let n_groups = n_logical / (p.pp * cp);
+    let groups = assign_round_robin(chunks.len(), n_groups);
+    let total_tokens: usize = chunks.iter().map(|c| c.tokens()).sum();
+
+    // Per-(group, microbatch) stage durations. Under CP, each rank holds
+    // 1/cp of every document (head-tail), with the tile penalty for tiny
+    // shards, plus the KV all-gather before CA of every layer.
+    let mut iter_time = 0.0f64;
+    let mut device_busy = vec![0.0; n_logical];
+    let mut device_mem_v = vec![0.0; n_logical];
+    let mut comm_bytes = 0.0;
+    let mut comm_exposed = 0.0;
+    let mut oom = false;
+
+    for (g, mbs) in groups.iter().enumerate() {
+        // Durations per microbatch for this group.
+        let mut fwd = Vec::with_capacity(mbs.len());
+        let mut bwd = Vec::with_capacity(mbs.len());
+        let mut ag_per_stage = Vec::with_capacity(mbs.len());
+        for &ci in mbs {
+            let chunk = &chunks[ci];
+            let tokens_rank = chunk.tokens() / cp;
+            // CA pieces on the worst CP rank: head+tail per doc piece.
+            let pieces: Vec<(usize, usize)> = if cp == 1 {
+                chunk_pieces(chunk)
+            } else {
+                let mut v = Vec::new();
+                for piece in &chunk.pieces {
+                    for s in crate::parallel::cp::per_document_cp_shards(
+                        piece.doc, piece.len, cp,
+                    ) {
+                        if s.cp_rank == 0 {
+                            // rank 0 holds the widest pair incl. residue
+                            if s.width > 0 {
+                                v.push((s.width, piece.offset + s.head_start + s.width));
+                            }
+                            let tail_q = s.width + s.extra;
+                            if tail_q > 0 {
+                                v.push((
+                                    tail_q,
+                                    piece.offset + s.tail_start + tail_q,
+                                ));
+                            }
+                        }
+                    }
+                }
+                v
+            };
+            let f_t = p.stage_time(tokens_rank, &pieces, PipePhase::Forward);
+            let b_t = p.stage_time(tokens_rank, &pieces, PipePhase::Backward);
+            // All-gather of KV for the whole chunk, per layer, forward
+            // only (KV is retained for backward — the Fig. 3b memory toll).
+            let ag = if cp > 1 {
+                // TP shards the KV heads, so each GPU all-gathers 1/tp of
+                // the chunk's KV over its own NIC.
+                let bytes_per_rank = (chunk.tokens() / cp * p.model.kv_bytes_per_token())
+                    as f64
+                    / p.tp as f64;
+                comm_bytes += bytes_per_rank * (cp * p.tp) as f64 * p.layers_per_stage();
+                p.cluster.allgather_time(bytes_per_rank, cp, true) * p.layers_per_stage()
+            } else {
+                0.0
+            };
+            fwd.push(f_t + ag);
+            bwd.push(b_t);
+            ag_per_stage.push(ag);
+            comm_exposed += ag * p.pp as f64;
+        }
+
+        // Execute this group's pipeline (pp=1 collapses to a serial sum).
+        let sched = one_f_one_b(p.pp, mbs.len());
+        let mut eng = Engine::new(p.pp);
+        // task ids per (stage, mb, phase)
+        let mut fwd_id = vec![vec![usize::MAX; mbs.len()]; p.pp];
+        let mut bwd_id = vec![vec![usize::MAX; mbs.len()]; p.pp];
+        // We add ops stage-by-stage in program order; dependencies on
+        // other stages' ops may not exist yet, so do two passes: build in
+        // a global order that respects inter-stage deps. Simpler: iterate
+        // "rounds" until all ops placed.
+        let mut cursor = vec![0usize; p.pp];
+        let total_ops: usize = sched.ops.iter().map(|v| v.len()).sum();
+        let mut placed = 0usize;
+        while placed < total_ops {
+            let mut progressed = false;
+            for s in 0..p.pp {
+                while cursor[s] < sched.ops[s].len() {
+                    let op = sched.ops[s][cursor[s]];
+                    let (dep_ok, deps): (bool, Vec<usize>) = match op.phase {
+                        PipePhase::Forward => {
+                            if s == 0 {
+                                (true, vec![])
+                            } else if fwd_id[s - 1][op.mb] != usize::MAX {
+                                (true, vec![fwd_id[s - 1][op.mb]])
+                            } else {
+                                (false, vec![])
+                            }
+                        }
+                        PipePhase::Backward => {
+                            let mut d = Vec::new();
+                            let mut ok = true;
+                            if fwd_id[s][op.mb] != usize::MAX {
+                                d.push(fwd_id[s][op.mb]);
+                            } else {
+                                ok = false;
+                            }
+                            if s + 1 < p.pp {
+                                if bwd_id[s + 1][op.mb] != usize::MAX {
+                                    d.push(bwd_id[s + 1][op.mb]);
+                                } else {
+                                    ok = false;
+                                }
+                            }
+                            (ok, d)
+                        }
+                    };
+                    if !dep_ok {
+                        break;
+                    }
+                    let dur = match op.phase {
+                        PipePhase::Forward => fwd[op.mb],
+                        PipePhase::Backward => bwd[op.mb],
+                    };
+                    let id = eng.add_task(s, dur, &deps);
+                    match op.phase {
+                        PipePhase::Forward => fwd_id[s][op.mb] = id,
+                        PipePhase::Backward => bwd_id[s][op.mb] = id,
+                    }
+                    cursor[s] += 1;
+                    placed += 1;
+                    progressed = true;
+                }
+            }
+            assert!(progressed, "pipeline construction deadlocked");
+        }
+        let makespan = eng.run();
+        iter_time = iter_time.max(makespan);
+        let busy = eng.busy_per_resource();
+
+        // Map this group's stages onto logical device indices.
+        for stage in 0..p.pp {
+            for r in 0..cp {
+                let dev = (g * p.pp + stage) * cp + r;
+                device_busy[dev] = busy[stage];
+                // Memory: in-flight microbatches on stage s under 1F1B is
+                // ~ (pp - s); worst mb tokens on this rank + retained KV.
+                let inflight = (p.pp - stage).max(1);
+                let max_tokens = mbs
+                    .iter()
+                    .map(|&ci| chunks[ci].tokens() / cp)
+                    .max()
+                    .unwrap_or(0);
+                let kv_tokens = if cp > 1 {
+                    // retained gathered KV: full chunk tokens × resident
+                    // layers (worst microbatch).
+                    mbs.iter()
+                        .map(|&ci| chunks[ci].tokens())
+                        .max()
+                        .unwrap_or(0) as f64
+                        * p.layers_per_stage()
+                } else {
+                    0.0
+                };
+                let m = device_mem(p, max_tokens * inflight, kv_tokens);
+                device_mem_v[dev] = m;
+                if m > p.cluster.hbm_bytes {
+                    oom = true;
+                }
+            }
+        }
+    }
+
+    let _ = chunk_tokens;
+    IterationReport {
+        strategy: name.into(),
+        iter_time,
+        tokens: total_tokens,
+        device_busy,
+        device_mem: device_mem_v,
+        comm_bytes,
+        comm_exposed,
+        oom,
+        config: format!("dp={} pp={} cp={cp} tp={}", n_logical / (p.pp * cp), p.pp, p.tp),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Baseline 2: per-document context parallelism.
+// ---------------------------------------------------------------------
+
+/// Fixed-size packing + per-document head-tail CP at degree `cp`.
+pub fn run_perdoc_cp(
+    docs: &[Document],
+    chunk_tokens: usize,
+    cp: usize,
+    p: &SimParams,
+) -> IterationReport {
+    let chunks = pack_fixed(docs, chunk_tokens);
+    run_chunks_dp(&chunks, chunk_tokens, p, "PerDocCP", cp)
+}
+
+// ---------------------------------------------------------------------
+// Baseline 3: WLB-ideal — variable-length chunks + best DP×CP sweep.
+// ---------------------------------------------------------------------
+
+/// WLB-LLM reproduction: variable-length chunking to balance attention
+/// FLOPs, swept over CP degrees; returns the best non-OOM configuration
+/// ("WLB-ideal", §6.1), falling back to the least-bad if all OOM.
+pub fn run_wlb_ideal(docs: &[Document], chunk_tokens: usize, p: &SimParams) -> IterationReport {
+    let reports = wlb_sweep(docs, chunk_tokens, p);
+    pick_best(reports)
+}
+
+/// Pure variable-length chunking (no CP) — the method Fig. 4 isolates:
+/// balance `Σl²` across DP ranks, bounded by the per-rank memory cap.
+pub fn run_varlen_chunking(docs: &[Document], chunk_tokens: usize, p: &SimParams) -> IterationReport {
+    let cap = p
+        .mem
+        .max_tokens_per_gpu(&p.cluster, p.tp, p.pp)
+        .max(chunk_tokens / 4);
+    let n_chunks = (docs.iter().map(|d| d.len).sum::<usize>() / chunk_tokens).max(1);
+    let chunks = pack_variable_length(docs, n_chunks, cap, &p.f);
+    run_chunks_dp(&chunks, chunk_tokens, p, "VarLenChunk", 1)
+}
+
+/// All points of the WLB DP×CP sweep (Fig. 6 plots these).
+pub fn wlb_sweep(docs: &[Document], chunk_tokens: usize, p: &SimParams) -> Vec<IterationReport> {
+    let n_per_pipeline = p.n_logical() / p.pp;
+    let mut out = Vec::new();
+    let mut cp = 1usize;
+    while cp <= n_per_pipeline && cp <= 16 {
+        if n_per_pipeline % cp == 0 {
+            // Token cap per chunk: what fits in HBM for this topology.
+            let cap = p
+                .mem
+                .max_tokens_per_gpu(&p.cluster, p.tp, p.pp)
+                .saturating_mul(cp)
+                .max(chunk_tokens / 4)
+                .min(chunk_tokens * 4);
+            let n_chunks = (docs.iter().map(|d| d.len).sum::<usize>() / chunk_tokens).max(1);
+            let chunks = pack_variable_length(docs, n_chunks, cap, &p.f);
+            let mut r = run_chunks_dp(&chunks, chunk_tokens, p, "WLB-ideal", cp);
+            r.config = format!("dp={} cp={cp} pp={} tp={}", n_per_pipeline / cp, p.pp, p.tp);
+            out.push(r);
+        }
+        cp *= 2;
+    }
+    out
+}
+
+fn pick_best(reports: Vec<IterationReport>) -> IterationReport {
+    let feasible: Vec<&IterationReport> = reports.iter().filter(|r| !r.oom).collect();
+    let pool: Vec<&IterationReport> = if feasible.is_empty() {
+        reports.iter().collect()
+    } else {
+        feasible
+    };
+    pool.into_iter()
+        .max_by(|a, b| a.throughput().partial_cmp(&b.throughput()).unwrap())
+        .expect("empty sweep")
+        .clone()
+}
+
+// ---------------------------------------------------------------------
+// DistCA — core attention disaggregation.
+// ---------------------------------------------------------------------
+
+/// Sequential-fill placement (§6.1): each logical device takes
+/// `total/n` tokens of context-independent work; documents crossing the
+/// threshold spill onto the next device.
+pub fn distca_placement(docs: &[Document], n_devices: usize) -> Vec<Chunk> {
+    let total: usize = docs.iter().map(|d| d.len).sum();
+    let per_dev = (total + n_devices - 1) / n_devices;
+    pack_fixed(docs, per_dev.max(2))
+}
+
+/// Simulate one DistCA iteration (no PP).
+///
+/// Execution model (matching the baselines' gradient accumulation): the
+/// global batch is processed as a sequence of *microbatches* — one per
+/// `chunk_tokens`-sized data chunk — and each microbatch's tokens are
+/// spread over ALL logical devices by sequential fill (§6.1). Every
+/// device is an in-place attention server; the scheduler balances the
+/// microbatch's CA-tasks across the whole pool; ping-pong hides the
+/// dispatch communication. Activation residency is therefore
+/// `chunk_tokens / n` per device per microbatch — the memory-balance
+/// property the paper claims (baselines OOM first).
+pub fn run_distca(docs: &[Document], chunk_tokens: usize, p: &SimParams) -> IterationReport {
+    if p.pp > 1 {
+        return run_distca_pp(docs, chunk_tokens, p);
+    }
+    let n = p.n_logical();
+    // One DistCA microbatch holds up to `chunk_tokens` resident tokens on
+    // EVERY device (the same per-device activation envelope the baseline
+    // has with one chunk per DP rank), i.e. n·chunk_tokens tokens per
+    // pass; gradient accumulation covers the rest of the batch.
+    let global_chunks = pack_fixed(docs, n * chunk_tokens);
+    let total_tokens: usize = global_chunks.iter().map(|c| c.tokens()).sum();
+    let n_layers = p.model.n_layers as f64;
+
+    let mut iter_time = 0.0f64;
+    let mut device_busy = vec![0.0f64; n];
+    let mut device_mem_v = vec![0.0f64; n];
+    let mut comm_bytes = 0.0f64;
+    let mut comm_exposed = 0.0f64;
+    let mut oom = false;
+
+    for mb in &global_chunks {
+        // Sequential-fill the microbatch over all devices.
+        let mb_docs: Vec<Document> = mb
+            .pieces
+            .iter()
+            .map(|piece| Document::new(piece.doc, piece.len))
+            .collect();
+        let per_dev = (mb.tokens() + n - 1) / n;
+        let placed = pack_fixed(&mb_docs, per_dev.max(2));
+        let items = items_from_chunks(&placed);
+        let cfg = SchedulerCfg {
+            tolerance: p.tolerance,
+            // cap = bw·target + bw·tp·linear ≡ server_bw·(target + extra):
+            // loads are single-GPU kernel seconds, linear is device secs.
+            server_bw: p.cluster.ib_bw,
+            extra_window: p.linear_layer_fwd(per_dev) * p.tp as f64,
+            overlap_frac: 1.0,
+            ..Default::default()
+        };
+        let plan = schedule(&items, n, &p.f, &p.prof, &p.model, &cfg);
+        let (layer_fwd, layer_bwd, mb_bytes, exposed) =
+            distca_layer_times(&placed, &plan, p);
+        iter_time += (layer_fwd + layer_bwd) * n_layers;
+        comm_bytes += mb_bytes * n_layers;
+        comm_exposed += exposed * n_layers;
+        for s in 0..n {
+            let tokens = placed.get(s).map(|c| c.tokens()).unwrap_or(0);
+            let lin = p.linear_layer_fwd(tokens) * (1.0 + LINEAR_BWD_FACTOR);
+            let ca = plan.server_load[s] / p.tp as f64 * (1.0 + CA_BWD_FACTOR);
+            device_busy[s] += (lin + ca) * n_layers;
+            let m = device_mem(p, tokens, 0.0);
+            device_mem_v[s] = device_mem_v[s].max(m);
+            if m > p.cluster.hbm_bytes {
+                oom = true;
+            }
+        }
+    }
+    IterationReport {
+        strategy: "DistCA".into(),
+        iter_time,
+        tokens: total_tokens,
+        device_busy,
+        device_mem: device_mem_v,
+        comm_bytes,
+        comm_exposed,
+        oom,
+        config: format!("servers={n} tol={} tp={}", p.tolerance, p.tp),
+    }
+}
+
+/// Per-layer forward and backward makespans of a DistCA plan under the
+/// configured comm mode. Returns (fwd, bwd, dispatch_bytes_per_layer,
+/// exposed_comm_per_layer).
+fn distca_layer_times(chunks: &[Chunk], plan: &Plan, p: &SimParams) -> (f64, f64, f64, f64) {
+    let n = plan.n_servers;
+    let bw = p.cluster.ib_bw * p.tp as f64; // per logical device (node): tp NICs
+    let mut fwd = 0.0f64;
+    let mut bwd = 0.0f64;
+    let mut signal_fwd = 0.0f64;
+    let mut signal_bwd = 0.0f64;
+    for s in 0..n {
+        let tokens = chunks.get(s).map(|c| c.tokens()).unwrap_or(0);
+        let lin = p.linear_layer_fwd(tokens);
+        // server_load is single-GPU kernel latency; a logical device's TP
+        // group splits the heads tp-ways.
+        let ca = plan.server_load[s] / p.tp as f64;
+        let send: f64 = plan.comm_matrix[s].iter().sum::<f64>()
+            + plan.return_matrix[s].iter().sum::<f64>();
+        let recv: f64 = (0..n)
+            .map(|o| plan.comm_matrix[o][s] + plan.return_matrix[o][s])
+            .sum();
+        let comm_t = send.max(recv) / bw;
+        let (ping, pong) = split_nano(lin, ca, comm_t * 0.7, comm_t * 0.3);
+        let dev_fwd = match p.comm_mode {
+            CommMode::PingPong => layer_time_pingpong(ping, pong),
+            CommMode::SingleStream => layer_time_single_stream(ping, pong),
+            CommMode::Signal => layer_time_signal(ping, pong),
+        };
+        // Backward: linear 2x, CA 2.5x, comm 2x (dO in, dQ/dKV back).
+        let (bping, bpong) = split_nano(
+            lin * LINEAR_BWD_FACTOR,
+            ca * CA_BWD_FACTOR,
+            comm_t * 2.0 * 0.7,
+            comm_t * 2.0 * 0.3,
+        );
+        let dev_bwd = match p.comm_mode {
+            CommMode::PingPong => layer_time_pingpong(bping, bpong),
+            CommMode::SingleStream => layer_time_single_stream(bping, bpong),
+            CommMode::Signal => layer_time_signal(bping, bpong),
+        };
+        fwd = fwd.max(dev_fwd);
+        bwd = bwd.max(dev_bwd);
+        signal_fwd = signal_fwd.max(layer_time_signal(ping, pong));
+        signal_bwd = signal_bwd.max(layer_time_signal(bping, bpong));
+    }
+    let dispatch: f64 = plan.total_comm_bytes();
+    let exposed = (fwd - signal_fwd) + (bwd - signal_bwd);
+    (fwd, bwd, dispatch * 3.0, exposed) // fwd bytes + 2x bwd bytes
+}
+
+/// DistCA under pipeline parallelism: tick-aligned same-phase schedule
+/// (§4.1, Fig. 8); each tick's CA-tasks from *all* stages and DP groups
+/// are pooled over every device, including warm-up/drain idle stages.
+pub fn run_distca_pp(docs: &[Document], chunk_tokens: usize, p: &SimParams) -> IterationReport {
+    let n = p.n_logical();
+    let n_groups = n / p.pp;
+    // Microbatches: fixed-size chunks (memory-balanced), round-robin to
+    // DP groups.
+    let chunks = pack_fixed(docs, chunk_tokens);
+    let total_tokens: usize = chunks.iter().map(|c| c.tokens()).sum();
+    let groups = assign_round_robin(chunks.len(), n_groups);
+    let m = groups.iter().map(|g| g.len()).max().unwrap_or(0).max(1);
+    let sched = distca_ticks(p.pp, m);
+    let cfg = SchedulerCfg {
+        tolerance: p.tolerance,
+        server_bw: p.cluster.ib_bw,
+        extra_window: p.linear_layer_fwd(chunk_tokens) * p.tp as f64,
+        overlap_frac: 1.0,
+        ..Default::default()
+    };
+
+    let mut iter_time = 0.0f64;
+    let mut device_busy = vec![0.0; n];
+    let mut comm_bytes = 0.0f64;
+    let mut comm_exposed = 0.0f64;
+
+    for (t, row) in sched.tick_ops.iter().enumerate() {
+        let phase = sched.tick_phases[t];
+        // Gather active (device, chunk) pairs across all DP groups.
+        let mut active: Vec<(usize, usize)> = Vec::new(); // (device, chunk idx)
+        for g in 0..n_groups {
+            for stage in 0..p.pp {
+                if let Some(mb) = row[stage] {
+                    if let Some(&ci) = groups[g].get(mb) {
+                        let dev = g * p.pp + stage;
+                        active.push((dev, ci));
+                    }
+                }
+            }
+        }
+        if active.is_empty() {
+            continue;
+        }
+        // Build items homed at the active devices; schedule over ALL n
+        // devices (idle warm-up/drain stages serve attention too).
+        let mut items: Vec<Item> = Vec::new();
+        for &(dev, ci) in &active {
+            for piece in &chunks[ci].pieces {
+                let mut len = piece.len;
+                if len % 2 == 1 {
+                    len -= 1;
+                }
+                if len == 0 {
+                    continue;
+                }
+                if piece.offset == 0 {
+                    items.push(Item::whole_doc(piece.doc, len, dev));
+                } else {
+                    items.push(Item {
+                        doc: piece.doc,
+                        doc_len: 2 * piece.offset + len,
+                        i: piece.offset,
+                        j: piece.offset + len / 2,
+                        home: dev,
+                    });
+                }
+            }
+        }
+        let plan = schedule(&items, n, &p.f, &p.prof, &p.model, &cfg);
+        // Tick time: max over devices of overlapped (linear_stage, ca,
+        // comm); linear only on active devices, CA on all.
+        let bw = p.cluster.ib_bw * p.tp as f64;
+        let layers = p.layers_per_stage();
+        let (lin_f, ca_f) = match phase {
+            PipePhase::Forward => (1.0, 1.0),
+            PipePhase::Backward => (LINEAR_BWD_FACTOR, CA_BWD_FACTOR),
+        };
+        let mut tick_time = 0.0f64;
+        let mut tick_signal = 0.0f64;
+        for dev in 0..n {
+            let tokens = active
+                .iter()
+                .find(|&&(d, _)| d == dev)
+                .map(|&(_, ci)| chunks[ci].tokens())
+                .unwrap_or(0);
+            let lin = p.linear_layer_fwd(tokens) * lin_f * layers;
+            let ca = plan.server_load[dev] / p.tp as f64 * ca_f * layers;
+            let send: f64 = plan.comm_matrix[dev].iter().sum::<f64>()
+                + plan.return_matrix[dev].iter().sum::<f64>();
+            let recv: f64 = (0..n)
+                .map(|o| plan.comm_matrix[o][dev] + plan.return_matrix[o][dev])
+                .sum();
+            let comm_t = send.max(recv) / bw * layers * if ca_f > 1.0 { 2.0 } else { 1.0 };
+            let (ping, pong) = split_nano(lin, ca, comm_t * 0.7, comm_t * 0.3);
+            let dt = match p.comm_mode {
+                CommMode::PingPong => layer_time_pingpong(ping, pong),
+                CommMode::SingleStream => layer_time_single_stream(ping, pong),
+                CommMode::Signal => layer_time_signal(ping, pong),
+            };
+            tick_time = tick_time.max(dt);
+            tick_signal = tick_signal.max(layer_time_signal(ping, pong));
+            device_busy[dev] += lin + ca;
+        }
+        iter_time += tick_time;
+        comm_exposed += tick_time - tick_signal;
+        comm_bytes += plan.total_comm_bytes() * layers;
+    }
+
+    let mut device_mem_v = vec![0.0; n];
+    let mut oom = false;
+    for g in 0..n_groups {
+        for stage in 0..p.pp {
+            let dev = g * p.pp + stage;
+            let inflight = (p.pp - stage).max(1);
+            let max_tokens = groups[g]
+                .iter()
+                .map(|&ci| chunks[ci].tokens())
+                .max()
+                .unwrap_or(0);
+            let mem = device_mem(p, max_tokens * inflight, 0.0);
+            device_mem_v[dev] = mem;
+            if mem > p.cluster.hbm_bytes {
+                oom = true;
+            }
+        }
+    }
+    IterationReport {
+        strategy: "DistCA".into(),
+        iter_time,
+        tokens: total_tokens,
+        device_busy,
+        device_mem: device_mem_v,
+        comm_bytes,
+        comm_exposed,
+        oom,
+        config: format!(
+            "servers={n} dp={n_groups} pp={} tol={} tp={}",
+            p.pp, p.tolerance, p.tp
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::run::DataDist;
+    use crate::data::distributions::sampler_for;
+    use crate::util::rng::Rng;
+
+    fn params(nodes: usize, pp: usize) -> SimParams {
+        SimParams::new(
+            ModelConfig::llama3_8b(),
+            ClusterConfig::h200(nodes),
+            8,
+            pp,
+        )
+    }
+
+    fn sample_docs(max_len: usize, budget: usize, seed: u64) -> Vec<Document> {
+        let mut rng = Rng::new(seed);
+        sampler_for(DataDist::Pretrain, max_len).sample_tokens(&mut rng, budget, 0)
+    }
+
+    #[test]
+    fn packed_dp_reports_sane() {
+        let p = params(4, 1);
+        let docs = sample_docs(65536, 4 * 65536, 1);
+        let r = run_packed_dp(&docs, 65536, &p);
+        assert!(r.iter_time > 0.0);
+        assert_eq!(r.tokens, 4 * 65536);
+        assert!(r.throughput() > 0.0);
+        assert_eq!(r.device_busy.len(), 4);
+        assert!(r.idle_fraction() >= 0.0 && r.idle_fraction() < 1.0);
+    }
+
+    #[test]
+    fn distca_beats_packed_dp_on_skewed_batches() {
+        // The headline claim at small scale: with skewed document lengths
+        // DistCA's iteration is faster than packed DP's.
+        let p = params(4, 1);
+        let docs = sample_docs(131072, 4 * 131072, 2);
+        let dp = run_packed_dp(&docs, 131072, &p);
+        let ca = run_distca(&docs, 131072, &p);
+        assert!(
+            ca.iter_time < dp.iter_time,
+            "DistCA {} should beat DP {}",
+            ca.iter_time,
+            dp.iter_time
+        );
+        // And with near-perfect balance:
+        assert!(ca.idle_fraction() < dp.idle_fraction() + 1e-9);
+    }
+
+    #[test]
+    fn distca_balances_memory_better_than_wlb() {
+        let p = params(4, 1);
+        let docs = sample_docs(131072, 4 * 131072, 3);
+        let wlb = run_wlb_ideal(&docs, 131072, &p);
+        let ca = run_distca(&docs, 131072, &p);
+        assert!(
+            ca.memory_divergence() <= wlb.memory_divergence() + 0.05,
+            "distca div {} vs wlb {}",
+            ca.memory_divergence(),
+            wlb.memory_divergence()
+        );
+    }
+
+    #[test]
+    fn cp_reduces_idle_but_adds_comm() {
+        let p = params(4, 1);
+        let docs = sample_docs(131072, 4 * 131072, 4);
+        let dp = run_packed_dp(&docs, 131072, &p);
+        let cp = run_perdoc_cp(&docs, 131072, 4, &p);
+        assert!(cp.idle_fraction() < dp.idle_fraction());
+        assert!(cp.comm_bytes > 0.0 && dp.comm_bytes == 0.0);
+    }
+
+    #[test]
+    fn wlb_sweep_nonempty_and_best_not_oom_when_possible() {
+        let p = params(4, 1);
+        let docs = sample_docs(65536, 4 * 65536, 5);
+        let sweep = wlb_sweep(&docs, 65536, &p);
+        assert!(sweep.len() >= 2);
+        let best = run_wlb_ideal(&docs, 65536, &p);
+        if sweep.iter().any(|r| !r.oom) {
+            assert!(!best.oom);
+        }
+    }
+
+    #[test]
+    fn distca_pp_runs_and_balances() {
+        let p = params(4, 2);
+        let docs = sample_docs(65536, 8 * 65536, 6);
+        let r = run_distca(&docs, 65536, &p);
+        assert!(r.iter_time > 0.0);
+        assert!(!r.device_busy.iter().any(|&b| b < 0.0));
+        // busy must not exceed iteration time
+        for &b in &r.device_busy {
+            assert!(b <= r.iter_time * 1.0001, "busy {b} > iter {}", r.iter_time);
+        }
+    }
+
+    #[test]
+    fn packed_dp_pp_has_bubbles() {
+        let p = params(4, 2);
+        let docs = sample_docs(65536, 8 * 65536, 7);
+        let r = run_packed_dp(&docs, 65536, &p);
+        assert!(r.idle_fraction() > 0.0, "PP must create bubbles");
+    }
+
+    #[test]
+    fn signal_mode_is_fastest_singlestream_slowest() {
+        let docs = sample_docs(131072, 4 * 131072, 8);
+        let mk = |mode| {
+            let mut p = params(4, 1);
+            p.comm_mode = mode;
+            run_distca(&docs, 131072, &p).iter_time
+        };
+        let sig = mk(CommMode::Signal);
+        let pp = mk(CommMode::PingPong);
+        let ss = mk(CommMode::SingleStream);
+        assert!(sig <= pp + 1e-12, "signal {sig} > pingpong {pp}");
+        assert!(pp <= ss + 1e-12, "pingpong {pp} > singlestream {ss}");
+    }
+
+    #[test]
+    fn distca_idle_near_zero() {
+        // Near-perfect compute balance (§6 headline).
+        let p = params(8, 1);
+        let docs = sample_docs(131072, 8 * 131072, 9);
+        let r = run_distca(&docs, 131072, &p);
+        assert!(
+            r.idle_fraction() < 0.20,
+            "DistCA idle {} should be small",
+            r.idle_fraction()
+        );
+    }
+}

@@ -1,0 +1,12 @@
+//! Shared substrates: JSON, PRNG, statistics, logging, table rendering,
+//! and a mini property-testing harness. These replace `serde`, `rand`,
+//! `env_logger`, and `proptest`, none of which exist in the offline
+//! vendor set — per the reproduction rule, substrates are built, not
+//! stubbed.
+
+pub mod json;
+pub mod logging;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;
+pub mod tables;

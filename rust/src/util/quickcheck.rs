@@ -1,0 +1,203 @@
+//! Miniature property-based testing harness (the vendor set has no
+//! `proptest`/`quickcheck`). Provides seeded case generation with greedy
+//! input shrinking for the scheduler/packing invariants this repo
+//! property-tests.
+//!
+//! Usage:
+//! ```ignore
+//! check(100, gen_docs, |docs| prop_tokens_conserved(docs));
+//! ```
+//! On failure the harness re-runs the generator's shrink candidates and
+//! panics with the smallest failing input's debug representation and the
+//! seed needed to reproduce it.
+
+use super::rng::Rng;
+
+/// A generated test case must be shrinkable: return strictly "smaller"
+/// candidate inputs (the harness re-tests each).
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    fn shrink(&self) -> Vec<Self>;
+}
+
+/// Integer shrink: candidates `x - x/2, x - x/4, …, x - 1` — a binary
+/// search toward zero, so a threshold counterexample is found in
+/// O(log x) steps instead of O(x).
+fn shrink_int(x: u64) -> Vec<u64> {
+    let mut out = Vec::new();
+    let mut d = x / 2;
+    while d > 0 {
+        out.push(x - d);
+        d /= 2;
+    }
+    if x > 0 {
+        out.push(0);
+        out.push(x - 1);
+        out.dedup();
+    }
+    out
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        shrink_int(*self)
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        shrink_int(*self as u64).into_iter().map(|x| x as usize).collect()
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0.0 {
+            vec![]
+        } else {
+            vec![0.0, self / 2.0]
+        }
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // Remove halves, remove single elements, shrink single elements.
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[self.len() / 2..].to_vec());
+        for i in 0..self.len().min(8) {
+            let mut v = self.clone();
+            v.remove(i);
+            out.push(v);
+        }
+        for i in 0..self.len().min(4) {
+            for smaller in self[i].shrink().into_iter().take(2) {
+                let mut v = self.clone();
+                v[i] = smaller;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Outcome of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Convenience: assert-like helper inside properties.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run `cases` random cases of `prop` over inputs from `gen`. Panics with
+/// the (shrunk) counterexample on failure. Seed comes from
+/// `DISTCA_QC_SEED` if set so failures are replayable.
+pub fn check<T, G, P>(cases: usize, mut gen: G, mut prop: P)
+where
+    T: Shrink,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> PropResult,
+{
+    let seed = std::env::var("DISTCA_QC_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD15C_A5EEDu64);
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (smallest, smallest_msg, steps) = shrink_failure(input, msg, &mut prop);
+            panic!(
+                "property failed (case {case}/{cases}, seed {seed}, {steps} shrink steps)\n\
+                 counterexample: {smallest:?}\nreason: {smallest_msg}"
+            );
+        }
+    }
+}
+
+fn shrink_failure<T, P>(mut input: T, mut msg: String, prop: &mut P) -> (T, String, usize)
+where
+    T: Shrink,
+    P: FnMut(&T) -> PropResult,
+{
+    let mut steps = 0;
+    'outer: loop {
+        if steps > 1000 {
+            break;
+        }
+        for candidate in input.shrink() {
+            if let Err(m) = prop(&candidate) {
+                input = candidate;
+                msg = m;
+                steps += 1;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    (input, msg, steps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            50,
+            |r| r.gen_range(0, 1000),
+            |&x| ensure(x < 1000, "in range"),
+        );
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let result = std::panic::catch_unwind(|| {
+            check(
+                100,
+                |r| r.gen_range(0, 1000),
+                |&x| ensure(x < 500, format!("{x} >= 500")),
+            );
+        });
+        let err = result.unwrap_err();
+        let text = err.downcast_ref::<String>().unwrap();
+        // Shrinking should land exactly on the boundary value 500.
+        assert!(text.contains("counterexample: 500"), "got: {text}");
+    }
+
+    #[test]
+    fn vec_shrink_reduces_length() {
+        let v = vec![1u64, 2, 3, 4];
+        let shrunk = v.shrink();
+        assert!(shrunk.iter().any(|s| s.len() < v.len()));
+    }
+
+    #[test]
+    fn tuple_shrink_covers_both_sides() {
+        let t = (4u64, 6u64);
+        let shrunk = t.shrink();
+        assert!(shrunk.iter().any(|s| s.0 < 4));
+        assert!(shrunk.iter().any(|s| s.1 < 6));
+    }
+}

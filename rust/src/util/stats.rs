@@ -1,0 +1,207 @@
+//! Small statistics helpers used by the metrics, simulator, and bench
+//! harness: summary statistics, percentiles, and imbalance measures that
+//! mirror the quantities the paper reports (idle fraction, divergence).
+
+/// Arithmetic mean. Returns 0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Coefficient of variation (stddev / mean); 0 when mean is 0.
+pub fn cv(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m == 0.0 {
+        0.0
+    } else {
+        stddev(xs) / m
+    }
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Linear-interpolated percentile, `p` in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&p), "percentile out of range: {p}");
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let frac = rank - lo as f64;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    }
+}
+
+/// `max / mean` — the paper's notion of load imbalance across ranks: the
+/// straggler's excess over the ideal. 1.0 means perfectly balanced.
+pub fn imbalance_ratio(loads: &[f64]) -> f64 {
+    let m = mean(loads);
+    if m == 0.0 {
+        1.0
+    } else {
+        max(loads) / m
+    }
+}
+
+/// Fraction of aggregate device time spent idle when every rank must wait
+/// for the slowest: `1 - mean/max`. This is Fig. 4b's "percentage of
+/// average idle time to average iteration time".
+pub fn idle_fraction(loads: &[f64]) -> f64 {
+    let mx = max(loads);
+    if mx <= 0.0 {
+        0.0
+    } else {
+        1.0 - mean(loads) / mx
+    }
+}
+
+/// `max / min` divergence, the memory-divergence measure of Fig. 4a.
+pub fn divergence(xs: &[f64]) -> f64 {
+    let mn = min(xs);
+    if mn <= 0.0 {
+        f64::INFINITY
+    } else {
+        max(xs) / mn
+    }
+}
+
+/// Weighted mean.
+pub fn weighted_mean(xs: &[f64], ws: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ws.len());
+    let wsum: f64 = ws.iter().sum();
+    if wsum == 0.0 {
+        return 0.0;
+    }
+    xs.iter().zip(ws).map(|(x, w)| x * w).sum::<f64>() / wsum
+}
+
+/// Simple online accumulator for streams (simulator event timings).
+#[derive(Debug, Clone, Default)]
+pub struct Accumulator {
+    pub n: u64,
+    pub sum: f64,
+    pub sum_sq: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Accumulator {
+    pub fn new() -> Self {
+        Self {
+            n: 0,
+            sum: 0.0,
+            sum_sq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        self.sum_sq += x * x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        ((self.sum_sq / self.n as f64) - m * m).max(0.0).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_stddev_basic() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((stddev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn idle_fraction_balanced_is_zero() {
+        assert_eq!(idle_fraction(&[3.0, 3.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn idle_fraction_straggler() {
+        // loads 1,1,1,2: mean 1.25, max 2 -> idle 0.375
+        assert!((idle_fraction(&[1.0, 1.0, 1.0, 2.0]) - 0.375).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_ratio_basics() {
+        assert!((imbalance_ratio(&[1.0, 1.0]) - 1.0).abs() < 1e-12);
+        assert!((imbalance_ratio(&[1.0, 3.0]) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn divergence_max_over_min() {
+        assert!((divergence(&[2.0, 4.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accumulator_matches_batch() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut acc = Accumulator::new();
+        for &x in &xs {
+            acc.add(x);
+        }
+        assert!((acc.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((acc.stddev() - stddev(&xs)).abs() < 1e-9);
+        assert_eq!(acc.min, 1.0);
+        assert_eq!(acc.max, 5.0);
+    }
+
+    #[test]
+    fn weighted_mean_basic() {
+        assert!((weighted_mean(&[1.0, 3.0], &[1.0, 3.0]) - 2.5).abs() < 1e-12);
+    }
+}

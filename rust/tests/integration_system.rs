@@ -1,0 +1,171 @@
+//! System-level integration tests over the simulator + coordinator stack
+//! (no PJRT required): the paper's qualitative claims as assertions.
+
+use distca::config::run::DataDist;
+use distca::config::{ClusterConfig, ModelConfig};
+use distca::coordinator::scheduler::items_from_chunks;
+use distca::coordinator::{schedule, Profiler, SchedulerCfg};
+use distca::data::distributions::sampler_for;
+use distca::metrics::{speedup, weak_scaling_efficiency};
+use distca::model::FlopsModel;
+use distca::sim::strategies::{
+    run_distca, run_packed_dp, run_perdoc_cp, run_varlen_chunking, run_wlb_ideal, CommMode,
+    SimParams,
+};
+use distca::sim::IterationReport;
+use distca::util::rng::Rng;
+
+fn sample(dist: DataDist, max_doc: usize, tokens: usize, seed: u64) -> Vec<distca::data::Document> {
+    let mut rng = Rng::new(seed);
+    sampler_for(dist, max_doc).sample_tokens(&mut rng, tokens, 0)
+}
+
+fn avg<F: Fn(u64) -> IterationReport>(n: usize, f: F) -> IterationReport {
+    let reports: Vec<IterationReport> = (0..n as u64).map(f).collect();
+    IterationReport::average(&reports)
+}
+
+/// §6.2 headline: DistCA beats WLB-ideal across a small grid.
+#[test]
+fn distca_beats_wlb_across_grid() {
+    for (model, nodes, max_doc) in [
+        (ModelConfig::llama3_8b(), 8usize, 131_072usize),
+        (ModelConfig::llama3_8b(), 16, 262_144),
+        (ModelConfig::llama_34b(), 8, 131_072),
+    ] {
+        let p = SimParams::new(model.clone(), ClusterConfig::h200(nodes), 8, 1);
+        let tokens = nodes * max_doc;
+        let wlb = avg(3, |s| {
+            run_wlb_ideal(&sample(DataDist::Pretrain, max_doc, tokens, 70 + s), max_doc, &p)
+        });
+        let ca = avg(3, |s| {
+            run_distca(&sample(DataDist::Pretrain, max_doc, tokens, 70 + s), max_doc, &p)
+        });
+        let sp = speedup(&wlb, &ca);
+        assert!(
+            sp > 1.0,
+            "{} {nodes} nodes {max_doc}: speedup {sp:.3} must exceed 1.0",
+            model.name
+        );
+        assert!(sp < 2.5, "speedup {sp:.3} implausibly large — cost model drift?");
+    }
+}
+
+/// §6: DistCA eliminates DP stragglers (near-perfect compute balance)
+/// and keeps memory balanced where WLB chunking diverges.
+#[test]
+fn distca_balances_compute_and_memory() {
+    let p = SimParams::new(ModelConfig::llama3_8b(), ClusterConfig::h200(8), 8, 1);
+    let docs = sample(DataDist::ProLong, 262_144, 8 * 262_144, 5);
+    let packed = run_packed_dp(&docs, 262_144, &p);
+    let varlen = run_varlen_chunking(&docs, 131_072, &p);
+    let ca = run_distca(&docs, 262_144, &p);
+    assert!(ca.idle_fraction() < packed.idle_fraction());
+    assert!(ca.idle_fraction() < 0.10, "near-perfect balance, got {}", ca.idle_fraction());
+    assert!(ca.memory_divergence() <= varlen.memory_divergence() + 1e-9);
+    assert!((ca.memory_divergence() - 1.0).abs() < 0.05);
+}
+
+/// §6.2: weak scaling of DistCA is near-linear.
+#[test]
+fn distca_weak_scaling_near_linear() {
+    let max_doc = 131_072;
+    let mut series = Vec::new();
+    for nodes in [4usize, 8, 16] {
+        let p = SimParams::new(ModelConfig::llama3_8b(), ClusterConfig::h200(nodes), 8, 1);
+        let tokens = nodes * max_doc; // constant work per node
+        let r = avg(3, |s| {
+            run_distca(&sample(DataDist::Pretrain, max_doc, tokens, 80 + s), max_doc, &p)
+        });
+        series.push((nodes * 8, r.throughput()));
+    }
+    for (n, eff) in weak_scaling_efficiency(&series) {
+        assert!(eff > 0.75, "weak-scaling efficiency at {n} GPUs: {eff:.3}");
+    }
+}
+
+/// Fig. 11's ordering holds end-to-end for every model/scale combo.
+#[test]
+fn comm_mode_ordering() {
+    for nodes in [4usize, 8] {
+        let docs = sample(DataDist::Pretrain, 131_072, nodes * 131_072, 11);
+        let run = |mode| {
+            let mut p =
+                SimParams::new(ModelConfig::llama3_8b(), ClusterConfig::h200(nodes), 8, 1);
+            p.comm_mode = mode;
+            run_distca(&docs, 131_072, &p).iter_time
+        };
+        let sig = run(CommMode::Signal);
+        let pp = run(CommMode::PingPong);
+        let ss = run(CommMode::SingleStream);
+        assert!(sig <= pp + 1e-12 && pp <= ss + 1e-12, "{sig} {pp} {ss}");
+    }
+}
+
+/// Per-document CP trades stragglers for all-gather: both effects visible.
+#[test]
+fn cp_tradeoff_visible() {
+    let p = SimParams::new(ModelConfig::llama3_8b(), ClusterConfig::h200(8), 8, 1);
+    let docs = sample(DataDist::Pretrain, 262_144, 4 * 262_144, 13);
+    let dp = run_packed_dp(&docs, 262_144, &p);
+    let cp = run_perdoc_cp(&docs, 262_144, 8, &p);
+    assert!(cp.idle_fraction() < dp.idle_fraction(), "CP must balance");
+    assert!(cp.comm_bytes > 0.0, "CP must pay all-gather bytes");
+}
+
+/// The scheduler's plan stays valid on real sampled workloads at scale.
+#[test]
+fn scheduler_plan_valid_at_scale() {
+    let model = ModelConfig::llama3_8b();
+    let f = FlopsModel::new(&model);
+    let cluster = ClusterConfig::h200(32);
+    let prof = Profiler::analytic(&f, &cluster);
+    let docs = sample(DataDist::ProLong, 524_288, 16 * 524_288, 17);
+    let chunks = distca::sim::strategies::distca_placement(&docs, 32);
+    let items = items_from_chunks(&chunks);
+    let plan = schedule(
+        &items,
+        32,
+        &f,
+        &prof,
+        &model,
+        &SchedulerCfg { tolerance: 0.05, ..Default::default() },
+    );
+    plan.validate(&items, &f).expect("plan invariants");
+    assert!(plan.imbalance() < 1.10, "imbalance {}", plan.imbalance());
+    // All-to-all bottleneck consistency with the exchange module.
+    let a2a = distca::exchange::AllToAll::from_plan(&plan);
+    assert!((a2a.total() - plan.total_comm_bytes()).abs() < 1.0);
+    assert!(a2a.bottleneck_bytes() <= plan.total_comm_bytes() + 1.0);
+}
+
+/// CLI end-to-end: parse + run a simulate command programmatically.
+#[test]
+fn cli_args_parse_and_dispatch() {
+    use distca::cli::{Args, FlagSpec};
+    let specs = vec![
+        FlagSpec { name: "gpus", help: "", default: Some("64"), is_bool: false },
+        FlagSpec { name: "json", help: "", default: None, is_bool: true },
+    ];
+    let raw: Vec<String> = ["simulate", "--gpus", "32", "--json"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let args = Args::parse(&raw, &specs).unwrap();
+    assert_eq!(args.subcommand.as_deref(), Some("simulate"));
+    assert_eq!(args.get_usize("gpus", 0).unwrap(), 32);
+    assert!(args.get_bool("json"));
+}
+
+/// Reports round-trip through the JSON substrate.
+#[test]
+fn report_json_roundtrip_fields() {
+    let p = SimParams::new(ModelConfig::llama3_8b(), ClusterConfig::h200(4), 8, 1);
+    let docs = sample(DataDist::Pretrain, 65_536, 4 * 65_536, 19);
+    let r = run_distca(&docs, 65_536, &p);
+    let j = r.to_json();
+    let text = j.to_string_pretty();
+    let back = distca::util::json::parse(&text).unwrap();
+    assert_eq!(back.get("strategy").unwrap().as_str(), Some("DistCA"));
+    assert!(back.get("throughput_tok_s").unwrap().as_f64().unwrap() > 0.0);
+}
