@@ -9,7 +9,7 @@ use distca::config::{run::DataDist, ClusterConfig, ModelConfig};
 use distca::data::distributions::sampler_for;
 use distca::sim::strategies::{run_distca, CommMode, SimParams};
 use distca::sim::IterationReport;
-use distca::util::rng::Rng;
+use distca::util::rng::{seed_from_env, Rng};
 use distca::util::tables::{secs, Table};
 
 fn main() {
@@ -34,7 +34,7 @@ fn main() {
             params.comm_mode = mode;
             let mut reports = Vec::new();
             for b in 0..n_batches {
-                let mut rng = Rng::new(1100 + b as u64 * 13 + nodes as u64);
+                let mut rng = Rng::new(seed_from_env(1100) + b as u64 * 13 + nodes as u64);
                 let docs = sampler_for(DataDist::Pretrain, max_doc)
                     .sample_tokens(&mut rng, batch_tokens, 0);
                 reports.push(run_distca(&docs, max_doc, &params));

@@ -7,7 +7,7 @@ use distca::config::{run::DataDist, ClusterConfig, ModelConfig};
 use distca::data::distributions::sampler_for;
 use distca::sim::strategies::{run_packed_dp, run_varlen_chunking, SimParams};
 use distca::sim::IterationReport;
-use distca::util::rng::Rng;
+use distca::util::rng::{seed_from_env, Rng};
 use distca::util::tables::{f, Table};
 
 fn main() {
@@ -35,7 +35,7 @@ fn main() {
         let mut wlb = Vec::new();
         let mut packed = Vec::new();
         for b in 0..n_batches {
-            let mut rng = Rng::new(4000 + b as u64 * 31 + dp as u64);
+            let mut rng = Rng::new(seed_from_env(4000) + b as u64 * 31 + dp as u64);
             let docs =
                 sampler_for(DataDist::Pretrain, max_doc).sample_tokens(&mut rng, batch_tokens, 0);
             wlb.push(run_varlen_chunking(&docs, chunk_tokens, &params));

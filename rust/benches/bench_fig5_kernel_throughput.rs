@@ -10,7 +10,7 @@
 use distca::config::{ClusterConfig, ModelConfig};
 use distca::coordinator::Profiler;
 use distca::model::FlopsModel;
-use distca::util::rng::Rng;
+use distca::util::rng::{seed_from_env, Rng};
 use distca::util::tables::Table;
 
 fn main() {
@@ -21,7 +21,7 @@ fn main() {
 
     let shard_lens = [16usize, 32, 64, 128, 256, 512, 1024, 2048, 4096];
     let chunk_tokens = 32_768;
-    let mut rng = Rng::new(5);
+    let mut rng = Rng::new(seed_from_env(5));
 
     let mut t = Table::new(
         "Fig. 5 — CA throughput vs shard length (32K-token fused chunk)",

@@ -7,7 +7,7 @@ use distca::config::{run::DataDist, ClusterConfig, ModelConfig};
 use distca::data::distributions::sampler_for;
 use distca::sim::strategies::{run_distca, wlb_sweep, SimParams};
 use distca::sim::IterationReport;
-use distca::util::rng::Rng;
+use distca::util::rng::{seed_from_env, Rng};
 use distca::util::tables::{f, secs, Table};
 
 fn main() {
@@ -21,7 +21,7 @@ fn main() {
     let mut sweeps: Vec<Vec<IterationReport>> = Vec::new();
     let mut distca_reports = Vec::new();
     for b in 0..n_batches {
-        let mut rng = Rng::new(600 + b as u64);
+        let mut rng = Rng::new(seed_from_env(600) + b as u64);
         let docs = sampler_for(DataDist::Pretrain, max_doc).sample_tokens(
             &mut rng,
             2 * max_doc,

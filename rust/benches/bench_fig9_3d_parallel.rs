@@ -8,7 +8,7 @@ use distca::data::distributions::sampler_for;
 use distca::metrics::{comparison_table, ComparisonRow};
 use distca::sim::strategies::{run_distca, run_wlb_ideal, SimParams};
 use distca::sim::IterationReport;
-use distca::util::rng::Rng;
+use distca::util::rng::{seed_from_env, Rng};
 
 fn main() {
     let quick = std::env::var("DISTCA_BENCH_QUICK").is_ok();
@@ -29,7 +29,7 @@ fn main() {
             let mut ca = Vec::new();
             for b in 0..n_batches {
                 let mut rng =
-                    Rng::new(900 + b as u64 * 101 + rc.max_doc_len as u64 + rc.n_gpus as u64);
+                    Rng::new(seed_from_env(900) + b as u64 * 101 + rc.max_doc_len as u64 + rc.n_gpus as u64);
                 let docs = sampler_for(dist, rc.max_doc_len)
                     .sample_tokens(&mut rng, batch_tokens, 0);
                 wlb.push(run_wlb_ideal(&docs, rc.chunk_tokens / 2, &params));

@@ -5,7 +5,7 @@
 use distca::bench::BenchRunner;
 use distca::runtime::ca_exec::{synthetic_task, CaExecutor};
 use distca::runtime::{artifacts_available, artifacts_dir, Runtime};
-use distca::util::rng::Rng;
+use distca::util::rng::{seed_from_env, Rng};
 
 fn main() {
     if !artifacts_available() {
@@ -30,7 +30,7 @@ fn main() {
         (cold / warm.max(1e-9)) as u64
     );
 
-    let mut rng = Rng::new(3);
+    let mut rng = Rng::new(seed_from_env(3));
     let one = vec![synthetic_task(&mut rng, 512, 1024, 12, 12, 64)];
     runner.bench_with_units("CA fused batch 1x(512q,1024kv)", 512.0, || {
         exec.run_batch(&rt, &one).unwrap()

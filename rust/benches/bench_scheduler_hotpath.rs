@@ -11,7 +11,7 @@ use distca::coordinator::{schedule, Profiler, SchedulerCfg};
 use distca::data::distributions::sampler_for;
 use distca::model::FlopsModel;
 use distca::sim::strategies::distca_placement;
-use distca::util::rng::Rng;
+use distca::util::rng::{seed_from_env, Rng};
 
 fn main() {
     let model = ModelConfig::llama3_8b();
@@ -26,7 +26,7 @@ fn main() {
     ] {
         let cluster = ClusterConfig::h200(n_servers);
         let prof = Profiler::analytic(&f, &cluster);
-        let mut rng = Rng::new(42);
+        let mut rng = Rng::new(seed_from_env(42));
         let docs =
             sampler_for(DataDist::Pretrain, max_doc).sample_tokens(&mut rng, tokens, 0);
         let chunks = distca_placement(&docs, n_servers);

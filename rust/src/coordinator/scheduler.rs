@@ -477,6 +477,77 @@ mod tests {
         assert_eq!(plan.imbalance(), 1.0);
     }
 
+    // ----- failover-transition degenerates ------------------------------
+    // These are exactly the states the elastic pool passes through when
+    // membership collapses or work concentrates: they must neither panic
+    // nor emit invalid plans.
+
+    #[test]
+    fn empty_batch_single_server() {
+        // A drained-down pool between batches: 1 server, nothing to do.
+        let (f, prof, m) = setup();
+        let plan = schedule(&[], 1, &f, &prof, &m, &SchedulerCfg::default());
+        assert!(plan.assignments.is_empty());
+        assert_eq!(plan.n_servers, 1);
+        assert_eq!(plan.total_comm_bytes(), 0.0);
+        plan.validate(&[], &f).unwrap();
+    }
+
+    #[test]
+    fn all_items_homed_on_one_server_spread_out() {
+        // After a mass failure + rejoin, every surviving item can be
+        // homed on the single server that stayed up; the scheduler must
+        // spread the load across the recovered pool.
+        let (f, prof, m) = setup();
+        let items: Vec<Item> = (0..16)
+            .map(|d| whole(d, 8192, 0))
+            .collect();
+        let plan = schedule(&items, 8, &f, &prof, &m, &SchedulerCfg::default());
+        plan.validate(&items, &f).unwrap();
+        assert!(
+            plan.imbalance() < 1.25,
+            "one-home batch must still balance: {}",
+            plan.imbalance()
+        );
+        let used: std::collections::BTreeSet<usize> =
+            plan.assignments.iter().map(|a| a.server).collect();
+        assert!(used.len() > 1, "work must leave the overloaded home");
+    }
+
+    #[test]
+    fn single_heavy_item_single_server() {
+        // Failover end state: one server left, one giant doc. Nothing to
+        // balance against — the plan is the identity and must be valid.
+        let (f, prof, m) = setup();
+        let items = vec![whole(0, 131_072, 0)];
+        let plan = schedule(&items, 1, &f, &prof, &m, &SchedulerCfg::default());
+        plan.validate(&items, &f).unwrap();
+        assert_eq!(plan.assignments.len(), 1);
+        assert_eq!(plan.total_comm_bytes(), 0.0);
+        assert_eq!(plan.imbalance(), 1.0);
+    }
+
+    #[test]
+    fn more_servers_than_items() {
+        // A freshly grown pool can exceed the batch's parallelism; spare
+        // servers idle (or receive shards) without invalidating the plan.
+        let (f, prof, m) = setup();
+        let items = vec![whole(0, 4096, 0), whole(1, 4096, 1)];
+        let plan = schedule(&items, 8, &f, &prof, &m, &SchedulerCfg::default());
+        plan.validate(&items, &f).unwrap();
+        assert!(plan.assignments.len() >= items.len());
+    }
+
+    #[test]
+    fn zero_length_pieces_are_dropped_not_scheduled() {
+        // items_from_chunks drops empty/odd residue pieces; the scheduler
+        // must cope with the resulting sparse batch.
+        let docs = vec![crate::data::Document::new(0, 1)];
+        let chunks = crate::data::pack_fixed(&docs, 4096);
+        let items = items_from_chunks(&chunks);
+        assert!(items.is_empty(), "a 1-token doc cannot be scheduled");
+    }
+
     #[test]
     fn items_from_chunks_roundtrip() {
         let docs = vec![

@@ -1,0 +1,220 @@
+//! Pool autoscaling: grow or shrink serving capacity from load signals.
+//!
+//! Because CA-tasks are stateless, capacity decisions are cheap in both
+//! directions: a joining server is productive on its first tick (no state
+//! to warm), and a leaving server only needs to drain in-flight work.
+//! The policy reads two signals the coordinator already produces each
+//! tick — queue depth (CA-tasks per schedulable server) and the plan's
+//! load imbalance — and emits a bounded, cooldown-throttled decision.
+//! The scheduler's `Plan` is then recomputed against the new live
+//! membership, so scaling takes effect on the very next tick.
+
+use super::pool::ServerPool;
+
+/// Autoscaler knobs.
+#[derive(Debug, Clone)]
+pub struct AutoscaleCfg {
+    /// Never shrink below this many schedulable servers.
+    pub min_servers: usize,
+    /// Never grow beyond this many schedulable servers.
+    pub max_servers: usize,
+    /// Grow when tasks-per-server exceeds this.
+    pub queue_high: f64,
+    /// Shrink when tasks-per-server falls below this.
+    pub queue_low: f64,
+    /// Grow when plan imbalance (max/mean load) exceeds this — a sign the
+    /// pool is too small for the batch's skew to be spread.
+    pub imbalance_high: f64,
+    /// Ticks to wait between scaling actions.
+    pub cooldown_ticks: usize,
+}
+
+impl Default for AutoscaleCfg {
+    fn default() -> Self {
+        Self {
+            min_servers: 1,
+            max_servers: 64,
+            queue_high: 8.0,
+            queue_low: 2.0,
+            imbalance_high: 1.5,
+            cooldown_ticks: 2,
+        }
+    }
+}
+
+/// What to do this tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    Grow(usize),
+    Shrink(usize),
+    Hold,
+}
+
+/// Load signals for one tick.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadSignals {
+    /// CA-tasks per schedulable server this tick.
+    pub queue_depth: f64,
+    /// Plan imbalance (max server load / mean), ≥ 1.0.
+    pub imbalance: f64,
+}
+
+/// The scaling policy (stateful: cooldown tracking).
+#[derive(Debug, Clone)]
+pub struct Autoscaler {
+    pub cfg: AutoscaleCfg,
+    last_action_tick: Option<usize>,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscaleCfg) -> Autoscaler {
+        Autoscaler { cfg, last_action_tick: None }
+    }
+
+    fn in_cooldown(&self, tick: usize) -> bool {
+        self.last_action_tick
+            .map_or(false, |t| tick < t + self.cfg.cooldown_ticks)
+    }
+
+    /// Decide for `tick` given the pool's current size and load signals.
+    pub fn decide(&mut self, tick: usize, n_schedulable: usize, s: LoadSignals) -> ScaleDecision {
+        if self.in_cooldown(tick) {
+            return ScaleDecision::Hold;
+        }
+        let pressure = s.queue_depth > self.cfg.queue_high || s.imbalance > self.cfg.imbalance_high;
+        if pressure && n_schedulable < self.cfg.max_servers {
+            self.last_action_tick = Some(tick);
+            return ScaleDecision::Grow(1);
+        }
+        let idle = s.queue_depth < self.cfg.queue_low
+            && s.imbalance < self.cfg.imbalance_high
+            && n_schedulable > self.cfg.min_servers;
+        if idle {
+            self.last_action_tick = Some(tick);
+            return ScaleDecision::Shrink(1);
+        }
+        ScaleDecision::Hold
+    }
+
+    /// Apply a decision to the pool. Growth first restores dead servers
+    /// (capacity that already exists physically — e.g. a rejoinable
+    /// machine) before appending brand-new ones; shrink drains the
+    /// highest-id schedulable server (it finishes in-flight work and is
+    /// excluded from new plans). Returns the physical ids touched.
+    pub fn apply(&self, decision: ScaleDecision, pool: &mut ServerPool) -> Vec<usize> {
+        let mut touched = Vec::new();
+        match decision {
+            ScaleDecision::Hold => {}
+            ScaleDecision::Grow(n) => {
+                for _ in 0..n {
+                    if pool.n_schedulable() >= self.cfg.max_servers {
+                        break;
+                    }
+                    let dead = (0..pool.capacity())
+                        .find(|&s| matches!(pool.state(s), super::pool::ServerState::Dead));
+                    let id = match dead {
+                        Some(d) => {
+                            pool.restore(d);
+                            d
+                        }
+                        None => pool.join(),
+                    };
+                    touched.push(id);
+                }
+            }
+            ScaleDecision::Shrink(n) => {
+                for _ in 0..n {
+                    if pool.n_schedulable() <= self.cfg.min_servers {
+                        break;
+                    }
+                    let victim = *pool.schedulable().last().unwrap();
+                    pool.drain(victim);
+                    touched.push(victim);
+                }
+            }
+        }
+        touched
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elastic::pool::ServerState;
+
+    fn signals(q: f64, imb: f64) -> LoadSignals {
+        LoadSignals { queue_depth: q, imbalance: imb }
+    }
+
+    #[test]
+    fn grows_under_queue_pressure() {
+        let mut a = Autoscaler::new(AutoscaleCfg::default());
+        assert_eq!(a.decide(0, 4, signals(20.0, 1.0)), ScaleDecision::Grow(1));
+    }
+
+    #[test]
+    fn grows_under_imbalance() {
+        let mut a = Autoscaler::new(AutoscaleCfg::default());
+        assert_eq!(a.decide(0, 4, signals(4.0, 2.0)), ScaleDecision::Grow(1));
+    }
+
+    #[test]
+    fn shrinks_when_idle() {
+        let mut a = Autoscaler::new(AutoscaleCfg::default());
+        assert_eq!(a.decide(0, 4, signals(0.5, 1.01)), ScaleDecision::Shrink(1));
+    }
+
+    #[test]
+    fn holds_in_band_and_respects_bounds() {
+        let mut a = Autoscaler::new(AutoscaleCfg {
+            min_servers: 4,
+            max_servers: 4,
+            ..Default::default()
+        });
+        assert_eq!(a.decide(0, 4, signals(20.0, 3.0)), ScaleDecision::Hold);
+        assert_eq!(a.decide(1, 4, signals(0.1, 1.0)), ScaleDecision::Hold);
+        let mut b = Autoscaler::new(AutoscaleCfg::default());
+        assert_eq!(b.decide(0, 4, signals(5.0, 1.2)), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn cooldown_throttles() {
+        let mut a = Autoscaler::new(AutoscaleCfg { cooldown_ticks: 3, ..Default::default() });
+        assert_eq!(a.decide(0, 2, signals(20.0, 1.0)), ScaleDecision::Grow(1));
+        assert_eq!(a.decide(1, 3, signals(20.0, 1.0)), ScaleDecision::Hold);
+        assert_eq!(a.decide(2, 3, signals(20.0, 1.0)), ScaleDecision::Hold);
+        assert_eq!(a.decide(3, 3, signals(20.0, 1.0)), ScaleDecision::Grow(1));
+    }
+
+    #[test]
+    fn apply_grow_prefers_reviving_dead() {
+        let a = Autoscaler::new(AutoscaleCfg::default());
+        let mut pool = ServerPool::new(3);
+        pool.kill(1);
+        let touched = a.apply(ScaleDecision::Grow(1), &mut pool);
+        assert_eq!(touched, vec![1]);
+        assert_eq!(pool.state(1), ServerState::Healthy);
+        // No dead slot left: grow appends.
+        let touched = a.apply(ScaleDecision::Grow(1), &mut pool);
+        assert_eq!(touched, vec![3]);
+        assert_eq!(pool.capacity(), 4);
+    }
+
+    #[test]
+    fn apply_shrink_drains_highest() {
+        let a = Autoscaler::new(AutoscaleCfg::default());
+        let mut pool = ServerPool::new(3);
+        let touched = a.apply(ScaleDecision::Shrink(1), &mut pool);
+        assert_eq!(touched, vec![2]);
+        assert_eq!(pool.state(2), ServerState::Draining);
+        assert_eq!(pool.n_schedulable(), 2);
+    }
+
+    #[test]
+    fn apply_shrink_respects_min() {
+        let a = Autoscaler::new(AutoscaleCfg { min_servers: 2, ..Default::default() });
+        let mut pool = ServerPool::new(2);
+        assert!(a.apply(ScaleDecision::Shrink(1), &mut pool).is_empty());
+        assert_eq!(pool.n_schedulable(), 2);
+    }
+}

@@ -1,0 +1,358 @@
+//! Deterministic fault injection: a [`FaultPlan`] scripts exactly which
+//! server fails how and when, so recovery runs are reproducible
+//! byte-for-byte — the same plan drives both the discrete-event simulator
+//! and the real threaded runtime.
+//!
+//! Three event kinds (ticks are the scheduler's planning rounds):
+//!
+//! * `Kill { server, tick }` — the server dies *mid*-tick: work already
+//!   dispatched to it this tick is lost and must be re-dispatched;
+//! * `Slow { server, tick, factor }` — from this tick the server runs at
+//!   `factor` × nominal speed (0.25 = four times slower) until rejoined;
+//! * `Rejoin { server, tick }` — a dead or slowed server returns healthy.
+//!
+//! Plans come from three constructors: the builder API, the compact CLI
+//! spec grammar (`kill:1@3,slow:2@4x0.25,rejoin:1@6`), or
+//! [`FaultPlan::random`] seeded from a CLI-settable RNG seed.
+
+use crate::util::json::{Json, JsonError};
+use crate::util::rng::Rng;
+
+use super::pool::ServerPool;
+
+/// One scripted fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultEvent {
+    Kill { server: usize, tick: usize },
+    Slow { server: usize, tick: usize, factor: f64 },
+    Rejoin { server: usize, tick: usize },
+}
+
+impl FaultEvent {
+    pub fn tick(&self) -> usize {
+        match *self {
+            FaultEvent::Kill { tick, .. }
+            | FaultEvent::Slow { tick, .. }
+            | FaultEvent::Rejoin { tick, .. } => tick,
+        }
+    }
+
+    pub fn server(&self) -> usize {
+        match *self {
+            FaultEvent::Kill { server, .. }
+            | FaultEvent::Slow { server, .. }
+            | FaultEvent::Rejoin { server, .. } => server,
+        }
+    }
+
+    /// Compact spec form (inverse of [`FaultPlan::parse_spec`]).
+    pub fn to_spec(&self) -> String {
+        match *self {
+            FaultEvent::Kill { server, tick } => format!("kill:{server}@{tick}"),
+            FaultEvent::Slow { server, tick, factor } => {
+                format!("slow:{server}@{tick}x{factor}")
+            }
+            FaultEvent::Rejoin { server, tick } => format!("rejoin:{server}@{tick}"),
+        }
+    }
+}
+
+/// A deterministic script of fault events.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn kill(mut self, server: usize, tick: usize) -> FaultPlan {
+        self.events.push(FaultEvent::Kill { server, tick });
+        self
+    }
+
+    pub fn slow(mut self, server: usize, tick: usize, factor: f64) -> FaultPlan {
+        assert!(factor > 0.0 && factor.is_finite(), "bad slow factor {factor}");
+        self.events.push(FaultEvent::Slow { server, tick, factor });
+        self
+    }
+
+    pub fn rejoin(mut self, server: usize, tick: usize) -> FaultPlan {
+        self.events.push(FaultEvent::Rejoin { server, tick });
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Last tick any event fires at.
+    pub fn max_tick(&self) -> usize {
+        self.events.iter().map(|e| e.tick()).max().unwrap_or(0)
+    }
+
+    /// Events scheduled for `tick`, in insertion order.
+    pub fn events_at(&self, tick: usize) -> Vec<FaultEvent> {
+        self.events
+            .iter()
+            .copied()
+            .filter(|e| e.tick() == tick)
+            .collect()
+    }
+
+    /// Apply this tick's *membership* events to the pool: `Slow` degrades,
+    /// `Rejoin` restores. `Kill` is returned to the caller instead of
+    /// being applied — a kill lands mid-tick, so the executor must first
+    /// dispatch to the victim and only then sever it (that is what makes
+    /// re-dispatch observable). The caller marks the pool dead once the
+    /// tick's losses are accounted.
+    pub fn apply_tick(&self, tick: usize, pool: &mut ServerPool) -> Vec<FaultEvent> {
+        let mut kills = Vec::new();
+        for ev in self.events_at(tick) {
+            match ev {
+                FaultEvent::Slow { server, factor, .. } => {
+                    if server < pool.capacity() {
+                        pool.degrade(server, factor);
+                    }
+                }
+                FaultEvent::Rejoin { server, .. } => {
+                    if server < pool.capacity() {
+                        pool.restore(server);
+                    }
+                }
+                FaultEvent::Kill { .. } => kills.push(ev),
+            }
+        }
+        kills
+    }
+
+    /// Parse the compact CLI grammar: comma-separated events,
+    /// `kill:<srv>@<tick>`, `slow:<srv>@<tick>x<factor>`,
+    /// `rejoin:<srv>@<tick>`. Whitespace around entries is ignored.
+    pub fn parse_spec(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::new();
+        for entry in spec.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (kind, rest) = entry
+                .split_once(':')
+                .ok_or_else(|| format!("`{entry}`: expected <kind>:<srv>@<tick>"))?;
+            let (srv_s, tick_s) = rest
+                .split_once('@')
+                .ok_or_else(|| format!("`{entry}`: expected <srv>@<tick>"))?;
+            let server: usize = srv_s
+                .trim()
+                .parse()
+                .map_err(|_| format!("`{entry}`: bad server `{srv_s}`"))?;
+            match kind.trim() {
+                "kill" => {
+                    let tick = parse_tick(entry, tick_s)?;
+                    plan.events.push(FaultEvent::Kill { server, tick });
+                }
+                "rejoin" => {
+                    let tick = parse_tick(entry, tick_s)?;
+                    plan.events.push(FaultEvent::Rejoin { server, tick });
+                }
+                "slow" => {
+                    let (tick_s, factor_s) = tick_s
+                        .split_once('x')
+                        .ok_or_else(|| format!("`{entry}`: slow needs @<tick>x<factor>"))?;
+                    let tick = parse_tick(entry, tick_s)?;
+                    let factor: f64 = factor_s
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("`{entry}`: bad factor `{factor_s}`"))?;
+                    if !(factor > 0.0 && factor.is_finite()) {
+                        return Err(format!("`{entry}`: factor must be positive"));
+                    }
+                    plan.events.push(FaultEvent::Slow { server, tick, factor });
+                }
+                other => return Err(format!("`{entry}`: unknown fault kind `{other}`")),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Compact spec form of the whole plan.
+    pub fn to_spec(&self) -> String {
+        self.events
+            .iter()
+            .map(|e| e.to_spec())
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// A random-but-reproducible plan: `n_kills` kills (each rejoining
+    /// two ticks later when the horizon allows) and `n_slows` slowdowns
+    /// with factors in [0.2, 0.6]. Server 0 is never killed so the pool
+    /// stays non-empty even at n_servers = 2.
+    pub fn random(
+        rng: &mut Rng,
+        n_servers: usize,
+        n_ticks: usize,
+        n_kills: usize,
+        n_slows: usize,
+    ) -> FaultPlan {
+        assert!(n_servers >= 2, "need at least 2 servers to inject faults");
+        assert!(n_ticks >= 2, "need at least 2 ticks");
+        let mut plan = FaultPlan::new();
+        for _ in 0..n_kills {
+            let server = rng.gen_index(1, n_servers);
+            let tick = rng.gen_index(1, n_ticks);
+            plan.events.push(FaultEvent::Kill { server, tick });
+            if tick + 2 < n_ticks {
+                plan.events.push(FaultEvent::Rejoin { server, tick: tick + 2 });
+            }
+        }
+        for _ in 0..n_slows {
+            let server = rng.gen_index(1, n_servers);
+            let tick = rng.gen_index(1, n_ticks);
+            let factor = rng.gen_f64(0.2, 0.6);
+            plan.events.push(FaultEvent::Slow { server, tick, factor });
+        }
+        plan
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "events",
+            Json::Arr(
+                self.events
+                    .iter()
+                    .map(|e| match *e {
+                        FaultEvent::Kill { server, tick } => Json::obj(vec![
+                            ("kind", Json::Str("kill".into())),
+                            ("server", Json::Num(server as f64)),
+                            ("tick", Json::Num(tick as f64)),
+                        ]),
+                        FaultEvent::Slow { server, tick, factor } => Json::obj(vec![
+                            ("kind", Json::Str("slow".into())),
+                            ("server", Json::Num(server as f64)),
+                            ("tick", Json::Num(tick as f64)),
+                            ("factor", Json::Num(factor)),
+                        ]),
+                        FaultEvent::Rejoin { server, tick } => Json::obj(vec![
+                            ("kind", Json::Str("rejoin".into())),
+                            ("server", Json::Num(server as f64)),
+                            ("tick", Json::Num(tick as f64)),
+                        ]),
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+
+    pub fn from_json(v: &Json) -> Result<FaultPlan, JsonError> {
+        let events = v
+            .req("events")?
+            .as_arr()
+            .ok_or_else(|| JsonError("events must be an array".into()))?;
+        let mut plan = FaultPlan::new();
+        for e in events {
+            let kind = e
+                .req("kind")?
+                .as_str()
+                .ok_or_else(|| JsonError("kind must be a string".into()))?
+                .to_string();
+            let server = e
+                .req("server")?
+                .as_usize()
+                .ok_or_else(|| JsonError("server must be an integer".into()))?;
+            let tick = e
+                .req("tick")?
+                .as_usize()
+                .ok_or_else(|| JsonError("tick must be an integer".into()))?;
+            match kind.as_str() {
+                "kill" => plan.events.push(FaultEvent::Kill { server, tick }),
+                "rejoin" => plan.events.push(FaultEvent::Rejoin { server, tick }),
+                "slow" => {
+                    let factor = e
+                        .req("factor")?
+                        .as_f64()
+                        .ok_or_else(|| JsonError("factor must be a number".into()))?;
+                    plan.events.push(FaultEvent::Slow { server, tick, factor });
+                }
+                other => return Err(JsonError(format!("unknown fault kind `{other}`"))),
+            }
+        }
+        Ok(plan)
+    }
+}
+
+fn parse_tick(entry: &str, s: &str) -> Result<usize, String> {
+    s.trim()
+        .parse()
+        .map_err(|_| format!("`{entry}`: bad tick `{s}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elastic::pool::ServerState;
+
+    #[test]
+    fn builder_and_events_at() {
+        let p = FaultPlan::new().kill(1, 3).slow(2, 3, 0.5).rejoin(1, 6);
+        assert_eq!(p.max_tick(), 6);
+        assert_eq!(p.events_at(3).len(), 2);
+        assert_eq!(p.events_at(4).len(), 0);
+    }
+
+    #[test]
+    fn spec_roundtrip() {
+        let spec = "kill:1@3,slow:2@4x0.25,rejoin:1@6";
+        let p = FaultPlan::parse_spec(spec).unwrap();
+        assert_eq!(p.events.len(), 3);
+        assert_eq!(
+            p.events[1],
+            FaultEvent::Slow { server: 2, tick: 4, factor: 0.25 }
+        );
+        assert_eq!(p.to_spec(), spec);
+        // Tolerates whitespace and trailing commas.
+        assert_eq!(FaultPlan::parse_spec(" kill:0@1 , ").unwrap().events.len(), 1);
+    }
+
+    #[test]
+    fn spec_rejects_garbage() {
+        assert!(FaultPlan::parse_spec("kill:1").is_err());
+        assert!(FaultPlan::parse_spec("boom:1@2").is_err());
+        assert!(FaultPlan::parse_spec("slow:1@2").is_err());
+        assert!(FaultPlan::parse_spec("slow:1@2x-1").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = FaultPlan::new().kill(0, 1).slow(1, 2, 0.3).rejoin(0, 4);
+        let j = p.to_json();
+        let back = FaultPlan::from_json(&j).unwrap();
+        assert_eq!(p, back);
+    }
+
+    #[test]
+    fn apply_tick_defers_kills() {
+        let mut pool = ServerPool::new(3);
+        let p = FaultPlan::new().kill(1, 2).slow(2, 2, 0.5);
+        let kills = p.apply_tick(2, &mut pool);
+        assert_eq!(kills, vec![FaultEvent::Kill { server: 1, tick: 2 }]);
+        // Slow applied immediately; kill deferred to the executor.
+        assert_eq!(pool.state(2), ServerState::Degraded { speed: 0.5 });
+        assert!(pool.is_schedulable(1));
+    }
+
+    #[test]
+    fn random_plan_is_reproducible_and_valid() {
+        let mk = |seed| {
+            let mut rng = Rng::new(seed);
+            FaultPlan::random(&mut rng, 4, 8, 1, 1)
+        };
+        assert_eq!(mk(7), mk(7));
+        assert_ne!(mk(7), mk(8));
+        let p = mk(7);
+        assert!(p.events.iter().all(|e| e.server() >= 1 && e.server() < 4));
+        assert!(p.events.iter().all(|e| e.tick() < 8));
+    }
+}

@@ -1,0 +1,239 @@
+//! Per-server health signals: completion-latency EWMAs and straggler
+//! classification.
+//!
+//! The coordinator already predicts what a server's tick *should* cost
+//! (the §4.2 profiler); the monitor seeds each server's EWMA with that
+//! prediction so detection works from the very first tick, then folds in
+//! observed completion latencies. A server is a *straggler* when its
+//! EWMA exceeds a configurable multiple of the pool median — the same
+//! median-relative rule DISTFLASHATTN-style systems use, robust to the
+//! whole pool legitimately slowing down together (bigger batch, longer
+//! context) because the median moves with it.
+
+/// Knobs for health tracking.
+#[derive(Debug, Clone)]
+pub struct HealthCfg {
+    /// EWMA smoothing factor in (0, 1]: weight of the newest sample.
+    pub alpha: f64,
+    /// A server is a straggler when `ewma > straggler_factor × median`.
+    pub straggler_factor: f64,
+    /// Observations required before a server can be called a straggler
+    /// (priors seeded via [`HealthMonitor::seed`] count as one).
+    pub min_samples: usize,
+}
+
+impl Default for HealthCfg {
+    fn default() -> Self {
+        Self {
+            alpha: 0.3,
+            straggler_factor: 2.0,
+            min_samples: 1,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Ewma {
+    value: f64,
+    samples: usize,
+}
+
+/// Straggler verdict for one server.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    Ok,
+    Straggler,
+    /// No data yet — cannot be classified.
+    Unknown,
+}
+
+/// Tracks completion-latency EWMAs per physical server id.
+#[derive(Debug, Clone)]
+pub struct HealthMonitor {
+    cfg: HealthCfg,
+    ewma: Vec<Ewma>,
+}
+
+impl HealthMonitor {
+    pub fn new(n_servers: usize, cfg: HealthCfg) -> HealthMonitor {
+        HealthMonitor {
+            cfg,
+            ewma: vec![Ewma::default(); n_servers],
+        }
+    }
+
+    /// Grow to cover servers joined after construction.
+    pub fn ensure_capacity(&mut self, n: usize) {
+        if n > self.ewma.len() {
+            self.ewma.resize(n, Ewma::default());
+        }
+    }
+
+    /// Seed a server's EWMA with a predicted latency (profiler prior).
+    /// Overwrites nothing once real observations exist.
+    pub fn seed(&mut self, server: usize, predicted: f64) {
+        let e = &mut self.ewma[server];
+        if e.samples == 0 {
+            e.value = predicted;
+            e.samples = 1;
+        }
+    }
+
+    /// Fold in an observed completion latency (seconds).
+    pub fn observe(&mut self, server: usize, latency: f64) {
+        assert!(latency >= 0.0 && latency.is_finite(), "bad latency {latency}");
+        let e = &mut self.ewma[server];
+        if e.samples == 0 {
+            e.value = latency;
+        } else {
+            e.value = self.cfg.alpha * latency + (1.0 - self.cfg.alpha) * e.value;
+        }
+        e.samples += 1;
+    }
+
+    /// Forget a server's history (it rejoined as a new incarnation).
+    pub fn reset(&mut self, server: usize) {
+        self.ewma[server] = Ewma::default();
+    }
+
+    pub fn ewma(&self, server: usize) -> Option<f64> {
+        let e = self.ewma[server];
+        (e.samples > 0).then_some(e.value)
+    }
+
+    pub fn samples(&self, server: usize) -> usize {
+        self.ewma[server].samples
+    }
+
+    /// Median EWMA across the given (alive) servers with data.
+    pub fn median(&self, servers: &[usize]) -> Option<f64> {
+        let mut vals: Vec<f64> = servers
+            .iter()
+            .filter_map(|&s| self.ewma(s))
+            .collect();
+        if vals.is_empty() {
+            return None;
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(vals[vals.len() / 2])
+    }
+
+    /// Classify `server` against the pool of `alive` servers.
+    pub fn verdict(&self, server: usize, alive: &[usize]) -> Verdict {
+        let e = self.ewma[server];
+        if e.samples < self.cfg.min_samples {
+            return Verdict::Unknown;
+        }
+        let Some(med) = self.median(alive) else {
+            return Verdict::Unknown;
+        };
+        if med <= 0.0 {
+            return Verdict::Ok;
+        }
+        if e.value > self.cfg.straggler_factor * med {
+            Verdict::Straggler
+        } else {
+            Verdict::Ok
+        }
+    }
+
+    /// Convenience: is the server a straggler right now?
+    pub fn is_straggler(&self, server: usize, alive: &[usize]) -> bool {
+        self.verdict(server, alive) == Verdict::Straggler
+    }
+
+    /// The deadline after which outstanding work on a server should be
+    /// speculatively re-dispatched: `straggler_factor × median`, or
+    /// `fallback` when no history exists yet.
+    pub fn speculation_deadline(&self, alive: &[usize], fallback: f64) -> f64 {
+        match self.median(alive) {
+            Some(m) if m > 0.0 => self.cfg.straggler_factor * m,
+            _ => fallback,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mon(n: usize) -> HealthMonitor {
+        HealthMonitor::new(n, HealthCfg::default())
+    }
+
+    #[test]
+    fn ewma_tracks_observations() {
+        let mut m = mon(2);
+        m.observe(0, 1.0);
+        assert_eq!(m.ewma(0), Some(1.0));
+        m.observe(0, 2.0);
+        let e = m.ewma(0).unwrap();
+        assert!(e > 1.0 && e < 2.0, "ewma {e}");
+        assert_eq!(m.ewma(1), None);
+    }
+
+    #[test]
+    fn seed_only_applies_before_data() {
+        let mut m = mon(1);
+        m.seed(0, 5.0);
+        assert_eq!(m.ewma(0), Some(5.0));
+        m.observe(0, 1.0);
+        m.seed(0, 100.0); // ignored: real data exists
+        assert!(m.ewma(0).unwrap() < 5.0);
+    }
+
+    #[test]
+    fn straggler_vs_median() {
+        let mut m = mon(4);
+        let alive = [0usize, 1, 2, 3];
+        for s in 0..3 {
+            m.observe(s, 1.0);
+        }
+        m.observe(3, 10.0);
+        assert!(m.is_straggler(3, &alive));
+        assert!(!m.is_straggler(0, &alive));
+    }
+
+    #[test]
+    fn pool_wide_slowdown_is_not_straggling() {
+        // Everyone 10x slower: median moves, no one flagged.
+        let mut m = mon(3);
+        let alive = [0usize, 1, 2];
+        for s in 0..3 {
+            m.observe(s, 10.0);
+        }
+        assert!(alive.iter().all(|&s| !m.is_straggler(s, &alive)));
+    }
+
+    #[test]
+    fn unknown_until_min_samples() {
+        let m = mon(2);
+        assert_eq!(m.verdict(0, &[0, 1]), Verdict::Unknown);
+    }
+
+    #[test]
+    fn deadline_uses_median_or_fallback() {
+        let mut m = mon(2);
+        assert_eq!(m.speculation_deadline(&[0, 1], 0.5), 0.5);
+        m.observe(0, 1.0);
+        m.observe(1, 1.0);
+        assert!((m.speculation_deadline(&[0, 1], 0.5) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_clears_history() {
+        let mut m = mon(1);
+        m.observe(0, 3.0);
+        m.reset(0);
+        assert_eq!(m.ewma(0), None);
+        assert_eq!(m.samples(0), 0);
+    }
+
+    #[test]
+    fn capacity_grows_for_joins() {
+        let mut m = mon(1);
+        m.ensure_capacity(3);
+        m.observe(2, 1.0);
+        assert_eq!(m.ewma(2), Some(1.0));
+    }
+}

@@ -1,0 +1,54 @@
+//! Elastic attention-server pool: dynamic membership, failure injection,
+//! straggler mitigation, and autoscaling (DistCA §3's statelessness
+//! observation, operationalized).
+//!
+//! Core attention has no trainable parameters — a CA-task is transient
+//! (Q, KV) → O. The consequences this subsystem exploits:
+//!
+//! * a CA-task lost to a **dead** server is recovered by *resending the
+//!   same bytes* to any healthy server (one resend, no checkpoint);
+//! * a CA-task stuck on a **slow** server can be *speculatively
+//!   duplicated* — first response wins, duplicates are suppressed by the
+//!   existing `(doc, q_start)` tag scheme;
+//! * serving capacity can **grow or shrink between ticks** with zero
+//!   state motion: the §4.2 scheduler simply re-plans against the live
+//!   membership.
+//!
+//! Module map:
+//!
+//! * [`pool`] — [`pool::ServerPool`]: join/leave/drain/kill/restore
+//!   lifecycle, and the physical↔virtual [`pool::PoolView`] that feeds
+//!   live membership to the scheduler;
+//! * [`health`] — [`health::HealthMonitor`]: per-server completion-
+//!   latency EWMAs (seeded from profiler predictions) and median-relative
+//!   straggler verdicts;
+//! * [`fault`] — [`fault::FaultPlan`]: deterministic kill/slow/rejoin
+//!   scripts (builder, compact CLI spec, JSON, seeded-random), injectable
+//!   into both execution paths;
+//! * [`failover`] — the execution layer: the threaded
+//!   [`failover::ElasticCoordinator`] (dispatch → deadline-based
+//!   suspicion → cancel + re-dispatch → first-response-wins gather) and
+//!   the deterministic [`failover::run_elastic_sim`] on the
+//!   discrete-event engine (per-resource speed factors + revocation);
+//! * [`autoscale`] — [`autoscale::Autoscaler`]: queue-depth and
+//!   imbalance driven grow/shrink with cooldown.
+//!
+//! `distca elastic` drives this from the CLI; `examples/elastic_demo.rs`
+//! kills a server mid-run and proves the output still matches the
+//! monolithic oracle bit-for-bit; `benches/bench_elastic_recovery.rs`
+//! measures recovery time and goodput retention under fault plans.
+
+pub mod autoscale;
+pub mod failover;
+pub mod fault;
+pub mod health;
+pub mod pool;
+
+pub use autoscale::{AutoscaleCfg, Autoscaler, LoadSignals, ScaleDecision};
+pub use failover::{
+    run_elastic_sim, CaCompute, ElasticCfg, ElasticCoordinator, ElasticSimCfg,
+    ElasticSimReport, ElasticTask, ReferenceCaCompute, SimTick, TickStats,
+};
+pub use fault::{FaultEvent, FaultPlan};
+pub use health::{HealthCfg, HealthMonitor, Verdict};
+pub use pool::{PoolView, ServerPool, ServerState};

@@ -1,0 +1,287 @@
+//! Attention-server pool membership: who may execute CA-tasks right now.
+//!
+//! Core attention is stateless (no trainable parameters, only transient
+//! Q/KV/O), so serving capacity can change between — or even within —
+//! ticks without touching training state: a server that dies loses only
+//! re-sendable work, a joining server is useful from its first tick.
+//! [`ServerPool`] tracks that membership; [`PoolView`] translates between
+//! *physical* server ids (stable across the run, what the transport and
+//! fault plans name) and the dense *virtual* index space `[0, n_alive)`
+//! the §4.2 scheduler requires.
+
+use super::health::HealthMonitor;
+
+/// Lifecycle state of one attention server.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ServerState {
+    /// Serving at nominal speed.
+    Healthy,
+    /// Serving, but at `speed` × nominal rate (a straggler).
+    Degraded { speed: f64 },
+    /// Finishing in-flight work; receives no new assignments.
+    Draining,
+    /// Not serving (crashed, revoked, or drained out).
+    Dead,
+}
+
+/// One server's pool entry.
+#[derive(Debug, Clone)]
+pub struct ServerEntry {
+    pub state: ServerState,
+    /// Bumped every time the server (re)joins — stale responses from a
+    /// previous incarnation are identifiable by epoch.
+    pub epoch: u64,
+    /// Consecutive missed-deadline strikes (cleared on any completion).
+    pub strikes: u32,
+}
+
+/// Dynamic membership of the attention-server pool.
+#[derive(Debug, Clone)]
+pub struct ServerPool {
+    servers: Vec<ServerEntry>,
+    /// Global membership epoch: bumped on every join/leave/kill/restore,
+    /// so plan consumers can detect that a cached view went stale.
+    epoch: u64,
+}
+
+impl ServerPool {
+    /// A pool of `n` healthy servers.
+    pub fn new(n: usize) -> ServerPool {
+        ServerPool {
+            servers: vec![
+                ServerEntry { state: ServerState::Healthy, epoch: 0, strikes: 0 };
+                n
+            ],
+            epoch: 0,
+        }
+    }
+
+    /// Total slots ever allocated (alive or not) — the physical id space.
+    pub fn capacity(&self) -> usize {
+        self.servers.len()
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn state(&self, id: usize) -> ServerState {
+        self.servers[id].state
+    }
+
+    /// May `id` receive *new* assignments?
+    pub fn is_schedulable(&self, id: usize) -> bool {
+        matches!(
+            self.servers[id].state,
+            ServerState::Healthy | ServerState::Degraded { .. }
+        )
+    }
+
+    /// Physical ids eligible for new assignments, ascending.
+    pub fn schedulable(&self) -> Vec<usize> {
+        (0..self.servers.len())
+            .filter(|&s| self.is_schedulable(s))
+            .collect()
+    }
+
+    pub fn n_schedulable(&self) -> usize {
+        self.schedulable().len()
+    }
+
+    /// Execution-rate multiplier of a server (0 when not serving).
+    pub fn speed(&self, id: usize) -> f64 {
+        match self.servers[id].state {
+            ServerState::Healthy | ServerState::Draining => 1.0,
+            ServerState::Degraded { speed } => speed,
+            ServerState::Dead => 0.0,
+        }
+    }
+
+    /// Append a fresh healthy server; returns its physical id. The
+    /// health monitor (if any) must be grown alongside — see
+    /// [`HealthMonitor::ensure_capacity`].
+    pub fn join(&mut self) -> usize {
+        self.epoch += 1;
+        self.servers.push(ServerEntry {
+            state: ServerState::Healthy,
+            epoch: self.epoch,
+            strikes: 0,
+        });
+        self.servers.len() - 1
+    }
+
+    /// Immediate removal: crash / revocation. In-flight work is lost and
+    /// must be re-dispatched by the failover layer.
+    pub fn kill(&mut self, id: usize) {
+        self.epoch += 1;
+        self.servers[id].state = ServerState::Dead;
+    }
+
+    /// Graceful removal: stop assigning, let in-flight work finish.
+    pub fn drain(&mut self, id: usize) {
+        if self.is_schedulable(id) {
+            self.epoch += 1;
+            self.servers[id].state = ServerState::Draining;
+        }
+    }
+
+    /// Complete a drain (or confirm a death): the server leaves the pool.
+    pub fn leave(&mut self, id: usize) {
+        self.epoch += 1;
+        self.servers[id].state = ServerState::Dead;
+    }
+
+    /// A dead or draining server rejoins at nominal speed, new epoch.
+    pub fn restore(&mut self, id: usize) {
+        self.epoch += 1;
+        self.servers[id].state = ServerState::Healthy;
+        self.servers[id].epoch = self.epoch;
+        self.servers[id].strikes = 0;
+    }
+
+    /// Mark a server as running at `speed` × nominal (straggler). No-op
+    /// on dead or draining servers — a slowdown cannot resurrect one.
+    pub fn degrade(&mut self, id: usize, speed: f64) {
+        assert!(speed > 0.0 && speed.is_finite(), "bad speed {speed}");
+        if self.is_schedulable(id) {
+            self.epoch += 1;
+            self.servers[id].state = ServerState::Degraded { speed };
+        }
+    }
+
+    /// Register a missed deadline; returns the strike count. The caller
+    /// decides when strikes become a kill (see `ElasticCfg`).
+    pub fn strike(&mut self, id: usize) -> u32 {
+        self.servers[id].strikes += 1;
+        self.servers[id].strikes
+    }
+
+    pub fn clear_strikes(&mut self, id: usize) {
+        self.servers[id].strikes = 0;
+    }
+
+    /// Dense scheduling view over the currently schedulable servers.
+    /// Panics if the pool has none — the caller must check first.
+    pub fn view(&self) -> PoolView {
+        let phys = self.schedulable();
+        assert!(!phys.is_empty(), "no schedulable attention servers");
+        let mut virt_of = vec![None; self.servers.len()];
+        for (v, &p) in phys.iter().enumerate() {
+            virt_of[p] = Some(v);
+        }
+        PoolView { phys, virt_of, epoch: self.epoch }
+    }
+}
+
+/// A frozen physical↔virtual index mapping for one scheduling round.
+#[derive(Debug, Clone)]
+pub struct PoolView {
+    /// `phys[v]` = physical id of virtual server `v`.
+    phys: Vec<usize>,
+    /// `virt_of[p]` = virtual index of physical server `p`, if alive.
+    virt_of: Vec<Option<usize>>,
+    /// Pool epoch this view was taken at.
+    pub epoch: u64,
+}
+
+impl PoolView {
+    pub fn n(&self) -> usize {
+        self.phys.len()
+    }
+
+    pub fn to_physical(&self, virt: usize) -> usize {
+        self.phys[virt]
+    }
+
+    pub fn to_virtual(&self, phys: usize) -> Option<usize> {
+        self.virt_of.get(phys).copied().flatten()
+    }
+}
+
+/// Convenience: grow a health monitor to match pool capacity after joins.
+pub fn sync_health(pool: &ServerPool, health: &mut HealthMonitor) {
+    health.ensure_capacity(pool.capacity());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_transitions() {
+        let mut p = ServerPool::new(3);
+        assert_eq!(p.n_schedulable(), 3);
+        p.kill(1);
+        assert_eq!(p.schedulable(), vec![0, 2]);
+        assert_eq!(p.speed(1), 0.0);
+        p.restore(1);
+        assert_eq!(p.n_schedulable(), 3);
+        p.drain(2);
+        assert!(!p.is_schedulable(2));
+        assert_eq!(p.speed(2), 1.0, "draining still finishes work");
+        p.leave(2);
+        assert_eq!(p.state(2), ServerState::Dead);
+        let id = p.join();
+        assert_eq!(id, 3);
+        assert_eq!(p.schedulable(), vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn epoch_bumps_on_membership_change() {
+        let mut p = ServerPool::new(2);
+        let e0 = p.epoch();
+        p.kill(0);
+        assert!(p.epoch() > e0);
+        let e1 = p.epoch();
+        p.restore(0);
+        assert!(p.epoch() > e1);
+    }
+
+    #[test]
+    fn degrade_sets_speed() {
+        let mut p = ServerPool::new(2);
+        p.degrade(1, 0.25);
+        assert!(p.is_schedulable(1));
+        assert_eq!(p.speed(1), 0.25);
+        assert_eq!(p.speed(0), 1.0);
+    }
+
+    #[test]
+    fn degrade_cannot_resurrect_the_dead() {
+        let mut p = ServerPool::new(2);
+        p.kill(1);
+        p.degrade(1, 0.5);
+        assert_eq!(p.state(1), ServerState::Dead);
+        assert!(!p.is_schedulable(1));
+    }
+
+    #[test]
+    fn view_maps_physical_virtual() {
+        let mut p = ServerPool::new(4);
+        p.kill(1);
+        let v = p.view();
+        assert_eq!(v.n(), 3);
+        assert_eq!(v.to_physical(0), 0);
+        assert_eq!(v.to_physical(1), 2);
+        assert_eq!(v.to_physical(2), 3);
+        assert_eq!(v.to_virtual(2), Some(1));
+        assert_eq!(v.to_virtual(1), None);
+    }
+
+    #[test]
+    fn strikes_accumulate_and_clear() {
+        let mut p = ServerPool::new(1);
+        assert_eq!(p.strike(0), 1);
+        assert_eq!(p.strike(0), 2);
+        p.clear_strikes(0);
+        assert_eq!(p.strike(0), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn view_of_empty_pool_panics() {
+        let mut p = ServerPool::new(1);
+        p.kill(0);
+        p.view();
+    }
+}

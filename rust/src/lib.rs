@@ -6,12 +6,22 @@
 //!
 //! * **L3 (this crate)** — the coordinator: the communication-aware greedy
 //!   scheduler over token-level CA-tasks ([`coordinator`]), attention
-//!   servers ([`server`]), ping-pong overlap, pipeline integration
-//!   ([`parallel`]), a discrete-event cluster simulator ([`sim`]) standing
-//!   in for the paper's 512×H200 testbed, the baselines it compares
-//!   against ([`baselines`]), and a PJRT runtime ([`runtime`]) that
-//!   executes the AOT-compiled JAX/Pallas artifacts on the real CPU
-//!   backend.
+//!   servers ([`server`]), the elastic server pool — dynamic membership,
+//!   fault injection, straggler mitigation, autoscaling ([`elastic`]) —
+//!   ping-pong overlap, pipeline integration ([`parallel`]), a
+//!   discrete-event cluster simulator ([`sim`]) standing in for the
+//!   paper's 512×H200 testbed, the baselines it compares against
+//!   ([`baselines`]), and a PJRT runtime ([`runtime`]) that executes the
+//!   AOT-compiled JAX/Pallas artifacts on the real CPU backend.
+//!
+//! Fault tolerance rests on the paper's §3 observation that core
+//! attention is *stateless*: a CA-task is (Q, KV) → O with no trainable
+//! state, so a task lost to a dead server is recovered by resending the
+//! same bytes elsewhere, a straggler's tasks can be speculatively
+//! duplicated (first response wins, duplicates suppressed by the
+//! `(doc, q_start)` tag), and the pool can grow or shrink between ticks
+//! with the scheduler simply re-planning against live membership. See
+//! [`elastic`] for the module map and the `FaultPlan` format.
 //! * **L2 (python/compile/model.py)** — the JAX transformer split at the
 //!   core-attention boundary, lowered once to HLO text.
 //! * **L1 (python/compile/kernels/)** — the Pallas packed-varlen causal
@@ -28,6 +38,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod elastic;
 pub mod exchange;
 pub mod metrics;
 pub mod model;

@@ -16,7 +16,12 @@ use distca::config::{ClusterConfig, ModelConfig};
 use distca::coordinator::scheduler::items_from_chunks;
 use distca::coordinator::{schedule, Profiler, SchedulerCfg};
 use distca::data::distributions::sampler_for;
+use distca::elastic::{
+    run_elastic_sim, AutoscaleCfg, ElasticCfg, ElasticCoordinator, ElasticSimCfg, ElasticTask,
+    FaultPlan, ReferenceCaCompute,
+};
 use distca::model::FlopsModel;
+use distca::runtime::ca_exec::synthetic_task;
 use distca::runtime::train::{MarkovCorpus, TrainDriver};
 use distca::sim::strategies::{
     distca_placement, run_distca, run_packed_dp, run_perdoc_cp, run_wlb_ideal, SimParams,
@@ -29,6 +34,7 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("simulate", "simulate one iteration under --strategy"),
     ("compare", "DistCA vs WLB-ideal on one configuration"),
     ("schedule", "run the scheduler on a sampled batch; print the plan"),
+    ("elastic", "elastic server pool under a fault plan (sim or threaded)"),
     ("train", "train the tiny LM end-to-end via AOT artifacts"),
     ("bound", "Appendix A max-partition bound"),
     ("info", "print model & cluster configs"),
@@ -49,6 +55,12 @@ fn specs() -> Vec<FlagSpec> {
         FlagSpec { name: "seed", help: "PRNG seed", default: Some("42"), is_bool: false },
         FlagSpec { name: "batches", help: "batches to average", default: Some("5"), is_bool: false },
         FlagSpec { name: "steps", help: "train steps (train)", default: Some("100"), is_bool: false },
+        FlagSpec { name: "ticks", help: "scheduling rounds (elastic)", default: Some("4"), is_bool: false },
+        FlagSpec { name: "servers", help: "pool size (elastic; default: gpus/tp)", default: None, is_bool: false },
+        FlagSpec { name: "runtime", help: "sim | threaded (elastic)", default: Some("sim"), is_bool: false },
+        FlagSpec { name: "fault", help: "fault spec, e.g. kill:1@2,slow:2@1x0.25,rejoin:1@3", default: None, is_bool: false },
+        FlagSpec { name: "fault-plan", help: "JSON fault-plan file (elastic)", default: None, is_bool: false },
+        FlagSpec { name: "autoscale", help: "enable pool autoscaling (elastic)", default: None, is_bool: true },
         FlagSpec { name: "json", help: "emit JSON instead of tables", default: None, is_bool: true },
         FlagSpec { name: "verbose", help: "debug logging", default: None, is_bool: true },
     ]
@@ -71,6 +83,7 @@ fn main() {
         Some("simulate") => cmd_simulate(&args),
         Some("compare") => cmd_compare(&args),
         Some("schedule") => cmd_schedule(&args),
+        Some("elastic") => cmd_elastic(&args),
         Some("train") => cmd_train(&args),
         Some("bound") => cmd_bound(&args),
         Some("info") => cmd_info(&args),
@@ -255,6 +268,185 @@ fn cmd_schedule(args: &Args) -> anyhow::Result<()> {
             plan.local_fraction() * 100.0
         );
     }
+    Ok(())
+}
+
+/// Resolve the fault plan from `--fault-plan` (JSON file), `--fault`
+/// (compact spec), or — when neither is given — a seeded random plan.
+fn fault_plan_from(args: &Args, n_servers: usize, ticks: usize, seed: u64) -> anyhow::Result<FaultPlan> {
+    if let Some(path) = args.get("fault-plan") {
+        let j = distca::util::json::parse_file(std::path::Path::new(path))
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        return FaultPlan::from_json(&j).map_err(|e| anyhow::anyhow!("{path}: {e}"));
+    }
+    if let Some(spec) = args.get("fault") {
+        return FaultPlan::parse_spec(spec).map_err(|e| anyhow::anyhow!(e));
+    }
+    anyhow::ensure!(n_servers >= 2 && ticks >= 2, "random fault plan needs >=2 servers and ticks");
+    let mut rng = Rng::new(seed ^ 0xFA17_FA17);
+    Ok(FaultPlan::random(&mut rng, n_servers, ticks, 1, 1))
+}
+
+fn cmd_elastic(args: &Args) -> anyhow::Result<()> {
+    let s = setup(args)?;
+    let n = args.get_usize("servers", s.params.n_logical())?;
+    anyhow::ensure!(n >= 2, "--servers must be at least 2");
+    let ticks = args.get_usize("ticks", 4)?;
+    let fault = fault_plan_from(args, n, ticks, s.seed)?;
+    match args.req("runtime")? {
+        "sim" => cmd_elastic_sim(args, &s, n, ticks, &fault),
+        "threaded" => cmd_elastic_threaded(args, n, ticks, s.seed, &fault),
+        other => anyhow::bail!("--runtime must be sim or threaded, got `{other}`"),
+    }
+}
+
+fn cmd_elastic_sim(
+    args: &Args,
+    s: &Setup,
+    n: usize,
+    ticks: usize,
+    fault: &FaultPlan,
+) -> anyhow::Result<()> {
+    let batches: Vec<Vec<distca::data::Document>> = (0..ticks)
+        .map(|t| {
+            let mut rng = Rng::new(s.seed + t as u64 * 7919);
+            sampler_for(s.data, s.max_doc).sample_tokens(&mut rng, s.tokens, 0)
+        })
+        .collect();
+    let cfg = ElasticSimCfg {
+        autoscale: args.get_bool("autoscale").then(AutoscaleCfg::default),
+        ..Default::default()
+    };
+    let report = run_elastic_sim(&batches, n, &s.params, fault, &cfg)?;
+    if args.get_bool("json") {
+        println!("{}", report.to_json().to_string_pretty());
+        return Ok(());
+    }
+    let mut t = Table::new(
+        &format!(
+            "elastic sim: {n} servers, {ticks} ticks, fault plan [{}]",
+            if fault.is_empty() { "none".to_string() } else { fault.to_spec() }
+        ),
+        &["tick", "alive", "tasks", "lost", "redisp", "spec", "tick time", "fault-free", "goodput", "events"],
+    );
+    for r in &report.per_tick {
+        t.row(&[
+            r.tick.to_string(),
+            r.n_alive.to_string(),
+            r.n_tasks.to_string(),
+            r.lost_tasks.to_string(),
+            r.redispatched.to_string(),
+            r.speculated.to_string(),
+            secs(r.tick_time),
+            secs(r.fault_free_time),
+            fmt_f(r.goodput, 3),
+            r.events.join(" "),
+        ]);
+    }
+    t.print();
+    println!(
+        "total {} | fault-free {} | recovery overhead {} | goodput ratio {:.3} | {} re-dispatched, {} lost",
+        secs(report.total_time),
+        secs(report.fault_free_time),
+        secs(report.recovery_overhead()),
+        report.goodput_ratio(),
+        report.redispatched,
+        report.lost_tasks,
+    );
+    Ok(())
+}
+
+fn cmd_elastic_threaded(
+    args: &Args,
+    n: usize,
+    ticks: usize,
+    seed: u64,
+    fault: &FaultPlan,
+) -> anyhow::Result<()> {
+    const H: usize = 4;
+    const HKV: usize = 2;
+    const D: usize = 16;
+    let oracle = ReferenceCaCompute::new(H, HKV, D);
+    let mut co = ElasticCoordinator::spawn(n, ElasticCfg::default(), |_| {
+        Box::new(ReferenceCaCompute::new(H, HKV, D))
+    });
+    let mut rng = Rng::new(seed);
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for tick in 0..ticks {
+        let alive = co.pool.schedulable();
+        anyhow::ensure!(!alive.is_empty(), "tick {tick}: pool is empty");
+        let mut tasks = Vec::new();
+        for i in 0..2 * n {
+            let len = if i % 3 == 0 { 256 } else { 128 };
+            let server = alive[i % alive.len()];
+            tasks.push(ElasticTask {
+                doc: (tick * 1000 + i) as u32,
+                q_start: 0,
+                server,
+                home: server,
+                tensors: synthetic_task(&mut rng, len, len, H, HKV, D),
+            });
+        }
+        let outputs = co.run_tick(tick, &tasks, fault)?;
+        for out in &outputs {
+            let task = tasks
+                .iter()
+                .find(|t| t.doc == out.doc && t.q_start == out.q_start)
+                .expect("unknown output");
+            let expect = oracle.run_batch(std::slice::from_ref(&task.tensors));
+            anyhow::ensure!(out.o == expect[0], "tick {tick} doc {}: output diverged", out.doc);
+        }
+        let st = co.stats.last().unwrap();
+        rows.push(vec![
+            tick.to_string(),
+            alive.len().to_string(),
+            st.n_tasks.to_string(),
+            st.redispatched.to_string(),
+            st.cancels_sent.to_string(),
+            st.duplicates_suppressed.to_string(),
+            secs(st.elapsed),
+        ]);
+    }
+    let stats = co.shutdown()?;
+    if args.get_bool("json") {
+        let per_tick: Vec<Json> = stats
+            .iter()
+            .map(|st| {
+                Json::obj(vec![
+                    ("tick", Json::Num(st.tick as f64)),
+                    ("tasks", Json::Num(st.n_tasks as f64)),
+                    ("redispatched", Json::Num(st.redispatched as f64)),
+                    ("cancels_sent", Json::Num(st.cancels_sent as f64)),
+                    ("duplicates_suppressed", Json::Num(st.duplicates_suppressed as f64)),
+                    ("deadline_rounds", Json::Num(st.deadline_rounds as f64)),
+                    ("elapsed_s", Json::Num(st.elapsed)),
+                ])
+            })
+            .collect();
+        let j = Json::obj(vec![
+            ("servers", Json::Num(n as f64)),
+            ("ticks", Json::Num(ticks as f64)),
+            ("fault_plan", Json::Str(fault.to_spec())),
+            ("bit_exact", Json::Bool(true)),
+            ("per_tick", Json::Arr(per_tick)),
+        ]);
+        println!("{}", j.to_string_pretty());
+        return Ok(());
+    }
+    let mut t = Table::new(
+        &format!(
+            "elastic threaded: {n} reference servers, {ticks} ticks, fault plan [{}] — all outputs bit-exact",
+            if fault.is_empty() { "none".to_string() } else { fault.to_spec() }
+        ),
+        &["tick", "alive", "tasks", "redisp", "cancels", "dups", "elapsed"],
+    );
+    for r in rows {
+        t.row(&r);
+    }
+    t.print();
+    let redisp: usize = stats.iter().map(|s| s.redispatched).sum();
+    let dups: usize = stats.iter().map(|s| s.duplicates_suppressed).sum();
+    println!("re-dispatched {redisp} | duplicates suppressed {dups} | outputs verified against the monolithic oracle");
     Ok(())
 }
 

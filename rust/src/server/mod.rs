@@ -36,20 +36,32 @@ struct WireTask {
     home: usize,
 }
 
-fn pack_tag(doc: u32, q_start: u32) -> u64 {
+pub(crate) fn pack_tag(doc: u32, q_start: u32) -> u64 {
     ((doc as u64) << 32) | q_start as u64
 }
 
-fn unpack_tag(tag: u64) -> (u32, u32) {
+pub(crate) fn unpack_tag(tag: u64) -> (u32, u32) {
     ((tag >> 32) as u32, tag as u32)
+}
+
+/// Ship an integer header word inside an f32 payload slot *bit-cast*, not
+/// value-cast: `as f32` is exact only below 2^24, which long-context
+/// lengths exceed. The bit pattern round-trips any u32 losslessly.
+pub(crate) fn header_word(x: usize) -> f32 {
+    f32::from_bits(u32::try_from(x).expect("header word exceeds u32"))
+}
+
+/// Inverse of [`header_word`].
+pub(crate) fn header_usize(w: f32) -> usize {
+    w.to_bits() as usize
 }
 
 /// Serialize a task into one message payload:
 /// [q_len, kv_len, q..., k..., v...].
 fn encode(t: &WireTask) -> Message {
     let mut payload = Vec::with_capacity(2 + t.tensors.q.len() + 2 * t.tensors.k.len());
-    payload.push(t.tensors.q_len as f32);
-    payload.push(t.tensors.kv_len as f32);
+    payload.push(header_word(t.tensors.q_len));
+    payload.push(header_word(t.tensors.kv_len));
     payload.extend_from_slice(&t.tensors.q);
     payload.extend_from_slice(&t.tensors.k);
     payload.extend_from_slice(&t.tensors.v);
@@ -57,8 +69,8 @@ fn encode(t: &WireTask) -> Message {
 }
 
 fn decode(msg: &Message, n_heads: usize, n_kv_heads: usize, d: usize) -> (CaTaskTensors, u64, usize) {
-    let q_len = msg.payload[0] as usize;
-    let kv_len = msg.payload[1] as usize;
+    let q_len = header_usize(msg.payload[0]);
+    let kv_len = header_usize(msg.payload[1]);
     let q_sz = q_len * n_heads * d;
     let kv_sz = kv_len * n_kv_heads * d;
     let base = 2;
@@ -222,5 +234,17 @@ mod tests {
         assert_eq!(tensors.v, t.tensors.v);
         assert_eq!(tag, t.tag);
         assert_eq!(home, 1);
+    }
+
+    #[test]
+    fn header_words_exact_beyond_f32_mantissa() {
+        // `as f32` rounds above 2^24; the bit-cast must not. 2^24 + 1 and
+        // a realistic 128M-token context both round-trip exactly.
+        for len in [0usize, 1, (1 << 24) + 1, (1 << 27) + 3, (1 << 30) + 7] {
+            assert_eq!(header_usize(header_word(len)), len, "len {len}");
+        }
+        // The old value-cast demonstrably loses the +1.
+        let lossy = ((1usize << 24) + 1) as f32 as usize;
+        assert_ne!(lossy, (1 << 24) + 1);
     }
 }

@@ -8,6 +8,20 @@
 //! order. This is a classic list-scheduling event simulation — O((T + E)
 //! log T) — fast enough to sweep the paper's 512-GPU configurations in
 //! milliseconds.
+//!
+//! For the elastic attention-server pool the engine additionally models
+//! *degraded* and *revoked* resources:
+//!
+//! * [`Engine::set_speed`] scales a resource's execution rate (a 0.5×
+//!   resource takes 2× the nominal duration) — the straggler model;
+//! * [`Engine::revoke_resource`] declares a resource dead from a given
+//!   time: a task running past that instant is cut short and marked
+//!   revoked (its partial work is lost — core attention is stateless, so
+//!   nothing else is), queued tasks on the resource never start, and
+//!   every transitive dependent of a revoked task is revoked with it.
+//!   [`Engine::revoked`] lists the casualties so a failover layer can
+//!   re-dispatch them (typically via [`Engine::add_task_at`] in a
+//!   recovery wave, earliest-started at detection time).
 
 use std::collections::BinaryHeap;
 
@@ -23,12 +37,22 @@ struct Task {
     duration: f64,
     /// number of unfinished deps
     pending: usize,
-    /// earliest start permitted by deps
+    /// earliest start permitted by deps (and `add_task_at`)
     ready_at: f64,
     start: f64,
     finish: f64,
+    started: bool,
     done: bool,
+    revoked: bool,
     tag: u32,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum EventKind {
+    /// A running task reaches its finish (or cut-short) time.
+    Finish,
+    /// A future `ready_at` arrives; re-run the start phase.
+    Wake,
 }
 
 /// Min-heap item ordered by time.
@@ -36,6 +60,7 @@ struct Task {
 struct Event {
     time: f64,
     task: TaskId,
+    kind: EventKind,
 }
 
 impl Eq for Event {}
@@ -48,12 +73,14 @@ impl PartialOrd for Event {
 
 impl Ord for Event {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // Reverse for min-heap; tie-break on task id for determinism.
+        // Reverse for min-heap; tie-break on task id then kind for
+        // determinism (Finish before Wake at equal time/task).
         other
             .time
             .partial_cmp(&self.time)
             .unwrap()
             .then(other.task.cmp(&self.task))
+            .then((other.kind == EventKind::Wake).cmp(&(self.kind == EventKind::Wake)))
     }
 }
 
@@ -63,6 +90,10 @@ pub struct Engine {
     tasks: Vec<Task>,
     dependents: Vec<Vec<TaskId>>,
     n_resources: usize,
+    /// Execution-rate multiplier per resource (1.0 = nominal).
+    speed: Vec<f64>,
+    /// Time at which each resource dies, if ever.
+    revoked_at: Vec<Option<f64>>,
 }
 
 impl Engine {
@@ -71,12 +102,16 @@ impl Engine {
             tasks: Vec::new(),
             dependents: Vec::new(),
             n_resources,
+            speed: vec![1.0; n_resources],
+            revoked_at: vec![None; n_resources],
         }
     }
 
     /// Allocate an extra resource lane (e.g. a comm stream added late).
     pub fn add_resource(&mut self) -> ResourceId {
         self.n_resources += 1;
+        self.speed.push(1.0);
+        self.revoked_at.push(None);
         self.n_resources - 1
     }
 
@@ -84,9 +119,28 @@ impl Engine {
         self.n_resources
     }
 
+    /// Set a resource's execution-rate multiplier: tasks on it take
+    /// `duration / factor`. A factor below 1.0 models a straggler.
+    pub fn set_speed(&mut self, resource: ResourceId, factor: f64) {
+        assert!(resource < self.n_resources, "bad resource {resource}");
+        assert!(factor > 0.0 && factor.is_finite(), "bad speed {factor}");
+        self.speed[resource] = factor;
+    }
+
+    /// Declare `resource` dead from time `t` onward (earliest call wins).
+    /// Must be called before [`Engine::run`].
+    pub fn revoke_resource(&mut self, resource: ResourceId, t: f64) {
+        assert!(resource < self.n_resources, "bad resource {resource}");
+        assert!(t >= 0.0 && t.is_finite(), "bad revocation time {t}");
+        self.revoked_at[resource] = Some(match self.revoked_at[resource] {
+            Some(prev) => prev.min(t),
+            None => t,
+        });
+    }
+
     /// Add a task occupying `resource` for `duration` after `deps`.
     pub fn add_task(&mut self, resource: ResourceId, duration: f64, deps: &[TaskId]) -> TaskId {
-        self.add_task_tagged(resource, duration, deps, 0)
+        self.add_task_full(resource, duration, deps, 0, 0.0)
     }
 
     /// Tagged variant (tags let reports aggregate by kind).
@@ -97,8 +151,35 @@ impl Engine {
         deps: &[TaskId],
         tag: u32,
     ) -> TaskId {
+        self.add_task_full(resource, duration, deps, tag, 0.0)
+    }
+
+    /// Variant with an earliest-start time — the recovery-wave primitive:
+    /// a re-dispatched task cannot begin before the failure is detected.
+    pub fn add_task_at(
+        &mut self,
+        resource: ResourceId,
+        duration: f64,
+        deps: &[TaskId],
+        earliest_start: f64,
+    ) -> TaskId {
+        self.add_task_full(resource, duration, deps, 0, earliest_start)
+    }
+
+    fn add_task_full(
+        &mut self,
+        resource: ResourceId,
+        duration: f64,
+        deps: &[TaskId],
+        tag: u32,
+        earliest_start: f64,
+    ) -> TaskId {
         assert!(resource < self.n_resources, "bad resource {resource}");
         assert!(duration >= 0.0 && duration.is_finite(), "bad duration {duration}");
+        assert!(
+            earliest_start >= 0.0 && earliest_start.is_finite(),
+            "bad earliest_start {earliest_start}"
+        );
         let id = self.tasks.len();
         for &d in deps {
             assert!(d < id, "dep {d} must precede task {id}");
@@ -107,10 +188,12 @@ impl Engine {
             resource,
             duration,
             pending: deps.len(),
-            ready_at: 0.0,
+            ready_at: earliest_start,
             start: 0.0,
             finish: 0.0,
+            started: false,
             done: false,
+            revoked: false,
             tag,
         });
         self.dependents.push(Vec::new());
@@ -120,7 +203,29 @@ impl Engine {
         id
     }
 
-    /// Run the simulation; returns the makespan.
+    /// Mark `tid` revoked at `time` and cascade to every transitive
+    /// dependent (a task whose dependency never completes can never run).
+    /// Returns how many tasks were newly revoked.
+    fn revoke_cascade(&mut self, tid: TaskId, time: f64) -> usize {
+        let mut count = 0usize;
+        let mut work = vec![tid];
+        while let Some(t) = work.pop() {
+            if self.tasks[t].done || self.tasks[t].revoked {
+                continue;
+            }
+            self.tasks[t].revoked = true;
+            if !self.tasks[t].started {
+                self.tasks[t].start = time;
+            }
+            self.tasks[t].finish = time;
+            count += 1;
+            work.extend(self.dependents[t].iter().copied());
+        }
+        count
+    }
+
+    /// Run the simulation; returns the makespan of executed work (revoked
+    /// tasks count only up to their cut-short time).
     pub fn run(&mut self) -> f64 {
         let n = self.tasks.len();
         if n == 0 {
@@ -135,58 +240,99 @@ impl Engine {
         let mut res_busy = vec![false; self.n_resources];
         let mut heap: BinaryHeap<Event> = BinaryHeap::new();
         let mut completed = 0usize;
+        let mut revoked_count = 0usize;
         let mut makespan = 0.0f64;
 
         for (id, t) in self.tasks.iter().enumerate() {
             if t.pending == 0 {
                 ready[t.resource].push_back(id);
+                if t.ready_at > 0.0 {
+                    heap.push(Event { time: t.ready_at, task: id, kind: EventKind::Wake });
+                }
             }
         }
-        // Kick off initial tasks.
         let mut now = 0.0f64;
         loop {
-            // Start every idle resource's next ready task.
+            // Start every idle resource's next ready task (program order:
+            // only the queue front may start; revoked entries drain).
             for r in 0..self.n_resources {
                 if res_busy[r] {
                     continue;
                 }
-                // find first ready task whose ready_at <= now
-                if let Some(&cand) = ready[r].front() {
+                while let Some(&cand) = ready[r].front() {
+                    if self.tasks[cand].revoked {
+                        ready[r].pop_front();
+                        continue;
+                    }
+                    if let Some(rt) = self.revoked_at[r] {
+                        if now + 1e-18 >= rt {
+                            // Dead resource: everything queued is lost.
+                            ready[r].pop_front();
+                            revoked_count += self.revoke_cascade(cand, now.max(rt));
+                            continue;
+                        }
+                    }
                     let t = &self.tasks[cand];
                     let start = now.max(res_free_at[r]).max(t.ready_at);
                     if start <= now + 1e-18 {
                         ready[r].pop_front();
+                        let mut finish = now + self.tasks[cand].duration / self.speed[r];
+                        if let Some(rt) = self.revoked_at[r] {
+                            // The task will be interrupted mid-flight.
+                            finish = finish.min(rt);
+                        }
                         let task = &mut self.tasks[cand];
                         task.start = now;
-                        task.finish = now + task.duration;
+                        task.finish = finish;
+                        task.started = true;
                         res_busy[r] = true;
-                        res_free_at[r] = task.finish;
-                        heap.push(Event { time: task.finish, task: cand });
+                        res_free_at[r] = finish;
+                        heap.push(Event { time: finish, task: cand, kind: EventKind::Finish });
                     }
+                    break;
                 }
             }
-            // Advance to next completion.
+            // Advance to the next event.
             let ev = match heap.pop() {
                 Some(e) => e,
                 None => break,
             };
-            now = ev.time;
-            makespan = makespan.max(now);
+            now = now.max(ev.time);
+            if ev.kind == EventKind::Wake {
+                continue; // a ready_at arrived; retry the start phase
+            }
             let tid = ev.task;
+            makespan = makespan.max(ev.time);
+            let r = self.tasks[tid].resource;
+            res_busy[r] = false;
+            let interrupted = self.revoked_at[r].map_or(false, |rt| ev.time + 1e-18 >= rt);
+            if interrupted {
+                revoked_count += self.revoke_cascade(tid, ev.time);
+                continue;
+            }
             self.tasks[tid].done = true;
             completed += 1;
-            res_busy[self.tasks[tid].resource] = false;
             let deps_of: Vec<TaskId> = self.dependents[tid].clone();
             for dep in deps_of {
                 let t = &mut self.tasks[dep];
+                if t.revoked {
+                    continue;
+                }
                 t.pending -= 1;
                 t.ready_at = t.ready_at.max(now);
                 if t.pending == 0 {
                     ready[t.resource].push_back(dep);
+                    if t.ready_at > now + 1e-18 {
+                        heap.push(Event { time: t.ready_at, task: dep, kind: EventKind::Wake });
+                    }
                 }
             }
         }
-        assert_eq!(completed, n, "deadlock: {} of {n} tasks completed", completed);
+        assert_eq!(
+            completed + revoked_count,
+            n,
+            "deadlock: {completed} done + {revoked_count} revoked of {n} tasks"
+        );
         makespan
     }
 
@@ -196,11 +342,35 @@ impl Engine {
         self.tasks[id].finish
     }
 
-    /// Busy time per resource (after `run`).
+    /// Did the task complete (vs. being revoked)?
+    pub fn is_done(&self, id: TaskId) -> bool {
+        self.tasks[id].done
+    }
+
+    /// Tasks revoked during `run` (directly or by cascade), in id order.
+    pub fn revoked(&self) -> Vec<TaskId> {
+        self.tasks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.revoked)
+            .map(|(id, _)| id)
+            .collect()
+    }
+
+    /// Time at which a revoked task was cut (its lost work ends there).
+    pub fn revoke_time_of(&self, id: TaskId) -> f64 {
+        assert!(self.tasks[id].revoked, "task {id} was not revoked");
+        self.tasks[id].finish
+    }
+
+    /// Busy time per resource (after `run`): actual occupancy, including
+    /// the partial occupancy of interrupted tasks and speed scaling.
     pub fn busy_per_resource(&self) -> Vec<f64> {
         let mut busy = vec![0.0; self.n_resources];
         for t in &self.tasks {
-            busy[t.resource] += t.duration;
+            if t.started {
+                busy[t.resource] += t.finish - t.start;
+            }
         }
         busy
     }
@@ -209,8 +379,8 @@ impl Engine {
     pub fn busy_per_resource_tagged(&self, tag: u32) -> Vec<f64> {
         let mut busy = vec![0.0; self.n_resources];
         for t in &self.tasks {
-            if t.tag == tag {
-                busy[t.resource] += t.duration;
+            if t.tag == tag && t.started {
+                busy[t.resource] += t.finish - t.start;
             }
         }
         busy
@@ -333,5 +503,99 @@ mod tests {
             e.run()
         };
         assert_eq!(build(), build());
+    }
+
+    // ----- elastic extensions -------------------------------------------
+
+    #[test]
+    fn slow_resource_stretches_duration() {
+        let mut e = Engine::new(2);
+        e.set_speed(1, 0.5); // half rate => 2x duration
+        let a = e.add_task(0, 1.0, &[]);
+        let b = e.add_task(1, 1.0, &[]);
+        assert!((e.run() - 2.0).abs() < 1e-12);
+        assert!((e.finish_of(a) - 1.0).abs() < 1e-12);
+        assert!((e.finish_of(b) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn earliest_start_respected() {
+        let mut e = Engine::new(1);
+        let a = e.add_task_at(0, 1.0, &[], 5.0);
+        assert!((e.run() - 6.0).abs() < 1e-12);
+        assert!((e.finish_of(a) - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn revoked_resource_cuts_running_task() {
+        let mut e = Engine::new(2);
+        let a = e.add_task(0, 10.0, &[]); // cut at t=3
+        let b = e.add_task(1, 4.0, &[]);
+        e.revoke_resource(0, 3.0);
+        let makespan = e.run();
+        assert!((makespan - 4.0).abs() < 1e-12, "makespan {makespan}");
+        assert_eq!(e.revoked(), vec![a]);
+        assert!(!e.is_done(a));
+        assert!(e.is_done(b));
+        assert!((e.revoke_time_of(a) - 3.0).abs() < 1e-12);
+        // Occupancy accounting includes the lost partial work.
+        assert!((e.busy_per_resource()[0] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn revocation_cascades_to_dependents() {
+        let mut e = Engine::new(2);
+        let a = e.add_task(0, 2.0, &[]); // revoked at t=1
+        let b = e.add_task(1, 1.0, &[a]); // can never run
+        let c = e.add_task(1, 1.0, &[]); // independent, completes
+        e.revoke_resource(0, 1.0);
+        e.run();
+        assert_eq!(e.revoked(), vec![a, b]);
+        assert!(e.is_done(c));
+    }
+
+    #[test]
+    fn queued_tasks_on_dead_resource_never_start() {
+        let mut e = Engine::new(2);
+        let a = e.add_task(0, 2.0, &[]); // cut at 1
+        let b = e.add_task(0, 2.0, &[]); // queued behind a: revoked, 0 busy
+        let c = e.add_task(1, 5.0, &[]);
+        e.revoke_resource(0, 1.0);
+        let makespan = e.run();
+        assert_eq!(e.revoked(), vec![a, b]);
+        assert!((makespan - 5.0).abs() < 1e-12);
+        assert!((e.busy_per_resource()[0] - 1.0).abs() < 1e-12);
+        let _ = c;
+    }
+
+    #[test]
+    fn recovery_wave_after_revocation() {
+        // The failover pattern: wave 0 loses a task at t=1; the caller
+        // re-dispatches an equivalent task on a healthy resource with an
+        // earliest start at detection time.
+        let mut e = Engine::new(2);
+        let lost = e.add_task(0, 3.0, &[]);
+        e.add_task(1, 1.0, &[]);
+        e.revoke_resource(0, 1.0);
+        e.run();
+        assert_eq!(e.revoked(), vec![lost]);
+
+        let detect = 1.0 + 0.25;
+        let mut r = Engine::new(2);
+        let re = r.add_task_at(1, 3.0, &[], detect);
+        let makespan = r.run();
+        assert!((makespan - (detect + 3.0)).abs() < 1e-12);
+        assert!(r.is_done(re));
+    }
+
+    #[test]
+    fn revoked_at_time_zero_runs_nothing() {
+        let mut e = Engine::new(1);
+        let a = e.add_task(0, 1.0, &[]);
+        e.revoke_resource(0, 0.0);
+        let makespan = e.run();
+        assert_eq!(makespan, 0.0);
+        assert_eq!(e.revoked(), vec![a]);
+        assert_eq!(e.busy_per_resource(), vec![0.0]);
     }
 }

@@ -8,6 +8,23 @@
 //! [`Rng`], so every experiment in the repo is reproducible from a `u64`
 //! seed.
 
+/// Resolve the run seed: the `DISTCA_SEED` environment variable when set
+/// (benches have no CLI flags, so the env var is their `--seed`), else
+/// `default`. Every bench and the fault injector derive their streams
+/// from this one value, making elastic-recovery runs byte-reproducible:
+/// `DISTCA_SEED=7 cargo bench ...` twice prints identical tables.
+/// Panics on an unparsable value — a silently ignored seed would defeat
+/// the reproducibility contract.
+pub fn seed_from_env(default: u64) -> u64 {
+    match std::env::var("DISTCA_SEED") {
+        Err(_) => default,
+        Ok(s) => s
+            .trim()
+            .parse::<u64>()
+            .unwrap_or_else(|_| panic!("DISTCA_SEED must be a u64, got `{s}`")),
+    }
+}
+
 /// SplitMix64: used to expand a single `u64` seed into the 256-bit state of
 /// xoshiro256**, and as a standalone cheap generator for tests.
 #[derive(Clone, Debug)]

@@ -17,6 +17,7 @@ macro_rules! require_artifacts {
 }
 
 #[test]
+#[ignore = "requires a vendored xla-rs PJRT backend; the default build links the host-only xla-stub"]
 fn pjrt_client_boots() {
     let rt = Runtime::cpu().expect("PJRT CPU client");
     assert!(!rt.platform().is_empty());

@@ -1,0 +1,249 @@
+//! Host-side stand-in for the `xla` (xla-rs) crate.
+//!
+//! The DistCA runtime layer executes AOT-compiled HLO through PJRT; that
+//! backend is a native library the offline build cannot vendor. This stub
+//! keeps the *host-side* half of the API fully functional — [`Literal`]s
+//! store real tensors, shape checks are enforced — while every *device*
+//! operation ([`PjRtClient::cpu`], compile, execute) returns a
+//! descriptive [`XlaError`]. Code paths that never touch a device (the
+//! scheduler, simulator, elastic pool, reference CA compute) therefore
+//! build and run unchanged, and the runtime-dependent paths fail with an
+//! actionable message instead of a link error.
+//!
+//! Swapping in a real xla-rs checkout is a one-line `Cargo.toml` edit;
+//! the public surface here mirrors exactly the subset DistCA uses.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type for all stubbed device operations.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla-stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable(op: &str) -> XlaError {
+    XlaError(format!(
+        "{op} requires the PJRT backend; this build links the vendored \
+         xla-stub. Point the `xla` dependency in rust/Cargo.toml at a \
+         vendored xla-rs checkout and run `make artifacts` to enable the \
+         real runtime path."
+    ))
+}
+
+/// Element storage of a [`Literal`].
+#[derive(Debug, Clone)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Storage {
+    fn len(&self) -> usize {
+        match self {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy + Sized {
+    fn into_storage(data: Vec<Self>) -> Storage;
+    fn from_storage(s: &Storage) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn into_storage(data: Vec<Self>) -> Storage {
+        Storage::F32(data)
+    }
+    fn from_storage(s: &Storage) -> Option<Vec<Self>> {
+        match s {
+            Storage::F32(v) => Some(v.clone()),
+            Storage::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn into_storage(data: Vec<Self>) -> Storage {
+        Storage::I32(data)
+    }
+    fn from_storage(s: &Storage) -> Option<Vec<Self>> {
+        match s {
+            Storage::I32(v) => Some(v.clone()),
+            Storage::F32(_) => None,
+        }
+    }
+}
+
+/// A host tensor: element data plus a shape.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    storage: Storage,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let dims = vec![data.len() as i64];
+        Literal {
+            storage: T::into_storage(data.to_vec()),
+            dims,
+        }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(x: T) -> Literal {
+        Literal {
+            storage: T::into_storage(vec![x]),
+            dims: vec![],
+        }
+    }
+
+    /// Reshape; the element count must be preserved.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, XlaError> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.storage.len() {
+            return Err(XlaError(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.storage.len()
+            )));
+        }
+        Ok(Literal {
+            storage: self.storage.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.storage.len()
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Copy out the elements, checking the element type.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, XlaError> {
+        T::from_storage(&self.storage)
+            .ok_or_else(|| XlaError("to_vec: element type mismatch".into()))
+    }
+
+    /// Decompose a tuple literal — tuples only exist on device, so the
+    /// stub can never produce one.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, XlaError> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    _text: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO text artifact. Parsing is deferred to compile time on
+    /// a real backend; the stub only checks the file exists and is UTF-8.
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto, XlaError> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| XlaError(format!("reading {}: {e}", path.as_ref().display())))?;
+        Ok(HloModuleProto { _text: text })
+    }
+}
+
+/// Computation handle (opaque in the stub).
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _proto: proto.clone() }
+    }
+}
+
+/// PJRT device buffer. The stub cannot allocate one, so every instance is
+/// unreachable by construction; methods exist to satisfy call sites.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable. Never constructed by the stub.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client. [`PjRtClient::cpu`] fails in the stub: device creation is
+/// exactly the boundary the stub draws.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn scalar_is_rank0() {
+        let s = Literal::scalar(7i32);
+        assert_eq!(s.element_count(), 1);
+        assert!(s.dims().is_empty());
+        assert_eq!(s.to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn device_ops_fail_with_guidance() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("PJRT"));
+    }
+}
