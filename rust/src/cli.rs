@@ -25,6 +25,38 @@ pub struct FlagSpec {
     pub help: &'static str,
     pub default: Option<&'static str>,
     pub is_bool: bool,
+    /// A value flag whose value may be omitted (`--pp` vs `--pp 4`):
+    /// *bare* presence is recorded (visible via [`Args::get_bool`]) and
+    /// the value keeps its default; an explicit value — even one equal
+    /// to the default — sets only the value, not the presence bit, so
+    /// callers can honor `--pp 1` literally.
+    pub value_optional: bool,
+}
+
+impl FlagSpec {
+    /// An ordinary `--name <value>` flag.
+    pub fn value(
+        name: &'static str,
+        help: &'static str,
+        default: Option<&'static str>,
+    ) -> FlagSpec {
+        FlagSpec { name, help, default, is_bool: false, value_optional: false }
+    }
+
+    /// A boolean `--name` switch.
+    pub fn boolean(name: &'static str, help: &'static str) -> FlagSpec {
+        FlagSpec { name, help, default: None, is_bool: true, value_optional: false }
+    }
+
+    /// A `--name [value]` flag: bare `--name` records presence and keeps
+    /// the default value; `--name v` / `--name=v` also set the value.
+    pub fn optional_value(
+        name: &'static str,
+        help: &'static str,
+        default: &'static str,
+    ) -> FlagSpec {
+        FlagSpec { name, help, default: Some(default), is_bool: false, value_optional: true }
+    }
 }
 
 /// Parsed arguments: subcommand, flags, and positionals.
@@ -63,16 +95,28 @@ impl Args {
                         args.bools.insert(name, true);
                     }
                 } else {
-                    let value = match inline_val {
-                        Some(v) => v,
-                        None => {
+                    let mut value = inline_val;
+                    if value.is_none() {
+                        let next_is_value =
+                            raw.get(i + 1).map_or(false, |t| !t.starts_with("--"));
+                        if next_is_value || !spec.value_optional {
                             i += 1;
-                            raw.get(i)
-                                .cloned()
-                                .ok_or_else(|| CliError(format!("--{name} needs a value")))?
+                            value = Some(raw.get(i).cloned().ok_or_else(|| {
+                                CliError(format!("--{name} needs a value"))
+                            })?);
                         }
-                    };
-                    args.flags.insert(name, value);
+                    }
+                    match value {
+                        Some(v) => {
+                            args.flags.insert(name, v);
+                        }
+                        None => {
+                            // Bare optional-value flag: record presence
+                            // only — an explicit value (even the default
+                            // one) is the user's word and is not flagged.
+                            args.bools.insert(name, true);
+                        }
+                    }
                 }
             } else if args.subcommand.is_none() {
                 args.subcommand = Some(tok.clone());
@@ -151,9 +195,10 @@ mod tests {
 
     fn specs() -> Vec<FlagSpec> {
         vec![
-            FlagSpec { name: "model", help: "model name", default: Some("llama-8b"), is_bool: false },
-            FlagSpec { name: "gpus", help: "gpu count", default: None, is_bool: false },
-            FlagSpec { name: "verbose", help: "verbose", default: None, is_bool: true },
+            FlagSpec::value("model", "model name", Some("llama-8b")),
+            FlagSpec::value("gpus", "gpu count", None),
+            FlagSpec::boolean("verbose", "verbose"),
+            FlagSpec::optional_value("pp", "pp mode/degree", "1"),
         ]
     }
 
@@ -193,6 +238,47 @@ mod tests {
         assert_eq!(a.get_f64("gpus", 0.0).unwrap(), 8.0);
         let bad = Args::parse(&sv(&["x", "--gpus", "abc"]), &specs()).unwrap();
         assert!(bad.get_usize("gpus", 1).is_err());
+    }
+
+    #[test]
+    fn optional_value_flag_bare_records_presence() {
+        // `--pp --verbose`: pp takes no value, keeps its default, and is
+        // visible as present.
+        let a = Args::parse(&sv(&["elastic", "--pp", "--verbose"]), &specs()).unwrap();
+        assert!(a.get_bool("pp"));
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.get("pp"), Some("1"), "bare flag keeps the default value");
+        // Trailing bare optional-value flag.
+        let b = Args::parse(&sv(&["elastic", "--pp"]), &specs()).unwrap();
+        assert!(b.get_bool("pp"));
+    }
+
+    #[test]
+    fn optional_value_flag_still_accepts_values() {
+        // An explicit value is the user's word: it sets the value but
+        // NOT the presence bit, so `--pp 1` can be honored literally.
+        let a = Args::parse(&sv(&["elastic", "--pp", "4"]), &specs()).unwrap();
+        assert!(!a.get_bool("pp"));
+        assert_eq!(a.get_usize("pp", 1).unwrap(), 4);
+        let b = Args::parse(&sv(&["elastic", "--pp=2"]), &specs()).unwrap();
+        assert!(!b.get_bool("pp"));
+        assert_eq!(b.get_usize("pp", 1).unwrap(), 2);
+        // Absent entirely: default value, not present.
+        let c = Args::parse(&sv(&["elastic"]), &specs()).unwrap();
+        assert!(!c.get_bool("pp"));
+        assert_eq!(c.get("pp"), Some("1"));
+        // Explicit value equal to the default stays non-present.
+        let d = Args::parse(&sv(&["elastic", "--pp", "1"]), &specs()).unwrap();
+        assert!(!d.get_bool("pp"));
+        assert_eq!(d.get_usize("pp", 2).unwrap(), 1);
+    }
+
+    #[test]
+    fn required_value_flag_consumes_next_token_verbatim() {
+        // Only optional-value flags treat a following `--flag` token as
+        // "no value"; ordinary value flags keep the old behavior.
+        let a = Args::parse(&sv(&["x", "--gpus", "--verbose"]), &specs()).unwrap();
+        assert_eq!(a.get("gpus"), Some("--verbose"));
     }
 
     #[test]

@@ -21,6 +21,7 @@ pub mod profiler;
 pub mod scheduler;
 
 pub use item::{CaTask, Item, BLOCK_TOKENS};
+pub use pingpong::{split_waves, PingPongBuffer, Wave};
 pub use plan::Plan;
 pub use profiler::Profiler;
 pub use scheduler::{schedule, SchedulerCfg};

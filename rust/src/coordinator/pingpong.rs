@@ -14,6 +14,14 @@
 //! Fig.-11 ablations: `single_stream` (communication serializes with
 //! compute) and `signal_only` (communication is free — the pure
 //! compute-imbalance floor).
+//!
+//! For *elastic* PP execution the module also provides the wave-level
+//! bookkeeping: [`Wave`] names the two nano-batch waves of a PP tick,
+//! [`split_waves`] partitions a tick's CA-tasks into them, and
+//! [`PingPongBuffer`] records, per wave, the membership epoch the wave
+//! was dispatched under plus its in-flight task tags — exactly the state
+//! the failover layer needs to re-dispatch *only* the wave a mid-tick
+//! fault hit while the other wave's communication stays overlapped.
 
 /// Primitive durations for one *nano-batch* at one layer (seconds).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -88,6 +96,137 @@ pub fn fully_overlapped(ping: NanoCosts, pong: NanoCosts) -> bool {
     (layer_time_pingpong(ping, pong) - layer_time_signal(ping, pong)).abs() < 1e-12
 }
 
+// ---------------------------------------------------------------------
+// Elastic PP: wave identity and the per-tick double buffer.
+// ---------------------------------------------------------------------
+
+/// One of the two nano-batch waves of a PP tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Wave {
+    Ping,
+    Pong,
+}
+
+impl Wave {
+    pub const BOTH: [Wave; 2] = [Wave::Ping, Wave::Pong];
+
+    /// The wave whose communication this wave's compute hides.
+    pub fn other(self) -> Wave {
+        match self {
+            Wave::Ping => Wave::Pong,
+            Wave::Pong => Wave::Ping,
+        }
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            Wave::Ping => 0,
+            Wave::Pong => 1,
+        }
+    }
+}
+
+impl std::fmt::Display for Wave {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Wave::Ping => write!(f, "ping"),
+            Wave::Pong => write!(f, "pong"),
+        }
+    }
+}
+
+/// Split a tick's CA-tasks into two near-equal-weight waves: greedy
+/// assignment of each task (in input order) to the lighter wave.
+/// Deterministic, and balanced within one max task weight. Returns the
+/// index sets of (ping, pong).
+pub fn split_waves<T>(tasks: &[T], weight: impl Fn(&T) -> f64) -> (Vec<usize>, Vec<usize>) {
+    let mut ping = Vec::new();
+    let mut pong = Vec::new();
+    let (mut wp, mut wq) = (0.0f64, 0.0f64);
+    for (i, t) in tasks.iter().enumerate() {
+        let w = weight(t);
+        if wp <= wq {
+            ping.push(i);
+            wp += w;
+        } else {
+            pong.push(i);
+            wq += w;
+        }
+    }
+    (ping, pong)
+}
+
+/// The per-tick double buffer of elastic ping-pong execution.
+///
+/// Each wave carries the pool's membership epoch it was dispatched
+/// under; a fault that bumps the epoch mid-tick therefore splits the
+/// tick's tasks into a *stale* wave (already in flight — its losses are
+/// re-dispatched task-by-task) and a *fresh* wave (not yet dispatched —
+/// simply re-planned against the new membership, no loss). Completion is
+/// first-response-wins at the tag level; the buffer only tracks what is
+/// still outstanding per wave.
+#[derive(Debug, Clone, Default)]
+pub struct PingPongBuffer {
+    epochs: [u64; 2],
+    dispatched: [bool; 2],
+    in_flight: [std::collections::BTreeSet<u64>; 2],
+}
+
+impl PingPongBuffer {
+    pub fn new() -> PingPongBuffer {
+        PingPongBuffer::default()
+    }
+
+    /// Record a wave's dispatch: the membership epoch it was planned
+    /// against and the tags now in flight.
+    pub fn begin_wave(
+        &mut self,
+        wave: Wave,
+        epoch: u64,
+        tags: impl IntoIterator<Item = u64>,
+    ) {
+        let i = wave.index();
+        self.epochs[i] = epoch;
+        self.dispatched[i] = true;
+        self.in_flight[i] = tags.into_iter().collect();
+    }
+
+    /// Membership epoch `wave` was dispatched under.
+    pub fn epoch_of(&self, wave: Wave) -> u64 {
+        self.epochs[wave.index()]
+    }
+
+    /// Which wave holds `tag`, if it is still in flight.
+    pub fn wave_of(&self, tag: u64) -> Option<Wave> {
+        Wave::BOTH
+            .into_iter()
+            .find(|w| self.in_flight[w.index()].contains(&tag))
+    }
+
+    /// Mark `tag` complete; returns the wave it belonged to (None for a
+    /// duplicate or unknown tag — first response already won).
+    pub fn complete(&mut self, tag: u64) -> Option<Wave> {
+        let wave = self.wave_of(tag)?;
+        self.in_flight[wave.index()].remove(&tag);
+        Some(wave)
+    }
+
+    /// Tags still outstanding in `wave`, ascending.
+    pub fn in_flight(&self, wave: Wave) -> Vec<u64> {
+        self.in_flight[wave.index()].iter().copied().collect()
+    }
+
+    /// Total outstanding tags across both waves.
+    pub fn outstanding(&self) -> usize {
+        self.in_flight.iter().map(|s| s.len()).sum()
+    }
+
+    /// A dispatched wave with nothing outstanding has drained.
+    pub fn drained(&self, wave: Wave) -> bool {
+        self.dispatched[wave.index()] && self.in_flight[wave.index()].is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -152,5 +291,55 @@ mod tests {
         assert_eq!(p.linear, 4.0);
         assert_eq!(p.ca, 2.0);
         assert_eq!(p.total_comm(), 1.5);
+    }
+
+    #[test]
+    fn split_waves_balances_weights() {
+        let ws = [5.0, 3.0, 2.0, 2.0, 1.0, 1.0];
+        let (ping, pong) = split_waves(&ws, |&w| w);
+        assert_eq!(ping.len() + pong.len(), ws.len());
+        let sum = |idx: &[usize]| idx.iter().map(|&i| ws[i]).sum::<f64>();
+        let (a, b) = (sum(&ping), sum(&pong));
+        assert!((a - b).abs() <= 5.0, "waves {a} vs {b} unbalanced");
+        // No index in both waves.
+        for i in &ping {
+            assert!(!pong.contains(i));
+        }
+    }
+
+    #[test]
+    fn split_waves_empty_and_single() {
+        let (ping, pong) = split_waves::<f64>(&[], |_| 1.0);
+        assert!(ping.is_empty() && pong.is_empty());
+        let (ping, pong) = split_waves(&[7.0], |&w| w);
+        assert_eq!(ping, vec![0]);
+        assert!(pong.is_empty());
+    }
+
+    #[test]
+    fn pingpong_buffer_tracks_waves_and_epochs() {
+        let mut buf = PingPongBuffer::new();
+        buf.begin_wave(Wave::Ping, 3, [10u64, 11, 12]);
+        buf.begin_wave(Wave::Pong, 4, [20u64, 21]);
+        assert_eq!(buf.epoch_of(Wave::Ping), 3);
+        assert_eq!(buf.epoch_of(Wave::Pong), 4);
+        assert_eq!(buf.outstanding(), 5);
+        assert_eq!(buf.wave_of(11), Some(Wave::Ping));
+        assert_eq!(buf.wave_of(21), Some(Wave::Pong));
+        assert_eq!(buf.complete(11), Some(Wave::Ping));
+        assert_eq!(buf.complete(11), None, "duplicate must be rejected");
+        assert_eq!(buf.in_flight(Wave::Ping), vec![10, 12]);
+        assert!(!buf.drained(Wave::Ping));
+        buf.complete(10);
+        buf.complete(12);
+        assert!(buf.drained(Wave::Ping));
+        assert!(!buf.drained(Wave::Pong));
+    }
+
+    #[test]
+    fn wave_other_flips() {
+        assert_eq!(Wave::Ping.other(), Wave::Pong);
+        assert_eq!(Wave::Pong.other(), Wave::Ping);
+        assert_eq!(Wave::Ping.to_string(), "ping");
     }
 }

@@ -9,6 +9,8 @@
 //! The scheduler's `Plan` is then recomputed against the new live
 //! membership, so scaling takes effect on the very next tick.
 
+use crate::coordinator::pingpong::Wave;
+
 use super::pool::ServerPool;
 
 /// Autoscaler knobs.
@@ -74,6 +76,22 @@ impl Autoscaler {
     fn in_cooldown(&self, tick: usize) -> bool {
         self.last_action_tick
             .map_or(false, |t| tick < t + self.cfg.cooldown_ticks)
+    }
+
+    /// Wave-scoped decision clock for PP execution: scaling actions are
+    /// taken only at wave boundaries — never mid-wave, so a scale event
+    /// can never invalidate an in-flight wave's membership epoch — and
+    /// cooldown is counted in waves (two per PP tick). Use either this
+    /// or [`Autoscaler::decide`] consistently; they share the cooldown
+    /// state on different clocks.
+    pub fn decide_wave(
+        &mut self,
+        tick: usize,
+        wave: Wave,
+        n_schedulable: usize,
+        s: LoadSignals,
+    ) -> ScaleDecision {
+        self.decide(2 * tick + wave.index(), n_schedulable, s)
     }
 
     /// Decide for `tick` given the pool's current size and load signals.
@@ -184,6 +202,25 @@ mod tests {
         assert_eq!(a.decide(1, 3, signals(20.0, 1.0)), ScaleDecision::Hold);
         assert_eq!(a.decide(2, 3, signals(20.0, 1.0)), ScaleDecision::Hold);
         assert_eq!(a.decide(3, 3, signals(20.0, 1.0)), ScaleDecision::Grow(1));
+    }
+
+    #[test]
+    fn wave_clock_counts_cooldown_in_waves() {
+        let mut a = Autoscaler::new(AutoscaleCfg { cooldown_ticks: 2, ..Default::default() });
+        // Grow at (0, ping); the two-wave cooldown expires at (1, ping).
+        assert_eq!(
+            a.decide_wave(0, Wave::Ping, 2, signals(20.0, 1.0)),
+            ScaleDecision::Grow(1)
+        );
+        assert_eq!(
+            a.decide_wave(0, Wave::Pong, 3, signals(20.0, 1.0)),
+            ScaleDecision::Hold,
+            "never scale mid-tick while a wave is in flight"
+        );
+        assert_eq!(
+            a.decide_wave(1, Wave::Ping, 3, signals(20.0, 1.0)),
+            ScaleDecision::Grow(1)
+        );
     }
 
     #[test]

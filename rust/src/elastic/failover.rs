@@ -9,16 +9,23 @@
 //! first". Duplicate suppression is first-response-wins on the tag;
 //! cancellation is a best-effort control message carrying the same tag.
 //!
-//! Two flavors share the policy modules ([`super::pool`],
+//! Three flavors share the policy modules ([`super::pool`],
 //! [`super::health`], [`super::fault`]):
 //!
 //! * [`ElasticCoordinator`] — the *real* threaded runtime over
 //!   [`ChannelTransport`]: long-lived server worker threads executing a
 //!   pluggable [`CaCompute`], a gather loop with deadline-based
-//!   straggler suspicion, cancellation, and re-dispatch;
+//!   straggler suspicion, cancellation, and re-dispatch. It executes
+//!   both flat ticks ([`ElasticCoordinator::run_tick`]) and ping-pong
+//!   PP ticks ([`ElasticCoordinator::run_pp_tick`], two nano-batch
+//!   waves with wave-scoped membership epochs — see [`super::pp`]);
+//! * [`run_elastic_exec`] / [`run_elastic_exec_pp`] — the deterministic
+//!   single-threaded execution flavor: the same fault semantics, the
+//!   same CA outputs, but a fixed synchronous order — the conformance
+//!   reference the other paths are differential-tested against;
 //! * [`run_elastic_sim`] — the deterministic discrete-event flavor on
-//!   [`Engine`], using per-resource speed factors and revocation to
-//!   model the same fault plans at cluster scale.
+//!   [`Engine`], using per-resource speed factors, revocation, and
+//!   partial drain to model the same fault plans at cluster scale.
 
 use std::collections::{BTreeMap, HashSet};
 use std::sync::Arc;
@@ -26,6 +33,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::pingpong::{split_waves, PingPongBuffer, Wave};
 use crate::coordinator::{schedule, SchedulerCfg};
 use crate::data::Document;
 use crate::exchange::transport::{ChannelTransport, Message, Transport};
@@ -36,9 +44,9 @@ use crate::sim::strategies::{distca_placement, SimParams};
 use crate::util::json::Json;
 
 use super::autoscale::{Autoscaler, LoadSignals, ScaleDecision};
-use super::fault::{FaultEvent, FaultPlan};
+use super::fault::{partition_kills_drains, FaultEvent, FaultPlan};
 use super::health::{HealthCfg, HealthMonitor};
-use super::pool::ServerPool;
+use super::pool::{ServerPool, ServerState};
 
 // ---------------------------------------------------------------------
 // Compute plug: what one attention server runs per CA-task.
@@ -205,6 +213,20 @@ pub struct TickStats {
     pub stale_dropped: usize,
     pub cancels_sent: usize,
     pub deadline_rounds: usize,
+    /// Tasks re-planned onto a live server *before* dispatch because the
+    /// planned server had already left the pool (PP: the fresh wave).
+    pub remapped: usize,
+    /// Partial drain: tasks the drainee had already been sent and keeps.
+    pub drain_kept: usize,
+    /// Partial drain: unstarted tail tasks redirected pre-dispatch.
+    pub drain_redirected: usize,
+    /// Servers auto-demoted to `Slow` by the gray-health verdict.
+    pub gray_demoted: usize,
+    /// Re-dispatches attributed to each nano-batch wave (flat ticks use
+    /// only the ping slot).
+    pub wave_redispatched: [usize; 2],
+    /// Membership epoch each wave was dispatched under.
+    pub wave_epochs: [u64; 2],
     /// Wall-clock seconds from dispatch to full gather.
     pub elapsed: f64,
 }
@@ -218,6 +240,10 @@ pub struct ElasticCoordinator {
     handles: Vec<std::thread::JoinHandle<Result<()>>>,
     pub pool: ServerPool,
     pub health: HealthMonitor,
+    /// Servers the coordinator itself gray-demoted (vs. scripted
+    /// slowdowns) — eligible for auto-promotion once their verdict
+    /// clears.
+    gray: HashSet<usize>,
     pub cfg: ElasticCfg,
     pub stats: Vec<TickStats>,
 }
@@ -246,6 +272,7 @@ impl ElasticCoordinator {
             handles,
             pool: ServerPool::new(n_servers),
             health: HealthMonitor::new(n_servers, HealthCfg::default()),
+            gray: HashSet::new(),
             cfg,
             stats: Vec::new(),
         }
@@ -277,12 +304,165 @@ impl ElasticCoordinator {
         self.fabric.send(server, Message { src: COORD_SRC, tag, payload });
     }
 
+    /// Apply this tick's `Slow`/`Rejoin` events (they land *before*
+    /// dispatch) and return the deferred mid-tick `(kills, drains)`.
+    fn apply_tick_events(&mut self, tick: usize, fault: &FaultPlan) -> (Vec<usize>, Vec<usize>) {
+        let events = fault.events_at(tick);
+        for ev in &events {
+            match *ev {
+                FaultEvent::Slow { server, factor, .. } if server < self.n_servers => {
+                    self.pool.degrade(server, factor);
+                    // A scripted slowdown is known, not inferred: drop it
+                    // from the gray set so it is never auto-promoted.
+                    self.gray.remove(&server);
+                    let delay = self.cfg.slow_task_unit.as_secs_f64() * (1.0 / factor - 1.0);
+                    self.send_ctrl(server, CTRL_SLOW, vec![delay as f32]);
+                }
+                FaultEvent::Rejoin { server, .. } if server < self.n_servers => {
+                    self.pool.restore(server);
+                    self.health.reset(server);
+                    self.gray.remove(&server);
+                    self.send_ctrl(server, CTRL_REVIVE, vec![]);
+                }
+                _ => {}
+            }
+        }
+        partition_kills_drains(&events, self.n_servers)
+    }
+
+    /// Health-driven gray degradation: auto-demote Healthy servers in
+    /// the gray band to `Degraded` with their scaled cost estimate —
+    /// before any strike-based kill verdict can fire. Demoted servers
+    /// are deprioritized as re-dispatch targets. The demotion is a
+    /// *belief*, revisited every tick: a server the coordinator itself
+    /// demoted (tracked in `self.gray`, as opposed to a scripted `Slow`)
+    /// has its believed speed re-estimated each tick and is promoted
+    /// back to Healthy once its verdict clears.
+    fn gray_demote(&mut self, stats: &mut TickStats) {
+        let live = self.pool.schedulable();
+        for &s in &live {
+            if self.gray.contains(&s) {
+                match self.health.slow_estimate(s, &live) {
+                    None => {
+                        // Verdict cleared (or no data): trust recovery.
+                        if self.health.verdict(s, &live) == super::health::Verdict::Ok {
+                            self.pool.restore(s);
+                            self.gray.remove(&s);
+                        }
+                    }
+                    Some(speed) => {
+                        // Track the current condition, don't freeze the
+                        // first estimate.
+                        self.pool.degrade(s, speed);
+                    }
+                }
+            }
+        }
+        for &s in &live {
+            if self.pool.state(s) == ServerState::Healthy {
+                // Both Gray and outright Straggler verdicts demote: a
+                // server that jumps straight past the gray band must not
+                // be treated better than a mildly slow one.
+                if let Some(speed) = self.health.slow_estimate(s, &live) {
+                    self.pool.degrade(s, speed);
+                    self.gray.insert(s);
+                    stats.gray_demoted += 1;
+                }
+            }
+        }
+    }
+
+    /// Dispatch one wave of CA-tasks (`idxs` into `tasks`).
+    ///
+    /// * a task whose planned server has already left the pool is
+    ///   *remapped* pre-dispatch (counted in `stats.remapped`);
+    /// * a `kills` victim receives `CTRL_KILL` mid-way through its wave
+    ///   queue — the shipped half is computed, the rest is genuinely
+    ///   lost and must be recovered by the gather's re-dispatch;
+    /// * a `drains` victim keeps the first half of its wave queue
+    ///   (already started) and the unstarted tail is redirected to live
+    ///   servers — the partial-drain contract: no started task is ever
+    ///   re-dispatched.
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_wave(
+        &mut self,
+        tick: usize,
+        tasks: &[ElasticTask],
+        idxs: &[usize],
+        kills: &[usize],
+        drains: &[usize],
+        assigned: &mut BTreeMap<u64, usize>,
+        dispatch_at: &mut BTreeMap<u64, Instant>,
+        stats: &mut TickStats,
+    ) -> Result<()> {
+        let targets: Vec<usize> = self
+            .pool
+            .schedulable()
+            .into_iter()
+            .filter(|s| !kills.contains(s) && !drains.contains(s))
+            .collect();
+        anyhow::ensure!(!targets.is_empty(), "no live servers to dispatch to");
+        let mut rr = 0usize;
+        let mut per_server: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for &i in idxs {
+            let t = &tasks[i];
+            assert!(t.server < self.n_servers, "bad server {}", t.server);
+            let dest = if self.pool.is_schedulable(t.server) {
+                t.server
+            } else {
+                // Planned against a stale membership epoch: re-plan onto
+                // a live server before any bytes move (no loss).
+                stats.remapped += 1;
+                let d = targets[rr % targets.len()];
+                rr += 1;
+                d
+            };
+            per_server.entry(dest).or_default().push(i);
+        }
+        for (&srv, q) in &per_server {
+            let killed_here = kills.contains(&srv);
+            let drained_here = drains.contains(&srv);
+            // cut < q.len() always (q non-empty), so the event lands
+            // inside the loop, between the shipped half and the tail.
+            let cut = if killed_here || drained_here { q.len() / 2 } else { q.len() };
+            for (k, &i) in q.iter().enumerate() {
+                if killed_here && k == cut {
+                    self.send_ctrl(srv, CTRL_KILL, vec![]);
+                }
+                let dest = if drained_here && k >= cut {
+                    // Partial drain: redirect the unstarted tail.
+                    stats.drain_redirected += 1;
+                    let d = targets[rr % targets.len()];
+                    rr += 1;
+                    d
+                } else {
+                    if drained_here {
+                        stats.drain_kept += 1;
+                    }
+                    srv
+                };
+                self.send_data(dest, tick, &tasks[i]);
+                assigned.insert(tasks[i].tag(), dest);
+                dispatch_at.insert(tasks[i].tag(), Instant::now());
+            }
+        }
+        // Victims without wave tasks still learn their fate.
+        for &k in kills {
+            if !per_server.contains_key(&k) {
+                self.send_ctrl(k, CTRL_KILL, vec![]);
+            }
+        }
+        Ok(())
+    }
+
     /// Execute one tick's tasks with this tick's fault events injected.
     ///
     /// `Slow`/`Rejoin` events apply before dispatch; a `Kill` lands
     /// *mid-dispatch* (half the victim's tick messages precede the kill),
     /// so already-shipped work is genuinely lost and must be recovered by
-    /// re-dispatch. Returns outputs keyed `(doc, q_start)`, complete and
+    /// re-dispatch; a `Drain` keeps the victim's shipped half and
+    /// redirects the unstarted tail (the victim leaves at tick end).
+    /// Returns outputs keyed `(doc, q_start)`, complete and
     /// first-response-deduplicated, in tag order.
     pub fn run_tick(
         &mut self,
@@ -292,57 +472,137 @@ impl ElasticCoordinator {
     ) -> Result<Vec<TaskOutput>> {
         let t_start = Instant::now();
         let mut stats = TickStats { tick, n_tasks: tasks.len(), ..Default::default() };
+        let (kills, drains) = self.apply_tick_events(tick, fault);
+        self.gray_demote(&mut stats);
 
-        // Membership events first.
-        let mut kills: Vec<usize> = Vec::new();
-        for ev in fault.events_at(tick) {
-            match ev {
-                FaultEvent::Slow { server, factor, .. } if server < self.n_servers => {
-                    self.pool.degrade(server, factor);
-                    let delay = self.cfg.slow_task_unit.as_secs_f64() * (1.0 / factor - 1.0);
-                    self.send_ctrl(server, CTRL_SLOW, vec![delay as f32]);
-                }
-                FaultEvent::Rejoin { server, .. } if server < self.n_servers => {
-                    self.pool.restore(server);
-                    self.health.reset(server);
-                    self.send_ctrl(server, CTRL_REVIVE, vec![]);
-                }
-                FaultEvent::Kill { server, .. } if server < self.n_servers => {
-                    kills.push(server);
-                }
-                _ => {}
-            }
-        }
-
-        // Dispatch, interleaving kills mid-way through the victim's queue.
-        let mut per_server: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
-        for (i, t) in tasks.iter().enumerate() {
-            assert!(t.server < self.n_servers, "bad server {}", t.server);
-            per_server.entry(t.server).or_default().push(i);
-        }
         let mut assigned: BTreeMap<u64, usize> = BTreeMap::new();
         let mut dispatch_at: BTreeMap<u64, Instant> = BTreeMap::new();
-        for (&srv, idxs) in &per_server {
-            let killed_here = kills.contains(&srv);
-            // cut < idxs.len() always (idxs non-empty), so the kill lands
-            // inside the loop, between the shipped half and the lost half.
-            let cut = if killed_here { idxs.len() / 2 } else { idxs.len() };
-            for (k, &i) in idxs.iter().enumerate() {
-                if killed_here && k == cut {
-                    self.send_ctrl(srv, CTRL_KILL, vec![]);
-                }
-                self.send_data(srv, tick, &tasks[i]);
-                assigned.insert(tasks[i].tag(), srv);
-                dispatch_at.insert(tasks[i].tag(), Instant::now());
-            }
-        }
+        let all: Vec<usize> = (0..tasks.len()).collect();
+        let stamp = self.pool.stamp(tick, Wave::Ping);
+        stats.wave_epochs[Wave::Ping.index()] = stamp.epoch;
+        self.dispatch_wave(
+            tick, tasks, &all, &kills, &drains, &mut assigned, &mut dispatch_at, &mut stats,
+        )?;
+        let mut buf = PingPongBuffer::new();
+        buf.begin_wave(Wave::Ping, stamp.epoch, tasks.iter().map(|t| t.tag()));
         for &k in &kills {
-            if !per_server.contains_key(&k) {
-                self.send_ctrl(k, CTRL_KILL, vec![]);
-            }
             self.pool.kill(k);
+            self.health.mark_dead(k);
+        }
+        for &d in &drains {
+            self.pool.drain(d);
         }
 
+        let outputs =
+            self.gather(tick, tasks, &mut assigned, &mut dispatch_at, &mut buf, &mut stats)?;
+        debug_assert!(buf.drained(Wave::Ping), "gather returned with tags in flight");
+
+        // Drains complete once the tick is fully gathered.
+        for &d in &drains {
+            self.pool.leave(d);
+            self.health.mark_dead(d);
+        }
+        stats.elapsed = t_start.elapsed().as_secs_f64();
+        self.stats.push(stats);
+        Ok(outputs.into_values().collect())
+    }
+
+    /// Execute one *PP tick* as two ping-pong nano-batch waves (§4.1)
+    /// under this tick's fault events.
+    ///
+    /// The ping wave is dispatched first, under the pre-fault membership
+    /// epoch; kills and drains land mid-tick, *between* the shipped half
+    /// of the ping wave and everything else. The pong wave is then
+    /// dispatched under the fresh epoch — its tasks targeting a departed
+    /// server are remapped before any bytes move, so only the ping
+    /// wave's in-flight CA-tasks ever need cancel + re-dispatch, while
+    /// the pong wave's communication stays overlapped with ping compute
+    /// (its dispatch does not wait for the ping gather).
+    pub fn run_pp_tick(
+        &mut self,
+        tick: usize,
+        tasks: &[ElasticTask],
+        fault: &FaultPlan,
+    ) -> Result<Vec<TaskOutput>> {
+        let t_start = Instant::now();
+        let mut stats = TickStats { tick, n_tasks: tasks.len(), ..Default::default() };
+        let (kills, drains) = self.apply_tick_events(tick, fault);
+        self.gray_demote(&mut stats);
+
+        // Two near-equal-weight nano-batch waves.
+        let (ping_idx, pong_idx) =
+            split_waves(tasks, |t| (t.tensors.q_len * t.tensors.kv_len) as f64);
+        let mut assigned: BTreeMap<u64, usize> = BTreeMap::new();
+        let mut dispatch_at: BTreeMap<u64, Instant> = BTreeMap::new();
+        let mut buf = PingPongBuffer::new();
+
+        // Wave 0 (ping): stamped with the pre-fault membership epoch;
+        // faults bite mid-dispatch.
+        let ping_stamp = self.pool.stamp(tick, Wave::Ping);
+        stats.wave_epochs[Wave::Ping.index()] = ping_stamp.epoch;
+        self.dispatch_wave(
+            tick, tasks, &ping_idx, &kills, &drains, &mut assigned, &mut dispatch_at,
+            &mut stats,
+        )?;
+        buf.begin_wave(
+            Wave::Ping,
+            ping_stamp.epoch,
+            ping_idx.iter().map(|&i| tasks[i].tag()),
+        );
+
+        // The fault becomes membership fact between the waves: the ping
+        // stamp goes stale, so only *its* in-flight tasks can be lost.
+        for &k in &kills {
+            self.pool.kill(k);
+            self.health.mark_dead(k);
+        }
+        for &d in &drains {
+            self.pool.drain(d);
+        }
+        debug_assert!(
+            kills.is_empty() || self.pool.is_stale(&ping_stamp),
+            "a mid-tick kill must invalidate the ping wave's stamp"
+        );
+
+        // Wave 1 (pong): a fresh stamp — departed targets are remapped
+        // pre-dispatch, nothing of this wave is ever lost.
+        let pong_stamp = self.pool.stamp(tick, Wave::Pong);
+        stats.wave_epochs[Wave::Pong.index()] = pong_stamp.epoch;
+        self.dispatch_wave(
+            tick, tasks, &pong_idx, &[], &[], &mut assigned, &mut dispatch_at, &mut stats,
+        )?;
+        buf.begin_wave(
+            Wave::Pong,
+            pong_stamp.epoch,
+            pong_idx.iter().map(|&i| tasks[i].tag()),
+        );
+
+        let outputs =
+            self.gather(tick, tasks, &mut assigned, &mut dispatch_at, &mut buf, &mut stats)?;
+        debug_assert!(
+            buf.drained(Wave::Ping) && buf.drained(Wave::Pong),
+            "gather returned with a wave still in flight"
+        );
+        for &d in &drains {
+            self.pool.leave(d);
+            self.health.mark_dead(d);
+        }
+        stats.elapsed = t_start.elapsed().as_secs_f64();
+        self.stats.push(stats);
+        Ok(outputs.into_values().collect())
+    }
+
+    /// Gather a tick's outputs with deadline-based speculation,
+    /// first-response-wins dedup, and per-wave re-dispatch accounting.
+    fn gather(
+        &mut self,
+        tick: usize,
+        tasks: &[ElasticTask],
+        assigned: &mut BTreeMap<u64, usize>,
+        dispatch_at: &mut BTreeMap<u64, Instant>,
+        buf: &mut PingPongBuffer,
+        stats: &mut TickStats,
+    ) -> Result<BTreeMap<u64, TaskOutput>> {
         // Expected set (tags are unique within a tick: a valid plan
         // covers disjoint (doc, q_start) ranges).
         let mut expected: BTreeMap<u64, usize> = BTreeMap::new();
@@ -351,7 +611,7 @@ impl ElasticCoordinator {
             assert!(prev.is_none(), "duplicate task tag within a tick");
         }
 
-        // Gather with deadline-based speculation. The deadline for each
+        // Deadline-based speculation. The deadline for each
         // outstanding task is scaled by its causal-pair count relative to
         // the median *completed* task, so one legitimately heavy task
         // gets proportionally more patience than the tick's median and a
@@ -363,7 +623,10 @@ impl ElasticCoordinator {
         let mut completed_pairs: Vec<f64> = Vec::new();
         let mut last_event = Instant::now();
         let mut rounds = 0usize;
-        while outputs.len() < expected.len() {
+        // The buffer is the authority on what is still in flight per
+        // wave; it drains exactly when every expected tag has a kept
+        // output.
+        while buf.outstanding() > 0 {
             let mut progress = false;
             for home in 0..self.n_servers {
                 while let Some(msg) = self.fabric.try_recv(self.n_servers + home) {
@@ -385,9 +648,14 @@ impl ElasticCoordinator {
                         .map(|t0| t0.elapsed().as_secs_f64())
                         .unwrap_or(0.0);
                     completions.push(latency);
-                    completed_pairs.push(pairs_of(&tasks[expected[&msg.tag]]));
-                    self.health.observe(msg.src, latency);
+                    let pairs = pairs_of(&tasks[expected[&msg.tag]]);
+                    completed_pairs.push(pairs);
+                    // Health sees *size-normalized* latency (seconds per
+                    // causal pair), so a server handed the tick's heavy
+                    // CA-tasks is not mistaken for a gray straggler.
+                    self.health.observe(msg.src, latency / pairs.max(1.0));
                     self.pool.clear_strikes(msg.src);
+                    buf.complete(msg.tag);
                     outputs.insert(
                         msg.tag,
                         TaskOutput {
@@ -403,7 +671,7 @@ impl ElasticCoordinator {
                 last_event = Instant::now();
                 continue;
             }
-            if outputs.len() == expected.len() {
+            if buf.outstanding() == 0 {
                 break;
             }
             // Quiet: is it time to suspect the laggards?
@@ -428,13 +696,20 @@ impl ElasticCoordinator {
                 if outputs.contains_key(&tag) {
                     continue;
                 }
+                let holder = assigned[&tag];
+                if self.pool.state(holder) == ServerState::Draining {
+                    // Partial-drain contract: a drainee's started tasks
+                    // are never cancelled or re-dispatched — the drain
+                    // is cooperative, so we wait for it to finish.
+                    continue;
+                }
                 let scale = if med_pairs > 0.0 {
                     (pairs_of(&tasks[idx]) / med_pairs).max(1.0)
                 } else {
                     1.0
                 };
                 if waited >= base.mul_f64(scale) {
-                    by_srv.entry(assigned[&tag]).or_default().push(tag);
+                    by_srv.entry(holder).or_default().push(tag);
                 }
             }
             if by_srv.is_empty() {
@@ -454,15 +729,24 @@ impl ElasticCoordinator {
                 let strikes = self.pool.strike(srv);
                 if strikes >= self.cfg.dead_after_strikes && self.pool.is_schedulable(srv) {
                     self.pool.kill(srv);
+                    self.health.mark_dead(srv);
                 }
             }
             let suspects: HashSet<usize> = by_srv.keys().copied().collect();
-            let healthy: Vec<usize> = self
+            let unsuspected: Vec<usize> = self
                 .pool
                 .schedulable()
                 .into_iter()
                 .filter(|s| !suspects.contains(s))
                 .collect();
+            // Re-dispatch to full-speed servers only; gray/degraded ones
+            // are used when nothing else is left.
+            let full_speed: Vec<usize> = unsuspected
+                .iter()
+                .copied()
+                .filter(|&s| !matches!(self.pool.state(s), ServerState::Degraded { .. }))
+                .collect();
+            let healthy = if full_speed.is_empty() { unsuspected } else { full_speed };
             anyhow::ensure!(
                 !healthy.is_empty(),
                 "no healthy attention servers left to re-dispatch to"
@@ -480,13 +764,14 @@ impl ElasticCoordinator {
                     assigned.insert(tag, target);
                     dispatch_at.insert(tag, Instant::now());
                     stats.redispatched += 1;
+                    if let Some(w) = buf.wave_of(tag) {
+                        stats.wave_redispatched[w.index()] += 1;
+                    }
                 }
             }
             last_event = Instant::now();
         }
-        stats.elapsed = t_start.elapsed().as_secs_f64();
-        self.stats.push(stats);
-        Ok(outputs.into_values().collect())
+        Ok(outputs)
     }
 
     /// Stop all server threads and collect their results.
@@ -568,6 +853,184 @@ fn server_thread(
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// Deterministic execution flavor: the same fault semantics, synchronous
+// and single-threaded — the conformance reference.
+// ---------------------------------------------------------------------
+
+/// Outcome of one deterministically executed elastic tick.
+#[derive(Debug, Clone, Default)]
+pub struct ExecReport {
+    /// Complete, deduplicated outputs in tag order.
+    pub outputs: Vec<TaskOutput>,
+    /// tag → server whose computation was kept.
+    pub computed_by: BTreeMap<u64, usize>,
+    /// Tags lost to a kill and re-sent to survivors.
+    pub redispatched: Vec<u64>,
+    /// Partial drain: tags the drainee had already started and keeps.
+    pub drain_kept: Vec<u64>,
+    /// Partial drain: unstarted tail tags redirected pre-dispatch.
+    pub drain_redirected: Vec<u64>,
+    /// Tags re-planned pre-dispatch against a fresh membership epoch.
+    pub remapped: Vec<u64>,
+    /// Completions suppressed by first-response-wins dedup.
+    pub duplicates: usize,
+}
+
+fn exec_complete(
+    tasks: &[ElasticTask],
+    i: usize,
+    server: usize,
+    compute: &mut dyn CaCompute,
+    outputs: &mut BTreeMap<u64, TaskOutput>,
+    report: &mut ExecReport,
+) -> Result<()> {
+    let t = &tasks[i];
+    let o = compute.run(&t.tensors)?;
+    if outputs.contains_key(&t.tag()) {
+        report.duplicates += 1;
+        return Ok(());
+    }
+    outputs.insert(t.tag(), TaskOutput { doc: t.doc, q_start: t.q_start, o });
+    report.computed_by.insert(t.tag(), server);
+    Ok(())
+}
+
+/// Execute one wave synchronously, mirroring
+/// [`ElasticCoordinator::dispatch_wave`]'s policy: stale assignments are
+/// remapped pre-dispatch, a kill victim computes only the half shipped
+/// before the kill (the rest is re-sent to survivors), a drainee keeps
+/// its started half and the unstarted tail is redirected.
+#[allow(clippy::too_many_arguments)]
+fn exec_wave(
+    pool: &ServerPool,
+    tasks: &[ElasticTask],
+    idxs: &[usize],
+    kills: &[usize],
+    drains: &[usize],
+    compute: &mut dyn CaCompute,
+    outputs: &mut BTreeMap<u64, TaskOutput>,
+    report: &mut ExecReport,
+    rr: &mut usize,
+) -> Result<()> {
+    let targets: Vec<usize> = pool
+        .schedulable()
+        .into_iter()
+        .filter(|s| !kills.contains(s) && !drains.contains(s))
+        .collect();
+    anyhow::ensure!(!targets.is_empty(), "no live servers to dispatch to");
+    let mut per_server: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for &i in idxs {
+        let t = &tasks[i];
+        let dest = if pool.is_schedulable(t.server) {
+            t.server
+        } else {
+            report.remapped.push(t.tag());
+            let d = targets[*rr % targets.len()];
+            *rr += 1;
+            d
+        };
+        per_server.entry(dest).or_default().push(i);
+    }
+    for (&srv, q) in &per_server {
+        let killed = kills.contains(&srv);
+        let drained = drains.contains(&srv);
+        let cut = if killed || drained { q.len() / 2 } else { q.len() };
+        for (k, &i) in q.iter().enumerate() {
+            let tag = tasks[i].tag();
+            if k < cut {
+                // Shipped before the event: the victim still computes it.
+                if drained {
+                    report.drain_kept.push(tag);
+                }
+                exec_complete(tasks, i, srv, compute, outputs, report)?;
+            } else if drained {
+                // Partial drain: the unstarted tail is redirected — never
+                // a task the drainee already started.
+                report.drain_redirected.push(tag);
+                let d = targets[*rr % targets.len()];
+                *rr += 1;
+                exec_complete(tasks, i, d, compute, outputs, report)?;
+            } else {
+                // Killed: shipped after the kill, genuinely lost; the
+                // recovery is one resend of the same bytes (§3).
+                report.redispatched.push(tag);
+                let d = targets[*rr % targets.len()];
+                *rr += 1;
+                exec_complete(tasks, i, d, compute, outputs, report)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Deterministic single-threaded execution of one flat elastic tick:
+/// identical fault semantics to [`ElasticCoordinator::run_tick`], but a
+/// fixed synchronous order — the reference the threaded and PP paths
+/// are differential-tested against. Recovery must not change results:
+/// each CA-task is computed exactly once into the output set, so the
+/// outputs equal the monolithic oracle's bit-for-bit.
+pub fn run_elastic_exec(
+    pool: &mut ServerPool,
+    tick: usize,
+    tasks: &[ElasticTask],
+    fault: &FaultPlan,
+    compute: &mut dyn CaCompute,
+) -> Result<ExecReport> {
+    let deferred = fault.apply_tick(tick, pool);
+    let (kills, drains) = partition_kills_drains(&deferred, pool.capacity());
+    let mut outputs: BTreeMap<u64, TaskOutput> = BTreeMap::new();
+    let mut report = ExecReport::default();
+    let mut rr = 0usize;
+    let all: Vec<usize> = (0..tasks.len()).collect();
+    exec_wave(pool, tasks, &all, &kills, &drains, compute, &mut outputs, &mut report, &mut rr)?;
+    for &k in &kills {
+        pool.kill(k);
+    }
+    for &d in &drains {
+        pool.drain(d);
+        pool.leave(d);
+    }
+    report.outputs = outputs.into_values().collect();
+    Ok(report)
+}
+
+/// Deterministic single-threaded execution of one *PP tick*: the ping
+/// wave runs under the pre-fault membership with full mid-tick fault
+/// semantics; the membership flips between the waves; the pong wave is
+/// re-planned against the fresh epoch (departed targets remapped, no
+/// loss). Mirrors [`ElasticCoordinator::run_pp_tick`].
+pub fn run_elastic_exec_pp(
+    pool: &mut ServerPool,
+    tick: usize,
+    tasks: &[ElasticTask],
+    fault: &FaultPlan,
+    compute: &mut dyn CaCompute,
+) -> Result<ExecReport> {
+    let deferred = fault.apply_tick(tick, pool);
+    let (kills, drains) = partition_kills_drains(&deferred, pool.capacity());
+    let (ping_idx, pong_idx) =
+        split_waves(tasks, |t| (t.tensors.q_len * t.tensors.kv_len) as f64);
+    let mut outputs: BTreeMap<u64, TaskOutput> = BTreeMap::new();
+    let mut report = ExecReport::default();
+    let mut rr = 0usize;
+    exec_wave(
+        pool, tasks, &ping_idx, &kills, &drains, compute, &mut outputs, &mut report, &mut rr,
+    )?;
+    for &k in &kills {
+        pool.kill(k);
+    }
+    for &d in &drains {
+        pool.drain(d);
+    }
+    exec_wave(pool, tasks, &pong_idx, &[], &[], compute, &mut outputs, &mut report, &mut rr)?;
+    for &d in &drains {
+        pool.leave(d);
+    }
+    report.outputs = outputs.into_values().collect();
+    Ok(report)
 }
 
 // ---------------------------------------------------------------------
@@ -722,8 +1185,8 @@ pub fn run_elastic_sim(
             }
             events.push(ev.to_spec());
         }
-        // Slow/Rejoin apply now; kills land mid-tick below.
-        let kills = fault.apply_tick(tick, &mut pool);
+        // Slow/Rejoin apply now; kills and drains land mid-tick below.
+        let deferred = fault.apply_tick(tick, &mut pool);
 
         // Autoscale on last tick's signals, before planning.
         if let (Some(sc), Some(sig)) = (scaler.as_mut(), last_signals) {
@@ -732,12 +1195,33 @@ pub fn run_elastic_sim(
             super::pool::sync_health(&pool, &mut health);
             match d {
                 ScaleDecision::Grow(_) if !touched.is_empty() => {
+                    // Restored/joined capacity starts with a clean slate.
+                    for &s in &touched {
+                        health.reset(s);
+                    }
                     events.push(format!("scale:+{:?}", touched));
                 }
                 ScaleDecision::Shrink(_) if !touched.is_empty() => {
                     events.push(format!("scale:-{:?}", touched));
                 }
                 _ => {}
+            }
+        }
+
+        // Health-driven gray degradation: demote Healthy servers whose
+        // EWMA sits in the gray band to `Slow` with the scaled cost
+        // estimate, before any kill verdict fires. Unlike the PP
+        // simulator, `Degraded` here doubles as *ground truth* (scripted
+        // `Slow` faults set it and the engine reads speeds from it), so
+        // already-degraded servers are left untouched rather than
+        // re-estimated from belief.
+        let live = pool.schedulable();
+        for &s in &live {
+            if pool.state(s) == super::pool::ServerState::Healthy {
+                if let Some(speed) = health.slow_estimate(s, &live) {
+                    pool.degrade(s, speed);
+                    events.push(format!("gray:{s}x{speed:.2}"));
+                }
             }
         }
 
@@ -791,13 +1275,12 @@ pub fn run_elastic_sim(
             let id = eng.add_task(a.server, costs[i], &[]);
             debug_assert_eq!(id, i);
         }
+        let (kill_list, drain_list) = partition_kills_drains(&deferred, pool.capacity());
         let mut killed_virt: Vec<usize> = Vec::new();
+        let mut drained_virt: Vec<usize> = Vec::new();
         let mut kill_time_max = 0.0f64;
-        for ev in &kills {
-            let FaultEvent::Kill { server, .. } = *ev else { continue };
-            if server >= pool.capacity() {
-                continue; // plan names a server this pool never had
-            }
+        let mut drain_time_max = 0.0f64;
+        for &server in &kill_list {
             if let Some(v) = view.to_virtual(server) {
                 let span = plan.server_load[v] / tp / speeds[v];
                 let kill_time = cfg.kill_phase_frac * span;
@@ -806,18 +1289,33 @@ pub fn run_elastic_sim(
                 kill_time_max = kill_time_max.max(kill_time);
             }
             pool.kill(server);
+            health.mark_dead(server);
+        }
+        for &server in &drain_list {
+            // Partial drain: the running task finishes; only the
+            // unstarted tail of the queue is revoked for re-dispatch,
+            // and the server leaves at tick end.
+            if let Some(v) = view.to_virtual(server) {
+                let span = plan.server_load[v] / tp / speeds[v];
+                let drain_time = cfg.kill_phase_frac * span;
+                eng.drain_resource(v, drain_time);
+                drained_virt.push(v);
+                drain_time_max = drain_time_max.max(drain_time);
+            }
+            pool.drain(server);
         }
         let wave0 = eng.run();
         let busy = eng.busy_per_resource();
 
-        // Feed the health monitor per-task average latencies.
-        let mut counts = vec![0usize; n];
-        for a in &plan.assignments {
-            counts[a.server] += 1;
-        }
+        // Feed the health monitor *normalized* slowness — observed busy
+        // time over the plan's predicted load — so task-count skew (few
+        // huge CA-tasks vs many small ones) cannot masquerade as ill
+        // health. A nominal server scores exactly 1.0, a half-speed
+        // server 2.0, regardless of what it was assigned.
         for v in 0..n {
-            if counts[v] > 0 {
-                health.observe(view.to_physical(v), busy[v] / counts[v] as f64);
+            let predicted = plan.server_load[v] / tp;
+            if predicted > 0.0 {
+                health.observe(view.to_physical(v), busy[v] / predicted);
             }
         }
 
@@ -827,12 +1325,28 @@ pub fn run_elastic_sim(
         let mut speculated = 0usize;
         let tick_time;
         if !lost.is_empty() {
+            // Partial-drain contract: a drained resource's casualties
+            // are all unstarted (only kills cut running work).
+            for &li in &lost {
+                debug_assert!(
+                    killed_virt.contains(&plan.assignments[li].server)
+                        || !eng.started(li),
+                    "partial drain re-dispatched a started task"
+                );
+            }
             // Recovery wave: survivors finish their own work (fillers),
             // then absorb the lost tasks, which become startable only
             // after the failure is detected and the tensors are resent.
+            // Drainees still finish their started work (they are filler
+            // lanes) but accept no re-dispatched tasks.
             let survivors: Vec<usize> =
                 (0..n).filter(|v| !killed_virt.contains(v)).collect();
-            anyhow::ensure!(!survivors.is_empty(), "tick {tick}: all servers died");
+            let rec_targets: Vec<usize> = survivors
+                .iter()
+                .copied()
+                .filter(|v| !drained_virt.contains(v))
+                .collect();
+            anyhow::ensure!(!rec_targets.is_empty(), "tick {tick}: all servers died");
             let mut rec = Engine::new(survivors.len());
             for (ri, &v) in survivors.iter().enumerate() {
                 rec.set_speed(ri, speeds[v]);
@@ -840,15 +1354,25 @@ pub fn run_elastic_sim(
                     rec.add_task(ri, busy[v] * speeds[v], &[]);
                 }
             }
-            let detect = kill_time_max + cfg.detection_frac * fault_free;
+            // A kill needs failure detection before the resend; a drain
+            // is cooperative, so its tail re-dispatches at the drain
+            // instant — per task, so a same-tick kill elsewhere does not
+            // tax the drainee's recovery.
+            let detect_kill = kill_time_max + cfg.detection_frac * fault_free;
             for (j, &li) in lost.iter().enumerate() {
                 let a = &plan.assignments[li];
                 let resend =
                     crate::coordinator::comm::item_migration_bytes(&a.item, &p.model) / bw;
                 comm_bytes +=
                     crate::coordinator::comm::item_migration_bytes(&a.item, &p.model);
-                let ri = j % survivors.len();
-                rec.add_task_at(ri, costs[li] + resend, &[], detect);
+                let at = if killed_virt.contains(&a.server) {
+                    detect_kill
+                } else {
+                    drain_time_max
+                };
+                let target_v = rec_targets[j % rec_targets.len()];
+                let ri = survivors.iter().position(|&v| v == target_v).unwrap();
+                rec.add_task_at(ri, costs[li] + resend, &[], at);
                 redispatched += 1;
             }
             tick_time = rec.run();
@@ -898,10 +1422,9 @@ pub fn run_elastic_sim(
         }
 
         // Drains complete at tick end.
-        for s in 0..pool.capacity() {
-            if pool.state(s) == super::pool::ServerState::Draining {
-                pool.leave(s);
-            }
+        for s in pool.draining() {
+            pool.leave(s);
+            health.mark_dead(s);
         }
 
         let useful: f64 = costs.iter().sum();
@@ -1122,6 +1645,180 @@ mod tests {
             stats[0].redispatched >= 1,
             "straggler work must be speculatively re-dispatched: {stats:?}"
         );
+    }
+
+    #[test]
+    fn elastic_runtime_partial_drain_keeps_started_tasks() {
+        let mut rng = Rng::new(23);
+        // Server 1 holds four tasks; the drain keeps its shipped half
+        // and redirects the unstarted tail before any bytes are lost.
+        let tasks = mk_tasks(
+            &mut rng,
+            &[(0, 4, 0), (1, 4, 1), (2, 4, 1), (3, 4, 1), (4, 4, 1)],
+        );
+        let fault = FaultPlan::new().drain(1, 0);
+        let mut co = ElasticCoordinator::spawn(2, ElasticCfg::default(), |_| Box::new(dims()));
+        let outputs = co.run_tick(0, &tasks, &fault).unwrap();
+        check_against_oracle(&tasks, &outputs);
+        assert!(!co.pool.is_schedulable(1), "drainee must have left the pool");
+        let stats = co.shutdown().unwrap();
+        assert_eq!(stats[0].drain_kept, 2);
+        assert_eq!(stats[0].drain_redirected, 2);
+        assert_eq!(
+            stats[0].redispatched, 0,
+            "a cooperative drain loses nothing, so nothing is re-dispatched"
+        );
+        assert_eq!(stats[0].cancels_sent, 0);
+    }
+
+    #[test]
+    fn pp_tick_redispatches_only_the_affected_wave() {
+        let mut rng = Rng::new(29);
+        // 8 equal tasks alternate ping/pong; server 1 owns 1, 2, 4, 5 —
+        // two land in each wave.
+        let tasks = mk_tasks(
+            &mut rng,
+            &[
+                (0, 4, 0),
+                (1, 4, 1),
+                (2, 4, 1),
+                (3, 4, 2),
+                (4, 4, 1),
+                (5, 4, 1),
+                (6, 4, 0),
+                (7, 4, 2),
+            ],
+        );
+        let fault = FaultPlan::new().kill(1, 0);
+        let mut co = ElasticCoordinator::spawn(3, ElasticCfg::default(), |_| Box::new(dims()));
+        let outputs = co.run_pp_tick(0, &tasks, &fault).unwrap();
+        check_against_oracle(&tasks, &outputs);
+        assert!(!co.pool.is_schedulable(1));
+        let stats = co.shutdown().unwrap();
+        let st = &stats[0];
+        assert!(
+            st.wave_epochs[1] > st.wave_epochs[0],
+            "the mid-tick fault must bump the epoch between the waves: {st:?}"
+        );
+        assert_eq!(
+            st.remapped, 2,
+            "the victim's pong tasks are remapped pre-dispatch: {st:?}"
+        );
+        assert!(
+            st.wave_redispatched[0] >= 1,
+            "the victim's lost ping half must be re-dispatched: {st:?}"
+        );
+        assert_eq!(
+            st.wave_redispatched[1], 0,
+            "the pong wave is re-planned, never re-dispatched: {st:?}"
+        );
+    }
+
+    #[test]
+    fn pp_tick_without_faults_is_clean() {
+        let mut rng = Rng::new(43);
+        let tasks = mk_tasks(&mut rng, &[(0, 4, 0), (1, 8, 1), (2, 4, 0), (3, 4, 1)]);
+        let mut co = ElasticCoordinator::spawn(2, ElasticCfg::default(), |_| Box::new(dims()));
+        let outputs = co.run_pp_tick(0, &tasks, &FaultPlan::new()).unwrap();
+        check_against_oracle(&tasks, &outputs);
+        let stats = co.shutdown().unwrap();
+        assert_eq!(stats[0].redispatched, 0);
+        assert_eq!(stats[0].remapped, 0);
+        assert_eq!(stats[0].wave_epochs[0], stats[0].wave_epochs[1]);
+    }
+
+    #[test]
+    fn gray_demotion_fires_before_any_kill_verdict() {
+        let mut co = ElasticCoordinator::spawn(3, ElasticCfg::default(), |_| Box::new(dims()));
+        // Server 2's EWMA sits in the gray band: 1.4 < 1.6/median < 2.0.
+        co.health.observe(0, 1.0);
+        co.health.observe(1, 1.0);
+        co.health.observe(2, 1.6);
+        let mut rng = Rng::new(41);
+        let tasks = mk_tasks(&mut rng, &[(0, 4, 0), (1, 4, 1), (2, 4, 2)]);
+        let outputs = co.run_tick(0, &tasks, &FaultPlan::new()).unwrap();
+        check_against_oracle(&tasks, &outputs);
+        assert!(
+            matches!(co.pool.state(2), crate::elastic::pool::ServerState::Degraded { .. }),
+            "gray server must be auto-demoted to Slow, got {:?}",
+            co.pool.state(2)
+        );
+        assert!(co.pool.is_schedulable(2), "gray demotion must not kill");
+        let stats = co.shutdown().unwrap();
+        assert_eq!(stats[0].gray_demoted, 1);
+    }
+
+    // ----- deterministic execution flavor --------------------------------
+
+    #[test]
+    fn exec_flat_matches_oracle_under_kill_and_drain() {
+        let mut rng = Rng::new(31);
+        let tasks = mk_tasks(
+            &mut rng,
+            &[(0, 4, 0), (1, 4, 1), (2, 4, 1), (3, 4, 2), (4, 4, 2), (5, 4, 0)],
+        );
+        let fault = FaultPlan::new().kill(1, 0).drain(2, 0);
+        let mut pool = ServerPool::new(3);
+        let mut compute = dims();
+        let rep = run_elastic_exec(&mut pool, 0, &tasks, &fault, &mut compute).unwrap();
+        check_against_oracle(&tasks, &rep.outputs);
+        assert!(!pool.is_schedulable(1) && !pool.is_schedulable(2));
+        // Kill victim held 2 tasks → 1 lost; drainee held 2 → 1 kept,
+        // 1 redirected.
+        assert_eq!(rep.redispatched.len(), 1);
+        assert_eq!(rep.drain_kept.len(), 1);
+        assert_eq!(rep.drain_redirected.len(), 1);
+        for t in &rep.drain_kept {
+            assert!(
+                !rep.drain_redirected.contains(t) && !rep.redispatched.contains(t),
+                "partial drain re-dispatched a started task"
+            );
+        }
+        assert_eq!(rep.duplicates, 0);
+    }
+
+    #[test]
+    fn exec_pp_remaps_pong_and_redispatches_ping() {
+        let mut rng = Rng::new(37);
+        let tasks = mk_tasks(
+            &mut rng,
+            &[
+                (0, 4, 0),
+                (1, 4, 1),
+                (2, 4, 1),
+                (3, 4, 2),
+                (4, 4, 1),
+                (5, 4, 1),
+                (6, 4, 0),
+                (7, 4, 2),
+            ],
+        );
+        let fault = FaultPlan::new().kill(1, 0);
+        let mut pool = ServerPool::new(3);
+        let mut compute = dims();
+        let rep = run_elastic_exec_pp(&mut pool, 0, &tasks, &fault, &mut compute).unwrap();
+        check_against_oracle(&tasks, &rep.outputs);
+        assert_eq!(rep.redispatched.len(), 1, "lost ping half: {rep:?}");
+        assert_eq!(rep.remapped.len(), 2, "victim's pong tasks: {rep:?}");
+        assert!(rep.drain_kept.is_empty());
+        assert!(!pool.is_schedulable(1));
+    }
+
+    #[test]
+    fn exec_multi_tick_rejoin_restores_service() {
+        let mut rng = Rng::new(47);
+        let fault = FaultPlan::new().kill(1, 0).rejoin(1, 2);
+        let mut pool = ServerPool::new(2);
+        let mut compute = dims();
+        for tick in 0..3 {
+            let tasks = mk_tasks(
+                &mut rng,
+                &[(tick as u32 * 10, 4, 0), (tick as u32 * 10 + 1, 4, 1)],
+            );
+            let rep = run_elastic_exec(&mut pool, tick, &tasks, &fault, &mut compute).unwrap();
+            check_against_oracle(&tasks, &rep.outputs);
+        }
+        assert!(pool.is_schedulable(1), "rejoin must restore the server");
     }
 
     // ----- simulator flavor ---------------------------------------------

@@ -3,19 +3,27 @@
 //! byte-for-byte — the same plan drives both the discrete-event simulator
 //! and the real threaded runtime.
 //!
-//! Three event kinds (ticks are the scheduler's planning rounds):
+//! Four event kinds (ticks are the scheduler's planning rounds):
 //!
 //! * `Kill { server, tick }` — the server dies *mid*-tick: work already
 //!   dispatched to it this tick is lost and must be re-dispatched;
 //! * `Slow { server, tick, factor }` — from this tick the server runs at
 //!   `factor` × nominal speed (0.25 = four times slower) until rejoined;
-//! * `Rejoin { server, tick }` — a dead or slowed server returns healthy.
+//! * `Rejoin { server, tick }` — a dead or slowed server returns healthy;
+//! * `Drain { server, tick }` — *partial drain*: the server finishes the
+//!   CA-tasks it already started this tick, the unstarted tail of its
+//!   queue is re-dispatched, and it leaves the pool at tick end.
 //!
 //! Plans come from three constructors: the builder API, the compact CLI
-//! spec grammar (`kill:1@3,slow:2@4x0.25,rejoin:1@6`), or
+//! spec grammar (`kill:1@3,slow:2@4x0.25,drain:0@5,rejoin:1@6`), or
 //! [`FaultPlan::random`] seeded from a CLI-settable RNG seed.
+//!
+//! [`FaultPlan`] implements the property-test harness's
+//! [`Shrink`](crate::util::quickcheck::Shrink), so counterexamples found
+//! by `util::quickcheck::check` reduce to minimal failing fault scripts.
 
 use crate::util::json::{Json, JsonError};
+use crate::util::quickcheck::Shrink;
 use crate::util::rng::Rng;
 
 use super::pool::ServerPool;
@@ -26,6 +34,7 @@ pub enum FaultEvent {
     Kill { server: usize, tick: usize },
     Slow { server: usize, tick: usize, factor: f64 },
     Rejoin { server: usize, tick: usize },
+    Drain { server: usize, tick: usize },
 }
 
 impl FaultEvent {
@@ -33,7 +42,8 @@ impl FaultEvent {
         match *self {
             FaultEvent::Kill { tick, .. }
             | FaultEvent::Slow { tick, .. }
-            | FaultEvent::Rejoin { tick, .. } => tick,
+            | FaultEvent::Rejoin { tick, .. }
+            | FaultEvent::Drain { tick, .. } => tick,
         }
     }
 
@@ -41,7 +51,8 @@ impl FaultEvent {
         match *self {
             FaultEvent::Kill { server, .. }
             | FaultEvent::Slow { server, .. }
-            | FaultEvent::Rejoin { server, .. } => server,
+            | FaultEvent::Rejoin { server, .. }
+            | FaultEvent::Drain { server, .. } => server,
         }
     }
 
@@ -53,7 +64,32 @@ impl FaultEvent {
                 format!("slow:{server}@{tick}x{factor}")
             }
             FaultEvent::Rejoin { server, tick } => format!("rejoin:{server}@{tick}"),
+            FaultEvent::Drain { server, tick } => format!("drain:{server}@{tick}"),
         }
+    }
+}
+
+impl Shrink for FaultEvent {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        let (server, tick) = (self.server(), self.tick());
+        let rebuild = |server: usize, tick: usize| match *self {
+            FaultEvent::Kill { .. } => FaultEvent::Kill { server, tick },
+            FaultEvent::Slow { factor, .. } => FaultEvent::Slow { server, tick, factor },
+            FaultEvent::Rejoin { .. } => FaultEvent::Rejoin { server, tick },
+            FaultEvent::Drain { .. } => FaultEvent::Drain { server, tick },
+        };
+        out.extend(server.shrink().into_iter().map(|s| rebuild(s, tick)));
+        out.extend(tick.shrink().into_iter().map(|t| rebuild(server, t)));
+        if let FaultEvent::Slow { factor, .. } = *self {
+            // A factor shrinks *toward 1.0* (the no-op slowdown); zero
+            // would be an invalid speed.
+            if factor != 1.0 {
+                out.push(FaultEvent::Slow { server, tick, factor: 1.0 });
+                out.push(FaultEvent::Slow { server, tick, factor: (factor + 1.0) / 2.0 });
+            }
+        }
+        out
     }
 }
 
@@ -84,6 +120,13 @@ impl FaultPlan {
         self
     }
 
+    /// Partial drain: finish started work, re-dispatch the unstarted
+    /// tail, leave the pool at tick end.
+    pub fn drain(mut self, server: usize, tick: usize) -> FaultPlan {
+        self.events.push(FaultEvent::Drain { server, tick });
+        self
+    }
+
     pub fn is_empty(&self) -> bool {
         self.events.is_empty()
     }
@@ -103,13 +146,13 @@ impl FaultPlan {
     }
 
     /// Apply this tick's *membership* events to the pool: `Slow` degrades,
-    /// `Rejoin` restores. `Kill` is returned to the caller instead of
-    /// being applied — a kill lands mid-tick, so the executor must first
-    /// dispatch to the victim and only then sever it (that is what makes
-    /// re-dispatch observable). The caller marks the pool dead once the
-    /// tick's losses are accounted.
+    /// `Rejoin` restores. `Kill` and `Drain` are returned to the caller
+    /// instead of being applied — both land mid-tick, so the executor
+    /// must first dispatch to the victim and only then sever (kill) or
+    /// seal (drain) it; that is what makes re-dispatch observable. The
+    /// caller updates the pool once the tick's losses are accounted.
     pub fn apply_tick(&self, tick: usize, pool: &mut ServerPool) -> Vec<FaultEvent> {
-        let mut kills = Vec::new();
+        let mut deferred = Vec::new();
         for ev in self.events_at(tick) {
             match ev {
                 FaultEvent::Slow { server, factor, .. } => {
@@ -122,10 +165,10 @@ impl FaultPlan {
                         pool.restore(server);
                     }
                 }
-                FaultEvent::Kill { .. } => kills.push(ev),
+                FaultEvent::Kill { .. } | FaultEvent::Drain { .. } => deferred.push(ev),
             }
         }
-        kills
+        deferred
     }
 
     /// Parse the compact CLI grammar: comma-separated events,
@@ -156,6 +199,10 @@ impl FaultPlan {
                 "rejoin" => {
                     let tick = parse_tick(entry, tick_s)?;
                     plan.events.push(FaultEvent::Rejoin { server, tick });
+                }
+                "drain" => {
+                    let tick = parse_tick(entry, tick_s)?;
+                    plan.events.push(FaultEvent::Drain { server, tick });
                 }
                 "slow" => {
                     let (tick_s, factor_s) = tick_s
@@ -240,6 +287,11 @@ impl FaultPlan {
                             ("server", Json::Num(server as f64)),
                             ("tick", Json::Num(tick as f64)),
                         ]),
+                        FaultEvent::Drain { server, tick } => Json::obj(vec![
+                            ("kind", Json::Str("drain".into())),
+                            ("server", Json::Num(server as f64)),
+                            ("tick", Json::Num(tick as f64)),
+                        ]),
                     })
                     .collect(),
             ),
@@ -269,11 +321,17 @@ impl FaultPlan {
             match kind.as_str() {
                 "kill" => plan.events.push(FaultEvent::Kill { server, tick }),
                 "rejoin" => plan.events.push(FaultEvent::Rejoin { server, tick }),
+                "drain" => plan.events.push(FaultEvent::Drain { server, tick }),
                 "slow" => {
                     let factor = e
                         .req("factor")?
                         .as_f64()
                         .ok_or_else(|| JsonError("factor must be a number".into()))?;
+                    if !(factor > 0.0 && factor.is_finite()) {
+                        return Err(JsonError(format!(
+                            "slow factor must be positive and finite, got {factor}"
+                        )));
+                    }
                     plan.events.push(FaultEvent::Slow { server, tick, factor });
                 }
                 other => return Err(JsonError(format!("unknown fault kind `{other}`"))),
@@ -281,6 +339,40 @@ impl FaultPlan {
         }
         Ok(plan)
     }
+}
+
+impl Shrink for FaultPlan {
+    /// Shrinks by dropping events and by shrinking individual events —
+    /// a failing property reduces to a minimal fault script.
+    fn shrink(&self) -> Vec<Self> {
+        self.events
+            .shrink()
+            .into_iter()
+            .map(|events| FaultPlan { events })
+            .collect()
+    }
+}
+
+/// Partition deferred mid-tick events into `(kills, drains)` victim
+/// lists: out-of-range servers are dropped and a kill outranks a
+/// simultaneous drain of the same server. The single classifier every
+/// execution path shares — threaded, deterministic exec, and both
+/// discrete-event simulators.
+pub fn partition_kills_drains(
+    deferred: &[FaultEvent],
+    capacity: usize,
+) -> (Vec<usize>, Vec<usize>) {
+    let mut kills = Vec::new();
+    let mut drains = Vec::new();
+    for ev in deferred {
+        match *ev {
+            FaultEvent::Kill { server, .. } if server < capacity => kills.push(server),
+            FaultEvent::Drain { server, .. } if server < capacity => drains.push(server),
+            _ => {}
+        }
+    }
+    drains.retain(|d| !kills.contains(d));
+    (kills, drains)
 }
 
 fn parse_tick(entry: &str, s: &str) -> Result<usize, String> {
@@ -333,6 +425,22 @@ mod tests {
     }
 
     #[test]
+    fn json_rejects_bad_slow_factor() {
+        // parse_spec already rejects these; JSON must too, or a loaded
+        // plan would panic `bad speed` deep in the pool.
+        let j = crate::util::json::Json::obj(vec![(
+            "events",
+            crate::util::json::Json::Arr(vec![crate::util::json::Json::obj(vec![
+                ("kind", crate::util::json::Json::Str("slow".into())),
+                ("server", crate::util::json::Json::Num(1.0)),
+                ("tick", crate::util::json::Json::Num(0.0)),
+                ("factor", crate::util::json::Json::Num(0.0)),
+            ])]),
+        )]);
+        assert!(FaultPlan::from_json(&j).is_err());
+    }
+
+    #[test]
     fn apply_tick_defers_kills() {
         let mut pool = ServerPool::new(3);
         let p = FaultPlan::new().kill(1, 2).slow(2, 2, 0.5);
@@ -341,6 +449,45 @@ mod tests {
         // Slow applied immediately; kill deferred to the executor.
         assert_eq!(pool.state(2), ServerState::Degraded { speed: 0.5 });
         assert!(pool.is_schedulable(1));
+    }
+
+    #[test]
+    fn drain_spec_and_json_roundtrip() {
+        let p = FaultPlan::new().drain(2, 5);
+        assert_eq!(p.to_spec(), "drain:2@5");
+        assert_eq!(FaultPlan::parse_spec("drain:2@5").unwrap(), p);
+        assert_eq!(FaultPlan::from_json(&p.to_json()).unwrap(), p);
+    }
+
+    #[test]
+    fn apply_tick_defers_drains_like_kills() {
+        let mut pool = ServerPool::new(3);
+        let p = FaultPlan::new().drain(0, 1).kill(1, 1);
+        let deferred = p.apply_tick(1, &mut pool);
+        assert_eq!(deferred.len(), 2);
+        assert!(pool.is_schedulable(0), "drain is the executor's call, not apply_tick's");
+        assert!(pool.is_schedulable(1));
+    }
+
+    #[test]
+    fn fault_plan_shrinks_to_fewer_and_smaller_events() {
+        let p = FaultPlan::new().kill(3, 4).slow(2, 5, 0.25);
+        let candidates = p.shrink();
+        assert!(!candidates.is_empty());
+        // Some candidate drops an event entirely.
+        assert!(candidates.iter().any(|c| c.events.len() < p.events.len()));
+        // Some candidate shrinks a field of an event.
+        assert!(candidates
+            .iter()
+            .any(|c| c.events.len() == p.events.len() && *c != p));
+        // No shrink may produce an invalid slow factor.
+        for c in &candidates {
+            for e in &c.events {
+                if let FaultEvent::Slow { factor, .. } = *e {
+                    assert!(factor > 0.0, "shrink produced bad factor {factor}");
+                }
+            }
+        }
     }
 
     #[test]

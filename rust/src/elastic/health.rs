@@ -1,14 +1,33 @@
 //! Per-server health signals: completion-latency EWMAs and straggler
 //! classification.
 //!
-//! The coordinator already predicts what a server's tick *should* cost
-//! (the §4.2 profiler); the monitor seeds each server's EWMA with that
-//! prediction so detection works from the very first tick, then folds in
-//! observed completion latencies. A server is a *straggler* when its
-//! EWMA exceeds a configurable multiple of the pool median — the same
+//! The monitor is unit-agnostic: verdicts compare each server's EWMA to
+//! the live-pool *median*, so any consistently-used signal works. The
+//! elastic paths feed **size-normalized slowness** — the threaded
+//! runtime observes seconds per causal pair, the simulators observe
+//! achieved-over-predicted ratios (1.0 = nominal) — so that a server
+//! handed the tick's heavy CA-tasks is not mistaken for an unhealthy
+//! one. Priors seeded via [`HealthMonitor::seed`] must use the same
+//! units as the observations that will follow. A server is a
+//! *straggler* when its EWMA exceeds a configurable multiple of the
+//! pool median — the same
 //! median-relative rule DISTFLASHATTN-style systems use, robust to the
 //! whole pool legitimately slowing down together (bigger batch, longer
 //! context) because the median moves with it.
+//!
+//! The median is taken over **live** members only. The monitor tracks
+//! liveness itself ([`HealthMonitor::mark_dead`] / `mark_live`), so a
+//! mass-kill cannot leave survivors judged against the dead cohort's
+//! stale EWMAs — the failure mode where three fast servers die and the
+//! lone (legitimately slower) survivor is promptly declared a straggler
+//! relative to ghosts.
+//!
+//! Between `Ok` and `Straggler` sits the *gray* band (§ straggler
+//! mitigation, ROADMAP follow-up): a server whose EWMA exceeds
+//! `gray_factor × median` but not yet `straggler_factor × median` is
+//! auto-demoted to `Slow` with the scaled cost factor
+//! [`HealthMonitor::gray_speed`] (≈ median/EWMA), so the scheduler plans
+//! around the degradation *before* the kill verdict ever fires.
 
 /// Knobs for health tracking.
 #[derive(Debug, Clone)]
@@ -17,6 +36,13 @@ pub struct HealthCfg {
     pub alpha: f64,
     /// A server is a straggler when `ewma > straggler_factor × median`.
     pub straggler_factor: f64,
+    /// Gray-degradation threshold: `gray_factor × median < ewma ≤
+    /// straggler_factor × median` auto-demotes the server to `Slow` with
+    /// the scaled cost factor [`HealthMonitor::gray_speed`] instead of
+    /// waiting for the kill verdict. Must not exceed `straggler_factor`.
+    pub gray_factor: f64,
+    /// Floor on the speed estimate a gray server is demoted to.
+    pub gray_speed_floor: f64,
     /// Observations required before a server can be called a straggler
     /// (priors seeded via [`HealthMonitor::seed`] count as one).
     pub min_samples: usize,
@@ -27,6 +53,8 @@ impl Default for HealthCfg {
         Self {
             alpha: 0.3,
             straggler_factor: 2.0,
+            gray_factor: 1.4,
+            gray_speed_floor: 0.1,
             min_samples: 1,
         }
     }
@@ -42,8 +70,11 @@ struct Ewma {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Verdict {
     Ok,
+    /// Slower than the gray threshold but not yet a straggler: demote to
+    /// `Slow` with a scaled cost factor rather than killing.
+    Gray,
     Straggler,
-    /// No data yet — cannot be classified.
+    /// No data yet (or the server is not live) — cannot be classified.
     Unknown,
 }
 
@@ -52,13 +83,22 @@ pub enum Verdict {
 pub struct HealthMonitor {
     cfg: HealthCfg,
     ewma: Vec<Ewma>,
+    /// Live flags: dead members are excluded from medians and verdicts.
+    live: Vec<bool>,
 }
 
 impl HealthMonitor {
     pub fn new(n_servers: usize, cfg: HealthCfg) -> HealthMonitor {
+        assert!(
+            cfg.gray_factor <= cfg.straggler_factor,
+            "gray_factor {} above straggler_factor {}",
+            cfg.gray_factor,
+            cfg.straggler_factor
+        );
         HealthMonitor {
             cfg,
             ewma: vec![Ewma::default(); n_servers],
+            live: vec![true; n_servers],
         }
     }
 
@@ -66,11 +106,30 @@ impl HealthMonitor {
     pub fn ensure_capacity(&mut self, n: usize) {
         if n > self.ewma.len() {
             self.ewma.resize(n, Ewma::default());
+            self.live.resize(n, true);
         }
     }
 
-    /// Seed a server's EWMA with a predicted latency (profiler prior).
-    /// Overwrites nothing once real observations exist.
+    /// Exclude a dead server from medians and verdicts. Its EWMA is kept
+    /// (history survives a restore) but contributes nothing while dead.
+    pub fn mark_dead(&mut self, server: usize) {
+        self.live[server] = false;
+    }
+
+    /// Re-admit a server to the live cohort.
+    pub fn mark_live(&mut self, server: usize) {
+        self.live[server] = true;
+    }
+
+    pub fn is_live(&self, server: usize) -> bool {
+        self.live[server]
+    }
+
+    /// Seed a server's EWMA with a prior, in the **same units** the
+    /// caller's subsequent [`HealthMonitor::observe`] calls will use
+    /// (the elastic paths use size-normalized slowness, so a nominal
+    /// prior is 1.0 — not an absolute profiler latency). Overwrites
+    /// nothing once real observations exist.
     pub fn seed(&mut self, server: usize, predicted: f64) {
         let e = &mut self.ewma[server];
         if e.samples == 0 {
@@ -91,9 +150,11 @@ impl HealthMonitor {
         e.samples += 1;
     }
 
-    /// Forget a server's history (it rejoined as a new incarnation).
+    /// Forget a server's history (it rejoined as a new incarnation) and
+    /// mark it live again.
     pub fn reset(&mut self, server: usize) {
         self.ewma[server] = Ewma::default();
+        self.live[server] = true;
     }
 
     pub fn ewma(&self, server: usize) -> Option<f64> {
@@ -105,10 +166,14 @@ impl HealthMonitor {
         self.ewma[server].samples
     }
 
-    /// Median EWMA across the given (alive) servers with data.
+    /// Median EWMA across the given servers, restricted to **live**
+    /// members with data. Dead entries in `servers` are skipped — a
+    /// mass-kill must not leave survivors judged against the dead
+    /// cohort's stale latencies.
     pub fn median(&self, servers: &[usize]) -> Option<f64> {
         let mut vals: Vec<f64> = servers
             .iter()
+            .filter(|&&s| self.live.get(s).copied().unwrap_or(false))
             .filter_map(|&s| self.ewma(s))
             .collect();
         if vals.is_empty() {
@@ -118,8 +183,13 @@ impl HealthMonitor {
         Some(vals[vals.len() / 2])
     }
 
-    /// Classify `server` against the pool of `alive` servers.
+    /// Classify `server` against the pool of `alive` servers (non-live
+    /// entries are ignored for the median; a non-live `server` is
+    /// `Unknown`).
     pub fn verdict(&self, server: usize, alive: &[usize]) -> Verdict {
+        if !self.live.get(server).copied().unwrap_or(false) {
+            return Verdict::Unknown;
+        }
         let e = self.ewma[server];
         if e.samples < self.cfg.min_samples {
             return Verdict::Unknown;
@@ -132,8 +202,37 @@ impl HealthMonitor {
         }
         if e.value > self.cfg.straggler_factor * med {
             Verdict::Straggler
+        } else if e.value > self.cfg.gray_factor * med {
+            Verdict::Gray
         } else {
             Verdict::Ok
+        }
+    }
+
+    /// The scaled execution-speed estimate for a gray server — the ratio
+    /// of the live median to its EWMA, clamped to
+    /// `[gray_speed_floor, 1.0]`. `None` unless the verdict is `Gray`.
+    pub fn gray_speed(&self, server: usize, alive: &[usize]) -> Option<f64> {
+        if self.verdict(server, alive) != Verdict::Gray {
+            return None;
+        }
+        self.slow_estimate(server, alive)
+    }
+
+    /// The believed-speed estimate for any server currently judged slow
+    /// (`Gray` *or* `Straggler`): `median/EWMA` clamped to
+    /// `[gray_speed_floor, 1.0]`. `None` when the verdict is `Ok` or
+    /// `Unknown`. Callers re-evaluate this every tick so a demoted
+    /// server's believed speed tracks its actual condition instead of
+    /// freezing at the first estimate.
+    pub fn slow_estimate(&self, server: usize, alive: &[usize]) -> Option<f64> {
+        match self.verdict(server, alive) {
+            Verdict::Gray | Verdict::Straggler => {
+                let med = self.median(alive)?;
+                let e = self.ewma(server)?;
+                Some((med / e).clamp(self.cfg.gray_speed_floor, 1.0))
+            }
+            _ => None,
         }
     }
 
@@ -192,6 +291,59 @@ mod tests {
         m.observe(3, 10.0);
         assert!(m.is_straggler(3, &alive));
         assert!(!m.is_straggler(0, &alive));
+    }
+
+    #[test]
+    fn mass_kill_does_not_mark_survivor_straggler() {
+        // Regression: the median must exclude non-live members. Three
+        // fast servers die; the lone (legitimately slower) survivor used
+        // to be judged against the dead cohort's stale EWMAs and flagged.
+        let mut m = mon(4);
+        let all = [0usize, 1, 2, 3];
+        for s in 0..3 {
+            m.observe(s, 1.0);
+        }
+        m.observe(3, 10.0);
+        assert!(m.is_straggler(3, &all), "pre-kill: genuine straggler");
+        for s in 0..3 {
+            m.mark_dead(s);
+        }
+        assert!(
+            !m.is_straggler(3, &all),
+            "survivor must not be judged against dead servers' medians"
+        );
+        assert_eq!(m.verdict(0, &all), Verdict::Unknown, "dead ⇒ unclassifiable");
+        assert_eq!(m.median(&all), Some(10.0), "median is over the live cohort");
+        m.mark_live(0);
+        m.mark_live(1);
+        // Live cohort {0: 1.0, 1: 1.0, 3: 10.0} → median back at 1.0.
+        assert_eq!(m.median(&all), Some(1.0));
+        assert!(m.is_straggler(3, &all), "restored fast servers re-tighten the median");
+    }
+
+    #[test]
+    fn gray_band_sits_between_ok_and_straggler() {
+        let mut m = mon(3);
+        let alive = [0usize, 1, 2];
+        m.observe(0, 1.0);
+        m.observe(1, 1.0);
+        m.observe(2, 1.7); // 1.4 < 1.7/median=1.0 < 2.0
+        assert_eq!(m.verdict(0, &alive), Verdict::Ok);
+        assert_eq!(m.verdict(2, &alive), Verdict::Gray);
+        assert!(!m.is_straggler(2, &alive), "gray is not yet a straggler");
+        let sp = m.gray_speed(2, &alive).unwrap();
+        assert!((sp - 1.0 / 1.7).abs() < 1e-12, "scaled cost factor {sp}");
+        assert_eq!(m.gray_speed(0, &alive), None, "healthy servers have no gray speed");
+    }
+
+    #[test]
+    fn gray_speed_respects_floor() {
+        let cfg = HealthCfg { gray_factor: 1.0, straggler_factor: 1e6, ..Default::default() };
+        let mut m = HealthMonitor::new(2, cfg);
+        m.observe(0, 1.0);
+        m.observe(1, 1e4);
+        assert_eq!(m.verdict(1, &[0, 1]), Verdict::Gray);
+        assert_eq!(m.gray_speed(1, &[0, 1]), Some(0.1));
     }
 
     #[test]

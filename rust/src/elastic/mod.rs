@@ -14,41 +14,90 @@
 //!   state motion: the §4.2 scheduler simply re-plans against the live
 //!   membership.
 //!
+//! ## The PP-tick membership-epoch model
+//!
+//! Under pipeline parallelism the elastic pool must survive faults that
+//! land *mid-PP-tick*. Every membership change bumps the pool's epoch
+//! ([`pool::ServerPool::epoch`]); each of a tick's two ping-pong
+//! nano-batch waves is dispatched under a [`pool::WaveStamp`] capturing
+//! the epoch it was planned against. A mid-tick fault therefore splits
+//! the tick cleanly:
+//!
+//! * the **already-dispatched wave** (stale stamp) loses only its
+//!   in-flight CA-tasks on the victim — each is recovered by a single
+//!   resend (statelessness, §3), accounted per wave;
+//! * the **not-yet-dispatched wave** simply re-plans against the fresh
+//!   epoch: tasks aimed at a departed server are *remapped* before any
+//!   bytes move, and its communication stays overlapped with the other
+//!   wave's compute (the §4.1 ping-pong contract).
+//!
+//! **Partial drain**: a draining server finishes every CA-task it
+//! already started; only the unstarted tail of its queue is
+//! re-dispatched, and it leaves the pool at tick end. No started task is
+//! ever re-dispatched (`drain:<srv>@<tick>` in fault specs,
+//! [`crate::sim::engine::Engine::drain_resource`] in the simulators).
+//!
+//! **Gray degradation**: between healthy and straggler sits the gray
+//! band — `gray_factor × median < EWMA ≤ straggler_factor × median`
+//! (defaults 1.4 and 2.0). A gray server is auto-demoted to `Slow` with
+//! the scaled cost factor `median/EWMA` (clamped to ≥ 0.1) *before* any
+//! strike-based kill verdict fires; schedulers then plan around the
+//! degradation and re-dispatch targets deprioritize it. Medians are
+//! taken over **live** members only, so a mass-kill cannot get the
+//! survivors declared stragglers against dead servers' stale EWMAs.
+//!
 //! Module map:
 //!
 //! * [`pool`] — [`pool::ServerPool`]: join/leave/drain/kill/restore
-//!   lifecycle, and the physical↔virtual [`pool::PoolView`] that feeds
-//!   live membership to the scheduler;
-//! * [`health`] — [`health::HealthMonitor`]: per-server completion-
-//!   latency EWMAs (seeded from profiler predictions) and median-relative
-//!   straggler verdicts;
-//! * [`fault`] — [`fault::FaultPlan`]: deterministic kill/slow/rejoin
-//!   scripts (builder, compact CLI spec, JSON, seeded-random), injectable
-//!   into both execution paths;
+//!   lifecycle, the physical↔virtual [`pool::PoolView`] that feeds
+//!   live membership to the scheduler, and the wave-scoped
+//!   [`pool::WaveStamp`] epochs;
+//! * [`health`] — [`health::HealthMonitor`]: per-server EWMAs over
+//!   size-normalized slowness (1.0 = nominal), live-member
+//!   median-relative straggler verdicts, and the gray band;
+//! * [`fault`] — [`fault::FaultPlan`]: deterministic
+//!   kill/slow/rejoin/drain scripts (builder, compact CLI spec, JSON,
+//!   seeded-random; `Shrink` for property-test counterexamples),
+//!   injectable into every execution path;
 //! * [`failover`] — the execution layer: the threaded
-//!   [`failover::ElasticCoordinator`] (dispatch → deadline-based
-//!   suspicion → cancel + re-dispatch → first-response-wins gather) and
-//!   the deterministic [`failover::run_elastic_sim`] on the
-//!   discrete-event engine (per-resource speed factors + revocation);
+//!   [`failover::ElasticCoordinator`] (flat [`run_tick`] and ping-pong
+//!   [`run_pp_tick`] with wave-scoped epochs; dispatch → deadline-based
+//!   suspicion → cancel + re-dispatch → first-response-wins gather),
+//!   the deterministic single-threaded [`failover::run_elastic_exec`] /
+//!   [`failover::run_elastic_exec_pp`] conformance references, and the
+//!   discrete-event [`failover::run_elastic_sim`];
+//! * [`pp`] — [`pp::run_distca_pp_elastic`]: elastic ping-pong PP on the
+//!   discrete-event engine — same-phase ticks, wave-scoped recovery,
+//!   tick barriers, partial drain, and health-driven demotion;
 //! * [`autoscale`] — [`autoscale::Autoscaler`]: queue-depth and
-//!   imbalance driven grow/shrink with cooldown.
+//!   imbalance driven grow/shrink with cooldown, decided only at wave
+//!   boundaries under PP.
 //!
-//! `distca elastic` drives this from the CLI; `examples/elastic_demo.rs`
-//! kills a server mid-run and proves the output still matches the
-//! monolithic oracle bit-for-bit; `benches/bench_elastic_recovery.rs`
-//! measures recovery time and goodput retention under fault plans.
+//! `distca elastic` (and `distca elastic --pp`) drives this from the
+//! CLI; `examples/elastic_demo.rs` and `examples/elastic_pp_demo.rs`
+//! kill a server mid-(PP-)tick and prove the output still matches the
+//! monolithic oracle bit-for-bit; `rust/tests/conformance_elastic.rs`
+//! differential-tests every execution path against the pure-Rust oracle
+//! under seeded fault plans; `benches/bench_elastic_recovery.rs`
+//! measures recovery time and goodput retention.
+//!
+//! [`run_tick`]: failover::ElasticCoordinator::run_tick
+//! [`run_pp_tick`]: failover::ElasticCoordinator::run_pp_tick
 
 pub mod autoscale;
 pub mod failover;
 pub mod fault;
 pub mod health;
 pub mod pool;
+pub mod pp;
 
 pub use autoscale::{AutoscaleCfg, Autoscaler, LoadSignals, ScaleDecision};
 pub use failover::{
-    run_elastic_sim, CaCompute, ElasticCfg, ElasticCoordinator, ElasticSimCfg,
-    ElasticSimReport, ElasticTask, ReferenceCaCompute, SimTick, TickStats,
+    run_elastic_exec, run_elastic_exec_pp, run_elastic_sim, CaCompute, ElasticCfg,
+    ElasticCoordinator, ElasticSimCfg, ElasticSimReport, ElasticTask, ExecReport,
+    ReferenceCaCompute, SimTick, TickStats,
 };
 pub use fault::{FaultEvent, FaultPlan};
 pub use health::{HealthCfg, HealthMonitor, Verdict};
-pub use pool::{PoolView, ServerPool, ServerState};
+pub use pool::{PoolView, ServerPool, ServerState, WaveStamp};
+pub use pp::{pp_tick_horizon, run_distca_pp_elastic, ElasticPpCfg, ElasticPpReport, PpTick};

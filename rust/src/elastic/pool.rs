@@ -9,6 +9,8 @@
 //! fault plans name) and the dense *virtual* index space `[0, n_alive)`
 //! the §4.2 scheduler requires.
 
+use crate::coordinator::pingpong::Wave;
+
 use super::health::HealthMonitor;
 
 /// Lifecycle state of one attention server.
@@ -160,6 +162,27 @@ impl ServerPool {
         self.servers[id].strikes = 0;
     }
 
+    /// Physical ids currently draining (finishing started work only).
+    pub fn draining(&self) -> Vec<usize> {
+        (0..self.servers.len())
+            .filter(|&s| self.servers[s].state == ServerState::Draining)
+            .collect()
+    }
+
+    /// Stamp the current membership for one `(tick, wave)` dispatch. A
+    /// fault that changes membership mid-tick bumps the pool epoch, so
+    /// the stamp of the already-dispatched wave goes stale — that wave's
+    /// losses are re-dispatched task-by-task — while the not-yet-
+    /// dispatched wave simply takes a fresh stamp and re-plans.
+    pub fn stamp(&self, tick: usize, wave: Wave) -> WaveStamp {
+        WaveStamp { tick, wave, epoch: self.epoch }
+    }
+
+    /// Has membership changed since `stamp` was taken?
+    pub fn is_stale(&self, stamp: &WaveStamp) -> bool {
+        stamp.epoch != self.epoch
+    }
+
     /// Dense scheduling view over the currently schedulable servers.
     /// Panics if the pool has none — the caller must check first.
     pub fn view(&self) -> PoolView {
@@ -171,6 +194,15 @@ impl ServerPool {
         }
         PoolView { phys, virt_of, epoch: self.epoch }
     }
+}
+
+/// Wave-scoped membership epoch: which `(tick, wave)` a dispatch was
+/// planned for and the pool epoch it observed at that instant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WaveStamp {
+    pub tick: usize,
+    pub wave: Wave,
+    pub epoch: u64,
 }
 
 /// A frozen physical↔virtual index mapping for one scheduling round.
@@ -195,6 +227,11 @@ impl PoolView {
 
     pub fn to_virtual(&self, phys: usize) -> Option<usize> {
         self.virt_of.get(phys).copied().flatten()
+    }
+
+    /// Has the pool's membership moved on since this view was frozen?
+    pub fn is_stale(&self, pool: &ServerPool) -> bool {
+        self.epoch != pool.epoch()
     }
 }
 
@@ -275,6 +312,32 @@ mod tests {
         assert_eq!(p.strike(0), 2);
         p.clear_strikes(0);
         assert_eq!(p.strike(0), 1);
+    }
+
+    #[test]
+    fn wave_stamps_go_stale_on_membership_change() {
+        let mut p = ServerPool::new(3);
+        let ping = p.stamp(5, Wave::Ping);
+        assert!(!p.is_stale(&ping));
+        p.kill(1); // mid-tick fault
+        assert!(p.is_stale(&ping), "in-flight wave must observe the epoch bump");
+        let pong = p.stamp(5, Wave::Pong);
+        assert!(!p.is_stale(&pong), "the re-planned wave starts fresh");
+        assert!(pong.epoch > ping.epoch);
+        let v = p.view();
+        assert!(!v.is_stale(&p));
+        p.restore(1);
+        assert!(v.is_stale(&p));
+    }
+
+    #[test]
+    fn draining_lists_drainees() {
+        let mut p = ServerPool::new(3);
+        assert!(p.draining().is_empty());
+        p.drain(2);
+        assert_eq!(p.draining(), vec![2]);
+        p.leave(2);
+        assert!(p.draining().is_empty());
     }
 
     #[test]

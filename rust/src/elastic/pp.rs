@@ -1,0 +1,872 @@
+//! Elastic ping-pong pipeline parallelism: the discrete-event flavor.
+//!
+//! [`run_distca_pp_elastic`] simulates DistCA's same-phase PP ticks
+//! (§4.1, Fig. 8) over an elastic attention-server pool. Each PP tick's
+//! CA-tasks are planned against the *live* membership, split into two
+//! nano-batch waves (ping/pong), and executed under the fault plan:
+//!
+//! * a **kill** or **drain** lands mid-tick, inside the ping wave. Only
+//!   the ping wave's in-flight CA-tasks can be lost — the pong wave has
+//!   not been dispatched yet, so it is simply *re-planned* against the
+//!   post-fault membership epoch (remapped, zero loss) while its
+//!   communication stays overlapped with ping compute;
+//! * a **partial drain** lets the drainee finish the CA-task it already
+//!   started ([`Engine::drain_resource`]); only the unstarted tail of
+//!   its queue is re-dispatched, and the tail re-sends immediately (a
+//!   drain is cooperative — no failure-detection delay);
+//! * the **tick barrier** ([`Engine::add_barrier`]) joins every CA-task
+//!   of the tick, recoveries included; the revocation cascade resolves
+//!   at the barrier instead of crossing it, so the next tick's work is
+//!   never collaterally revoked;
+//! * **belief vs. ground truth**: a scripted `Slow` changes a server's
+//!   *actual* rate only. The coordinator's pool learns about it through
+//!   the health monitor's normalized-slowness EWMAs: the gray verdict
+//!   auto-demotes the server to `Slow` with a scaled cost factor
+//!   (before any kill verdict), and the next tick's plan gives the
+//!   demoted server only its believed-speed share of the CA load.
+//!
+//! The report mirrors [`super::failover::ElasticSimReport`] but adds the
+//! PP-tick dimension: per tick the phase, the membership epoch each wave
+//! was dispatched under, and the wave-scoped recovery counters.
+
+use anyhow::Result;
+
+use crate::coordinator::pingpong::{
+    layer_time_pingpong, layer_time_signal, layer_time_single_stream, split_nano, split_waves,
+};
+use crate::coordinator::{schedule, SchedulerCfg};
+use crate::data::{pack_fixed, Document};
+use crate::model::flops::{CA_BWD_FACTOR, LINEAR_BWD_FACTOR};
+use crate::parallel::pipeline::{distca_ticks, PipePhase};
+use crate::sim::engine::Engine;
+use crate::sim::strategies::{
+    assign_round_robin, pp_tick_active, pp_tick_items, CommMode, SimParams,
+};
+use crate::util::json::Json;
+
+use super::fault::{partition_kills_drains, FaultEvent, FaultPlan};
+use super::health::{HealthCfg, HealthMonitor, Verdict};
+use super::pool::{ServerPool, ServerState};
+
+/// Knobs for the elastic PP simulation.
+#[derive(Debug, Clone)]
+pub struct ElasticPpCfg {
+    /// Where in the ping wave's span the mid-tick fault lands (0..1).
+    pub kill_phase_frac: f64,
+    /// Failure-detection delay for kills, as a fraction of the
+    /// fault-free ping span. Drains are cooperative: their tail
+    /// re-dispatches at the drain instant with no detection delay.
+    pub detection_frac: f64,
+    /// Health tracking knobs (straggler + gray thresholds).
+    pub health: HealthCfg,
+}
+
+impl Default for ElasticPpCfg {
+    fn default() -> Self {
+        Self {
+            kill_phase_frac: 0.4,
+            detection_frac: 0.1,
+            health: HealthCfg::default(),
+        }
+    }
+}
+
+/// One elastic PP tick's outcome.
+#[derive(Debug, Clone)]
+pub struct PpTick {
+    pub tick: usize,
+    pub phase: PipePhase,
+    /// Schedulable servers when the tick was planned.
+    pub n_alive: usize,
+    pub n_tasks: usize,
+    /// Ping-wave CA-tasks lost to the mid-tick fault.
+    pub lost_tasks: usize,
+    /// Lost ping tasks re-sent to survivors (equals `lost_tasks`).
+    pub redispatched: usize,
+    /// Pong tasks re-planned pre-dispatch against the fresh epoch.
+    pub remapped: usize,
+    /// Ping tasks a drainee had already started and finished itself.
+    pub drain_kept: usize,
+    /// Servers auto-demoted to `Slow` by the health verdicts this tick.
+    pub demoted: usize,
+    /// Membership epoch each wave was dispatched under.
+    pub epochs: [u64; 2],
+    pub tick_time: f64,
+    pub fault_free_time: f64,
+    pub comm_bytes: f64,
+    pub events: Vec<String>,
+}
+
+/// Aggregate of an elastic PP run.
+#[derive(Debug, Clone)]
+pub struct ElasticPpReport {
+    pub per_tick: Vec<PpTick>,
+    pub total_time: f64,
+    pub fault_free_time: f64,
+    pub redispatched: usize,
+    pub remapped: usize,
+    pub lost_tasks: usize,
+}
+
+impl ElasticPpReport {
+    /// Extra seconds paid to faults and recovery.
+    pub fn recovery_overhead(&self) -> f64 {
+        (self.total_time - self.fault_free_time).max(0.0)
+    }
+
+    /// Throughput retention: 1.0 = no degradation.
+    pub fn goodput_ratio(&self) -> f64 {
+        if self.total_time <= 0.0 {
+            return 1.0;
+        }
+        self.fault_free_time / self.total_time
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("total_time_s", Json::Num(self.total_time)),
+            ("fault_free_time_s", Json::Num(self.fault_free_time)),
+            ("recovery_overhead_s", Json::Num(self.recovery_overhead())),
+            ("goodput_ratio", Json::Num(self.goodput_ratio())),
+            ("redispatched", Json::Num(self.redispatched as f64)),
+            ("remapped", Json::Num(self.remapped as f64)),
+            ("lost_tasks", Json::Num(self.lost_tasks as f64)),
+            (
+                "per_tick",
+                Json::Arr(
+                    self.per_tick
+                        .iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("tick", Json::Num(t.tick as f64)),
+                                (
+                                    "phase",
+                                    Json::Str(
+                                        match t.phase {
+                                            PipePhase::Forward => "F",
+                                            PipePhase::Backward => "B",
+                                        }
+                                        .into(),
+                                    ),
+                                ),
+                                ("n_alive", Json::Num(t.n_alive as f64)),
+                                ("n_tasks", Json::Num(t.n_tasks as f64)),
+                                ("lost_tasks", Json::Num(t.lost_tasks as f64)),
+                                ("redispatched", Json::Num(t.redispatched as f64)),
+                                ("remapped", Json::Num(t.remapped as f64)),
+                                ("drain_kept", Json::Num(t.drain_kept as f64)),
+                                ("demoted", Json::Num(t.demoted as f64)),
+                                ("epoch_ping", Json::Num(t.epochs[0] as f64)),
+                                ("epoch_pong", Json::Num(t.epochs[1] as f64)),
+                                ("tick_time_s", Json::Num(t.tick_time)),
+                                ("fault_free_time_s", Json::Num(t.fault_free_time)),
+                                ("comm_bytes", Json::Num(t.comm_bytes)),
+                                (
+                                    "events",
+                                    Json::Arr(
+                                        t.events
+                                            .iter()
+                                            .map(|e| Json::Str(e.clone()))
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Microbatch layout of one elastic PP run: the packed chunks, their
+/// round-robin assignment to DP groups, and the per-group microbatch
+/// count `m` that sets the schedule span.
+fn pp_layout(
+    docs: &[Document],
+    chunk_tokens: usize,
+    p: &SimParams,
+) -> (Vec<crate::data::Chunk>, Vec<Vec<usize>>, usize) {
+    let n_groups = p.n_logical() / p.pp;
+    let chunks = pack_fixed(docs, chunk_tokens);
+    let groups = assign_round_robin(chunks.len(), n_groups);
+    let m = groups.iter().map(|g| g.len()).max().unwrap_or(0).max(1);
+    (chunks, groups, m)
+}
+
+/// The PP-tick horizon of an elastic PP run over `docs`: the same-phase
+/// schedule executes exactly `2(m + pp − 1)` ticks. Callers use this to
+/// scope fault plans to ticks that actually fire.
+pub fn pp_tick_horizon(docs: &[Document], chunk_tokens: usize, p: &SimParams) -> usize {
+    let (_, _, m) = pp_layout(docs, chunk_tokens, p);
+    2 * (m + p.pp - 1)
+}
+
+/// Simulate one DistCA iteration under pipeline parallelism with an
+/// elastic attention-server pool: same-phase PP ticks from
+/// [`distca_ticks`], per-tick planning against live membership, two
+/// nano-batch waves per tick with wave-scoped membership epochs, and the
+/// fault plan's kills / slowdowns / partial drains / rejoins applied
+/// mid-tick. See the module docs for the exact semantics.
+pub fn run_distca_pp_elastic(
+    docs: &[Document],
+    chunk_tokens: usize,
+    p: &SimParams,
+    fault: &FaultPlan,
+    cfg: &ElasticPpCfg,
+) -> Result<ElasticPpReport> {
+    let n = p.n_logical();
+    anyhow::ensure!(
+        n > 0 && p.pp > 0 && n % p.pp == 0,
+        "bad topology: {n} logical devices, pp={}",
+        p.pp
+    );
+    anyhow::ensure!(!docs.is_empty(), "empty batch");
+    let tp = p.tp as f64;
+    let bw = p.cluster.ib_bw * tp;
+    let layers = p.layers_per_stage();
+    let (chunks, groups, m) = pp_layout(docs, chunk_tokens, p);
+    let sched = distca_ticks(p.pp, m);
+    let scfg = SchedulerCfg {
+        tolerance: p.tolerance,
+        server_bw: p.cluster.ib_bw,
+        extra_window: p.linear_layer_fwd(chunk_tokens) * p.tp as f64,
+        overlap_frac: 1.0,
+        ..Default::default()
+    };
+
+    let mut pool = ServerPool::new(n);
+    let mut health = HealthMonitor::new(n, cfg.health.clone());
+    // Ground truth the coordinator cannot observe directly: a scripted
+    // `Slow` changes the actual rate; the pool (belief) only learns
+    // through the health monitor.
+    let mut actual_speed = vec![1.0f64; n];
+
+    let mut per_tick: Vec<PpTick> = Vec::with_capacity(sched.tick_ops.len());
+    let mut total_time = 0.0f64;
+    let mut fault_free_total = 0.0f64;
+    let mut redispatched_total = 0usize;
+    let mut remapped_total = 0usize;
+    let mut lost_total = 0usize;
+
+    for (tick, row) in sched.tick_ops.iter().enumerate() {
+        let phase = sched.tick_phases[tick];
+        let mut events: Vec<String> = Vec::new();
+
+        // Scripted events: Slow/Rejoin act before the tick; kills and
+        // drains land mid-ping below.
+        let events_now = fault.events_at(tick);
+        for ev in &events_now {
+            events.push(ev.to_spec());
+            match *ev {
+                FaultEvent::Slow { server, factor, .. } if server < n => {
+                    actual_speed[server] = factor;
+                }
+                FaultEvent::Rejoin { server, .. } if server < n => {
+                    actual_speed[server] = 1.0;
+                    pool.restore(server);
+                    health.reset(server);
+                }
+                _ => {}
+            }
+        }
+        let (mut kills, mut drains) = partition_kills_drains(&events_now, n);
+        kills.retain(|&k| pool.is_schedulable(k));
+        drains.retain(|&d| pool.is_schedulable(d));
+
+        // Health-driven demotion (belief). In this simulator the pool's
+        // `Degraded` states are *only* ever produced here (scripted
+        // slowdowns touch `actual_speed`, never the pool), so the belief
+        // is revisited every tick: a demoted server's speed estimate
+        // tracks its current condition, and a clear verdict promotes it
+        // back to Healthy.
+        let mut demoted = 0usize;
+        let live = pool.schedulable();
+        for &s in &live {
+            match pool.state(s) {
+                ServerState::Healthy => match health.verdict(s, &live) {
+                    Verdict::Gray => {
+                        if let Some(speed) = health.slow_estimate(s, &live) {
+                            pool.degrade(s, speed);
+                            demoted += 1;
+                            events.push(format!("gray:{s}x{speed:.2}"));
+                        }
+                    }
+                    Verdict::Straggler => {
+                        if let Some(speed) = health.slow_estimate(s, &live) {
+                            pool.degrade(s, speed);
+                            demoted += 1;
+                            events.push(format!("demote:{s}x{speed:.2}"));
+                        }
+                    }
+                    _ => {}
+                },
+                ServerState::Degraded { speed: old } => {
+                    match health.slow_estimate(s, &live) {
+                        Some(speed) => {
+                            if (speed - old).abs() > 0.01 {
+                                pool.degrade(s, speed);
+                                events.push(format!("reest:{s}x{speed:.2}"));
+                            }
+                        }
+                        None => {
+                            if health.verdict(s, &live) == Verdict::Ok {
+                                pool.restore(s);
+                                events.push(format!("promote:{s}"));
+                            }
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        anyhow::ensure!(pool.n_schedulable() > 0, "tick {tick}: no servers left");
+        let epoch_ping = pool.epoch();
+        let view = pool.view();
+        let nv = view.n();
+
+        let active = pp_tick_active(&groups, row, p.pp);
+        if active.is_empty() {
+            // A pure warm-up/drain hole: membership events still apply.
+            for &k in &kills {
+                pool.kill(k);
+                health.mark_dead(k);
+            }
+            for &d in &drains {
+                pool.drain(d);
+                pool.leave(d);
+                health.mark_dead(d);
+            }
+            per_tick.push(PpTick {
+                tick,
+                phase,
+                // Same convention as active ticks: membership when the
+                // tick was planned (pre-fault).
+                n_alive: nv,
+                n_tasks: 0,
+                lost_tasks: 0,
+                redispatched: 0,
+                remapped: 0,
+                drain_kept: 0,
+                demoted,
+                epochs: [epoch_ping, pool.epoch()],
+                tick_time: 0.0,
+                fault_free_time: 0.0,
+                comm_bytes: 0.0,
+                events,
+            });
+            continue;
+        }
+
+        // Plan this tick's CA over the live membership (homes mapped
+        // physical → virtual; a dead home's items re-home to a survivor:
+        // the attention-server role is elastic, the stage role is not).
+        let mut items = pp_tick_items(&chunks, &active);
+        for it in &mut items {
+            it.home = view.to_virtual(it.home).unwrap_or(it.home % nv);
+        }
+        let plan = schedule(&items, nv, &p.f, &p.prof, &p.model, &scfg);
+        let (lin_f, ca_f) = match phase {
+            PipePhase::Forward => (1.0, 1.0),
+            PipePhase::Backward => (LINEAR_BWD_FACTOR, CA_BWD_FACTOR),
+        };
+        // Full-tick CA cost of each assignment on one logical device.
+        let costs: Vec<f64> = plan
+            .assignments
+            .iter()
+            .map(|a| {
+                a.item
+                    .ca_tasks()
+                    .iter()
+                    .map(|ct| p.prof.predict(ct.q_len as f64, ct.kv_len as f64))
+                    .sum::<f64>()
+                    / tp
+                    * ca_f
+                    * layers
+            })
+            .collect();
+        let speeds: Vec<f64> = (0..nv).map(|v| actual_speed[view.to_physical(v)]).collect();
+
+        // Believed speeds steer the plan: a demoted server keeps only
+        // its believed-speed share of the tick's CA load; the excess
+        // re-targets the least-loaded believed-fast servers.
+        let believed: Vec<f64> = (0..nv).map(|v| pool.speed(view.to_physical(v))).collect();
+        let mut assign_to: Vec<usize> = plan.assignments.iter().map(|a| a.server).collect();
+        rebalance_for_belief(&mut assign_to, &costs, &believed);
+
+        // Nano-batch waves at CA-task granularity.
+        let (ping_idx, pong_idx) = split_waves(&costs, |&c| c);
+        let mut ping_load = vec![0.0f64; nv];
+        let mut pong_load = vec![0.0f64; nv];
+        for &i in &ping_idx {
+            ping_load[assign_to[i]] += costs[i];
+        }
+        for &i in &pong_idx {
+            pong_load[assign_to[i]] += costs[i];
+        }
+
+        // --- Wave 0 (ping): the fault bites mid-wave. -------------------
+        let killed_v: Vec<usize> = kills.iter().filter_map(|&k| view.to_virtual(k)).collect();
+        let drained_v: Vec<usize> =
+            drains.iter().filter_map(|&d| view.to_virtual(d)).collect();
+        let mut eng = Engine::new(nv);
+        for (v, &s) in speeds.iter().enumerate() {
+            eng.set_speed(v, s);
+        }
+        let mut ping_task_of: Vec<usize> = Vec::with_capacity(ping_idx.len());
+        for &i in &ping_idx {
+            let id = eng.add_task(assign_to[i], costs[i], &[]);
+            debug_assert_eq!(id, ping_task_of.len());
+            ping_task_of.push(i);
+        }
+        let mut kill_time_max = 0.0f64;
+        for &v in &killed_v {
+            let span = ping_load[v] / speeds[v];
+            let t_ev = cfg.kill_phase_frac * span;
+            eng.revoke_resource(v, t_ev);
+            kill_time_max = kill_time_max.max(t_ev);
+        }
+        let mut drain_time_max = 0.0f64;
+        for &v in &drained_v {
+            let span = ping_load[v] / speeds[v];
+            let t_ev = cfg.kill_phase_frac * span;
+            eng.drain_resource(v, t_ev);
+            drain_time_max = drain_time_max.max(t_ev);
+        }
+        eng.run();
+        let ping_busy = eng.busy_per_resource();
+        let lost_ids = eng.revoked();
+        let mut drain_kept = 0usize;
+        for (id, &ai) in ping_task_of.iter().enumerate() {
+            let v = assign_to[ai];
+            if drained_v.contains(&v) {
+                // Partial-drain contract: a drainee's started tasks all
+                // finish; only unstarted ones may be re-dispatched.
+                debug_assert!(
+                    !eng.started(id) || eng.is_done(id),
+                    "drain cut a started task"
+                );
+                if eng.is_done(id) {
+                    drain_kept += 1;
+                }
+            }
+        }
+        let lost: Vec<usize> = lost_ids.iter().map(|&id| ping_task_of[id]).collect();
+
+        // --- The fault becomes membership fact between the waves. -------
+        for &k in &kills {
+            pool.kill(k);
+            health.mark_dead(k);
+        }
+        for &d in &drains {
+            pool.drain(d);
+        }
+        let epoch_pong = pool.epoch();
+
+        // --- Wave 1 (pong): re-planned against the fresh epoch, plus
+        // recovery of the ping wave's losses. Survivors first finish
+        // their ping occupancy (FIFO), then run pong, then absorb.
+        let survivors: Vec<usize> = (0..nv).filter(|v| !killed_v.contains(v)).collect();
+        let rec_targets: Vec<usize> = survivors
+            .iter()
+            .copied()
+            .filter(|v| !drained_v.contains(v))
+            .collect();
+        anyhow::ensure!(!rec_targets.is_empty(), "tick {tick}: all servers died");
+        let mut engb = Engine::new(nv);
+        for (v, &s) in speeds.iter().enumerate() {
+            engb.set_speed(v, s);
+        }
+        let mut engb_ids: Vec<usize> = Vec::new();
+        let mut engb_nominal = vec![0.0f64; nv];
+        for &v in &survivors {
+            if ping_busy[v] > 0.0 {
+                engb_ids.push(engb.add_task(v, ping_busy[v] * speeds[v], &[]));
+                engb_nominal[v] += ping_busy[v] * speeds[v];
+            }
+        }
+        let mut remapped = 0usize;
+        let mut rr = 0usize;
+        for &i in &pong_idx {
+            let srv = assign_to[i];
+            let target = if killed_v.contains(&srv) || drained_v.contains(&srv) {
+                remapped += 1;
+                let t = rec_targets[rr % rec_targets.len()];
+                rr += 1;
+                t
+            } else {
+                srv
+            };
+            engb_ids.push(engb.add_task(target, costs[i], &[]));
+            engb_nominal[target] += costs[i];
+        }
+        let ping_ff = ping_load.iter().cloned().fold(0.0f64, f64::max);
+        let detect_kill = kill_time_max + cfg.detection_frac * ping_ff;
+        let mut comm_bytes = plan.total_comm_bytes() * layers;
+        let mut redispatched = 0usize;
+        for &li in &lost {
+            let a = &plan.assignments[li];
+            let bytes = crate::coordinator::comm::item_migration_bytes(&a.item, &p.model);
+            comm_bytes += bytes;
+            let resend = bytes / bw;
+            let at = if killed_v.contains(&assign_to[li]) {
+                detect_kill
+            } else {
+                drain_time_max
+            };
+            let t = rec_targets[rr % rec_targets.len()];
+            rr += 1;
+            engb_ids.push(engb.add_task_at(t, costs[li] + resend, &[], at));
+            engb_nominal[t] += costs[li] + resend;
+            redispatched += 1;
+        }
+        // The tick barrier: the next PP tick may not begin before every
+        // CA-task of this one — recoveries included — has resolved.
+        let bar = engb.add_barrier(&engb_ids);
+        engb.run();
+        let ca_time = engb.finish_of(bar);
+        let engb_busy = engb.busy_per_resource();
+
+        // --- Compose with linear + communication under ping-pong. -------
+        let mut lin = vec![0.0f64; nv];
+        for &(dev, ci) in &active {
+            if let Some(v) = view.to_virtual(dev) {
+                lin[v] = p.linear_layer_fwd(chunks[ci].tokens()) * lin_f * layers;
+            }
+        }
+        let comm_scale = if ca_f > 1.0 { 2.0 } else { 1.0 };
+        let mut tick_time = ca_time;
+        let mut ff_tick = 0.0f64;
+        for v in 0..nv {
+            let send: f64 = plan.comm_matrix[v].iter().sum::<f64>()
+                + plan.return_matrix[v].iter().sum::<f64>();
+            let recv: f64 = (0..nv)
+                .map(|o| plan.comm_matrix[o][v] + plan.return_matrix[o][v])
+                .sum();
+            let comm_t = send.max(recv) / bw * layers * comm_scale;
+            // Fault-free reference: nominal speeds, planned loads.
+            let ca_ff_v = plan.server_load[v] / tp * ca_f * layers;
+            let (fp, fq) = split_nano(lin[v], ca_ff_v, comm_t * 0.7, comm_t * 0.3);
+            let ff_dev = match p.comm_mode {
+                CommMode::PingPong => layer_time_pingpong(fp, fq),
+                CommMode::SingleStream => layer_time_single_stream(fp, fq),
+                CommMode::Signal => layer_time_signal(fp, fq),
+            };
+            ff_tick = ff_tick.max(ff_dev);
+            // Achieved: post-fault CA occupancy. Faults model the
+            // *attention-server* role only (that is what statelessness
+            // makes elastic); the stage's linear compute stays nominal.
+            let (ap, aq) = split_nano(lin[v], engb_busy[v], comm_t * 0.7, comm_t * 0.3);
+            let dev_t = match p.comm_mode {
+                CommMode::PingPong => layer_time_pingpong(ap, aq),
+                CommMode::SingleStream => layer_time_single_stream(ap, aq),
+                CommMode::Signal => layer_time_signal(ap, aq),
+            };
+            tick_time = tick_time.max(dev_t);
+        }
+
+        // Health observes normalized slowness (achieved over assigned
+        // nominal work) for the next tick's verdicts.
+        for &v in &survivors {
+            if engb_nominal[v] > 0.0 && !drained_v.contains(&v) {
+                health.observe(view.to_physical(v), engb_busy[v] / engb_nominal[v]);
+            }
+        }
+
+        // Drains complete at tick end.
+        for &d in &drains {
+            pool.leave(d);
+            health.mark_dead(d);
+        }
+
+        total_time += tick_time;
+        fault_free_total += ff_tick;
+        redispatched_total += redispatched;
+        remapped_total += remapped;
+        lost_total += lost.len();
+        per_tick.push(PpTick {
+            tick,
+            phase,
+            n_alive: nv,
+            n_tasks: plan.assignments.len(),
+            lost_tasks: lost.len(),
+            redispatched,
+            remapped,
+            drain_kept,
+            demoted,
+            epochs: [epoch_ping, epoch_pong],
+            tick_time,
+            fault_free_time: ff_tick,
+            comm_bytes,
+            events,
+        });
+    }
+    Ok(ElasticPpReport {
+        per_tick,
+        total_time,
+        fault_free_time: fault_free_total,
+        redispatched: redispatched_total,
+        remapped: remapped_total,
+        lost_tasks: lost_total,
+    })
+}
+
+/// Move CA load off believed-slow servers: each server whose believed
+/// speed is `f < 1` keeps at most its `f`-weighted fair share; the
+/// excess (smallest assignments first) re-targets the least-loaded
+/// believed-**fast** server, so one straggler's overflow never lands on
+/// another straggler (falling back to any other server only when no
+/// fast one exists). Pure belief-side re-planning — ground truth is
+/// untouched.
+fn rebalance_for_belief(assign_to: &mut [usize], costs: &[f64], believed: &[f64]) {
+    let nv = believed.len();
+    let believed_sum: f64 = believed.iter().sum();
+    if believed_sum <= 0.0 || believed.iter().all(|&b| b >= 1.0) {
+        return;
+    }
+    let total: f64 = costs.iter().sum();
+    let mut load = vec![0.0f64; nv];
+    for (i, &v) in assign_to.iter().enumerate() {
+        load[v] += costs[i];
+    }
+    for v in 0..nv {
+        if believed[v] >= 1.0 {
+            continue;
+        }
+        let target = believed[v] * total / believed_sum;
+        loop {
+            if load[v] <= target {
+                break;
+            }
+            // Smallest assignment on v.
+            let mut pick: Option<usize> = None;
+            for (i, &s) in assign_to.iter().enumerate() {
+                if s == v && pick.map_or(true, |p| costs[i] < costs[p]) {
+                    pick = Some(i);
+                }
+            }
+            let Some(i) = pick else { break };
+            // Least-loaded believed-fast destination; any other server
+            // (believed-relative) only when no fast one exists.
+            let mut dest = usize::MAX;
+            let mut best = f64::INFINITY;
+            for (d, &b) in believed.iter().enumerate() {
+                if d == v || b < 1.0 {
+                    continue;
+                }
+                if load[d] < best {
+                    best = load[d];
+                    dest = d;
+                }
+            }
+            if dest == usize::MAX {
+                for (d, &b) in believed.iter().enumerate() {
+                    if d == v || b <= 0.0 {
+                        continue;
+                    }
+                    let rel = load[d] / b;
+                    if rel < best {
+                        best = rel;
+                        dest = d;
+                    }
+                }
+            }
+            if dest == usize::MAX {
+                break;
+            }
+            load[v] -= costs[i];
+            load[dest] += costs[i];
+            assign_to[i] = dest;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::run::DataDist;
+    use crate::config::{ClusterConfig, ModelConfig};
+    use crate::data::distributions::sampler_for;
+    use crate::util::rng::Rng;
+
+    fn params(nodes: usize, pp: usize) -> SimParams {
+        SimParams::new(ModelConfig::llama3_8b(), ClusterConfig::h200(nodes), 8, pp)
+    }
+
+    fn sample_docs(max_len: usize, budget: usize, seed: u64) -> Vec<Document> {
+        let mut rng = Rng::new(seed);
+        sampler_for(DataDist::Pretrain, max_len).sample_tokens(&mut rng, budget, 0)
+    }
+
+    #[test]
+    fn elastic_pp_without_faults_matches_fault_free() {
+        let p = params(4, 2);
+        let docs = sample_docs(65536, 4 * 65536, 3);
+        let r = run_distca_pp_elastic(&docs, 65536, &p, &FaultPlan::new(), &Default::default())
+            .unwrap();
+        assert!(r.total_time > 0.0);
+        assert_eq!(r.redispatched, 0);
+        assert_eq!(r.remapped, 0);
+        assert_eq!(r.lost_tasks, 0);
+        assert!(
+            (r.total_time - r.fault_free_time).abs() / r.fault_free_time < 1e-9,
+            "no faults must mean no overhead: {} vs {}",
+            r.total_time,
+            r.fault_free_time
+        );
+        for t in &r.per_tick {
+            assert_eq!(t.epochs[0], t.epochs[1], "epoch must not move without faults");
+        }
+    }
+
+    #[test]
+    fn elastic_pp_mid_tick_kill_is_wave_scoped() {
+        let p = params(4, 2);
+        let docs = sample_docs(65536, 4 * 65536, 5);
+        let fault = FaultPlan::new().kill(1, 1);
+        let r =
+            run_distca_pp_elastic(&docs, 65536, &p, &fault, &Default::default()).unwrap();
+        let t1 = r.per_tick.iter().find(|t| t.tick == 1).unwrap();
+        assert!(
+            t1.lost_tasks + t1.remapped > 0,
+            "the victim must have held work in some wave: {t1:?}"
+        );
+        assert_eq!(
+            t1.redispatched, t1.lost_tasks,
+            "only the ping wave's in-flight tasks are re-dispatched"
+        );
+        assert!(t1.epochs[1] > t1.epochs[0], "mid-tick kill must bump the epoch");
+        assert!(t1.tick_time >= t1.fault_free_time);
+        // The pool stays shrunk afterwards.
+        let t2 = r.per_tick.iter().find(|t| t.tick == 2).unwrap();
+        assert_eq!(t2.n_alive, t1.n_alive - 1);
+        assert!(r.goodput_ratio() <= 1.0);
+        assert!(r.recovery_overhead() >= 0.0);
+    }
+
+    #[test]
+    fn elastic_pp_partial_drain_keeps_started_work() {
+        let p = params(4, 2);
+        let docs = sample_docs(65536, 4 * 65536, 7);
+        let fault = FaultPlan::new().drain(2, 1);
+        let r =
+            run_distca_pp_elastic(&docs, 65536, &p, &fault, &Default::default()).unwrap();
+        let t1 = r.per_tick.iter().find(|t| t.tick == 1).unwrap();
+        // The drainee finishes what it started; only its unstarted tail
+        // and pong share move (debug_asserts inside enforce the
+        // started-task contract).
+        assert_eq!(t1.redispatched, t1.lost_tasks);
+        let t2 = r.per_tick.iter().find(|t| t.tick == 2).unwrap();
+        assert_eq!(t2.n_alive, t1.n_alive - 1, "drainee must leave at tick end");
+        // A drain is cooperative: no detection delay, so its overhead is
+        // bounded by a kill's on the same schedule.
+        let kill_r = run_distca_pp_elastic(
+            &docs,
+            65536,
+            &p,
+            &FaultPlan::new().kill(2, 1),
+            &Default::default(),
+        )
+        .unwrap();
+        assert!(
+            r.recovery_overhead() <= kill_r.recovery_overhead() + 1e-9,
+            "drain {} should cost no more than kill {}",
+            r.recovery_overhead(),
+            kill_r.recovery_overhead()
+        );
+    }
+
+    #[test]
+    fn elastic_pp_gray_demotes_silent_straggler() {
+        let p = params(4, 2);
+        let docs = sample_docs(65536, 4 * 65536, 11);
+        // A silent slowdown: ground truth only — the pool must *learn*.
+        let fault = FaultPlan::new().slow(1, 0, 0.2);
+        let r =
+            run_distca_pp_elastic(&docs, 65536, &p, &fault, &Default::default()).unwrap();
+        assert!(
+            r.per_tick.iter().any(|t| t.demoted > 0),
+            "health EWMAs must auto-demote the silent straggler: {:?}",
+            r.per_tick.iter().map(|t| &t.events).collect::<Vec<_>>()
+        );
+        // Once demoted, the believed-speed share rebalancing recovers
+        // most of the loss: later same-phase ticks run much closer to
+        // fault-free than the first, unmitigated one.
+        let first = &r.per_tick[0];
+        let unmitigated = first.tick_time / first.fault_free_time;
+        let last_fwd = r
+            .per_tick
+            .iter()
+            .rev()
+            .find(|t| t.phase == PipePhase::Forward && t.n_tasks > 0)
+            .unwrap();
+        let mitigated = last_fwd.tick_time / last_fwd.fault_free_time;
+        assert!(
+            unmitigated > 1.0 + 1e-6,
+            "the silent slowdown must cost something before demotion"
+        );
+        assert!(
+            mitigated < unmitigated * 0.9,
+            "demotion must mitigate: first ratio {unmitigated}, last {mitigated}"
+        );
+    }
+
+    #[test]
+    fn elastic_pp_rejoin_restores_capacity() {
+        let p = params(4, 2);
+        let docs = sample_docs(65536, 4 * 65536, 13);
+        let fault = FaultPlan::new().kill(1, 0).rejoin(1, 3);
+        let r =
+            run_distca_pp_elastic(&docs, 65536, &p, &fault, &Default::default()).unwrap();
+        let t2 = r.per_tick.iter().find(|t| t.tick == 2).unwrap();
+        let t4 = r.per_tick.iter().find(|t| t.tick == 4).unwrap();
+        assert!(t2.n_alive < t4.n_alive, "rejoin must restore the pool");
+    }
+
+    #[test]
+    fn elastic_pp_report_json_has_fields() {
+        let p = params(4, 2);
+        let docs = sample_docs(65536, 4 * 65536, 17);
+        let fault = FaultPlan::new().kill(1, 1);
+        let r =
+            run_distca_pp_elastic(&docs, 65536, &p, &fault, &Default::default()).unwrap();
+        let j = r.to_json();
+        assert!(j.get("goodput_ratio").is_some());
+        assert!(j.get("remapped").is_some());
+        let ticks = j.get("per_tick").unwrap().as_arr().unwrap();
+        assert_eq!(ticks.len(), r.per_tick.len());
+        assert!(ticks[0].get("phase").is_some());
+        assert!(ticks[0].get("epoch_ping").is_some());
+    }
+
+    #[test]
+    fn rebalance_moves_load_off_slow_belief() {
+        let costs = vec![1.0, 1.0, 1.0, 1.0];
+        let mut assign = vec![0, 0, 1, 1];
+        // Server 0 believed at quarter speed: fair share 2·(0.25/1.25)=0.4.
+        rebalance_for_belief(&mut assign, &costs, &[0.25, 1.0]);
+        let load0: f64 = assign
+            .iter()
+            .zip(&costs)
+            .filter(|(&s, _)| s == 0)
+            .map(|(_, &c)| c)
+            .sum();
+        assert!(load0 <= 1.0, "believed-slow server kept {load0} of 4.0");
+    }
+
+    #[test]
+    fn rebalance_never_sheds_onto_another_straggler() {
+        // Two believed-slow servers: one's excess must flow to the fast
+        // server, never to the other straggler.
+        let costs = vec![1.0; 10];
+        let mut assign = vec![0, 1, 1, 1, 1, 2, 2, 2, 2, 2];
+        let believed = [0.5, 0.5, 1.0];
+        rebalance_for_belief(&mut assign, &costs, &believed);
+        let load = |v: usize| assign.iter().filter(|&&s| s == v).count() as f64;
+        // Fair shares: 10·(0.5/2)=2.5 per straggler.
+        assert!(load(0) <= 2.5, "straggler 0 ended at {}", load(0));
+        assert!(load(1) <= 2.5, "straggler 1 ended at {}", load(1));
+        assert!(load(2) >= 5.0, "the fast server must absorb the excess");
+    }
+}

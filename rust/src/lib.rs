@@ -20,8 +20,13 @@
 //! same bytes elsewhere, a straggler's tasks can be speculatively
 //! duplicated (first response wins, duplicates suppressed by the
 //! `(doc, q_start)` tag), and the pool can grow or shrink between ticks
-//! with the scheduler simply re-planning against live membership. See
-//! [`elastic`] for the module map and the `FaultPlan` format.
+//! with the scheduler simply re-planning against live membership. Under
+//! pipeline parallelism this holds *mid-PP-tick*: each tick's two
+//! ping-pong nano-batch waves carry wave-scoped membership epochs, so a
+//! fault re-dispatches only the in-flight wave while the other wave
+//! re-plans against the fresh epoch with its communication still
+//! overlapped. See [`elastic`] for the module map, the PP-tick
+//! membership-epoch model, and the `FaultPlan` format.
 //! * **L2 (python/compile/model.py)** — the JAX transformer split at the
 //!   core-attention boundary, lowered once to HLO text.
 //! * **L1 (python/compile/kernels/)** — the Pallas packed-varlen causal

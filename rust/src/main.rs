@@ -17,8 +17,9 @@ use distca::coordinator::scheduler::items_from_chunks;
 use distca::coordinator::{schedule, Profiler, SchedulerCfg};
 use distca::data::distributions::sampler_for;
 use distca::elastic::{
-    run_elastic_sim, AutoscaleCfg, ElasticCfg, ElasticCoordinator, ElasticSimCfg, ElasticTask,
-    FaultPlan, ReferenceCaCompute,
+    pp_tick_horizon, run_distca_pp_elastic, run_elastic_sim, AutoscaleCfg, ElasticCfg,
+    ElasticCoordinator, ElasticPpCfg, ElasticSimCfg, ElasticTask, FaultPlan,
+    ReferenceCaCompute,
 };
 use distca::model::FlopsModel;
 use distca::runtime::ca_exec::synthetic_task;
@@ -34,7 +35,7 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("simulate", "simulate one iteration under --strategy"),
     ("compare", "DistCA vs WLB-ideal on one configuration"),
     ("schedule", "run the scheduler on a sampled batch; print the plan"),
-    ("elastic", "elastic server pool under a fault plan (sim or threaded)"),
+    ("elastic", "elastic server pool under a fault plan (sim or threaded; --pp for PP ticks)"),
     ("train", "train the tiny LM end-to-end via AOT artifacts"),
     ("bound", "Appendix A max-partition bound"),
     ("info", "print model & cluster configs"),
@@ -42,27 +43,35 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
 
 fn specs() -> Vec<FlagSpec> {
     vec![
-        FlagSpec { name: "model", help: "llama-8b | llama-34b | tiny-100m", default: Some("llama-8b"), is_bool: false },
-        FlagSpec { name: "gpus", help: "number of GPUs (multiple of 8)", default: Some("64"), is_bool: false },
-        FlagSpec { name: "max-doc-len", help: "max document length (tokens)", default: Some("131072"), is_bool: false },
-        FlagSpec { name: "tokens", help: "tokens per batch (default: 2 chunks)", default: None, is_bool: false },
-        FlagSpec { name: "strategy", help: "packed | cp | wlb | distca", default: Some("distca"), is_bool: false },
-        FlagSpec { name: "data", help: "pretrain | prolong", default: Some("pretrain"), is_bool: false },
-        FlagSpec { name: "tp", help: "tensor-parallel degree", default: Some("8"), is_bool: false },
-        FlagSpec { name: "pp", help: "pipeline-parallel degree", default: Some("1"), is_bool: false },
-        FlagSpec { name: "cp", help: "context-parallel degree (cp strategy)", default: Some("4"), is_bool: false },
-        FlagSpec { name: "tolerance", help: "scheduler imbalance tolerance", default: Some("0.10"), is_bool: false },
-        FlagSpec { name: "seed", help: "PRNG seed", default: Some("42"), is_bool: false },
-        FlagSpec { name: "batches", help: "batches to average", default: Some("5"), is_bool: false },
-        FlagSpec { name: "steps", help: "train steps (train)", default: Some("100"), is_bool: false },
-        FlagSpec { name: "ticks", help: "scheduling rounds (elastic)", default: Some("4"), is_bool: false },
-        FlagSpec { name: "servers", help: "pool size (elastic; default: gpus/tp)", default: None, is_bool: false },
-        FlagSpec { name: "runtime", help: "sim | threaded (elastic)", default: Some("sim"), is_bool: false },
-        FlagSpec { name: "fault", help: "fault spec, e.g. kill:1@2,slow:2@1x0.25,rejoin:1@3", default: None, is_bool: false },
-        FlagSpec { name: "fault-plan", help: "JSON fault-plan file (elastic)", default: None, is_bool: false },
-        FlagSpec { name: "autoscale", help: "enable pool autoscaling (elastic)", default: None, is_bool: true },
-        FlagSpec { name: "json", help: "emit JSON instead of tables", default: None, is_bool: true },
-        FlagSpec { name: "verbose", help: "debug logging", default: None, is_bool: true },
+        FlagSpec::value("model", "llama-8b | llama-34b | tiny-100m", Some("llama-8b")),
+        FlagSpec::value("gpus", "number of GPUs (multiple of 8)", Some("64")),
+        FlagSpec::value("max-doc-len", "max document length (tokens)", Some("131072")),
+        FlagSpec::value("tokens", "tokens per batch (default: 2 chunks)", None),
+        FlagSpec::value("strategy", "packed | cp | wlb | distca", Some("distca")),
+        FlagSpec::value("data", "pretrain | prolong", Some("pretrain")),
+        FlagSpec::value("tp", "tensor-parallel degree", Some("8")),
+        FlagSpec::optional_value(
+            "pp",
+            "pipeline-parallel degree; bare --pp is elastic-only shorthand for PP mode (degree 2)",
+            "1",
+        ),
+        FlagSpec::value("cp", "context-parallel degree (cp strategy)", Some("4")),
+        FlagSpec::value("tolerance", "scheduler imbalance tolerance", Some("0.10")),
+        FlagSpec::value("seed", "PRNG seed (default: $DISTCA_SEED, else 42)", None),
+        FlagSpec::value("batches", "batches to average", Some("5")),
+        FlagSpec::value("steps", "train steps (train)", Some("100")),
+        FlagSpec::value("ticks", "scheduling rounds (elastic; default 4)", None),
+        FlagSpec::value("servers", "pool size (elastic; default: gpus/tp)", None),
+        FlagSpec::value("runtime", "sim | threaded (elastic)", Some("sim")),
+        FlagSpec::value(
+            "fault",
+            "fault spec, e.g. kill:1@2,slow:2@1x0.25,drain:0@2,rejoin:1@3",
+            None,
+        ),
+        FlagSpec::value("fault-plan", "JSON fault-plan file (elastic)", None),
+        FlagSpec::boolean("autoscale", "enable pool autoscaling (elastic)"),
+        FlagSpec::boolean("json", "emit JSON instead of tables"),
+        FlagSpec::boolean("verbose", "debug logging"),
     ]
 }
 
@@ -126,7 +135,10 @@ fn setup(args: &Args) -> anyhow::Result<Setup> {
         tokens,
         data: DataDist::from_str(args.req("data")?)
             .ok_or_else(|| anyhow::anyhow!("unknown data distribution"))?,
-        seed: args.get_u64("seed", 42)?,
+        seed: match args.get_parse::<u64>("seed")? {
+            Some(s) => s,
+            None => distca::util::rng::seed_from_env(42),
+        },
         batches: args.get_usize("batches", 5)?,
     })
 }
@@ -287,17 +299,220 @@ fn fault_plan_from(args: &Args, n_servers: usize, ticks: usize, seed: u64) -> an
     Ok(FaultPlan::random(&mut rng, n_servers, ticks, 1, 1))
 }
 
+/// Reject fault events that would silently never fire — an unknown
+/// server or a tick the run never reaches would make a "fault-covered"
+/// run vacuously green. A `Rejoin` past the horizon stays legal: it is
+/// a recovery, and "the server never comes back within the observation
+/// window" is a legitimate plan shape.
+fn ensure_fault_in_scope(fault: &FaultPlan, n_servers: usize, ticks: usize) -> anyhow::Result<()> {
+    for ev in &fault.events {
+        anyhow::ensure!(
+            ev.server() < n_servers,
+            "fault `{}` names server {} but the pool has only {n_servers} servers",
+            ev.to_spec(),
+            ev.server()
+        );
+        if matches!(ev, distca::elastic::FaultEvent::Rejoin { .. }) {
+            continue;
+        }
+        anyhow::ensure!(
+            ev.tick() < ticks,
+            "fault `{}` names tick {} but the run has only {ticks} ticks",
+            ev.to_spec(),
+            ev.tick()
+        );
+    }
+    Ok(())
+}
+
 fn cmd_elastic(args: &Args) -> anyhow::Result<()> {
     let s = setup(args)?;
+    // `--pp` (bare or with a degree >= 2) selects elastic ping-pong PP:
+    // membership events land mid-PP-tick, wave-scoped.
+    let pp_mode = args.get_bool("pp") || s.params.pp >= 2;
+    if pp_mode && args.req("runtime")? == "sim" {
+        // The PP sim derives pool size and tick count from the schedule
+        // itself, so its fault plan is built (and validated) in there.
+        return cmd_elastic_pp_sim(args, &s);
+    }
+    // The threaded PP runtime executes one PP tick (two nano-batch
+    // waves) at a time; a pipeline depth beyond 2 only shapes the sim
+    // schedule — accepting it here would silently change nothing.
+    anyhow::ensure!(
+        !(pp_mode && s.params.pp > 2),
+        "--pp {} is only meaningful with --runtime sim; the threaded runtime runs \
+         tick-at-a-time (use bare --pp or --pp 2)",
+        s.params.pp
+    );
     let n = args.get_usize("servers", s.params.n_logical())?;
     anyhow::ensure!(n >= 2, "--servers must be at least 2");
     let ticks = args.get_usize("ticks", 4)?;
     let fault = fault_plan_from(args, n, ticks, s.seed)?;
-    match args.req("runtime")? {
-        "sim" => cmd_elastic_sim(args, &s, n, ticks, &fault),
-        "threaded" => cmd_elastic_threaded(args, n, ticks, s.seed, &fault),
-        other => anyhow::bail!("--runtime must be sim or threaded, got `{other}`"),
+    ensure_fault_in_scope(&fault, n, ticks)?;
+    match (args.req("runtime")?, pp_mode) {
+        ("sim", _) => cmd_elastic_sim(args, &s, n, ticks, &fault),
+        ("threaded", false) => cmd_elastic_threaded(args, n, ticks, s.seed, &fault),
+        ("threaded", true) => cmd_elastic_pp_threaded(args, n, ticks, s.seed, &fault),
+        (other, _) => anyhow::bail!("--runtime must be sim or threaded, got `{other}`"),
     }
+}
+
+fn cmd_elastic_pp_sim(args: &Args, s: &Setup) -> anyhow::Result<()> {
+    let mut params = s.params.clone();
+    if params.pp < 2 {
+        params.pp = 2;
+    }
+    anyhow::ensure!(
+        params.n_logical() % params.pp == 0,
+        "{} logical devices not divisible by pp={}",
+        params.n_logical(),
+        params.pp
+    );
+    // The attention-server pool under PP is the cluster's logical
+    // devices, and the tick count is the schedule's own horizon —
+    // reject flags that would otherwise be silently ignored.
+    anyhow::ensure!(
+        args.get("servers").is_none(),
+        "--servers does not apply to --pp sim (the pool is gpus/tp logical devices)"
+    );
+    anyhow::ensure!(
+        args.get("ticks").is_none(),
+        "--ticks does not apply to --pp sim (the schedule runs 2(m + pp - 1) PP ticks)"
+    );
+    anyhow::ensure!(
+        !args.get_bool("autoscale"),
+        "--autoscale is not yet wired into the PP sim (see ROADMAP follow-ups)"
+    );
+    let n = params.n_logical();
+    let mut rng = Rng::new(s.seed);
+    let docs = sampler_for(s.data, s.max_doc).sample_tokens(&mut rng, s.tokens, 0);
+    // Real horizon of the same-phase schedule: 2(m + pp - 1) ticks.
+    let pp_ticks = pp_tick_horizon(&docs, s.max_doc, &params);
+    let fault = fault_plan_from(args, n, pp_ticks, s.seed)?;
+    ensure_fault_in_scope(&fault, n, pp_ticks)?;
+    let report =
+        run_distca_pp_elastic(&docs, s.max_doc, &params, &fault, &ElasticPpCfg::default())?;
+    if args.get_bool("json") {
+        println!("{}", report.to_json().to_string_pretty());
+        return Ok(());
+    }
+    let mut t = Table::new(
+        &format!(
+            "elastic PP sim: {} devices, pp={}, {} ticks, fault plan [{}]",
+            params.n_logical(),
+            params.pp,
+            report.per_tick.len(),
+            if fault.is_empty() { "none".to_string() } else { fault.to_spec() }
+        ),
+        &[
+            "tick", "ph", "alive", "tasks", "lost", "redisp", "remap", "kept", "demoted",
+            "epochs", "tick time", "fault-free", "events",
+        ],
+    );
+    for r in &report.per_tick {
+        t.row(&[
+            r.tick.to_string(),
+            match r.phase {
+                distca::parallel::pipeline::PipePhase::Forward => "F".into(),
+                distca::parallel::pipeline::PipePhase::Backward => "B".into(),
+            },
+            r.n_alive.to_string(),
+            r.n_tasks.to_string(),
+            r.lost_tasks.to_string(),
+            r.redispatched.to_string(),
+            r.remapped.to_string(),
+            r.drain_kept.to_string(),
+            r.demoted.to_string(),
+            format!("{}/{}", r.epochs[0], r.epochs[1]),
+            secs(r.tick_time),
+            secs(r.fault_free_time),
+            r.events.join(" "),
+        ]);
+    }
+    t.print();
+    println!(
+        "total {} | fault-free {} | recovery overhead {} | goodput ratio {:.3} | {} re-dispatched, {} remapped, {} lost",
+        secs(report.total_time),
+        secs(report.fault_free_time),
+        secs(report.recovery_overhead()),
+        report.goodput_ratio(),
+        report.redispatched,
+        report.remapped,
+        report.lost_tasks,
+    );
+    Ok(())
+}
+
+fn cmd_elastic_pp_threaded(
+    args: &Args,
+    n: usize,
+    ticks: usize,
+    seed: u64,
+    fault: &FaultPlan,
+) -> anyhow::Result<()> {
+    let (stats, alive) = run_threaded_ticks(n, ticks, seed, fault, true)?;
+    let rows: Vec<Vec<String>> = stats
+        .iter()
+        .zip(&alive)
+        .map(|(st, &n_alive)| {
+            vec![
+                st.tick.to_string(),
+                n_alive.to_string(),
+                st.n_tasks.to_string(),
+                st.redispatched.to_string(),
+                st.remapped.to_string(),
+                format!("{}/{}", st.wave_redispatched[0], st.wave_redispatched[1]),
+                format!("{}/{}", st.wave_epochs[0], st.wave_epochs[1]),
+                secs(st.elapsed),
+            ]
+        })
+        .collect();
+    if args.get_bool("json") {
+        let per_tick: Vec<Json> = stats
+            .iter()
+            .map(|st| {
+                Json::obj(vec![
+                    ("tick", Json::Num(st.tick as f64)),
+                    ("tasks", Json::Num(st.n_tasks as f64)),
+                    ("redispatched", Json::Num(st.redispatched as f64)),
+                    ("remapped", Json::Num(st.remapped as f64)),
+                    ("ping_redispatched", Json::Num(st.wave_redispatched[0] as f64)),
+                    ("pong_redispatched", Json::Num(st.wave_redispatched[1] as f64)),
+                    ("epoch_ping", Json::Num(st.wave_epochs[0] as f64)),
+                    ("epoch_pong", Json::Num(st.wave_epochs[1] as f64)),
+                    ("duplicates_suppressed", Json::Num(st.duplicates_suppressed as f64)),
+                    ("elapsed_s", Json::Num(st.elapsed)),
+                ])
+            })
+            .collect();
+        let j = Json::obj(vec![
+            ("servers", Json::Num(n as f64)),
+            ("ticks", Json::Num(ticks as f64)),
+            ("mode", Json::Str("pp".into())),
+            ("fault_plan", Json::Str(fault.to_spec())),
+            ("bit_exact", Json::Bool(true)),
+            ("per_tick", Json::Arr(per_tick)),
+        ]);
+        println!("{}", j.to_string_pretty());
+        return Ok(());
+    }
+    let mut t = Table::new(
+        &format!(
+            "elastic PP threaded: {n} reference servers, {ticks} PP ticks, fault plan [{}] — all outputs bit-exact",
+            if fault.is_empty() { "none".to_string() } else { fault.to_spec() }
+        ),
+        &["tick", "alive", "tasks", "redisp", "remap", "wave redisp", "epochs", "elapsed"],
+    );
+    for r in rows {
+        t.row(&r);
+    }
+    t.print();
+    let redisp: usize = stats.iter().map(|s| s.redispatched).sum();
+    let remap: usize = stats.iter().map(|s| s.remapped).sum();
+    println!(
+        "re-dispatched {redisp} (ping-wave only) | remapped {remap} | outputs verified against the monolithic oracle"
+    );
+    Ok(())
 }
 
 fn cmd_elastic_sim(
@@ -356,13 +571,17 @@ fn cmd_elastic_sim(
     Ok(())
 }
 
-fn cmd_elastic_threaded(
-    args: &Args,
+/// Drive the threaded runtime for `ticks` synthetic ticks — flat
+/// (`run_tick`) or ping-pong PP (`run_pp_tick`) — verifying every
+/// output bit-for-bit against the monolithic oracle. Returns the tick
+/// stats plus the schedulable-server count each tick saw.
+fn run_threaded_ticks(
     n: usize,
     ticks: usize,
     seed: u64,
     fault: &FaultPlan,
-) -> anyhow::Result<()> {
+    pp: bool,
+) -> anyhow::Result<(Vec<distca::elastic::TickStats>, Vec<usize>)> {
     const H: usize = 4;
     const HKV: usize = 2;
     const D: usize = 16;
@@ -371,10 +590,11 @@ fn cmd_elastic_threaded(
         Box::new(ReferenceCaCompute::new(H, HKV, D))
     });
     let mut rng = Rng::new(seed);
-    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut alive_per_tick = Vec::with_capacity(ticks);
     for tick in 0..ticks {
         let alive = co.pool.schedulable();
         anyhow::ensure!(!alive.is_empty(), "tick {tick}: pool is empty");
+        alive_per_tick.push(alive.len());
         let mut tasks = Vec::new();
         for i in 0..2 * n {
             let len = if i % 3 == 0 { 256 } else { 128 };
@@ -387,7 +607,11 @@ fn cmd_elastic_threaded(
                 tensors: synthetic_task(&mut rng, len, len, H, HKV, D),
             });
         }
-        let outputs = co.run_tick(tick, &tasks, fault)?;
+        let outputs = if pp {
+            co.run_pp_tick(tick, &tasks, fault)?
+        } else {
+            co.run_tick(tick, &tasks, fault)?
+        };
         for out in &outputs {
             let task = tasks
                 .iter()
@@ -396,18 +620,33 @@ fn cmd_elastic_threaded(
             let expect = oracle.run_batch(std::slice::from_ref(&task.tensors));
             anyhow::ensure!(out.o == expect[0], "tick {tick} doc {}: output diverged", out.doc);
         }
-        let st = co.stats.last().unwrap();
-        rows.push(vec![
-            tick.to_string(),
-            alive.len().to_string(),
-            st.n_tasks.to_string(),
-            st.redispatched.to_string(),
-            st.cancels_sent.to_string(),
-            st.duplicates_suppressed.to_string(),
-            secs(st.elapsed),
-        ]);
     }
-    let stats = co.shutdown()?;
+    Ok((co.shutdown()?, alive_per_tick))
+}
+
+fn cmd_elastic_threaded(
+    args: &Args,
+    n: usize,
+    ticks: usize,
+    seed: u64,
+    fault: &FaultPlan,
+) -> anyhow::Result<()> {
+    let (stats, alive) = run_threaded_ticks(n, ticks, seed, fault, false)?;
+    let rows: Vec<Vec<String>> = stats
+        .iter()
+        .zip(&alive)
+        .map(|(st, &n_alive)| {
+            vec![
+                st.tick.to_string(),
+                n_alive.to_string(),
+                st.n_tasks.to_string(),
+                st.redispatched.to_string(),
+                st.cancels_sent.to_string(),
+                st.duplicates_suppressed.to_string(),
+                secs(st.elapsed),
+            ]
+        })
+        .collect();
     if args.get_bool("json") {
         let per_tick: Vec<Json> = stats
             .iter()
@@ -459,7 +698,11 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let driver = TrainDriver::load(&distca::runtime::artifacts_dir())?;
     println!("params: {} (~{:.0}M)", driver.n_params(), driver.n_params() as f64 / 1e6);
     let corpus = MarkovCorpus::new(2048, 0.9, 42);
-    let report = driver.train(&corpus, steps, args.get_u64("seed", 42)?, |s, l| {
+    let seed = match args.get_parse::<u64>("seed")? {
+        Some(s) => s,
+        None => distca::util::rng::seed_from_env(42),
+    };
+    let report = driver.train(&corpus, steps, seed, |s, l| {
         if s % 10 == 0 {
             println!("step {s:>4}  loss {l:.4}");
         }

@@ -21,7 +21,17 @@
 //!   every transitive dependent of a revoked task is revoked with it.
 //!   [`Engine::revoked`] lists the casualties so a failover layer can
 //!   re-dispatch them (typically via [`Engine::add_task_at`] in a
-//!   recovery wave, earliest-started at detection time).
+//!   recovery wave, earliest-started at detection time);
+//! * [`Engine::drain_resource`] is the *partial-drain* primitive: from
+//!   the given time the resource starts nothing new, but the task already
+//!   running is allowed to finish — only the unstarted tail of its queue
+//!   is revoked (and therefore re-dispatchable);
+//! * [`Engine::add_barrier`] inserts a PP-tick barrier: a zero-duration,
+//!   resource-less join point. The revocation cascade *stops* at
+//!   barriers — a revoked dependency counts as resolved at its cut time,
+//!   because the elastic layer guarantees the lost work is re-dispatched
+//!   and re-accounted within the tick, so work scheduled behind the tick
+//!   barrier must not be collaterally revoked.
 
 use std::collections::BinaryHeap;
 
@@ -44,6 +54,8 @@ struct Task {
     started: bool,
     done: bool,
     revoked: bool,
+    /// Tick barrier: completes when all deps resolve, occupies nothing.
+    barrier: bool,
     tag: u32,
 }
 
@@ -94,6 +106,8 @@ pub struct Engine {
     speed: Vec<f64>,
     /// Time at which each resource dies, if ever.
     revoked_at: Vec<Option<f64>>,
+    /// Time from which each resource starts no new tasks (partial drain).
+    drained_at: Vec<Option<f64>>,
 }
 
 impl Engine {
@@ -104,6 +118,7 @@ impl Engine {
             n_resources,
             speed: vec![1.0; n_resources],
             revoked_at: vec![None; n_resources],
+            drained_at: vec![None; n_resources],
         }
     }
 
@@ -112,6 +127,7 @@ impl Engine {
         self.n_resources += 1;
         self.speed.push(1.0);
         self.revoked_at.push(None);
+        self.drained_at.push(None);
         self.n_resources - 1
     }
 
@@ -133,6 +149,19 @@ impl Engine {
         assert!(resource < self.n_resources, "bad resource {resource}");
         assert!(t >= 0.0 && t.is_finite(), "bad revocation time {t}");
         self.revoked_at[resource] = Some(match self.revoked_at[resource] {
+            Some(prev) => prev.min(t),
+            None => t,
+        });
+    }
+
+    /// Declare `resource` draining from time `t` (earliest call wins): the
+    /// task running at `t` finishes, but nothing queued behind it starts —
+    /// the unstarted tail is revoked for the failover layer to
+    /// re-dispatch. Must be called before [`Engine::run`].
+    pub fn drain_resource(&mut self, resource: ResourceId, t: f64) {
+        assert!(resource < self.n_resources, "bad resource {resource}");
+        assert!(t >= 0.0 && t.is_finite(), "bad drain time {t}");
+        self.drained_at[resource] = Some(match self.drained_at[resource] {
             Some(prev) => prev.min(t),
             None => t,
         });
@@ -194,6 +223,7 @@ impl Engine {
             started: false,
             done: false,
             revoked: false,
+            barrier: false,
             tag,
         });
         self.dependents.push(Vec::new());
@@ -203,13 +233,77 @@ impl Engine {
         id
     }
 
+    /// Add a PP-tick barrier: a zero-duration join point that occupies no
+    /// resource and completes when every dependency *resolves* (finishes,
+    /// or is revoked — the cascade stops here, see the module docs).
+    /// Tasks depending on the barrier belong to the next tick and survive
+    /// same-tick revocations.
+    pub fn add_barrier(&mut self, deps: &[TaskId]) -> TaskId {
+        let id = self.tasks.len();
+        for &d in deps {
+            assert!(d < id, "dep {d} must precede barrier {id}");
+        }
+        self.tasks.push(Task {
+            resource: usize::MAX,
+            duration: 0.0,
+            pending: deps.len(),
+            ready_at: 0.0,
+            start: 0.0,
+            finish: 0.0,
+            started: false,
+            done: false,
+            revoked: false,
+            barrier: true,
+            tag: 0,
+        });
+        self.dependents.push(Vec::new());
+        for &d in deps {
+            self.dependents[d].push(id);
+        }
+        id
+    }
+
+    /// [`Engine::revoke_cascade`] plus scheduling of the completion
+    /// events of any barriers the cascade resolved; returns the newly
+    /// revoked count.
+    fn revoke_and_schedule(
+        &mut self,
+        tid: TaskId,
+        time: f64,
+        heap: &mut BinaryHeap<Event>,
+    ) -> usize {
+        let (count, barriers) = self.revoke_cascade(tid, time);
+        for b in barriers {
+            heap.push(Event {
+                time: self.tasks[b].ready_at,
+                task: b,
+                kind: EventKind::Finish,
+            });
+        }
+        count
+    }
+
     /// Mark `tid` revoked at `time` and cascade to every transitive
-    /// dependent (a task whose dependency never completes can never run).
-    /// Returns how many tasks were newly revoked.
-    fn revoke_cascade(&mut self, tid: TaskId, time: f64) -> usize {
+    /// dependent (a task whose dependency never completes can never run)
+    /// — except across barriers: a revoked dependency of a barrier counts
+    /// as resolved at its cut time, so the cascade never crosses a tick
+    /// boundary. Returns how many tasks were newly revoked plus the
+    /// barriers whose last dependency just resolved (the caller schedules
+    /// their completion events).
+    fn revoke_cascade(&mut self, tid: TaskId, time: f64) -> (usize, Vec<TaskId>) {
         let mut count = 0usize;
+        let mut resolved_barriers = Vec::new();
         let mut work = vec![tid];
         while let Some(t) = work.pop() {
+            if self.tasks[t].barrier {
+                let task = &mut self.tasks[t];
+                task.pending -= 1;
+                task.ready_at = task.ready_at.max(time);
+                if task.pending == 0 && !task.done {
+                    resolved_barriers.push(t);
+                }
+                continue;
+            }
             if self.tasks[t].done || self.tasks[t].revoked {
                 continue;
             }
@@ -221,7 +315,7 @@ impl Engine {
             count += 1;
             work.extend(self.dependents[t].iter().copied());
         }
-        count
+        (count, resolved_barriers)
     }
 
     /// Run the simulation; returns the makespan of executed work (revoked
@@ -245,9 +339,13 @@ impl Engine {
 
         for (id, t) in self.tasks.iter().enumerate() {
             if t.pending == 0 {
-                ready[t.resource].push_back(id);
-                if t.ready_at > 0.0 {
-                    heap.push(Event { time: t.ready_at, task: id, kind: EventKind::Wake });
+                if t.barrier {
+                    heap.push(Event { time: t.ready_at, task: id, kind: EventKind::Finish });
+                } else {
+                    ready[t.resource].push_back(id);
+                    if t.ready_at > 0.0 {
+                        heap.push(Event { time: t.ready_at, task: id, kind: EventKind::Wake });
+                    }
                 }
             }
         }
@@ -268,7 +366,19 @@ impl Engine {
                         if now + 1e-18 >= rt {
                             // Dead resource: everything queued is lost.
                             ready[r].pop_front();
-                            revoked_count += self.revoke_cascade(cand, now.max(rt));
+                            revoked_count +=
+                                self.revoke_and_schedule(cand, now.max(rt), &mut heap);
+                            continue;
+                        }
+                    }
+                    if let Some(dt) = self.drained_at[r] {
+                        if now + 1e-18 >= dt {
+                            // Draining resource: the running task (if any)
+                            // already left this queue and will finish; the
+                            // unstarted tail is revoked for re-dispatch.
+                            ready[r].pop_front();
+                            revoked_count +=
+                                self.revoke_and_schedule(cand, now.max(dt), &mut heap);
                             continue;
                         }
                     }
@@ -303,15 +413,23 @@ impl Engine {
             }
             let tid = ev.task;
             makespan = makespan.max(ev.time);
-            let r = self.tasks[tid].resource;
-            res_busy[r] = false;
-            let interrupted = self.revoked_at[r].map_or(false, |rt| ev.time + 1e-18 >= rt);
-            if interrupted {
-                revoked_count += self.revoke_cascade(tid, ev.time);
-                continue;
+            if self.tasks[tid].barrier {
+                self.tasks[tid].start = ev.time;
+                self.tasks[tid].finish = ev.time;
+                self.tasks[tid].done = true;
+                completed += 1;
+            } else {
+                let r = self.tasks[tid].resource;
+                res_busy[r] = false;
+                let interrupted =
+                    self.revoked_at[r].map_or(false, |rt| ev.time + 1e-18 >= rt);
+                if interrupted {
+                    revoked_count += self.revoke_and_schedule(tid, ev.time, &mut heap);
+                    continue;
+                }
+                self.tasks[tid].done = true;
+                completed += 1;
             }
-            self.tasks[tid].done = true;
-            completed += 1;
             let deps_of: Vec<TaskId> = self.dependents[tid].clone();
             for dep in deps_of {
                 let t = &mut self.tasks[dep];
@@ -321,9 +439,18 @@ impl Engine {
                 t.pending -= 1;
                 t.ready_at = t.ready_at.max(now);
                 if t.pending == 0 {
-                    ready[t.resource].push_back(dep);
-                    if t.ready_at > now + 1e-18 {
-                        heap.push(Event { time: t.ready_at, task: dep, kind: EventKind::Wake });
+                    if t.barrier {
+                        let at = t.ready_at;
+                        heap.push(Event { time: at, task: dep, kind: EventKind::Finish });
+                    } else {
+                        ready[t.resource].push_back(dep);
+                        if t.ready_at > now + 1e-18 {
+                            heap.push(Event {
+                                time: t.ready_at,
+                                task: dep,
+                                kind: EventKind::Wake,
+                            });
+                        }
                     }
                 }
             }
@@ -345,6 +472,13 @@ impl Engine {
     /// Did the task complete (vs. being revoked)?
     pub fn is_done(&self, id: TaskId) -> bool {
         self.tasks[id].done
+    }
+
+    /// Was the task ever started? A drained resource finishes what it
+    /// started; only never-started tasks may be re-dispatched by the
+    /// partial-drain path.
+    pub fn started(&self, id: TaskId) -> bool {
+        self.tasks[id].started
     }
 
     /// Tasks revoked during `run` (directly or by cascade), in id order.
@@ -586,6 +720,94 @@ mod tests {
         let makespan = r.run();
         assert!((makespan - (detect + 3.0)).abs() < 1e-12);
         assert!(r.is_done(re));
+    }
+
+    #[test]
+    fn drain_keeps_running_task_and_revokes_tail() {
+        let mut e = Engine::new(2);
+        let a = e.add_task(0, 4.0, &[]); // running at drain time: finishes
+        let b = e.add_task(0, 2.0, &[]); // queued tail: revoked, unstarted
+        let c = e.add_task(1, 1.0, &[]);
+        e.drain_resource(0, 1.0);
+        let makespan = e.run();
+        assert!((makespan - 4.0).abs() < 1e-12, "makespan {makespan}");
+        assert!(e.is_done(a), "started task must finish on a draining resource");
+        assert_eq!(e.revoked(), vec![b]);
+        assert!(!e.started(b), "partial drain must never cut a started task");
+        assert!(e.is_done(c));
+        // The drainee's occupancy is exactly the started task.
+        assert!((e.busy_per_resource()[0] - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drain_after_queue_empties_is_noop() {
+        let mut e = Engine::new(1);
+        let a = e.add_task(0, 1.0, &[]);
+        e.drain_resource(0, 5.0);
+        assert!((e.run() - 1.0).abs() < 1e-12);
+        assert!(e.is_done(a));
+        assert!(e.revoked().is_empty());
+    }
+
+    #[test]
+    fn barrier_joins_all_dependencies() {
+        let mut e = Engine::new(2);
+        let a = e.add_task(0, 2.0, &[]);
+        let b = e.add_task(1, 3.0, &[]);
+        let bar = e.add_barrier(&[a, b]);
+        let c = e.add_task(0, 1.0, &[bar]);
+        let makespan = e.run();
+        assert!((makespan - 4.0).abs() < 1e-12, "makespan {makespan}");
+        assert!((e.finish_of(bar) - 3.0).abs() < 1e-12);
+        assert!((e.finish_of(c) - 4.0).abs() < 1e-12);
+        // Barriers occupy no resource.
+        assert_eq!(e.busy_per_resource(), vec![3.0, 3.0]);
+    }
+
+    #[test]
+    fn revocation_cascade_stops_at_tick_barrier() {
+        // Tick t loses a task to a kill; tick t+1 work sits behind the
+        // barrier and must survive (the failover layer re-dispatches the
+        // loss within tick t, so the barrier resolves, not revokes).
+        let mut e = Engine::new(2);
+        let lost = e.add_task(0, 2.0, &[]); // cut at t=1
+        let ok = e.add_task(1, 1.5, &[]);
+        let bar = e.add_barrier(&[lost, ok]);
+        let next = e.add_task(1, 1.0, &[bar]);
+        e.revoke_resource(0, 1.0);
+        let makespan = e.run();
+        assert_eq!(e.revoked(), vec![lost], "cascade must not cross the barrier");
+        assert!(e.is_done(bar));
+        assert!(e.is_done(next), "next-tick work must survive the kill");
+        // Barrier resolves at max(cut=1.0, ok=1.5); next runs 1.5..2.5.
+        assert!((e.finish_of(bar) - 1.5).abs() < 1e-12);
+        assert!((makespan - 2.5).abs() < 1e-12, "makespan {makespan}");
+    }
+
+    #[test]
+    fn barrier_without_deps_completes_at_zero() {
+        let mut e = Engine::new(1);
+        let bar = e.add_barrier(&[]);
+        let a = e.add_task(0, 1.0, &[bar]);
+        assert!((e.run() - 1.0).abs() < 1e-12);
+        assert!(e.is_done(bar));
+        assert!(e.is_done(a));
+    }
+
+    #[test]
+    fn drained_tail_behind_barrier_still_resolves() {
+        // Partial drain revokes a queued task whose barrier must still
+        // complete (resolution, not revocation, crosses the boundary).
+        let mut e = Engine::new(2);
+        let kept = e.add_task(0, 2.0, &[]);
+        let tail = e.add_task(0, 2.0, &[]); // revoked by the drain
+        let bar = e.add_barrier(&[kept, tail]);
+        let next = e.add_task(1, 1.0, &[bar]);
+        e.drain_resource(0, 0.5);
+        e.run();
+        assert_eq!(e.revoked(), vec![tail]);
+        assert!(e.is_done(next));
+        assert!(e.started(kept) && !e.started(tail));
     }
 
     #[test]

@@ -127,7 +127,7 @@ fn chunk_pieces(chunk: &Chunk) -> Vec<(usize, usize)> {
 
 /// Assign `chunks` to `n_groups` DP groups round-robin, returning the
 /// per-group microbatch lists (chunk indices).
-fn assign_round_robin(n_chunks: usize, n_groups: usize) -> Vec<Vec<usize>> {
+pub fn assign_round_robin(n_chunks: usize, n_groups: usize) -> Vec<Vec<usize>> {
     let mut groups = vec![Vec::new(); n_groups];
     for c in 0..n_chunks {
         groups[c % n_groups].push(c);
@@ -570,6 +570,57 @@ fn distca_layer_times(chunks: &[Chunk], plan: &Plan, p: &SimParams) -> (f64, f64
     (fwd, bwd, dispatch * 3.0, exposed) // fwd bytes + 2x bwd bytes
 }
 
+/// The active `(logical device, chunk index)` pairs of one PP tick row
+/// across all DP groups (idle warm-up/drain stages contribute nothing —
+/// they serve attention only).
+pub fn pp_tick_active(
+    groups: &[Vec<usize>],
+    row: &[Option<usize>],
+    pp: usize,
+) -> Vec<(usize, usize)> {
+    let mut active: Vec<(usize, usize)> = Vec::new();
+    for (g, mbs) in groups.iter().enumerate() {
+        for (stage, mb) in row.iter().enumerate().take(pp) {
+            if let Some(mb) = *mb {
+                if let Some(&ci) = mbs.get(mb) {
+                    active.push((g * pp + stage, ci));
+                }
+            }
+        }
+    }
+    active
+}
+
+/// Scheduling items of one PP tick: every active device's chunk pieces,
+/// homed at that device. Shared by the fault-free PP executor and the
+/// elastic PP path (`crate::elastic::pp`), so both plan the same shapes.
+pub fn pp_tick_items(chunks: &[Chunk], active: &[(usize, usize)]) -> Vec<Item> {
+    let mut items: Vec<Item> = Vec::new();
+    for &(dev, ci) in active {
+        for piece in &chunks[ci].pieces {
+            let mut len = piece.len;
+            if len % 2 == 1 {
+                len -= 1;
+            }
+            if len == 0 {
+                continue;
+            }
+            if piece.offset == 0 {
+                items.push(Item::whole_doc(piece.doc, len, dev));
+            } else {
+                items.push(Item {
+                    doc: piece.doc,
+                    doc_len: 2 * piece.offset + len,
+                    i: piece.offset,
+                    j: piece.offset + len / 2,
+                    home: dev,
+                });
+            }
+        }
+    }
+    items
+}
+
 /// DistCA under pipeline parallelism: tick-aligned same-phase schedule
 /// (§4.1, Fig. 8); each tick's CA-tasks from *all* stages and DP groups
 /// are pooled over every device, including warm-up/drain idle stages.
@@ -598,46 +649,14 @@ pub fn run_distca_pp(docs: &[Document], chunk_tokens: usize, p: &SimParams) -> I
 
     for (t, row) in sched.tick_ops.iter().enumerate() {
         let phase = sched.tick_phases[t];
-        // Gather active (device, chunk) pairs across all DP groups.
-        let mut active: Vec<(usize, usize)> = Vec::new(); // (device, chunk idx)
-        for g in 0..n_groups {
-            for stage in 0..p.pp {
-                if let Some(mb) = row[stage] {
-                    if let Some(&ci) = groups[g].get(mb) {
-                        let dev = g * p.pp + stage;
-                        active.push((dev, ci));
-                    }
-                }
-            }
-        }
+        // Gather active (device, chunk) pairs across all DP groups, then
+        // build items homed at the active devices; schedule over ALL n
+        // devices (idle warm-up/drain stages serve attention too).
+        let active = pp_tick_active(&groups, row, p.pp);
         if active.is_empty() {
             continue;
         }
-        // Build items homed at the active devices; schedule over ALL n
-        // devices (idle warm-up/drain stages serve attention too).
-        let mut items: Vec<Item> = Vec::new();
-        for &(dev, ci) in &active {
-            for piece in &chunks[ci].pieces {
-                let mut len = piece.len;
-                if len % 2 == 1 {
-                    len -= 1;
-                }
-                if len == 0 {
-                    continue;
-                }
-                if piece.offset == 0 {
-                    items.push(Item::whole_doc(piece.doc, len, dev));
-                } else {
-                    items.push(Item {
-                        doc: piece.doc,
-                        doc_len: 2 * piece.offset + len,
-                        i: piece.offset,
-                        j: piece.offset + len / 2,
-                        home: dev,
-                    });
-                }
-            }
-        }
+        let items = pp_tick_items(&chunks, &active);
         let plan = schedule(&items, n, &p.f, &p.prof, &p.model, &cfg);
         // Tick time: max over devices of overlapped (linear_stage, ca,
         // comm); linear only on active devices, CA on all.

@@ -1,0 +1,202 @@
+//! Differential conformance suite for the elastic execution paths.
+//!
+//! For ≥ 50 seeded `(doc set, fault plan)` cases, every execution path —
+//! the deterministic single-threaded reference (`run_elastic_exec`),
+//! the threaded `ElasticCoordinator` (flat `run_tick`), and the two PP
+//! ping-pong paths (`run_elastic_exec_pp`, threaded `run_pp_tick`) —
+//! must produce **bit-exact** CA outputs vs. the pure-Rust GQA oracle,
+//! fault plans included: recovery must not change results. Statelessness
+//! (§3) is what makes this a meaningful invariant: a CA-task is a pure
+//! (Q, KV) → O function, so kills, partial drains, slowdowns, rejoins,
+//! re-dispatch, and first-response-wins dedup may change *who* computes
+//! a task and *when*, never *what* it returns.
+
+use std::collections::BTreeSet;
+use std::time::Duration;
+
+use distca::elastic::{
+    run_elastic_exec, run_elastic_exec_pp, ElasticCfg, ElasticCoordinator, ElasticTask,
+    FaultPlan, ReferenceCaCompute, ServerPool,
+};
+use distca::runtime::ca_exec::synthetic_task;
+use distca::server::TaskOutput;
+use distca::util::rng::Rng;
+
+const H: usize = 2;
+const HKV: usize = 1;
+const D: usize = 8;
+
+fn dims() -> ReferenceCaCompute {
+    ReferenceCaCompute::new(H, HKV, D)
+}
+
+/// One seeded conformance case: a few ticks of whole-doc CA-tasks with
+/// planned server assignments, plus a fault plan.
+struct Case {
+    n_servers: usize,
+    ticks: Vec<Vec<ElasticTask>>,
+    fault: FaultPlan,
+}
+
+fn gen_case(seed: u64) -> Case {
+    let mut rng = Rng::new(0xC0F0_0000 ^ seed);
+    let n_servers = 2 + (seed as usize % 3); // 2..=4
+    let n_ticks = 2 + (seed as usize % 2); // 2..=3
+    let mut ticks = Vec::new();
+    for t in 0..n_ticks {
+        let n_docs = 3 + rng.gen_index(0, 4); // 3..=6
+        let mut tasks = Vec::new();
+        for j in 0..n_docs {
+            let len = 2 * (1 + rng.gen_index(0, 8)); // 2..=16, even
+            // The plan may name servers that later die — every path must
+            // remap or re-dispatch without changing the output.
+            let server = rng.gen_index(0, n_servers);
+            tasks.push(ElasticTask {
+                doc: (t * 100 + j) as u32,
+                q_start: 0,
+                server,
+                home: server % 2,
+                tensors: synthetic_task(&mut rng, len, len, H, HKV, D),
+            });
+        }
+        ticks.push(tasks);
+    }
+    // Seeded fault plan; server 0 is never killed so the pool survives.
+    let mut fault = FaultPlan::random(&mut rng, n_servers, n_ticks, 1, 1);
+    if n_servers >= 3 && seed % 3 == 0 {
+        // Exercise partial drain too (server 0 stays untouched).
+        fault = fault.drain(2, rng.gen_index(0, n_ticks));
+    }
+    Case { n_servers, ticks, fault }
+}
+
+/// Bit-exact comparison of one tick's outputs against the oracle.
+fn check_tick(label: &str, seed: u64, tasks: &[ElasticTask], outputs: &[TaskOutput]) {
+    assert_eq!(
+        outputs.len(),
+        tasks.len(),
+        "{label} seed {seed}: incomplete gather ({} of {})",
+        outputs.len(),
+        tasks.len()
+    );
+    let mut seen = BTreeSet::new();
+    let oracle = dims();
+    for out in outputs {
+        assert!(
+            seen.insert((out.doc, out.q_start)),
+            "{label} seed {seed}: duplicate output for doc {}",
+            out.doc
+        );
+        let task = tasks
+            .iter()
+            .find(|t| t.doc == out.doc && t.q_start == out.q_start)
+            .unwrap_or_else(|| panic!("{label} seed {seed}: unknown output doc {}", out.doc));
+        let expect = oracle.run_batch(std::slice::from_ref(&task.tensors));
+        assert_eq!(out.o.len(), expect[0].len(), "{label} seed {seed}: shape");
+        for (i, (&a, &b)) in out.o.iter().zip(&expect[0]).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{label} seed {seed}: doc {} diverged at {i}",
+                out.doc
+            );
+        }
+    }
+}
+
+/// Quick coordinator knobs: tight deadlines, mild injected slowdowns, so
+/// 50+ threaded cases stay fast while still exercising re-dispatch.
+fn quick_cfg() -> ElasticCfg {
+    ElasticCfg {
+        grace: Duration::from_millis(25),
+        slow_task_unit: Duration::from_millis(2),
+        ..Default::default()
+    }
+}
+
+const SEEDS: u64 = 56;
+
+#[test]
+fn exec_reference_matches_oracle_for_seeded_cases() {
+    for seed in 0..SEEDS {
+        let case = gen_case(seed);
+        let mut pool = ServerPool::new(case.n_servers);
+        let mut compute = dims();
+        for (t, tasks) in case.ticks.iter().enumerate() {
+            let rep = run_elastic_exec(&mut pool, t, tasks, &case.fault, &mut compute)
+                .unwrap_or_else(|e| panic!("exec seed {seed} tick {t}: {e}"));
+            check_tick("exec", seed, tasks, &rep.outputs);
+            // Partial drain: a started (kept) task is never re-sent.
+            for tag in &rep.drain_kept {
+                assert!(
+                    !rep.drain_redirected.contains(tag) && !rep.redispatched.contains(tag),
+                    "exec seed {seed}: started task {tag} re-dispatched"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn exec_pp_matches_oracle_for_seeded_cases() {
+    for seed in 0..SEEDS {
+        let case = gen_case(seed);
+        let mut pool = ServerPool::new(case.n_servers);
+        let mut compute = dims();
+        for (t, tasks) in case.ticks.iter().enumerate() {
+            let rep = run_elastic_exec_pp(&mut pool, t, tasks, &case.fault, &mut compute)
+                .unwrap_or_else(|e| panic!("exec-pp seed {seed} tick {t}: {e}"));
+            check_tick("exec-pp", seed, tasks, &rep.outputs);
+        }
+    }
+}
+
+#[test]
+fn threaded_flat_matches_oracle_for_seeded_cases() {
+    for seed in 0..SEEDS {
+        let case = gen_case(seed);
+        let mut co =
+            ElasticCoordinator::spawn(case.n_servers, quick_cfg(), |_| Box::new(dims()));
+        for (t, tasks) in case.ticks.iter().enumerate() {
+            let outputs = co
+                .run_tick(t, tasks, &case.fault)
+                .unwrap_or_else(|e| panic!("threaded seed {seed} tick {t}: {e}"));
+            check_tick("threaded", seed, tasks, &outputs);
+        }
+        co.shutdown().unwrap();
+    }
+}
+
+#[test]
+fn threaded_pp_matches_oracle_for_seeded_cases() {
+    for seed in 0..SEEDS {
+        let case = gen_case(seed);
+        let mut co =
+            ElasticCoordinator::spawn(case.n_servers, quick_cfg(), |_| Box::new(dims()));
+        for (t, tasks) in case.ticks.iter().enumerate() {
+            let outputs = co
+                .run_pp_tick(t, tasks, &case.fault)
+                .unwrap_or_else(|e| panic!("threaded-pp seed {seed} tick {t}: {e}"));
+            check_tick("threaded-pp", seed, tasks, &outputs);
+        }
+        let stats = co.shutdown().unwrap();
+        // Wave scoping: a scripted kill always bumps the membership
+        // epoch *between* the waves (strict — epochs are monotone, so
+        // `>=` would be vacuous), and the pong wave is planned under the
+        // post-kill epoch.
+        for st in &stats {
+            let kill_tick = case
+                .fault
+                .events_at(st.tick)
+                .iter()
+                .any(|e| matches!(e, distca::elastic::FaultEvent::Kill { .. }));
+            if kill_tick {
+                assert!(
+                    st.wave_epochs[1] > st.wave_epochs[0],
+                    "seed {seed} tick {}: the kill must land between the waves: {st:?}",
+                    st.tick
+                );
+            }
+        }
+    }
+}

@@ -19,8 +19,15 @@ macro_rules! require_artifacts {
 #[test]
 #[ignore = "requires a vendored xla-rs PJRT backend; the default build links the host-only xla-stub"]
 fn pjrt_client_boots() {
-    let rt = Runtime::cpu().expect("PJRT CPU client");
-    assert!(!rt.platform().is_empty());
+    // Under `--include-ignored` on the default (xla-stub) build, skip
+    // instead of failing: device creation is exactly the stub boundary.
+    match Runtime::cpu() {
+        Ok(rt) => assert!(!rt.platform().is_empty()),
+        Err(e) if format!("{e:#}").contains("xla-stub") => {
+            eprintln!("skipping: default build links the host-only xla-stub");
+        }
+        Err(e) => panic!("PJRT CPU client: {e:#}"),
+    }
 }
 
 #[test]

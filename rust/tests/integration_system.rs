@@ -144,8 +144,8 @@ fn scheduler_plan_valid_at_scale() {
 fn cli_args_parse_and_dispatch() {
     use distca::cli::{Args, FlagSpec};
     let specs = vec![
-        FlagSpec { name: "gpus", help: "", default: Some("64"), is_bool: false },
-        FlagSpec { name: "json", help: "", default: None, is_bool: true },
+        FlagSpec::value("gpus", "", Some("64")),
+        FlagSpec::boolean("json", ""),
     ];
     let raw: Vec<String> = ["simulate", "--gpus", "32", "--json"]
         .iter()

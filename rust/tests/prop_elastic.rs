@@ -1,0 +1,255 @@
+//! Property tests for the elastic subsystem on the in-repo
+//! `util::quickcheck` harness. `FaultPlan` implements `Shrink`, so a
+//! failing case reduces to a minimal fault script plus a minimal doc
+//! set before panicking.
+//!
+//! Invariants:
+//! * **tokens conserved** — whatever kills/drains/re-dispatches a fault
+//!   plan causes, the gathered outputs cover exactly the dispatched
+//!   query tokens, each exactly once;
+//! * **no double completion** — first-response-wins dedup leaves no
+//!   `(doc, q_start)` tag with two kept outputs;
+//! * **PoolView bijection** — under arbitrary join/leave/kill/restore/
+//!   drain/degrade sequences, the physical↔virtual mapping stays a
+//!   bijection over the schedulable set;
+//! * **partial drain** — a drained resource never loses (and the
+//!   failover layer never re-dispatches) a task it already started.
+
+use distca::elastic::{
+    run_elastic_exec, ElasticTask, FaultEvent, FaultPlan, ReferenceCaCompute, ServerPool,
+};
+use distca::runtime::ca_exec::synthetic_task;
+use distca::sim::engine::Engine;
+use distca::util::quickcheck::{check, ensure, PropResult};
+use distca::util::rng::Rng;
+
+const H: usize = 2;
+const HKV: usize = 1;
+const D: usize = 4;
+const N_SERVERS: usize = 3;
+
+/// Sanitize an arbitrary (possibly shrunk) fault plan: server 0 is never
+/// killed or drained, so the pool always has a survivor — the same rule
+/// `FaultPlan::random` follows. Slow factors are forced valid.
+fn sanitize(plan: &FaultPlan) -> FaultPlan {
+    let mut out = FaultPlan::new();
+    for ev in &plan.events {
+        match *ev {
+            FaultEvent::Kill { server, tick } if server >= 1 => {
+                out.events.push(FaultEvent::Kill { server, tick });
+            }
+            FaultEvent::Drain { server, tick } if server >= 1 => {
+                out.events.push(FaultEvent::Drain { server, tick });
+            }
+            FaultEvent::Rejoin { server, tick } => {
+                out.events.push(FaultEvent::Rejoin { server, tick });
+            }
+            FaultEvent::Slow { server, tick, factor } => {
+                let factor = if factor.is_finite() && factor > 0.0 { factor } else { 0.5 };
+                out.events.push(FaultEvent::Slow { server, tick, factor });
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Build whole-doc CA-tasks from a raw spec; lengths and servers are
+/// sanitized so every shrunk input stays well-formed.
+fn build_tasks(spec: &[(usize, usize)]) -> Vec<ElasticTask> {
+    let mut rng = Rng::new(0xBEEF);
+    spec.iter()
+        .enumerate()
+        .map(|(j, &(len_raw, srv_raw))| {
+            let len = 2 * (1 + len_raw % 6); // 2..=12, even
+            let server = srv_raw % N_SERVERS;
+            ElasticTask {
+                doc: j as u32,
+                q_start: 0,
+                server,
+                home: server % 2,
+                tensors: synthetic_task(&mut rng, len, len, H, HKV, D),
+            }
+        })
+        .collect()
+}
+
+fn gen_task_spec(r: &mut Rng) -> Vec<(usize, usize)> {
+    let n = 1 + r.gen_index(0, 8);
+    (0..n)
+        .map(|_| (r.gen_index(0, 64), r.gen_index(0, 64)))
+        .collect()
+}
+
+fn gen_fault_plan(r: &mut Rng) -> FaultPlan {
+    let mut plan = FaultPlan::new();
+    for _ in 0..r.gen_index(0, 4) {
+        let server = r.gen_index(0, N_SERVERS + 1); // may exceed capacity
+        let tick = r.gen_index(0, 3);
+        match r.gen_index(0, 4) {
+            0 => plan = plan.kill(server, tick),
+            1 => plan = plan.drain(server, tick),
+            2 => plan = plan.slow(server, tick, r.gen_f64(0.2, 0.9)),
+            _ => plan = plan.rejoin(server, tick),
+        }
+    }
+    plan
+}
+
+/// Run the deterministic exec over two ticks and check conservation,
+/// dedup, and the partial-drain contract.
+fn exec_invariants(spec: &[(usize, usize)], plan: &FaultPlan) -> PropResult {
+    let fault = sanitize(plan);
+    let mut pool = ServerPool::new(N_SERVERS);
+    let mut compute = ReferenceCaCompute::new(H, HKV, D);
+    for tick in 0..2 {
+        let tasks = build_tasks(spec);
+        let rep = run_elastic_exec(&mut pool, tick, &tasks, &fault, &mut compute)
+            .map_err(|e| format!("tick {tick}: {e}"))?;
+        ensure(
+            rep.outputs.len() == tasks.len(),
+            format!("tick {tick}: {} outputs for {} tasks", rep.outputs.len(), tasks.len()),
+        )?;
+        ensure(rep.duplicates == 0, "deterministic exec produced a duplicate")?;
+        // Tokens conserved: the kept outputs cover exactly the
+        // dispatched query tokens.
+        let sent: usize = tasks.iter().map(|t| t.tensors.q_len).sum();
+        let mut got = 0usize;
+        for out in &rep.outputs {
+            let task = tasks
+                .iter()
+                .find(|t| t.doc == out.doc && t.q_start == out.q_start)
+                .ok_or_else(|| format!("tick {tick}: unknown output doc {}", out.doc))?;
+            ensure(
+                out.o.len() == task.tensors.q_len * H * D,
+                format!("tick {tick}: doc {} wrong output size", out.doc),
+            )?;
+            got += task.tensors.q_len;
+        }
+        ensure(got == sent, format!("tick {tick}: {got} tokens gathered of {sent} sent"))?;
+        // No task both kept-by-drainee and re-sent.
+        for tag in &rep.drain_kept {
+            ensure(
+                !rep.drain_redirected.contains(tag) && !rep.redispatched.contains(tag),
+                format!("tick {tick}: started task {tag} was re-dispatched"),
+            )?;
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_tokens_conserved_and_no_double_completion() {
+    check(
+        80,
+        |r| (gen_task_spec(r), gen_fault_plan(r)),
+        |(spec, plan)| exec_invariants(spec, plan),
+    );
+}
+
+/// Arbitrary membership op sequences keep the PoolView a bijection.
+#[test]
+fn prop_pool_view_stays_a_bijection() {
+    check(
+        120,
+        |r| {
+            let n = 1 + r.gen_index(0, 12);
+            (0..n)
+                .map(|_| (r.gen_index(0, 6), r.gen_index(0, 6)))
+                .collect::<Vec<(usize, usize)>>()
+        },
+        |ops| {
+            let mut pool = ServerPool::new(2);
+            for &(kind, srv_raw) in ops {
+                let srv = srv_raw % pool.capacity();
+                match kind {
+                    0 => {
+                        pool.join();
+                    }
+                    1 => pool.leave(srv),
+                    2 => pool.kill(srv),
+                    3 => pool.restore(srv),
+                    4 => pool.drain(srv),
+                    _ => pool.degrade(srv, 0.5),
+                }
+                if pool.n_schedulable() == 0 {
+                    continue; // view() is documented to panic here
+                }
+                let view = pool.view();
+                ensure(
+                    view.n() == pool.n_schedulable(),
+                    format!("view n {} vs schedulable {}", view.n(), pool.n_schedulable()),
+                )?;
+                for v in 0..view.n() {
+                    let phys = view.to_physical(v);
+                    ensure(
+                        pool.is_schedulable(phys),
+                        format!("virtual {v} maps to unschedulable {phys}"),
+                    )?;
+                    ensure(
+                        view.to_virtual(phys) == Some(v),
+                        format!("round-trip failed at virtual {v} (phys {phys})"),
+                    )?;
+                }
+                let mut mapped = 0usize;
+                for phys in 0..pool.capacity() {
+                    if let Some(v) = view.to_virtual(phys) {
+                        mapped += 1;
+                        ensure(
+                            view.to_physical(v) == phys,
+                            format!("round-trip failed at phys {phys} (virt {v})"),
+                        )?;
+                    } else {
+                        ensure(
+                            !pool.is_schedulable(phys),
+                            format!("schedulable {phys} missing from the view"),
+                        )?;
+                    }
+                }
+                ensure(mapped == view.n(), "virtual index space has holes")?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Engine-level partial drain: a drained resource never cuts a started
+/// task, and everything it revoked was unstarted.
+#[test]
+fn prop_drain_never_revokes_started_tasks() {
+    check(
+        100,
+        |r| {
+            let n = 1 + r.gen_index(0, 10);
+            let tasks: Vec<(usize, usize)> = (0..n)
+                .map(|_| (r.gen_index(0, 2), 1 + r.gen_index(0, 50)))
+                .collect();
+            (tasks, r.gen_index(0, 40))
+        },
+        |(tasks, drain_at_raw)| {
+            let mut e = Engine::new(2);
+            let ids: Vec<usize> = tasks
+                .iter()
+                .map(|&(res, dur)| e.add_task(res, dur as f64 / 10.0, &[]))
+                .collect();
+            e.drain_resource(0, *drain_at_raw as f64 / 10.0);
+            e.run();
+            for &id in &ids {
+                if e.is_done(id) {
+                    continue;
+                }
+                ensure(
+                    !e.started(id),
+                    format!("drained resource cut started task {id}"),
+                )?;
+            }
+            // Everything on the undrained resource completes.
+            for (&id, &(res, _)) in ids.iter().zip(tasks.iter()) {
+                if res == 1 {
+                    ensure(e.is_done(id), format!("task {id} on live resource not done"))?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
