@@ -4,12 +4,17 @@
 //! device) and the number of attention servers. Output: a [`Plan`]
 //! assigning every (possibly split) Item to a server such that
 //!
-//! 1. per-server CA load is within `ε·F̄` of the ideal `F̄`, and
+//! 1. per-server CA load is within `ε·F̄` of the ideal `F̄`,
 //! 2. communication volume is greedily minimized: each migration picks
 //!    the candidate with the highest priority `E = ΔF_max / V_comm`
 //!    (compute moved per byte), where `ΔF_max = min(F_item, S_source,
 //!    D_destination)` and partial moves use Appendix B's
-//!    minimal-communication outer sub-shard.
+//!    minimal-communication outer sub-shard, and
+//! 3. (with `SchedulerCfg::mem_budget` set) every server's transient
+//!    arena — the in-place Q+KV bytes of its assigned CA-tasks, §5 /
+//!    Fig. 3b — stays under the hard byte budget: a repair pre-pass
+//!    drains overfull home placements, and migrations that would
+//!    overflow the destination are rejected or partial-split to fit.
 //!
 //! A useful identity (proved in `item.rs` tests): a head-tail Item's CA
 //! FLOPs are *exactly proportional to its width* — `pairs = W·(l+1)` —
@@ -49,6 +54,16 @@ pub struct SchedulerCfg {
     pub extra_window: f64,
     /// Fraction of the window communication may fill (headroom).
     pub overlap_frac: f64,
+    /// Hard per-server transient-arena byte budget (§5, Fig. 3b): the
+    /// in-place Q+KV bytes of a server's assigned CA-tasks may not
+    /// exceed this. A memory-repair pre-pass first moves work off
+    /// servers whose seeded (home) load already overflows; the balancing
+    /// loop then rejects — or partial-splits down to fit — any migration
+    /// that would overflow the destination's arena, so emitted plans are
+    /// feasible in bytes as well as balanced in FLOPs. Infeasible
+    /// budgets (a shard that fits nowhere) degrade to best effort.
+    /// 0.0 disables memory-aware planning.
+    pub mem_budget: f64,
 }
 
 impl Default for SchedulerCfg {
@@ -60,6 +75,7 @@ impl Default for SchedulerCfg {
             server_bw: 0.0,
             extra_window: 0.0,
             overlap_frac: 1.0,
+            mem_budget: 0.0,
         }
     }
 }
@@ -76,6 +92,46 @@ fn item_cost(item: &Item, prof: &Profiler) -> f64 {
 /// prefix + O return.
 fn item_bytes(item: &Item, m: &ModelConfig) -> f64 {
     super::comm::item_migration_bytes(item, m)
+}
+
+/// Transient arena bytes the Item occupies on whichever server runs it
+/// (in-place execution: Q + causal KV per CA-task, O reuses Q's slot).
+fn item_mem(item: &Item, m: &ModelConfig) -> f64 {
+    crate::memplan::item_arena_bytes(item, m)
+}
+
+/// Largest grid-quantized outer-shard width (query tokens) of `it` whose
+/// arena bytes fit in `headroom`, or `None` when even the minimal shard
+/// does not fit (the KV prefix is a fixed per-shard cost — Appendix B —
+/// so a shard can be byte-expensive no matter how little Q moves).
+///
+/// The outer shard of `(l, i, j)` at width `q` is `(l, i, i+q/2)`: two
+/// CA-tasks with KV lengths `i + q/2` and `l − i`, so its arena bytes
+/// are *affine in q* — `q·qb + (l + q/2)·kvb` — and the widest fitting
+/// width is a closed-form inversion (plus a defensive walk-down in case
+/// rounding overshoots), not a grid scan.
+fn split_to_fit(it: &Item, headroom: f64, m: &ModelConfig) -> Option<usize> {
+    let grid = 2 * super::item::BLOCK_TOKENS;
+    let qb = m.q_bytes_per_token() as f64;
+    let kvb = m.kv_bytes_per_token() as f64;
+    let fixed = it.doc_len as f64 * kvb; // the per-shard KV-prefix floor
+    if headroom <= fixed {
+        return None; // even a zero-width shard's KV does not fit
+    }
+    let q_max = ((headroom - fixed) / (qb + kvb / 2.0)) as usize;
+    let mut q = it.quantize_split(q_max)?;
+    // quantize_split clamps into [grid, max]; walk down past any
+    // round-up (and verify against the authoritative byte model).
+    loop {
+        let (outer, _) = it.split_outer(q);
+        if item_mem(&outer, m) <= headroom {
+            return Some(q);
+        }
+        if q <= grid {
+            return None; // the minimal shard does not fit
+        }
+        q -= grid;
+    }
 }
 
 /// Schedule a batch of Items onto `n_servers` attention servers.
@@ -95,13 +151,19 @@ pub fn schedule(
     // each item: the candidate scan touches every item per move, and
     // profiler interpolation dominated the profile before caching
     // (see EXPERIMENTS.md §Perf).
-    let mut server_items: Vec<Vec<(Item, f64)>> = vec![Vec::new(); n_servers];
+    // (item, cached CA cost, cached arena bytes) per server.
+    let mut server_items: Vec<Vec<(Item, f64, f64)>> = vec![Vec::new(); n_servers];
     let mut load = vec![0.0f64; n_servers];
+    // Per-server transient arena bytes (in-place Q+KV of every assigned
+    // CA-task) — the quantity `cfg.mem_budget` hard-bounds.
+    let mut mem = vec![0.0f64; n_servers];
     for it in items {
         assert!(it.home < n_servers, "item home {} >= n_servers {n_servers}", it.home);
         let cost = item_cost(it, prof);
+        let bytes = item_mem(it, m);
         load[it.home] += cost;
-        server_items[it.home].push((*it, cost));
+        mem[it.home] += bytes;
+        server_items[it.home].push((*it, cost, bytes));
     }
     let total: f64 = load.iter().sum();
     let target = total / n_servers as f64;
@@ -114,6 +176,88 @@ pub fn schedule(
         f64::INFINITY
     };
     let mut recv_bytes = vec![0.0f64; n_servers];
+
+    // Memory-repair pre-pass: seeded (home) placement can overflow the
+    // arena budget regardless of FLOPs balance — e.g. every item homed
+    // on one survivor after a mass failure. Move the largest items (or
+    // the widest shard that fits) toward the max-headroom server until
+    // every arena is under budget or nothing movable remains. The
+    // balancing loop below never re-overflows a repaired server: splits
+    // only shrink the source's bytes and every migration re-checks the
+    // destination.
+    if cfg.mem_budget > 0.0 && n_servers > 1 {
+        let mut repair_moves = 0usize;
+        while repair_moves < cfg.max_moves {
+            let src = match (0..n_servers)
+                .filter(|&s| mem[s] > cfg.mem_budget)
+                .max_by(|&a, &b| mem[a].partial_cmp(&mem[b]).unwrap())
+            {
+                Some(s) => s,
+                None => break, // every arena fits
+            };
+            let dst = match (0..n_servers)
+                .filter(|&d| d != src)
+                .max_by(|&a, &b| mem[b].partial_cmp(&mem[a]).unwrap())
+            {
+                Some(d) => d,
+                None => break,
+            };
+            let headroom = cfg.mem_budget - mem[dst];
+            if headroom <= 0.0 {
+                break; // no destination has any arena space left
+            }
+            // Candidate items, largest bytes first — but an unmovable
+            // giant (its minimal shard still carries the full KV prefix)
+            // must not block smaller items that fit whole.
+            let mut order: Vec<usize> = (0..server_items[src].len()).collect();
+            order.sort_by(|&a, &b| {
+                server_items[src][b]
+                    .2
+                    .partial_cmp(&server_items[src][a].2)
+                    .unwrap()
+            });
+            let mut moved = false;
+            for idx in order {
+                let (it, f_item, m_item) = server_items[src][idx];
+                if m_item <= headroom {
+                    server_items[src].swap_remove(idx);
+                    load[src] -= f_item;
+                    load[dst] += f_item;
+                    mem[src] -= m_item;
+                    mem[dst] += m_item;
+                    if it.home != dst {
+                        recv_bytes[dst] += item_bytes(&it, m);
+                    }
+                    server_items[dst].push((it, f_item, m_item));
+                    moved = true;
+                    break;
+                }
+                // Whole item does not fit: ship the widest shard the
+                // destination can absorb, if any.
+                if let Some(q) = split_to_fit(&it, headroom, m) {
+                    let (outer, inner) = it.split_outer(q);
+                    let (c_outer, c_inner) =
+                        (item_cost(&outer, prof), item_cost(&inner, prof));
+                    let (m_outer, m_inner) = (item_mem(&outer, m), item_mem(&inner, m));
+                    server_items[src][idx] = (inner, c_inner, m_inner);
+                    load[src] += c_inner - f_item;
+                    mem[src] += m_inner - m_item;
+                    load[dst] += c_outer;
+                    mem[dst] += m_outer;
+                    if outer.home != dst {
+                        recv_bytes[dst] += item_bytes(&outer, m);
+                    }
+                    server_items[dst].push((outer, c_outer, m_outer));
+                    moved = true;
+                    break;
+                }
+            }
+            if !moved {
+                break; // nothing on the worst server fits anywhere: best effort
+            }
+            repair_moves += 1;
+        }
+    }
 
     // Track which (server, item) pairs migrated away from home — those
     // already paid their KV transfer and can be re-split for free-ish,
@@ -136,13 +280,19 @@ pub fn schedule(
 
         // Step 2: best candidate across all surplus sources.
         // (src, idx, move_cost, efficiency, dispatch_bytes)
+        // Arena budget: bytes the destination can still absorb.
+        let dst_headroom = if cfg.mem_budget > 0.0 {
+            cfg.mem_budget - mem[dst]
+        } else {
+            f64::INFINITY
+        };
         let mut best: Option<(usize, usize, f64, f64, f64)> = None;
         for src in 0..n_servers {
             let surplus = load[src] - target;
             if surplus <= 0.0 || src == dst {
                 continue;
             }
-            for (idx, &(ref it, f_item)) in server_items[src].iter().enumerate() {
+            for (idx, &(ref it, f_item, m_item)) in server_items[src].iter().enumerate() {
                 if f_item <= 0.0 {
                     continue;
                 }
@@ -150,21 +300,36 @@ pub fn schedule(
                 if df_max <= 0.0 {
                     continue;
                 }
+                // Byte cap: the widest piece of this item the destination
+                // arena can hold (whole item, a shard, or nothing).
+                let q_byte_cap = if m_item <= dst_headroom {
+                    it.q_tokens()
+                } else {
+                    match split_to_fit(it, dst_headroom, m) {
+                        Some(q) => q,
+                        None => continue, // no shard of it fits in bytes
+                    }
+                };
                 // Communication: moving to the item's own home is free
                 // (it executes where its tensors live).
                 let (bytes, movable) = if it.home == dst {
-                    (1.0, df_max) // epsilon bytes => enormous E
-                } else if df_max >= f_item * 0.999 {
+                    // epsilon bytes => enormous E; still byte-capped.
+                    (1.0, df_max.min(f_item * q_byte_cap as f64 / it.q_tokens() as f64))
+                } else if df_max >= f_item * 0.999 && q_byte_cap == it.q_tokens() {
                     (item_bytes(it, m), f_item)
                 } else {
                     // Partial move: Appendix B — KV prefix is fixed, Q/O
                     // scale with the migrated width. Quantize to the
                     // 128-token grid; skip unsplittable items.
                     let alpha = df_max / f_item;
-                    let desired_q = (alpha * it.q_tokens() as f64) as usize;
+                    let desired_q = ((alpha * it.q_tokens() as f64) as usize).min(q_byte_cap);
                     match it.quantize_split(desired_q) {
-                        None => (item_bytes(it, m), f_item), // too small: whole move only
+                        // Too small to split: whole move only — and only
+                        // when the whole item fits the destination arena.
+                        None if q_byte_cap == it.q_tokens() => (item_bytes(it, m), f_item),
+                        None => continue,
                         Some(q) => {
+                            let q = q.min(q_byte_cap);
                             let (outer, _) = it.split_outer(q);
                             (item_bytes(&outer, m), f_item * q as f64 / it.q_tokens() as f64)
                         }
@@ -195,16 +360,21 @@ pub fn schedule(
             break; // step 3: remaining moves are not worth their bytes
         }
 
-        let (it, f_item) = server_items[src][idx];
-        if it.home != dst {
-            recv_bytes[dst] += move_bytes;
-        }
+        let (it, f_item, m_item) = server_items[src][idx];
         if move_cost >= f_item * 0.999 {
             // Whole-item migration.
+            if cfg.mem_budget > 0.0 && mem[dst] + m_item > cfg.mem_budget + 1e-9 {
+                break; // defensive: the scan only offers fitting moves
+            }
+            if it.home != dst {
+                recv_bytes[dst] += move_bytes;
+            }
             server_items[src].swap_remove(idx);
-            server_items[dst].push((it, f_item));
+            server_items[dst].push((it, f_item, m_item));
             load[src] -= f_item;
             load[dst] += f_item;
+            mem[src] -= m_item;
+            mem[dst] += m_item;
         } else {
             let alpha = move_cost / f_item;
             let desired_q = (alpha * it.q_tokens() as f64) as usize;
@@ -213,19 +383,29 @@ pub fn schedule(
                 None => break, // defensive; shouldn't happen
             };
             let (outer, inner) = it.split_outer(q);
+            let m_outer = item_mem(&outer, m);
+            if cfg.mem_budget > 0.0 && mem[dst] + m_outer > cfg.mem_budget + 1e-9 {
+                break; // grid rounding overshot the arena headroom
+            }
+            if it.home != dst {
+                recv_bytes[dst] += move_bytes;
+            }
             let c_outer = item_cost(&outer, prof);
             let c_inner = item_cost(&inner, prof);
-            server_items[src][idx] = (inner, c_inner);
-            server_items[dst].push((outer, c_outer));
+            let m_inner = item_mem(&inner, m);
+            server_items[src][idx] = (inner, c_inner, m_inner);
+            server_items[dst].push((outer, c_outer, m_outer));
             load[src] += c_inner - f_item;
             load[dst] += c_outer;
+            mem[src] += m_inner - m_item;
+            mem[dst] += m_outer;
         }
         moves += 1;
     }
 
     let mut assignments = Vec::with_capacity(items.len());
     for (s, list) in server_items.iter().enumerate() {
-        for (it, _) in list {
+        for (it, _, _) in list {
             assignments.push(Assignment { item: *it, server: s });
         }
     }
@@ -560,6 +740,134 @@ mod tests {
         assert_eq!(total, 4096 + 6144);
         // Homes match chunk indices.
         assert!(items.iter().all(|i| (i.home) < chunks.len()));
+    }
+
+    // ----- memory-aware planning (§5, Fig. 3b) ---------------------------
+
+    fn plan_peaks(plan: &crate::coordinator::Plan, m: &ModelConfig) -> Vec<f64> {
+        crate::memplan::MemReport::for_plan(plan, m, 0.0)
+            .unwrap()
+            .per_server_peak
+    }
+
+    #[test]
+    fn mem_budget_zero_leaves_plans_unconstrained() {
+        // Budget 0 must take the exact legacy code path: identical plans.
+        let (f, prof, m) = setup();
+        let mut rng = Rng::new(11);
+        let items: Vec<Item> = (0..24)
+            .map(|d| whole(d, (rng.gen_range(8, 128) * 256) as usize, (d % 4) as usize))
+            .collect();
+        let a = schedule(&items, 4, &f, &prof, &m, &SchedulerCfg::default());
+        let b = schedule(
+            &items,
+            4,
+            &f,
+            &prof,
+            &m,
+            &SchedulerCfg { mem_budget: 0.0, ..Default::default() },
+        );
+        assert_eq!(a.assignments.len(), b.assignments.len());
+        assert_eq!(a.server_load, b.server_load);
+    }
+
+    #[test]
+    fn mem_repair_drains_overfull_home() {
+        // Mass-failure aftermath: every item homed on server 0. A finite
+        // budget must spread the arena bytes even before FLOPs balancing.
+        let (f, prof, m) = setup();
+        let items: Vec<Item> = (0..16).map(|d| whole(d, 8192, 0)).collect();
+        let total_bytes: f64 = items
+            .iter()
+            .map(|it| crate::memplan::item_arena_bytes(it, &m))
+            .sum();
+        let budget = 1.4 * total_bytes / 4.0;
+        let cfg = SchedulerCfg { mem_budget: budget, ..Default::default() };
+        let plan = schedule(&items, 4, &f, &prof, &m, &cfg);
+        plan.validate(&items, &f).unwrap();
+        for (s, &p) in plan_peaks(&plan, &m).iter().enumerate() {
+            assert!(p <= budget + 1e-6, "server {s} peak {p} exceeds budget {budget}");
+        }
+        // A feasible budget must not wreck compute balance.
+        assert!(
+            plan.imbalance() < 1.30,
+            "memory-feasible plan too imbalanced: {}",
+            plan.imbalance()
+        );
+    }
+
+    #[test]
+    fn mem_repair_skips_unmovable_giant() {
+        // The overfull server's largest item (a giant doc whose minimal
+        // shard still carries the full KV prefix) fits nowhere — repair
+        // must move the small docs instead of giving up.
+        let (f, prof, m) = setup();
+        let giant0 = whole(0, 65536, 0);
+        let giant1 = whole(1, 65536, 1);
+        let g_bytes = crate::memplan::item_arena_bytes(&giant0, &m);
+        let small_bytes = crate::memplan::item_arena_bytes(&whole(9, 512, 0), &m);
+        let mut items = vec![giant0, giant1];
+        for d in 2..10 {
+            items.push(whole(d, 512, 0));
+        }
+        // Each giant plus ~7.5 smalls fits; server 0 (giant + 8 smalls)
+        // does not, and server 1's headroom is far below any giant shard.
+        let budget = g_bytes + 7.5 * small_bytes;
+        let cfg = SchedulerCfg { mem_budget: budget, ..Default::default() };
+        let plan = schedule(&items, 2, &f, &prof, &m, &cfg);
+        plan.validate(&items, &f).unwrap();
+        for (s, &p) in plan_peaks(&plan, &m).iter().enumerate() {
+            assert!(p <= budget + 1e-6, "server {s} peak {p} exceeds budget {budget}");
+        }
+    }
+
+    #[test]
+    fn mem_budget_bounds_giant_doc_shards() {
+        // One giant doc: shards carry the full KV prefix, so per-server
+        // bytes are irreducible below ~doc KV. A budget slightly above
+        // the whole item's bytes must still admit a valid, feasible plan.
+        let (f, prof, m) = setup();
+        let items = vec![whole(0, 65536, 0)];
+        let whole_bytes = crate::memplan::item_arena_bytes(&items[0], &m);
+        let budget = 1.25 * whole_bytes;
+        let cfg = SchedulerCfg { mem_budget: budget, ..Default::default() };
+        let plan = schedule(&items, 4, &f, &prof, &m, &cfg);
+        plan.validate(&items, &f).unwrap();
+        for &p in &plan_peaks(&plan, &m) {
+            assert!(p <= budget + 1e-6, "peak {p} exceeds budget {budget}");
+        }
+    }
+
+    #[test]
+    fn infeasible_budget_degrades_to_best_effort() {
+        // A budget below any single shard's bytes cannot be satisfied;
+        // the scheduler must neither panic nor lose tokens.
+        let (f, prof, m) = setup();
+        let items = vec![whole(0, 32768, 0), whole(1, 32768, 0)];
+        let cfg = SchedulerCfg { mem_budget: 1.0, ..Default::default() };
+        let plan = schedule(&items, 4, &f, &prof, &m, &cfg);
+        plan.validate(&items, &f).unwrap();
+        assert!(plan.assignments.len() >= items.len());
+    }
+
+    #[test]
+    fn split_to_fit_is_monotone_and_byte_safe() {
+        let (_f, _prof, m) = setup();
+        let it = whole(0, 65536, 0);
+        let whole_bytes = crate::memplan::item_arena_bytes(&it, &m);
+        // Generous headroom: the widest splittable shard fits.
+        let q_max = split_to_fit(&it, whole_bytes, &m).unwrap();
+        assert!(q_max >= 2 * BLOCK_TOKENS && q_max < it.q_tokens());
+        // Shard bytes at the returned width respect the headroom.
+        for frac in [0.55, 0.7, 0.9] {
+            let headroom = whole_bytes * frac;
+            if let Some(q) = split_to_fit(&it, headroom, &m) {
+                let (outer, _) = it.split_outer(q);
+                assert!(crate::memplan::item_arena_bytes(&outer, &m) <= headroom);
+            }
+        }
+        // A headroom below the minimal shard's bytes yields None.
+        assert!(split_to_fit(&it, 1.0, &m).is_none());
     }
 
     #[test]

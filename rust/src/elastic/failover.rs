@@ -43,8 +43,8 @@ use crate::sim::engine::Engine;
 use crate::sim::strategies::{distca_placement, SimParams};
 use crate::util::json::Json;
 
-use super::autoscale::{Autoscaler, LoadSignals, ScaleDecision};
-use super::fault::{partition_kills_drains, FaultEvent, FaultPlan};
+use super::autoscale::{AutoscaleCfg, Autoscaler, LoadSignals, ScaleDecision};
+use super::fault::{partition_mid_tick, FaultEvent, FaultPlan, MidTickFaults};
 use super::health::{HealthCfg, HealthMonitor};
 use super::pool::{ServerPool, ServerState};
 
@@ -151,6 +151,14 @@ const CTRL_SHUTDOWN: u64 = CTRL_BASE;
 const CTRL_KILL: u64 = CTRL_BASE | 1;
 const CTRL_REVIVE: u64 = CTRL_BASE | 2;
 const CTRL_SLOW: u64 = CTRL_BASE | 3;
+/// Arena overflow: the server drops everything until the coordinator's
+/// `CTRL_OOM_CLEAR` (queued behind the evicted window) restores it —
+/// the eviction window is transport-ordered, so it is deterministic.
+const CTRL_OOM: u64 = CTRL_BASE | 4;
+/// Close an OOM eviction window: clears only the drop state. Unlike
+/// `CTRL_REVIVE` it must not reset a scripted slowdown's injected delay
+/// — the server is still slow, it merely has arena headroom again.
+const CTRL_OOM_CLEAR: u64 = CTRL_BASE | 5;
 /// Cancel flag (bit 62): `CANCEL_FLAG | task_tag`, payload = tick.
 const CANCEL_FLAG: u64 = 1 << 62;
 /// Coordinator's `src` on control messages.
@@ -189,6 +197,13 @@ pub struct ElasticCfg {
     /// Nominal per-task latency used to turn a `Slow{factor}` fault into
     /// a concrete injected delay: `slow_task_unit × (1/factor − 1)`.
     pub slow_task_unit: Duration,
+    /// Wave-clock autoscaling inside the PP loop
+    /// ([`Autoscaler::decide_wave`] at each tick's ping boundary, never
+    /// mid-wave). The thread pool is fixed at spawn, so growth only
+    /// *restores* dead servers (a join would mint a server with no
+    /// thread behind it) and shrink drains gracefully, the drainee
+    /// leaving at tick end. `None` disables scaling.
+    pub autoscale: Option<AutoscaleCfg>,
 }
 
 impl Default for ElasticCfg {
@@ -199,6 +214,7 @@ impl Default for ElasticCfg {
             dead_after_strikes: 2,
             max_redispatch_rounds: 8,
             slow_task_unit: Duration::from_millis(20),
+            autoscale: None,
         }
     }
 }
@@ -220,6 +236,13 @@ pub struct TickStats {
     pub drain_kept: usize,
     /// Partial drain: unstarted tail tasks redirected pre-dispatch.
     pub drain_redirected: usize,
+    /// Arena overflow: tasks evicted by a mid-tick `oom:` fault and
+    /// re-sent to servers with headroom (the victim survives the tick).
+    pub oom_evicted: usize,
+    /// Servers restored by a wave-boundary autoscale grow decision.
+    pub scaled_up: usize,
+    /// Servers drained by a wave-boundary autoscale shrink decision.
+    pub scaled_down: usize,
     /// Servers auto-demoted to `Slow` by the gray-health verdict.
     pub gray_demoted: usize,
     /// Re-dispatches attributed to each nano-batch wave (flat ticks use
@@ -244,6 +267,10 @@ pub struct ElasticCoordinator {
     /// slowdowns) — eligible for auto-promotion once their verdict
     /// clears.
     gray: HashSet<usize>,
+    /// Wave-clock autoscaler (None unless `cfg.autoscale` is set).
+    scaler: Option<Autoscaler>,
+    /// Previous tick's load signals feeding the next scale decision.
+    last_signals: Option<LoadSignals>,
     pub cfg: ElasticCfg,
     pub stats: Vec<TickStats>,
 }
@@ -266,6 +293,7 @@ impl ElasticCoordinator {
                 server_thread(fabric, s, n_servers, compute)
             }));
         }
+        let scaler = cfg.autoscale.clone().map(Autoscaler::new);
         ElasticCoordinator {
             fabric,
             n_servers,
@@ -273,6 +301,8 @@ impl ElasticCoordinator {
             pool: ServerPool::new(n_servers),
             health: HealthMonitor::new(n_servers, HealthCfg::default()),
             gray: HashSet::new(),
+            scaler,
+            last_signals: None,
             cfg,
             stats: Vec::new(),
         }
@@ -305,8 +335,8 @@ impl ElasticCoordinator {
     }
 
     /// Apply this tick's `Slow`/`Rejoin` events (they land *before*
-    /// dispatch) and return the deferred mid-tick `(kills, drains)`.
-    fn apply_tick_events(&mut self, tick: usize, fault: &FaultPlan) -> (Vec<usize>, Vec<usize>) {
+    /// dispatch) and return the deferred mid-tick kill/drain/oom victims.
+    fn apply_tick_events(&mut self, tick: usize, fault: &FaultPlan) -> MidTickFaults {
         let events = fault.events_at(tick);
         for ev in &events {
             match *ev {
@@ -327,7 +357,7 @@ impl ElasticCoordinator {
                 _ => {}
             }
         }
-        partition_kills_drains(&events, self.n_servers)
+        partition_mid_tick(&events, self.n_servers)
     }
 
     /// Health-driven gray degradation: auto-demote Healthy servers in
@@ -372,6 +402,80 @@ impl ElasticCoordinator {
         }
     }
 
+    /// The ping-boundary autoscaling step ([`Autoscaler::decide_wave`]
+    /// on the wave clock): growth restores dead servers (never joins —
+    /// the thread pool is fixed at spawn) and revives their workers;
+    /// shrink drains the victim out of subsequent planning (its tasks
+    /// remap pre-dispatch, zero loss). Returns the servers drained this
+    /// step — the caller completes their departure at tick end. Only the
+    /// ping boundary decides: a pong-boundary shrink would race the
+    /// in-flight ping gather's re-dispatch targeting, and *asking* the
+    /// policy just to discard the answer would burn its cooldown — so
+    /// mid-tick boundaries defer to the next tick's ping boundary.
+    fn autoscale_boundary(&mut self, tick: usize, stats: &mut TickStats) -> Vec<usize> {
+        let mut sc = match self.scaler.take() {
+            Some(s) => s,
+            None => return Vec::new(),
+        };
+        let sig = match self.last_signals {
+            Some(s) => s,
+            None => {
+                self.scaler = Some(sc);
+                return Vec::new();
+            }
+        };
+        let mut drained = Vec::new();
+        let decision = sc.decide_wave(tick, Wave::Ping, self.pool.n_schedulable(), sig);
+        match decision {
+            ScaleDecision::Grow(k) => {
+                for _ in 0..k {
+                    let dead = (0..self.n_servers)
+                        .find(|&s| self.pool.state(s) == ServerState::Dead);
+                    let Some(s) = dead else { break };
+                    self.pool.restore(s);
+                    self.health.reset(s);
+                    self.gray.remove(&s);
+                    self.send_ctrl(s, CTRL_REVIVE, vec![]);
+                    stats.scaled_up += 1;
+                }
+            }
+            ScaleDecision::Shrink(k) => {
+                for _ in 0..k {
+                    let sched = self.pool.schedulable();
+                    if sched.len() <= sc.cfg.min_servers.max(1) {
+                        break;
+                    }
+                    let victim = *sched.last().unwrap();
+                    self.pool.drain(victim);
+                    drained.push(victim);
+                    stats.scaled_down += 1;
+                }
+            }
+            ScaleDecision::Hold => {}
+        }
+        self.scaler = Some(sc);
+        drained
+    }
+
+    /// Record this tick's load signals for the next scale decision.
+    fn record_signals(&mut self, tasks: &[ElasticTask]) {
+        if self.scaler.is_none() {
+            return;
+        }
+        let sched = self.pool.schedulable();
+        if sched.is_empty() {
+            return;
+        }
+        let counts: Vec<f64> = sched
+            .iter()
+            .map(|&s| tasks.iter().filter(|t| t.server == s).count() as f64)
+            .collect();
+        self.last_signals = Some(LoadSignals {
+            queue_depth: tasks.len() as f64 / sched.len() as f64,
+            imbalance: crate::util::stats::imbalance_ratio(&counts),
+        });
+    }
+
     /// Dispatch one wave of CA-tasks (`idxs` into `tasks`).
     ///
     /// * a task whose planned server has already left the pool is
@@ -382,24 +486,31 @@ impl ElasticCoordinator {
     /// * a `drains` victim keeps the first half of its wave queue
     ///   (already started) and the unstarted tail is redirected to live
     ///   servers — the partial-drain contract: no started task is ever
-    ///   re-dispatched.
+    ///   re-dispatched;
+    /// * an `ooms` victim's arena overflows mid-queue: the tail is still
+    ///   shipped (the bytes are genuinely wasted) but dropped at the
+    ///   server, and the coordinator — which observes the allocator
+    ///   failure synchronously — immediately re-sends each evicted task
+    ///   to a server with headroom (counted in `stats.oom_evicted`).
+    ///   The victim survives: the caller revives it right after the
+    ///   wave, transport order bounding the drop window.
     #[allow(clippy::too_many_arguments)]
     fn dispatch_wave(
         &mut self,
         tick: usize,
         tasks: &[ElasticTask],
         idxs: &[usize],
-        kills: &[usize],
-        drains: &[usize],
+        faults: &MidTickFaults,
         assigned: &mut BTreeMap<u64, usize>,
         dispatch_at: &mut BTreeMap<u64, Instant>,
         stats: &mut TickStats,
     ) -> Result<()> {
+        let (kills, drains, ooms) = (&faults.kills, &faults.drains, &faults.ooms);
         let targets: Vec<usize> = self
             .pool
             .schedulable()
             .into_iter()
-            .filter(|s| !kills.contains(s) && !drains.contains(s))
+            .filter(|s| !kills.contains(s) && !drains.contains(s) && !ooms.contains(s))
             .collect();
         anyhow::ensure!(!targets.is_empty(), "no live servers to dispatch to");
         let mut rr = 0usize;
@@ -422,12 +533,34 @@ impl ElasticCoordinator {
         for (&srv, q) in &per_server {
             let killed_here = kills.contains(&srv);
             let drained_here = drains.contains(&srv);
+            let oomed_here = ooms.contains(&srv);
             // cut < q.len() always (q non-empty), so the event lands
             // inside the loop, between the shipped half and the tail.
-            let cut = if killed_here || drained_here { q.len() / 2 } else { q.len() };
+            let cut = if killed_here || drained_here || oomed_here {
+                q.len() / 2
+            } else {
+                q.len()
+            };
             for (k, &i) in q.iter().enumerate() {
-                if killed_here && k == cut {
-                    self.send_ctrl(srv, CTRL_KILL, vec![]);
+                if k == cut {
+                    if killed_here {
+                        self.send_ctrl(srv, CTRL_KILL, vec![]);
+                    }
+                    if oomed_here {
+                        self.send_ctrl(srv, CTRL_OOM, vec![]);
+                    }
+                }
+                if oomed_here && k >= cut {
+                    // The evicted tail: shipped (and dropped) at the
+                    // victim, then re-sent to a server with headroom.
+                    self.send_data(srv, tick, &tasks[i]);
+                    stats.oom_evicted += 1;
+                    let d = targets[rr % targets.len()];
+                    rr += 1;
+                    self.send_data(d, tick, &tasks[i]);
+                    assigned.insert(tasks[i].tag(), d);
+                    dispatch_at.insert(tasks[i].tag(), Instant::now());
+                    continue;
                 }
                 let dest = if drained_here && k >= cut {
                     // Partial drain: redirect the unstarted tail.
@@ -461,8 +594,11 @@ impl ElasticCoordinator {
     /// *mid-dispatch* (half the victim's tick messages precede the kill),
     /// so already-shipped work is genuinely lost and must be recovered by
     /// re-dispatch; a `Drain` keeps the victim's shipped half and
-    /// redirects the unstarted tail (the victim leaves at tick end).
-    /// Returns outputs keyed `(doc, q_start)`, complete and
+    /// redirects the unstarted tail (the victim leaves at tick end); an
+    /// `Oom` evicts the victim's shipped tail (re-sent to servers with
+    /// headroom immediately — the allocator failure is synchronous) and
+    /// the victim returns to service within the tick, membership
+    /// untouched. Returns outputs keyed `(doc, q_start)`, complete and
     /// first-response-deduplicated, in tag order.
     pub fn run_tick(
         &mut self,
@@ -472,7 +608,7 @@ impl ElasticCoordinator {
     ) -> Result<Vec<TaskOutput>> {
         let t_start = Instant::now();
         let mut stats = TickStats { tick, n_tasks: tasks.len(), ..Default::default() };
-        let (kills, drains) = self.apply_tick_events(tick, fault);
+        let faults = self.apply_tick_events(tick, fault);
         self.gray_demote(&mut stats);
 
         let mut assigned: BTreeMap<u64, usize> = BTreeMap::new();
@@ -481,16 +617,23 @@ impl ElasticCoordinator {
         let stamp = self.pool.stamp(tick, Wave::Ping);
         stats.wave_epochs[Wave::Ping.index()] = stamp.epoch;
         self.dispatch_wave(
-            tick, tasks, &all, &kills, &drains, &mut assigned, &mut dispatch_at, &mut stats,
+            tick, tasks, &all, &faults, &mut assigned, &mut dispatch_at, &mut stats,
         )?;
         let mut buf = PingPongBuffer::new();
         buf.begin_wave(Wave::Ping, stamp.epoch, tasks.iter().map(|t| t.tag()));
-        for &k in &kills {
+        for &k in &faults.kills {
             self.pool.kill(k);
             self.health.mark_dead(k);
         }
-        for &d in &drains {
+        for &d in &faults.drains {
             self.pool.drain(d);
+        }
+        // The eviction window closes: queued behind the dropped tail,
+        // the clear restores the OOM victim before any re-dispatch or
+        // next-tick traffic reaches it. No membership change, and a
+        // scripted slowdown's delay survives.
+        for &o in &faults.ooms {
+            self.send_ctrl(o, CTRL_OOM_CLEAR, vec![]);
         }
 
         let outputs =
@@ -498,7 +641,7 @@ impl ElasticCoordinator {
         debug_assert!(buf.drained(Wave::Ping), "gather returned with tags in flight");
 
         // Drains complete once the tick is fully gathered.
-        for &d in &drains {
+        for &d in &faults.drains {
             self.pool.leave(d);
             self.health.mark_dead(d);
         }
@@ -526,8 +669,11 @@ impl ElasticCoordinator {
     ) -> Result<Vec<TaskOutput>> {
         let t_start = Instant::now();
         let mut stats = TickStats { tick, n_tasks: tasks.len(), ..Default::default() };
-        let (kills, drains) = self.apply_tick_events(tick, fault);
+        let faults = self.apply_tick_events(tick, fault);
         self.gray_demote(&mut stats);
+        // Wave-clock autoscaling at the ping boundary (the only decision
+        // point — see `autoscale_boundary`).
+        let scale_drained = self.autoscale_boundary(tick, &mut stats);
 
         // Two near-equal-weight nano-batch waves.
         let (ping_idx, pong_idx) =
@@ -541,8 +687,7 @@ impl ElasticCoordinator {
         let ping_stamp = self.pool.stamp(tick, Wave::Ping);
         stats.wave_epochs[Wave::Ping.index()] = ping_stamp.epoch;
         self.dispatch_wave(
-            tick, tasks, &ping_idx, &kills, &drains, &mut assigned, &mut dispatch_at,
-            &mut stats,
+            tick, tasks, &ping_idx, &faults, &mut assigned, &mut dispatch_at, &mut stats,
         )?;
         buf.begin_wave(
             Wave::Ping,
@@ -550,26 +695,39 @@ impl ElasticCoordinator {
             ping_idx.iter().map(|&i| tasks[i].tag()),
         );
 
+        // An OOM victim's eviction window closes with the ping wave: the
+        // clear is queued behind the dropped tail, so the pong wave —
+        // and any re-dispatch — reaches a live server. No epoch bump,
+        // and a scripted slowdown's delay survives.
+        for &o in &faults.ooms {
+            self.send_ctrl(o, CTRL_OOM_CLEAR, vec![]);
+        }
+
         // The fault becomes membership fact between the waves: the ping
         // stamp goes stale, so only *its* in-flight tasks can be lost.
-        for &k in &kills {
+        for &k in &faults.kills {
             self.pool.kill(k);
             self.health.mark_dead(k);
         }
-        for &d in &drains {
+        for &d in &faults.drains {
             self.pool.drain(d);
         }
         debug_assert!(
-            kills.is_empty() || self.pool.is_stale(&ping_stamp),
+            faults.kills.is_empty() || self.pool.is_stale(&ping_stamp),
             "a mid-tick kill must invalidate the ping wave's stamp"
         );
-
         // Wave 1 (pong): a fresh stamp — departed targets are remapped
         // pre-dispatch, nothing of this wave is ever lost.
         let pong_stamp = self.pool.stamp(tick, Wave::Pong);
         stats.wave_epochs[Wave::Pong.index()] = pong_stamp.epoch;
         self.dispatch_wave(
-            tick, tasks, &pong_idx, &[], &[], &mut assigned, &mut dispatch_at, &mut stats,
+            tick,
+            tasks,
+            &pong_idx,
+            &MidTickFaults::default(),
+            &mut assigned,
+            &mut dispatch_at,
+            &mut stats,
         )?;
         buf.begin_wave(
             Wave::Pong,
@@ -583,10 +741,16 @@ impl ElasticCoordinator {
             buf.drained(Wave::Ping) && buf.drained(Wave::Pong),
             "gather returned with a wave still in flight"
         );
-        for &d in &drains {
+        for &d in &faults.drains {
             self.pool.leave(d);
             self.health.mark_dead(d);
         }
+        // Scale-shrink drains complete with the tick, like scripted ones.
+        for &d in &scale_drained {
+            self.pool.leave(d);
+            self.health.mark_dead(d);
+        }
+        self.record_signals(tasks);
         stats.elapsed = t_start.elapsed().as_secs_f64();
         self.stats.push(stats);
         Ok(outputs.into_values().collect())
@@ -817,6 +981,13 @@ fn server_thread(
         match msg.tag {
             CTRL_SHUTDOWN => return Ok(()),
             CTRL_KILL => dead = true,
+            // Arena overflow: allocation fails for everything that
+            // arrives until the coordinator's CTRL_OOM_CLEAR — same drop
+            // behavior as a crash, but scoped to the eviction window.
+            CTRL_OOM => dead = true,
+            // The eviction window closes: drop state only — a scripted
+            // slowdown's delay survives (the server is still slow).
+            CTRL_OOM_CLEAR => dead = false,
             CTRL_REVIVE => {
                 dead = false;
                 task_delay = Duration::ZERO;
@@ -873,10 +1044,55 @@ pub struct ExecReport {
     pub drain_kept: Vec<u64>,
     /// Partial drain: unstarted tail tags redirected pre-dispatch.
     pub drain_redirected: Vec<u64>,
+    /// Arena overflow: tags evicted mid-tick and re-sent to servers
+    /// with headroom (the victim stays in the pool).
+    pub oom_evicted: Vec<u64>,
     /// Tags re-planned pre-dispatch against a fresh membership epoch.
     pub remapped: Vec<u64>,
     /// Completions suppressed by first-response-wins dedup.
     pub duplicates: usize,
+    /// Per-server peak transient bytes of the kept computations,
+    /// replayed through in-place arenas on the *actual* f32 tensor
+    /// sizes — the conformance reference for memory accounting.
+    pub mem: crate::memplan::MemReport,
+}
+
+/// Replay the kept computations through per-server in-place arenas on
+/// the actual tensor byte sizes (f32 Q/K/V, O is Q-shaped): the
+/// byte-accurate `MemReport` of one deterministic tick.
+fn exec_mem_report(
+    tasks: &[ElasticTask],
+    computed_by: &BTreeMap<u64, usize>,
+    n_servers: usize,
+) -> crate::memplan::MemReport {
+    let mut by_srv: Vec<Vec<(u64, u64)>> = vec![Vec::new(); n_servers];
+    for t in tasks {
+        if let Some(&srv) = computed_by.get(&t.tag()) {
+            let q = (t.tensors.q.len() * 4) as u64;
+            let kv = ((t.tensors.k.len() + t.tensors.v.len()) * 4) as u64;
+            by_srv[srv].push((q, kv));
+        }
+    }
+    let mut peaks = Vec::with_capacity(n_servers);
+    for list in &by_srv {
+        let mut arena = crate::memplan::Arena::unbounded();
+        let mut slots = Vec::with_capacity(list.len());
+        for &(q, kv) in list {
+            slots.push((arena.alloc(q).unwrap(), arena.alloc(kv).unwrap()));
+        }
+        let mut outs = Vec::with_capacity(list.len());
+        for (i, &(q, _)) in list.iter().enumerate() {
+            let (q_slot, kv_slot) = slots[i];
+            outs.push(arena.write_in_place(q_slot, q)); // O overwrites Q
+            arena.free(kv_slot);
+        }
+        for o in outs {
+            arena.free(o);
+        }
+        debug_assert!(arena.check_drained().is_ok() && arena.check_no_alias().is_ok());
+        peaks.push(arena.peak_bytes() as f64);
+    }
+    crate::memplan::MemReport::from_peaks(peaks, 0.0)
 }
 
 fn exec_complete(
@@ -902,23 +1118,25 @@ fn exec_complete(
 /// [`ElasticCoordinator::dispatch_wave`]'s policy: stale assignments are
 /// remapped pre-dispatch, a kill victim computes only the half shipped
 /// before the kill (the rest is re-sent to survivors), a drainee keeps
-/// its started half and the unstarted tail is redirected.
+/// its started half and the unstarted tail is redirected, and an OOM
+/// victim's shipped tail is evicted to servers with headroom (the
+/// victim computes its pre-overflow half and survives the tick).
 #[allow(clippy::too_many_arguments)]
 fn exec_wave(
     pool: &ServerPool,
     tasks: &[ElasticTask],
     idxs: &[usize],
-    kills: &[usize],
-    drains: &[usize],
+    faults: &MidTickFaults,
     compute: &mut dyn CaCompute,
     outputs: &mut BTreeMap<u64, TaskOutput>,
     report: &mut ExecReport,
     rr: &mut usize,
 ) -> Result<()> {
+    let (kills, drains, ooms) = (&faults.kills, &faults.drains, &faults.ooms);
     let targets: Vec<usize> = pool
         .schedulable()
         .into_iter()
-        .filter(|s| !kills.contains(s) && !drains.contains(s))
+        .filter(|s| !kills.contains(s) && !drains.contains(s) && !ooms.contains(s))
         .collect();
     anyhow::ensure!(!targets.is_empty(), "no live servers to dispatch to");
     let mut per_server: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
@@ -937,7 +1155,8 @@ fn exec_wave(
     for (&srv, q) in &per_server {
         let killed = kills.contains(&srv);
         let drained = drains.contains(&srv);
-        let cut = if killed || drained { q.len() / 2 } else { q.len() };
+        let oomed = ooms.contains(&srv);
+        let cut = if killed || drained || oomed { q.len() / 2 } else { q.len() };
         for (k, &i) in q.iter().enumerate() {
             let tag = tasks[i].tag();
             if k < cut {
@@ -950,6 +1169,14 @@ fn exec_wave(
                 // Partial drain: the unstarted tail is redirected — never
                 // a task the drainee already started.
                 report.drain_redirected.push(tag);
+                let d = targets[*rr % targets.len()];
+                *rr += 1;
+                exec_complete(tasks, i, d, compute, outputs, report)?;
+            } else if oomed {
+                // Arena overflow: the shipped tail is evicted and
+                // re-sent to a server with headroom (§5; recovery is one
+                // resend — §3 statelessness).
+                report.oom_evicted.push(tag);
                 let d = targets[*rr % targets.len()];
                 *rr += 1;
                 exec_complete(tasks, i, d, compute, outputs, report)?;
@@ -980,20 +1207,22 @@ pub fn run_elastic_exec(
     compute: &mut dyn CaCompute,
 ) -> Result<ExecReport> {
     let deferred = fault.apply_tick(tick, pool);
-    let (kills, drains) = partition_kills_drains(&deferred, pool.capacity());
+    let faults = partition_mid_tick(&deferred, pool.capacity());
     let mut outputs: BTreeMap<u64, TaskOutput> = BTreeMap::new();
     let mut report = ExecReport::default();
     let mut rr = 0usize;
     let all: Vec<usize> = (0..tasks.len()).collect();
-    exec_wave(pool, tasks, &all, &kills, &drains, compute, &mut outputs, &mut report, &mut rr)?;
-    for &k in &kills {
+    exec_wave(pool, tasks, &all, &faults, compute, &mut outputs, &mut report, &mut rr)?;
+    for &k in &faults.kills {
         pool.kill(k);
     }
-    for &d in &drains {
+    for &d in &faults.drains {
         pool.drain(d);
         pool.leave(d);
     }
+    // OOM victims keep their membership: transient buffers only (§5).
     report.outputs = outputs.into_values().collect();
+    report.mem = exec_mem_report(tasks, &report.computed_by, pool.capacity());
     Ok(report)
 }
 
@@ -1010,26 +1239,38 @@ pub fn run_elastic_exec_pp(
     compute: &mut dyn CaCompute,
 ) -> Result<ExecReport> {
     let deferred = fault.apply_tick(tick, pool);
-    let (kills, drains) = partition_kills_drains(&deferred, pool.capacity());
+    let faults = partition_mid_tick(&deferred, pool.capacity());
     let (ping_idx, pong_idx) =
         split_waves(tasks, |t| (t.tensors.q_len * t.tensors.kv_len) as f64);
     let mut outputs: BTreeMap<u64, TaskOutput> = BTreeMap::new();
     let mut report = ExecReport::default();
     let mut rr = 0usize;
     exec_wave(
-        pool, tasks, &ping_idx, &kills, &drains, compute, &mut outputs, &mut report, &mut rr,
+        pool, tasks, &ping_idx, &faults, compute, &mut outputs, &mut report, &mut rr,
     )?;
-    for &k in &kills {
+    for &k in &faults.kills {
         pool.kill(k);
     }
-    for &d in &drains {
+    for &d in &faults.drains {
         pool.drain(d);
     }
-    exec_wave(pool, tasks, &pong_idx, &[], &[], compute, &mut outputs, &mut report, &mut rr)?;
-    for &d in &drains {
+    // OOM victims are revived between the waves (mirroring the threaded
+    // path's queued CTRL_REVIVE): the pong wave sees them live again.
+    exec_wave(
+        pool,
+        tasks,
+        &pong_idx,
+        &MidTickFaults::default(),
+        compute,
+        &mut outputs,
+        &mut report,
+        &mut rr,
+    )?;
+    for &d in &faults.drains {
         pool.leave(d);
     }
     report.outputs = outputs.into_values().collect();
+    report.mem = exec_mem_report(tasks, &report.computed_by, pool.capacity());
     Ok(report)
 }
 
@@ -1071,6 +1312,9 @@ pub struct SimTick {
     pub lost_tasks: usize,
     pub redispatched: usize,
     pub speculated: usize,
+    /// Peak per-server transient bytes of the tick's dispatch (max over
+    /// servers; per-GPU within the TP group) — engine-tracked, §5.
+    pub mem_peak_bytes: f64,
     /// Achieved tick time including recovery (seconds).
     pub tick_time: f64,
     /// The same plan's time had no fault fired (seconds).
@@ -1131,6 +1375,7 @@ impl ElasticSimReport {
                                 ("fault_free_time_s", Json::Num(t.fault_free_time)),
                                 ("goodput", Json::Num(t.goodput)),
                                 ("comm_bytes", Json::Num(t.comm_bytes)),
+                                ("mem_peak_bytes", Json::Num(t.mem_peak_bytes)),
                                 (
                                     "events",
                                     Json::Arr(
@@ -1266,21 +1511,31 @@ pub fn run_elastic_sim(
             .fold(0.0f64, f64::max)
             / tp;
 
+        // Per-assignment transient arena bytes (in-place Q+KV, per GPU
+        // within the TP group) — engine-tracked live-byte footprints.
+        let mem_bytes: Vec<f64> = plan
+            .assignments
+            .iter()
+            .map(|a| crate::memplan::item_arena_bytes(&a.item, &p.model) / tp)
+            .collect();
+
         // Wave 0: the tick as dispatched, with faults biting.
         let mut eng = Engine::new(n);
         for (v, &s) in speeds.iter().enumerate() {
             eng.set_speed(v, s);
         }
         for (i, a) in plan.assignments.iter().enumerate() {
-            let id = eng.add_task(a.server, costs[i], &[]);
+            let id = eng.add_task_mem(a.server, costs[i], &[], mem_bytes[i]);
             debug_assert_eq!(id, i);
         }
-        let (kill_list, drain_list) = partition_kills_drains(&deferred, pool.capacity());
+        let faults = partition_mid_tick(&deferred, pool.capacity());
         let mut killed_virt: Vec<usize> = Vec::new();
         let mut drained_virt: Vec<usize> = Vec::new();
+        let mut oomed_virt: Vec<usize> = Vec::new();
         let mut kill_time_max = 0.0f64;
         let mut drain_time_max = 0.0f64;
-        for &server in &kill_list {
+        let mut oom_time_max = 0.0f64;
+        for &server in &faults.kills {
             if let Some(v) = view.to_virtual(server) {
                 let span = plan.server_load[v] / tp / speeds[v];
                 let kill_time = cfg.kill_phase_frac * span;
@@ -1291,7 +1546,7 @@ pub fn run_elastic_sim(
             pool.kill(server);
             health.mark_dead(server);
         }
-        for &server in &drain_list {
+        for &server in &faults.drains {
             // Partial drain: the running task finishes; only the
             // unstarted tail of the queue is revoked for re-dispatch,
             // and the server leaves at tick end.
@@ -1304,8 +1559,26 @@ pub fn run_elastic_sim(
             }
             pool.drain(server);
         }
+        for &server in &faults.ooms {
+            // Arena overflow mid-tick: the rest of the victim's queue is
+            // evicted (revoked) exactly like a kill's — but the server
+            // itself survives into the next tick: its buffers are
+            // transient, so membership is untouched (§5).
+            if let Some(v) = view.to_virtual(server) {
+                let span = plan.server_load[v] / tp / speeds[v];
+                let oom_time = cfg.kill_phase_frac * span;
+                eng.revoke_resource(v, oom_time);
+                oomed_virt.push(v);
+                oom_time_max = oom_time_max.max(oom_time);
+            }
+        }
         let wave0 = eng.run();
         let busy = eng.busy_per_resource();
+        let mem_peak_bytes = eng
+            .mem_peak_per_resource()
+            .iter()
+            .cloned()
+            .fold(0.0f64, f64::max);
 
         // Feed the health monitor *normalized* slowness — observed busy
         // time over the plan's predicted load — so task-count skew (few
@@ -1326,10 +1599,12 @@ pub fn run_elastic_sim(
         let tick_time;
         if !lost.is_empty() {
             // Partial-drain contract: a drained resource's casualties
-            // are all unstarted (only kills cut running work).
+            // are all unstarted (only kills and OOM evictions cut
+            // running work).
             for &li in &lost {
                 debug_assert!(
                     killed_virt.contains(&plan.assignments[li].server)
+                        || oomed_virt.contains(&plan.assignments[li].server)
                         || !eng.started(li),
                     "partial drain re-dispatched a started task"
                 );
@@ -1338,13 +1613,14 @@ pub fn run_elastic_sim(
             // then absorb the lost tasks, which become startable only
             // after the failure is detected and the tensors are resent.
             // Drainees still finish their started work (they are filler
-            // lanes) but accept no re-dispatched tasks.
+            // lanes) but accept no re-dispatched tasks; an OOM victim
+            // has no arena headroom this tick, so it is excluded too.
             let survivors: Vec<usize> =
                 (0..n).filter(|v| !killed_virt.contains(v)).collect();
             let rec_targets: Vec<usize> = survivors
                 .iter()
                 .copied()
-                .filter(|v| !drained_virt.contains(v))
+                .filter(|v| !drained_virt.contains(v) && !oomed_virt.contains(v))
                 .collect();
             anyhow::ensure!(!rec_targets.is_empty(), "tick {tick}: all servers died");
             let mut rec = Engine::new(survivors.len());
@@ -1357,7 +1633,9 @@ pub fn run_elastic_sim(
             // A kill needs failure detection before the resend; a drain
             // is cooperative, so its tail re-dispatches at the drain
             // instant — per task, so a same-tick kill elsewhere does not
-            // tax the drainee's recovery.
+            // tax the drainee's recovery. An OOM is synchronous (the
+            // allocator failure is observed at the server), so its
+            // evictions also resend without a detection delay.
             let detect_kill = kill_time_max + cfg.detection_frac * fault_free;
             for (j, &li) in lost.iter().enumerate() {
                 let a = &plan.assignments[li];
@@ -1367,6 +1645,8 @@ pub fn run_elastic_sim(
                     crate::coordinator::comm::item_migration_bytes(&a.item, &p.model);
                 let at = if killed_virt.contains(&a.server) {
                     detect_kill
+                } else if oomed_virt.contains(&a.server) {
+                    oom_time_max
                 } else {
                     drain_time_max
                 };
@@ -1448,6 +1728,7 @@ pub fn run_elastic_sim(
             lost_tasks: lost.len(),
             redispatched,
             speculated,
+            mem_peak_bytes,
             tick_time,
             fault_free_time: fault_free,
             goodput,
@@ -1672,6 +1953,65 @@ mod tests {
     }
 
     #[test]
+    fn elastic_runtime_oom_evicts_tail_and_server_survives() {
+        let mut rng = Rng::new(61);
+        // Server 1 holds four tasks; the OOM lands after two: the
+        // evicted tail is re-sent to healthy servers, outputs stay
+        // bit-exact, and — unlike a kill — the victim stays schedulable.
+        let tasks = mk_tasks(
+            &mut rng,
+            &[(0, 4, 0), (1, 4, 1), (2, 4, 1), (3, 4, 1), (4, 4, 1), (5, 4, 2)],
+        );
+        let fault = FaultPlan::new().oom(1, 0);
+        let mut co = ElasticCoordinator::spawn(3, ElasticCfg::default(), |_| Box::new(dims()));
+        let outputs = co.run_tick(0, &tasks, &fault).unwrap();
+        check_against_oracle(&tasks, &outputs);
+        assert!(co.pool.is_schedulable(1), "an OOM must not remove the server");
+        // The revived victim serves the next tick normally.
+        let t1 = mk_tasks(&mut rng, &[(10, 4, 0), (11, 4, 1), (12, 4, 2)]);
+        let o1 = co.run_tick(1, &t1, &fault).unwrap();
+        check_against_oracle(&t1, &o1);
+        let stats = co.shutdown().unwrap();
+        assert_eq!(stats[0].oom_evicted, 2, "{stats:?}");
+        assert_eq!(
+            stats[0].redispatched, 0,
+            "eviction is proactive — no deadline-driven re-dispatch needed"
+        );
+        assert_eq!(stats[1].oom_evicted, 0, "the oom fault fires at tick 0 only");
+    }
+
+    #[test]
+    fn pp_tick_oom_revives_before_pong() {
+        let mut rng = Rng::new(67);
+        let tasks = mk_tasks(
+            &mut rng,
+            &[
+                (0, 4, 0),
+                (1, 4, 1),
+                (2, 4, 1),
+                (3, 4, 2),
+                (4, 4, 1),
+                (5, 4, 1),
+                (6, 4, 0),
+                (7, 4, 2),
+            ],
+        );
+        let fault = FaultPlan::new().oom(1, 0);
+        let mut co = ElasticCoordinator::spawn(3, ElasticCfg::default(), |_| Box::new(dims()));
+        let outputs = co.run_pp_tick(0, &tasks, &fault).unwrap();
+        check_against_oracle(&tasks, &outputs);
+        assert!(co.pool.is_schedulable(1));
+        let stats = co.shutdown().unwrap();
+        let st = &stats[0];
+        assert!(st.oom_evicted >= 1, "the ping tail must be evicted: {st:?}");
+        assert_eq!(
+            st.wave_epochs[0], st.wave_epochs[1],
+            "an OOM is not a membership event: no epoch bump: {st:?}"
+        );
+        assert_eq!(st.remapped, 0, "the pong wave needs no remap — the victim is live");
+    }
+
+    #[test]
     fn pp_tick_redispatches_only_the_affected_wave() {
         let mut rng = Rng::new(29);
         // 8 equal tasks alternate ping/pong; server 1 owns 1, 2, 4, 5 —
@@ -1711,6 +2051,48 @@ mod tests {
         assert_eq!(
             st.wave_redispatched[1], 0,
             "the pong wave is re-planned, never re-dispatched: {st:?}"
+        );
+    }
+
+    #[test]
+    fn pp_tick_autoscale_restores_killed_server() {
+        let mut rng = Rng::new(71);
+        let cfg = ElasticCfg {
+            autoscale: Some(AutoscaleCfg {
+                queue_high: 0.1, // any load is pressure: grow when possible
+                max_servers: 3,
+                cooldown_ticks: 1,
+                ..Default::default()
+            }),
+            ..ElasticCfg::default()
+        };
+        let fault = FaultPlan::new().kill(1, 0);
+        let mut co = ElasticCoordinator::spawn(3, cfg, |_| Box::new(dims()));
+        for tick in 0..3 {
+            let alive = co.pool.schedulable();
+            let tasks: Vec<ElasticTask> = (0..6)
+                .map(|i| {
+                    let server = alive[i % alive.len()];
+                    ElasticTask {
+                        doc: (tick * 100 + i) as u32,
+                        q_start: 0,
+                        server,
+                        home: server % 2,
+                        tensors: synthetic_task(&mut rng, 4, 4, H, HKV, D),
+                    }
+                })
+                .collect();
+            let outputs = co.run_pp_tick(tick, &tasks, &fault).unwrap();
+            check_against_oracle(&tasks, &outputs);
+        }
+        assert!(
+            co.pool.is_schedulable(1),
+            "the autoscaler must restore the killed server"
+        );
+        let stats = co.shutdown().unwrap();
+        assert!(
+            stats.iter().map(|s| s.scaled_up).sum::<usize>() >= 1,
+            "a grow decision must have fired: {stats:?}"
         );
     }
 
@@ -1775,6 +2157,32 @@ mod tests {
             );
         }
         assert_eq!(rep.duplicates, 0);
+    }
+
+    #[test]
+    fn exec_flat_oom_evicts_and_reports_mem() {
+        let mut rng = Rng::new(53);
+        let tasks = mk_tasks(
+            &mut rng,
+            &[(0, 4, 0), (1, 4, 1), (2, 4, 1), (3, 4, 1), (4, 4, 1), (5, 4, 2)],
+        );
+        let fault = FaultPlan::new().oom(1, 0);
+        let mut pool = ServerPool::new(3);
+        let mut compute = dims();
+        let rep = run_elastic_exec(&mut pool, 0, &tasks, &fault, &mut compute).unwrap();
+        check_against_oracle(&tasks, &rep.outputs);
+        assert!(pool.is_schedulable(1), "OOM victim stays in the pool");
+        // Victim held 4 tasks → 2 evicted; nothing kill-redispatched.
+        assert_eq!(rep.oom_evicted.len(), 2);
+        assert!(rep.redispatched.is_empty());
+        // Evicted tags were computed elsewhere.
+        for tag in &rep.oom_evicted {
+            assert_ne!(rep.computed_by[tag], 1, "evicted task computed on the victim");
+        }
+        // The conformance MemReport is populated and leak-free.
+        assert_eq!(rep.mem.per_server_peak.len(), 3);
+        assert!(rep.mem.per_server_peak.iter().all(|&p| p > 0.0));
+        assert!(rep.mem.within_budget());
     }
 
     #[test]
@@ -1892,6 +2300,54 @@ mod tests {
             t0.tick_time,
             t0.fault_free_time
         );
+    }
+
+    #[test]
+    fn sim_oom_evicts_but_pool_survives() {
+        let p = sim_params();
+        let batches = sim_batches(3, 4, 59);
+        let fault = FaultPlan::new().oom(1, 1);
+        let r = run_elastic_sim(&batches, 4, &p, &fault, &ElasticSimCfg::default()).unwrap();
+        let t1 = &r.per_tick[1];
+        assert!(t1.lost_tasks > 0, "mid-tick OOM must evict in-flight work");
+        assert_eq!(t1.redispatched, t1.lost_tasks);
+        assert!(t1.tick_time > t1.fault_free_time);
+        // Unlike a kill, the pool does not shrink.
+        assert_eq!(r.per_tick[2].n_alive, 4, "OOM victim must survive the tick");
+        // Eviction is synchronous: cheaper than a same-phase kill, which
+        // pays a detection delay and loses the server's tail capacity.
+        let kill = run_elastic_sim(
+            &batches,
+            4,
+            &p,
+            &FaultPlan::new().kill(1, 1),
+            &ElasticSimCfg::default(),
+        )
+        .unwrap();
+        assert!(
+            r.recovery_overhead() <= kill.recovery_overhead() + 1e-9,
+            "oom {} should cost no more than kill {}",
+            r.recovery_overhead(),
+            kill.recovery_overhead()
+        );
+    }
+
+    #[test]
+    fn sim_tracks_mem_peaks() {
+        let p = sim_params();
+        let batches = sim_batches(2, 4, 61);
+        let r = run_elastic_sim(&batches, 4, &p, &FaultPlan::new(), &ElasticSimCfg::default())
+            .unwrap();
+        for t in &r.per_tick {
+            assert!(
+                t.mem_peak_bytes > 0.0,
+                "tick {} must report a transient-memory peak",
+                t.tick
+            );
+        }
+        let j = r.to_json();
+        let ticks = j.get("per_tick").unwrap().as_arr().unwrap();
+        assert!(ticks[0].get("mem_peak_bytes").is_some());
     }
 
     #[test]

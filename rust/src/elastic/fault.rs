@@ -3,7 +3,7 @@
 //! byte-for-byte — the same plan drives both the discrete-event simulator
 //! and the real threaded runtime.
 //!
-//! Four event kinds (ticks are the scheduler's planning rounds):
+//! Five event kinds (ticks are the scheduler's planning rounds):
 //!
 //! * `Kill { server, tick }` — the server dies *mid*-tick: work already
 //!   dispatched to it this tick is lost and must be re-dispatched;
@@ -12,11 +12,16 @@
 //! * `Rejoin { server, tick }` — a dead or slowed server returns healthy;
 //! * `Drain { server, tick }` — *partial drain*: the server finishes the
 //!   CA-tasks it already started this tick, the unstarted tail of its
-//!   queue is re-dispatched, and it leaves the pool at tick end.
+//!   queue is re-dispatched, and it leaves the pool at tick end;
+//! * `Oom { server, tick }` — the server's transient arena overflows
+//!   *mid*-tick (§5): the CA-tasks dispatched after the overflow are
+//!   evicted and re-dispatched to servers with headroom, but — unlike a
+//!   kill — the server itself survives: its buffers are transient, so
+//!   it returns to full service next tick with no membership change.
 //!
 //! Plans come from three constructors: the builder API, the compact CLI
-//! spec grammar (`kill:1@3,slow:2@4x0.25,drain:0@5,rejoin:1@6`), or
-//! [`FaultPlan::random`] seeded from a CLI-settable RNG seed.
+//! spec grammar (`kill:1@3,slow:2@4x0.25,oom:1@4,drain:0@5,rejoin:1@6`),
+//! or [`FaultPlan::random`] seeded from a CLI-settable RNG seed.
 //!
 //! [`FaultPlan`] implements the property-test harness's
 //! [`Shrink`](crate::util::quickcheck::Shrink), so counterexamples found
@@ -35,6 +40,7 @@ pub enum FaultEvent {
     Slow { server: usize, tick: usize, factor: f64 },
     Rejoin { server: usize, tick: usize },
     Drain { server: usize, tick: usize },
+    Oom { server: usize, tick: usize },
 }
 
 impl FaultEvent {
@@ -43,7 +49,8 @@ impl FaultEvent {
             FaultEvent::Kill { tick, .. }
             | FaultEvent::Slow { tick, .. }
             | FaultEvent::Rejoin { tick, .. }
-            | FaultEvent::Drain { tick, .. } => tick,
+            | FaultEvent::Drain { tick, .. }
+            | FaultEvent::Oom { tick, .. } => tick,
         }
     }
 
@@ -52,7 +59,8 @@ impl FaultEvent {
             FaultEvent::Kill { server, .. }
             | FaultEvent::Slow { server, .. }
             | FaultEvent::Rejoin { server, .. }
-            | FaultEvent::Drain { server, .. } => server,
+            | FaultEvent::Drain { server, .. }
+            | FaultEvent::Oom { server, .. } => server,
         }
     }
 
@@ -65,6 +73,7 @@ impl FaultEvent {
             }
             FaultEvent::Rejoin { server, tick } => format!("rejoin:{server}@{tick}"),
             FaultEvent::Drain { server, tick } => format!("drain:{server}@{tick}"),
+            FaultEvent::Oom { server, tick } => format!("oom:{server}@{tick}"),
         }
     }
 }
@@ -78,6 +87,7 @@ impl Shrink for FaultEvent {
             FaultEvent::Slow { factor, .. } => FaultEvent::Slow { server, tick, factor },
             FaultEvent::Rejoin { .. } => FaultEvent::Rejoin { server, tick },
             FaultEvent::Drain { .. } => FaultEvent::Drain { server, tick },
+            FaultEvent::Oom { .. } => FaultEvent::Oom { server, tick },
         };
         out.extend(server.shrink().into_iter().map(|s| rebuild(s, tick)));
         out.extend(tick.shrink().into_iter().map(|t| rebuild(server, t)));
@@ -127,6 +137,14 @@ impl FaultPlan {
         self
     }
 
+    /// Mid-tick arena overflow: the tasks dispatched past the overflow
+    /// are evicted and re-dispatched to servers with headroom; the
+    /// server itself stays in the pool (transient buffers only, §5).
+    pub fn oom(mut self, server: usize, tick: usize) -> FaultPlan {
+        self.events.push(FaultEvent::Oom { server, tick });
+        self
+    }
+
     pub fn is_empty(&self) -> bool {
         self.events.is_empty()
     }
@@ -146,11 +164,12 @@ impl FaultPlan {
     }
 
     /// Apply this tick's *membership* events to the pool: `Slow` degrades,
-    /// `Rejoin` restores. `Kill` and `Drain` are returned to the caller
-    /// instead of being applied — both land mid-tick, so the executor
-    /// must first dispatch to the victim and only then sever (kill) or
-    /// seal (drain) it; that is what makes re-dispatch observable. The
-    /// caller updates the pool once the tick's losses are accounted.
+    /// `Rejoin` restores. `Kill`, `Drain`, and `Oom` are returned to the
+    /// caller instead of being applied — all three land mid-tick, so the
+    /// executor must first dispatch to the victim and only then sever
+    /// (kill), seal (drain), or overflow (oom) it; that is what makes
+    /// re-dispatch observable. The caller updates the pool once the
+    /// tick's losses are accounted (an `Oom` never touches membership).
     pub fn apply_tick(&self, tick: usize, pool: &mut ServerPool) -> Vec<FaultEvent> {
         let mut deferred = Vec::new();
         for ev in self.events_at(tick) {
@@ -165,7 +184,9 @@ impl FaultPlan {
                         pool.restore(server);
                     }
                 }
-                FaultEvent::Kill { .. } | FaultEvent::Drain { .. } => deferred.push(ev),
+                FaultEvent::Kill { .. } | FaultEvent::Drain { .. } | FaultEvent::Oom { .. } => {
+                    deferred.push(ev)
+                }
             }
         }
         deferred
@@ -173,7 +194,8 @@ impl FaultPlan {
 
     /// Parse the compact CLI grammar: comma-separated events,
     /// `kill:<srv>@<tick>`, `slow:<srv>@<tick>x<factor>`,
-    /// `rejoin:<srv>@<tick>`. Whitespace around entries is ignored.
+    /// `rejoin:<srv>@<tick>`, `drain:<srv>@<tick>`, `oom:<srv>@<tick>`.
+    /// Whitespace around entries is ignored.
     pub fn parse_spec(spec: &str) -> Result<FaultPlan, String> {
         let mut plan = FaultPlan::new();
         for entry in spec.split(',') {
@@ -203,6 +225,10 @@ impl FaultPlan {
                 "drain" => {
                     let tick = parse_tick(entry, tick_s)?;
                     plan.events.push(FaultEvent::Drain { server, tick });
+                }
+                "oom" => {
+                    let tick = parse_tick(entry, tick_s)?;
+                    plan.events.push(FaultEvent::Oom { server, tick });
                 }
                 "slow" => {
                     let (tick_s, factor_s) = tick_s
@@ -292,6 +318,11 @@ impl FaultPlan {
                             ("server", Json::Num(server as f64)),
                             ("tick", Json::Num(tick as f64)),
                         ]),
+                        FaultEvent::Oom { server, tick } => Json::obj(vec![
+                            ("kind", Json::Str("oom".into())),
+                            ("server", Json::Num(server as f64)),
+                            ("tick", Json::Num(tick as f64)),
+                        ]),
                     })
                     .collect(),
             ),
@@ -322,6 +353,7 @@ impl FaultPlan {
                 "kill" => plan.events.push(FaultEvent::Kill { server, tick }),
                 "rejoin" => plan.events.push(FaultEvent::Rejoin { server, tick }),
                 "drain" => plan.events.push(FaultEvent::Drain { server, tick }),
+                "oom" => plan.events.push(FaultEvent::Oom { server, tick }),
                 "slow" => {
                     let factor = e
                         .req("factor")?
@@ -353,26 +385,38 @@ impl Shrink for FaultPlan {
     }
 }
 
-/// Partition deferred mid-tick events into `(kills, drains)` victim
-/// lists: out-of-range servers are dropped and a kill outranks a
-/// simultaneous drain of the same server. The single classifier every
-/// execution path shares — threaded, deterministic exec, and both
-/// discrete-event simulators.
-pub fn partition_kills_drains(
-    deferred: &[FaultEvent],
-    capacity: usize,
-) -> (Vec<usize>, Vec<usize>) {
-    let mut kills = Vec::new();
-    let mut drains = Vec::new();
+/// Deferred mid-tick victim lists, one per fault flavor.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MidTickFaults {
+    /// Servers that die mid-tick (in-flight work lost).
+    pub kills: Vec<usize>,
+    /// Servers partially draining (started work finishes, tail moves).
+    pub drains: Vec<usize>,
+    /// Servers whose arena overflows mid-tick (evicted tail re-sent to
+    /// servers with headroom; the victim survives into the next tick).
+    pub ooms: Vec<usize>,
+}
+
+/// Partition deferred mid-tick events into kill/drain/oom victim lists:
+/// out-of-range servers are dropped, and on a same-server/same-tick
+/// collision the more severe event wins (kill > drain > oom — a dead
+/// server cannot also drain, a leaving server's eviction is moot). The
+/// single classifier every execution path shares — threaded,
+/// deterministic exec, and both discrete-event simulators.
+pub fn partition_mid_tick(deferred: &[FaultEvent], capacity: usize) -> MidTickFaults {
+    let mut f = MidTickFaults::default();
     for ev in deferred {
         match *ev {
-            FaultEvent::Kill { server, .. } if server < capacity => kills.push(server),
-            FaultEvent::Drain { server, .. } if server < capacity => drains.push(server),
+            FaultEvent::Kill { server, .. } if server < capacity => f.kills.push(server),
+            FaultEvent::Drain { server, .. } if server < capacity => f.drains.push(server),
+            FaultEvent::Oom { server, .. } if server < capacity => f.ooms.push(server),
             _ => {}
         }
     }
-    drains.retain(|d| !kills.contains(d));
-    (kills, drains)
+    f.drains.retain(|d| !f.kills.contains(d));
+    f.ooms
+        .retain(|o| !f.kills.contains(o) && !f.drains.contains(o));
+    f
 }
 
 fn parse_tick(entry: &str, s: &str) -> Result<usize, String> {
@@ -467,6 +511,75 @@ mod tests {
         assert_eq!(deferred.len(), 2);
         assert!(pool.is_schedulable(0), "drain is the executor's call, not apply_tick's");
         assert!(pool.is_schedulable(1));
+    }
+
+    #[test]
+    fn oom_spec_and_json_roundtrip() {
+        let p = FaultPlan::new().oom(1, 4);
+        assert_eq!(p.to_spec(), "oom:1@4");
+        assert_eq!(FaultPlan::parse_spec("oom:1@4").unwrap(), p);
+        assert_eq!(FaultPlan::from_json(&p.to_json()).unwrap(), p);
+        // Mixed plans round-trip too.
+        let mixed = "kill:1@3,oom:2@3,slow:0@4x0.5,drain:2@5";
+        let m = FaultPlan::parse_spec(mixed).unwrap();
+        assert_eq!(m.to_spec(), mixed);
+        assert_eq!(FaultPlan::from_json(&m.to_json()).unwrap(), m);
+    }
+
+    #[test]
+    fn oom_spec_rejects_garbage() {
+        assert!(FaultPlan::parse_spec("oom:1").is_err());
+        assert!(FaultPlan::parse_spec("oom:x@2").is_err());
+        assert!(FaultPlan::parse_spec("oom:1@y").is_err());
+        // JSON with an unknown kind still rejects.
+        let j = crate::util::json::Json::obj(vec![(
+            "events",
+            crate::util::json::Json::Arr(vec![crate::util::json::Json::obj(vec![
+                ("kind", crate::util::json::Json::Str("ooom".into())),
+                ("server", crate::util::json::Json::Num(1.0)),
+                ("tick", crate::util::json::Json::Num(0.0)),
+            ])]),
+        )]);
+        assert!(FaultPlan::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn apply_tick_defers_ooms_without_touching_membership() {
+        let mut pool = ServerPool::new(3);
+        let p = FaultPlan::new().oom(1, 2);
+        let deferred = p.apply_tick(2, &mut pool);
+        assert_eq!(deferred, vec![FaultEvent::Oom { server: 1, tick: 2 }]);
+        assert!(pool.is_schedulable(1), "an OOM is not a membership event");
+    }
+
+    #[test]
+    fn partition_mid_tick_severity_order() {
+        // kill > drain > oom on the same server; out-of-range dropped.
+        let deferred = vec![
+            FaultEvent::Kill { server: 1, tick: 0 },
+            FaultEvent::Oom { server: 1, tick: 0 },
+            FaultEvent::Drain { server: 2, tick: 0 },
+            FaultEvent::Oom { server: 2, tick: 0 },
+            FaultEvent::Oom { server: 3, tick: 0 },
+            FaultEvent::Oom { server: 9, tick: 0 },
+        ];
+        let f = partition_mid_tick(&deferred, 4);
+        assert_eq!(f.kills, vec![1]);
+        assert_eq!(f.drains, vec![2]);
+        assert_eq!(f.ooms, vec![3]);
+    }
+
+    #[test]
+    fn oom_event_shrinks_within_kind() {
+        let p = FaultPlan::new().oom(3, 5);
+        let candidates = p.shrink();
+        assert!(candidates
+            .iter()
+            .flat_map(|c| &c.events)
+            .all(|e| matches!(e, FaultEvent::Oom { .. })));
+        assert!(candidates
+            .iter()
+            .any(|c| c.events.first().map_or(true, |e| e.server() < 3 || e.tick() < 5)));
     }
 
     #[test]

@@ -37,6 +37,14 @@
 //! ever re-dispatched (`drain:<srv>@<tick>` in fault specs,
 //! [`crate::sim::engine::Engine::drain_resource`] in the simulators).
 //!
+//! **OOM eviction** (`oom:<srv>@<tick>`, §5): the victim's transient
+//! arena overflows mid-tick — the CA-tasks dispatched past the overflow
+//! are evicted and re-sent to servers with headroom, synchronously (an
+//! allocator failure needs no detection delay). Unlike a kill, the
+//! membership epoch never moves: the buffers are transient
+//! ([`crate::memplan`]), so the victim is back at full service within
+//! the tick. Recovery is bit-exact on every execution path.
+//!
 //! **Gray degradation**: between healthy and straggler sits the gray
 //! band — `gray_factor × median < EWMA ≤ straggler_factor × median`
 //! (defaults 1.4 and 2.0). A gray server is auto-demoted to `Slow` with
@@ -71,7 +79,10 @@
 //!   tick barriers, partial drain, and health-driven demotion;
 //! * [`autoscale`] — [`autoscale::Autoscaler`]: queue-depth and
 //!   imbalance driven grow/shrink with cooldown, decided only at wave
-//!   boundaries under PP.
+//!   boundaries under PP — wired into both PP loops behind a flag
+//!   ([`failover::ElasticCfg::autoscale`] for the threaded
+//!   [`run_pp_tick`], [`pp::ElasticPpCfg::autoscale`] for the
+//!   discrete-event simulator, `--autoscale` on `distca elastic --pp`).
 //!
 //! `distca elastic` (and `distca elastic --pp`) drives this from the
 //! CLI; `examples/elastic_demo.rs` and `examples/elastic_pp_demo.rs`
@@ -97,7 +108,7 @@ pub use failover::{
     ElasticCoordinator, ElasticSimCfg, ElasticSimReport, ElasticTask, ExecReport,
     ReferenceCaCompute, SimTick, TickStats,
 };
-pub use fault::{FaultEvent, FaultPlan};
+pub use fault::{partition_mid_tick, FaultEvent, FaultPlan, MidTickFaults};
 pub use health::{HealthCfg, HealthMonitor, Verdict};
 pub use pool::{PoolView, ServerPool, ServerState, WaveStamp};
 pub use pp::{pp_tick_horizon, run_distca_pp_elastic, ElasticPpCfg, ElasticPpReport, PpTick};

@@ -14,6 +14,16 @@
 //!   started ([`Engine::drain_resource`]); only the unstarted tail of
 //!   its queue is re-dispatched, and the tail re-sends immediately (a
 //!   drain is cooperative — no failure-detection delay);
+//! * an **oom** (`oom:<srv>@<tick>`, §5) evicts the remainder of the
+//!   victim's ping queue to servers with headroom — synchronously, the
+//!   allocator failure needs no detection — but, unlike a kill, never
+//!   touches membership: the buffers are transient, so the victim is
+//!   back at full service for the pong wave and the next tick;
+//! * **autoscaling** (the ROADMAP follow-up, wired behind
+//!   [`ElasticPpCfg::autoscale`]): [`Autoscaler::decide_wave`] runs on
+//!   the wave clock at each tick's ping boundary — never mid-wave —
+//!   growing by restoring dead capacity first and shrinking via a
+//!   graceful drain that completes at tick end;
 //! * the **tick barrier** ([`Engine::add_barrier`]) joins every CA-task
 //!   of the tick, recoveries included; the revocation cascade resolves
 //!   at the barrier instead of crossing it, so the next tick's work is
@@ -44,9 +54,10 @@ use crate::sim::strategies::{
 };
 use crate::util::json::Json;
 
-use super::fault::{partition_kills_drains, FaultEvent, FaultPlan};
+use super::autoscale::{Autoscaler, LoadSignals, ScaleDecision};
+use super::fault::{partition_mid_tick, FaultEvent, FaultPlan};
 use super::health::{HealthCfg, HealthMonitor, Verdict};
-use super::pool::{ServerPool, ServerState};
+use super::pool::{sync_health, ServerPool, ServerState};
 
 /// Knobs for the elastic PP simulation.
 #[derive(Debug, Clone)]
@@ -55,10 +66,20 @@ pub struct ElasticPpCfg {
     pub kill_phase_frac: f64,
     /// Failure-detection delay for kills, as a fraction of the
     /// fault-free ping span. Drains are cooperative: their tail
-    /// re-dispatches at the drain instant with no detection delay.
+    /// re-dispatches at the drain instant with no detection delay; OOM
+    /// evictions are synchronous (the allocator failure is observed at
+    /// the server) and also resend immediately.
     pub detection_frac: f64,
     /// Health tracking knobs (straggler + gray thresholds).
     pub health: HealthCfg,
+    /// Autoscaling inside the PP loop, decided on the wave clock
+    /// ([`Autoscaler::decide_wave`]) at the *ping* boundary of each tick
+    /// — never mid-wave, so a scale event can never invalidate an
+    /// in-flight wave's membership epoch. In this simulator the tick's
+    /// plan is frozen at the ping boundary, so a pong-boundary decision
+    /// would only take effect next tick anyway; it is therefore deferred
+    /// to the next ping boundary. `None` disables scaling.
+    pub autoscale: Option<super::autoscale::AutoscaleCfg>,
 }
 
 impl Default for ElasticPpCfg {
@@ -67,6 +88,7 @@ impl Default for ElasticPpCfg {
             kill_phase_frac: 0.4,
             detection_frac: 0.1,
             health: HealthCfg::default(),
+            autoscale: None,
         }
     }
 }
@@ -87,6 +109,9 @@ pub struct PpTick {
     pub remapped: usize,
     /// Ping tasks a drainee had already started and finished itself.
     pub drain_kept: usize,
+    /// Ping tasks evicted by a mid-tick arena overflow (`oom:`) and
+    /// re-sent to servers with headroom — the victim survives the tick.
+    pub oom_evicted: usize,
     /// Servers auto-demoted to `Slow` by the health verdicts this tick.
     pub demoted: usize,
     /// Membership epoch each wave was dispatched under.
@@ -155,6 +180,7 @@ impl ElasticPpReport {
                                 ("redispatched", Json::Num(t.redispatched as f64)),
                                 ("remapped", Json::Num(t.remapped as f64)),
                                 ("drain_kept", Json::Num(t.drain_kept as f64)),
+                                ("oom_evicted", Json::Num(t.oom_evicted as f64)),
                                 ("demoted", Json::Num(t.demoted as f64)),
                                 ("epoch_ping", Json::Num(t.epochs[0] as f64)),
                                 ("epoch_pong", Json::Num(t.epochs[1] as f64)),
@@ -241,6 +267,12 @@ pub fn run_distca_pp_elastic(
     // `Slow` changes the actual rate; the pool (belief) only learns
     // through the health monitor.
     let mut actual_speed = vec![1.0f64; n];
+    // Wave-clock autoscaling (the ROADMAP follow-up, now wired): decide
+    // at the ping boundary of each tick from the previous tick's load
+    // signals; a shrink drains the victim out of this tick's plan and
+    // completes at tick end.
+    let mut scaler = cfg.autoscale.clone().map(Autoscaler::new);
+    let mut last_signals: Option<LoadSignals> = None;
 
     let mut per_tick: Vec<PpTick> = Vec::with_capacity(sched.tick_ops.len());
     let mut total_time = 0.0f64;
@@ -270,9 +302,48 @@ pub fn run_distca_pp_elastic(
                 _ => {}
             }
         }
-        let (mut kills, mut drains) = partition_kills_drains(&events_now, n);
+        let mid = partition_mid_tick(&events_now, n);
+        let mut kills = mid.kills;
+        let mut drains = mid.drains;
+        let mut ooms = mid.ooms;
         kills.retain(|&k| pool.is_schedulable(k));
         drains.retain(|&d| pool.is_schedulable(d));
+        ooms.retain(|&o| pool.is_schedulable(o));
+
+        // Autoscale on the wave clock at the ping boundary — before
+        // planning, so the decision shapes this tick's plan and can
+        // never invalidate an in-flight wave's epoch.
+        let mut scale_drained: Vec<usize> = Vec::new();
+        if let (Some(sc), Some(sig)) = (scaler.as_mut(), last_signals) {
+            let d = sc.decide_wave(
+                tick,
+                crate::coordinator::pingpong::Wave::Ping,
+                pool.n_schedulable(),
+                sig,
+            );
+            let touched = sc.apply(d, &mut pool);
+            sync_health(&pool, &mut health);
+            // A join past the base topology grows the ground truth too.
+            while actual_speed.len() < pool.capacity() {
+                actual_speed.push(1.0);
+            }
+            match d {
+                ScaleDecision::Grow(_) if !touched.is_empty() => {
+                    for &s in &touched {
+                        health.reset(s);
+                        actual_speed[s] = 1.0;
+                    }
+                    events.push(format!("scale:+{touched:?}"));
+                }
+                ScaleDecision::Shrink(_) if !touched.is_empty() => {
+                    // Shrink drains gracefully: out of this tick's plan,
+                    // gone at tick end.
+                    scale_drained = touched;
+                    events.push(format!("scale:-{scale_drained:?}"));
+                }
+                _ => {}
+            }
+        }
 
         // Health-driven demotion (belief). In this simulator the pool's
         // `Degraded` states are *only* ever produced here (scripted
@@ -328,13 +399,19 @@ pub fn run_distca_pp_elastic(
 
         let active = pp_tick_active(&groups, row, p.pp);
         if active.is_empty() {
-            // A pure warm-up/drain hole: membership events still apply.
+            // A pure warm-up/drain hole: membership events still apply
+            // (an OOM is not one — with no work dispatched, nothing can
+            // be evicted and the victim keeps its membership anyway).
             for &k in &kills {
                 pool.kill(k);
                 health.mark_dead(k);
             }
             for &d in &drains {
                 pool.drain(d);
+                pool.leave(d);
+                health.mark_dead(d);
+            }
+            for &d in &scale_drained {
                 pool.leave(d);
                 health.mark_dead(d);
             }
@@ -349,6 +426,7 @@ pub fn run_distca_pp_elastic(
                 redispatched: 0,
                 remapped: 0,
                 drain_kept: 0,
+                oom_evicted: 0,
                 demoted,
                 epochs: [epoch_ping, pool.epoch()],
                 tick_time: 0.0,
@@ -410,6 +488,7 @@ pub fn run_distca_pp_elastic(
         let killed_v: Vec<usize> = kills.iter().filter_map(|&k| view.to_virtual(k)).collect();
         let drained_v: Vec<usize> =
             drains.iter().filter_map(|&d| view.to_virtual(d)).collect();
+        let oomed_v: Vec<usize> = ooms.iter().filter_map(|&o| view.to_virtual(o)).collect();
         let mut eng = Engine::new(nv);
         for (v, &s) in speeds.iter().enumerate() {
             eng.set_speed(v, s);
@@ -434,6 +513,16 @@ pub fn run_distca_pp_elastic(
             eng.drain_resource(v, t_ev);
             drain_time_max = drain_time_max.max(t_ev);
         }
+        let mut oom_time_max = 0.0f64;
+        for &v in &oomed_v {
+            // Arena overflow: the remainder of the victim's ping queue
+            // is evicted (revoked) like a kill's — but the server
+            // survives the tick, so membership stays untouched below.
+            let span = ping_load[v] / speeds[v];
+            let t_ev = cfg.kill_phase_frac * span;
+            eng.revoke_resource(v, t_ev);
+            oom_time_max = oom_time_max.max(t_ev);
+        }
         eng.run();
         let ping_busy = eng.busy_per_resource();
         let lost_ids = eng.revoked();
@@ -453,8 +542,13 @@ pub fn run_distca_pp_elastic(
             }
         }
         let lost: Vec<usize> = lost_ids.iter().map(|&id| ping_task_of[id]).collect();
+        let oom_evicted = lost
+            .iter()
+            .filter(|&&ai| oomed_v.contains(&assign_to[ai]))
+            .count();
 
-        // --- The fault becomes membership fact between the waves. -------
+        // --- The fault becomes membership fact between the waves (an
+        // OOM never does: transient buffers only, the victim stays). ----
         for &k in &kills {
             pool.kill(k);
             health.mark_dead(k);
@@ -468,10 +562,12 @@ pub fn run_distca_pp_elastic(
         // recovery of the ping wave's losses. Survivors first finish
         // their ping occupancy (FIFO), then run pong, then absorb.
         let survivors: Vec<usize> = (0..nv).filter(|v| !killed_v.contains(v)).collect();
+        // Drainees finish started work only; OOM victims have no arena
+        // headroom left this tick — neither absorbs re-dispatched work.
         let rec_targets: Vec<usize> = survivors
             .iter()
             .copied()
-            .filter(|v| !drained_v.contains(v))
+            .filter(|v| !drained_v.contains(v) && !oomed_v.contains(v))
             .collect();
         anyhow::ensure!(!rec_targets.is_empty(), "tick {tick}: all servers died");
         let mut engb = Engine::new(nv);
@@ -512,6 +608,8 @@ pub fn run_distca_pp_elastic(
             let resend = bytes / bw;
             let at = if killed_v.contains(&assign_to[li]) {
                 detect_kill
+            } else if oomed_v.contains(&assign_to[li]) {
+                oom_time_max // synchronous eviction: no detection delay
             } else {
                 drain_time_max
             };
@@ -569,16 +667,28 @@ pub fn run_distca_pp_elastic(
         // Health observes normalized slowness (achieved over assigned
         // nominal work) for the next tick's verdicts.
         for &v in &survivors {
-            if engb_nominal[v] > 0.0 && !drained_v.contains(&v) {
+            // OOM victims lost half their nominal work to eviction — the
+            // skewed ratio would read as a false "fast" sample.
+            if engb_nominal[v] > 0.0 && !drained_v.contains(&v) && !oomed_v.contains(&v) {
                 health.observe(view.to_physical(v), engb_busy[v] / engb_nominal[v]);
             }
         }
 
-        // Drains complete at tick end.
+        // Drains — scripted and scale-driven — complete at tick end.
         for &d in &drains {
             pool.leave(d);
             health.mark_dead(d);
         }
+        for &d in &scale_drained {
+            pool.leave(d);
+            health.mark_dead(d);
+        }
+
+        // Signals for the next ping-boundary scaling decision.
+        last_signals = Some(LoadSignals {
+            queue_depth: plan.assignments.len() as f64 / nv as f64,
+            imbalance: plan.imbalance(),
+        });
 
         total_time += tick_time;
         fault_free_total += ff_tick;
@@ -594,6 +704,7 @@ pub fn run_distca_pp_elastic(
             redispatched,
             remapped,
             drain_kept,
+            oom_evicted,
             demoted,
             epochs: [epoch_ping, epoch_pong],
             tick_time,
@@ -810,6 +921,98 @@ mod tests {
             mitigated < unmitigated * 0.9,
             "demotion must mitigate: first ratio {unmitigated}, last {mitigated}"
         );
+    }
+
+    #[test]
+    fn elastic_pp_oom_evicts_but_pool_survives() {
+        let p = params(4, 2);
+        let docs = sample_docs(65536, 4 * 65536, 19);
+        let fault = FaultPlan::new().oom(1, 1);
+        let r =
+            run_distca_pp_elastic(&docs, 65536, &p, &fault, &Default::default()).unwrap();
+        let t1 = r.per_tick.iter().find(|t| t.tick == 1).unwrap();
+        assert_eq!(t1.redispatched, t1.lost_tasks);
+        assert_eq!(
+            t1.oom_evicted, t1.lost_tasks,
+            "every loss this tick is an eviction: {t1:?}"
+        );
+        assert_eq!(
+            t1.epochs[0], t1.epochs[1],
+            "an OOM must not bump the membership epoch: {t1:?}"
+        );
+        let t2 = r.per_tick.iter().find(|t| t.tick == 2).unwrap();
+        assert_eq!(t2.n_alive, t1.n_alive, "the OOM victim must survive the tick");
+        // Synchronous eviction costs no more than a kill on the same
+        // schedule (which pays detection and loses the pool slot).
+        let kill = run_distca_pp_elastic(
+            &docs,
+            65536,
+            &p,
+            &FaultPlan::new().kill(1, 1),
+            &Default::default(),
+        )
+        .unwrap();
+        assert!(
+            r.recovery_overhead() <= kill.recovery_overhead() + 1e-9,
+            "oom {} should cost no more than kill {}",
+            r.recovery_overhead(),
+            kill.recovery_overhead()
+        );
+    }
+
+    #[test]
+    fn elastic_pp_autoscale_restores_killed_capacity() {
+        let p = params(4, 2);
+        let docs = sample_docs(65536, 4 * 65536, 23);
+        let fault = FaultPlan::new().kill(1, 0);
+        let cfg = ElasticPpCfg {
+            autoscale: Some(crate::elastic::autoscale::AutoscaleCfg {
+                queue_high: 0.1, // any load is pressure: grow when possible
+                max_servers: 4,
+                cooldown_ticks: 1,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let r = run_distca_pp_elastic(&docs, 65536, &p, &fault, &cfg).unwrap();
+        assert!(
+            r.per_tick
+                .iter()
+                .any(|t| t.events.iter().any(|e| e.starts_with("scale:+"))),
+            "the autoscaler must restore the killed server: {:?}",
+            r.per_tick.iter().map(|t| &t.events).collect::<Vec<_>>()
+        );
+        let last = r.per_tick.iter().rev().find(|t| t.n_tasks > 0).unwrap();
+        assert_eq!(last.n_alive, 4, "restored capacity must be planned against");
+    }
+
+    #[test]
+    fn elastic_pp_autoscale_shrinks_idle_pool_gracefully() {
+        let p = params(4, 2);
+        let docs = sample_docs(65536, 4 * 65536, 27);
+        let cfg = ElasticPpCfg {
+            autoscale: Some(crate::elastic::autoscale::AutoscaleCfg {
+                min_servers: 2,
+                queue_high: f64::INFINITY, // pressure never fires
+                queue_low: 1e12,           // always idle: shrink to the floor
+                imbalance_high: f64::INFINITY,
+                cooldown_ticks: 1,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let r = run_distca_pp_elastic(&docs, 65536, &p, &FaultPlan::new(), &cfg).unwrap();
+        assert!(
+            r.per_tick
+                .iter()
+                .any(|t| t.events.iter().any(|e| e.starts_with("scale:-"))),
+            "the idle pool must shrink"
+        );
+        let last = r.per_tick.iter().rev().find(|t| t.n_tasks > 0).unwrap();
+        assert_eq!(last.n_alive, 2, "shrink must stop at min_servers");
+        // Scale-shrinks are pre-plan drains: nothing is ever lost to them.
+        assert_eq!(r.lost_tasks, 0);
+        assert_eq!(r.redispatched, 0);
     }
 
     #[test]

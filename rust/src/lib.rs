@@ -8,11 +8,17 @@
 //!   scheduler over token-level CA-tasks ([`coordinator`]), attention
 //!   servers ([`server`]), the elastic server pool — dynamic membership,
 //!   fault injection, straggler mitigation, autoscaling ([`elastic`]) —
-//!   ping-pong overlap, pipeline integration ([`parallel`]), a
-//!   discrete-event cluster simulator ([`sim`]) standing in for the
-//!   paper's 512×H200 testbed, the baselines it compares against
-//!   ([`baselines`]), and a PJRT runtime ([`runtime`]) that executes the
-//!   AOT-compiled JAX/Pallas artifacts on the real CPU backend.
+//!   the memory-disaggregated execution model ([`memplan`]: per-server
+//!   transient arenas with in-place CA buffers, the scheduler's hard
+//!   `mem_budget`, and `oom:` eviction-recovery — the §5 / Fig. 3b
+//!   "compute **and memory** balance" claim made byte-accurate and
+//!   fault-injectable), ping-pong overlap, pipeline integration
+//!   ([`parallel`]), a discrete-event cluster simulator ([`sim`])
+//!   standing in for the paper's 512×H200 testbed — with per-resource
+//!   live-byte tracking and OOM eviction in its engine — the baselines
+//!   it compares against ([`baselines`]), and a PJRT runtime
+//!   ([`runtime`]) that executes the AOT-compiled JAX/Pallas artifacts
+//!   on the real CPU backend.
 //!
 //! Fault tolerance rests on the paper's §3 observation that core
 //! attention is *stateless*: a CA-task is (Q, KV) → O with no trainable
@@ -20,7 +26,11 @@
 //! same bytes elsewhere, a straggler's tasks can be speculatively
 //! duplicated (first response wins, duplicates suppressed by the
 //! `(doc, q_start)` tag), and the pool can grow or shrink between ticks
-//! with the scheduler simply re-planning against live membership. Under
+//! with the scheduler simply re-planning against live membership.
+//! Statelessness also covers *memory* faults: a CA-task's buffers are
+//! transient (O overwrites Q in place, KV frees after the layer — §5,
+//! Fig. 3b), so an arena overflow (`oom:<srv>@<tick>`) evicts only
+//! re-sendable work and the victim rejoins within the same tick. Under
 //! pipeline parallelism this holds *mid-PP-tick*: each tick's two
 //! ping-pong nano-batch waves carry wave-scoped membership epochs, so a
 //! fault re-dispatches only the in-flight wave while the other wave
@@ -45,6 +55,7 @@ pub mod coordinator;
 pub mod data;
 pub mod elastic;
 pub mod exchange;
+pub mod memplan;
 pub mod metrics;
 pub mod model;
 pub mod parallel;

@@ -21,6 +21,7 @@ use distca::elastic::{
     ElasticCoordinator, ElasticPpCfg, ElasticSimCfg, ElasticTask, FaultPlan,
     ReferenceCaCompute,
 };
+use distca::memplan::MemReport;
 use distca::model::FlopsModel;
 use distca::runtime::ca_exec::synthetic_task;
 use distca::runtime::train::{MarkovCorpus, TrainDriver};
@@ -35,6 +36,7 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("simulate", "simulate one iteration under --strategy"),
     ("compare", "DistCA vs WLB-ideal on one configuration"),
     ("schedule", "run the scheduler on a sampled batch; print the plan"),
+    ("memory", "per-server transient-memory balance: DistCA in-place vs colocated"),
     ("elastic", "elastic server pool under a fault plan (sim or threaded; --pp for PP ticks)"),
     ("train", "train the tiny LM end-to-end via AOT artifacts"),
     ("bound", "Appendix A max-partition bound"),
@@ -69,7 +71,13 @@ fn specs() -> Vec<FlagSpec> {
             None,
         ),
         FlagSpec::value("fault-plan", "JSON fault-plan file (elastic)", None),
-        FlagSpec::boolean("autoscale", "enable pool autoscaling (elastic)"),
+        FlagSpec::value(
+            "mem-budget",
+            "per-server arena byte budget (schedule/memory; 0 = unconstrained, \
+             memory accepts `auto` = 1.25x the unconstrained peak)",
+            None,
+        ),
+        FlagSpec::boolean("autoscale", "enable pool autoscaling (elastic, incl. --pp sim)"),
         FlagSpec::boolean("json", "emit JSON instead of tables"),
         FlagSpec::boolean("verbose", "debug logging"),
     ]
@@ -92,6 +100,7 @@ fn main() {
         Some("simulate") => cmd_simulate(&args),
         Some("compare") => cmd_compare(&args),
         Some("schedule") => cmd_schedule(&args),
+        Some("memory") => cmd_memory(&args),
         Some("elastic") => cmd_elastic(&args),
         Some("train") => cmd_train(&args),
         Some("bound") => cmd_bound(&args),
@@ -229,12 +238,19 @@ fn cmd_schedule(args: &Args) -> anyhow::Result<()> {
     let items = items_from_chunks(&chunks);
     let f = FlopsModel::new(&s.model);
     let prof = Profiler::analytic(&f, &s.params.cluster);
+    let mem_budget = args.get_f64("mem-budget", 0.0)?;
     let t0 = std::time::Instant::now();
     let plan = schedule(
         &items, n, &f, &prof, &s.model,
-        &SchedulerCfg { tolerance: s.params.tolerance, ..Default::default() },
+        &SchedulerCfg { tolerance: s.params.tolerance, mem_budget, ..Default::default() },
     );
     let dt = t0.elapsed();
+    let mem = MemReport::for_plan(&plan, &s.model, mem_budget).map_err(|e| {
+        anyhow::anyhow!(
+            "--mem-budget {mem_budget} is infeasible for this batch \
+             (best-effort plan still overflows: {e}); raise the budget"
+        )
+    })?;
     if args.get_bool("json") {
         let servers: Vec<Json> = (0..n)
             .map(|srv| {
@@ -256,6 +272,7 @@ fn cmd_schedule(args: &Args) -> anyhow::Result<()> {
             ("total_comm_bytes", Json::Num(plan.total_comm_bytes())),
             ("local_fraction", Json::Num(plan.local_fraction())),
             ("schedule_time_s", Json::Num(dt.as_secs_f64())),
+            ("transient_mem", mem.to_json()),
             ("servers", Json::Arr(servers)),
         ]);
         println!("{}", j.to_string_pretty());
@@ -279,7 +296,117 @@ fn cmd_schedule(args: &Args) -> anyhow::Result<()> {
             bytes(plan.total_comm_bytes()),
             plan.local_fraction() * 100.0
         );
+        println!(
+            "arena peak {} max / {} mean (ratio {:.3}){}",
+            bytes(mem.max_peak()),
+            bytes(mem.mean_peak()),
+            mem.max_mean_ratio(),
+            if mem_budget > 0.0 {
+                let verdict = if mem.within_budget() { "ok" } else { "EXCEEDED" };
+                format!(" | budget {} — {verdict}", bytes(mem_budget))
+            } else {
+                String::new()
+            }
+        );
     }
+    Ok(())
+}
+
+/// `distca memory` — the §5 / Fig. 3b claim, measured: per-server
+/// transient arena bytes of DistCA's balanced in-place execution vs the
+/// colocated baseline (compute-balanced whole-document placement, whose
+/// bytes inherit the token skew — Fig. 1's dilemma), optionally under a
+/// hard `--mem-budget` (explicit bytes or `auto` = 1.25× the
+/// unconstrained peak).
+fn cmd_memory(args: &Args) -> anyhow::Result<()> {
+    let s = setup(args)?;
+    let n = s.params.n_logical();
+    let mut rng = Rng::new(s.seed);
+    let docs = sampler_for(s.data, s.max_doc).sample_tokens(&mut rng, s.tokens, 0);
+    let chunks = distca_placement(&docs, n);
+    let items = items_from_chunks(&chunks);
+    let f = FlopsModel::new(&s.model);
+    let prof = Profiler::analytic(&f, &s.params.cluster);
+
+    // The unconstrained plan sets the "free" balance and the auto budget.
+    let base_cfg = SchedulerCfg { tolerance: s.params.tolerance, ..Default::default() };
+    let unconstrained = schedule(&items, n, &f, &prof, &s.model, &base_cfg);
+    let free_mem = MemReport::for_plan(&unconstrained, &s.model, 0.0)
+        .expect("unbounded replay cannot OOM");
+
+    let budget = match args.get("mem-budget") {
+        None => 0.0,
+        Some("auto") => 1.25 * free_mem.max_peak(),
+        Some(v) => v
+            .parse::<f64>()
+            .map_err(|_| anyhow::anyhow!("--mem-budget: expected bytes or `auto`, got `{v}`"))?,
+    };
+    let (plan, mem) = if budget > 0.0 {
+        let cfg = SchedulerCfg { mem_budget: budget, ..base_cfg };
+        let plan = schedule(&items, n, &f, &prof, &s.model, &cfg);
+        let mem = MemReport::for_plan(&plan, &s.model, budget).map_err(|e| {
+            anyhow::anyhow!(
+                "--mem-budget {budget} is infeasible for this batch \
+                 (best-effort plan still overflows: {e}); raise the budget"
+            )
+        })?;
+        (plan, mem)
+    } else {
+        (unconstrained, free_mem.clone())
+    };
+    let colocated = MemReport::colocated(&items, n, &s.model);
+
+    if args.get_bool("json") {
+        let j = Json::obj(vec![
+            ("n_servers", Json::Num(n as f64)),
+            ("budget_bytes", Json::Num(budget)),
+            ("compute_imbalance", Json::Num(plan.imbalance())),
+            ("distca_in_place", mem.to_json()),
+            ("colocated_baseline", colocated.to_json()),
+            (
+                "ratio_improvement",
+                Json::Num(colocated.max_mean_ratio() / mem.max_mean_ratio()),
+            ),
+        ]);
+        println!("{}", j.to_string_pretty());
+        return Ok(());
+    }
+    let mut t = Table::new(
+        &format!(
+            "transient memory: {} items -> {n} servers ({}, maxdoc {}K)",
+            items.len(),
+            s.data.name(),
+            s.max_doc / 1024
+        ),
+        &["server", "DistCA in-place", "vs mean", "colocated", "vs mean"],
+    );
+    for srv in 0..n {
+        let d = mem.per_server_peak[srv];
+        let c = colocated.per_server_peak[srv];
+        t.row(&[
+            srv.to_string(),
+            bytes(d),
+            format!("{:+.1}%", (d / mem.mean_peak().max(1.0) - 1.0) * 100.0),
+            bytes(c),
+            format!("{:+.1}%", (c / colocated.mean_peak().max(1.0) - 1.0) * 100.0),
+        ]);
+    }
+    t.print();
+    println!(
+        "max/mean ratio: DistCA {:.3} vs colocated {:.3} | compute imbalance {:.3}{}",
+        mem.max_mean_ratio(),
+        colocated.max_mean_ratio(),
+        plan.imbalance(),
+        if budget > 0.0 {
+            format!(
+                " | budget {} — {}",
+                bytes(budget),
+                if mem.within_budget() { "ok" } else { "EXCEEDED" }
+            )
+        } else {
+            String::new()
+        }
+    );
     Ok(())
 }
 
@@ -379,10 +506,6 @@ fn cmd_elastic_pp_sim(args: &Args, s: &Setup) -> anyhow::Result<()> {
         args.get("ticks").is_none(),
         "--ticks does not apply to --pp sim (the schedule runs 2(m + pp - 1) PP ticks)"
     );
-    anyhow::ensure!(
-        !args.get_bool("autoscale"),
-        "--autoscale is not yet wired into the PP sim (see ROADMAP follow-ups)"
-    );
     let n = params.n_logical();
     let mut rng = Rng::new(s.seed);
     let docs = sampler_for(s.data, s.max_doc).sample_tokens(&mut rng, s.tokens, 0);
@@ -390,8 +513,16 @@ fn cmd_elastic_pp_sim(args: &Args, s: &Setup) -> anyhow::Result<()> {
     let pp_ticks = pp_tick_horizon(&docs, s.max_doc, &params);
     let fault = fault_plan_from(args, n, pp_ticks, s.seed)?;
     ensure_fault_in_scope(&fault, n, pp_ticks)?;
-    let report =
-        run_distca_pp_elastic(&docs, s.max_doc, &params, &fault, &ElasticPpCfg::default())?;
+    // Autoscaling runs on the wave clock at ping boundaries; capacity is
+    // capped at the physical topology, so growth restores dead servers
+    // rather than minting devices the cluster does not have.
+    let cfg = ElasticPpCfg {
+        autoscale: args
+            .get_bool("autoscale")
+            .then(|| AutoscaleCfg { max_servers: n, ..Default::default() }),
+        ..Default::default()
+    };
+    let report = run_distca_pp_elastic(&docs, s.max_doc, &params, &fault, &cfg)?;
     if args.get_bool("json") {
         println!("{}", report.to_json().to_string_pretty());
         return Ok(());
@@ -405,8 +536,8 @@ fn cmd_elastic_pp_sim(args: &Args, s: &Setup) -> anyhow::Result<()> {
             if fault.is_empty() { "none".to_string() } else { fault.to_spec() }
         ),
         &[
-            "tick", "ph", "alive", "tasks", "lost", "redisp", "remap", "kept", "demoted",
-            "epochs", "tick time", "fault-free", "events",
+            "tick", "ph", "alive", "tasks", "lost", "redisp", "remap", "kept", "oom",
+            "demoted", "epochs", "tick time", "fault-free", "events",
         ],
     );
     for r in &report.per_tick {
@@ -422,6 +553,7 @@ fn cmd_elastic_pp_sim(args: &Args, s: &Setup) -> anyhow::Result<()> {
             r.redispatched.to_string(),
             r.remapped.to_string(),
             r.drain_kept.to_string(),
+            r.oom_evicted.to_string(),
             r.demoted.to_string(),
             format!("{}/{}", r.epochs[0], r.epochs[1]),
             secs(r.tick_time),

@@ -1,0 +1,355 @@
+//! Per-server transient-buffer arena (§5, Fig. 3b).
+//!
+//! An attention server's working set during one tick is purely
+//! *transient*: the dispatched Q and KV shards of its CA-tasks, and the
+//! O outputs it returns. [`Arena`] models that working set byte-for-byte
+//! as a first-fit region allocator over a virtual address space bounded
+//! by a hard `budget`:
+//!
+//! * every allocation is an explicit `[offset, offset+len)` region, so
+//!   "no two live buffers alias" is a checkable invariant, not an
+//!   assumption ([`Arena::check_no_alias`]);
+//! * [`Arena::write_in_place`] is the in-place execution primitive:
+//!   O overwrites Q's slot (O is Q-shaped), so producing the output
+//!   costs zero additional bytes — the mechanism behind DistCA's
+//!   "memory-neutral" attention servers;
+//! * an allocation that cannot fit under `budget` fails with
+//!   [`OomError`] — the signal the failover layer turns into an
+//!   `oom:<srv>@<tick>` eviction and a re-dispatch to a server with
+//!   headroom (statelessness makes that a single resend, §3).
+//!
+//! Peak tracking ([`Arena::peak_bytes`]) is what the scheduler's
+//! `mem_budget` constraint and the `MemReport` summaries are asserted
+//! against: an accepted plan must replay through per-server arenas
+//! without ever tripping the budget.
+
+use std::fmt;
+
+/// Handle to one live allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlotId(usize);
+
+/// Allocation failure: the request cannot fit under the byte budget.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OomError {
+    pub requested: u64,
+    pub live: u64,
+    pub budget: u64,
+}
+
+impl fmt::Display for OomError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "arena OOM: {} bytes requested with {} live of {} budget",
+            self.requested, self.live, self.budget
+        )
+    }
+}
+
+impl std::error::Error for OomError {}
+
+#[derive(Debug, Clone, Copy)]
+struct Region {
+    off: u64,
+    len: u64,
+}
+
+/// First-fit region allocator with a hard byte budget and peak tracking.
+#[derive(Debug, Clone)]
+pub struct Arena {
+    budget: u64,
+    /// Slot table: `None` entries are freed slots (ids are never reused,
+    /// so a double free is detectable).
+    slots: Vec<Option<Region>>,
+    live_bytes: u64,
+    peak_bytes: u64,
+    allocs: u64,
+    frees: u64,
+}
+
+impl Arena {
+    /// An arena with a hard byte `budget` (> 0).
+    pub fn new(budget: u64) -> Arena {
+        assert!(budget > 0, "arena budget must be positive");
+        Arena {
+            budget,
+            slots: Vec::new(),
+            live_bytes: 0,
+            peak_bytes: 0,
+            allocs: 0,
+            frees: 0,
+        }
+    }
+
+    /// An arena with no effective budget (peak tracking only).
+    pub fn unbounded() -> Arena {
+        Arena::new(u64::MAX)
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    pub fn live_bytes(&self) -> u64 {
+        self.live_bytes
+    }
+
+    /// High-water mark of live bytes over the arena's lifetime.
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak_bytes
+    }
+
+    pub fn n_live(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn n_allocs(&self) -> u64 {
+        self.allocs
+    }
+
+    pub fn n_frees(&self) -> u64 {
+        self.frees
+    }
+
+    /// Live regions sorted by offset.
+    fn live_regions(&self) -> Vec<Region> {
+        let mut rs: Vec<Region> = self.slots.iter().flatten().copied().collect();
+        rs.sort_by_key(|r| r.off);
+        rs
+    }
+
+    /// Allocate `len` bytes (first fit). Fails — leaving the arena
+    /// untouched — when no gap under `budget` can hold the request.
+    pub fn alloc(&mut self, len: u64) -> Result<SlotId, OomError> {
+        assert!(len > 0, "zero-length allocation");
+        let oom = OomError {
+            requested: len,
+            live: self.live_bytes,
+            budget: self.budget,
+        };
+        if self.live_bytes.saturating_add(len) > self.budget {
+            return Err(oom);
+        }
+        // First fit over the gaps between live regions.
+        let mut cursor = 0u64;
+        let mut off = None;
+        for r in self.live_regions() {
+            if r.off - cursor >= len {
+                off = Some(cursor);
+                break;
+            }
+            cursor = r.off + r.len;
+        }
+        let off = match off {
+            Some(o) => o,
+            None => {
+                // Tail gap. live+len <= budget does not guarantee the
+                // tail fits (fragmentation), so re-check.
+                if self.budget.saturating_sub(cursor) < len {
+                    return Err(oom);
+                }
+                cursor
+            }
+        };
+        self.slots.push(Some(Region { off, len }));
+        self.live_bytes += len;
+        self.peak_bytes = self.peak_bytes.max(self.live_bytes);
+        self.allocs += 1;
+        Ok(SlotId(self.slots.len() - 1))
+    }
+
+    /// Release a slot; panics on a double free or an unknown slot.
+    pub fn free(&mut self, slot: SlotId) {
+        let r = self.slots[slot.0]
+            .take()
+            .unwrap_or_else(|| panic!("double free of arena slot {}", slot.0));
+        self.live_bytes -= r.len;
+        self.frees += 1;
+    }
+
+    /// Bytes held by a live slot.
+    pub fn slot_len(&self, slot: SlotId) -> u64 {
+        self.slots[slot.0].expect("slot_len of freed slot").len
+    }
+
+    /// In-place overwrite: reuse `slot`'s region for a value of
+    /// `new_len ≤ len(slot)` bytes (O overwrites Q's slot — O is
+    /// Q-shaped, so equality is the common case). Shrinks the region when
+    /// strictly smaller; never allocates, never moves, never fails.
+    /// Returns the same slot id, now holding the new value.
+    pub fn write_in_place(&mut self, slot: SlotId, new_len: u64) -> SlotId {
+        assert!(new_len > 0, "zero-length in-place write");
+        let r = self.slots[slot.0]
+            .as_mut()
+            .expect("in-place write to a freed slot");
+        assert!(
+            new_len <= r.len,
+            "in-place write of {new_len} bytes into a {}-byte slot",
+            r.len
+        );
+        self.live_bytes -= r.len - new_len;
+        r.len = new_len;
+        slot
+    }
+
+    /// Verify no two live regions overlap (the in-place/no-alias
+    /// invariant). Disjointness holds by construction; this is the
+    /// property-test oracle that proves it.
+    pub fn check_no_alias(&self) -> Result<(), String> {
+        let rs = self.live_regions();
+        for w in rs.windows(2) {
+            if w[0].off + w[0].len > w[1].off {
+                return Err(format!(
+                    "live regions alias: [{}, {}) overlaps [{}, {})",
+                    w[0].off,
+                    w[0].off + w[0].len,
+                    w[1].off,
+                    w[1].off + w[1].len
+                ));
+            }
+        }
+        if let Some(last) = rs.last() {
+            if last.off + last.len > self.budget {
+                return Err(format!(
+                    "live region [{}, {}) exceeds the {}-byte budget",
+                    last.off,
+                    last.off + last.len,
+                    self.budget
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// End-of-tick check: every allocation freed, nothing leaks into the
+    /// next tick. Peak and counters survive for reporting.
+    pub fn check_drained(&self) -> Result<(), String> {
+        if self.live_bytes != 0 || self.n_live() != 0 {
+            return Err(format!(
+                "arena leaked across tick end: {} bytes in {} live slots",
+                self.live_bytes,
+                self.n_live()
+            ));
+        }
+        if self.allocs != self.frees {
+            return Err(format!(
+                "alloc/free mismatch: {} allocs vs {} frees",
+                self.allocs, self.frees
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut a = Arena::new(100);
+        let s = a.alloc(40).unwrap();
+        assert_eq!(a.live_bytes(), 40);
+        assert_eq!(a.peak_bytes(), 40);
+        a.free(s);
+        assert_eq!(a.live_bytes(), 0);
+        assert_eq!(a.peak_bytes(), 40, "peak survives frees");
+        a.check_drained().unwrap();
+    }
+
+    #[test]
+    fn budget_is_hard() {
+        let mut a = Arena::new(100);
+        let _q = a.alloc(60).unwrap();
+        let err = a.alloc(50).unwrap_err();
+        assert_eq!(err.requested, 50);
+        assert_eq!(err.live, 60);
+        assert_eq!(err.budget, 100);
+        // The failed alloc left the arena untouched.
+        assert_eq!(a.live_bytes(), 60);
+        assert_eq!(a.n_live(), 1);
+        assert!(a.alloc(40).is_ok(), "an exact fit must succeed");
+    }
+
+    #[test]
+    fn first_fit_reuses_gaps() {
+        let mut a = Arena::new(100);
+        let s0 = a.alloc(30).unwrap();
+        let _s1 = a.alloc(30).unwrap();
+        a.free(s0);
+        // The freed [0, 30) gap is reused before the tail.
+        let _s2 = a.alloc(20).unwrap();
+        assert_eq!(a.live_bytes(), 50);
+        assert_eq!(a.peak_bytes(), 60);
+        a.check_no_alias().unwrap();
+    }
+
+    #[test]
+    fn in_place_write_adds_no_bytes() {
+        let mut a = Arena::new(100);
+        let q = a.alloc(40).unwrap();
+        let _kv = a.alloc(50).unwrap();
+        let peak = a.peak_bytes();
+        // O overwrites Q: same slot, zero new bytes.
+        let o = a.write_in_place(q, 40);
+        assert_eq!(o, q);
+        assert_eq!(a.peak_bytes(), peak, "in-place reuse must not move the peak");
+        assert_eq!(a.live_bytes(), 90);
+        a.check_no_alias().unwrap();
+    }
+
+    #[test]
+    fn in_place_shrink_releases_tail() {
+        let mut a = Arena::new(100);
+        let q = a.alloc(40).unwrap();
+        a.write_in_place(q, 10);
+        assert_eq!(a.live_bytes(), 10);
+        assert_eq!(a.slot_len(q), 10);
+        // The released tail is allocatable again.
+        assert!(a.alloc(90).is_ok());
+    }
+
+    #[test]
+    #[should_panic]
+    fn double_free_panics() {
+        let mut a = Arena::new(10);
+        let s = a.alloc(5).unwrap();
+        a.free(s);
+        a.free(s);
+    }
+
+    #[test]
+    fn fragmentation_can_oom_below_budget() {
+        // live + len <= budget is necessary, not sufficient: with regions
+        // at [0,10), [20,80) of a 100-byte arena (70 live), a 25-byte
+        // request fits the total free space (30) but no contiguous gap
+        // (10 mid + 20 tail) — it must fail cleanly.
+        let mut a = Arena::new(100);
+        let _s0 = a.alloc(10).unwrap();
+        let s1 = a.alloc(10).unwrap();
+        let _s2 = a.alloc(60).unwrap();
+        a.free(s1);
+        assert_eq!(a.live_bytes(), 70);
+        assert!(a.alloc(25).is_err(), "no contiguous gap holds 25 bytes");
+        assert!(a.alloc(20).is_ok(), "the tail gap holds 20");
+        assert!(a.alloc(10).is_ok(), "the mid gap holds 10");
+        a.check_no_alias().unwrap();
+    }
+
+    #[test]
+    fn drained_check_catches_leaks() {
+        let mut a = Arena::new(10);
+        let _s = a.alloc(5).unwrap();
+        assert!(a.check_drained().is_err());
+    }
+
+    #[test]
+    fn unbounded_tracks_peak_only() {
+        let mut a = Arena::unbounded();
+        let s = a.alloc(1 << 40).unwrap();
+        a.free(s);
+        assert_eq!(a.peak_bytes(), 1 << 40);
+        a.check_drained().unwrap();
+    }
+}

@@ -1,0 +1,36 @@
+//! Memory-disaggregated execution: byte-accurate transient-memory
+//! modeling, in-place CA buffers, and memory-aware planning (§5,
+//! Fig. 3b).
+//!
+//! The paper's claim is not just compute balance but "near-perfect
+//! compute **and memory** balance": in-place execution on attention
+//! servers keeps a CA-task's transient footprint at Q+KV (O overwrites
+//! Q's slot), and the §4.2 scheduler spreads those bytes with the FLOPs.
+//! This subsystem makes that claim measurable and fault-injectable:
+//!
+//! * [`arena`] — [`arena::Arena`]: a first-fit region allocator with a
+//!   hard per-server byte budget, in-place overwrite
+//!   ([`arena::Arena::write_in_place`]), peak tracking, and checkable
+//!   no-alias / no-leak invariants. Allocation failure is an
+//!   [`arena::OomError`] — the event the elastic layer scripts as
+//!   `oom:<srv>@<tick>` and recovers from by re-dispatch (§3
+//!   statelessness: an evicted CA-task is one resend);
+//! * [`model`] — [`model::TaskBytes`] / [`model::item_arena_bytes`]:
+//!   the Q/KV/O byte model shared by the scheduler's `mem_budget`
+//!   constraint, and [`model::MemReport`]: per-server peak transient
+//!   bytes with max/mean balance ratios, produced by replaying a
+//!   [`crate::coordinator::plan::Plan`] through per-server arenas
+//!   (in-place) or the colocated home-placement baseline
+//!   (out-of-place, unbalanced).
+//!
+//! Consumers: `SchedulerCfg::mem_budget` (plans feasible in bytes as
+//! well as balanced in FLOPs), `sim::engine` per-resource live-byte
+//! tracking with OOM eviction, `elastic` `oom:` fault recovery across
+//! every execution path, the `distca memory` CLI subcommand, and
+//! `benches/bench_memory_balance.rs` (`BENCH_memory.json`).
+
+pub mod arena;
+pub mod model;
+
+pub use arena::{Arena, OomError, SlotId};
+pub use model::{item_arena_bytes, replay_server_tick, MemReport, TaskBytes};

@@ -1,0 +1,337 @@
+//! Byte-accurate accounting of a plan's transient memory (§5, Fig. 3b).
+//!
+//! A CA-task dispatched to an attention server occupies `q_len` tokens
+//! of Q plus `kv_len` tokens of KV for the duration of the tick, and
+//! produces a Q-shaped O. Replaying a [`Plan`]'s per-server task lists
+//! through an [`Arena`] yields each server's *peak transient bytes* —
+//! the quantity the paper balances alongside FLOPs ("near-perfect
+//! compute and memory balance", Fig. 3b):
+//!
+//! * **in-place** (DistCA's attention servers): all of the tick's
+//!   dispatched Q/KV shards are resident, compute runs task-at-a-time,
+//!   O overwrites Q's slot ([`Arena::write_in_place`]), KV frees after
+//!   the task, O frees at gather. Peak = Σ(Q+KV).
+//! * **out-of-place** (the colocated baseline): O is a fresh
+//!   allocation, so the first task's compute tops out at Σ(Q+KV)+Q₁ —
+//!   and, more importantly, *nothing balances the per-server totals*,
+//!   so the max/mean ratio across servers is the raw data skew.
+//!
+//! [`MemReport`] summarizes the per-server peaks (max, mean, max/mean
+//! ratio, budget feasibility) for the scheduler, the simulators, the
+//! `distca memory` CLI, and `benches/bench_memory_balance.rs`.
+
+use crate::config::ModelConfig;
+use crate::coordinator::plan::Plan;
+use crate::coordinator::Item;
+use crate::util::json::Json;
+
+use super::arena::{Arena, OomError};
+
+/// Q and KV bytes of one CA-task shape (O is Q-shaped).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TaskBytes {
+    pub q: u64,
+    pub kv: u64,
+}
+
+impl TaskBytes {
+    /// Bytes of a `(q_len, kv_len)` CA-task under `m`'s dtype/heads.
+    pub fn of(q_len: usize, kv_len: usize, m: &ModelConfig) -> TaskBytes {
+        TaskBytes {
+            q: (q_len * m.q_bytes_per_token()) as u64,
+            kv: (kv_len * m.kv_bytes_per_token()) as u64,
+        }
+    }
+
+    /// Transient footprint under in-place execution: Q + KV (O reuses
+    /// Q's slot, costing zero additional bytes).
+    pub fn in_place(&self) -> u64 {
+        self.q + self.kv
+    }
+}
+
+/// Arena bytes an [`Item`] occupies on its server under in-place
+/// execution: the Q + KV of every CA-task it expands to. This is the
+/// per-item quantity the §4.2 scheduler's `mem_budget` constraint sums.
+pub fn item_arena_bytes(it: &Item, m: &ModelConfig) -> f64 {
+    it.ca_tasks()
+        .iter()
+        .map(|t| TaskBytes::of(t.q_len, t.kv_len, m).in_place() as f64)
+        .sum()
+}
+
+/// Replay one server's tick through an arena: dispatch all (Q, KV)
+/// pairs, compute task-at-a-time (in-place O or a fresh O slot), free KV
+/// after each task and O at gather. Returns the arena for peak/leak
+/// inspection; fails with [`OomError`] the moment the budget would be
+/// exceeded — exactly when a real server would evict.
+pub fn replay_server_tick(
+    shapes: &[(usize, usize)],
+    m: &ModelConfig,
+    budget: u64,
+    in_place: bool,
+) -> Result<Arena, OomError> {
+    let mut arena = if budget == 0 { Arena::unbounded() } else { Arena::new(budget) };
+    let mut q_slots = Vec::with_capacity(shapes.len());
+    let mut kv_slots = Vec::with_capacity(shapes.len());
+    for &(q_len, kv_len) in shapes {
+        let b = TaskBytes::of(q_len, kv_len, m);
+        q_slots.push(arena.alloc(b.q)?);
+        kv_slots.push(arena.alloc(b.kv)?);
+    }
+    let mut o_slots = Vec::with_capacity(shapes.len());
+    for (i, &(q_len, _)) in shapes.iter().enumerate() {
+        let o_bytes = TaskBytes::of(q_len, 0, m).q;
+        let o = if in_place {
+            // O overwrites Q's slot: zero new bytes.
+            arena.write_in_place(q_slots[i], o_bytes)
+        } else {
+            // Out-of-place: fresh O, then the consumed Q frees.
+            let o = arena.alloc(o_bytes)?;
+            arena.free(q_slots[i]);
+            o
+        };
+        arena.free(kv_slots[i]);
+        o_slots.push(o);
+    }
+    for o in o_slots {
+        arena.free(o); // gather: O returned to its home rank
+    }
+    debug_assert!(arena.check_drained().is_ok(), "tick replay leaked");
+    arena
+        .check_no_alias()
+        .unwrap_or_else(|e| unreachable!("arena invariant broken: {e}"));
+    Ok(arena)
+}
+
+/// Per-server peak transient bytes of one plan/tick plus the budget it
+/// was planned under — the §5 memory-balance summary.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MemReport {
+    /// Peak arena bytes per server.
+    pub per_server_peak: Vec<f64>,
+    /// Budget the plan was constrained to (0 = unconstrained).
+    pub budget: f64,
+}
+
+impl MemReport {
+    /// Replay `plan` through per-server arenas (in-place) and collect
+    /// peaks. `budget = 0` disables the hard limit (peaks only).
+    pub fn for_plan(plan: &Plan, m: &ModelConfig, budget: f64) -> Result<MemReport, OomError> {
+        let mut shapes: Vec<Vec<(usize, usize)>> = vec![Vec::new(); plan.n_servers];
+        for a in &plan.assignments {
+            for t in a.item.ca_tasks() {
+                shapes[a.server].push((t.q_len, t.kv_len));
+            }
+        }
+        let mut peaks = Vec::with_capacity(plan.n_servers);
+        for list in &shapes {
+            let arena = replay_server_tick(list, m, budget as u64, true)?;
+            peaks.push(arena.peak_bytes() as f64);
+        }
+        Ok(MemReport { per_server_peak: peaks, budget })
+    }
+
+    /// The colocated baseline: compute-balanced *whole-item* placement
+    /// (Fig. 1's dilemma). Without CA disaggregation, balancing compute
+    /// means moving entire documents — and a document's tokens, Q/KV
+    /// buffers, and outputs move with it, so the byte distribution
+    /// inherits the token skew the FLOPs balance creates. Items are
+    /// placed LPT-style by causal-pair count onto the least-loaded
+    /// server, then replayed out-of-place (no in-place attention
+    /// servers) on unbounded arenas — the baseline has no eviction
+    /// story.
+    pub fn colocated(items: &[Item], n_servers: usize, m: &ModelConfig) -> MemReport {
+        assert!(n_servers > 0);
+        let pairs = |it: &Item| -> f64 {
+            it.ca_tasks()
+                .iter()
+                .map(|t| t.q_len as f64 * t.kv_len as f64)
+                .sum()
+        };
+        let mut order: Vec<usize> = (0..items.len()).collect();
+        order.sort_by(|&a, &b| {
+            pairs(&items[b])
+                .partial_cmp(&pairs(&items[a]))
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        let mut load = vec![0.0f64; n_servers];
+        let mut shapes: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n_servers];
+        for i in order {
+            let dst = (0..n_servers)
+                .min_by(|&a, &b| load[a].partial_cmp(&load[b]).unwrap())
+                .unwrap();
+            load[dst] += pairs(&items[i]);
+            for t in items[i].ca_tasks() {
+                shapes[dst].push((t.q_len, t.kv_len));
+            }
+        }
+        let peaks = shapes
+            .iter()
+            .map(|list| {
+                replay_server_tick(list, m, 0, false)
+                    .expect("unbounded replay cannot OOM")
+                    .peak_bytes() as f64
+            })
+            .collect();
+        MemReport { per_server_peak: peaks, budget: 0.0 }
+    }
+
+    /// Build from already-known per-server peaks (the exec flavor).
+    pub fn from_peaks(per_server_peak: Vec<f64>, budget: f64) -> MemReport {
+        MemReport { per_server_peak, budget }
+    }
+
+    pub fn max_peak(&self) -> f64 {
+        crate::util::stats::max(&self.per_server_peak)
+    }
+
+    pub fn mean_peak(&self) -> f64 {
+        crate::util::stats::mean(&self.per_server_peak)
+    }
+
+    /// Max/mean balance ratio (1.0 = perfect memory balance; the Fig. 3b
+    /// claim is that DistCA keeps this near 1 where baselines diverge).
+    pub fn max_mean_ratio(&self) -> f64 {
+        crate::util::stats::imbalance_ratio(&self.per_server_peak)
+    }
+
+    /// Does every server's peak respect the budget? Vacuously true when
+    /// unconstrained.
+    pub fn within_budget(&self) -> bool {
+        self.budget <= 0.0 || self.per_server_peak.iter().all(|&p| p <= self.budget)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("max_peak_bytes", Json::Num(self.max_peak())),
+            ("mean_peak_bytes", Json::Num(self.mean_peak())),
+            ("max_mean_ratio", Json::Num(self.max_mean_ratio())),
+            ("budget_bytes", Json::Num(self.budget)),
+            ("within_budget", Json::Bool(self.within_budget())),
+            (
+                "per_server_peak_bytes",
+                Json::Arr(self.per_server_peak.iter().map(|&p| Json::Num(p)).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::coordinator::plan::Assignment;
+
+    fn m8() -> ModelConfig {
+        ModelConfig::llama3_8b()
+    }
+
+    #[test]
+    fn task_bytes_match_model_config() {
+        let m = m8();
+        let b = TaskBytes::of(100, 200, &m);
+        assert_eq!(b.q, (100 * m.q_bytes_per_token()) as u64);
+        assert_eq!(b.kv, (200 * m.kv_bytes_per_token()) as u64);
+        assert_eq!(b.in_place(), b.q + b.kv);
+    }
+
+    #[test]
+    fn item_arena_bytes_sums_ca_tasks() {
+        let m = m8();
+        let it = Item::whole_doc(0, 4096, 0);
+        // Whole doc = one task (q=kv=4096).
+        let expect = (4096 * (m.q_bytes_per_token() + m.kv_bytes_per_token())) as f64;
+        assert_eq!(item_arena_bytes(&it, &m), expect);
+        // A split pair's bytes exceed the whole doc's (KV duplication).
+        let (a, b) = it.split_at(1024);
+        assert!(item_arena_bytes(&a, &m) + item_arena_bytes(&b, &m) > expect);
+    }
+
+    #[test]
+    fn in_place_peak_is_sum_of_inputs() {
+        let m = m8();
+        let shapes = vec![(256, 256), (512, 1024)];
+        let expect: u64 = shapes
+            .iter()
+            .map(|&(q, kv)| TaskBytes::of(q, kv, &m).in_place())
+            .sum();
+        let arena = replay_server_tick(&shapes, &m, 0, true).unwrap();
+        assert_eq!(arena.peak_bytes(), expect);
+        arena.check_drained().unwrap();
+    }
+
+    #[test]
+    fn out_of_place_peaks_strictly_higher() {
+        let m = m8();
+        let shapes = vec![(256, 256), (512, 1024)];
+        let inp = replay_server_tick(&shapes, &m, 0, true).unwrap().peak_bytes();
+        let outp = replay_server_tick(&shapes, &m, 0, false).unwrap().peak_bytes();
+        assert!(outp > inp, "out-of-place {outp} must exceed in-place {inp}");
+    }
+
+    #[test]
+    fn replay_respects_budget() {
+        let m = m8();
+        let shapes = vec![(256, 256), (256, 256)];
+        let need: u64 = shapes
+            .iter()
+            .map(|&(q, kv)| TaskBytes::of(q, kv, &m).in_place())
+            .sum();
+        assert!(replay_server_tick(&shapes, &m, need, true).is_ok());
+        assert!(replay_server_tick(&shapes, &m, need - 1, true).is_err());
+    }
+
+    #[test]
+    fn mem_report_for_plan_and_ratio() {
+        let m = m8();
+        let items = vec![Item::whole_doc(0, 8192, 0), Item::whole_doc(1, 8192, 1)];
+        let plan = Plan {
+            n_servers: 2,
+            assignments: items
+                .iter()
+                .map(|&item| Assignment { item, server: item.home })
+                .collect(),
+            server_load: vec![1.0, 1.0],
+            target_load: 1.0,
+            comm_matrix: vec![],
+            return_matrix: vec![],
+        };
+        let rep = MemReport::for_plan(&plan, &m, 0.0).unwrap();
+        assert_eq!(rep.per_server_peak.len(), 2);
+        assert!((rep.max_mean_ratio() - 1.0).abs() < 1e-12, "equal docs balance exactly");
+        assert!(rep.within_budget());
+        let j = rep.to_json();
+        assert!(j.get("max_mean_ratio").is_some());
+        assert!(j.get("per_server_peak_bytes").is_some());
+    }
+
+    #[test]
+    fn colocated_compute_balance_skews_bytes() {
+        // Fig. 1's dilemma, in bytes: one 8192-token doc carries the
+        // same causal pairs as sixteen 2048-token docs (8192² = 16·2048²
+        // ·… within rounding), so LPT compute balance puts 8K tokens on
+        // one server and 32K on the other — a 1.6× byte ratio.
+        let m = m8();
+        let mut items = vec![Item::whole_doc(0, 8192, 0)];
+        for d in 1..=16 {
+            items.push(Item::whole_doc(d, 2048, 0));
+        }
+        let rep = MemReport::colocated(&items, 2, &m);
+        assert_eq!(rep.per_server_peak.len(), 2);
+        assert!(
+            rep.max_mean_ratio() > 1.3,
+            "compute-balanced whole-doc placement must skew bytes: {}",
+            rep.max_mean_ratio()
+        );
+    }
+
+    #[test]
+    fn colocated_equal_docs_balance() {
+        let m = m8();
+        let items: Vec<Item> = (0..4).map(|d| Item::whole_doc(d, 4096, 0)).collect();
+        let rep = MemReport::colocated(&items, 2, &m);
+        assert!((rep.max_mean_ratio() - 1.0).abs() < 1e-9);
+    }
+}

@@ -94,6 +94,7 @@ mod tests {
             comm_exposed: 0.0,
             oom: false,
             config: "c".into(),
+            mem: None,
         }
     }
 

@@ -32,6 +32,24 @@
 //!   because the elastic layer guarantees the lost work is re-dispatched
 //!   and re-accounted within the tick, so work scheduled behind the tick
 //!   barrier must not be collaterally revoked.
+//!
+//! For the memory-disaggregated execution model (§5, Fig. 3b) the engine
+//! additionally tracks *live bytes* per resource:
+//!
+//! * [`Engine::add_task_mem`] attaches a transient byte footprint to a
+//!   task — resident on its resource from *admission* (the moment the
+//!   task is dependency-ready and its inputs are dispatched into the
+//!   server's arena) until it finishes or is revoked, so queued tasks'
+//!   bytes coexist even though compute serializes (the Q+KV of an
+//!   in-place CA-task);
+//! * [`Engine::set_mem_budget`] sets a hard per-resource byte budget: a
+//!   task whose start would push live bytes past the budget is *evicted*
+//!   (revoked at its would-be start, listed in
+//!   [`Engine::oom_evictions`]) instead of started — the simulator-level
+//!   OOM the elastic layer recovers from by re-dispatching to a resource
+//!   with headroom (statelessness, §3);
+//! * [`Engine::mem_peak_per_resource`] reports each resource's byte
+//!   high-water mark — the quantity `MemReport` summarizes.
 
 use std::collections::BinaryHeap;
 
@@ -57,6 +75,12 @@ struct Task {
     /// Tick barrier: completes when all deps resolve, occupies nothing.
     barrier: bool,
     tag: u32,
+    /// Transient bytes resident on the resource while the task is
+    /// admitted (queued or running) — the dispatched Q+KV of a CA-task.
+    mem: f64,
+    /// Are this task's bytes currently counted in the resource's live
+    /// total? (Guards against double release on revoke paths.)
+    mem_live: bool,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -108,6 +132,15 @@ pub struct Engine {
     revoked_at: Vec<Option<f64>>,
     /// Time from which each resource starts no new tasks (partial drain).
     drained_at: Vec<Option<f64>>,
+    /// Hard live-byte budget per resource (0 = unlimited).
+    mem_budget: Vec<f64>,
+    /// Live bytes per resource during `run` (admitted tasks' footprints).
+    live_mem: Vec<f64>,
+    /// Byte high-water mark per resource (after `run`).
+    mem_peak: Vec<f64>,
+    /// OOM evictions: `(resource, task, time)` of tasks whose admission
+    /// would have overflowed the resource's byte budget.
+    oom_events: Vec<(ResourceId, TaskId, f64)>,
 }
 
 impl Engine {
@@ -119,6 +152,10 @@ impl Engine {
             speed: vec![1.0; n_resources],
             revoked_at: vec![None; n_resources],
             drained_at: vec![None; n_resources],
+            mem_budget: vec![0.0; n_resources],
+            live_mem: vec![0.0; n_resources],
+            mem_peak: vec![0.0; n_resources],
+            oom_events: Vec::new(),
         }
     }
 
@@ -128,6 +165,9 @@ impl Engine {
         self.speed.push(1.0);
         self.revoked_at.push(None);
         self.drained_at.push(None);
+        self.mem_budget.push(0.0);
+        self.live_mem.push(0.0);
+        self.mem_peak.push(0.0);
         self.n_resources - 1
     }
 
@@ -141,6 +181,16 @@ impl Engine {
         assert!(resource < self.n_resources, "bad resource {resource}");
         assert!(factor > 0.0 && factor.is_finite(), "bad speed {factor}");
         self.speed[resource] = factor;
+    }
+
+    /// Set a resource's hard live-byte budget (0 = unlimited). A task
+    /// whose start would push live bytes past the budget is evicted
+    /// (revoked, never started) and listed in [`Engine::oom_evictions`].
+    /// Must be called before [`Engine::run`].
+    pub fn set_mem_budget(&mut self, resource: ResourceId, bytes: f64) {
+        assert!(resource < self.n_resources, "bad resource {resource}");
+        assert!(bytes >= 0.0 && bytes.is_finite(), "bad mem budget {bytes}");
+        self.mem_budget[resource] = bytes;
     }
 
     /// Declare `resource` dead from time `t` onward (earliest call wins).
@@ -169,7 +219,7 @@ impl Engine {
 
     /// Add a task occupying `resource` for `duration` after `deps`.
     pub fn add_task(&mut self, resource: ResourceId, duration: f64, deps: &[TaskId]) -> TaskId {
-        self.add_task_full(resource, duration, deps, 0, 0.0)
+        self.add_task_full(resource, duration, deps, 0, 0.0, 0.0)
     }
 
     /// Tagged variant (tags let reports aggregate by kind).
@@ -180,7 +230,7 @@ impl Engine {
         deps: &[TaskId],
         tag: u32,
     ) -> TaskId {
-        self.add_task_full(resource, duration, deps, tag, 0.0)
+        self.add_task_full(resource, duration, deps, tag, 0.0, 0.0)
     }
 
     /// Variant with an earliest-start time — the recovery-wave primitive:
@@ -192,7 +242,36 @@ impl Engine {
         deps: &[TaskId],
         earliest_start: f64,
     ) -> TaskId {
-        self.add_task_full(resource, duration, deps, 0, earliest_start)
+        self.add_task_full(resource, duration, deps, 0, earliest_start, 0.0)
+    }
+
+    /// Variant carrying a transient byte footprint: `mem_bytes` are live
+    /// on the resource from the task's *admission* (dependency-ready:
+    /// its inputs occupy the arena while it queues) to its finish or
+    /// revocation — an in-place CA-task's Q+KV. With a
+    /// [`Engine::set_mem_budget`] in force, an admission that would
+    /// overflow evicts the task instead (OOM).
+    pub fn add_task_mem(
+        &mut self,
+        resource: ResourceId,
+        duration: f64,
+        deps: &[TaskId],
+        mem_bytes: f64,
+    ) -> TaskId {
+        self.add_task_full(resource, duration, deps, 0, 0.0, mem_bytes)
+    }
+
+    /// Full variant: earliest start plus a transient byte footprint —
+    /// the recovery-wave primitive for memory-tracked CA-tasks.
+    pub fn add_task_mem_at(
+        &mut self,
+        resource: ResourceId,
+        duration: f64,
+        deps: &[TaskId],
+        mem_bytes: f64,
+        earliest_start: f64,
+    ) -> TaskId {
+        self.add_task_full(resource, duration, deps, 0, earliest_start, mem_bytes)
     }
 
     fn add_task_full(
@@ -202,6 +281,7 @@ impl Engine {
         deps: &[TaskId],
         tag: u32,
         earliest_start: f64,
+        mem: f64,
     ) -> TaskId {
         assert!(resource < self.n_resources, "bad resource {resource}");
         assert!(duration >= 0.0 && duration.is_finite(), "bad duration {duration}");
@@ -209,6 +289,7 @@ impl Engine {
             earliest_start >= 0.0 && earliest_start.is_finite(),
             "bad earliest_start {earliest_start}"
         );
+        assert!(mem >= 0.0 && mem.is_finite(), "bad mem bytes {mem}");
         let id = self.tasks.len();
         for &d in deps {
             assert!(d < id, "dep {d} must precede task {id}");
@@ -225,6 +306,8 @@ impl Engine {
             revoked: false,
             barrier: false,
             tag,
+            mem,
+            mem_live: false,
         });
         self.dependents.push(Vec::new());
         for &d in deps {
@@ -255,6 +338,8 @@ impl Engine {
             revoked: false,
             barrier: true,
             tag: 0,
+            mem: 0.0,
+            mem_live: false,
         });
         self.dependents.push(Vec::new());
         for &d in deps {
@@ -308,6 +393,7 @@ impl Engine {
                 continue;
             }
             self.tasks[t].revoked = true;
+            self.release_mem(t);
             if !self.tasks[t].started {
                 self.tasks[t].start = time;
             }
@@ -316,6 +402,49 @@ impl Engine {
             work.extend(self.dependents[t].iter().copied());
         }
         (count, resolved_barriers)
+    }
+
+    /// Release a task's live bytes (idempotent — `mem_live` guards the
+    /// revoke paths against double release).
+    fn release_mem(&mut self, tid: TaskId) {
+        if self.tasks[tid].mem_live {
+            let r = self.tasks[tid].resource;
+            let m = self.tasks[tid].mem;
+            self.tasks[tid].mem_live = false;
+            self.live_mem[r] -= m;
+        }
+    }
+
+    /// Admit a dependency-ready task onto its resource queue, charging
+    /// its transient bytes against the resource's budget. Over budget ⇒
+    /// OOM eviction: the task (and its dependents) are revoked at `time`
+    /// for the failover layer to re-dispatch. Returns whether admitted.
+    fn try_admit(
+        &mut self,
+        id: TaskId,
+        time: f64,
+        ready: &mut [std::collections::VecDeque<TaskId>],
+        heap: &mut BinaryHeap<Event>,
+        revoked_count: &mut usize,
+    ) -> bool {
+        let r = self.tasks[id].resource;
+        let mem = self.tasks[id].mem;
+        if mem > 0.0 {
+            let budget = self.mem_budget[r];
+            if budget > 0.0 && self.live_mem[r] + mem > budget + 1e-9 {
+                self.oom_events.push((r, id, time));
+                *revoked_count += self.revoke_and_schedule(id, time, heap);
+                return false;
+            }
+            self.live_mem[r] += mem;
+            self.tasks[id].mem_live = true;
+            self.mem_peak[r] = self.mem_peak[r].max(self.live_mem[r]);
+        }
+        ready[r].push_back(id);
+        if self.tasks[id].ready_at > time + 1e-18 {
+            heap.push(Event { time: self.tasks[id].ready_at, task: id, kind: EventKind::Wake });
+        }
+        true
     }
 
     /// Run the simulation; returns the makespan of executed work (revoked
@@ -337,16 +466,19 @@ impl Engine {
         let mut revoked_count = 0usize;
         let mut makespan = 0.0f64;
 
-        for (id, t) in self.tasks.iter().enumerate() {
-            if t.pending == 0 {
-                if t.barrier {
-                    heap.push(Event { time: t.ready_at, task: id, kind: EventKind::Finish });
-                } else {
-                    ready[t.resource].push_back(id);
-                    if t.ready_at > 0.0 {
-                        heap.push(Event { time: t.ready_at, task: id, kind: EventKind::Wake });
-                    }
-                }
+        let roots: Vec<TaskId> = self
+            .tasks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.pending == 0)
+            .map(|(id, _)| id)
+            .collect();
+        for id in roots {
+            if self.tasks[id].barrier {
+                let at = self.tasks[id].ready_at;
+                heap.push(Event { time: at, task: id, kind: EventKind::Finish });
+            } else {
+                self.try_admit(id, 0.0, &mut ready, &mut heap, &mut revoked_count);
             }
         }
         let mut now = 0.0f64;
@@ -421,6 +553,9 @@ impl Engine {
             } else {
                 let r = self.tasks[tid].resource;
                 res_busy[r] = false;
+                // Buffers release the instant the task leaves the
+                // resource — completed or cut short.
+                self.release_mem(tid);
                 let interrupted =
                     self.revoked_at[r].map_or(false, |rt| ev.time + 1e-18 >= rt);
                 if interrupted {
@@ -432,25 +567,17 @@ impl Engine {
             }
             let deps_of: Vec<TaskId> = self.dependents[tid].clone();
             for dep in deps_of {
-                let t = &mut self.tasks[dep];
-                if t.revoked {
+                if self.tasks[dep].revoked {
                     continue;
                 }
-                t.pending -= 1;
-                t.ready_at = t.ready_at.max(now);
-                if t.pending == 0 {
-                    if t.barrier {
-                        let at = t.ready_at;
+                self.tasks[dep].pending -= 1;
+                let at = self.tasks[dep].ready_at.max(now);
+                self.tasks[dep].ready_at = at;
+                if self.tasks[dep].pending == 0 {
+                    if self.tasks[dep].barrier {
                         heap.push(Event { time: at, task: dep, kind: EventKind::Finish });
                     } else {
-                        ready[t.resource].push_back(dep);
-                        if t.ready_at > now + 1e-18 {
-                            heap.push(Event {
-                                time: t.ready_at,
-                                task: dep,
-                                kind: EventKind::Wake,
-                            });
-                        }
+                        self.try_admit(dep, now, &mut ready, &mut heap, &mut revoked_count);
                     }
                 }
             }
@@ -518,6 +645,22 @@ impl Engine {
             }
         }
         busy
+    }
+
+    /// Live-byte high-water mark per resource (after `run`): the peak
+    /// transient footprint of admitted CA-tasks — the per-server series
+    /// a `MemReport` summarizes.
+    pub fn mem_peak_per_resource(&self) -> Vec<f64> {
+        self.mem_peak.clone()
+    }
+
+    /// OOM evictions recorded during `run`: `(resource, task, time)` for
+    /// every task whose admission would have overflowed its resource's
+    /// byte budget. Each evicted task is revoked (with its transitive
+    /// dependents) and is re-dispatchable by the failover layer —
+    /// statelessness makes recovery one resend (§3).
+    pub fn oom_evictions(&self) -> &[(ResourceId, TaskId, f64)] {
+        &self.oom_events
     }
 }
 
@@ -808,6 +951,123 @@ mod tests {
         assert_eq!(e.revoked(), vec![tail]);
         assert!(e.is_done(next));
         assert!(e.started(kept) && !e.started(tail));
+    }
+
+    // ----- live-byte tracking + OOM eviction ----------------------------
+
+    #[test]
+    fn mem_peak_counts_admitted_tasks() {
+        // Two root tasks on one resource: both are admitted (dispatched)
+        // at t=0, so their bytes coexist even though compute serializes.
+        let mut e = Engine::new(2);
+        e.add_task_mem(0, 1.0, &[], 100.0);
+        e.add_task_mem(0, 1.0, &[], 50.0);
+        e.add_task_mem(1, 1.0, &[], 30.0);
+        e.run();
+        assert_eq!(e.mem_peak_per_resource(), vec![150.0, 30.0]);
+        assert!(e.oom_evictions().is_empty());
+    }
+
+    #[test]
+    fn mem_releases_at_finish() {
+        // A dependent admitted after its producer finished never
+        // coexists with it: peak stays at the max single footprint.
+        let mut e = Engine::new(1);
+        let a = e.add_task_mem(0, 1.0, &[], 100.0);
+        e.add_task_mem(0, 1.0, &[a], 80.0);
+        e.run();
+        assert_eq!(e.mem_peak_per_resource(), vec![100.0]);
+    }
+
+    #[test]
+    fn oom_evicts_over_budget_task() {
+        let mut e = Engine::new(2);
+        e.set_mem_budget(0, 120.0);
+        let a = e.add_task_mem(0, 1.0, &[], 100.0);
+        let b = e.add_task_mem(0, 1.0, &[], 50.0); // 150 > 120: evicted
+        let c = e.add_task_mem(1, 1.0, &[], 50.0);
+        let makespan = e.run();
+        assert!(e.is_done(a));
+        assert!(e.is_done(c));
+        assert!(!e.is_done(b) && !e.started(b));
+        assert_eq!(e.revoked(), vec![b]);
+        assert_eq!(e.oom_evictions(), &[(0, b, 0.0)]);
+        assert!((makespan - 1.0).abs() < 1e-12);
+        // The evicted task never contributed to the peak.
+        assert_eq!(e.mem_peak_per_resource(), vec![100.0, 50.0]);
+    }
+
+    #[test]
+    fn oom_eviction_cascades_to_dependents() {
+        let mut e = Engine::new(2);
+        e.set_mem_budget(0, 80.0);
+        let big = e.add_task_mem(0, 1.0, &[], 100.0); // evicted at t=0
+        let dep = e.add_task(1, 1.0, &[big]); // can never run
+        let ok = e.add_task(1, 2.0, &[]);
+        e.run();
+        assert_eq!(e.revoked(), vec![big, dep]);
+        assert!(e.is_done(ok));
+        assert_eq!(e.oom_evictions().len(), 1);
+    }
+
+    #[test]
+    fn oom_eviction_is_a_recoverable_loss() {
+        // The failover pattern for an OOM: re-dispatch the evicted task
+        // to a resource with headroom — one resend, nothing else lost.
+        let mut e = Engine::new(2);
+        e.set_mem_budget(0, 100.0);
+        e.set_mem_budget(1, 200.0);
+        let _a = e.add_task_mem(0, 1.0, &[], 90.0);
+        let evicted = e.add_task_mem(0, 1.0, &[], 40.0);
+        e.run();
+        assert_eq!(e.revoked(), vec![evicted]);
+
+        let mut r = Engine::new(2);
+        r.set_mem_budget(1, 200.0);
+        let re = r.add_task_mem(1, 1.0, &[], 40.0);
+        r.run();
+        assert!(r.is_done(re));
+        assert_eq!(r.mem_peak_per_resource()[1], 40.0);
+    }
+
+    #[test]
+    fn later_admission_can_fit_after_release() {
+        // A dependency-gated task admits only after the producer's bytes
+        // release, so it fits where simultaneous admission would not.
+        let mut e = Engine::new(1);
+        e.set_mem_budget(0, 120.0);
+        let a = e.add_task_mem(0, 1.0, &[], 100.0);
+        let b = e.add_task_mem(0, 1.0, &[a], 100.0);
+        e.run();
+        assert!(e.is_done(a) && e.is_done(b));
+        assert!(e.oom_evictions().is_empty());
+        assert_eq!(e.mem_peak_per_resource(), vec![100.0]);
+    }
+
+    #[test]
+    fn zero_budget_is_unlimited() {
+        let mut e = Engine::new(1);
+        e.add_task_mem(0, 1.0, &[], 1e18);
+        e.add_task_mem(0, 1.0, &[], 1e18);
+        e.run();
+        assert!(e.oom_evictions().is_empty());
+        assert_eq!(e.mem_peak_per_resource(), vec![2e18]);
+    }
+
+    #[test]
+    fn revoked_queued_task_releases_its_bytes() {
+        // A queued task killed with its resource must release its
+        // admitted bytes (no phantom residency).
+        let mut e = Engine::new(2);
+        let _a = e.add_task_mem(0, 2.0, &[], 50.0);
+        let _b = e.add_task_mem(0, 2.0, &[], 50.0); // queued; revoked at t=1
+        let c = e.add_task_mem(1, 3.0, &[], 10.0);
+        e.revoke_resource(0, 1.0);
+        e.run();
+        assert!(e.is_done(c));
+        // Peak saw both admissions; live accounting drained to zero.
+        assert_eq!(e.mem_peak_per_resource(), vec![100.0, 10.0]);
+        assert_eq!(e.live_mem, vec![0.0, 0.0]);
     }
 
     #[test]

@@ -26,6 +26,10 @@ pub struct IterationReport {
     pub oom: bool,
     /// Free-form config description (e.g. "dp=4 cp=2").
     pub config: String,
+    /// Transient-memory balance of the strategy's plans (§5, Fig. 3b):
+    /// per-server peak arena bytes from an in-place replay. `None` for
+    /// strategies without a CA-dispatch plan to replay.
+    pub mem: Option<crate::memplan::MemReport>,
 }
 
 impl IterationReport {
@@ -59,7 +63,7 @@ impl IterationReport {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("strategy", Json::Str(self.strategy.clone())),
             ("config", Json::Str(self.config.clone())),
             ("iter_time_s", Json::Num(self.iter_time)),
@@ -71,11 +75,17 @@ impl IterationReport {
             ("comm_bytes", Json::Num(self.comm_bytes)),
             ("comm_exposed_s", Json::Num(self.comm_exposed)),
             ("oom", Json::Bool(self.oom)),
-        ])
+        ];
+        if let Some(mem) = &self.mem {
+            fields.push(("transient_mem", mem.to_json()));
+        }
+        Json::obj(fields)
     }
 
     /// Average several per-batch reports (paper: mean over 30 sampled
-    /// batches). OOM if any batch OOMs; memory is the max.
+    /// batches). OOM if any batch OOMs; memory is the max — including
+    /// the transient-arena peaks, which combine element-wise (the
+    /// worst-case footprint any batch produced on each server).
     pub fn average(reports: &[IterationReport]) -> IterationReport {
         assert!(!reports.is_empty());
         let n = reports.len() as f64;
@@ -90,6 +100,17 @@ impl IterationReport {
                 mem[i] = mem[i].max(*m);
             }
         }
+        let mut arena: Option<crate::memplan::MemReport> = None;
+        for r in reports.iter().filter_map(|r| r.mem.as_ref()) {
+            match &mut arena {
+                None => arena = Some(r.clone()),
+                Some(acc) => {
+                    for (a, &p) in acc.per_server_peak.iter_mut().zip(&r.per_server_peak) {
+                        *a = a.max(p);
+                    }
+                }
+            }
+        }
         IterationReport {
             strategy: reports[0].strategy.clone(),
             iter_time: reports.iter().map(|r| r.iter_time).sum::<f64>() / n,
@@ -100,6 +121,7 @@ impl IterationReport {
             comm_exposed: reports.iter().map(|r| r.comm_exposed).sum::<f64>() / n,
             oom: reports.iter().any(|r| r.oom),
             config: reports[0].config.clone(),
+            mem: arena,
         }
     }
 }
@@ -119,6 +141,7 @@ mod tests {
             comm_exposed: 0.0,
             oom: false,
             config: String::new(),
+            mem: None,
         }
     }
 
@@ -145,5 +168,24 @@ mod tests {
         let j = rep(1.0, vec![1.0]).to_json();
         assert!(j.get("throughput_tok_s").is_some());
         assert!(j.get("idle_fraction").is_some());
+        assert!(j.get("transient_mem").is_none(), "absent without a mem report");
+    }
+
+    #[test]
+    fn mem_report_joins_and_averages_element_wise() {
+        let mut a = rep(1.0, vec![1.0, 1.0]);
+        a.mem = Some(crate::memplan::MemReport::from_peaks(vec![10.0, 30.0], 0.0));
+        let mut b = rep(3.0, vec![3.0, 1.0]);
+        b.mem = Some(crate::memplan::MemReport::from_peaks(vec![20.0, 5.0], 0.0));
+        let avg = IterationReport::average(&[a, b]);
+        let m = avg.mem.expect("mem must survive averaging");
+        assert_eq!(m.per_server_peak, vec![20.0, 30.0], "element-wise max");
+        let j = avg.to_json();
+        assert!(j.get("transient_mem").is_some());
+        assert!(j
+            .get("transient_mem")
+            .unwrap()
+            .get("max_mean_ratio")
+            .is_some());
     }
 }

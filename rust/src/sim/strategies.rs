@@ -346,6 +346,7 @@ fn run_chunks_dp(
         comm_exposed,
         oom,
         config: format!("dp={} pp={} cp={cp} tp={}", n_logical / (p.pp * cp), p.pp, p.tp),
+        mem: None,
     }
 }
 
@@ -466,6 +467,9 @@ pub fn run_distca(docs: &[Document], chunk_tokens: usize, p: &SimParams) -> Iter
     let mut iter_time = 0.0f64;
     let mut device_busy = vec![0.0f64; n];
     let mut device_mem_v = vec![0.0f64; n];
+    // Worst per-server transient arena bytes over the microbatches
+    // (in-place replay, per GPU within the TP group) — §5, Fig. 3b.
+    let mut arena_peaks = vec![0.0f64; n];
     let mut comm_bytes = 0.0f64;
     let mut comm_exposed = 0.0f64;
     let mut oom = false;
@@ -490,6 +494,11 @@ pub fn run_distca(docs: &[Document], chunk_tokens: usize, p: &SimParams) -> Iter
             ..Default::default()
         };
         let plan = schedule(&items, n, &p.f, &p.prof, &p.model, &cfg);
+        let mrep = crate::memplan::MemReport::for_plan(&plan, &p.model, 0.0)
+            .expect("unbounded replay cannot OOM");
+        for (s, &pk) in mrep.per_server_peak.iter().enumerate() {
+            arena_peaks[s] = arena_peaks[s].max(pk / p.tp as f64);
+        }
         let (layer_fwd, layer_bwd, mb_bytes, exposed) =
             distca_layer_times(&placed, &plan, p);
         iter_time += (layer_fwd + layer_bwd) * n_layers;
@@ -517,6 +526,7 @@ pub fn run_distca(docs: &[Document], chunk_tokens: usize, p: &SimParams) -> Iter
         comm_exposed,
         oom,
         config: format!("servers={n} tol={} tp={}", p.tolerance, p.tp),
+        mem: Some(crate::memplan::MemReport::from_peaks(arena_peaks, 0.0)),
     }
 }
 
@@ -644,6 +654,7 @@ pub fn run_distca_pp(docs: &[Document], chunk_tokens: usize, p: &SimParams) -> I
 
     let mut iter_time = 0.0f64;
     let mut device_busy = vec![0.0; n];
+    let mut arena_peaks = vec![0.0f64; n];
     let mut comm_bytes = 0.0f64;
     let mut comm_exposed = 0.0f64;
 
@@ -658,6 +669,11 @@ pub fn run_distca_pp(docs: &[Document], chunk_tokens: usize, p: &SimParams) -> I
         }
         let items = pp_tick_items(&chunks, &active);
         let plan = schedule(&items, n, &p.f, &p.prof, &p.model, &cfg);
+        let mrep = crate::memplan::MemReport::for_plan(&plan, &p.model, 0.0)
+            .expect("unbounded replay cannot OOM");
+        for (s, &pk) in mrep.per_server_peak.iter().enumerate() {
+            arena_peaks[s] = arena_peaks[s].max(pk / p.tp as f64);
+        }
         // Tick time: max over devices of overlapped (linear_stage, ca,
         // comm); linear only on active devices, CA on all.
         let bw = p.cluster.ib_bw * p.tp as f64;
@@ -728,6 +744,7 @@ pub fn run_distca_pp(docs: &[Document], chunk_tokens: usize, p: &SimParams) -> I
             "servers={n} dp={n_groups} pp={} tol={} tp={}",
             p.pp, p.tolerance, p.tp
         ),
+        mem: Some(crate::memplan::MemReport::from_peaks(arena_peaks, 0.0)),
     }
 }
 
@@ -794,6 +811,26 @@ mod tests {
             ca.memory_divergence(),
             wlb.memory_divergence()
         );
+    }
+
+    #[test]
+    fn distca_reports_balanced_transient_memory() {
+        // §5 / Fig. 3b: the scheduler spreads arena bytes with the
+        // FLOPs, so the in-place transient peaks stay near-balanced and
+        // strictly better than home placement would be.
+        let p = params(4, 1);
+        let docs = sample_docs(131072, 4 * 131072, 3);
+        let ca = run_distca(&docs, 131072, &p);
+        let mem = ca.mem.expect("DistCA must report transient memory");
+        assert_eq!(mem.per_server_peak.len(), 4);
+        assert!(mem.per_server_peak.iter().all(|&pk| pk > 0.0));
+        assert!(
+            mem.max_mean_ratio() < 2.0,
+            "balanced plans keep transient memory near-even: {}",
+            mem.max_mean_ratio()
+        );
+        // Baselines carry no CA-dispatch plan to replay.
+        assert!(run_packed_dp(&docs, 131072, &p).mem.is_none());
     }
 
     #[test]

@@ -7,9 +7,13 @@
 //! must produce **bit-exact** CA outputs vs. the pure-Rust GQA oracle,
 //! fault plans included: recovery must not change results. Statelessness
 //! (§3) is what makes this a meaningful invariant: a CA-task is a pure
-//! (Q, KV) → O function, so kills, partial drains, slowdowns, rejoins,
-//! re-dispatch, and first-response-wins dedup may change *who* computes
-//! a task and *when*, never *what* it returns.
+//! (Q, KV) → O function, so kills, partial drains, OOM evictions
+//! (`oom:` — arena overflow, the victim surviving the tick), slowdowns,
+//! rejoins, re-dispatch, and first-response-wins dedup may change *who*
+//! computes a task and *when*, never *what* it returns. The exec paths
+//! additionally replay their kept computations through per-server
+//! in-place arenas (`ExecReport::mem`), asserting the §5 memory model
+//! holds on the same runs.
 
 use std::collections::BTreeSet;
 use std::time::Duration;
@@ -66,6 +70,13 @@ fn gen_case(seed: u64) -> Case {
     if n_servers >= 3 && seed % 3 == 0 {
         // Exercise partial drain too (server 0 stays untouched).
         fault = fault.drain(2, rng.gen_index(0, n_ticks));
+    }
+    if seed % 4 == 1 {
+        // Arena-overflow eviction (§5): recovery must be invisible in
+        // the outputs on every path. Tick 0 is safe — random kills and
+        // slows fire at tick >= 1, so server 0 always remains a live
+        // re-dispatch target even alongside a tick-0 drain of server 2.
+        fault = fault.oom(1, 0);
     }
     Case { n_servers, ticks, fault }
 }
@@ -131,6 +142,31 @@ fn exec_reference_matches_oracle_for_seeded_cases() {
                 assert!(
                     !rep.drain_redirected.contains(tag) && !rep.redispatched.contains(tag),
                     "exec seed {seed}: started task {tag} re-dispatched"
+                );
+            }
+            // OOM evictions: the victim never computes an evicted task,
+            // and the victim stays in the pool.
+            for tag in &rep.oom_evicted {
+                assert!(
+                    pool.is_schedulable(1),
+                    "exec seed {seed}: OOM victim left the pool"
+                );
+                assert_ne!(
+                    rep.computed_by[tag], 1,
+                    "exec seed {seed}: evicted task {tag} computed on the victim"
+                );
+            }
+            // The §5 memory model holds: the per-server arena replay is
+            // leak-free by construction and reports a positive peak for
+            // every server that computed anything.
+            assert_eq!(rep.mem.per_server_peak.len(), case.n_servers);
+            let computed: std::collections::BTreeSet<usize> =
+                rep.computed_by.values().copied().collect();
+            for (s, &peak) in rep.mem.per_server_peak.iter().enumerate() {
+                assert_eq!(
+                    peak > 0.0,
+                    computed.contains(&s),
+                    "exec seed {seed}: server {s} peak {peak} vs kept set {computed:?}"
                 );
             }
         }

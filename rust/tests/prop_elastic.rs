@@ -41,6 +41,11 @@ fn sanitize(plan: &FaultPlan) -> FaultPlan {
             FaultEvent::Drain { server, tick } if server >= 1 => {
                 out.events.push(FaultEvent::Drain { server, tick });
             }
+            FaultEvent::Oom { server, tick } if server >= 1 => {
+                // OOM victims survive, but they take no re-dispatch this
+                // tick — keeping server 0 victim-free keeps a target.
+                out.events.push(FaultEvent::Oom { server, tick });
+            }
             FaultEvent::Rejoin { server, tick } => {
                 out.events.push(FaultEvent::Rejoin { server, tick });
             }
@@ -86,10 +91,11 @@ fn gen_fault_plan(r: &mut Rng) -> FaultPlan {
     for _ in 0..r.gen_index(0, 4) {
         let server = r.gen_index(0, N_SERVERS + 1); // may exceed capacity
         let tick = r.gen_index(0, 3);
-        match r.gen_index(0, 4) {
+        match r.gen_index(0, 5) {
             0 => plan = plan.kill(server, tick),
             1 => plan = plan.drain(server, tick),
             2 => plan = plan.slow(server, tick, r.gen_f64(0.2, 0.9)),
+            3 => plan = plan.oom(server, tick),
             _ => plan = plan.rejoin(server, tick),
         }
     }

@@ -1,0 +1,259 @@
+//! Property tests for the memory-disaggregated execution model (§5,
+//! Fig. 3b) on the in-repo `util::quickcheck` harness.
+//!
+//! Invariants:
+//! * **budget is hard** — whatever allocation/free/in-place sequence a
+//!   tick performs, the arena's peak never exceeds its budget, and a
+//!   failed allocation leaves the arena untouched;
+//! * **no leak across ticks** — every byte a tick allocates is freed by
+//!   tick end, so consecutive ticks on one arena start from zero;
+//! * **in-place reuse never aliases** — live regions stay pairwise
+//!   disjoint through arbitrary interleavings of allocs, frees, and
+//!   O-overwrites-Q in-place writes;
+//! * **memory-feasible plans stay within ε** — with a budget the
+//!   unconstrained optimum fits under (1.5× its peak), the §4.2
+//!   scheduler emits plans whose per-server arena peaks respect the
+//!   budget *and* whose compute load still meets the tolerance.
+
+use distca::config::{ClusterConfig, ModelConfig};
+use distca::coordinator::scheduler::schedule;
+use distca::coordinator::{Item, Profiler, SchedulerCfg};
+use distca::memplan::{replay_server_tick, Arena, MemReport, SlotId};
+use distca::model::FlopsModel;
+use distca::util::quickcheck::{check, ensure, PropResult};
+use distca::util::rng::Rng;
+
+/// One scripted arena op: sizes are raw and sanitized in the driver so
+/// shrunk inputs stay well-formed.
+type OpSpec = (usize, usize); // (kind, size_raw)
+
+fn drive_arena(budget: u64, ops: &[OpSpec]) -> PropResult {
+    let mut arena = Arena::new(budget);
+    let mut live: Vec<SlotId> = Vec::new();
+    for &(kind, size_raw) in ops {
+        match kind % 3 {
+            0 => {
+                // Alloc (may legitimately fail on a full arena).
+                let len = 1 + (size_raw as u64 % budget);
+                let before = (arena.live_bytes(), arena.n_live());
+                match arena.alloc(len) {
+                    Ok(s) => live.push(s),
+                    Err(e) => {
+                        ensure(
+                            e.requested == len && e.budget == budget,
+                            format!("OomError misreports: {e}"),
+                        )?;
+                        ensure(
+                            (arena.live_bytes(), arena.n_live()) == before,
+                            "failed alloc mutated the arena",
+                        )?;
+                    }
+                }
+            }
+            1 => {
+                // Free the oldest live slot.
+                if !live.is_empty() {
+                    arena.free(live.remove(0));
+                }
+            }
+            _ => {
+                // In-place overwrite of the newest live slot (O over Q).
+                if let Some(&s) = live.last() {
+                    let cur = arena.slot_len(s);
+                    let new_len = 1 + (size_raw as u64 % cur);
+                    arena.write_in_place(s, new_len);
+                }
+            }
+        }
+        ensure(
+            arena.peak_bytes() <= budget,
+            format!("peak {} exceeded budget {budget}", arena.peak_bytes()),
+        )?;
+        ensure(
+            arena.live_bytes() <= arena.peak_bytes(),
+            "live exceeds recorded peak",
+        )?;
+        arena.check_no_alias()?;
+    }
+    for s in live {
+        arena.free(s);
+    }
+    arena.check_drained()?;
+    Ok(())
+}
+
+#[test]
+fn prop_arena_peak_never_exceeds_budget() {
+    check(
+        150,
+        |r: &mut Rng| {
+            let budget = 64 + r.gen_range(0, 4096);
+            let n = 1 + r.gen_index(0, 40);
+            let ops: Vec<OpSpec> = (0..n)
+                .map(|_| (r.gen_index(0, 3), r.gen_index(0, 1 << 16)))
+                .collect();
+            (budget, ops)
+        },
+        |(budget, ops)| drive_arena((*budget).max(1), ops),
+    );
+}
+
+#[test]
+fn prop_every_alloc_freed_by_tick_end() {
+    // Tick replay semantics on ONE arena across consecutive ticks: tick
+    // boundaries must leave zero live bytes, so tick N+1's peak cannot
+    // be inflated by tick N's leftovers.
+    check(
+        100,
+        |r: &mut Rng| {
+            let n = 1 + r.gen_index(0, 8);
+            (0..n)
+                .map(|_| (1 + r.gen_index(0, 64), 1 + r.gen_index(0, 64)))
+                .collect::<Vec<(usize, usize)>>()
+        },
+        |shapes| {
+            // Shrunk inputs may reach zero; sizes stay ≥ 1 byte.
+            let shapes: Vec<(u64, u64)> = shapes
+                .iter()
+                .map(|&(q, kv)| (q.max(1) as u64, kv.max(1) as u64))
+                .collect();
+            let mut arena = Arena::unbounded();
+            let mut tick_peaks = Vec::new();
+            for _tick in 0..2 {
+                let base_allocs = arena.n_allocs();
+                let mut slots = Vec::new();
+                for &(q, kv) in &shapes {
+                    slots.push((arena.alloc(q).unwrap(), arena.alloc(kv).unwrap()));
+                }
+                let mut outs = Vec::new();
+                for &(q_slot, kv_slot) in &slots {
+                    let q_len = arena.slot_len(q_slot);
+                    outs.push(arena.write_in_place(q_slot, q_len));
+                    arena.free(kv_slot);
+                }
+                for o in outs {
+                    arena.free(o);
+                }
+                ensure(
+                    arena.live_bytes() == 0 && arena.n_live() == 0,
+                    format!("tick leaked {} bytes", arena.live_bytes()),
+                )?;
+                ensure(
+                    arena.n_allocs() - base_allocs == 2 * shapes.len() as u64,
+                    "in-place O must not count as a fresh allocation",
+                )?;
+                tick_peaks.push(arena.peak_bytes());
+            }
+            ensure(
+                tick_peaks[0] == tick_peaks[1],
+                format!("peak drifted across ticks: {tick_peaks:?}"),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_in_place_reuse_never_aliases() {
+    // replay_server_tick is the production replay: its arena must stay
+    // alias-free and its in-place peak must equal Σ(Q+KV) exactly.
+    let m = ModelConfig::llama3_8b();
+    check(
+        100,
+        |r: &mut Rng| {
+            let n = 1 + r.gen_index(0, 10);
+            (0..n)
+                .map(|_| {
+                    let q = 1 + r.gen_index(0, 512);
+                    let kv = q + r.gen_index(0, 512);
+                    (q, kv)
+                })
+                .collect::<Vec<(usize, usize)>>()
+        },
+        |shapes| {
+            // Shrunk inputs may reach zero; token counts stay ≥ 1.
+            let shapes: Vec<(usize, usize)> =
+                shapes.iter().map(|&(q, kv)| (q.max(1), kv.max(1))).collect();
+            let arena = replay_server_tick(&shapes, &m, 0, true)
+                .map_err(|e| format!("unbounded replay failed: {e}"))?;
+            arena.check_no_alias()?;
+            arena.check_drained()?;
+            let expect: u64 = shapes
+                .iter()
+                .map(|&(q, kv)| {
+                    (q * m.q_bytes_per_token() + kv * m.kv_bytes_per_token()) as u64
+                })
+                .sum();
+            ensure(
+                arena.peak_bytes() == expect,
+                format!("in-place peak {} != Σ(Q+KV) {expect}", arena.peak_bytes()),
+            )?;
+            // Out-of-place costs strictly more on non-empty ticks.
+            let outp = replay_server_tick(&shapes, &m, 0, false)
+                .map_err(|e| format!("{e}"))?
+                .peak_bytes();
+            ensure(
+                shapes.is_empty() || outp > arena.peak_bytes(),
+                "O-overwrites-Q must save bytes",
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_mem_feasible_plans_stay_within_tolerance() {
+    let m = ModelConfig::llama3_8b();
+    let f = FlopsModel::new(&m);
+    let prof = Profiler::analytic(&f, &ClusterConfig::h200(1));
+    const N_SERVERS: usize = 4;
+    const TOL: f64 = 0.3;
+    check(
+        40,
+        |r: &mut Rng| {
+            let n = 2 + r.gen_index(0, 12);
+            (0..n)
+                .map(|_| (1 + r.gen_index(0, 32), r.gen_index(0, N_SERVERS)))
+                .collect::<Vec<(usize, usize)>>()
+        },
+        |spec| {
+            let items: Vec<Item> = spec
+                .iter()
+                .enumerate()
+                .map(|(d, &(len_units, home))| {
+                    Item::whole_doc(d as u32, len_units.clamp(1, 32) * 512, home % N_SERVERS)
+                })
+                .collect();
+            let base = SchedulerCfg { tolerance: TOL, ..Default::default() };
+            let un = schedule(&items, N_SERVERS, &f, &prof, &m, &base);
+            let max_un = un.server_load.iter().cloned().fold(0.0f64, f64::max);
+            if max_un > un.target_load * (1.0 + TOL) + 1e-9 {
+                // The instance is not ε-balanceable at all (e.g. one doc
+                // dominates); memory feasibility is moot.
+                return Ok(());
+            }
+            let free_mem = MemReport::for_plan(&un, &m, 0.0)
+                .map_err(|e| format!("unbounded replay failed: {e}"))?;
+            let budget = 1.5 * free_mem.max_peak();
+            let cfg = SchedulerCfg { mem_budget: budget, ..base };
+            let plan = schedule(&items, N_SERVERS, &f, &prof, &m, &cfg);
+            plan.validate(&items, &f)?;
+            let mem = MemReport::for_plan(&plan, &m, budget)
+                .map_err(|e| format!("plan exceeds its own budget: {e}"))?;
+            ensure(
+                mem.within_budget(),
+                format!(
+                    "peaks {:?} exceed budget {budget}",
+                    mem.per_server_peak
+                ),
+            )?;
+            let max_load = plan.server_load.iter().cloned().fold(0.0f64, f64::max);
+            ensure(
+                max_load <= plan.target_load * (1.0 + TOL) + 1e-9,
+                format!(
+                    "memory-feasible plan broke compute tolerance: max {max_load} \
+                     vs target {} (ε = {TOL}); unconstrained max was {max_un}",
+                    plan.target_load
+                ),
+            )
+        },
+    );
+}
