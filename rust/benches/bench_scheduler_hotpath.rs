@@ -3,20 +3,28 @@
 //! computes — so it must stay well under one iteration's wall-clock.
 //! Target: <1 ms per microbatch schedule at 64 servers, sub-100 ms at
 //! 512-GPU scale. §Perf in EXPERIMENTS.md tracks before/after.
+//!
+//! The heterogeneous-speeds section times the belief-aware planner
+//! (`schedule_with_beliefs`, one server believed 4× slow) against the
+//! uniform path on the same items and writes `BENCH_hetero.json` with
+//! both predicted makespans — the plan-time answer to the straggler
+//! problem, quantified.
 
 use distca::bench::BenchRunner;
 use distca::config::{run::DataDist, ClusterConfig, ModelConfig};
 use distca::coordinator::scheduler::items_from_chunks;
-use distca::coordinator::{schedule, Profiler, SchedulerCfg};
+use distca::coordinator::{schedule, schedule_with_beliefs, Profiler, SchedulerCfg, ServerBelief};
 use distca::data::distributions::sampler_for;
 use distca::model::FlopsModel;
 use distca::sim::strategies::distca_placement;
+use distca::util::json::Json;
 use distca::util::rng::{seed_from_env, Rng};
 
 fn main() {
     let model = ModelConfig::llama3_8b();
     let f = FlopsModel::new(&model);
     let mut runner = BenchRunner::new("scheduler hot path");
+    let mut hetero_cases: Vec<Json> = Vec::new();
 
     for &(n_servers, max_doc, tokens) in &[
         (8usize, 131_072usize, 1_048_576usize),
@@ -40,7 +48,45 @@ fn main() {
         runner.bench_with_units(&label, items.len() as f64, || {
             schedule(&items, n_servers, &f, &prof, &model, &cfg)
         });
+
+        // Heterogeneous beliefs: server 1 believed 4× slow. Same items,
+        // same tolerance — the extra cost of time-balancing must stay
+        // within the same hot-path budget.
+        let mut speeds = vec![1.0f64; n_servers];
+        speeds[1] = 0.25;
+        let beliefs = ServerBelief::from_speeds(&speeds, 0.0);
+        let hetero_label = format!(
+            "schedule-hetero n={n_servers} items={} (1 server 4x slow)",
+            items.len()
+        );
+        runner.bench_with_units(&hetero_label, items.len() as f64, || {
+            schedule_with_beliefs(&items, &beliefs, &f, &prof, &model, &cfg)
+        });
+
+        let uniform = schedule(&items, n_servers, &f, &prof, &model, &cfg);
+        let aware = schedule_with_beliefs(&items, &beliefs, &f, &prof, &model, &cfg);
+        let uniform_makespan = uniform.makespan_under(&speeds);
+        hetero_cases.push(Json::obj(vec![
+            ("n_servers", Json::Num(n_servers as f64)),
+            ("n_items", Json::Num(items.len() as f64)),
+            ("slow_server", Json::Num(1.0)),
+            ("believed_speed", Json::Num(0.25)),
+            ("uniform_makespan_s", Json::Num(uniform_makespan)),
+            ("speed_aware_makespan_s", Json::Num(aware.predicted_makespan())),
+            (
+                "improvement",
+                Json::Num(uniform_makespan / aware.predicted_makespan().max(1e-12)),
+            ),
+            ("speed_aware_imbalance", Json::Num(aware.imbalance())),
+            ("comm_bytes_uniform", Json::Num(uniform.total_comm_bytes())),
+            ("comm_bytes_speed_aware", Json::Num(aware.total_comm_bytes())),
+        ]));
     }
     runner.finish();
+
+    let out = Json::obj(vec![("cases", Json::Arr(hetero_cases))]);
+    let path = "BENCH_hetero.json";
+    std::fs::write(path, out.to_string_pretty()).expect("write BENCH_hetero.json");
+    println!("wrote {path}");
     println!("target: <1 ms at 8-64 servers; <100 ms at 128+ (prefetched off the critical path).");
 }

@@ -3,6 +3,78 @@
 //! Supports the subcommand + `--flag value` / `--flag=value` / boolean
 //! `--flag` grammar the `distca` launcher uses, with typed accessors,
 //! defaults, required-argument errors, and generated usage text.
+//!
+//! # The `distca` launcher: subcommands
+//!
+//! | subcommand | what it runs |
+//! |---|---|
+//! | `simulate` | one training iteration under `--strategy` on the simulated H200 cluster |
+//! | `compare`  | DistCA vs WLB-ideal on one configuration |
+//! | `schedule` | the §4.2 scheduler on a sampled batch; prints the plan |
+//! | `memory`   | §5 / Fig. 3b per-server transient-memory balance, in-place vs colocated |
+//! | `elastic`  | the elastic attention-server pool under a fault plan (sim or threaded; `--pp` for ping-pong PP ticks) |
+//! | `train`    | end-to-end tiny-LM training through the AOT artifacts |
+//! | `bound`    | Appendix A max-partition bound for a model/bandwidth |
+//! | `info`     | model & cluster configuration tables |
+//!
+//! # Flag reference
+//!
+//! | flag | applies to | meaning |
+//! |---|---|---|
+//! | `--model <name>` | all | `llama-8b` \| `llama-34b` \| `tiny-100m` (default `llama-8b`) |
+//! | `--gpus <n>` | all | GPU count, multiple of 8 (default 64) |
+//! | `--max-doc-len <tokens>` | data-driven | max document length (default 131072) |
+//! | `--tokens <n>` | data-driven | tokens per batch (default: 2 chunks' worth) |
+//! | `--strategy <s>` | simulate | `packed` \| `cp` \| `wlb` \| `distca` |
+//! | `--data <d>` | data-driven | `pretrain` \| `prolong` document-length mix |
+//! | `--tp <n>` | all | tensor-parallel degree (default 8) |
+//! | `--pp [n]` | simulate/elastic | pipeline depth; bare `--pp` is elastic shorthand for PP mode (degree 2) |
+//! | `--cp <n>` | simulate | context-parallel degree for the `cp` strategy |
+//! | `--tolerance <ε>` | scheduler paths | §4.2 imbalance tolerance (default 0.10) |
+//! | `--seed <n>` | all | PRNG seed (default `$DISTCA_SEED`, else 42) |
+//! | `--batches <n>` | simulate/compare | batches to average (default 5) |
+//! | `--steps <n>` | train | training steps (default 100) |
+//! | `--ticks <n>` | elastic (flat/threaded) | scheduling rounds (default 4) |
+//! | `--servers <n>` | elastic (flat/threaded) | pool size (default gpus/tp) |
+//! | `--runtime <r>` | elastic | `sim` (discrete-event) \| `threaded` (real workers, bit-exact) |
+//! | `--fault <spec>` | elastic | compact fault script, e.g. `kill:1@2,slow:2@1x0.25,drain:0@2,oom:1@3,rejoin:1@4` |
+//! | `--fault-plan <file>` | elastic | the same as JSON |
+//! | `--mem-budget <bytes\|auto>` | schedule/memory/elastic flat sim | per-server arena byte budget; `auto` = 1.25× the unconstrained peak; on the elastic sim, omitting `--fault` alongside it means a fault-free (organic-eviction-only) run |
+//! | `--speeds <list>` | schedule | believed per-server speeds (`1,0.25,1,…`): plan estimated seconds and report the makespan vs the uniform plan |
+//! | `--belief-speeds <list>` | elastic sim (incl. `--pp`) | slow-from-tick-0 believed speeds seeded before the first plan; omitting `--fault` alongside it means a fault-free run |
+//! | `--autoscale` | elastic | queue/imbalance-driven pool scaling (wave-clock under `--pp`) |
+//! | `--json` | most | machine-readable output |
+//! | `--verbose` | all | debug logging |
+//!
+//! # Environment
+//!
+//! * `DISTCA_SEED` — default PRNG seed for every subcommand, bench, and
+//!   the fault injector when `--seed` is not given; benches and
+//!   elastic-recovery runs are byte-reproducible under a pinned value.
+//! * `DISTCA_QC_SEED` — seed for the property-test harness
+//!   (`util::quickcheck`), printed in every failure for replay.
+//! * `DISTCA_BENCH_QUICK` — cap bench iteration counts for CI smokes.
+//!
+//! # Example
+//!
+//! ```
+//! use distca::cli::{Args, FlagSpec};
+//!
+//! let specs = vec![
+//!     FlagSpec::value("servers", "pool size", Some("4")),
+//!     FlagSpec::value("belief-speeds", "believed speeds", None),
+//!     FlagSpec::boolean("json", "emit JSON"),
+//! ];
+//! let raw: Vec<String> = ["elastic", "--belief-speeds", "1,0.25", "--json"]
+//!     .iter()
+//!     .map(|s| s.to_string())
+//!     .collect();
+//! let args = Args::parse(&raw, &specs).unwrap();
+//! assert_eq!(args.subcommand.as_deref(), Some("elastic"));
+//! assert_eq!(args.get("belief-speeds"), Some("1,0.25"));
+//! assert_eq!(args.get_usize("servers", 0).unwrap(), 4); // default filled
+//! assert!(args.get_bool("json"));
+//! ```
 
 use std::collections::BTreeMap;
 use std::fmt;

@@ -8,7 +8,11 @@
 //!   either analytic (Fig. 5 shaped) or loaded from measured JSON;
 //! * [`comm`] — Appendix A's max-partition bound and Appendix B's
 //!   closed-form minimal-communication shard selection `v(·)`;
-//! * [`scheduler`] — the communication-aware greedy balancer (§4.2);
+//! * [`scheduler`] — the communication-aware greedy balancer (§4.2),
+//!   heterogeneity-aware: [`scheduler::schedule_with_beliefs`] balances
+//!   estimated *seconds* against per-server
+//!   [`scheduler::ServerBelief`]s (believed speed × arena byte budget)
+//!   instead of assuming uniform servers;
 //! * [`pingpong`] — the Fig.-7 overlap timeline (§4.1);
 //! * [`plan`] — the scheduler's output: CA-task → attention-server
 //!   assignments plus the all-to-all byte matrix.
@@ -24,4 +28,4 @@ pub use item::{CaTask, Item, BLOCK_TOKENS};
 pub use pingpong::{split_waves, PingPongBuffer, Wave};
 pub use plan::Plan;
 pub use profiler::Profiler;
-pub use scheduler::{schedule, SchedulerCfg};
+pub use scheduler::{schedule, schedule_with_beliefs, SchedulerCfg, ServerBelief};

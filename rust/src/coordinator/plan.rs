@@ -24,9 +24,12 @@ impl Assignment {
 pub struct Plan {
     pub n_servers: usize,
     pub assignments: Vec<Assignment>,
-    /// Estimated CA execution time per server (seconds).
+    /// Estimated CA execution time per server (seconds), under the
+    /// believed speed the plan was built against (uniform plans: the
+    /// nominal cost — the two coincide at speed 1.0).
     pub server_load: Vec<f64>,
-    /// Ideal per-server load F̄ (seconds).
+    /// Ideal makespan T̄ = Σ cost / Σ believed speed (seconds); with
+    /// uniform servers this is the paper's per-server ideal F̄.
     pub target_load: f64,
     /// Dispatch bytes `comm[src][dst]`: Q+KV sent from home `src` to
     /// server `dst` (dst ≠ src entries only).
@@ -79,9 +82,33 @@ impl Plan {
         mx
     }
 
-    /// `max load / mean load` across servers.
+    /// `max load / mean load` across servers (time terms: a
+    /// belief-aware plan is balanced when every server takes the same
+    /// *seconds*, not the same FLOPs).
     pub fn imbalance(&self) -> f64 {
         crate::util::stats::imbalance_ratio(&self.server_load)
+    }
+
+    /// The plan's predicted makespan (seconds): the slowest server's
+    /// estimated execution time under the believed speeds the plan was
+    /// built against. Comparable across belief vectors — the quantity
+    /// the heterogeneity-aware scheduler minimizes.
+    pub fn predicted_makespan(&self) -> f64 {
+        self.server_load.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Evaluate a *uniform* plan (whose `server_load` is nominal work —
+    /// speed 1.0 everywhere) under a different speed vector: the
+    /// makespan it would actually achieve on servers running at
+    /// `speeds`. This is the baseline a belief-aware plan's
+    /// [`Plan::predicted_makespan`] is compared against. Extra servers
+    /// beyond `speeds.len()` are treated as nominal.
+    pub fn makespan_under(&self, speeds: &[f64]) -> f64 {
+        self.server_load
+            .iter()
+            .enumerate()
+            .map(|(s, w)| w / speeds.get(s).copied().unwrap_or(1.0))
+            .fold(0.0, f64::max)
     }
 
     /// Fraction of items that stayed home.

@@ -1,20 +1,28 @@
-//! Communication-aware greedy scheduling (§4.2).
+//! Communication-aware greedy scheduling (§4.2), heterogeneity-aware.
 //!
 //! Input: a batch of head-tail [`Item`]s (each resident on its home
-//! device) and the number of attention servers. Output: a [`Plan`]
-//! assigning every (possibly split) Item to a server such that
+//! device) and one [`ServerBelief`] per attention server — the believed
+//! execution speed plus the transient-arena byte budget. Output: a
+//! [`Plan`] assigning every (possibly split) Item to a server such that
 //!
-//! 1. per-server CA load is within `ε·F̄` of the ideal `F̄`,
+//! 1. per-server CA *time* is within `ε·T̄` of the ideal makespan
+//!    `T̄ = Σ cost / Σ speed`: loads are balanced in **estimated
+//!    seconds** (`item_cost / believed speed`), not raw FLOPs, so a
+//!    server believed 4× slow receives ~¼ the work *at plan time*
+//!    instead of being rescued post-hoc by re-dispatch (with uniform
+//!    beliefs this degenerates to the paper's FLOPs balance exactly),
 //! 2. communication volume is greedily minimized: each migration picks
 //!    the candidate with the highest priority `E = ΔF_max / V_comm`
 //!    (compute moved per byte), where `ΔF_max = min(F_item, S_source,
 //!    D_destination)` and partial moves use Appendix B's
 //!    minimal-communication outer sub-shard, and
-//! 3. (with `SchedulerCfg::mem_budget` set) every server's transient
-//!    arena — the in-place Q+KV bytes of its assigned CA-tasks, §5 /
-//!    Fig. 3b — stays under the hard byte budget: a repair pre-pass
-//!    drains overfull home placements, and migrations that would
-//!    overflow the destination are rejected or partial-split to fit.
+//! 3. (with a byte budget in force — `SchedulerCfg::mem_budget` or the
+//!    per-server `ServerBelief::mem_budget` override) every server's
+//!    transient arena — the in-place Q+KV bytes of its assigned
+//!    CA-tasks, §5 / Fig. 3b — stays under the hard byte budget: a
+//!    repair pre-pass drains overfull home placements, and migrations
+//!    that would overflow the destination are rejected or partial-split
+//!    to fit, each checked against its *own destination's* budget.
 //!
 //! A useful identity (proved in `item.rs` tests): a head-tail Item's CA
 //! FLOPs are *exactly proportional to its width* — `pairs = W·(l+1)` —
@@ -62,8 +70,45 @@ pub struct SchedulerCfg {
     /// that would overflow the destination's arena, so emitted plans are
     /// feasible in bytes as well as balanced in FLOPs. Infeasible
     /// budgets (a shard that fits nowhere) degrade to best effort.
-    /// 0.0 disables memory-aware planning.
+    /// 0.0 disables memory-aware planning. This is the *uniform* budget;
+    /// [`ServerBelief::mem_budget`] overrides it per server.
     pub mem_budget: f64,
+}
+
+/// Per-server planning belief: what the scheduler assumes about one
+/// attention server's execution speed and arena headroom (ROADMAP's
+/// "belief-speed-aware scheduler" + "belief-byte-aware" follow-ups).
+///
+/// Sourced from the elastic layer: speeds come from
+/// [`crate::elastic::ServerPool::believed_speeds`] (scripted slowdowns
+/// and health-driven gray demotions), budgets from the §5 memory model
+/// ([`crate::memplan::MemReport`] / per-server `Arena` limits).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServerBelief {
+    /// Believed execution-rate multiplier (1.0 = nominal, 0.25 = four
+    /// times slower). Must be positive and finite.
+    pub speed: f64,
+    /// Hard transient-arena byte budget for this server; 0 falls back
+    /// to the uniform [`SchedulerCfg::mem_budget`].
+    pub mem_budget: f64,
+}
+
+impl Default for ServerBelief {
+    fn default() -> ServerBelief {
+        ServerBelief { speed: 1.0, mem_budget: 0.0 }
+    }
+}
+
+impl ServerBelief {
+    /// Nominal belief: full speed, no per-server byte budget.
+    pub fn nominal() -> ServerBelief {
+        ServerBelief::default()
+    }
+
+    /// One belief per entry of `speeds`, all sharing `mem_budget`.
+    pub fn from_speeds(speeds: &[f64], mem_budget: f64) -> Vec<ServerBelief> {
+        speeds.iter().map(|&speed| ServerBelief { speed, mem_budget }).collect()
+    }
 }
 
 impl Default for SchedulerCfg {
@@ -134,7 +179,10 @@ fn split_to_fit(it: &Item, headroom: f64, m: &ModelConfig) -> Option<usize> {
     }
 }
 
-/// Schedule a batch of Items onto `n_servers` attention servers.
+/// Schedule a batch of Items onto `n_servers` *uniform* attention
+/// servers (the paper's homogeneous §4.2 setting): nominal beliefs,
+/// with `cfg.mem_budget` as the shared arena budget. Delegates to
+/// [`schedule_with_beliefs`].
 ///
 /// Items whose `home >= n_servers` panic: homes and servers share the
 /// same index space (in-place attention servers, §4.1).
@@ -147,26 +195,101 @@ pub fn schedule(
     cfg: &SchedulerCfg,
 ) -> Plan {
     assert!(n_servers > 0);
+    let beliefs = vec![ServerBelief::nominal(); n_servers];
+    schedule_with_beliefs(items, &beliefs, f, prof, m, cfg)
+}
+
+/// Schedule a batch of Items onto one attention server per entry of
+/// `beliefs`, balancing **estimated seconds** (`item_cost / believed
+/// speed`) instead of raw FLOPs and holding every server's transient
+/// arena under its own byte budget.
+///
+/// With uniform beliefs (all speeds 1.0, all budgets 0) this is exactly
+/// [`schedule`]. The emitted [`Plan`]'s `server_load` is in *believed
+/// seconds* and `target_load` is the ideal makespan
+/// `T̄ = Σ cost / Σ speed`, so [`Plan::predicted_makespan`] compares
+/// directly across belief vectors.
+///
+/// # Example: a server believed 4× slow gets ~¼ the work at plan time
+///
+/// ```
+/// use distca::config::{ClusterConfig, ModelConfig};
+/// use distca::coordinator::{
+///     schedule, schedule_with_beliefs, Item, Profiler, SchedulerCfg, ServerBelief,
+/// };
+/// use distca::model::FlopsModel;
+///
+/// let m = ModelConfig::llama3_8b();
+/// let f = FlopsModel::new(&m);
+/// let prof = Profiler::analytic(&f, &ClusterConfig::h200(1));
+/// let items: Vec<Item> =
+///     (0u32..8).map(|d| Item::whole_doc(d, 8192, d as usize % 2)).collect();
+/// let cfg = SchedulerCfg::default();
+///
+/// let speeds = [0.25, 1.0];
+/// let aware =
+///     schedule_with_beliefs(&items, &ServerBelief::from_speeds(&speeds, 0.0), &f, &prof, &m, &cfg);
+/// let uniform = schedule(&items, 2, &f, &prof, &m, &cfg);
+///
+/// // Evaluated under the believed speeds, the speed-aware plan's
+/// // makespan beats the uniform (FLOPs-balanced) plan's.
+/// assert!(aware.predicted_makespan() < uniform.makespan_under(&speeds));
+/// ```
+pub fn schedule_with_beliefs(
+    items: &[Item],
+    beliefs: &[ServerBelief],
+    f: &FlopsModel,
+    prof: &Profiler,
+    m: &ModelConfig,
+    cfg: &SchedulerCfg,
+) -> Plan {
+    let n_servers = beliefs.len();
+    assert!(n_servers > 0);
+    let speeds: Vec<f64> = beliefs
+        .iter()
+        .map(|b| {
+            assert!(b.speed > 0.0 && b.speed.is_finite(), "bad believed speed {}", b.speed);
+            b.speed
+        })
+        .collect();
+    // Effective per-server arena budget: the belief's own, else the
+    // uniform cfg one; 0 = unconstrained.
+    let budget: Vec<f64> = beliefs
+        .iter()
+        .map(|b| if b.mem_budget > 0.0 { b.mem_budget } else { cfg.mem_budget })
+        .collect();
+    let mem_aware = budget.iter().any(|&b| b > 0.0);
+    let headroom_of = |d: usize, mem: &[f64]| -> f64 {
+        if budget[d] > 0.0 {
+            budget[d] - mem[d]
+        } else {
+            f64::INFINITY
+        }
+    };
     // Per-server worklists, seeded at home. Costs are cached alongside
     // each item: the candidate scan touches every item per move, and
     // profiler interpolation dominated the profile before caching
     // (see EXPERIMENTS.md §Perf).
     // (item, cached CA cost, cached arena bytes) per server.
     let mut server_items: Vec<Vec<(Item, f64, f64)>> = vec![Vec::new(); n_servers];
+    // Estimated *seconds* per server under its believed speed.
     let mut load = vec![0.0f64; n_servers];
     // Per-server transient arena bytes (in-place Q+KV of every assigned
-    // CA-task) — the quantity `cfg.mem_budget` hard-bounds.
+    // CA-task) — the quantity the byte budgets hard-bound.
     let mut mem = vec![0.0f64; n_servers];
+    let mut total_work = 0.0f64;
     for it in items {
         assert!(it.home < n_servers, "item home {} >= n_servers {n_servers}", it.home);
         let cost = item_cost(it, prof);
         let bytes = item_mem(it, m);
-        load[it.home] += cost;
+        load[it.home] += cost / speeds[it.home];
         mem[it.home] += bytes;
+        total_work += cost;
         server_items[it.home].push((*it, cost, bytes));
     }
-    let total: f64 = load.iter().sum();
-    let target = total / n_servers as f64;
+    let speed_sum: f64 = speeds.iter().sum();
+    // Ideal makespan: every server busy exactly T̄ seconds.
+    let target = total_work / speed_sum;
     let tol = cfg.tolerance * target;
     // Appendix-A overlap window: how many dispatch bytes a destination
     // may receive per layer and still hide them under compute.
@@ -185,24 +308,32 @@ pub fn schedule(
     // balancing loop below never re-overflows a repaired server: splits
     // only shrink the source's bytes and every migration re-checks the
     // destination.
-    if cfg.mem_budget > 0.0 && n_servers > 1 {
+    if mem_aware && n_servers > 1 {
         let mut repair_moves = 0usize;
         while repair_moves < cfg.max_moves {
+            // Worst offender: the server most over its *own* budget.
             let src = match (0..n_servers)
-                .filter(|&s| mem[s] > cfg.mem_budget)
-                .max_by(|&a, &b| mem[a].partial_cmp(&mem[b]).unwrap())
+                .filter(|&s| budget[s] > 0.0 && mem[s] > budget[s])
+                .max_by(|&a, &b| {
+                    (mem[a] - budget[a]).partial_cmp(&(mem[b] - budget[b])).unwrap()
+                })
             {
                 Some(s) => s,
                 None => break, // every arena fits
             };
-            let dst = match (0..n_servers)
-                .filter(|&d| d != src)
-                .max_by(|&a, &b| mem[b].partial_cmp(&mem[a]).unwrap())
-            {
+            // Best destination: the most remaining byte headroom under
+            // its own budget (unconstrained servers tie at infinity and
+            // break toward the fewest resident bytes).
+            let dst = match (0..n_servers).filter(|&d| d != src).max_by(|&a, &b| {
+                headroom_of(a, &mem)
+                    .partial_cmp(&headroom_of(b, &mem))
+                    .unwrap()
+                    .then(mem[b].partial_cmp(&mem[a]).unwrap())
+            }) {
                 Some(d) => d,
                 None => break,
             };
-            let headroom = cfg.mem_budget - mem[dst];
+            let headroom = headroom_of(dst, &mem);
             if headroom <= 0.0 {
                 break; // no destination has any arena space left
             }
@@ -221,8 +352,8 @@ pub fn schedule(
                 let (it, f_item, m_item) = server_items[src][idx];
                 if m_item <= headroom {
                     server_items[src].swap_remove(idx);
-                    load[src] -= f_item;
-                    load[dst] += f_item;
+                    load[src] -= f_item / speeds[src];
+                    load[dst] += f_item / speeds[dst];
                     mem[src] -= m_item;
                     mem[dst] += m_item;
                     if it.home != dst {
@@ -240,9 +371,9 @@ pub fn schedule(
                         (item_cost(&outer, prof), item_cost(&inner, prof));
                     let (m_outer, m_inner) = (item_mem(&outer, m), item_mem(&inner, m));
                     server_items[src][idx] = (inner, c_inner, m_inner);
-                    load[src] += c_inner - f_item;
+                    load[src] += (c_inner - f_item) / speeds[src];
                     mem[src] += m_inner - m_item;
-                    load[dst] += c_outer;
+                    load[dst] += c_outer / speeds[dst];
                     mem[dst] += m_outer;
                     if outer.home != dst {
                         recv_bytes[dst] += item_bytes(&outer, m);
@@ -278,25 +409,29 @@ pub fn schedule(
             None => break, // all servers within tolerance
         };
 
-        // Step 2: best candidate across all surplus sources.
+        // Step 2: best candidate across all surplus sources. Deficits
+        // and surpluses are *seconds*; candidate work is converted
+        // through the believed speeds on both ends.
         // (src, idx, move_cost, efficiency, dispatch_bytes)
         // Arena budget: bytes the destination can still absorb.
-        let dst_headroom = if cfg.mem_budget > 0.0 {
-            cfg.mem_budget - mem[dst]
-        } else {
-            f64::INFINITY
-        };
+        let dst_headroom = headroom_of(dst, &mem);
+        // Work (nominal cost) the destination absorbs within its deficit.
+        let absorb = deficit * speeds[dst];
         let mut best: Option<(usize, usize, f64, f64, f64)> = None;
         for src in 0..n_servers {
-            let surplus = load[src] - target;
-            if surplus <= 0.0 || src == dst {
+            if src == dst {
+                continue;
+            }
+            // Work the source can shed before dropping below target.
+            let surplus = (load[src] - target) * speeds[src];
+            if surplus <= 0.0 {
                 continue;
             }
             for (idx, &(ref it, f_item, m_item)) in server_items[src].iter().enumerate() {
                 if f_item <= 0.0 {
                     continue;
                 }
-                let df_max = f_item.min(surplus).min(deficit);
+                let df_max = f_item.min(surplus).min(absorb);
                 if df_max <= 0.0 {
                     continue;
                 }
@@ -335,8 +470,8 @@ pub fn schedule(
                         }
                     }
                 };
-                // Don't overshoot the destination badly.
-                if movable > deficit * 1.5 && movable < f_item * 0.999 {
+                // Don't overshoot the destination badly (time terms).
+                if movable > absorb * 1.5 && movable < f_item * 0.999 {
                     continue;
                 }
                 // Appendix-A overlap check: the destination must still be
@@ -363,7 +498,7 @@ pub fn schedule(
         let (it, f_item, m_item) = server_items[src][idx];
         if move_cost >= f_item * 0.999 {
             // Whole-item migration.
-            if cfg.mem_budget > 0.0 && mem[dst] + m_item > cfg.mem_budget + 1e-9 {
+            if budget[dst] > 0.0 && mem[dst] + m_item > budget[dst] + 1e-9 {
                 break; // defensive: the scan only offers fitting moves
             }
             if it.home != dst {
@@ -371,8 +506,8 @@ pub fn schedule(
             }
             server_items[src].swap_remove(idx);
             server_items[dst].push((it, f_item, m_item));
-            load[src] -= f_item;
-            load[dst] += f_item;
+            load[src] -= f_item / speeds[src];
+            load[dst] += f_item / speeds[dst];
             mem[src] -= m_item;
             mem[dst] += m_item;
         } else {
@@ -384,7 +519,7 @@ pub fn schedule(
             };
             let (outer, inner) = it.split_outer(q);
             let m_outer = item_mem(&outer, m);
-            if cfg.mem_budget > 0.0 && mem[dst] + m_outer > cfg.mem_budget + 1e-9 {
+            if budget[dst] > 0.0 && mem[dst] + m_outer > budget[dst] + 1e-9 {
                 break; // grid rounding overshot the arena headroom
             }
             if it.home != dst {
@@ -395,8 +530,8 @@ pub fn schedule(
             let m_inner = item_mem(&inner, m);
             server_items[src][idx] = (inner, c_inner, m_inner);
             server_items[dst].push((outer, c_outer, m_outer));
-            load[src] += c_inner - f_item;
-            load[dst] += c_outer;
+            load[src] += (c_inner - f_item) / speeds[src];
+            load[dst] += c_outer / speeds[dst];
             mem[src] += m_inner - m_item;
             mem[dst] += m_outer;
         }
@@ -868,6 +1003,116 @@ mod tests {
         }
         // A headroom below the minimal shard's bytes yields None.
         assert!(split_to_fit(&it, 1.0, &m).is_none());
+    }
+
+    // ----- belief-aware planning (heterogeneous servers) -----------------
+
+    #[test]
+    fn uniform_beliefs_reproduce_schedule_exactly() {
+        let (f, prof, m) = setup();
+        let mut rng = Rng::new(5);
+        let items: Vec<Item> = (0..24)
+            .map(|d| whole(d, (rng.gen_range(4, 96) * 256) as usize, (d % 4) as usize))
+            .collect();
+        let cfg = SchedulerCfg::default();
+        let nominal = vec![ServerBelief::nominal(); 4];
+        let a = schedule(&items, 4, &f, &prof, &m, &cfg);
+        let b = schedule_with_beliefs(&items, &nominal, &f, &prof, &m, &cfg);
+        assert_eq!(a.server_load, b.server_load);
+        assert_eq!(a.assignments.len(), b.assignments.len());
+        assert_eq!(a.target_load, b.target_load);
+    }
+
+    #[test]
+    fn slow_belief_receives_proportionally_less_work() {
+        let (f, prof, m) = setup();
+        let items: Vec<Item> = (0..16).map(|d| whole(d, 8192, (d % 4) as usize)).collect();
+        let speeds = [1.0, 0.25, 1.0, 1.0];
+        let plan = schedule_with_beliefs(
+            &items,
+            &ServerBelief::from_speeds(&speeds, 0.0),
+            &f,
+            &prof,
+            &m,
+            &SchedulerCfg::default(),
+        );
+        plan.validate(&items, &f).unwrap();
+        // server_load is believed seconds: time balance within tolerance.
+        assert!(
+            plan.predicted_makespan() <= plan.target_load * 1.25,
+            "makespan {} vs ideal {}",
+            plan.predicted_makespan(),
+            plan.target_load
+        );
+        // Nominal *work* on the slow server is ~its speed share:
+        // ideal 0.25/3.25 ≈ 7.7% of the total; allow generous slack.
+        let work: Vec<f64> = (0..4)
+            .map(|s| plan.server_load[s] * speeds[s])
+            .collect();
+        let total: f64 = work.iter().sum();
+        assert!(
+            work[1] < 0.20 * total,
+            "slow server kept {} of {total} work",
+            work[1]
+        );
+        assert!(
+            work[1] < work[0] && work[1] < work[2] && work[1] < work[3],
+            "the believed-slow server must hold the least work: {work:?}"
+        );
+    }
+
+    #[test]
+    fn per_server_budgets_bound_each_destination() {
+        // Two servers with tight budgets, two without: repair and
+        // migration must respect each destination's own budget.
+        let (f, prof, m) = setup();
+        let items: Vec<Item> = (0..12).map(|d| whole(d, 8192, (d % 4) as usize)).collect();
+        let per_item = crate::memplan::item_arena_bytes(&items[0], &m);
+        let beliefs = vec![
+            ServerBelief { speed: 1.0, mem_budget: 2.5 * per_item },
+            ServerBelief { speed: 1.0, mem_budget: 2.5 * per_item },
+            ServerBelief { speed: 1.0, mem_budget: 0.0 },
+            ServerBelief { speed: 1.0, mem_budget: 0.0 },
+        ];
+        let plan = schedule_with_beliefs(
+            &items,
+            &beliefs,
+            &f,
+            &prof,
+            &m,
+            &SchedulerCfg::default(),
+        );
+        plan.validate(&items, &f).unwrap();
+        let peaks = plan_peaks(&plan, &m);
+        for s in 0..2 {
+            assert!(
+                peaks[s] <= 2.5 * per_item + 1e-6,
+                "server {s} peak {} exceeds its own budget {}",
+                peaks[s],
+                2.5 * per_item
+            );
+        }
+    }
+
+    #[test]
+    fn belief_budget_overrides_uniform_cfg_budget() {
+        let (f, prof, m) = setup();
+        let items: Vec<Item> = (0..8).map(|d| whole(d, 8192, 0)).collect();
+        let per_item = crate::memplan::item_arena_bytes(&items[0], &m);
+        // Uniform cfg budget is generous; server 0's belief tightens it.
+        let beliefs = vec![
+            ServerBelief { speed: 1.0, mem_budget: 1.5 * per_item },
+            ServerBelief::nominal(),
+        ];
+        let cfg = SchedulerCfg { mem_budget: 100.0 * per_item, ..Default::default() };
+        let plan = schedule_with_beliefs(&items, &beliefs, &f, &prof, &m, &cfg);
+        plan.validate(&items, &f).unwrap();
+        let peaks = plan_peaks(&plan, &m);
+        assert!(
+            peaks[0] <= 1.5 * per_item + 1e-6,
+            "belief budget must override the uniform one: peak {}",
+            peaks[0]
+        );
     }
 
     #[test]

@@ -34,8 +34,9 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::coordinator::pingpong::{split_waves, PingPongBuffer, Wave};
-use crate::coordinator::{schedule, SchedulerCfg};
+use crate::coordinator::{schedule, schedule_with_beliefs, SchedulerCfg, ServerBelief};
 use crate::data::Document;
+use crate::memplan::max_headroom_target;
 use crate::exchange::transport::{ChannelTransport, Message, Transport};
 use crate::runtime::ca_exec::CaTaskTensors;
 use crate::server::{header_usize, header_word, pack_tag, unpack_tag, TaskOutput};
@@ -183,6 +184,114 @@ impl ElasticTask {
     }
 }
 
+/// Wire bytes of one task's tensors (f32 Q + K + V) — the live-byte
+/// unit the max-headroom re-dispatch targeting charges per dispatch.
+fn task_wire_bytes(t: &ElasticTask) -> f64 {
+    ((t.tensors.q.len() + t.tensors.k.len() + t.tensors.v.len()) * 4) as f64
+}
+
+/// Pre-dispatch belief re-targeting for pre-planned tick task lists —
+/// how the threaded [`ElasticCoordinator`] and the deterministic exec
+/// flavors (whose "plan" arrives as [`ElasticTask::server`]
+/// assignments) apply the §4.2 belief-speed rule *at plan time*: every
+/// server whose believed speed is below nominal keeps at most its
+/// speed-weighted fair share of the tick's causal-pair work; the excess
+/// (smallest tasks first) re-targets the least-loaded believed-fast
+/// server, falling back to the least relative-loaded other server when
+/// no fast one exists — one straggler's overflow never lands on
+/// another straggler. Servers with speed ≤ 0 (dead or draining) take
+/// nothing and shed everything to the dispatch-time remap. Returns how
+/// many tasks were re-targeted.
+pub fn retarget_for_beliefs(servers: &mut [usize], costs: &[f64], speeds: &[f64]) -> usize {
+    let n = speeds.len();
+    debug_assert_eq!(servers.len(), costs.len());
+    let mut load = vec![0.0f64; n];
+    let mut total = 0.0f64;
+    for (i, &v) in servers.iter().enumerate() {
+        if v < n && speeds[v] > 0.0 {
+            load[v] += costs[i];
+            total += costs[i];
+        }
+    }
+    let speed_sum: f64 = speeds.iter().filter(|&&s| s > 0.0).sum();
+    let any_slow = speeds.iter().any(|&s| s > 0.0 && s < 1.0);
+    if !any_slow || speed_sum <= 0.0 || total <= 0.0 {
+        return 0;
+    }
+    let mut moved = 0usize;
+    for v in 0..n {
+        if speeds[v] <= 0.0 || speeds[v] >= 1.0 {
+            continue;
+        }
+        let share = total * speeds[v] / speed_sum;
+        while load[v] > share {
+            // Smallest positive-cost task currently targeted at v
+            // (zero-cost tasks cannot reduce the load — skip them so
+            // they never mask shed-able work behind them).
+            let mut pick: Option<usize> = None;
+            for (i, &s) in servers.iter().enumerate() {
+                if s == v && costs[i] > 0.0 && pick.map_or(true, |p| costs[i] < costs[p]) {
+                    pick = Some(i);
+                }
+            }
+            let Some(i) = pick else { break };
+            // Least-loaded believed-fast destination; any other live
+            // server (relative to its speed) only when none exists.
+            let mut dest = usize::MAX;
+            let mut best = f64::INFINITY;
+            for (d, &sp) in speeds.iter().enumerate() {
+                if d == v || sp < 1.0 {
+                    continue;
+                }
+                if load[d] < best {
+                    best = load[d];
+                    dest = d;
+                }
+            }
+            if dest == usize::MAX {
+                for (d, &sp) in speeds.iter().enumerate() {
+                    if d == v || sp <= 0.0 {
+                        continue;
+                    }
+                    let rel = load[d] / sp;
+                    if rel < best {
+                        best = rel;
+                        dest = d;
+                    }
+                }
+            }
+            if dest == usize::MAX {
+                break;
+            }
+            load[v] -= costs[i];
+            load[dest] += costs[i];
+            servers[i] = dest;
+            moved += 1;
+        }
+    }
+    moved
+}
+
+/// Seed slow-from-tick-0 believed speeds into a pool — the
+/// `--belief-speeds` CLI path, shared by the flat and PP simulators:
+/// entries below 1.0 degrade the server, exactly 1.0 is nominal.
+/// Speeds above nominal are rejected: the pool's belief model (gray
+/// demotion) only ever marks servers *slower* than nominal, and
+/// silently dropping a fast entry would diverge from `distca schedule
+/// --speeds`, which does honor them.
+pub fn seed_belief_speeds(pool: &mut ServerPool, speeds: &[f64]) -> Result<()> {
+    for (s, &sp) in speeds.iter().enumerate().take(pool.capacity()) {
+        anyhow::ensure!(
+            sp > 0.0 && sp <= 1.0 && sp.is_finite(),
+            "belief speed {sp} for server {s} must be in (0, 1] (1.0 = nominal)"
+        );
+        if sp < 1.0 {
+            pool.degrade(s, sp);
+        }
+    }
+    Ok(())
+}
+
 /// Knobs for the threaded elastic runtime.
 #[derive(Debug, Clone)]
 pub struct ElasticCfg {
@@ -245,6 +354,10 @@ pub struct TickStats {
     pub scaled_down: usize,
     /// Servers auto-demoted to `Slow` by the gray-health verdict.
     pub gray_demoted: usize,
+    /// Tasks re-targeted off believed-slow servers *at plan time*
+    /// ([`retarget_for_beliefs`]) — mitigation that needed no deadline,
+    /// no cancel, and no duplicate compute.
+    pub belief_shed: usize,
     /// Re-dispatches attributed to each nano-batch wave (flat ticks use
     /// only the ping slot).
     pub wave_redispatched: [usize; 2],
@@ -402,6 +515,26 @@ impl ElasticCoordinator {
         }
     }
 
+    /// Plan-time belief application for one tick's pre-planned task
+    /// list: re-target believed-slow servers' excess
+    /// ([`retarget_for_beliefs`] — a server demoted to Gray/`Slow`
+    /// receives proportionally less work *before* any bytes move) and
+    /// seed the per-server live-byte tally that max-headroom
+    /// re-dispatch targeting charges against. Returns the per-task
+    /// server assignment and the tally.
+    fn belief_plan(&self, tasks: &[ElasticTask], stats: &mut TickStats) -> (Vec<usize>, Vec<f64>) {
+        let mut planned: Vec<usize> = tasks.iter().map(|t| t.server).collect();
+        let costs: Vec<f64> = tasks
+            .iter()
+            .map(|t| (t.tensors.q_len * t.tensors.kv_len) as f64)
+            .collect();
+        let speeds: Vec<f64> = (0..self.n_servers)
+            .map(|s| if self.pool.is_schedulable(s) { self.pool.speed(s) } else { 0.0 })
+            .collect();
+        stats.belief_shed = retarget_for_beliefs(&mut planned, &costs, &speeds);
+        (planned, vec![0.0; self.n_servers])
+    }
+
     /// The ping-boundary autoscaling step ([`Autoscaler::decide_wave`]
     /// on the wave clock): growth restores dead servers (never joins —
     /// the thread pool is fixed at spawn) and revives their workers;
@@ -494,15 +627,23 @@ impl ElasticCoordinator {
     ///   to a server with headroom (counted in `stats.oom_evicted`).
     ///   The victim survives: the caller revives it right after the
     ///   wave, transport order bounding the drop window.
+    ///
+    /// `planned` is the per-task server assignment after plan-time
+    /// belief re-targeting ([`retarget_for_beliefs`]); `live_bytes` is
+    /// the per-server dispatched-byte tally this tick, which remap /
+    /// drain / OOM targeting consults max-headroom-first
+    /// ([`max_headroom_target`]) instead of round-robin.
     #[allow(clippy::too_many_arguments)]
     fn dispatch_wave(
         &mut self,
         tick: usize,
         tasks: &[ElasticTask],
+        planned: &[usize],
         idxs: &[usize],
         faults: &MidTickFaults,
         assigned: &mut BTreeMap<u64, usize>,
         dispatch_at: &mut BTreeMap<u64, Instant>,
+        live_bytes: &mut [f64],
         stats: &mut TickStats,
     ) -> Result<()> {
         let (kills, drains, ooms) = (&faults.kills, &faults.drains, &faults.ooms);
@@ -513,20 +654,19 @@ impl ElasticCoordinator {
             .filter(|s| !kills.contains(s) && !drains.contains(s) && !ooms.contains(s))
             .collect();
         anyhow::ensure!(!targets.is_empty(), "no live servers to dispatch to");
-        let mut rr = 0usize;
         let mut per_server: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
         for &i in idxs {
-            let t = &tasks[i];
-            assert!(t.server < self.n_servers, "bad server {}", t.server);
-            let dest = if self.pool.is_schedulable(t.server) {
-                t.server
+            let srv = planned[i];
+            assert!(srv < self.n_servers, "bad server {srv}");
+            let dest = if self.pool.is_schedulable(srv) {
+                live_bytes[srv] += task_wire_bytes(&tasks[i]);
+                srv
             } else {
                 // Planned against a stale membership epoch: re-plan onto
-                // a live server before any bytes move (no loss).
+                // the live server with the most arena headroom before
+                // any bytes move (no loss).
                 stats.remapped += 1;
-                let d = targets[rr % targets.len()];
-                rr += 1;
-                d
+                max_headroom_target(&targets, live_bytes, 0.0, task_wire_bytes(&tasks[i]))
             };
             per_server.entry(dest).or_default().push(i);
         }
@@ -552,22 +692,26 @@ impl ElasticCoordinator {
                 }
                 if oomed_here && k >= cut {
                     // The evicted tail: shipped (and dropped) at the
-                    // victim, then re-sent to a server with headroom.
+                    // victim, then re-sent to the server with the most
+                    // arena headroom.
                     self.send_data(srv, tick, &tasks[i]);
                     stats.oom_evicted += 1;
-                    let d = targets[rr % targets.len()];
-                    rr += 1;
+                    let d = max_headroom_target(
+                        &targets,
+                        live_bytes,
+                        0.0,
+                        task_wire_bytes(&tasks[i]),
+                    );
                     self.send_data(d, tick, &tasks[i]);
                     assigned.insert(tasks[i].tag(), d);
                     dispatch_at.insert(tasks[i].tag(), Instant::now());
                     continue;
                 }
                 let dest = if drained_here && k >= cut {
-                    // Partial drain: redirect the unstarted tail.
+                    // Partial drain: redirect the unstarted tail,
+                    // max-headroom-first.
                     stats.drain_redirected += 1;
-                    let d = targets[rr % targets.len()];
-                    rr += 1;
-                    d
+                    max_headroom_target(&targets, live_bytes, 0.0, task_wire_bytes(&tasks[i]))
                 } else {
                     if drained_here {
                         stats.drain_kept += 1;
@@ -610,6 +754,7 @@ impl ElasticCoordinator {
         let mut stats = TickStats { tick, n_tasks: tasks.len(), ..Default::default() };
         let faults = self.apply_tick_events(tick, fault);
         self.gray_demote(&mut stats);
+        let (planned, mut live_bytes) = self.belief_plan(tasks, &mut stats);
 
         let mut assigned: BTreeMap<u64, usize> = BTreeMap::new();
         let mut dispatch_at: BTreeMap<u64, Instant> = BTreeMap::new();
@@ -617,7 +762,15 @@ impl ElasticCoordinator {
         let stamp = self.pool.stamp(tick, Wave::Ping);
         stats.wave_epochs[Wave::Ping.index()] = stamp.epoch;
         self.dispatch_wave(
-            tick, tasks, &all, &faults, &mut assigned, &mut dispatch_at, &mut stats,
+            tick,
+            tasks,
+            &planned,
+            &all,
+            &faults,
+            &mut assigned,
+            &mut dispatch_at,
+            &mut live_bytes,
+            &mut stats,
         )?;
         let mut buf = PingPongBuffer::new();
         buf.begin_wave(Wave::Ping, stamp.epoch, tasks.iter().map(|t| t.tag()));
@@ -636,8 +789,15 @@ impl ElasticCoordinator {
             self.send_ctrl(o, CTRL_OOM_CLEAR, vec![]);
         }
 
-        let outputs =
-            self.gather(tick, tasks, &mut assigned, &mut dispatch_at, &mut buf, &mut stats)?;
+        let outputs = self.gather(
+            tick,
+            tasks,
+            &mut assigned,
+            &mut dispatch_at,
+            &mut buf,
+            &mut live_bytes,
+            &mut stats,
+        )?;
         debug_assert!(buf.drained(Wave::Ping), "gather returned with tags in flight");
 
         // Drains complete once the tick is fully gathered.
@@ -674,6 +834,7 @@ impl ElasticCoordinator {
         // Wave-clock autoscaling at the ping boundary (the only decision
         // point — see `autoscale_boundary`).
         let scale_drained = self.autoscale_boundary(tick, &mut stats);
+        let (planned, mut live_bytes) = self.belief_plan(tasks, &mut stats);
 
         // Two near-equal-weight nano-batch waves.
         let (ping_idx, pong_idx) =
@@ -687,7 +848,15 @@ impl ElasticCoordinator {
         let ping_stamp = self.pool.stamp(tick, Wave::Ping);
         stats.wave_epochs[Wave::Ping.index()] = ping_stamp.epoch;
         self.dispatch_wave(
-            tick, tasks, &ping_idx, &faults, &mut assigned, &mut dispatch_at, &mut stats,
+            tick,
+            tasks,
+            &planned,
+            &ping_idx,
+            &faults,
+            &mut assigned,
+            &mut dispatch_at,
+            &mut live_bytes,
+            &mut stats,
         )?;
         buf.begin_wave(
             Wave::Ping,
@@ -723,10 +892,12 @@ impl ElasticCoordinator {
         self.dispatch_wave(
             tick,
             tasks,
+            &planned,
             &pong_idx,
             &MidTickFaults::default(),
             &mut assigned,
             &mut dispatch_at,
+            &mut live_bytes,
             &mut stats,
         )?;
         buf.begin_wave(
@@ -735,8 +906,15 @@ impl ElasticCoordinator {
             pong_idx.iter().map(|&i| tasks[i].tag()),
         );
 
-        let outputs =
-            self.gather(tick, tasks, &mut assigned, &mut dispatch_at, &mut buf, &mut stats)?;
+        let outputs = self.gather(
+            tick,
+            tasks,
+            &mut assigned,
+            &mut dispatch_at,
+            &mut buf,
+            &mut live_bytes,
+            &mut stats,
+        )?;
         debug_assert!(
             buf.drained(Wave::Ping) && buf.drained(Wave::Pong),
             "gather returned with a wave still in flight"
@@ -758,6 +936,9 @@ impl ElasticCoordinator {
 
     /// Gather a tick's outputs with deadline-based speculation,
     /// first-response-wins dedup, and per-wave re-dispatch accounting.
+    /// Speculative re-dispatch targets the healthy server with the most
+    /// arena headroom (`live_bytes`), not round-robin.
+    #[allow(clippy::too_many_arguments)]
     fn gather(
         &mut self,
         tick: usize,
@@ -765,6 +946,7 @@ impl ElasticCoordinator {
         assigned: &mut BTreeMap<u64, usize>,
         dispatch_at: &mut BTreeMap<u64, Instant>,
         buf: &mut PingPongBuffer,
+        live_bytes: &mut [f64],
         stats: &mut TickStats,
     ) -> Result<BTreeMap<u64, TaskOutput>> {
         // Expected set (tags are unique within a tick: a valid plan
@@ -915,15 +1097,18 @@ impl ElasticCoordinator {
                 !healthy.is_empty(),
                 "no healthy attention servers left to re-dispatch to"
             );
-            let mut rr = 0usize;
             for (&srv, tags) in &by_srv {
                 for &tag in tags {
                     // Best-effort cancel at the suspect; correctness rests
                     // on first-response-wins dedup either way.
                     self.send_ctrl(srv, CANCEL_FLAG | tag, vec![header_word(tick)]);
                     stats.cancels_sent += 1;
-                    let target = healthy[rr % healthy.len()];
-                    rr += 1;
+                    let target = max_headroom_target(
+                        &healthy,
+                        live_bytes,
+                        0.0,
+                        task_wire_bytes(&tasks[expected[&tag]]),
+                    );
                     self.send_data(target, tick, &tasks[expected[&tag]]);
                     assigned.insert(tag, target);
                     dispatch_at.insert(tag, Instant::now());
@@ -1049,6 +1234,9 @@ pub struct ExecReport {
     pub oom_evicted: Vec<u64>,
     /// Tags re-planned pre-dispatch against a fresh membership epoch.
     pub remapped: Vec<u64>,
+    /// Tags re-targeted off believed-slow servers at plan time
+    /// ([`retarget_for_beliefs`]).
+    pub belief_shed: Vec<u64>,
     /// Completions suppressed by first-response-wins dedup.
     pub duplicates: usize,
     /// Per-server peak transient bytes of the kept computations,
@@ -1119,18 +1307,21 @@ fn exec_complete(
 /// remapped pre-dispatch, a kill victim computes only the half shipped
 /// before the kill (the rest is re-sent to survivors), a drainee keeps
 /// its started half and the unstarted tail is redirected, and an OOM
-/// victim's shipped tail is evicted to servers with headroom (the
-/// victim computes its pre-overflow half and survives the tick).
+/// victim's shipped tail is evicted (the victim computes its
+/// pre-overflow half and survives the tick). Every recovery target is
+/// picked max-byte-headroom-first against the shared `live_bytes`
+/// tally, mirroring the threaded path.
 #[allow(clippy::too_many_arguments)]
 fn exec_wave(
     pool: &ServerPool,
     tasks: &[ElasticTask],
+    planned: &[usize],
     idxs: &[usize],
     faults: &MidTickFaults,
     compute: &mut dyn CaCompute,
     outputs: &mut BTreeMap<u64, TaskOutput>,
     report: &mut ExecReport,
-    rr: &mut usize,
+    live_bytes: &mut [f64],
 ) -> Result<()> {
     let (kills, drains, ooms) = (&faults.kills, &faults.drains, &faults.ooms);
     let targets: Vec<usize> = pool
@@ -1141,14 +1332,13 @@ fn exec_wave(
     anyhow::ensure!(!targets.is_empty(), "no live servers to dispatch to");
     let mut per_server: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
     for &i in idxs {
-        let t = &tasks[i];
-        let dest = if pool.is_schedulable(t.server) {
-            t.server
+        let srv = planned[i];
+        let dest = if pool.is_schedulable(srv) {
+            live_bytes[srv] += task_wire_bytes(&tasks[i]);
+            srv
         } else {
-            report.remapped.push(t.tag());
-            let d = targets[*rr % targets.len()];
-            *rr += 1;
-            d
+            report.remapped.push(tasks[i].tag());
+            max_headroom_target(&targets, live_bytes, 0.0, task_wire_bytes(&tasks[i]))
         };
         per_server.entry(dest).or_default().push(i);
     }
@@ -1169,28 +1359,56 @@ fn exec_wave(
                 // Partial drain: the unstarted tail is redirected — never
                 // a task the drainee already started.
                 report.drain_redirected.push(tag);
-                let d = targets[*rr % targets.len()];
-                *rr += 1;
+                let d =
+                    max_headroom_target(&targets, live_bytes, 0.0, task_wire_bytes(&tasks[i]));
                 exec_complete(tasks, i, d, compute, outputs, report)?;
             } else if oomed {
                 // Arena overflow: the shipped tail is evicted and
-                // re-sent to a server with headroom (§5; recovery is one
-                // resend — §3 statelessness).
+                // re-sent to the server with the most headroom (§5;
+                // recovery is one resend — §3 statelessness).
                 report.oom_evicted.push(tag);
-                let d = targets[*rr % targets.len()];
-                *rr += 1;
+                let d =
+                    max_headroom_target(&targets, live_bytes, 0.0, task_wire_bytes(&tasks[i]));
                 exec_complete(tasks, i, d, compute, outputs, report)?;
             } else {
                 // Killed: shipped after the kill, genuinely lost; the
                 // recovery is one resend of the same bytes (§3).
                 report.redispatched.push(tag);
-                let d = targets[*rr % targets.len()];
-                *rr += 1;
+                let d =
+                    max_headroom_target(&targets, live_bytes, 0.0, task_wire_bytes(&tasks[i]));
                 exec_complete(tasks, i, d, compute, outputs, report)?;
             }
         }
     }
     Ok(())
+}
+
+/// Shared plan-time belief step of the exec flavors: apply
+/// [`retarget_for_beliefs`] to the pre-planned `ElasticTask::server`
+/// assignments using the pool's believed speeds, recording re-targeted
+/// tags in the report. Returns the per-task servers plus a zeroed
+/// live-byte tally for the wave executor.
+fn exec_belief_plan(
+    pool: &ServerPool,
+    tasks: &[ElasticTask],
+    report: &mut ExecReport,
+) -> (Vec<usize>, Vec<f64>) {
+    let mut planned: Vec<usize> = tasks.iter().map(|t| t.server).collect();
+    let costs: Vec<f64> = tasks
+        .iter()
+        .map(|t| (t.tensors.q_len * t.tensors.kv_len) as f64)
+        .collect();
+    let speeds: Vec<f64> = (0..pool.capacity())
+        .map(|s| if pool.is_schedulable(s) { pool.speed(s) } else { 0.0 })
+        .collect();
+    let before = planned.clone();
+    retarget_for_beliefs(&mut planned, &costs, &speeds);
+    for (i, t) in tasks.iter().enumerate() {
+        if planned[i] != before[i] {
+            report.belief_shed.push(t.tag());
+        }
+    }
+    (planned, vec![0.0; pool.capacity()])
 }
 
 /// Deterministic single-threaded execution of one flat elastic tick:
@@ -1210,9 +1428,19 @@ pub fn run_elastic_exec(
     let faults = partition_mid_tick(&deferred, pool.capacity());
     let mut outputs: BTreeMap<u64, TaskOutput> = BTreeMap::new();
     let mut report = ExecReport::default();
-    let mut rr = 0usize;
+    let (planned, mut live_bytes) = exec_belief_plan(pool, tasks, &mut report);
     let all: Vec<usize> = (0..tasks.len()).collect();
-    exec_wave(pool, tasks, &all, &faults, compute, &mut outputs, &mut report, &mut rr)?;
+    exec_wave(
+        pool,
+        tasks,
+        &planned,
+        &all,
+        &faults,
+        compute,
+        &mut outputs,
+        &mut report,
+        &mut live_bytes,
+    )?;
     for &k in &faults.kills {
         pool.kill(k);
     }
@@ -1244,9 +1472,17 @@ pub fn run_elastic_exec_pp(
         split_waves(tasks, |t| (t.tensors.q_len * t.tensors.kv_len) as f64);
     let mut outputs: BTreeMap<u64, TaskOutput> = BTreeMap::new();
     let mut report = ExecReport::default();
-    let mut rr = 0usize;
+    let (planned, mut live_bytes) = exec_belief_plan(pool, tasks, &mut report);
     exec_wave(
-        pool, tasks, &ping_idx, &faults, compute, &mut outputs, &mut report, &mut rr,
+        pool,
+        tasks,
+        &planned,
+        &ping_idx,
+        &faults,
+        compute,
+        &mut outputs,
+        &mut report,
+        &mut live_bytes,
     )?;
     for &k in &faults.kills {
         pool.kill(k);
@@ -1259,12 +1495,13 @@ pub fn run_elastic_exec_pp(
     exec_wave(
         pool,
         tasks,
+        &planned,
         &pong_idx,
         &MidTickFaults::default(),
         compute,
         &mut outputs,
         &mut report,
-        &mut rr,
+        &mut live_bytes,
     )?;
     for &d in &faults.drains {
         pool.leave(d);
@@ -1290,6 +1527,23 @@ pub struct ElasticSimCfg {
     pub autoscale: Option<super::autoscale::AutoscaleCfg>,
     /// Health tracking knobs (straggler threshold etc.).
     pub health: HealthCfg,
+    /// Believed per-server speeds seeded *before tick 0*
+    /// (slow-from-tick-0 beliefs, CLI `--belief-speeds`): entries below
+    /// 1.0 degrade the pool at start, so the very first plan gives
+    /// those servers proportionally less work; each entry must be in
+    /// (0, 1] ([`seed_belief_speeds`]). In this simulator pool state
+    /// doubles as ground truth (the engine reads its speeds from it),
+    /// so a seeded belief is an accurate one. `None` starts nominal.
+    pub belief_speeds: Option<Vec<f64>>,
+    /// Per-server transient arena byte budget (per GPU within the TP
+    /// group, like [`SimTick::mem_peak_bytes`]; 0 disables). Enforced
+    /// *organically* by the engine ([`Engine::set_mem_budget`]:
+    /// over-budget admissions evict and re-dispatch with no scripted
+    /// `oom:` event) and handed to the belief-aware scheduler so
+    /// feasible budgets are planned around rather than hit. Derive a
+    /// value from a [`crate::memplan::MemReport`] via
+    /// [`sim_auto_mem_budget`].
+    pub mem_budget: f64,
 }
 
 impl Default for ElasticSimCfg {
@@ -1299,8 +1553,48 @@ impl Default for ElasticSimCfg {
             detection_frac: 0.1,
             autoscale: None,
             health: HealthCfg::default(),
+            belief_speeds: None,
+            mem_budget: 0.0,
         }
     }
+}
+
+/// Derive an organic per-server byte budget (per GPU within the TP
+/// group) for [`run_elastic_sim`] from the §5 memory model: plan the
+/// first batch unconstrained, replay it through per-server arenas
+/// ([`crate::memplan::MemReport`]), and return `frac ×` the peak
+/// server's bytes. `frac ≥ 1` leaves feasible headroom; `frac < 1`
+/// yields a fault-free-but-tight configuration whose overflow evicts
+/// organically through the engine's budget.
+pub fn sim_auto_mem_budget(
+    batches: &[Vec<Document>],
+    n_servers: usize,
+    p: &SimParams,
+    frac: f64,
+) -> Result<f64> {
+    anyhow::ensure!(
+        !batches.is_empty() && n_servers > 0,
+        "empty configuration for auto mem budget"
+    );
+    anyhow::ensure!(frac > 0.0 && frac.is_finite(), "bad budget fraction {frac}");
+    let chunks = distca_placement(&batches[0], n_servers);
+    let mut items = crate::coordinator::scheduler::items_from_chunks(&chunks);
+    for it in &mut items {
+        if it.home >= n_servers {
+            it.home = n_servers - 1;
+        }
+    }
+    let plan = schedule(
+        &items,
+        n_servers,
+        &p.f,
+        &p.prof,
+        &p.model,
+        &SchedulerCfg { tolerance: p.tolerance, ..Default::default() },
+    );
+    let mem = crate::memplan::MemReport::for_plan(&plan, &p.model, 0.0)
+        .expect("unbounded replay cannot OOM");
+    Ok(frac * mem.max_peak() / p.tp as f64)
 }
 
 /// One simulated tick's outcome.
@@ -1410,6 +1704,10 @@ pub fn run_elastic_sim(
     let tp = p.tp as f64;
     let bw = p.cluster.ib_bw * tp;
     let mut pool = ServerPool::new(n_servers);
+    // Slow-from-tick-0 beliefs: seed the pool before the first plan.
+    if let Some(bs) = &cfg.belief_speeds {
+        seed_belief_speeds(&mut pool, bs)?;
+    }
     let mut health = HealthMonitor::new(n_servers, cfg.health.clone());
     let mut scaler = cfg.autoscale.clone().map(Autoscaler::new);
     let mut last_signals: Option<LoadSignals> = None;
@@ -1484,9 +1782,13 @@ pub fn run_elastic_sim(
                 it.home = n - 1;
             }
         }
-        let plan = schedule(
+        // Belief-aware plan (§4.2 heterogeneity): balance estimated
+        // seconds against the believed speeds, with the per-server byte
+        // budget (scheduler units are whole-server bytes, hence ×tp).
+        let beliefs = ServerBelief::from_speeds(&speeds, cfg.mem_budget * tp);
+        let plan = schedule_with_beliefs(
             &items,
-            n,
+            &beliefs,
             &p.f,
             &p.prof,
             &p.model,
@@ -1504,12 +1806,13 @@ pub fn run_elastic_sim(
                     / tp
             })
             .collect();
-        let fault_free = plan
-            .server_load
-            .iter()
-            .cloned()
-            .fold(0.0f64, f64::max)
-            / tp;
+        // Predicted makespan under the believed speeds, per GPU lane —
+        // what the tick costs when every belief is accurate and nothing
+        // faults.
+        let fault_free = plan.predicted_makespan() / tp;
+        // Nominal (speed-independent) work per server, for
+        // size-normalized health observations below.
+        let mut nominal_load = vec![0.0f64; n];
 
         // Per-assignment transient arena bytes (in-place Q+KV, per GPU
         // within the TP group) — engine-tracked live-byte footprints.
@@ -1519,14 +1822,21 @@ pub fn run_elastic_sim(
             .map(|a| crate::memplan::item_arena_bytes(&a.item, &p.model) / tp)
             .collect();
 
-        // Wave 0: the tick as dispatched, with faults biting.
+        // Wave 0: the tick as dispatched, with faults biting. A
+        // configured byte budget is enforced by the engine itself, so
+        // plans the scheduler could not fit in bytes evict organically
+        // (no scripted `oom:` needed).
         let mut eng = Engine::new(n);
         for (v, &s) in speeds.iter().enumerate() {
             eng.set_speed(v, s);
+            if cfg.mem_budget > 0.0 {
+                eng.set_mem_budget(v, cfg.mem_budget);
+            }
         }
         for (i, a) in plan.assignments.iter().enumerate() {
             let id = eng.add_task_mem(a.server, costs[i], &[], mem_bytes[i]);
             debug_assert_eq!(id, i);
+            nominal_load[a.server] += costs[i];
         }
         let faults = partition_mid_tick(&deferred, pool.capacity());
         let mut killed_virt: Vec<usize> = Vec::new();
@@ -1537,7 +1847,10 @@ pub fn run_elastic_sim(
         let mut oom_time_max = 0.0f64;
         for &server in &faults.kills {
             if let Some(v) = view.to_virtual(server) {
-                let span = plan.server_load[v] / tp / speeds[v];
+                // server_load is believed seconds, and in this simulator
+                // belief == engine speed, so the victim's actual span is
+                // load/tp directly (no second speed division).
+                let span = plan.server_load[v] / tp;
                 let kill_time = cfg.kill_phase_frac * span;
                 eng.revoke_resource(v, kill_time);
                 killed_virt.push(v);
@@ -1551,7 +1864,7 @@ pub fn run_elastic_sim(
             // unstarted tail of the queue is revoked for re-dispatch,
             // and the server leaves at tick end.
             if let Some(v) = view.to_virtual(server) {
-                let span = plan.server_load[v] / tp / speeds[v];
+                let span = plan.server_load[v] / tp;
                 let drain_time = cfg.kill_phase_frac * span;
                 eng.drain_resource(v, drain_time);
                 drained_virt.push(v);
@@ -1565,7 +1878,7 @@ pub fn run_elastic_sim(
             // itself survives into the next tick: its buffers are
             // transient, so membership is untouched (§5).
             if let Some(v) = view.to_virtual(server) {
-                let span = plan.server_load[v] / tp / speeds[v];
+                let span = plan.server_load[v] / tp;
                 let oom_time = cfg.kill_phase_frac * span;
                 eng.revoke_resource(v, oom_time);
                 oomed_virt.push(v);
@@ -1581,18 +1894,29 @@ pub fn run_elastic_sim(
             .fold(0.0f64, f64::max);
 
         // Feed the health monitor *normalized* slowness — observed busy
-        // time over the plan's predicted load — so task-count skew (few
-        // huge CA-tasks vs many small ones) cannot masquerade as ill
-        // health. A nominal server scores exactly 1.0, a half-speed
-        // server 2.0, regardless of what it was assigned.
+        // time over the assigned *nominal* work (not the believed
+        // seconds: belief must not launder a slow server's EWMA back to
+        // 1.0) — so task-count skew (few huge CA-tasks vs many small
+        // ones) cannot masquerade as ill health. A nominal server
+        // scores exactly 1.0, a half-speed server 2.0, regardless of
+        // what it was assigned.
         for v in 0..n {
-            let predicted = plan.server_load[v] / tp;
-            if predicted > 0.0 {
-                health.observe(view.to_physical(v), busy[v] / predicted);
+            if nominal_load[v] > 0.0 {
+                health.observe(view.to_physical(v), busy[v] / nominal_load[v]);
             }
         }
 
         let lost = eng.revoked();
+        // Organic OOM evictions (budget overflow with no scripted
+        // `oom:`): the allocator failure is synchronous, so each evicted
+        // task resends at its own eviction instant.
+        let mut organic_at: BTreeMap<usize, f64> = BTreeMap::new();
+        for &(_, t, at) in eng.oom_evictions() {
+            organic_at.insert(t, at);
+        }
+        if !organic_at.is_empty() {
+            events.push(format!("oom-organic:{}", organic_at.len()));
+        }
         let mut comm_bytes = plan.total_comm_bytes();
         let mut redispatched = 0usize;
         let mut speculated = 0usize;
@@ -1637,7 +1961,12 @@ pub fn run_elastic_sim(
             // allocator failure is observed at the server), so its
             // evictions also resend without a detection delay.
             let detect_kill = kill_time_max + cfg.detection_frac * fault_free;
-            for (j, &li) in lost.iter().enumerate() {
+            // Re-dispatch targets max-byte-headroom-first, fed by the
+            // engine's live arena state (per-resource byte peaks) — the
+            // recovered Q+KV lands where it is least likely to evict
+            // someone else.
+            let mut live_bytes = eng.mem_peak_per_resource();
+            for &li in &lost {
                 let a = &plan.assignments[li];
                 let resend =
                     crate::coordinator::comm::item_migration_bytes(&a.item, &p.model) / bw;
@@ -1647,10 +1976,17 @@ pub fn run_elastic_sim(
                     detect_kill
                 } else if oomed_virt.contains(&a.server) {
                     oom_time_max
+                } else if let Some(&t_ev) = organic_at.get(&li) {
+                    t_ev // synchronous eviction: resend at the overflow
                 } else {
                     drain_time_max
                 };
-                let target_v = rec_targets[j % rec_targets.len()];
+                let target_v = max_headroom_target(
+                    &rec_targets,
+                    &mut live_bytes,
+                    cfg.mem_budget,
+                    mem_bytes[li],
+                );
                 let ri = survivors.iter().position(|&v| v == target_v).unwrap();
                 rec.add_task_at(ri, costs[li] + resend, &[], at);
                 redispatched += 1;
@@ -1912,19 +2248,63 @@ mod tests {
     }
 
     #[test]
-    fn elastic_runtime_speculates_around_straggler() {
+    fn elastic_runtime_plans_around_known_straggler() {
         let mut rng = Rng::new(19);
         let tasks = mk_tasks(&mut rng, &[(0, 4, 0), (1, 4, 0), (2, 4, 1), (3, 4, 1)]);
-        // Server 1 runs at 1/10 speed: 15ms × 9 = 135ms extra per task,
-        // far past the 40ms grace.
+        // Server 1 is scripted to 1/10 speed — a *known* degradation:
+        // the pool is demoted before dispatch, so the belief-aware plan
+        // sheds its share at plan time (its fair share of 4 equal tasks
+        // at 0.1 vs 1.0 is < 1 task) and nothing needs the deadline
+        // machinery.
         let fault = FaultPlan::new().slow(1, 0, 0.1);
+        let mut co = ElasticCoordinator::spawn(2, ElasticCfg::default(), |_| Box::new(dims()));
+        let outputs = co.run_tick(0, &tasks, &fault).unwrap();
+        check_against_oracle(&tasks, &outputs);
+        let stats = co.shutdown().unwrap();
+        assert!(
+            stats[0].belief_shed >= 1,
+            "a known straggler must shed load at plan time: {stats:?}"
+        );
+        assert_eq!(
+            stats[0].redispatched, 0,
+            "plan-time mitigation needs no deadline re-dispatch: {stats:?}"
+        );
+    }
+
+    #[test]
+    fn elastic_runtime_speculates_around_residual_straggler() {
+        let mut rng = Rng::new(19);
+        // Eight equal tasks, four planned on each server. Server 1 is
+        // scripted to 0.15× speed: the belief-aware plan lets it keep
+        // its fair share (8 × 0.15/1.15 ≈ 1.04 → one task), and that
+        // residual task still carries an ~85ms injected delay — far
+        // past the 40ms grace, so the deadline machinery must speculate
+        // it away.
+        let tasks = mk_tasks(
+            &mut rng,
+            &[
+                (0, 4, 0),
+                (1, 4, 0),
+                (2, 4, 0),
+                (3, 4, 0),
+                (4, 4, 1),
+                (5, 4, 1),
+                (6, 4, 1),
+                (7, 4, 1),
+            ],
+        );
+        let fault = FaultPlan::new().slow(1, 0, 0.15);
         let mut co = ElasticCoordinator::spawn(2, quick_cfg(), |_| Box::new(dims()));
         let outputs = co.run_tick(0, &tasks, &fault).unwrap();
         check_against_oracle(&tasks, &outputs);
         let stats = co.shutdown().unwrap();
         assert!(
+            stats[0].belief_shed >= 1,
+            "the known part of the slowdown is mitigated at plan time: {stats:?}"
+        );
+        assert!(
             stats[0].redispatched >= 1,
-            "straggler work must be speculatively re-dispatched: {stats:?}"
+            "the residual straggler share must still be speculated: {stats:?}"
         );
     }
 
@@ -2286,20 +2666,87 @@ mod tests {
     }
 
     #[test]
-    fn sim_straggler_speculation_beats_waiting() {
+    fn sim_known_straggler_planned_around_not_speculated() {
         let p = sim_params();
         let batches = sim_batches(2, 4, 31);
+        // A scripted slowdown degrades the pool *before* planning, so
+        // the belief-aware scheduler gives the slow server its believed
+        // share up front: nothing is lost, nothing re-dispatched,
+        // nothing speculated, and every tick tracks its (belief-aware)
+        // predicted makespan — the straggler story turned predictive.
         let fault = FaultPlan::new().slow(1, 0, 0.2);
         let r = run_elastic_sim(&batches, 4, &p, &fault, &ElasticSimCfg::default()).unwrap();
-        let t0 = &r.per_tick[0];
-        assert!(t0.speculated > 0, "straggler must trigger speculation: {t0:?}");
-        // Un-mitigated, the tick would take ~1/0.2 = 5x fault-free.
+        assert_eq!(r.redispatched, 0);
+        assert_eq!(r.lost_tasks, 0);
+        for t in &r.per_tick {
+            assert_eq!(t.speculated, 0, "known slowness needs no speculation: {t:?}");
+            assert!(
+                t.tick_time <= t.fault_free_time * 1.05 + 1e-12,
+                "belief-aware plan must track its prediction: {t:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn sim_belief_seed_is_planned_around_from_tick0() {
+        // Slow-from-tick-0 beliefs via cfg (the `--belief-speeds` CLI
+        // path): one server believed (and, in this simulator, actually)
+        // 4× slow. The speed-aware plan absorbs it with zero post-hoc
+        // re-dispatches, and beats the uniform plan's simulated
+        // makespan on the same doc set.
+        let p = sim_params();
+        let batches = sim_batches(2, 4, 67);
+        let speeds = vec![1.0, 0.25, 1.0, 1.0];
+        let cfg = ElasticSimCfg {
+            belief_speeds: Some(speeds.clone()),
+            ..Default::default()
+        };
+        let r = run_elastic_sim(&batches, 4, &p, &FaultPlan::new(), &cfg).unwrap();
+        assert_eq!(r.redispatched, 0, "fault-free: zero post-hoc re-dispatches");
+        assert_eq!(r.lost_tasks, 0);
+        for t in &r.per_tick {
+            assert_eq!(t.speculated, 0);
+        }
+        // Uniform-plan reference: schedule ignoring the beliefs, then
+        // evaluate under the true speeds.
+        let chunks = distca_placement(&batches[0], 4);
+        let mut items = crate::coordinator::scheduler::items_from_chunks(&chunks);
+        for it in &mut items {
+            if it.home >= 4 {
+                it.home = 3;
+            }
+        }
+        let cfg_s = SchedulerCfg { tolerance: p.tolerance, ..Default::default() };
+        let uniform = schedule(&items, 4, &p.f, &p.prof, &p.model, &cfg_s);
+        let uniform_makespan = uniform.makespan_under(&speeds) / p.tp as f64;
         assert!(
-            t0.tick_time < 3.0 * t0.fault_free_time,
-            "speculation too weak: {} vs {}",
-            t0.tick_time,
-            t0.fault_free_time
+            r.per_tick[0].tick_time < uniform_makespan,
+            "speed-aware {} must strictly beat uniform {}",
+            r.per_tick[0].tick_time,
+            uniform_makespan
         );
+    }
+
+    #[test]
+    fn sim_tight_budget_evicts_organically() {
+        // The ROADMAP follow-up: no scripted `oom:` events anywhere —
+        // a fault-free-but-tight per-server byte budget must drive
+        // evictions through the engine's own budget enforcement, and
+        // the evictions must be recovered by re-dispatch.
+        let p = sim_params();
+        let batches = sim_batches(2, 4, 71);
+        let feasible = sim_auto_mem_budget(&batches, 4, &p, 1.0).unwrap();
+        assert!(feasible > 0.0);
+        let tight = ElasticSimCfg { mem_budget: 0.4 * feasible, ..Default::default() };
+        let r = run_elastic_sim(&batches, 4, &p, &FaultPlan::new(), &tight).unwrap();
+        assert!(r.lost_tasks > 0, "tight budget must evict organically: {r:?}");
+        assert_eq!(r.redispatched, r.lost_tasks);
+        assert!(r.per_tick.iter().any(|t| t.events.iter().any(|e| e.starts_with("oom-organic:"))));
+        // A generous budget is planned within: nothing evicts.
+        let roomy = ElasticSimCfg { mem_budget: 1.5 * feasible, ..Default::default() };
+        let r2 = run_elastic_sim(&batches, 4, &p, &FaultPlan::new(), &roomy).unwrap();
+        assert_eq!(r2.lost_tasks, 0, "a feasible budget must be planned around");
+        assert_eq!(r2.redispatched, 0);
     }
 
     #[test]
@@ -2391,6 +2838,44 @@ mod tests {
         let j = r.to_json();
         assert!(j.get("goodput_ratio").is_some());
         assert!(j.get("per_tick").unwrap().as_arr().unwrap().len() == 2);
+    }
+
+    // ----- plan-time belief re-targeting ---------------------------------
+
+    #[test]
+    fn retarget_moves_load_off_slow_belief() {
+        let costs = vec![1.0, 1.0, 1.0, 1.0];
+        let mut servers = vec![0, 0, 1, 1];
+        // Server 0 believed at quarter speed: fair share 4·(0.25/1.25)=0.8.
+        let moved = retarget_for_beliefs(&mut servers, &costs, &[0.25, 1.0]);
+        assert!(moved >= 1);
+        let load0 = servers.iter().filter(|&&s| s == 0).count();
+        assert!(load0 == 0, "believed-slow server kept {load0} tasks of a 0.8 share");
+    }
+
+    #[test]
+    fn retarget_never_sheds_onto_another_straggler() {
+        // Two believed-slow servers: one's excess must flow to the fast
+        // server, never to the other straggler.
+        let costs = vec![1.0; 10];
+        let mut servers = vec![0, 1, 1, 1, 1, 2, 2, 2, 2, 2];
+        retarget_for_beliefs(&mut servers, &costs, &[0.5, 0.5, 1.0]);
+        let load = |v: usize| servers.iter().filter(|&&s| s == v).count() as f64;
+        // Fair shares: 10·(0.5/2)=2.5 per straggler.
+        assert!(load(0) <= 2.5, "straggler 0 ended at {}", load(0));
+        assert!(load(1) <= 2.5, "straggler 1 ended at {}", load(1));
+        assert!(load(2) >= 5.0, "the fast server must absorb the excess");
+    }
+
+    #[test]
+    fn retarget_is_a_noop_for_uniform_or_dead_pools() {
+        let costs = vec![2.0, 3.0];
+        let mut servers = vec![0, 1];
+        assert_eq!(retarget_for_beliefs(&mut servers, &costs, &[1.0, 1.0]), 0);
+        assert_eq!(servers, vec![0, 1]);
+        // A dead (speed-0) server is the remap path's job, not ours.
+        assert_eq!(retarget_for_beliefs(&mut servers, &costs, &[0.0, 1.0]), 0);
+        assert_eq!(servers, vec![0, 1]);
     }
 
     #[test]

@@ -54,6 +54,36 @@
 //! taken over **live** members only, so a mass-kill cannot get the
 //! survivors declared stragglers against dead servers' stale EWMAs.
 //!
+//! **Belief-aware planning** (predictive, not reactive): the believed
+//! speeds those demotions produce feed the §4.2 scheduler directly —
+//! [`pool::ServerPool::believed_speeds`] →
+//! [`crate::coordinator::schedule_with_beliefs`] balances estimated
+//! *seconds* per server, so a server believed 4× slow receives ~¼ the
+//! work at plan time on every elastic path (the simulators plan items;
+//! the threaded/exec paths re-target their pre-planned task lists via
+//! [`failover::retarget_for_beliefs`]). Re-dispatch targeting is
+//! byte-aware too: remap, drain-tail, OOM, and speculation resends pick
+//! the live server with the most arena headroom
+//! ([`crate::memplan::max_headroom_target`]) instead of round-robin.
+//!
+//! # Example: beliefs feed the scheduler
+//!
+//! ```
+//! use distca::elastic::{FaultPlan, ServerPool};
+//!
+//! // A deterministic fault script round-trips through the compact spec.
+//! let plan = FaultPlan::parse_spec("kill:1@3,slow:2@4x0.25,rejoin:1@6").unwrap();
+//! assert_eq!(plan.to_spec(), "kill:1@3,slow:2@4x0.25,rejoin:1@6");
+//!
+//! // Membership + belief: a gray demotion becomes a believed speed the
+//! // scheduler plans against.
+//! let mut pool = ServerPool::new(4);
+//! pool.degrade(2, 0.25); // health verdict: ~4x slow
+//! pool.kill(3);
+//! let view = pool.view();
+//! assert_eq!(pool.believed_speeds(&view), vec![1.0, 1.0, 0.25]);
+//! ```
+//!
 //! Module map:
 //!
 //! * [`pool`] — [`pool::ServerPool`]: join/leave/drain/kill/restore
@@ -104,9 +134,10 @@ pub mod pp;
 
 pub use autoscale::{AutoscaleCfg, Autoscaler, LoadSignals, ScaleDecision};
 pub use failover::{
-    run_elastic_exec, run_elastic_exec_pp, run_elastic_sim, CaCompute, ElasticCfg,
-    ElasticCoordinator, ElasticSimCfg, ElasticSimReport, ElasticTask, ExecReport,
-    ReferenceCaCompute, SimTick, TickStats,
+    retarget_for_beliefs, run_elastic_exec, run_elastic_exec_pp, run_elastic_sim,
+    seed_belief_speeds, sim_auto_mem_budget, CaCompute, ElasticCfg, ElasticCoordinator,
+    ElasticSimCfg, ElasticSimReport, ElasticTask, ExecReport, ReferenceCaCompute, SimTick,
+    TickStats,
 };
 pub use fault::{partition_mid_tick, FaultEvent, FaultPlan, MidTickFaults};
 pub use health::{HealthCfg, HealthMonitor, Verdict};

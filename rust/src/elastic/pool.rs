@@ -183,6 +183,16 @@ impl ServerPool {
         stamp.epoch != self.epoch
     }
 
+    /// Believed execution speeds of the schedulable servers, in the
+    /// dense virtual order of `view` — the speeds slice the §4.2
+    /// belief-aware scheduler
+    /// ([`crate::coordinator::schedule_with_beliefs`]) plans against.
+    /// 1.0 = nominal; a `Degraded` server reports the factor the health
+    /// verdicts (or a scripted slowdown) demoted it to.
+    pub fn believed_speeds(&self, view: &PoolView) -> Vec<f64> {
+        (0..view.n()).map(|v| self.speed(view.to_physical(v))).collect()
+    }
+
     /// Dense scheduling view over the currently schedulable servers.
     /// Panics if the pool has none — the caller must check first.
     pub fn view(&self) -> PoolView {
@@ -303,6 +313,15 @@ mod tests {
         assert_eq!(v.to_physical(2), 3);
         assert_eq!(v.to_virtual(2), Some(1));
         assert_eq!(v.to_virtual(1), None);
+    }
+
+    #[test]
+    fn believed_speeds_follow_view_order() {
+        let mut p = ServerPool::new(4);
+        p.degrade(2, 0.25);
+        p.kill(1);
+        let v = p.view();
+        assert_eq!(p.believed_speeds(&v), vec![1.0, 0.25, 1.0]);
     }
 
     #[test]

@@ -44,8 +44,9 @@ use anyhow::Result;
 use crate::coordinator::pingpong::{
     layer_time_pingpong, layer_time_signal, layer_time_single_stream, split_nano, split_waves,
 };
-use crate::coordinator::{schedule, SchedulerCfg};
+use crate::coordinator::{schedule_with_beliefs, SchedulerCfg, ServerBelief};
 use crate::data::{pack_fixed, Document};
+use crate::memplan::{item_arena_bytes, max_headroom_target};
 use crate::model::flops::{CA_BWD_FACTOR, LINEAR_BWD_FACTOR};
 use crate::parallel::pipeline::{distca_ticks, PipePhase};
 use crate::sim::engine::Engine;
@@ -80,6 +81,16 @@ pub struct ElasticPpCfg {
     /// would only take effect next tick anyway; it is therefore deferred
     /// to the next ping boundary. `None` disables scaling.
     pub autoscale: Option<super::autoscale::AutoscaleCfg>,
+    /// Believed per-server speeds seeded *before tick 0*
+    /// (slow-from-tick-0 beliefs, CLI `--belief-speeds`; each entry in
+    /// (0, 1] — [`super::failover::seed_belief_speeds`]): entries below
+    /// 1.0 degrade the pool — the *belief* side only. Ground truth
+    /// stays with the fault plan's `slow:` events, so a seed paired
+    /// with a matching `slow:<srv>@0` models a correctly pre-known
+    /// straggler (planned around from the very first tick), while a
+    /// seed alone models a wrong belief the health loop will unwind.
+    /// `None` starts nominal.
+    pub belief_speeds: Option<Vec<f64>>,
 }
 
 impl Default for ElasticPpCfg {
@@ -89,6 +100,7 @@ impl Default for ElasticPpCfg {
             detection_frac: 0.1,
             health: HealthCfg::default(),
             autoscale: None,
+            belief_speeds: None,
         }
     }
 }
@@ -262,6 +274,11 @@ pub fn run_distca_pp_elastic(
     };
 
     let mut pool = ServerPool::new(n);
+    // Slow-from-tick-0 beliefs (belief side only — truth stays with the
+    // fault plan).
+    if let Some(bs) = &cfg.belief_speeds {
+        super::failover::seed_belief_speeds(&mut pool, bs)?;
+    }
     let mut health = HealthMonitor::new(n, cfg.health.clone());
     // Ground truth the coordinator cannot observe directly: a scripted
     // `Slow` changes the actual rate; the pool (belief) only learns
@@ -439,12 +456,23 @@ pub fn run_distca_pp_elastic(
 
         // Plan this tick's CA over the live membership (homes mapped
         // physical → virtual; a dead home's items re-home to a survivor:
-        // the attention-server role is elastic, the stage role is not).
+        // the attention-server role is elastic, the stage role is not),
+        // against the pool's *believed* speeds: a server demoted to
+        // Gray/Slow receives proportionally less work at plan time —
+        // no post-hoc rebalance pass.
         let mut items = pp_tick_items(&chunks, &active);
         for it in &mut items {
             it.home = view.to_virtual(it.home).unwrap_or(it.home % nv);
         }
-        let plan = schedule(&items, nv, &p.f, &p.prof, &p.model, &scfg);
+        let believed = pool.believed_speeds(&view);
+        let plan = schedule_with_beliefs(
+            &items,
+            &ServerBelief::from_speeds(&believed, 0.0),
+            &p.f,
+            &p.prof,
+            &p.model,
+            &scfg,
+        );
         let (lin_f, ca_f) = match phase {
             PipePhase::Forward => (1.0, 1.0),
             PipePhase::Backward => (LINEAR_BWD_FACTOR, CA_BWD_FACTOR),
@@ -465,13 +493,15 @@ pub fn run_distca_pp_elastic(
             })
             .collect();
         let speeds: Vec<f64> = (0..nv).map(|v| actual_speed[view.to_physical(v)]).collect();
-
-        // Believed speeds steer the plan: a demoted server keeps only
-        // its believed-speed share of the tick's CA load; the excess
-        // re-targets the least-loaded believed-fast servers.
-        let believed: Vec<f64> = (0..nv).map(|v| pool.speed(view.to_physical(v))).collect();
-        let mut assign_to: Vec<usize> = plan.assignments.iter().map(|a| a.server).collect();
-        rebalance_for_belief(&mut assign_to, &costs, &believed);
+        let assign_to: Vec<usize> = plan.assignments.iter().map(|a| a.server).collect();
+        // Per-assignment transient arena bytes (per GPU in the TP
+        // group): the live-byte state max-headroom re-dispatch
+        // targeting draws on.
+        let abytes: Vec<f64> = plan
+            .assignments
+            .iter()
+            .map(|a| item_arena_bytes(&a.item, &p.model) / tp)
+            .collect();
 
         // Nano-batch waves at CA-task granularity.
         let (ping_idx, pong_idx) = split_waves(&costs, |&c| c);
@@ -582,15 +612,22 @@ pub fn run_distca_pp_elastic(
                 engb_nominal[v] += ping_busy[v] * speeds[v];
             }
         }
+        // Live arena bytes per virtual server: everything planned on it
+        // minus what the fault evicted — the state remap and recovery
+        // consult max-byte-headroom-first.
+        let mut live_bytes = vec![0.0f64; nv];
+        for (i, &v) in assign_to.iter().enumerate() {
+            live_bytes[v] += abytes[i];
+        }
+        for &li in &lost {
+            live_bytes[assign_to[li]] -= abytes[li];
+        }
         let mut remapped = 0usize;
-        let mut rr = 0usize;
         for &i in &pong_idx {
             let srv = assign_to[i];
             let target = if killed_v.contains(&srv) || drained_v.contains(&srv) {
                 remapped += 1;
-                let t = rec_targets[rr % rec_targets.len()];
-                rr += 1;
-                t
+                max_headroom_target(&rec_targets, &mut live_bytes, 0.0, abytes[i])
             } else {
                 srv
             };
@@ -613,8 +650,7 @@ pub fn run_distca_pp_elastic(
             } else {
                 drain_time_max
             };
-            let t = rec_targets[rr % rec_targets.len()];
-            rr += 1;
+            let t = max_headroom_target(&rec_targets, &mut live_bytes, 0.0, abytes[li]);
             engb_ids.push(engb.add_task_at(t, costs[li] + resend, &[], at));
             engb_nominal[t] += costs[li] + resend;
             redispatched += 1;
@@ -643,7 +679,8 @@ pub fn run_distca_pp_elastic(
                 .map(|o| plan.comm_matrix[o][v] + plan.return_matrix[o][v])
                 .sum();
             let comm_t = send.max(recv) / bw * layers * comm_scale;
-            // Fault-free reference: nominal speeds, planned loads.
+            // Fault-free reference: the plan's believed seconds — the
+            // tick's predicted time when every belief is accurate.
             let ca_ff_v = plan.server_load[v] / tp * ca_f * layers;
             let (fp, fq) = split_nano(lin[v], ca_ff_v, comm_t * 0.7, comm_t * 0.3);
             let ff_dev = match p.comm_mode {
@@ -721,76 +758,6 @@ pub fn run_distca_pp_elastic(
         remapped: remapped_total,
         lost_tasks: lost_total,
     })
-}
-
-/// Move CA load off believed-slow servers: each server whose believed
-/// speed is `f < 1` keeps at most its `f`-weighted fair share; the
-/// excess (smallest assignments first) re-targets the least-loaded
-/// believed-**fast** server, so one straggler's overflow never lands on
-/// another straggler (falling back to any other server only when no
-/// fast one exists). Pure belief-side re-planning — ground truth is
-/// untouched.
-fn rebalance_for_belief(assign_to: &mut [usize], costs: &[f64], believed: &[f64]) {
-    let nv = believed.len();
-    let believed_sum: f64 = believed.iter().sum();
-    if believed_sum <= 0.0 || believed.iter().all(|&b| b >= 1.0) {
-        return;
-    }
-    let total: f64 = costs.iter().sum();
-    let mut load = vec![0.0f64; nv];
-    for (i, &v) in assign_to.iter().enumerate() {
-        load[v] += costs[i];
-    }
-    for v in 0..nv {
-        if believed[v] >= 1.0 {
-            continue;
-        }
-        let target = believed[v] * total / believed_sum;
-        loop {
-            if load[v] <= target {
-                break;
-            }
-            // Smallest assignment on v.
-            let mut pick: Option<usize> = None;
-            for (i, &s) in assign_to.iter().enumerate() {
-                if s == v && pick.map_or(true, |p| costs[i] < costs[p]) {
-                    pick = Some(i);
-                }
-            }
-            let Some(i) = pick else { break };
-            // Least-loaded believed-fast destination; any other server
-            // (believed-relative) only when no fast one exists.
-            let mut dest = usize::MAX;
-            let mut best = f64::INFINITY;
-            for (d, &b) in believed.iter().enumerate() {
-                if d == v || b < 1.0 {
-                    continue;
-                }
-                if load[d] < best {
-                    best = load[d];
-                    dest = d;
-                }
-            }
-            if dest == usize::MAX {
-                for (d, &b) in believed.iter().enumerate() {
-                    if d == v || b <= 0.0 {
-                        continue;
-                    }
-                    let rel = load[d] / b;
-                    if rel < best {
-                        best = rel;
-                        dest = d;
-                    }
-                }
-            }
-            if dest == usize::MAX {
-                break;
-            }
-            load[v] -= costs[i];
-            load[dest] += costs[i];
-            assign_to[i] = dest;
-        }
-    }
 }
 
 #[cfg(test)]
@@ -1044,32 +1011,36 @@ mod tests {
     }
 
     #[test]
-    fn rebalance_moves_load_off_slow_belief() {
-        let costs = vec![1.0, 1.0, 1.0, 1.0];
-        let mut assign = vec![0, 0, 1, 1];
-        // Server 0 believed at quarter speed: fair share 2·(0.25/1.25)=0.4.
-        rebalance_for_belief(&mut assign, &costs, &[0.25, 1.0]);
-        let load0: f64 = assign
-            .iter()
-            .zip(&costs)
-            .filter(|(&s, _)| s == 0)
-            .map(|(_, &c)| c)
-            .sum();
-        assert!(load0 <= 1.0, "believed-slow server kept {load0} of 4.0");
-    }
-
-    #[test]
-    fn rebalance_never_sheds_onto_another_straggler() {
-        // Two believed-slow servers: one's excess must flow to the fast
-        // server, never to the other straggler.
-        let costs = vec![1.0; 10];
-        let mut assign = vec![0, 1, 1, 1, 1, 2, 2, 2, 2, 2];
-        let believed = [0.5, 0.5, 1.0];
-        rebalance_for_belief(&mut assign, &costs, &believed);
-        let load = |v: usize| assign.iter().filter(|&&s| s == v).count() as f64;
-        // Fair shares: 10·(0.5/2)=2.5 per straggler.
-        assert!(load(0) <= 2.5, "straggler 0 ended at {}", load(0));
-        assert!(load(1) <= 2.5, "straggler 1 ended at {}", load(1));
-        assert!(load(2) >= 5.0, "the fast server must absorb the excess");
+    fn elastic_pp_belief_seed_plans_around_slow_server_from_tick0() {
+        // A server both believed (seeded) and actually (scripted) 4×
+        // slow from tick 0: the belief-aware plan gives it its share up
+        // front, so the first active tick already runs near its
+        // prediction and strictly beats the unseeded run's first tick,
+        // which only learns through the health loop.
+        let p = params(4, 2);
+        let docs = sample_docs(65536, 4 * 65536, 31);
+        let fault = FaultPlan::new().slow(1, 0, 0.25);
+        let seeded_cfg = ElasticPpCfg {
+            belief_speeds: Some(vec![1.0, 0.25, 1.0, 1.0]),
+            ..Default::default()
+        };
+        let seeded = run_distca_pp_elastic(&docs, 65536, &p, &fault, &seeded_cfg).unwrap();
+        let unseeded =
+            run_distca_pp_elastic(&docs, 65536, &p, &fault, &Default::default()).unwrap();
+        assert_eq!(seeded.redispatched, 0, "fault-free run: zero post-hoc re-dispatches");
+        assert_eq!(seeded.lost_tasks, 0);
+        let first_active = |r: &ElasticPpReport| {
+            r.per_tick
+                .iter()
+                .find(|t| t.n_tasks > 0)
+                .map(|t| t.tick_time)
+                .unwrap()
+        };
+        let s0 = first_active(&seeded);
+        let u0 = first_active(&unseeded);
+        assert!(
+            s0 < u0,
+            "slow-from-tick-0 belief must beat the learned-later plan: {s0} vs {u0}"
+        );
     }
 }

@@ -5,7 +5,10 @@
 //! Rust + JAX + Pallas stack:
 //!
 //! * **L3 (this crate)** — the coordinator: the communication-aware greedy
-//!   scheduler over token-level CA-tasks ([`coordinator`]), attention
+//!   scheduler over token-level CA-tasks ([`coordinator`] — including the
+//!   heterogeneity-aware [`coordinator::schedule_with_beliefs`], which
+//!   balances estimated *seconds* against per-server believed speeds and
+//!   arena byte budgets instead of assuming uniform servers), attention
 //!   servers ([`server`]), the elastic server pool — dynamic membership,
 //!   fault injection, straggler mitigation, autoscaling ([`elastic`]) —
 //!   the memory-disaggregated execution model ([`memplan`]: per-server
@@ -46,6 +49,11 @@
 //! Python never runs on the request path: `make artifacts` lowers
 //! everything to `artifacts/*.hlo.txt`, and the `distca` binary is
 //! self-contained afterwards.
+//!
+//! For the paper-section → module map, the matrix of the four elastic
+//! execution paths (and which tests cross-validate them), and the
+//! PP-tick data-flow diagram, see `docs/ARCHITECTURE.md` at the repo
+//! root.
 
 pub mod baselines;
 pub mod bench;

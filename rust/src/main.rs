@@ -14,11 +14,13 @@ use distca::cli::{usage, Args, FlagSpec};
 use distca::config::run::{DataDist, Strategy};
 use distca::config::{ClusterConfig, ModelConfig};
 use distca::coordinator::scheduler::items_from_chunks;
-use distca::coordinator::{schedule, Profiler, SchedulerCfg};
+use distca::coordinator::{
+    schedule, schedule_with_beliefs, Profiler, SchedulerCfg, ServerBelief,
+};
 use distca::data::distributions::sampler_for;
 use distca::elastic::{
-    pp_tick_horizon, run_distca_pp_elastic, run_elastic_sim, AutoscaleCfg, ElasticCfg,
-    ElasticCoordinator, ElasticPpCfg, ElasticSimCfg, ElasticTask, FaultPlan,
+    pp_tick_horizon, run_distca_pp_elastic, run_elastic_sim, sim_auto_mem_budget, AutoscaleCfg,
+    ElasticCfg, ElasticCoordinator, ElasticPpCfg, ElasticSimCfg, ElasticTask, FaultPlan,
     ReferenceCaCompute,
 };
 use distca::memplan::MemReport;
@@ -73,8 +75,20 @@ fn specs() -> Vec<FlagSpec> {
         FlagSpec::value("fault-plan", "JSON fault-plan file (elastic)", None),
         FlagSpec::value(
             "mem-budget",
-            "per-server arena byte budget (schedule/memory; 0 = unconstrained, \
-             memory accepts `auto` = 1.25x the unconstrained peak)",
+            "per-server arena byte budget (schedule/memory/elastic sim; 0 = unconstrained, \
+             memory and elastic sim accept `auto` = 1.25x the unconstrained peak)",
+            None,
+        ),
+        FlagSpec::value(
+            "speeds",
+            "comma-separated believed per-server speeds (schedule: plan estimated \
+             seconds against them and report the makespan vs the uniform plan)",
+            None,
+        ),
+        FlagSpec::value(
+            "belief-speeds",
+            "comma-separated believed per-server speeds seeded before tick 0 \
+             (elastic --runtime sim, incl. --pp: slow-from-tick-0 beliefs)",
             None,
         ),
         FlagSpec::boolean("autoscale", "enable pool autoscaling (elastic, incl. --pp sim)"),
@@ -231,6 +245,10 @@ fn cmd_compare(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_schedule(args: &Args) -> anyhow::Result<()> {
     let s = setup(args)?;
+    anyhow::ensure!(
+        args.get("belief-speeds").is_none(),
+        "--belief-speeds belongs to `distca elastic`; schedule takes --speeds"
+    );
     let n = s.params.n_logical();
     let mut rng = Rng::new(s.seed);
     let docs = sampler_for(s.data, s.max_doc).sample_tokens(&mut rng, s.tokens, 0);
@@ -239,12 +257,26 @@ fn cmd_schedule(args: &Args) -> anyhow::Result<()> {
     let f = FlopsModel::new(&s.model);
     let prof = Profiler::analytic(&f, &s.params.cluster);
     let mem_budget = args.get_f64("mem-budget", 0.0)?;
+    let speeds = args.get("speeds").map(|spec| parse_speeds(spec, n)).transpose()?;
+    let cfg = SchedulerCfg { tolerance: s.params.tolerance, mem_budget, ..Default::default() };
     let t0 = std::time::Instant::now();
-    let plan = schedule(
-        &items, n, &f, &prof, &s.model,
-        &SchedulerCfg { tolerance: s.params.tolerance, mem_budget, ..Default::default() },
-    );
+    let plan = match &speeds {
+        Some(sp) => schedule_with_beliefs(
+            &items,
+            &ServerBelief::from_speeds(sp, mem_budget),
+            &f,
+            &prof,
+            &s.model,
+            &cfg,
+        ),
+        None => schedule(&items, n, &f, &prof, &s.model, &cfg),
+    };
     let dt = t0.elapsed();
+    // Heterogeneity report: the uniform (FLOPs-balanced) plan evaluated
+    // under the same believed speeds, for comparison.
+    let uniform_makespan = speeds
+        .as_ref()
+        .map(|sp| schedule(&items, n, &f, &prof, &s.model, &cfg).makespan_under(sp));
     let mem = MemReport::for_plan(&plan, &s.model, mem_budget).map_err(|e| {
         anyhow::anyhow!(
             "--mem-budget {mem_budget} is infeasible for this batch \
@@ -266,15 +298,24 @@ fn cmd_schedule(args: &Args) -> anyhow::Result<()> {
                 ])
             })
             .collect();
-        let j = Json::obj(vec![
+        let mut fields = vec![
             ("n_servers", Json::Num(n as f64)),
             ("imbalance", Json::Num(plan.imbalance())),
             ("total_comm_bytes", Json::Num(plan.total_comm_bytes())),
             ("local_fraction", Json::Num(plan.local_fraction())),
             ("schedule_time_s", Json::Num(dt.as_secs_f64())),
+            ("predicted_makespan_s", Json::Num(plan.predicted_makespan())),
             ("transient_mem", mem.to_json()),
             ("servers", Json::Arr(servers)),
-        ]);
+        ];
+        if let (Some(sp), Some(u)) = (&speeds, uniform_makespan) {
+            fields.push((
+                "believed_speeds",
+                Json::Arr(sp.iter().map(|&v| Json::Num(v)).collect()),
+            ));
+            fields.push(("uniform_plan_makespan_s", Json::Num(u)));
+        }
+        let j = Json::obj(fields);
         println!("{}", j.to_string_pretty());
     } else {
         let mut t = Table::new(
@@ -296,6 +337,15 @@ fn cmd_schedule(args: &Args) -> anyhow::Result<()> {
             bytes(plan.total_comm_bytes()),
             plan.local_fraction() * 100.0
         );
+        if let (Some(sp), Some(u)) = (&speeds, uniform_makespan) {
+            println!(
+                "believed speeds {:?}: makespan {} vs uniform plan {} ({:.2}x better)",
+                sp,
+                secs(plan.predicted_makespan()),
+                secs(u),
+                u / plan.predicted_makespan().max(1e-12),
+            );
+        }
         println!(
             "arena peak {} max / {} mean (ratio {:.3}){}",
             bytes(mem.max_peak()),
@@ -410,8 +460,38 @@ fn cmd_memory(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Parse a comma-separated believed-speed list (`1,0.25,1`), padding
+/// with 1.0 up to `n` servers. Rejects non-positive or non-finite
+/// entries and lists longer than the pool.
+fn parse_speeds(spec: &str, n: usize) -> anyhow::Result<Vec<f64>> {
+    let mut out: Vec<f64> = Vec::new();
+    for tok in spec.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        let v: f64 = tok
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad believed speed `{tok}`"))?;
+        anyhow::ensure!(v > 0.0 && v.is_finite(), "believed speed {v} must be positive");
+        out.push(v);
+    }
+    anyhow::ensure!(!out.is_empty(), "empty believed-speed list");
+    anyhow::ensure!(
+        out.len() <= n,
+        "{} believed speeds for a pool of {n} servers",
+        out.len()
+    );
+    out.resize(n, 1.0);
+    Ok(out)
+}
+
 /// Resolve the fault plan from `--fault-plan` (JSON file), `--fault`
 /// (compact spec), or — when neither is given — a seeded random plan.
+/// Exception: when a heterogeneity-study flag (`--belief-speeds` /
+/// `--mem-budget`) is present, the *absence* of a fault flag means a
+/// fault-free run — beliefs and budgets are the scenario under study,
+/// and injecting random kills would muddy the zero-re-dispatch claim.
 fn fault_plan_from(args: &Args, n_servers: usize, ticks: usize, seed: u64) -> anyhow::Result<FaultPlan> {
     if let Some(path) = args.get("fault-plan") {
         let j = distca::util::json::parse_file(std::path::Path::new(path))
@@ -420,6 +500,9 @@ fn fault_plan_from(args: &Args, n_servers: usize, ticks: usize, seed: u64) -> an
     }
     if let Some(spec) = args.get("fault") {
         return FaultPlan::parse_spec(spec).map_err(|e| anyhow::anyhow!(e));
+    }
+    if args.get("belief-speeds").is_some() || args.get("mem-budget").is_some() {
+        return Ok(FaultPlan::new());
     }
     anyhow::ensure!(n_servers >= 2 && ticks >= 2, "random fault plan needs >=2 servers and ticks");
     let mut rng = Rng::new(seed ^ 0xFA17_FA17);
@@ -454,6 +537,24 @@ fn ensure_fault_in_scope(fault: &FaultPlan, n_servers: usize, ticks: usize) -> a
 
 fn cmd_elastic(args: &Args) -> anyhow::Result<()> {
     let s = setup(args)?;
+    anyhow::ensure!(
+        args.get("speeds").is_none(),
+        "--speeds belongs to `distca schedule`; elastic takes --belief-speeds"
+    );
+    // Belief seeding and byte budgets are simulator features: the
+    // threaded runtime learns beliefs through the gray-health loop and
+    // models memory only via scripted `oom:` events.
+    if args.req("runtime")? == "threaded" {
+        anyhow::ensure!(
+            args.get("belief-speeds").is_none(),
+            "--belief-speeds applies to --runtime sim (the threaded runtime learns \
+             beliefs via gray demotion)"
+        );
+        anyhow::ensure!(
+            args.get("mem-budget").is_none(),
+            "--mem-budget applies to --runtime sim (use an oom: fault for the threaded runtime)"
+        );
+    }
     // `--pp` (bare or with a degree >= 2) selects elastic ping-pong PP:
     // membership events land mid-PP-tick, wave-scoped.
     let pp_mode = args.get_bool("pp") || s.params.pp >= 2;
@@ -506,6 +607,11 @@ fn cmd_elastic_pp_sim(args: &Args, s: &Setup) -> anyhow::Result<()> {
         args.get("ticks").is_none(),
         "--ticks does not apply to --pp sim (the schedule runs 2(m + pp - 1) PP ticks)"
     );
+    anyhow::ensure!(
+        args.get("mem-budget").is_none(),
+        "--mem-budget applies to the flat elastic sim only (the PP sim models bytes \
+         via scripted oom: events; see ElasticSimCfg::mem_budget)"
+    );
     let n = params.n_logical();
     let mut rng = Rng::new(s.seed);
     let docs = sampler_for(s.data, s.max_doc).sample_tokens(&mut rng, s.tokens, 0);
@@ -520,6 +626,10 @@ fn cmd_elastic_pp_sim(args: &Args, s: &Setup) -> anyhow::Result<()> {
         autoscale: args
             .get_bool("autoscale")
             .then(|| AutoscaleCfg { max_servers: n, ..Default::default() }),
+        belief_speeds: args
+            .get("belief-speeds")
+            .map(|spec| parse_speeds(spec, n))
+            .transpose()?,
         ..Default::default()
     };
     let report = run_distca_pp_elastic(&docs, s.max_doc, &params, &fault, &cfg)?;
@@ -582,7 +692,10 @@ fn cmd_elastic_pp_threaded(
     seed: u64,
     fault: &FaultPlan,
 ) -> anyhow::Result<()> {
-    let (stats, alive) = run_threaded_ticks(n, ticks, seed, fault, true)?;
+    let autoscale = args
+        .get_bool("autoscale")
+        .then(|| AutoscaleCfg { max_servers: n, ..Default::default() });
+    let (stats, alive) = run_threaded_ticks(n, ticks, seed, fault, true, autoscale)?;
     let rows: Vec<Vec<String>> = stats
         .iter()
         .zip(&alive)
@@ -660,8 +773,20 @@ fn cmd_elastic_sim(
             sampler_for(s.data, s.max_doc).sample_tokens(&mut rng, s.tokens, 0)
         })
         .collect();
+    let mem_budget = match args.get("mem-budget") {
+        None => 0.0,
+        Some("auto") => sim_auto_mem_budget(&batches, n, &s.params, 1.25)?,
+        Some(v) => v.parse::<f64>().map_err(|_| {
+            anyhow::anyhow!("--mem-budget: expected bytes or `auto`, got `{v}`")
+        })?,
+    };
     let cfg = ElasticSimCfg {
         autoscale: args.get_bool("autoscale").then(AutoscaleCfg::default),
+        belief_speeds: args
+            .get("belief-speeds")
+            .map(|spec| parse_speeds(spec, n))
+            .transpose()?,
+        mem_budget,
         ..Default::default()
     };
     let report = run_elastic_sim(&batches, n, &s.params, fault, &cfg)?;
@@ -706,19 +831,23 @@ fn cmd_elastic_sim(
 /// Drive the threaded runtime for `ticks` synthetic ticks — flat
 /// (`run_tick`) or ping-pong PP (`run_pp_tick`) — verifying every
 /// output bit-for-bit against the monolithic oracle. Returns the tick
-/// stats plus the schedulable-server count each tick saw.
+/// stats plus the schedulable-server count each tick saw. `autoscale`
+/// wires wave-clock scaling into `run_pp_tick` (the flat path ignores
+/// it — scaling is decided at ping boundaries only).
 fn run_threaded_ticks(
     n: usize,
     ticks: usize,
     seed: u64,
     fault: &FaultPlan,
     pp: bool,
+    autoscale: Option<AutoscaleCfg>,
 ) -> anyhow::Result<(Vec<distca::elastic::TickStats>, Vec<usize>)> {
     const H: usize = 4;
     const HKV: usize = 2;
     const D: usize = 16;
     let oracle = ReferenceCaCompute::new(H, HKV, D);
-    let mut co = ElasticCoordinator::spawn(n, ElasticCfg::default(), |_| {
+    let cfg = ElasticCfg { autoscale, ..Default::default() };
+    let mut co = ElasticCoordinator::spawn(n, cfg, |_| {
         Box::new(ReferenceCaCompute::new(H, HKV, D))
     });
     let mut rng = Rng::new(seed);
@@ -763,7 +892,12 @@ fn cmd_elastic_threaded(
     seed: u64,
     fault: &FaultPlan,
 ) -> anyhow::Result<()> {
-    let (stats, alive) = run_threaded_ticks(n, ticks, seed, fault, false)?;
+    anyhow::ensure!(
+        !args.get_bool("autoscale"),
+        "--autoscale on the threaded runtime requires --pp \
+         (scaling decisions happen on the wave clock at ping boundaries)"
+    );
+    let (stats, alive) = run_threaded_ticks(n, ticks, seed, fault, false, None)?;
     let rows: Vec<Vec<String>> = stats
         .iter()
         .zip(&alive)

@@ -23,14 +23,35 @@
 //!   (in-place) or the colocated home-placement baseline
 //!   (out-of-place, unbalanced).
 //!
-//! Consumers: `SchedulerCfg::mem_budget` (plans feasible in bytes as
-//! well as balanced in FLOPs), `sim::engine` per-resource live-byte
+//! Consumers: `SchedulerCfg::mem_budget` and the per-server
+//! `ServerBelief::mem_budget` (plans feasible in bytes as well as
+//! balanced in estimated seconds), `sim::engine` per-resource live-byte
 //! tracking with OOM eviction, `elastic` `oom:` fault recovery across
-//! every execution path, the `distca memory` CLI subcommand, and
+//! every execution path — whose re-dispatch targeting is
+//! [`model::max_headroom_target`] (max-byte-headroom-first, not
+//! round-robin) — the `distca memory` CLI subcommand, and
 //! `benches/bench_memory_balance.rs` (`BENCH_memory.json`).
+//!
+//! # Example: in-place execution peaks at Q+KV
+//!
+//! ```
+//! use distca::memplan::Arena;
+//!
+//! let mut arena = Arena::new(1000);
+//! let q = arena.alloc(300).unwrap();
+//! let kv = arena.alloc(600).unwrap();
+//! // In-place CA: O overwrites Q's slot — zero additional bytes.
+//! let o = arena.write_in_place(q, 300);
+//! arena.free(kv);
+//! arena.free(o);
+//! assert_eq!(arena.peak_bytes(), 900); // Q + KV, never Q + KV + O
+//! assert!(arena.check_drained().is_ok());
+//! ```
 
 pub mod arena;
 pub mod model;
 
 pub use arena::{Arena, OomError, SlotId};
-pub use model::{item_arena_bytes, replay_server_tick, MemReport, TaskBytes};
+pub use model::{
+    item_arena_bytes, max_headroom_target, replay_server_tick, MemReport, TaskBytes,
+};

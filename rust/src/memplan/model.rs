@@ -104,6 +104,38 @@ pub fn replay_server_tick(
     Ok(arena)
 }
 
+/// Max-byte-headroom-first re-dispatch targeting (the ROADMAP
+/// "belief-byte-aware re-dispatch" follow-up): pick, among the
+/// `eligible` servers, the one with the most remaining arena headroom
+/// given the live byte loads in `live_bytes` — `budget − live` when a
+/// hard budget is known, otherwise simply the fewest live bytes —
+/// charge `task_bytes` to the winner, and return it. The first (lowest
+/// position in `eligible`) maximum wins ties, so targeting is
+/// deterministic. Replaces round-robin victim re-dispatch: a recovered
+/// CA-task lands where its Q+KV are least likely to evict someone else.
+///
+/// Panics if `eligible` is empty — callers must ensure a live target
+/// exists (the same "all servers died" check every elastic path makes).
+pub fn max_headroom_target(
+    eligible: &[usize],
+    live_bytes: &mut [f64],
+    budget: f64,
+    task_bytes: f64,
+) -> usize {
+    assert!(!eligible.is_empty(), "no re-dispatch targets with arena headroom");
+    let mut best = eligible[0];
+    let mut best_room = f64::NEG_INFINITY;
+    for &s in eligible {
+        let room = if budget > 0.0 { budget - live_bytes[s] } else { -live_bytes[s] };
+        if room > best_room {
+            best_room = room;
+            best = s;
+        }
+    }
+    live_bytes[best] += task_bytes;
+    best
+}
+
 /// Per-server peak transient bytes of one plan/tick plus the budget it
 /// was planned under — the §5 memory-balance summary.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -333,5 +365,19 @@ mod tests {
         let items: Vec<Item> = (0..4).map(|d| Item::whole_doc(d, 4096, 0)).collect();
         let rep = MemReport::colocated(&items, 2, &m);
         assert!((rep.max_mean_ratio() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn headroom_target_prefers_most_room_and_charges_it() {
+        // With a budget: max (budget − live) wins; without: min live.
+        let mut live = vec![10.0, 2.0, 7.0];
+        let t = max_headroom_target(&[0, 1, 2], &mut live, 12.0, 3.0);
+        assert_eq!(t, 1);
+        assert_eq!(live[1], 5.0, "the task's bytes must be charged");
+        let t2 = max_headroom_target(&[0, 2], &mut live, 0.0, 1.0);
+        assert_eq!(t2, 2, "no budget: fewest live bytes wins");
+        // Ties break toward the first eligible entry.
+        let mut even = vec![4.0, 4.0];
+        assert_eq!(max_headroom_target(&[1, 0], &mut even, 0.0, 1.0), 1);
     }
 }

@@ -47,7 +47,10 @@
 //!   (revoked at its would-be start, listed in
 //!   [`Engine::oom_evictions`]) instead of started — the simulator-level
 //!   OOM the elastic layer recovers from by re-dispatching to a resource
-//!   with headroom (statelessness, §3);
+//!   with headroom (statelessness, §3). This is also the *organic* OOM
+//!   path: `ElasticSimCfg::mem_budget` wires per-resource budgets from
+//!   the §5 memory model, so fault-free-but-tight configurations evict
+//!   through this budget with no scripted `oom:` event at all;
 //! * [`Engine::mem_peak_per_resource`] reports each resource's byte
 //!   high-water mark — the quantity `MemReport` summarizes.
 

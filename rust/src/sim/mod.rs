@@ -9,6 +9,26 @@
 //! DP, per-document CP, WLB-ideal, and DistCA — and [`report`] collects
 //! the quantities the paper plots (iteration time, idle fraction, memory
 //! divergence, communication share).
+//!
+//! The engine also models the elastic pool's failure modes: per-resource
+//! speed factors (stragglers), revocation (kills), partial drains, and
+//! per-resource byte budgets with OOM eviction.
+//!
+//! # Example: a straggler and a revocation
+//!
+//! ```
+//! use distca::sim::Engine;
+//!
+//! let mut eng = Engine::new(2);
+//! eng.set_speed(1, 0.5); // resource 1 runs at half rate
+//! let a = eng.add_task(0, 1.0, &[]);
+//! let b = eng.add_task(1, 1.0, &[]); // takes 2.0 seconds at 0.5x
+//! eng.revoke_resource(0, 0.25); // resource 0 dies mid-task
+//! let makespan = eng.run();
+//! assert!(!eng.is_done(a) && eng.revoked() == vec![a]);
+//! assert!(eng.is_done(b));
+//! assert!((makespan - 2.0).abs() < 1e-12);
+//! ```
 
 pub mod engine;
 pub mod report;

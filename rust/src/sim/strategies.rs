@@ -10,7 +10,11 @@
 //! * CA time is predicted by the [`Profiler`] (captures the Fig.-5
 //!   sub-128-token tile penalty); linear time by the analytic β model;
 //! * backward costs 2× (linear) / 2.5× (CA, recompute) forward;
-//! * inter-device traffic crosses InfiniBand (logical device = node).
+//! * inter-device traffic crosses InfiniBand (logical device = node);
+//! * the non-elastic executors here assume *uniform* devices (the
+//!   paper's setting) and call [`schedule`] directly; the elastic
+//!   flavors ([`crate::elastic`]) plan against per-server beliefs via
+//!   [`crate::coordinator::schedule_with_beliefs`] instead.
 
 use crate::config::{ClusterConfig, ModelConfig};
 use crate::coordinator::{schedule, Item, Plan, Profiler, SchedulerCfg};

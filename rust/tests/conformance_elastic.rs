@@ -18,12 +18,19 @@
 use std::collections::BTreeSet;
 use std::time::Duration;
 
+use distca::config::run::DataDist;
+use distca::config::{ClusterConfig, ModelConfig};
+use distca::coordinator::scheduler::items_from_chunks;
+use distca::coordinator::{schedule, schedule_with_beliefs, SchedulerCfg, ServerBelief};
+use distca::data::distributions::sampler_for;
 use distca::elastic::{
     run_elastic_exec, run_elastic_exec_pp, ElasticCfg, ElasticCoordinator, ElasticTask,
     FaultPlan, ReferenceCaCompute, ServerPool,
 };
 use distca::runtime::ca_exec::synthetic_task;
 use distca::server::TaskOutput;
+use distca::sim::strategies::{distca_placement, SimParams};
+use distca::sim::Engine;
 use distca::util::rng::Rng;
 
 const H: usize = 2;
@@ -201,6 +208,126 @@ fn threaded_flat_matches_oracle_for_seeded_cases() {
         }
         co.shutdown().unwrap();
     }
+}
+
+/// Heterogeneous pools, slow-from-tick-0: server 1 is *believed* 4×
+/// slow before the first tick (pre-degraded, exactly as a gray verdict
+/// or a `--belief-speeds` seed would leave the pool). Every execution
+/// path must shed its share at plan time and stay bit-exact vs the
+/// oracle — belief-aware planning may change *who* computes a task,
+/// never *what* it returns.
+#[test]
+fn heterogeneous_beliefs_from_tick0_match_oracle_on_all_paths() {
+    const SLOW: usize = 1;
+    const SPEED: f64 = 0.25;
+    for seed in 0..16u64 {
+        let case = gen_case(seed);
+
+        // Deterministic exec, flat.
+        let mut pool = ServerPool::new(case.n_servers);
+        pool.degrade(SLOW, SPEED);
+        let mut compute = dims();
+        for (t, tasks) in case.ticks.iter().enumerate() {
+            let rep = run_elastic_exec(&mut pool, t, tasks, &case.fault, &mut compute)
+                .unwrap_or_else(|e| panic!("hetero exec seed {seed} tick {t}: {e}"));
+            check_tick("hetero-exec", seed, tasks, &rep.outputs);
+        }
+
+        // Deterministic exec, PP waves.
+        let mut pool = ServerPool::new(case.n_servers);
+        pool.degrade(SLOW, SPEED);
+        let mut compute = dims();
+        for (t, tasks) in case.ticks.iter().enumerate() {
+            let rep = run_elastic_exec_pp(&mut pool, t, tasks, &case.fault, &mut compute)
+                .unwrap_or_else(|e| panic!("hetero exec-pp seed {seed} tick {t}: {e}"));
+            check_tick("hetero-exec-pp", seed, tasks, &rep.outputs);
+        }
+
+        // Threaded, flat.
+        let mut co =
+            ElasticCoordinator::spawn(case.n_servers, quick_cfg(), |_| Box::new(dims()));
+        co.pool.degrade(SLOW, SPEED);
+        for (t, tasks) in case.ticks.iter().enumerate() {
+            let outputs = co
+                .run_tick(t, tasks, &case.fault)
+                .unwrap_or_else(|e| panic!("hetero threaded seed {seed} tick {t}: {e}"));
+            check_tick("hetero-threaded", seed, tasks, &outputs);
+        }
+        co.shutdown().unwrap();
+
+        // Threaded, PP waves.
+        let mut co =
+            ElasticCoordinator::spawn(case.n_servers, quick_cfg(), |_| Box::new(dims()));
+        co.pool.degrade(SLOW, SPEED);
+        for (t, tasks) in case.ticks.iter().enumerate() {
+            let outputs = co
+                .run_pp_tick(t, tasks, &case.fault)
+                .unwrap_or_else(|e| panic!("hetero threaded-pp seed {seed} tick {t}: {e}"));
+            check_tick("hetero-threaded-pp", seed, tasks, &outputs);
+        }
+        co.shutdown().unwrap();
+    }
+}
+
+/// The acceptance bar for the belief-speed scheduler: with one server
+/// believed 4× slow, the speed-aware plan's *simulated* makespan (on a
+/// discrete-event engine whose actual speeds equal the beliefs) is
+/// strictly lower than the uniform plan's on the same doc set, and its
+/// own prediction matches the simulation.
+#[test]
+fn speed_aware_plan_beats_uniform_with_4x_slow_belief() {
+    let model = ModelConfig::llama3_8b();
+    let p = SimParams::new(model.clone(), ClusterConfig::h200(4), 8, 1);
+    let n = 4usize;
+    let mut rng = Rng::new(42);
+    let docs = sampler_for(DataDist::Pretrain, 65_536).sample_tokens(&mut rng, 4 * 65_536, 0);
+    let chunks = distca_placement(&docs, n);
+    let mut items = items_from_chunks(&chunks);
+    for it in &mut items {
+        if it.home >= n {
+            it.home = n - 1;
+        }
+    }
+    let speeds = [1.0, 0.25, 1.0, 1.0];
+    let cfg = SchedulerCfg::default();
+    let uniform = schedule(&items, n, &p.f, &p.prof, &model, &cfg);
+    let aware = schedule_with_beliefs(
+        &items,
+        &ServerBelief::from_speeds(&speeds, 0.0),
+        &p.f,
+        &p.prof,
+        &model,
+        &cfg,
+    );
+    aware.validate(&items, &p.f).unwrap();
+
+    let simulate = |plan: &distca::coordinator::Plan| -> f64 {
+        let mut eng = Engine::new(n);
+        for (v, &sp) in speeds.iter().enumerate() {
+            eng.set_speed(v, sp);
+        }
+        for a in &plan.assignments {
+            let cost: f64 = a
+                .item
+                .ca_tasks()
+                .iter()
+                .map(|t| p.prof.predict(t.q_len as f64, t.kv_len as f64))
+                .sum();
+            eng.add_task(a.server, cost, &[]);
+        }
+        eng.run()
+    };
+    let mk_uniform = simulate(&uniform);
+    let mk_aware = simulate(&aware);
+    assert!(
+        mk_aware < mk_uniform,
+        "speed-aware simulated makespan {mk_aware} must strictly beat uniform {mk_uniform}"
+    );
+    assert!(
+        (aware.predicted_makespan() - mk_aware).abs() / mk_aware < 1e-6,
+        "prediction {} must match simulation {mk_aware}",
+        aware.predicted_makespan()
+    );
 }
 
 #[test]

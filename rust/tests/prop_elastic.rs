@@ -15,9 +15,14 @@
 //! * **partial drain** — a drained resource never loses (and the
 //!   failover layer never re-dispatches) a task it already started.
 
+use distca::config::{ClusterConfig, ModelConfig};
+use distca::coordinator::{
+    schedule, schedule_with_beliefs, Item, Profiler, SchedulerCfg, ServerBelief,
+};
 use distca::elastic::{
     run_elastic_exec, ElasticTask, FaultEvent, FaultPlan, ReferenceCaCompute, ServerPool,
 };
+use distca::model::FlopsModel;
 use distca::runtime::ca_exec::synthetic_task;
 use distca::sim::engine::Engine;
 use distca::util::quickcheck::{check, ensure, PropResult};
@@ -215,6 +220,70 @@ fn prop_pool_view_stays_a_bijection() {
                 ensure(mapped == view.n(), "virtual index space has holes")?;
             }
             Ok(())
+        },
+    );
+}
+
+/// Under any belief-speed vector, the speed-aware plan's predicted
+/// makespan never exceeds the uniform (FLOPs-balanced) plan's makespan
+/// evaluated under the same speeds: planning with the belief can only
+/// help. (Equal-speed vectors reduce both to the identical plan, so the
+/// bound is tight there.)
+#[test]
+fn prop_speed_aware_makespan_no_worse_than_uniform() {
+    let m = ModelConfig::llama3_8b();
+    let f = FlopsModel::new(&m);
+    let prof = Profiler::analytic(&f, &ClusterConfig::h200(1));
+    const N: usize = 4;
+    check(
+        30,
+        |r: &mut Rng| {
+            let n_items = 1 + r.gen_index(0, 12);
+            let items: Vec<(u64, u64)> = (0..n_items)
+                .map(|_| (r.gen_range(1, 48), r.gen_range(0, N as u64)))
+                .collect();
+            // Speeds in tenths: 0.1 ..= 1.0 per server.
+            let speeds: Vec<u64> = (0..N).map(|_| r.gen_range(1, 11)).collect();
+            (items, speeds)
+        },
+        |(spec, speeds_raw)| {
+            if spec.is_empty() {
+                return Ok(());
+            }
+            let items: Vec<Item> = spec
+                .iter()
+                .enumerate()
+                .map(|(d, &(l, h))| {
+                    Item::whole_doc(d as u32, (1 + l as usize) * 256, h as usize % N)
+                })
+                .collect();
+            let speeds: Vec<f64> =
+                speeds_raw.iter().map(|&s| (1 + s.min(9)) as f64 / 10.0).collect();
+            if speeds.len() != N {
+                return Ok(()); // shrunk vector: speeds no longer per-server
+            }
+            let cfg = SchedulerCfg::default();
+            let uniform = schedule(&items, N, &f, &prof, &m, &cfg);
+            let aware = schedule_with_beliefs(
+                &items,
+                &ServerBelief::from_speeds(&speeds, 0.0),
+                &f,
+                &prof,
+                &m,
+                &cfg,
+            );
+            aware.validate(&items, &f).map_err(|e| e)?;
+            let uni_mk = uniform.makespan_under(&speeds);
+            // The bound is exact in the uniform-speed limit (identical
+            // plans); the 1% grace absorbs greedy knife-edges on
+            // unsplittable minimum-width shards plus float drift.
+            ensure(
+                aware.predicted_makespan() <= uni_mk * 1.01 + 1e-12,
+                format!(
+                    "belief-aware makespan {} exceeds uniform {uni_mk} at speeds {speeds:?}",
+                    aware.predicted_makespan()
+                ),
+            )
         },
     );
 }
