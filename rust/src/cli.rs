@@ -13,6 +13,9 @@
 //! | `schedule` | the §4.2 scheduler on a sampled batch; prints the plan |
 //! | `memory`   | §5 / Fig. 3b per-server transient-memory balance, in-place vs colocated |
 //! | `elastic`  | the elastic attention-server pool under a fault plan (sim or threaded; `--pp` for ping-pong PP ticks) |
+//! | `worker`   | networked attention-server daemon: listen for a coordinator over TCP |
+//! | `serve`    | networked coordinator over separate worker processes (`--spawn` \| `--connect a,b,c`) |
+//! | `soak`     | networked soak/load harness: replay a seeded document-length mix, emit `BENCH_net.json` |
 //! | `train`    | end-to-end tiny-LM training through the AOT artifacts |
 //! | `bound`    | Appendix A max-partition bound for a model/bandwidth |
 //! | `info`     | model & cluster configuration tables |
@@ -43,6 +46,15 @@
 //! | `--speeds <list>` | schedule | believed per-server speeds (`1,0.25,1,…`): plan estimated seconds and report the makespan vs the uniform plan |
 //! | `--belief-speeds <list>` | elastic sim (incl. `--pp`) | slow-from-tick-0 believed speeds seeded before the first plan; omitting `--fault` alongside it means a fault-free run |
 //! | `--autoscale` | elastic | queue/imbalance-driven pool scaling (wave-clock under `--pp`) |
+//! | `--listen <addr>` | worker | listen address (`:0` = kernel-assigned port) |
+//! | `--port-file <path>` | worker | publish the bound address (written atomically) for a spawning coordinator |
+//! | `--workers <n>` | serve/soak | worker process count (default 4) |
+//! | `--spawn` | serve/soak | spawn local `distca worker` children (required for scripted SIGKILL/rejoin faults) |
+//! | `--connect <a,b,c>` | serve/soak | dial externally started worker daemons instead of spawning |
+//! | `--docs-per-tick <n>` | serve/soak | documents sampled per tick (default 2× workers) |
+//! | `--stats-out <path>` | serve/soak | per-server per-tick JSONL stats (tick, server, believed speed, bytes, re-dispatches) |
+//! | `--bench-out <path>` | soak | summary JSON (default `BENCH_net.json`) |
+//! | `--hb-ms <n>` | serve/soak | worker heartbeat interval in ms (0 disables; staleness ≈ 10× feeds kill verdicts) |
 //! | `--json` | most | machine-readable output |
 //! | `--verbose` | all | debug logging |
 //!

@@ -148,7 +148,11 @@ pub fn reference_attention(t: &CaTaskTensors, dims: &ReferenceCaCompute) -> Vec<
 /// Control namespace (bit 63). Data tags pack `(doc, q_start)` with
 /// `doc < 2^30`, so bits 62–63 are free for flags.
 const CTRL_BASE: u64 = 1 << 63;
-const CTRL_SHUTDOWN: u64 = CTRL_BASE;
+/// Orderly worker shutdown. Public so the networked runtime
+/// ([`crate::net`]) can synthesize it into a worker's local queue when
+/// its coordinator connection drops — EOF and shutdown are the same
+/// exit path for [`run_server_loop`].
+pub const CTRL_SHUTDOWN: u64 = CTRL_BASE;
 const CTRL_KILL: u64 = CTRL_BASE | 1;
 const CTRL_REVIVE: u64 = CTRL_BASE | 2;
 const CTRL_SLOW: u64 = CTRL_BASE | 3;
@@ -162,8 +166,14 @@ const CTRL_OOM: u64 = CTRL_BASE | 4;
 const CTRL_OOM_CLEAR: u64 = CTRL_BASE | 5;
 /// Cancel flag (bit 62): `CANCEL_FLAG | task_tag`, payload = tick.
 const CANCEL_FLAG: u64 = 1 << 62;
-/// Coordinator's `src` on control messages.
-const COORD_SRC: usize = usize::MAX;
+/// Deadline multiplier granted to a Draining holder's started tasks
+/// before the gather suspects it anyway — cooperative drains complete
+/// well inside this window; only a drainee that died mid-drain (a
+/// networked-path reality) ever reaches it.
+const DRAIN_SUSPECT_PATIENCE: f64 = 16.0;
+/// Coordinator's `src` on control messages (public for the networked
+/// runtime, which writes the same control frames over TCP).
+pub const COORD_SRC: usize = usize::MAX;
 
 /// A CA-task ready for elastic dispatch: identity, physical target, and
 /// the tensors that make re-dispatch a pure resend.
@@ -358,6 +368,19 @@ pub struct TickStats {
     /// ([`retarget_for_beliefs`]) — mitigation that needed no deadline,
     /// no cancel, and no duplicate compute.
     pub belief_shed: usize,
+    /// Tasks re-sent after a transport-level send failure. On the
+    /// networked runtime a dead connection *is* a `kill:` — the pool
+    /// learns it at send time and the task fails over to the live
+    /// server with the most byte headroom, never panicking.
+    pub send_failovers: usize,
+    /// Per-server wire bytes (f32 Q+K+V) dispatched this tick,
+    /// including recovery re-sends — the `--stats-out` JSONL source.
+    /// Indexed by physical server id; filled after the gather.
+    pub server_bytes: Vec<f64>,
+    /// Per-server count of recovery re-sends *received* this tick
+    /// (speculative re-dispatch, OOM eviction, drain tail, send
+    /// failover) — where the recovery traffic actually landed.
+    pub server_redispatched: Vec<usize>,
     /// Re-dispatches attributed to each nano-batch wave (flat ticks use
     /// only the ping slot).
     pub wave_redispatched: [usize; 2],
@@ -371,7 +394,7 @@ pub struct TickStats {
 /// threads plus the coordinator-side dispatch/gather with failover.
 /// Ranks `[0, n)` are server inboxes; `[n, 2n)` are home output queues.
 pub struct ElasticCoordinator {
-    fabric: Arc<ChannelTransport>,
+    fabric: Arc<dyn Transport>,
     n_servers: usize,
     handles: Vec<std::thread::JoinHandle<Result<()>>>,
     pub pool: ServerPool,
@@ -397,13 +420,13 @@ impl ElasticCoordinator {
         mut factory: impl FnMut(usize) -> Box<dyn CaCompute>,
     ) -> ElasticCoordinator {
         assert!(n_servers > 0);
-        let fabric = Arc::new(ChannelTransport::new(2 * n_servers));
+        let fabric: Arc<dyn Transport> = Arc::new(ChannelTransport::new(2 * n_servers));
         let mut handles = Vec::with_capacity(n_servers);
         for s in 0..n_servers {
             let fabric = Arc::clone(&fabric);
             let compute = factory(s);
             handles.push(std::thread::spawn(move || {
-                server_thread(fabric, s, n_servers, compute)
+                run_server_loop(fabric, s, n_servers, compute)
             }));
         }
         let scaler = cfg.autoscale.clone().map(Autoscaler::new);
@@ -421,11 +444,51 @@ impl ElasticCoordinator {
         }
     }
 
+    /// Attach the coordinator to an externally managed transport — the
+    /// networked runtime, where attention servers are separate OS
+    /// processes reached over [`crate::net::TcpTransport`]. No worker
+    /// threads are spawned (or joined at [`ElasticCoordinator::shutdown`]);
+    /// the shutdown broadcast still goes out so remote workers exit
+    /// cleanly. The transport must expose `2 * n_servers` ranks with the
+    /// [`ElasticCoordinator::spawn`] layout: `[0, n)` server inboxes,
+    /// `[n, 2n)` home output queues.
+    pub fn over_transport(
+        fabric: Arc<dyn Transport>,
+        n_servers: usize,
+        cfg: ElasticCfg,
+    ) -> ElasticCoordinator {
+        assert!(n_servers > 0);
+        assert!(
+            fabric.n_ranks() >= 2 * n_servers,
+            "transport has {} ranks, need {}",
+            fabric.n_ranks(),
+            2 * n_servers
+        );
+        let scaler = cfg.autoscale.clone().map(Autoscaler::new);
+        ElasticCoordinator {
+            fabric,
+            n_servers,
+            handles: Vec::new(),
+            pool: ServerPool::new(n_servers),
+            health: HealthMonitor::new(n_servers, HealthCfg::default()),
+            gray: HashSet::new(),
+            scaler,
+            last_signals: None,
+            cfg,
+            stats: Vec::new(),
+        }
+    }
+
     pub fn n_servers(&self) -> usize {
         self.n_servers
     }
 
-    fn send_data(&self, server: usize, tick: usize, t: &ElasticTask) {
+    fn send_data(
+        &self,
+        server: usize,
+        tick: usize,
+        t: &ElasticTask,
+    ) -> Result<(), crate::exchange::SendError> {
         let tag = t.tag();
         assert!(
             tag & (CTRL_BASE | CANCEL_FLAG) == 0,
@@ -440,11 +503,81 @@ impl ElasticCoordinator {
         payload.extend_from_slice(&t.tensors.q);
         payload.extend_from_slice(&t.tensors.k);
         payload.extend_from_slice(&t.tensors.v);
-        self.fabric.send(server, Message { src: t.home, tag, payload });
+        self.fabric.send(server, Message { src: t.home, tag, payload })
     }
 
+    /// Control traffic is advisory: a failed send means the peer is
+    /// already gone, which the data path detects and recovers from on
+    /// its own — so control sends never propagate errors.
     fn send_ctrl(&self, server: usize, tag: u64, payload: Vec<f32>) {
-        self.fabric.send(server, Message { src: COORD_SRC, tag, payload });
+        let _ = self.fabric.send(server, Message { src: COORD_SRC, tag, payload });
+    }
+
+    /// Send one task, failing over on transport errors: a send failure
+    /// is a dead connection, so the destination is killed in the pool
+    /// (its other in-flight tasks recover through the normal gather
+    /// deadline path) and this task re-targets the live server with the
+    /// most byte headroom. Fallback targets come from `eligible` — the
+    /// caller's filtered candidate set (gather's unsuspected/full-speed
+    /// `healthy` list, dispatch's victims-excluded `targets`) minus
+    /// anyone killed since; only when that intersection is empty does
+    /// the whole schedulable pool become fair game. Returns the server
+    /// that actually took the bytes; errors only when no live server is
+    /// left.
+    #[allow(clippy::too_many_arguments)]
+    fn send_task_failover(
+        &mut self,
+        tick: usize,
+        t: &ElasticTask,
+        first: usize,
+        eligible: &[usize],
+        live_bytes: &mut [f64],
+        stats: &mut TickStats,
+    ) -> Result<usize> {
+        let mut dest = first;
+        loop {
+            match self.send_data(dest, tick, t) {
+                Ok(()) => {
+                    if dest != first {
+                        if let Some(c) = stats.server_redispatched.get_mut(dest) {
+                            *c += 1;
+                        }
+                    }
+                    return Ok(dest);
+                }
+                Err(e) => {
+                    // The bytes never left: remove this task's charge
+                    // from the dead destination, or `server_bytes`
+                    // telemetry would bill a SIGKILLed server for a
+                    // dispatch that failed (and double-count the task
+                    // once the failover target is charged).
+                    if let Some(b) = live_bytes.get_mut(dest) {
+                        *b = (*b - task_wire_bytes(t)).max(0.0);
+                    }
+                    // Kill regardless of prior state — a Draining dest
+                    // with a dead connection must become Dead, or the
+                    // gather would wait on its drain forever.
+                    if self.pool.state(dest) != ServerState::Dead {
+                        self.pool.kill(dest);
+                    }
+                    self.health.mark_dead(dest);
+                    stats.send_failovers += 1;
+                    let mut targets: Vec<usize> = eligible
+                        .iter()
+                        .copied()
+                        .filter(|&s| s != dest && self.pool.is_schedulable(s))
+                        .collect();
+                    if targets.is_empty() {
+                        targets = self.pool.schedulable();
+                    }
+                    anyhow::ensure!(
+                        !targets.is_empty(),
+                        "no live servers left to fail over to ({e})"
+                    );
+                    dest = max_headroom_target(&targets, live_bytes, 0.0, task_wire_bytes(t));
+                }
+            }
+        }
     }
 
     /// Apply this tick's `Slow`/`Rejoin` events (they land *before*
@@ -692,22 +825,30 @@ impl ElasticCoordinator {
                 }
                 if oomed_here && k >= cut {
                     // The evicted tail: shipped (and dropped) at the
-                    // victim, then re-sent to the server with the most
-                    // arena headroom.
-                    self.send_data(srv, tick, &tasks[i]);
+                    // victim — wasted bytes, so a failed send to an
+                    // already-dead victim is ignored — then re-sent to
+                    // the server with the most arena headroom.
+                    let _ = self.send_data(srv, tick, &tasks[i]);
                     stats.oom_evicted += 1;
-                    let d = max_headroom_target(
+                    let want = max_headroom_target(
                         &targets,
                         live_bytes,
                         0.0,
                         task_wire_bytes(&tasks[i]),
                     );
-                    self.send_data(d, tick, &tasks[i]);
+                    let d = self
+                        .send_task_failover(tick, &tasks[i], want, &targets, live_bytes, stats)?;
+                    if d == want {
+                        // (a failover already counted its own landing)
+                        if let Some(c) = stats.server_redispatched.get_mut(d) {
+                            *c += 1;
+                        }
+                    }
                     assigned.insert(tasks[i].tag(), d);
                     dispatch_at.insert(tasks[i].tag(), Instant::now());
                     continue;
                 }
-                let dest = if drained_here && k >= cut {
+                let want = if drained_here && k >= cut {
                     // Partial drain: redirect the unstarted tail,
                     // max-headroom-first.
                     stats.drain_redirected += 1;
@@ -718,7 +859,13 @@ impl ElasticCoordinator {
                     }
                     srv
                 };
-                self.send_data(dest, tick, &tasks[i]);
+                let dest =
+                    self.send_task_failover(tick, &tasks[i], want, &targets, live_bytes, stats)?;
+                if drained_here && k >= cut && dest == want {
+                    if let Some(c) = stats.server_redispatched.get_mut(dest) {
+                        *c += 1;
+                    }
+                }
                 assigned.insert(tasks[i].tag(), dest);
                 dispatch_at.insert(tasks[i].tag(), Instant::now());
             }
@@ -755,6 +902,7 @@ impl ElasticCoordinator {
         let faults = self.apply_tick_events(tick, fault);
         self.gray_demote(&mut stats);
         let (planned, mut live_bytes) = self.belief_plan(tasks, &mut stats);
+        stats.server_redispatched = vec![0; self.n_servers];
 
         let mut assigned: BTreeMap<u64, usize> = BTreeMap::new();
         let mut dispatch_at: BTreeMap<u64, Instant> = BTreeMap::new();
@@ -805,6 +953,7 @@ impl ElasticCoordinator {
             self.pool.leave(d);
             self.health.mark_dead(d);
         }
+        stats.server_bytes = live_bytes;
         stats.elapsed = t_start.elapsed().as_secs_f64();
         self.stats.push(stats);
         Ok(outputs.into_values().collect())
@@ -835,6 +984,7 @@ impl ElasticCoordinator {
         // point — see `autoscale_boundary`).
         let scale_drained = self.autoscale_boundary(tick, &mut stats);
         let (planned, mut live_bytes) = self.belief_plan(tasks, &mut stats);
+        stats.server_redispatched = vec![0; self.n_servers];
 
         // Two near-equal-weight nano-batch waves.
         let (ping_idx, pong_idx) =
@@ -929,6 +1079,7 @@ impl ElasticCoordinator {
             self.health.mark_dead(d);
         }
         self.record_signals(tasks);
+        stats.server_bytes = live_bytes;
         stats.elapsed = t_start.elapsed().as_secs_f64();
         self.stats.push(stats);
         Ok(outputs.into_values().collect())
@@ -1043,17 +1194,24 @@ impl ElasticCoordinator {
                     continue;
                 }
                 let holder = assigned[&tag];
-                if self.pool.state(holder) == ServerState::Draining {
-                    // Partial-drain contract: a drainee's started tasks
-                    // are never cancelled or re-dispatched — the drain
-                    // is cooperative, so we wait for it to finish.
-                    continue;
-                }
-                let scale = if med_pairs > 0.0 {
+                let mut scale = if med_pairs > 0.0 {
                     (pairs_of(&tasks[idx]) / med_pairs).max(1.0)
                 } else {
                     1.0
                 };
+                if self.pool.state(holder) == ServerState::Draining {
+                    // Partial-drain contract: a drainee's started tasks
+                    // are not cancelled or re-dispatched — the drain is
+                    // cooperative and finishes on its own. But that is
+                    // extended patience, not a blank check: on the
+                    // networked path a drainee can genuinely die
+                    // mid-drain, and an unconditional exemption would
+                    // hang the gather forever. Past the extended
+                    // deadline it is suspected like anyone else;
+                    // first-response-wins dedup keeps a late drainee
+                    // answer harmless.
+                    scale *= DRAIN_SUSPECT_PATIENCE;
+                }
                 if waited >= base.mul_f64(scale) {
                     by_srv.entry(holder).or_default().push(tag);
                 }
@@ -1103,13 +1261,25 @@ impl ElasticCoordinator {
                     // on first-response-wins dedup either way.
                     self.send_ctrl(srv, CANCEL_FLAG | tag, vec![header_word(tick)]);
                     stats.cancels_sent += 1;
-                    let target = max_headroom_target(
+                    let want = max_headroom_target(
                         &healthy,
                         live_bytes,
                         0.0,
                         task_wire_bytes(&tasks[expected[&tag]]),
                     );
-                    self.send_data(target, tick, &tasks[expected[&tag]]);
+                    let target = self.send_task_failover(
+                        tick,
+                        &tasks[expected[&tag]],
+                        want,
+                        &healthy,
+                        live_bytes,
+                        stats,
+                    )?;
+                    if target == want {
+                        if let Some(c) = stats.server_redispatched.get_mut(target) {
+                            *c += 1;
+                        }
+                    }
                     assigned.insert(tag, target);
                     dispatch_at.insert(tag, Instant::now());
                     stats.redispatched += 1;
@@ -1147,13 +1317,23 @@ impl Drop for ElasticCoordinator {
     }
 }
 
-/// One attention-server worker: recv → (fault state) → compute → return.
-/// A "dead" server keeps draining its inbox but produces nothing — the
-/// coordinator's view of a crashed box. Elastic mode executes task-at-a-
-/// time (preemptible granularity) rather than tick-batch fusion; the
-/// compute is per-task deterministic so outputs are unaffected.
-fn server_thread(
-    fabric: Arc<ChannelTransport>,
+/// One attention-server worker loop: recv → (fault state) → compute →
+/// return. A "dead" server keeps draining its inbox but produces
+/// nothing — the coordinator's view of a crashed box. Elastic mode
+/// executes task-at-a-time (preemptible granularity) rather than
+/// tick-batch fusion; the compute is per-task deterministic so outputs
+/// are unaffected.
+///
+/// Public because it is transport-generic: the in-process runtime runs
+/// it on a thread over [`ChannelTransport`], and the networked worker
+/// daemon (`distca worker`, [`crate::net::worker`]) runs the *same
+/// loop* over a [`crate::net::TcpTransport`] — the control tags
+/// (`CTRL_*`), the payload layout, and the fault semantics are
+/// identical on both wires. Returns when it receives
+/// [`CTRL_SHUTDOWN`] (which a networked transport also synthesizes on
+/// connection EOF) or when the coordinator becomes unreachable.
+pub fn run_server_loop(
+    fabric: Arc<dyn Transport>,
     s: usize,
     n_servers: usize,
     mut compute: Box<dyn CaCompute>,
@@ -1205,7 +1385,14 @@ fn server_thread(
                 let mut payload = Vec::with_capacity(1 + o.len());
                 payload.push(header_word(tick));
                 payload.extend_from_slice(&o);
-                fabric.send(n_servers + home, Message { src: s, tag, payload });
+                if fabric
+                    .send(n_servers + home, Message { src: s, tag, payload })
+                    .is_err()
+                {
+                    // Coordinator gone: nobody is left to return results
+                    // to, so the worker exits cleanly.
+                    return Ok(());
+                }
             }
         }
     }

@@ -6,7 +6,7 @@
 
 pub mod transport;
 
-pub use transport::{ChannelTransport, Transport};
+pub use transport::{ChannelTransport, SendError, Transport};
 
 use crate::coordinator::Plan;
 

@@ -6,6 +6,7 @@
 //! different wire. The byte accounting feeding the simulator is identical
 //! either way.
 
+use std::fmt;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Mutex;
 
@@ -17,11 +18,35 @@ pub struct Message {
     pub payload: Vec<f32>,
 }
 
+/// A send that could not reach its destination rank. On the in-process
+/// channel fabric this means the receiver was dropped; on the networked
+/// fabric it means the connection is down — either way the peer is
+/// gone, and the caller must treat the destination as dead and recover
+/// through the elastic re-dispatch path (never panic: a lost server
+/// loses only re-sendable bytes, §3 statelessness).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SendError {
+    /// Destination rank of the failed send.
+    pub dst: usize,
+    /// Human-readable cause.
+    pub reason: String,
+}
+
+impl fmt::Display for SendError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "send to rank {} failed: {}", self.dst, self.reason)
+    }
+}
+
+impl std::error::Error for SendError {}
+
 /// Point-to-point transport between `n` ranks.
 pub trait Transport: Send + Sync {
     fn n_ranks(&self) -> usize;
-    /// Send `msg` to `dst` (non-blocking).
-    fn send(&self, dst: usize, msg: Message);
+    /// Send `msg` to `dst` (non-blocking). A send error means the
+    /// destination is unreachable (dropped receiver / dead connection);
+    /// callers on the dispatch path must fail over, not panic.
+    fn send(&self, dst: usize, msg: Message) -> Result<(), SendError>;
     /// Receive the next message addressed to `rank` (blocking).
     fn recv(&self, rank: usize) -> Message;
     /// Try to receive without blocking.
@@ -52,8 +77,14 @@ impl Transport for ChannelTransport {
         self.senders.len()
     }
 
-    fn send(&self, dst: usize, msg: Message) {
-        self.senders[dst].send(msg).expect("receiver dropped");
+    fn send(&self, dst: usize, msg: Message) -> Result<(), SendError> {
+        let Some(tx) = self.senders.get(dst) else {
+            return Err(SendError {
+                dst,
+                reason: format!("rank out of range (fabric has {})", self.senders.len()),
+            });
+        };
+        tx.send(msg).map_err(|_| SendError { dst, reason: "receiver dropped".into() })
     }
 
     fn recv(&self, rank: usize) -> Message {
@@ -77,7 +108,7 @@ mod tests {
     #[test]
     fn point_to_point() {
         let t = ChannelTransport::new(2);
-        t.send(1, Message { src: 0, tag: 7, payload: vec![1.0, 2.0] });
+        t.send(1, Message { src: 0, tag: 7, payload: vec![1.0, 2.0] }).unwrap();
         let m = t.recv(1);
         assert_eq!(m.src, 0);
         assert_eq!(m.tag, 7);
@@ -88,8 +119,16 @@ mod tests {
     fn try_recv_nonblocking() {
         let t = ChannelTransport::new(1);
         assert!(t.try_recv(0).is_none());
-        t.send(0, Message { src: 0, tag: 1, payload: vec![] });
+        t.send(0, Message { src: 0, tag: 1, payload: vec![] }).unwrap();
         assert!(t.try_recv(0).is_some());
+    }
+
+    #[test]
+    fn send_out_of_range_is_an_error_not_a_panic() {
+        let t = ChannelTransport::new(2);
+        let err = t.send(5, Message { src: 0, tag: 1, payload: vec![] }).unwrap_err();
+        assert_eq!(err.dst, 5);
+        assert!(err.to_string().contains("out of range"), "{err}");
     }
 
     #[test]
@@ -102,7 +141,9 @@ mod tests {
                 // every rank sends its id to every other rank
                 for dst in 0..4 {
                     if dst != rank {
-                        t.send(dst, Message { src: rank, tag: rank as u64, payload: vec![rank as f32] });
+                        let m =
+                            Message { src: rank, tag: rank as u64, payload: vec![rank as f32] };
+                        t.send(dst, m).unwrap();
                     }
                 }
                 let mut got = Vec::new();

@@ -19,9 +19,13 @@
 //!   ([`parallel`]), a discrete-event cluster simulator ([`sim`])
 //!   standing in for the paper's 512×H200 testbed — with per-resource
 //!   live-byte tracking and OOM eviction in its engine — the baselines
-//!   it compares against ([`baselines`]), and a PJRT runtime
-//!   ([`runtime`]) that executes the AOT-compiled JAX/Pallas artifacts
-//!   on the real CPU backend.
+//!   it compares against ([`baselines`]), a **networked runtime**
+//!   ([`net`]: attention servers as separate OS processes speaking a
+//!   length-prefixed binary protocol over TCP, driven bit-exact by the
+//!   same elastic coordinator through the pluggable
+//!   [`exchange::Transport`]), and a PJRT runtime ([`runtime`]) that
+//!   executes the AOT-compiled JAX/Pallas artifacts on the real CPU
+//!   backend.
 //!
 //! Fault tolerance rests on the paper's §3 observation that core
 //! attention is *stateless*: a CA-task is (Q, KV) → O with no trainable
@@ -66,6 +70,7 @@ pub mod exchange;
 pub mod memplan;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod parallel;
 pub mod runtime;
 pub mod server;

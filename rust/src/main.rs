@@ -40,6 +40,9 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("schedule", "run the scheduler on a sampled batch; print the plan"),
     ("memory", "per-server transient-memory balance: DistCA in-place vs colocated"),
     ("elastic", "elastic server pool under a fault plan (sim or threaded; --pp for PP ticks)"),
+    ("worker", "attention-server worker daemon: listen for a coordinator over TCP"),
+    ("serve", "networked coordinator over worker processes (--spawn | --connect a,b,c)"),
+    ("soak", "networked soak harness: replay a document-length mix, emit BENCH_net.json"),
     ("train", "train the tiny LM end-to-end via AOT artifacts"),
     ("bound", "Appendix A max-partition bound"),
     ("info", "print model & cluster configs"),
@@ -92,6 +95,27 @@ fn specs() -> Vec<FlagSpec> {
             None,
         ),
         FlagSpec::boolean("autoscale", "enable pool autoscaling (elastic, incl. --pp sim)"),
+        FlagSpec::value(
+            "listen",
+            "worker listen address (worker; :0 = kernel port)",
+            Some("127.0.0.1:0"),
+        ),
+        FlagSpec::value("port-file", "write the bound worker address here (worker)", None),
+        FlagSpec::value("workers", "worker process count (serve/soak)", Some("4")),
+        FlagSpec::boolean("spawn", "spawn local worker processes (serve/soak)"),
+        FlagSpec::value("connect", "comma-separated worker addresses (serve/soak)", None),
+        FlagSpec::value(
+            "docs-per-tick",
+            "documents sampled per tick (serve/soak; default 2x workers)",
+            None,
+        ),
+        FlagSpec::value("stats-out", "per-server per-tick JSONL stats path (serve/soak)", None),
+        FlagSpec::value("bench-out", "summary JSON path (soak; default BENCH_net.json)", None),
+        FlagSpec::value(
+            "hb-ms",
+            "worker heartbeat interval in ms (serve/soak; 0 disables)",
+            Some("200"),
+        ),
         FlagSpec::boolean("json", "emit JSON instead of tables"),
         FlagSpec::boolean("verbose", "debug logging"),
     ]
@@ -116,6 +140,9 @@ fn main() {
         Some("schedule") => cmd_schedule(&args),
         Some("memory") => cmd_memory(&args),
         Some("elastic") => cmd_elastic(&args),
+        Some("worker") => cmd_worker(&args),
+        Some("serve") => cmd_net(&args, false),
+        Some("soak") => cmd_net(&args, true),
         Some("train") => cmd_train(&args),
         Some("bound") => cmd_bound(&args),
         Some("info") => cmd_info(&args),
@@ -952,6 +979,125 @@ fn cmd_elastic_threaded(
     let redisp: usize = stats.iter().map(|s| s.redispatched).sum();
     let dups: usize = stats.iter().map(|s| s.duplicates_suppressed).sum();
     println!("re-dispatched {redisp} | duplicates suppressed {dups} | outputs verified against the monolithic oracle");
+    Ok(())
+}
+
+/// `distca worker` — one attention-server daemon process.
+fn cmd_worker(args: &Args) -> anyhow::Result<()> {
+    let cfg = distca::net::WorkerCfg {
+        listen: args.req("listen")?.to_string(),
+        port_file: args.get("port-file").map(std::path::PathBuf::from),
+    };
+    distca::net::run_worker(&cfg)
+}
+
+/// Shared `distca serve` / `distca soak` front-end: build the config,
+/// run the networked session, print the report.
+fn cmd_net(args: &Args, soak: bool) -> anyhow::Result<()> {
+    let workers = args.get_usize("workers", 4)?;
+    anyhow::ensure!(workers >= 2, "--workers must be at least 2");
+    let spawn = args.get_bool("spawn");
+    let connect: Vec<String> = args
+        .get("connect")
+        .map(|s| {
+            s.split(',')
+                .map(|a| a.trim().to_string())
+                .filter(|a| !a.is_empty())
+                .collect()
+        })
+        .unwrap_or_default();
+    let ticks = args.get_usize("ticks", if soak { 8 } else { 4 })?;
+    let seed = match args.get_parse::<u64>("seed")? {
+        Some(s) => s,
+        None => distca::util::rng::seed_from_env(42),
+    };
+    // Scripted faults are explicit-only on the net paths (no seeded
+    // random default: a SIGKILL is a heavyweight event to surprise a
+    // user with). kills/rejoins run at the process level.
+    let fault = match (args.get("fault-plan"), args.get("fault")) {
+        (Some(path), _) => {
+            let j = distca::util::json::parse_file(std::path::Path::new(path))
+                .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+            FaultPlan::from_json(&j).map_err(|e| anyhow::anyhow!("{path}: {e}"))?
+        }
+        (None, Some(spec)) => FaultPlan::parse_spec(spec).map_err(|e| anyhow::anyhow!(e))?,
+        (None, None) => FaultPlan::new(),
+    };
+    ensure_fault_in_scope(&fault, workers, ticks)?;
+    let hb_ms = args.get_u64("hb-ms", 200)?;
+    let cfg = distca::net::ServeCfg {
+        workers,
+        spawn,
+        connect,
+        ticks,
+        docs_per_tick: args.get_usize("docs-per-tick", 2 * workers)?,
+        seed,
+        data: DataDist::from_str(args.req("data")?)
+            .ok_or_else(|| anyhow::anyhow!("unknown data distribution"))?,
+        max_doc: args.get_usize("max-doc-len", 131_072)?,
+        fault,
+        stats_out: args.get("stats-out").map(std::path::PathBuf::from),
+        bench_out: match args.get("bench-out") {
+            Some(p) => Some(std::path::PathBuf::from(p)),
+            None if soak => Some(std::path::PathBuf::from("BENCH_net.json")),
+            None => None,
+        },
+        hb_interval: std::time::Duration::from_millis(hb_ms),
+        hb_timeout: std::time::Duration::from_millis(if hb_ms == 0 {
+            0
+        } else {
+            (hb_ms * 10).max(2000)
+        }),
+    };
+    let report = distca::net::run_serve(&cfg)?;
+    if args.get_bool("json") {
+        println!("{}", report.to_json().to_string_pretty());
+        return Ok(());
+    }
+    let mut t = Table::new(
+        &format!(
+            "net {}: {} workers ({}), {} ticks, fault plan [{}] — all outputs bit-exact over TCP",
+            if soak { "soak" } else { "serve" },
+            report.workers,
+            if cfg.spawn { "spawned" } else { "connected" },
+            report.per_tick.len(),
+            if cfg.fault.is_empty() { "none".to_string() } else { cfg.fault.to_spec() }
+        ),
+        &[
+            "tick", "alive", "tasks", "redisp", "sendfail", "remap", "conn-kill", "sigkill",
+            "rejoin", "bytes", "makespan",
+        ],
+    );
+    for r in &report.per_tick {
+        t.row(&[
+            r.tick.to_string(),
+            r.n_alive.to_string(),
+            r.n_tasks.to_string(),
+            r.redispatched.to_string(),
+            r.send_failovers.to_string(),
+            r.remapped.to_string(),
+            r.connection_kills.to_string(),
+            r.process_kills.to_string(),
+            r.rejoins.to_string(),
+            bytes(r.bytes_dispatched),
+            secs(r.elapsed),
+        ]);
+    }
+    t.print();
+    println!(
+        "re-dispatched {} | send failovers {} | SIGKILLs {} | connection kills {} | rejoins {} | outputs verified against the monolithic oracle",
+        report.total_redispatched,
+        report.total_send_failovers,
+        report.total_process_kills,
+        report.total_connection_kills,
+        report.total_rejoins,
+    );
+    if let Some(p) = &cfg.bench_out {
+        println!("wrote {}", p.display());
+    }
+    if let Some(p) = &cfg.stats_out {
+        println!("wrote {}", p.display());
+    }
     Ok(())
 }
 

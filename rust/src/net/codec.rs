@@ -1,0 +1,377 @@
+//! Length-prefixed binary framing for the TCP fabric.
+//!
+//! One frame carries one [`Message`] (or one control event) with the
+//! exact payload the in-process paths use: a `Vec<f32>` whose leading
+//! words are *bit-cast* u32 headers ([`crate::server`]'s
+//! `header_word` scheme — exact beyond 2^24, the PR-1 regression
+//! class). The codec preserves every f32 **bit pattern** verbatim, so
+//! a tick that runs over sockets is byte-identical to one that runs
+//! over channels.
+//!
+//! ## Wire format (little-endian)
+//!
+//! | offset | size | field |
+//! |---|---|---|
+//! | 0 | 4 | magic `0x44434131` (`"1ACD"` on the wire — `"DCA1"` read big-endian) |
+//! | 4 | 1 | frame kind ([`FrameKind`]) |
+//! | 5 | 4 | `dst` rank (u32) |
+//! | 9 | 8 | `src` rank (u64; `usize::MAX` = coordinator) |
+//! | 17 | 8 | `tag` (u64: the `(doc, q_start)` / `CTRL_*` tag space) |
+//! | 25 | 4 | payload element count (u32, **count of f32 words**, not bytes) |
+//! | 29 | 4·n | payload: each f32 as its u32 bit pattern, LE |
+//!
+//! The element count is an integer field, never an f32 — counts above
+//! 2^24 are exact by construction. Frames claiming more than
+//! [`MAX_PAYLOAD_ELEMS`] elements are rejected with a descriptive
+//! error before any allocation, and a stream that ends mid-frame is a
+//! *truncated frame* error at [`FrameDecoder::finish`], not a silent
+//! drop.
+
+use std::fmt;
+
+use crate::exchange::transport::Message;
+
+/// Stream magic: every frame starts with these four bytes.
+pub const MAGIC: u32 = 0x4443_4131;
+
+/// Fixed header size in bytes (everything before the payload).
+pub const HEADER_BYTES: usize = 4 + 1 + 4 + 8 + 8 + 4;
+
+/// Hard cap on payload element count (2^28 f32 words = 1 GiB): frames
+/// beyond this are rejected as corrupt rather than allocated.
+pub const MAX_PAYLOAD_ELEMS: u32 = 1 << 28;
+
+/// Codec-level failure: corrupt magic, unknown kind, oversized or
+/// truncated frames. Always descriptive — these errors surface in
+/// worker logs when a stream desyncs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CodecError(pub String);
+
+impl fmt::Display for CodecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "codec error: {}", self.0)
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+/// What a frame carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// A data-plane [`Message`] for rank `dst` (CA-task tensors,
+    /// outputs, or `CTRL_*` control messages — the tag disambiguates).
+    Msg,
+    /// Worker → coordinator registration: "rank `src` is live".
+    Hello,
+    /// Coordinator → worker handshake: rank assignment, pool size,
+    /// attention dims, heartbeat interval (bit-cast header words).
+    Config,
+    /// Worker → coordinator liveness beat; payload `[seq]`.
+    Heartbeat,
+    /// Worker → coordinator: "drain me" — a graceful leave request the
+    /// coordinator maps to the `drain:` fault kind.
+    Drain,
+    /// Worker → coordinator: orderly exit. A connection that drops
+    /// *without* a goodbye is a crash — the `kill:` fault kind.
+    Goodbye,
+}
+
+impl FrameKind {
+    pub fn to_byte(self) -> u8 {
+        match self {
+            FrameKind::Msg => 1,
+            FrameKind::Hello => 2,
+            FrameKind::Config => 3,
+            FrameKind::Heartbeat => 4,
+            FrameKind::Drain => 5,
+            FrameKind::Goodbye => 6,
+        }
+    }
+
+    pub fn from_byte(b: u8) -> Result<FrameKind, CodecError> {
+        Ok(match b {
+            1 => FrameKind::Msg,
+            2 => FrameKind::Hello,
+            3 => FrameKind::Config,
+            4 => FrameKind::Heartbeat,
+            5 => FrameKind::Drain,
+            6 => FrameKind::Goodbye,
+            other => {
+                return Err(CodecError(format!(
+                    "unknown frame kind {other} (corrupt or desynced stream)"
+                )))
+            }
+        })
+    }
+}
+
+/// One decoded wire frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub dst: u32,
+    pub src: u64,
+    pub tag: u64,
+    pub payload: Vec<f32>,
+}
+
+impl Frame {
+    /// Wrap a data-plane message bound for rank `dst`.
+    pub fn msg(dst: usize, m: Message) -> Frame {
+        Frame {
+            kind: FrameKind::Msg,
+            dst: dst as u32,
+            src: m.src as u64,
+            tag: m.tag,
+            payload: m.payload,
+        }
+    }
+
+    /// A control frame from rank `src` (pass `usize::MAX` for the
+    /// coordinator).
+    pub fn control(kind: FrameKind, src: usize, payload: Vec<f32>) -> Frame {
+        Frame { kind, dst: 0, src: src as u64, tag: 0, payload }
+    }
+
+    /// Unwrap back into the transport message (data frames).
+    pub fn into_message(self) -> Message {
+        Message { src: self.src as usize, tag: self.tag, payload: self.payload }
+    }
+
+    /// Total encoded size in bytes.
+    pub fn encoded_len(&self) -> usize {
+        HEADER_BYTES + 4 * self.payload.len()
+    }
+
+    /// Serialize to wire bytes. Rejects payloads beyond
+    /// [`MAX_PAYLOAD_ELEMS`] so a corrupt caller cannot emit a frame no
+    /// decoder will accept.
+    pub fn encode(&self) -> Result<Vec<u8>, CodecError> {
+        if self.payload.len() > MAX_PAYLOAD_ELEMS as usize {
+            return Err(CodecError(format!(
+                "oversized frame: {} payload elements exceeds the {} cap",
+                self.payload.len(),
+                MAX_PAYLOAD_ELEMS
+            )));
+        }
+        let mut out = Vec::with_capacity(self.encoded_len());
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.push(self.kind.to_byte());
+        out.extend_from_slice(&self.dst.to_le_bytes());
+        out.extend_from_slice(&self.src.to_le_bytes());
+        out.extend_from_slice(&self.tag.to_le_bytes());
+        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        for &w in &self.payload {
+            // Bit pattern, not value: NaNs, signed zeros, and bit-cast
+            // integer header words all survive verbatim.
+            out.extend_from_slice(&w.to_bits().to_le_bytes());
+        }
+        Ok(out)
+    }
+}
+
+/// Incremental frame decoder: push bytes in whatever chunks the socket
+/// yields, pop complete frames. Split read boundaries — mid-header,
+/// mid-payload, many frames per chunk — never change the decoded
+/// sequence (property-tested in `tests/prop_net_codec.rs`).
+#[derive(Debug, Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    read: usize,
+}
+
+impl FrameDecoder {
+    pub fn new() -> FrameDecoder {
+        FrameDecoder::default()
+    }
+
+    /// Append raw stream bytes.
+    pub fn push(&mut self, bytes: &[u8]) {
+        // Compact lazily: once consumed bytes dominate the buffer,
+        // drop them so long-lived streams don't grow without bound.
+        if self.read > 0 && 2 * self.read >= self.buf.len() {
+            self.buf.drain(..self.read);
+            self.read = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed by a complete frame.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.read
+    }
+
+    /// Take the unconsumed bytes out of the decoder (handshake →
+    /// transport handoff: whatever was read past the CONFIG frame
+    /// belongs to the data stream).
+    pub fn take_buffered(&mut self) -> Vec<u8> {
+        let rest = self.buf[self.read..].to_vec();
+        self.buf.clear();
+        self.read = 0;
+        rest
+    }
+
+    /// Decode the next complete frame, `None` if more bytes are needed.
+    pub fn next_frame(&mut self) -> Result<Option<Frame>, CodecError> {
+        let b = &self.buf[self.read..];
+        if b.len() < HEADER_BYTES {
+            return Ok(None);
+        }
+        let magic = u32::from_le_bytes(b[0..4].try_into().unwrap());
+        if magic != MAGIC {
+            return Err(CodecError(format!(
+                "bad magic 0x{magic:08x} (expected 0x{MAGIC:08x}; corrupt or non-DistCA stream)"
+            )));
+        }
+        let kind = FrameKind::from_byte(b[4])?;
+        let dst = u32::from_le_bytes(b[5..9].try_into().unwrap());
+        let src = u64::from_le_bytes(b[9..17].try_into().unwrap());
+        let tag = u64::from_le_bytes(b[17..25].try_into().unwrap());
+        let len = u32::from_le_bytes(b[25..29].try_into().unwrap());
+        if len > MAX_PAYLOAD_ELEMS {
+            return Err(CodecError(format!(
+                "oversized frame: header claims {len} payload elements, cap is {MAX_PAYLOAD_ELEMS}"
+            )));
+        }
+        let need = HEADER_BYTES + 4 * len as usize;
+        if b.len() < need {
+            return Ok(None);
+        }
+        let mut payload = Vec::with_capacity(len as usize);
+        let mut off = HEADER_BYTES;
+        for _ in 0..len {
+            payload.push(f32::from_bits(u32::from_le_bytes(
+                b[off..off + 4].try_into().unwrap(),
+            )));
+            off += 4;
+        }
+        self.read += need;
+        Ok(Some(Frame { kind, dst, src, tag, payload }))
+    }
+
+    /// Call at stream EOF: leftover bytes mean the peer died mid-write.
+    pub fn finish(&self) -> Result<(), CodecError> {
+        let left = self.buffered();
+        if left == 0 {
+            Ok(())
+        } else {
+            Err(CodecError(format!(
+                "truncated frame at EOF: {left} bytes of an incomplete frame buffered"
+            )))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Frame {
+        Frame {
+            kind: FrameKind::Msg,
+            dst: 3,
+            src: 1,
+            tag: 0xDEAD_BEEF_CAFE,
+            payload: vec![1.0, -2.5, 0.0, f32::from_bits(0x0123_4567)],
+        }
+    }
+
+    #[test]
+    fn roundtrip_one_frame() {
+        let f = sample();
+        let bytes = f.encode().unwrap();
+        assert_eq!(bytes.len(), f.encoded_len());
+        let mut dec = FrameDecoder::new();
+        dec.push(&bytes);
+        let g = dec.next_frame().unwrap().unwrap();
+        assert_eq!(g, f);
+        assert!(dec.next_frame().unwrap().is_none());
+        dec.finish().unwrap();
+    }
+
+    #[test]
+    fn message_roundtrip_preserves_coordinator_src() {
+        let m = Message { src: usize::MAX, tag: 7, payload: vec![1.0] };
+        let f = Frame::msg(4, m.clone());
+        let bytes = f.encode().unwrap();
+        let mut dec = FrameDecoder::new();
+        dec.push(&bytes);
+        let g = dec.next_frame().unwrap().unwrap();
+        assert_eq!(g.dst, 4);
+        assert_eq!(g.into_message(), m);
+    }
+
+    #[test]
+    fn control_kinds_roundtrip() {
+        for kind in [
+            FrameKind::Hello,
+            FrameKind::Config,
+            FrameKind::Heartbeat,
+            FrameKind::Drain,
+            FrameKind::Goodbye,
+        ] {
+            let f = Frame::control(kind, 2, vec![5.0]);
+            let mut dec = FrameDecoder::new();
+            dec.push(&f.encode().unwrap());
+            assert_eq!(dec.next_frame().unwrap().unwrap().kind, kind);
+        }
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = sample().encode().unwrap();
+        bytes[0] ^= 0xFF;
+        let mut dec = FrameDecoder::new();
+        dec.push(&bytes);
+        let err = dec.next_frame().unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn unknown_kind_rejected() {
+        let mut bytes = sample().encode().unwrap();
+        bytes[4] = 99;
+        let mut dec = FrameDecoder::new();
+        dec.push(&bytes);
+        let err = dec.next_frame().unwrap_err();
+        assert!(err.to_string().contains("kind"), "{err}");
+    }
+
+    #[test]
+    fn truncated_stream_flagged_at_finish() {
+        let bytes = sample().encode().unwrap();
+        let mut dec = FrameDecoder::new();
+        dec.push(&bytes[..bytes.len() - 1]);
+        assert!(dec.next_frame().unwrap().is_none());
+        let err = dec.finish().unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn oversized_header_rejected_without_allocation() {
+        let mut hdr = Vec::new();
+        hdr.extend_from_slice(&MAGIC.to_le_bytes());
+        hdr.push(1);
+        hdr.extend_from_slice(&0u32.to_le_bytes());
+        hdr.extend_from_slice(&0u64.to_le_bytes());
+        hdr.extend_from_slice(&0u64.to_le_bytes());
+        hdr.extend_from_slice(&(MAX_PAYLOAD_ELEMS + 1).to_le_bytes());
+        let mut dec = FrameDecoder::new();
+        dec.push(&hdr);
+        let err = dec.next_frame().unwrap_err();
+        assert!(err.to_string().contains("oversized"), "{err}");
+    }
+
+    #[test]
+    fn take_buffered_hands_off_the_tail() {
+        let a = sample().encode().unwrap();
+        let b = sample().encode().unwrap();
+        let mut dec = FrameDecoder::new();
+        dec.push(&a);
+        dec.push(&b[..10]);
+        assert!(dec.next_frame().unwrap().is_some());
+        let rest = dec.take_buffered();
+        assert_eq!(rest, &b[..10]);
+        assert_eq!(dec.buffered(), 0);
+    }
+}

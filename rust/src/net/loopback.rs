@@ -1,0 +1,92 @@
+//! In-process loopback harness: worker loops on threads, but every
+//! byte crosses a **real localhost TCP socket** through the full
+//! codec/transport stack. This is the hermetic middle ground between
+//! the threaded `ChannelTransport` runtime and separate-process
+//! workers — the conformance suite uses it to run the same seeded
+//! `(docs, fault-plan)` cases bit-exact *over sockets* without needing
+//! the `distca` binary on PATH.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::elastic::{ElasticCfg, ElasticCoordinator};
+use crate::exchange::transport::Transport;
+
+use super::codec::{Frame, FrameKind};
+use super::transport::TcpTransport;
+use super::worker::{serve_stream, WorkerConfig};
+
+/// A live loopback worker pool: the coordinator-side fabric plus the
+/// worker threads serving the other end of each socket.
+pub struct LoopbackPool {
+    pub fabric: Arc<TcpTransport>,
+    pub n_servers: usize,
+    handles: Vec<std::thread::JoinHandle<Result<()>>>,
+}
+
+/// Spawn `n` loopback workers (reference GQA compute with the given
+/// dims), connect, handshake, and wait for every registration HELLO.
+pub fn spawn_loopback_pool(
+    n: usize,
+    n_heads: usize,
+    n_kv_heads: usize,
+    head_dim: usize,
+) -> Result<LoopbackPool> {
+    assert!(n > 0);
+    let fabric = TcpTransport::coordinator(n);
+    let mut handles = Vec::with_capacity(n);
+    for rank in 0..n {
+        let listener = TcpListener::bind("127.0.0.1:0").context("binding loopback")?;
+        let addr = listener.local_addr()?;
+        handles.push(std::thread::spawn(move || {
+            let (stream, _) = listener.accept().context("loopback accept")?;
+            serve_stream(stream)
+        }));
+        let stream = TcpStream::connect(addr).context("dialing loopback worker")?;
+        TcpTransport::attach(&fabric, rank, rank, stream, &[])?;
+        let cfg = WorkerConfig {
+            rank,
+            n_servers: n,
+            n_heads,
+            n_kv_heads,
+            head_dim,
+            // No heartbeats: nothing drains the event queue during a
+            // conformance case (liveness policy lives in serve), and
+            // 20 beats/s/worker would grow it for the whole run.
+            hb_interval: Duration::ZERO,
+        };
+        fabric
+            .send_frame(rank, &Frame::control(FrameKind::Config, usize::MAX, cfg.to_payload()))
+            .map_err(|e| anyhow::anyhow!("CONFIG to worker {rank}: {e}"))?;
+    }
+    // Registration barrier: every worker must HELLO before the first
+    // dispatch, or early sends could race the handshake. Same wait as
+    // the process path (`serve::wait_hello`); the queued non-HELLO
+    // events (heartbeats) are discarded — the loopback harness
+    // exercises the data path, liveness policy lives in serve.
+    let mut pending = Vec::new();
+    for rank in 0..n {
+        super::serve::wait_hello(&fabric, rank, &mut pending, Duration::from_secs(10))?;
+    }
+    Ok(LoopbackPool { fabric, n_servers: n, handles })
+}
+
+impl LoopbackPool {
+    /// An elastic coordinator driving ticks over this pool's sockets.
+    pub fn coordinator(&self, cfg: ElasticCfg) -> ElasticCoordinator {
+        let fabric: Arc<dyn Transport> = Arc::clone(&self.fabric) as Arc<dyn Transport>;
+        ElasticCoordinator::over_transport(fabric, self.n_servers, cfg)
+    }
+
+    /// Join every worker thread (call after the coordinator's
+    /// `shutdown()` has broadcast `CTRL_SHUTDOWN`).
+    pub fn join(self) -> Result<()> {
+        for h in self.handles {
+            h.join().map_err(|_| anyhow::anyhow!("loopback worker thread panicked"))??;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,63 @@
+//! Networked attention-server runtime: TCP transport, worker daemons,
+//! and the soak/load harness.
+//!
+//! DistCA's attention servers are independent devices reached over a
+//! fabric (§4.1 — NVSHMEM all-to-all on the paper's testbed). This
+//! module gives the reproduction a **real connection boundary**:
+//! attention servers run as separate OS processes speaking a
+//! length-prefixed binary protocol over TCP, and the elastic
+//! coordinator drives full ticks over the wire through the same
+//! [`Transport`](crate::exchange::Transport) trait the in-process
+//! channel fabric implements — `server/` message discipline and the
+//! `elastic/` dispatch/gather/failover machinery run unmodified.
+//!
+//! * [`codec`] — the wire format: one frame per message, fixed header
+//!   (magic, kind, dst, src, tag, element count) + f32 payload carried
+//!   as verbatim bit patterns, so socket runs are *bit-exact* against
+//!   channel runs. Incremental [`FrameDecoder`] tolerant of arbitrary
+//!   read-boundary splits; truncated and oversized frames rejected
+//!   with descriptive errors.
+//! * [`transport`] — [`TcpTransport`]: the same `[0, n)` server /
+//!   `[n, 2n)` home rank layout, with remote ranks behind framed
+//!   sockets and a control-plane event queue (hello / heartbeat /
+//!   drain / goodbye / disconnect).
+//! * [`worker`] — the `distca worker` daemon: CONFIG/HELLO handshake,
+//!   heartbeats, then [`crate::elastic::run_server_loop`] over TCP.
+//! * [`serve`] — the `distca serve` / `distca soak` coordinator
+//!   front-end: spawns (or connects to) worker processes, replays
+//!   seeded document-length mixes, plans with believed speeds,
+//!   verifies every tick bit-exact vs the GQA oracle, and emits
+//!   per-tick / per-server stats (`--stats-out` JSONL,
+//!   `BENCH_net.json`).
+//! * [`loopback`] — in-process workers over real localhost sockets:
+//!   the hermetic harness the conformance suite uses for its `net`
+//!   path.
+//!
+//! ## Connection lifecycle → fault kind
+//!
+//! The elastic fault model needs no new kinds — connection states map
+//! onto it exactly:
+//!
+//! | connection observation | fault kind | recovery path |
+//! |---|---|---|
+//! | EOF without GOODBYE / failed send / stale heartbeats | `kill:` | pool kill → gather deadline → re-dispatch (max-headroom-first) |
+//! | DRAIN frame from the worker | `drain:` | rank sits the tick out, leaves at tick end, daemon told to exit (the stock daemon does not yet originate DRAIN) |
+//! | reconnection of a dead rank | `rejoin:` | restore + health/EWMA reset |
+//!
+//! The scripted fault injector gains a **process-level backend**:
+//! under `distca serve --spawn`, a `kill:s@t` event SIGKILLs the
+//! worker's OS process (the pool is *not* told — detection happens
+//! over the wire, like a real crash), and `rejoin:s@t` respawns and
+//! reconnects it. `slow:`/`drain:`/`oom:` events stay in-band,
+//! identical to the threaded runtime.
+
+pub mod codec;
+pub mod loopback;
+pub mod serve;
+pub mod transport;
+pub mod worker;
+
+pub use codec::{CodecError, Frame, FrameDecoder, FrameKind};
+pub use serve::{run_serve, NetRunReport, NetTickRecord, ServeCfg, NET_DIMS};
+pub use transport::{NetEvent, TcpTransport};
+pub use worker::{run_worker, serve_stream, WorkerCfg, WorkerConfig};

@@ -1,0 +1,699 @@
+//! `distca serve` / `distca soak` — the networked coordinator.
+//!
+//! Drives full elastic ticks over a pool of **separate worker
+//! processes** (`--spawn`: children of this process, SIGKILL-able by
+//! the fault injector) or externally started daemons (`--connect
+//! a,b,c`). Each tick samples a document-length mix from
+//! [`crate::data::distributions`], plans with the live pool's
+//! believed speeds, dispatches over TCP, and verifies every output
+//! **bit-exact** against the pure-Rust GQA oracle — recovery from a
+//! mid-run SIGKILL must be invisible in the outputs.
+//!
+//! ## Connection lifecycle → fault kind
+//!
+//! | observed | mapped to |
+//! |---|---|
+//! | connection EOF without GOODBYE, failed send, stale heartbeats | `kill:` (pool kill + re-dispatch) |
+//! | DRAIN frame from a worker | `drain:` (graceful leave) |
+//! | reconnection of a dead rank | `rejoin:` (restore + health reset) |
+//!
+//! Scripted `kill:`/`rejoin:` events are executed at the **process
+//! level** (`--spawn`: the child is SIGKILLed / respawned; the pool is
+//! *not* told — failure must be detected over the wire, like a real
+//! crash). `slow:`/`drain:`/`oom:` events stay in-band through the
+//! elastic tick path, identical to the threaded runtime.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::run::DataDist;
+use crate::data::distributions::sampler_for;
+use crate::elastic::{
+    ElasticCfg, ElasticCoordinator, ElasticTask, FaultEvent, FaultPlan, HealthCfg,
+    HealthMonitor, ReferenceCaCompute,
+};
+use crate::elastic::failover::{COORD_SRC, CTRL_SHUTDOWN};
+use crate::exchange::transport::{Message, Transport};
+use crate::runtime::ca_exec::synthetic_task;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::codec::{Frame, FrameKind};
+use super::transport::{NetEvent, TcpTransport};
+use super::worker::WorkerConfig;
+
+/// Attention dims of the networked reference compute — kept equal to
+/// the threaded CLI demo so cross-path comparisons are like-for-like.
+pub const NET_DIMS: (usize, usize, usize) = (4, 2, 16);
+
+/// Everything a serve/soak run needs.
+#[derive(Debug, Clone)]
+pub struct ServeCfg {
+    /// Pool size (== worker process count).
+    pub workers: usize,
+    /// Spawn local `distca worker` children (required for scripted
+    /// SIGKILL/respawn faults).
+    pub spawn: bool,
+    /// Worker addresses when not spawning (len == `workers`).
+    pub connect: Vec<String>,
+    pub ticks: usize,
+    /// Documents sampled per tick.
+    pub docs_per_tick: usize,
+    pub seed: u64,
+    pub data: DataDist,
+    pub max_doc: usize,
+    /// Scripted faults: kills/rejoins run at the process level,
+    /// slows/drains/ooms in-band.
+    pub fault: FaultPlan,
+    /// Per-server per-tick JSONL stats sink.
+    pub stats_out: Option<PathBuf>,
+    /// Soak summary JSON (`BENCH_net.json`).
+    pub bench_out: Option<PathBuf>,
+    /// Worker heartbeat interval (zero disables heartbeats).
+    pub hb_interval: Duration,
+    /// Beats older than this mark a schedulable worker dead (zero
+    /// disables the staleness check).
+    pub hb_timeout: Duration,
+}
+
+/// One tick's accounting, network-level fields included.
+#[derive(Debug, Clone)]
+pub struct NetTickRecord {
+    pub tick: usize,
+    pub n_alive: usize,
+    pub n_tasks: usize,
+    /// Gather-deadline re-dispatches (includes SIGKILL recovery).
+    pub redispatched: usize,
+    /// Tasks failed over at send time (dead connection discovered
+    /// while dispatching).
+    pub send_failovers: usize,
+    /// Tasks remapped pre-dispatch off departed servers.
+    pub remapped: usize,
+    /// Ranks killed this tick from connection evidence (EOF without
+    /// goodbye, stale heartbeats).
+    pub connection_kills: usize,
+    /// Scripted SIGKILLs applied at this tick's start.
+    pub process_kills: usize,
+    /// Scripted respawn+reconnects applied at this tick's start.
+    pub rejoins: usize,
+    /// Total wire bytes dispatched (tensors, recovery included).
+    pub bytes_dispatched: f64,
+    /// Peak per-server dispatched bytes (arena-pressure proxy).
+    pub peak_server_bytes: f64,
+    /// Wall-clock seconds from dispatch to full gather (makespan).
+    pub elapsed: f64,
+}
+
+impl NetTickRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tick", Json::Num(self.tick as f64)),
+            ("alive", Json::Num(self.n_alive as f64)),
+            ("tasks", Json::Num(self.n_tasks as f64)),
+            ("redispatched", Json::Num(self.redispatched as f64)),
+            ("send_failovers", Json::Num(self.send_failovers as f64)),
+            ("remapped", Json::Num(self.remapped as f64)),
+            ("connection_kills", Json::Num(self.connection_kills as f64)),
+            ("process_kills", Json::Num(self.process_kills as f64)),
+            ("rejoins", Json::Num(self.rejoins as f64)),
+            ("bytes_dispatched", Json::Num(self.bytes_dispatched)),
+            ("peak_server_bytes", Json::Num(self.peak_server_bytes)),
+            ("makespan_s", Json::Num(self.elapsed)),
+        ])
+    }
+}
+
+/// Aggregate outcome of a serve/soak run. `Ok` means every output of
+/// every tick matched the monolithic oracle bit-for-bit.
+#[derive(Debug, Clone)]
+pub struct NetRunReport {
+    pub workers: usize,
+    pub seed: u64,
+    pub per_tick: Vec<NetTickRecord>,
+    pub total_redispatched: usize,
+    pub total_send_failovers: usize,
+    pub total_connection_kills: usize,
+    pub total_process_kills: usize,
+    pub total_rejoins: usize,
+}
+
+impl NetRunReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bench", Json::Str("net_soak".into())),
+            ("workers", Json::Num(self.workers as f64)),
+            ("ticks", Json::Num(self.per_tick.len() as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("bit_exact", Json::Bool(true)),
+            ("total_redispatched", Json::Num(self.total_redispatched as f64)),
+            ("total_send_failovers", Json::Num(self.total_send_failovers as f64)),
+            ("total_connection_kills", Json::Num(self.total_connection_kills as f64)),
+            ("total_process_kills", Json::Num(self.total_process_kills as f64)),
+            ("total_rejoins", Json::Num(self.total_rejoins as f64)),
+            ("per_tick", Json::Arr(self.per_tick.iter().map(|r| r.to_json()).collect())),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------
+// Worker process management (the fault injector's process backend).
+// ---------------------------------------------------------------------
+
+struct WorkerProcs {
+    spawn: bool,
+    dir: PathBuf,
+    addrs: Vec<String>,
+    children: Vec<Option<Child>>,
+}
+
+impl WorkerProcs {
+    fn start(spawn: bool, n: usize, connect: &[String]) -> Result<WorkerProcs> {
+        if spawn {
+            let dir = std::env::temp_dir().join(format!("distca-net-{}", std::process::id()));
+            std::fs::create_dir_all(&dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+            let mut procs = WorkerProcs {
+                spawn,
+                dir,
+                addrs: vec![String::new(); n],
+                children: (0..n).map(|_| None).collect(),
+            };
+            for i in 0..n {
+                procs.spawn_one(i)?;
+            }
+            Ok(procs)
+        } else {
+            anyhow::ensure!(
+                connect.len() == n,
+                "--connect lists {} addresses for {n} workers",
+                connect.len()
+            );
+            Ok(WorkerProcs {
+                spawn,
+                dir: std::env::temp_dir(),
+                addrs: connect.to_vec(),
+                children: (0..n).map(|_| None).collect(),
+            })
+        }
+    }
+
+    /// Spawn worker `i` as a child of this process (`distca worker
+    /// --listen 127.0.0.1:0 --port-file …`) and wait for it to publish
+    /// its kernel-assigned address. Any previous incarnation of slot
+    /// `i` is SIGKILLed and reaped first — a scripted `rejoin:` of a
+    /// still-live worker must never leak the old OS process (dropping
+    /// a `Child` does not kill it).
+    fn spawn_one(&mut self, i: usize) -> Result<()> {
+        if let Some(old) = self.children[i].as_mut() {
+            let _ = old.kill();
+            let _ = old.wait();
+            self.children[i] = None;
+        }
+        let port_file = self.dir.join(format!("worker{i}.port"));
+        let _ = std::fs::remove_file(&port_file);
+        let exe = std::env::current_exe().context("resolving distca binary path")?;
+        let child = Command::new(&exe)
+            .arg("worker")
+            .arg("--listen")
+            .arg("127.0.0.1:0")
+            .arg("--port-file")
+            .arg(&port_file)
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .with_context(|| format!("spawning worker {i}"))?;
+        self.children[i] = Some(child);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            if let Ok(addr) = std::fs::read_to_string(&port_file) {
+                let addr = addr.trim().to_string();
+                if !addr.is_empty() {
+                    self.addrs[i] = addr;
+                    return Ok(());
+                }
+            }
+            if let Some(c) = self.children[i].as_mut() {
+                if let Ok(Some(status)) = c.try_wait() {
+                    anyhow::bail!("worker {i} exited during startup ({status})");
+                }
+            }
+            anyhow::ensure!(
+                Instant::now() < deadline,
+                "worker {i} never published its address"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    fn addr(&self, i: usize) -> &str {
+        &self.addrs[i]
+    }
+
+    /// The process-level `kill:` backend: SIGKILL the child. The pool
+    /// is deliberately *not* informed — detection must happen over the
+    /// wire, like a real crash. A worker that already exited on its
+    /// own satisfies the fault vacuously (the elastic machinery exists
+    /// to recover from exactly that); any connection remnant is
+    /// severed either way.
+    fn kill(&mut self, i: usize, fabric: &TcpTransport) {
+        if let Some(child) = self.children[i].as_mut() {
+            let _ = child.kill();
+            let _ = child.wait(); // reap the zombie
+            self.children[i] = None;
+        }
+        // --connect mode (no child), or belt-and-braces after SIGKILL:
+        // the peer — if any is left — sees EOF, this side sees a dead
+        // rank; the same observable fault in every case.
+        fabric.close_conn(i);
+    }
+
+    fn respawn(&mut self, i: usize) -> Result<()> {
+        anyhow::ensure!(
+            self.spawn,
+            "rejoin:{i} needs --spawn (cannot restart a remote worker daemon)"
+        );
+        self.spawn_one(i)
+    }
+
+    /// Reap every child after the shutdown broadcast; hard-kill
+    /// stragglers and report them — a clean run leaks nothing.
+    fn shutdown(&mut self) -> Result<()> {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut hard_killed = 0usize;
+        for (i, slot) in self.children.iter_mut().enumerate() {
+            if let Some(child) = slot.as_mut() {
+                loop {
+                    match child.try_wait() {
+                        Ok(Some(_)) => break,
+                        Ok(None) if Instant::now() < deadline => {
+                            std::thread::sleep(Duration::from_millis(20))
+                        }
+                        _ => {
+                            let _ = child.kill();
+                            let _ = child.wait();
+                            hard_killed += 1;
+                            eprintln!("worker {i} did not exit; hard-killed");
+                            break;
+                        }
+                    }
+                }
+            }
+            *slot = None;
+        }
+        if self.spawn {
+            let _ = std::fs::remove_dir_all(&self.dir);
+        }
+        anyhow::ensure!(
+            hard_killed == 0,
+            "{hard_killed} workers had to be hard-killed at shutdown"
+        );
+        Ok(())
+    }
+}
+
+impl Drop for WorkerProcs {
+    fn drop(&mut self) {
+        // Abnormal exit: never leak child processes.
+        for slot in self.children.iter_mut() {
+            if let Some(child) = slot.as_mut() {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+            *slot = None;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The serve loop.
+// ---------------------------------------------------------------------
+
+/// Dial `addr` (with a short retry window), attach it to the fabric as
+/// rank `rank`, and send the CONFIG handshake.
+fn connect_and_config(
+    fabric: &Arc<TcpTransport>,
+    rank: usize,
+    n: usize,
+    addr: &str,
+    hb_interval: Duration,
+) -> Result<()> {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let stream = loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => break s,
+            Err(e) => {
+                anyhow::ensure!(
+                    Instant::now() < deadline,
+                    "dialing worker {rank} at {addr}: {e}"
+                );
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    };
+    TcpTransport::attach(fabric, rank, rank, stream, &[])?;
+    let (h, hkv, d) = NET_DIMS;
+    let cfg = WorkerConfig {
+        rank,
+        n_servers: n,
+        n_heads: h,
+        n_kv_heads: hkv,
+        head_dim: d,
+        hb_interval,
+    };
+    fabric
+        .send_frame(rank, &Frame::control(FrameKind::Config, usize::MAX, cfg.to_payload()))
+        .map_err(|e| anyhow::anyhow!("CONFIG to worker {rank}: {e}"))?;
+    Ok(())
+}
+
+/// Append new transport events to `pending`.
+fn drain_events(fabric: &TcpTransport, pending: &mut Vec<NetEvent>) {
+    pending.extend(fabric.poll_events());
+}
+
+/// Block until rank's HELLO arrives (leaving unrelated events queued).
+/// `pub(super)` so the loopback harness shares the exact registration
+/// barrier the process path uses.
+pub(super) fn wait_hello(
+    fabric: &TcpTransport,
+    rank: usize,
+    pending: &mut Vec<NetEvent>,
+    timeout: Duration,
+) -> Result<()> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        drain_events(fabric, pending);
+        if let Some(pos) = pending
+            .iter()
+            .position(|e| matches!(e, NetEvent::Hello { rank: r } if *r == rank))
+        {
+            pending.remove(pos);
+            return Ok(());
+        }
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "worker {rank} never registered (no HELLO)"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Split scripted faults: kills/rejoins execute at the process level,
+/// everything else stays in-band through the elastic tick path.
+fn split_fault_plan(plan: &FaultPlan) -> (FaultPlan, FaultPlan) {
+    let mut process_plan = FaultPlan::new();
+    let mut inband = FaultPlan::new();
+    for ev in &plan.events {
+        match *ev {
+            FaultEvent::Kill { server, tick } => process_plan = process_plan.kill(server, tick),
+            FaultEvent::Rejoin { server, tick } => {
+                process_plan = process_plan.rejoin(server, tick)
+            }
+            FaultEvent::Slow { server, tick, factor } => {
+                inband = inband.slow(server, tick, factor)
+            }
+            FaultEvent::Drain { server, tick } => inband = inband.drain(server, tick),
+            FaultEvent::Oom { server, tick } => inband = inband.oom(server, tick),
+        }
+    }
+    (process_plan, inband)
+}
+
+/// Sample one tick's CA-tasks from the document-length mix: each doc's
+/// token length scales down to a reference-kernel-sized task (the
+/// oracle is O(len²)), keeping the *shape* of the distribution — the
+/// heavy tail lands on the wire as genuinely heavier frames.
+fn sample_tick_tasks(
+    rng: &mut Rng,
+    tick: usize,
+    cfg: &ServeCfg,
+    alive: &[usize],
+) -> Vec<ElasticTask> {
+    let (h, hkv, d) = NET_DIMS;
+    let sampler = sampler_for(cfg.data, cfg.max_doc);
+    let scale = (cfg.max_doc / 128).max(1);
+    let mut tasks = Vec::with_capacity(cfg.docs_per_tick);
+    for j in 0..cfg.docs_per_tick {
+        let len_tokens = sampler.sample_len(rng);
+        let q_len = (len_tokens / scale).clamp(4, 256);
+        let server = alive[j % alive.len()];
+        tasks.push(ElasticTask {
+            doc: (tick * 10_000 + j) as u32,
+            q_start: 0,
+            server,
+            home: server,
+            tensors: synthetic_task(rng, q_len, q_len, h, hkv, d),
+        });
+    }
+    tasks
+}
+
+/// Bit-exactness: every gathered output must equal the monolithic
+/// oracle's, bit for bit — recovery may change *who* computed a task,
+/// never *what* it returned.
+fn verify_outputs(
+    tick: usize,
+    tasks: &[ElasticTask],
+    outputs: &[crate::server::TaskOutput],
+    oracle: &ReferenceCaCompute,
+) -> Result<()> {
+    anyhow::ensure!(
+        outputs.len() == tasks.len(),
+        "tick {tick}: gathered {} of {} outputs",
+        outputs.len(),
+        tasks.len()
+    );
+    for out in outputs {
+        let task = tasks
+            .iter()
+            .find(|t| t.doc == out.doc && t.q_start == out.q_start)
+            .ok_or_else(|| anyhow::anyhow!("tick {tick}: unknown output doc {}", out.doc))?;
+        let expect = oracle.run_batch(std::slice::from_ref(&task.tensors));
+        anyhow::ensure!(
+            out.o == expect[0],
+            "tick {tick} doc {}: output diverged from the oracle over the wire",
+            out.doc
+        );
+    }
+    Ok(())
+}
+
+/// Run a full networked serve/soak session. Returns only if **every**
+/// tick's outputs were bit-exact against the oracle and shutdown was
+/// clean (all workers exited, none leaked).
+pub fn run_serve(cfg: &ServeCfg) -> Result<NetRunReport> {
+    let n = cfg.workers;
+    anyhow::ensure!(n >= 2, "need at least 2 workers");
+    anyhow::ensure!(cfg.ticks >= 1, "need at least 1 tick");
+    anyhow::ensure!(
+        cfg.spawn != !cfg.connect.is_empty(),
+        "pass exactly one of --spawn or --connect a,b,c"
+    );
+    // Fail fast, not at the rejoin tick after a destructive kill has
+    // already severed an externally owned daemon.
+    anyhow::ensure!(
+        cfg.spawn
+            || !cfg.fault.events.iter().any(|e| matches!(e, FaultEvent::Rejoin { .. })),
+        "scripted rejoin: requires --spawn (a remote daemon cannot be respawned)"
+    );
+
+    let fabric = TcpTransport::coordinator(n);
+    let mut procs = WorkerProcs::start(cfg.spawn, n, &cfg.connect)?;
+    for rank in 0..n {
+        connect_and_config(&fabric, rank, n, procs.addr(rank), cfg.hb_interval)?;
+    }
+    let mut pending: Vec<NetEvent> = Vec::new();
+    for rank in 0..n {
+        wait_hello(&fabric, rank, &mut pending, Duration::from_secs(10))?;
+    }
+
+    let dyn_fabric: Arc<dyn Transport> = Arc::clone(&fabric) as Arc<dyn Transport>;
+    let mut co = ElasticCoordinator::over_transport(dyn_fabric, n, ElasticCfg::default());
+    let (h, hkv, d) = NET_DIMS;
+    let oracle = ReferenceCaCompute::new(h, hkv, d);
+    let (process_plan, inband) = split_fault_plan(&cfg.fault);
+
+    // Heartbeat EWMAs: inter-beat gaps per worker, the liveness-side
+    // signal feeding membership (data-path latency EWMAs live in
+    // `co.health` and feed gray demotion as usual).
+    let mut hb_mon = HealthMonitor::new(n, HealthCfg::default());
+    let mut last_beat: Vec<Option<Instant>> = vec![None; n];
+
+    let mut stats_file = match &cfg.stats_out {
+        Some(p) => Some(
+            std::fs::File::create(p).with_context(|| format!("creating {}", p.display()))?,
+        ),
+        None => None,
+    };
+
+    let mut records: Vec<NetTickRecord> = Vec::new();
+    let mut rng = Rng::new(cfg.seed);
+    // Ranks whose DRAIN request was honored this tick: they sit out the
+    // tick (pool `Draining`), then leave at tick end and their daemons
+    // are told to exit — the full `drain:` lifecycle over the wire.
+    let mut drain_pending: Vec<usize> = Vec::new();
+
+    for tick in 0..cfg.ticks {
+        // 1. Scripted process-level faults.
+        let mut process_kills = 0usize;
+        let mut rejoins = 0usize;
+        for ev in process_plan.events_at(tick) {
+            match ev {
+                FaultEvent::Kill { server, .. } if server < n => {
+                    procs.kill(server, &fabric);
+                    process_kills += 1;
+                }
+                FaultEvent::Rejoin { server, .. } if server < n => {
+                    procs.respawn(server)?;
+                    connect_and_config(&fabric, server, n, procs.addr(server), cfg.hb_interval)?;
+                    wait_hello(&fabric, server, &mut pending, Duration::from_secs(10))?;
+                    // Purge stale disconnect evidence from before the
+                    // respawn — it must not kill the fresh worker.
+                    pending.retain(
+                        |e| !matches!(e, NetEvent::Disconnected { rank } if *rank == server),
+                    );
+                    co.pool.restore(server);
+                    co.health.reset(server);
+                    hb_mon.reset(server);
+                    last_beat[server] = None;
+                    rejoins += 1;
+                }
+                _ => {}
+            }
+        }
+
+        // 2. Connection evidence → membership.
+        let mut connection_kills = 0usize;
+        drain_events(&fabric, &mut pending);
+        for ev in pending.drain(..) {
+            match ev {
+                NetEvent::Disconnected { rank } => {
+                    if rank < n && co.pool.is_schedulable(rank) {
+                        co.pool.kill(rank);
+                        co.health.mark_dead(rank);
+                        connection_kills += 1;
+                    }
+                }
+                NetEvent::Heartbeat { rank, at, .. } => {
+                    if rank < n {
+                        if let Some(prev) = last_beat[rank] {
+                            hb_mon.observe(rank, (at - prev).as_secs_f64().max(0.0));
+                        }
+                        last_beat[rank] = Some(at);
+                    }
+                }
+                NetEvent::DrainRequest { rank } => {
+                    if rank < n && co.pool.is_schedulable(rank) {
+                        co.pool.drain(rank);
+                        drain_pending.push(rank);
+                    }
+                }
+                NetEvent::Goodbye { .. } | NetEvent::Hello { .. } => {}
+            }
+        }
+        // Stale heartbeats without an EOF yet: suspect the worker dead.
+        if cfg.hb_timeout > Duration::ZERO && cfg.hb_interval > Duration::ZERO {
+            for s in 0..n {
+                if co.pool.is_schedulable(s) {
+                    if let Some(prev) = last_beat[s] {
+                        if prev.elapsed() > cfg.hb_timeout {
+                            co.pool.kill(s);
+                            co.health.mark_dead(s);
+                            connection_kills += 1;
+                        }
+                    }
+                }
+            }
+        }
+
+        let alive = co.pool.schedulable();
+        anyhow::ensure!(!alive.is_empty(), "tick {tick}: no live workers");
+
+        // 3–5. Sample, run over the wire, verify bit-exactness.
+        let tasks = sample_tick_tasks(&mut rng, tick, cfg, &alive);
+        let outputs = co.run_tick(tick, &tasks, &inband)?;
+        verify_outputs(tick, &tasks, &outputs, &oracle)?;
+
+        // 6. Accounting.
+        let st = co.stats.last().expect("run_tick records stats").clone();
+        if let Some(f) = stats_file.as_mut() {
+            for s in 0..n {
+                let row = Json::obj(vec![
+                    ("tick", Json::Num(tick as f64)),
+                    ("server", Json::Num(s as f64)),
+                    (
+                        "believed_speed",
+                        Json::Num(if co.pool.is_schedulable(s) { co.pool.speed(s) } else { 0.0 }),
+                    ),
+                    ("schedulable", Json::Bool(co.pool.is_schedulable(s))),
+                    (
+                        "bytes_dispatched",
+                        Json::Num(st.server_bytes.get(s).copied().unwrap_or(0.0)),
+                    ),
+                    (
+                        "redispatched_to",
+                        Json::Num(st.server_redispatched.get(s).copied().unwrap_or(0) as f64),
+                    ),
+                    (
+                        "hb_ewma_s",
+                        hb_mon.ewma(s).map(Json::Num).unwrap_or(Json::Null),
+                    ),
+                ]);
+                writeln!(f, "{}", row.to_string_compact())
+                    .context("writing --stats-out row")?;
+            }
+        }
+        records.push(NetTickRecord {
+            tick,
+            n_alive: alive.len(),
+            n_tasks: tasks.len(),
+            redispatched: st.redispatched,
+            send_failovers: st.send_failovers,
+            remapped: st.remapped,
+            connection_kills,
+            process_kills,
+            rejoins,
+            bytes_dispatched: st.server_bytes.iter().sum(),
+            peak_server_bytes: st.server_bytes.iter().cloned().fold(0.0, f64::max),
+            elapsed: st.elapsed,
+        });
+
+        // Complete honored drains: the drainee sat the tick out, now it
+        // leaves the pool and its daemon is told to exit. Its upcoming
+        // Disconnected event is expected (the rank is Dead by then, so
+        // it is not miscounted as a connection kill).
+        for r in drain_pending.drain(..) {
+            co.pool.leave(r);
+            co.health.mark_dead(r);
+            let _ = fabric.send(r, Message { src: COORD_SRC, tag: CTRL_SHUTDOWN, payload: vec![] });
+        }
+    }
+
+    // Orderly shutdown: broadcast CTRL_SHUTDOWN over the wire, then
+    // reap every child — a clean run leaks nothing.
+    co.shutdown()?;
+    procs.shutdown()?;
+
+    let report = NetRunReport {
+        workers: n,
+        seed: cfg.seed,
+        total_redispatched: records.iter().map(|r| r.redispatched).sum(),
+        total_send_failovers: records.iter().map(|r| r.send_failovers).sum(),
+        total_connection_kills: records.iter().map(|r| r.connection_kills).sum(),
+        total_process_kills: records.iter().map(|r| r.process_kills).sum(),
+        total_rejoins: records.iter().map(|r| r.rejoins).sum(),
+        per_tick: records,
+    };
+    if let Some(path) = &cfg.bench_out {
+        std::fs::write(path, report.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))?;
+    }
+    Ok(report)
+}

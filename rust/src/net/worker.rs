@@ -1,0 +1,227 @@
+//! `distca worker` — the attention-server daemon.
+//!
+//! One worker process is one attention server: it binds a listen
+//! address, accepts exactly one coordinator session, handshakes
+//! (CONFIG in → HELLO out), then runs the *same* elastic server loop
+//! as the in-process runtime ([`run_server_loop`]) over a
+//! [`TcpTransport`] — control tags, payload layout, and fault
+//! semantics identical on both wires, which is what makes the
+//! networked path bit-exact against the in-process one.
+//!
+//! A heartbeat thread beats on the coordinator connection at the
+//! CONFIG-negotiated interval; the coordinator feeds the inter-beat
+//! gaps into its health EWMAs. The worker exits when it receives
+//! `CTRL_SHUTDOWN`, or when the coordinator connection drops (the
+//! transport synthesizes the same shutdown into its inbox), and sends
+//! a GOODBYE on the way out — a connection that dies *without* a
+//! goodbye is what the coordinator maps to `kill:`.
+
+use std::io::Read;
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::elastic::failover::run_server_loop;
+use crate::elastic::{CaCompute, ReferenceCaCompute};
+use crate::exchange::transport::Transport;
+use crate::server::{header_usize, header_word};
+
+use super::codec::{Frame, FrameDecoder, FrameKind};
+use super::transport::TcpTransport;
+
+/// CLI-level knobs for the daemon.
+#[derive(Debug, Clone)]
+pub struct WorkerCfg {
+    /// Listen address, e.g. `127.0.0.1:4500` (`:0` = kernel-assigned).
+    pub listen: String,
+    /// If set, the actual bound address is written here (atomically:
+    /// write-then-rename) so a spawning coordinator can discover a
+    /// kernel-assigned port.
+    pub port_file: Option<PathBuf>,
+}
+
+/// The handshake CONFIG: rank assignment, pool size, attention dims,
+/// heartbeat interval. Shipped as bit-cast header words in the frame
+/// payload (`[rank, n_servers, n_heads, n_kv_heads, head_dim, hb_ms]`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerConfig {
+    pub rank: usize,
+    pub n_servers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub hb_interval: Duration,
+}
+
+impl WorkerConfig {
+    /// Encode into a CONFIG frame payload.
+    pub fn to_payload(&self) -> Vec<f32> {
+        vec![
+            header_word(self.rank),
+            header_word(self.n_servers),
+            header_word(self.n_heads),
+            header_word(self.n_kv_heads),
+            header_word(self.head_dim),
+            header_word(self.hb_interval.as_millis() as usize),
+        ]
+    }
+
+    pub fn from_payload(payload: &[f32]) -> Result<WorkerConfig> {
+        anyhow::ensure!(payload.len() >= 6, "short CONFIG payload ({} words)", payload.len());
+        Ok(WorkerConfig {
+            rank: header_usize(payload[0]),
+            n_servers: header_usize(payload[1]),
+            n_heads: header_usize(payload[2]),
+            n_kv_heads: header_usize(payload[3]),
+            head_dim: header_usize(payload[4]),
+            hb_interval: Duration::from_millis(header_usize(payload[5]) as u64),
+        })
+    }
+}
+
+/// Run the daemon: bind, publish the address, accept one coordinator,
+/// serve until shutdown/disconnect. Returns cleanly in both cases so
+/// a scripted run never leaks worker processes.
+pub fn run_worker(cfg: &WorkerCfg) -> Result<()> {
+    let listener =
+        TcpListener::bind(&cfg.listen).with_context(|| format!("binding {}", cfg.listen))?;
+    let addr = listener.local_addr()?;
+    if let Some(pf) = &cfg.port_file {
+        // Write-then-rename: the polling coordinator must never read a
+        // half-written address.
+        let tmp = pf.with_extension("tmp");
+        std::fs::write(&tmp, addr.to_string())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, pf).with_context(|| format!("publishing {}", pf.display()))?;
+    }
+    println!("distca worker listening on {addr}");
+    let (stream, peer) = listener.accept().context("accepting coordinator")?;
+    println!("coordinator connected from {peer}");
+    serve_stream(stream)?;
+    println!("worker exiting cleanly");
+    Ok(())
+}
+
+/// Serve one coordinator session on an accepted stream: handshake,
+/// heartbeats, then the elastic server loop until shutdown or
+/// disconnect. Shared by the daemon and the in-process loopback
+/// harness ([`super::loopback`]).
+pub fn serve_stream(stream: TcpStream) -> Result<()> {
+    let _ = stream.set_nodelay(true);
+    // Bounded handshake: a coordinator that connects and goes silent
+    // must not hang the daemon. The timeout is cleared afterwards —
+    // the transport's reader relies on blocking reads.
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .context("setting handshake timeout")?;
+    let (cfg, leftover) = read_config(&stream)?;
+    stream.set_read_timeout(None).context("clearing handshake timeout")?;
+    anyhow::ensure!(
+        cfg.rank < cfg.n_servers,
+        "CONFIG assigns rank {} in a pool of {}",
+        cfg.rank,
+        cfg.n_servers
+    );
+    let fabric = TcpTransport::worker(cfg.rank, cfg.n_servers, stream, &leftover)
+        .context("building worker transport")?;
+    fabric
+        .send_frame(0, &Frame::control(FrameKind::Hello, cfg.rank, vec![]))
+        .map_err(|e| anyhow::anyhow!("registration hello: {e}"))?;
+
+    // Heartbeat thread: independent of the (possibly busy) compute
+    // loop, so a worker crunching a heavy CA-task still beats.
+    let stop = Arc::new(AtomicBool::new(false));
+    let hb = if cfg.hb_interval > Duration::ZERO {
+        let stop = Arc::clone(&stop);
+        let fabric = Arc::clone(&fabric);
+        let rank = cfg.rank;
+        let interval = cfg.hb_interval.max(Duration::from_millis(10));
+        Some(std::thread::spawn(move || {
+            let mut seq = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                let beat = Frame::control(FrameKind::Heartbeat, rank, vec![header_word(seq)]);
+                if fabric.send_frame(0, &beat).is_err() {
+                    break; // connection gone; the main loop exits too
+                }
+                seq += 1;
+                std::thread::sleep(interval);
+            }
+        }))
+    } else {
+        None
+    };
+
+    let compute: Box<dyn CaCompute> =
+        Box::new(ReferenceCaCompute::new(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim));
+    let fabric_dyn: Arc<dyn Transport> = Arc::clone(&fabric) as Arc<dyn Transport>;
+    let result = run_server_loop(fabric_dyn, cfg.rank, cfg.n_servers, compute);
+
+    stop.store(true, Ordering::Relaxed);
+    // Best-effort goodbye: a SIGKILLed worker never sends one, and
+    // that absence is exactly what the coordinator reads as `kill:`.
+    let _ = fabric.send_frame(0, &Frame::control(FrameKind::Goodbye, cfg.rank, vec![]));
+    if let Some(h) = hb {
+        let _ = h.join();
+    }
+    // Close the connection so the coordinator's reader sees EOF right
+    // away (matters for the in-process loopback harness, where no
+    // process exit closes the socket for us).
+    fabric.close_conn(0);
+    result
+}
+
+/// Read frames off the raw stream until the CONFIG arrives. Returns the
+/// parsed config plus any bytes read past it (they belong to the data
+/// stream and are handed to the transport's reader).
+fn read_config(mut stream: &TcpStream) -> Result<(WorkerConfig, Vec<u8>)> {
+    let mut dec = FrameDecoder::new();
+    let mut chunk = [0u8; 4096];
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        if let Some(f) = dec.next_frame().map_err(|e| anyhow::anyhow!("handshake: {e}"))? {
+            anyhow::ensure!(
+                f.kind == FrameKind::Config,
+                "expected CONFIG first, got {:?}",
+                f.kind
+            );
+            let cfg = WorkerConfig::from_payload(&f.payload)?;
+            let leftover = dec.take_buffered();
+            return Ok((cfg, leftover));
+        }
+        anyhow::ensure!(Instant::now() < deadline, "timed out waiting for CONFIG");
+        let n = stream.read(&mut chunk).context("handshake read")?;
+        anyhow::ensure!(n > 0, "coordinator closed during handshake");
+        dec.push(&chunk[..n]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_payload_roundtrips_exactly() {
+        let cfg = WorkerConfig {
+            rank: 3,
+            n_servers: 4,
+            n_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 16,
+            hb_interval: Duration::from_millis(200),
+        };
+        let got = WorkerConfig::from_payload(&cfg.to_payload()).unwrap();
+        assert_eq!(got, cfg);
+        // The header-word scheme keeps large pool sizes exact too.
+        let big = WorkerConfig { n_servers: (1 << 24) + 1, ..cfg };
+        assert_eq!(WorkerConfig::from_payload(&big.to_payload()).unwrap(), big);
+    }
+
+    #[test]
+    fn short_config_rejected() {
+        assert!(WorkerConfig::from_payload(&[0.0; 3]).is_err());
+    }
+}

@@ -138,7 +138,9 @@ pub fn run_disaggregated(
             tag: pack_tag(t.doc, t.q_start as u32),
             home: t.home,
         };
-        fabric.send(t.server, encode(&wire));
+        fabric
+            .send(t.server, encode(&wire))
+            .with_context(|| format!("dispatching to server {}", t.server))?;
     }
 
     // Server phase: worker threads batch + execute + return.
@@ -170,10 +172,9 @@ pub fn run_disaggregated(
             );
             let outputs = exec.run_batch(&rt, &batch)?;
             for ((o, tag), home) in outputs.into_iter().zip(tags).zip(homes) {
-                fabric.send(
-                    n_servers + home,
-                    Message { src: s, tag, payload: o },
-                );
+                fabric
+                    .send(n_servers + home, Message { src: s, tag, payload: o })
+                    .with_context(|| format!("server {s}: returning output home"))?;
             }
             Ok(())
         }));

@@ -330,6 +330,38 @@ fn speed_aware_plan_beats_uniform_with_4x_slow_belief() {
     );
 }
 
+/// The `net` path column: the same seeded `(docs, fault-plan)` cases,
+/// bit-exact **over real localhost TCP sockets** — every byte crosses
+/// the length-prefixed codec and a `TcpTransport`, with the worker
+/// loops on the far side of an accepted connection
+/// (`net::loopback::spawn_loopback_pool`). Gated behind
+/// `DISTCA_NET_TESTS=1` so the default test run stays hermetic (no
+/// sockets opened); CI's net-smoke job sets the gate.
+#[test]
+fn net_loopback_matches_oracle_for_seeded_cases() {
+    if std::env::var("DISTCA_NET_TESTS").is_err() {
+        eprintln!("skipping net loopback conformance (set DISTCA_NET_TESTS=1 to run)");
+        return;
+    }
+    // Fewer seeds than the in-process paths: each case stands up a
+    // socket pool, and the fault space is already covered above — this
+    // column proves the *wire* changes nothing.
+    for seed in 0..16u64 {
+        let case = gen_case(seed);
+        let pool = distca::net::loopback::spawn_loopback_pool(case.n_servers, H, HKV, D)
+            .unwrap_or_else(|e| panic!("net seed {seed}: spawning loopback pool: {e}"));
+        let mut co = pool.coordinator(quick_cfg());
+        for (t, tasks) in case.ticks.iter().enumerate() {
+            let outputs = co
+                .run_tick(t, tasks, &case.fault)
+                .unwrap_or_else(|e| panic!("net seed {seed} tick {t}: {e}"));
+            check_tick("net", seed, tasks, &outputs);
+        }
+        co.shutdown().unwrap();
+        pool.join().unwrap_or_else(|e| panic!("net seed {seed}: worker join: {e}"));
+    }
+}
+
 #[test]
 fn threaded_pp_matches_oracle_for_seeded_cases() {
     for seed in 0..SEEDS {

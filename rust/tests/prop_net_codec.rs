@@ -1,0 +1,190 @@
+//! Property tests for the net wire codec.
+//!
+//! The invariants the TCP fabric's bit-exactness rests on:
+//!
+//! 1. **Split-independence**: however the byte stream is chopped into
+//!    read chunks (mid-header, mid-payload, many frames per chunk),
+//!    the decoded frame sequence is identical — f32 *bit patterns*
+//!    included.
+//! 2. **Exact counts beyond 2^24**: the payload element count is an
+//!    integer wire field, never an f32 value-cast (the PR-1 bit-cast
+//!    header regression class) — a 2^24+1-element payload round-trips
+//!    exactly.
+//! 3. **Descriptive rejection**: truncated streams and frames claiming
+//!    more than the payload cap fail loudly, with errors naming the
+//!    problem, never a silent drop or a bogus frame.
+
+use distca::exchange::transport::Message;
+use distca::net::codec::{Frame, FrameDecoder, FrameKind, HEADER_BYTES, MAGIC, MAX_PAYLOAD_ELEMS};
+use distca::util::rng::Rng;
+
+fn random_kind(rng: &mut Rng) -> FrameKind {
+    match rng.gen_index(0, 6) {
+        0 => FrameKind::Msg,
+        1 => FrameKind::Hello,
+        2 => FrameKind::Config,
+        3 => FrameKind::Heartbeat,
+        4 => FrameKind::Drain,
+        _ => FrameKind::Goodbye,
+    }
+}
+
+/// Finite payloads only: the equality assertion uses `PartialEq`, and
+/// NaN bit-patterns get their own dedicated test below.
+fn random_frame(rng: &mut Rng) -> Frame {
+    let len = rng.gen_index(0, 40);
+    Frame {
+        kind: random_kind(rng),
+        dst: rng.gen_index(0, 64) as u32,
+        src: rng.next_u64(),
+        tag: rng.next_u64(),
+        payload: (0..len).map(|_| rng.gen_f64(-1e6, 1e6) as f32).collect(),
+    }
+}
+
+#[test]
+fn roundtrip_under_arbitrary_split_boundaries() {
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(0xC0DE_C0DE ^ seed);
+        let frames: Vec<Frame> =
+            (0..1 + rng.gen_index(0, 6)).map(|_| random_frame(&mut rng)).collect();
+        let mut bytes = Vec::new();
+        for f in &frames {
+            bytes.extend_from_slice(&f.encode().unwrap());
+        }
+        let mut dec = FrameDecoder::new();
+        let mut got = Vec::new();
+        let mut off = 0usize;
+        while off < bytes.len() {
+            // Chunk sizes from 1 byte (worst case: every boundary is a
+            // split) up to ~100 bytes (several splits per frame).
+            let step = 1 + rng.gen_index(0, 97);
+            let end = (off + step).min(bytes.len());
+            dec.push(&bytes[off..end]);
+            off = end;
+            while let Some(f) = dec.next_frame().unwrap() {
+                got.push(f);
+            }
+        }
+        assert_eq!(got, frames, "seed {seed}: split decoding diverged");
+        dec.finish().unwrap();
+    }
+}
+
+#[test]
+fn byte_at_a_time_decoding_matches_whole_buffer() {
+    let mut rng = Rng::new(7);
+    let f = random_frame(&mut rng);
+    let bytes = f.encode().unwrap();
+    let mut dec = FrameDecoder::new();
+    let mut got = None;
+    for (i, &b) in bytes.iter().enumerate() {
+        dec.push(&[b]);
+        if let Some(frame) = dec.next_frame().unwrap() {
+            assert_eq!(i, bytes.len() - 1, "frame completed before its last byte");
+            got = Some(frame);
+        }
+    }
+    assert_eq!(got.expect("frame never completed"), f);
+}
+
+#[test]
+fn nan_and_bitcast_header_words_survive_bit_for_bit() {
+    // The elastic payload layout ships bit-cast u32 headers inside f32
+    // slots; some of those bit patterns are NaNs. The codec must carry
+    // the *bits*, not the values.
+    let patterns: Vec<u32> =
+        vec![0x7FC0_1234, 0xFFC0_0000, 0x0000_0001, 0x8000_0000, u32::MAX, (1 << 24) + 1];
+    let f = Frame {
+        kind: FrameKind::Msg,
+        dst: 0,
+        src: 0,
+        tag: 1,
+        payload: patterns.iter().map(|&b| f32::from_bits(b)).collect(),
+    };
+    let mut dec = FrameDecoder::new();
+    dec.push(&f.encode().unwrap());
+    let g = dec.next_frame().unwrap().unwrap();
+    let got: Vec<u32> = g.payload.iter().map(|w| w.to_bits()).collect();
+    assert_eq!(got, patterns);
+}
+
+#[test]
+fn payload_count_beyond_f32_mantissa_is_exact() {
+    // 2^24 + 1 elements: a value-cast f32 length would round this to
+    // 2^24 and corrupt the stream; the u32 count field must not.
+    let n = (1usize << 24) + 1;
+    let mut payload = vec![0.0f32; n];
+    payload[n - 1] = 42.5;
+    let f = Frame { kind: FrameKind::Msg, dst: 3, src: 7, tag: 9, payload };
+    let bytes = f.encode().unwrap();
+    assert_eq!(bytes.len(), HEADER_BYTES + 4 * n);
+    let mut dec = FrameDecoder::new();
+    dec.push(&bytes);
+    let g = dec.next_frame().unwrap().unwrap();
+    assert_eq!(g.payload.len(), n);
+    assert_eq!(g.payload[n - 1], 42.5);
+    assert_eq!(g.payload[n - 2], 0.0);
+    dec.finish().unwrap();
+}
+
+#[test]
+fn truncated_stream_rejected_with_descriptive_error() {
+    let mut rng = Rng::new(11);
+    let f = random_frame(&mut rng);
+    let bytes = f.encode().unwrap();
+    // Cut anywhere: mid-header and mid-payload both stay pending, and
+    // EOF turns "pending" into a loud truncation error.
+    for cut in [1, HEADER_BYTES - 1, HEADER_BYTES, bytes.len() - 1] {
+        if cut >= bytes.len() {
+            continue;
+        }
+        let mut dec = FrameDecoder::new();
+        dec.push(&bytes[..cut]);
+        assert!(dec.next_frame().unwrap().is_none(), "cut {cut}: frame from partial bytes");
+        let err = dec.finish().unwrap_err();
+        assert!(err.to_string().contains("truncated"), "cut {cut}: {err}");
+    }
+}
+
+#[test]
+fn oversized_frame_rejected_with_descriptive_error() {
+    // Decode side: a header claiming more than the cap is rejected
+    // before any allocation.
+    let mut hdr = Vec::new();
+    hdr.extend_from_slice(&MAGIC.to_le_bytes());
+    hdr.push(1); // Msg
+    hdr.extend_from_slice(&0u32.to_le_bytes());
+    hdr.extend_from_slice(&0u64.to_le_bytes());
+    hdr.extend_from_slice(&0u64.to_le_bytes());
+    hdr.extend_from_slice(&(MAX_PAYLOAD_ELEMS + 1).to_le_bytes());
+    let mut dec = FrameDecoder::new();
+    dec.push(&hdr);
+    let err = dec.next_frame().unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("oversized"), "{msg}");
+    assert!(msg.contains(&MAX_PAYLOAD_ELEMS.to_string()), "cap not named: {msg}");
+}
+
+#[test]
+fn garbage_prefix_rejected_not_skipped() {
+    let mut rng = Rng::new(13);
+    let mut bytes = vec![0x00, 0x11, 0x22, 0x33];
+    bytes.extend_from_slice(&random_frame(&mut rng).encode().unwrap());
+    let mut dec = FrameDecoder::new();
+    dec.push(&bytes);
+    // A length-prefixed stream has no resync point: corrupt magic is a
+    // hard error, never a silent scan-forward.
+    assert!(dec.next_frame().is_err());
+}
+
+#[test]
+fn coordinator_src_sentinel_roundtrips_through_message() {
+    let m = Message { src: usize::MAX, tag: (1 << 63) | 5, payload: vec![2.0] };
+    let f = Frame::msg(9, m.clone());
+    let mut dec = FrameDecoder::new();
+    dec.push(&f.encode().unwrap());
+    let g = dec.next_frame().unwrap().unwrap();
+    assert_eq!(g.dst, 9);
+    assert_eq!(g.into_message(), m);
+}
