@@ -17,6 +17,8 @@
 //! | `serve`    | networked coordinator over separate worker processes (`--spawn` \| `--connect a,b,c`) |
 //! | `soak`     | networked soak/load harness: replay a seeded document-length mix, emit `BENCH_net.json` |
 //! | `train`    | end-to-end tiny-LM training through the AOT artifacts |
+//! | `report`   | straggler attribution from a `--trace-out` trace file (Fig. 11-style overlap table) |
+//! | `drift`    | compare a regenerated `BENCH_*.json` snapshot against its committed baseline |
 //! | `bound`    | Appendix A max-partition bound for a model/bandwidth |
 //! | `info`     | model & cluster configuration tables |
 //!
@@ -54,6 +56,11 @@
 //! | `--docs-per-tick <n>` | serve/soak | documents sampled per tick (default 2× workers) |
 //! | `--stats-out <path>` | serve/soak | per-server per-tick JSONL stats (tick, server, believed speed, bytes, re-dispatches) |
 //! | `--bench-out <path>` | soak | summary JSON (default `BENCH_net.json`) |
+//! | `--trace-out <path>` | elastic, serve/soak | Chrome `trace_event` JSON trace (Perfetto-loadable; wall clock on threaded/net paths, virtual sim-time on `--runtime sim`) |
+//! | `--trace <path>` | report | trace file to analyze (a `--trace-out` output) |
+//! | `--baseline <path>` | drift | committed `BENCH_*.json` snapshot |
+//! | `--candidate <path>` | drift | freshly regenerated `BENCH_*.json` |
+//! | `--drift-tolerance <ε>` | drift | max relative deviation for numeric leaves (default 0.2; schema-only when the baseline is `"provisional"`) |
 //! | `--hb-ms <n>` | serve/soak | worker heartbeat interval in ms (0 disables; staleness ≈ 10× feeds kill verdicts) |
 //! | `--json` | most | machine-readable output |
 //! | `--verbose` | all | debug logging |

@@ -104,19 +104,34 @@ impl Profiler {
                     .ok_or_else(|| JsonError("latency rows must be arrays".into()))?,
             );
         }
+        if q_grid.is_empty() || kv_grid.is_empty() {
+            return Err(JsonError("q_grid and kv_grid must be non-empty".into()));
+        }
+        for (name, grid) in [("q_grid", &q_grid), ("kv_grid", &kv_grid)] {
+            if grid.iter().any(|x| !x.is_finite()) {
+                return Err(JsonError(format!("{name} has a non-finite coordinate")));
+            }
+            if grid.windows(2).any(|w| w[0] >= w[1]) {
+                return Err(JsonError(format!("{name} must be strictly ascending")));
+            }
+        }
         if latency.len() != q_grid.len()
             || latency.iter().any(|r| r.len() != kv_grid.len())
         {
             return Err(JsonError("latency shape mismatch".into()));
         }
+        let peak_flops = v
+            .req("peak_flops")?
+            .as_f64()
+            .ok_or_else(|| JsonError("peak_flops must be a number".into()))?;
+        if !(peak_flops.is_finite() && peak_flops > 0.0) {
+            return Err(JsonError("peak_flops must be positive and finite".into()));
+        }
         Ok(Profiler {
             q_grid,
             kv_grid,
             latency,
-            peak_flops: v
-                .req("peak_flops")?
-                .as_f64()
-                .ok_or_else(|| JsonError("peak_flops must be a number".into()))?,
+            peak_flops,
             h_q: v
                 .req("h_q")?
                 .as_f64()
@@ -295,5 +310,68 @@ mod tests {
         )
         .unwrap();
         assert!(Profiler::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn from_json_malformed_grids_error_instead_of_panicking() {
+        // Each of these would previously survive construction and then
+        // panic (index out of bounds / divide by zero) inside
+        // `bracket`; now they are descriptive load-time errors.
+        let cases = [
+            // Empty grid: 0 == 0 satisfied the old shape check.
+            (
+                r#"{"q_grid":[],"kv_grid":[],"latency":[],"peak_flops":1.0,"h_q":1.0}"#,
+                "non-empty",
+            ),
+            // Non-ascending axis: partition_point needs sorted input.
+            (
+                r#"{"q_grid":[2,1],"kv_grid":[1,2],"latency":[[1.0,1.0],[1.0,1.0]],"peak_flops":1.0,"h_q":1.0}"#,
+                "ascending",
+            ),
+            // Duplicate coordinate: zero-width bracket divides by zero.
+            (
+                r#"{"q_grid":[1,1],"kv_grid":[1,2],"latency":[[1.0,1.0],[1.0,1.0]],"peak_flops":1.0,"h_q":1.0}"#,
+                "ascending",
+            ),
+            // Ragged latency rows.
+            (
+                r#"{"q_grid":[1,2],"kv_grid":[1,2],"latency":[[1.0,1.0],[1.0]],"peak_flops":1.0,"h_q":1.0}"#,
+                "shape",
+            ),
+            // Degenerate peak throughput: predict would return inf.
+            (
+                r#"{"q_grid":[1,2],"kv_grid":[1,2],"latency":[[1.0,1.0],[1.0,1.0]],"peak_flops":0.0,"h_q":1.0}"#,
+                "peak_flops",
+            ),
+            // Non-numeric grid coordinate: `as_f64_vec` drops it, so
+            // the truncated axis surfaces as a shape mismatch.
+            (
+                r#"{"q_grid":[1,"x"],"kv_grid":[1,2],"latency":[[1.0,1.0],[1.0,1.0]],"peak_flops":1.0,"h_q":1.0}"#,
+                "shape",
+            ),
+        ];
+        for (src, needle) in cases {
+            let j = crate::util::json::parse(src).unwrap();
+            let err = Profiler::from_json(&j)
+                .expect_err(&format!("should reject: {src}"))
+                .to_string();
+            assert!(err.contains(needle), "error `{err}` should mention `{needle}`");
+        }
+    }
+
+    #[test]
+    fn tiny_valid_grid_predicts_without_panicking() {
+        // One-point and two-point grids exercise the bracket edges.
+        let j = crate::util::json::parse(
+            r#"{"q_grid":[128],"kv_grid":[128],"latency":[[1e-5]],"peak_flops":1e12,"h_q":1.0}"#,
+        )
+        .unwrap();
+        let p = Profiler::from_json(&j).unwrap();
+        for (q, kv) in [(1.0, 1.0), (128.0, 128.0), (1e6, 1e6)] {
+            let pred = p.predict(q, kv);
+            assert!(pred.is_finite() && pred >= 0.0, "predict({q},{kv}) = {pred}");
+        }
+        assert!(p.predict_batch(&[(64.0, 64.0), (256.0, 512.0)]).is_finite());
+        assert_eq!(p.predict_batch(&[]), 0.0);
     }
 }

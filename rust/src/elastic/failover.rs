@@ -38,6 +38,7 @@ use crate::coordinator::{schedule, schedule_with_beliefs, SchedulerCfg, ServerBe
 use crate::data::Document;
 use crate::memplan::max_headroom_target;
 use crate::exchange::transport::{ChannelTransport, Message, Transport};
+use crate::obs::{ComputeSink, Phase, Recorder, RecorderCell, Span};
 use crate::runtime::ca_exec::CaTaskTensors;
 use crate::server::{header_usize, header_word, pack_tag, unpack_tag, TaskOutput};
 use crate::sim::engine::Engine;
@@ -409,6 +410,13 @@ pub struct ElasticCoordinator {
     last_signals: Option<LoadSignals>,
     pub cfg: ElasticCfg,
     pub stats: Vec<TickStats>,
+    /// Optional tracing recorder ([`crate::obs`]); `None` keeps every
+    /// hook a no-op.
+    obs: Option<Arc<Recorder>>,
+    /// Late-bound compute sink handed to the worker threads at spawn —
+    /// armed by [`ElasticCoordinator::set_recorder`], possibly after
+    /// the threads already exist.
+    obs_cell: Arc<RecorderCell>,
 }
 
 impl ElasticCoordinator {
@@ -421,12 +429,14 @@ impl ElasticCoordinator {
     ) -> ElasticCoordinator {
         assert!(n_servers > 0);
         let fabric: Arc<dyn Transport> = Arc::new(ChannelTransport::new(2 * n_servers));
+        let obs_cell = RecorderCell::new();
         let mut handles = Vec::with_capacity(n_servers);
         for s in 0..n_servers {
             let fabric = Arc::clone(&fabric);
             let compute = factory(s);
+            let sink: Arc<dyn ComputeSink> = Arc::clone(&obs_cell) as _;
             handles.push(std::thread::spawn(move || {
-                run_server_loop(fabric, s, n_servers, compute)
+                run_server_loop_obs(fabric, s, n_servers, compute, Some(sink))
             }));
         }
         let scaler = cfg.autoscale.clone().map(Autoscaler::new);
@@ -441,6 +451,8 @@ impl ElasticCoordinator {
             last_signals: None,
             cfg,
             stats: Vec::new(),
+            obs: None,
+            obs_cell,
         }
     }
 
@@ -476,11 +488,31 @@ impl ElasticCoordinator {
             last_signals: None,
             cfg,
             stats: Vec::new(),
+            obs: None,
+            obs_cell: RecorderCell::new(),
         }
     }
 
     pub fn n_servers(&self) -> usize {
         self.n_servers
+    }
+
+    /// Attach a tracing recorder. Every tick from here on emits
+    /// tick/plan/dispatch phase timings, per-completion receipts, and
+    /// redispatch events; the in-process worker threads (spawned before
+    /// this call) start reporting measured compute through the late-bound
+    /// [`RecorderCell`]. Networked workers report over the
+    /// [`crate::net::codec::FrameKind::Stats`] wire path instead, which
+    /// the serve loop feeds into the same recorder.
+    pub fn set_recorder(&mut self, r: Arc<Recorder>) {
+        self.obs_cell.set(Arc::clone(&r));
+        self.obs = Some(r);
+    }
+
+    /// The attached recorder, if any (the serve loop needs it to feed
+    /// worker stats frames in).
+    pub fn recorder(&self) -> Option<Arc<Recorder>> {
+        self.obs.clone()
     }
 
     fn send_data(
@@ -898,10 +930,16 @@ impl ElasticCoordinator {
         fault: &FaultPlan,
     ) -> Result<Vec<TaskOutput>> {
         let t_start = Instant::now();
+        if let Some(obs) = &self.obs {
+            obs.tick_begin(tick);
+        }
         let mut stats = TickStats { tick, n_tasks: tasks.len(), ..Default::default() };
         let faults = self.apply_tick_events(tick, fault);
         self.gray_demote(&mut stats);
         let (planned, mut live_bytes) = self.belief_plan(tasks, &mut stats);
+        if let Some(obs) = &self.obs {
+            obs.phase_seconds(tick, Phase::Plan, t_start.elapsed().as_secs_f64());
+        }
         stats.server_redispatched = vec![0; self.n_servers];
 
         let mut assigned: BTreeMap<u64, usize> = BTreeMap::new();
@@ -909,6 +947,7 @@ impl ElasticCoordinator {
         let all: Vec<usize> = (0..tasks.len()).collect();
         let stamp = self.pool.stamp(tick, Wave::Ping);
         stats.wave_epochs[Wave::Ping.index()] = stamp.epoch;
+        let t_dispatch = Instant::now();
         self.dispatch_wave(
             tick,
             tasks,
@@ -920,6 +959,9 @@ impl ElasticCoordinator {
             &mut live_bytes,
             &mut stats,
         )?;
+        if let Some(obs) = &self.obs {
+            obs.phase_seconds(tick, Phase::Dispatch, t_dispatch.elapsed().as_secs_f64());
+        }
         let mut buf = PingPongBuffer::new();
         buf.begin_wave(Wave::Ping, stamp.epoch, tasks.iter().map(|t| t.tag()));
         for &k in &faults.kills {
@@ -955,8 +997,21 @@ impl ElasticCoordinator {
         }
         stats.server_bytes = live_bytes;
         stats.elapsed = t_start.elapsed().as_secs_f64();
+        self.observe_tick_end(tick);
         self.stats.push(stats);
         Ok(outputs.into_values().collect())
+    }
+
+    /// Close the tick's trace container and sample believed-vs-observed
+    /// speeds for every live server (the straggler-attribution report's
+    /// belief-divergence column).
+    fn observe_tick_end(&self, tick: usize) {
+        let Some(obs) = &self.obs else { return };
+        let live = self.pool.schedulable();
+        for &s in &live {
+            obs.speed_sample(tick, s, self.pool.speed(s), self.health.observed_speed(s, &live));
+        }
+        obs.tick_end(tick);
     }
 
     /// Execute one *PP tick* as two ping-pong nano-batch waves (§4.1)
@@ -977,6 +1032,9 @@ impl ElasticCoordinator {
         fault: &FaultPlan,
     ) -> Result<Vec<TaskOutput>> {
         let t_start = Instant::now();
+        if let Some(obs) = &self.obs {
+            obs.tick_begin(tick);
+        }
         let mut stats = TickStats { tick, n_tasks: tasks.len(), ..Default::default() };
         let faults = self.apply_tick_events(tick, fault);
         self.gray_demote(&mut stats);
@@ -984,6 +1042,9 @@ impl ElasticCoordinator {
         // point — see `autoscale_boundary`).
         let scale_drained = self.autoscale_boundary(tick, &mut stats);
         let (planned, mut live_bytes) = self.belief_plan(tasks, &mut stats);
+        if let Some(obs) = &self.obs {
+            obs.phase_seconds(tick, Phase::Plan, t_start.elapsed().as_secs_f64());
+        }
         stats.server_redispatched = vec![0; self.n_servers];
 
         // Two near-equal-weight nano-batch waves.
@@ -997,6 +1058,7 @@ impl ElasticCoordinator {
         // faults bite mid-dispatch.
         let ping_stamp = self.pool.stamp(tick, Wave::Ping);
         stats.wave_epochs[Wave::Ping.index()] = ping_stamp.epoch;
+        let t_ping = Instant::now();
         self.dispatch_wave(
             tick,
             tasks,
@@ -1008,6 +1070,9 @@ impl ElasticCoordinator {
             &mut live_bytes,
             &mut stats,
         )?;
+        if let Some(obs) = &self.obs {
+            obs.phase_seconds(tick, Phase::Dispatch, t_ping.elapsed().as_secs_f64());
+        }
         buf.begin_wave(
             Wave::Ping,
             ping_stamp.epoch,
@@ -1039,6 +1104,7 @@ impl ElasticCoordinator {
         // pre-dispatch, nothing of this wave is ever lost.
         let pong_stamp = self.pool.stamp(tick, Wave::Pong);
         stats.wave_epochs[Wave::Pong.index()] = pong_stamp.epoch;
+        let t_pong = Instant::now();
         self.dispatch_wave(
             tick,
             tasks,
@@ -1050,6 +1116,9 @@ impl ElasticCoordinator {
             &mut live_bytes,
             &mut stats,
         )?;
+        if let Some(obs) = &self.obs {
+            obs.phase_seconds(tick, Phase::Dispatch, t_pong.elapsed().as_secs_f64());
+        }
         buf.begin_wave(
             Wave::Pong,
             pong_stamp.epoch,
@@ -1081,6 +1150,7 @@ impl ElasticCoordinator {
         self.record_signals(tasks);
         stats.server_bytes = live_bytes;
         stats.elapsed = t_start.elapsed().as_secs_f64();
+        self.observe_tick_end(tick);
         self.stats.push(stats);
         Ok(outputs.into_values().collect())
     }
@@ -1152,6 +1222,10 @@ impl ElasticCoordinator {
                     // CA-tasks is not mistaken for a gray straggler.
                     self.health.observe(msg.src, latency / pairs.max(1.0));
                     self.pool.clear_strikes(msg.src);
+                    if let Some(obs) = &self.obs {
+                        let wave = buf.wave_of(msg.tag).map(|w| w.index()).unwrap_or(0);
+                        obs.task_completed(tick, wave, msg.src, msg.tag, latency);
+                    }
                     buf.complete(msg.tag);
                     outputs.insert(
                         msg.tag,
@@ -1283,6 +1357,10 @@ impl ElasticCoordinator {
                     assigned.insert(tag, target);
                     dispatch_at.insert(tag, Instant::now());
                     stats.redispatched += 1;
+                    if let Some(obs) = &self.obs {
+                        let wave = buf.wave_of(tag).map(|w| w.index()).unwrap_or(0);
+                        obs.redispatch(tick, wave, srv, target, tag);
+                    }
                     if let Some(w) = buf.wave_of(tag) {
                         stats.wave_redispatched[w.index()] += 1;
                     }
@@ -1336,7 +1414,24 @@ pub fn run_server_loop(
     fabric: Arc<dyn Transport>,
     s: usize,
     n_servers: usize,
+    compute: Box<dyn CaCompute>,
+) -> Result<()> {
+    run_server_loop_obs(fabric, s, n_servers, compute, None)
+}
+
+/// [`run_server_loop`] with an optional worker-side compute sink: each
+/// executed CA-task's measured wall seconds are reported as
+/// `(tick, tag, dur)` observations. The in-process runtime passes the
+/// coordinator's late-bound [`RecorderCell`]; the networked worker
+/// daemon passes a buffer that ships the observations back over the
+/// [`crate::net::codec::FrameKind::Stats`] frame. `None` is the
+/// untraced path with zero overhead.
+pub fn run_server_loop_obs(
+    fabric: Arc<dyn Transport>,
+    s: usize,
+    n_servers: usize,
     mut compute: Box<dyn CaCompute>,
+    sink: Option<Arc<dyn ComputeSink>>,
 ) -> Result<()> {
     let mut dead = false;
     let mut task_delay = Duration::ZERO;
@@ -1378,10 +1473,18 @@ pub fn run_server_loop(
                 let home = msg.src;
                 let t = decode_elastic(&msg, q_len, kv_len)
                     .with_context(|| format!("server {s}: bad payload"))?;
+                let t_run = Instant::now();
                 if !task_delay.is_zero() {
+                    // The injected slowdown is part of this server's
+                    // compute as the coordinator experiences it, so it
+                    // lands inside the measured span — a straggler's
+                    // trace shows its compute ballooning.
                     std::thread::sleep(task_delay);
                 }
                 let o = compute.run(&t)?;
+                if let Some(sink) = &sink {
+                    sink.record_compute(tick, tag, t_run.elapsed().as_secs_f64());
+                }
                 let mut payload = Vec::with_capacity(1 + o.len());
                 payload.push(header_word(tick));
                 payload.extend_from_slice(&o);
@@ -1887,6 +1990,26 @@ pub fn run_elastic_sim(
     fault: &FaultPlan,
     cfg: &ElasticSimCfg,
 ) -> Result<ElasticSimReport> {
+    run_elastic_sim_obs(batches, n_servers, p, fault, cfg, None)
+}
+
+/// [`run_elastic_sim`] with an optional *virtual-clock* recorder: the
+/// same discrete-event run additionally emits a trace on simulated
+/// time — a tick container per tick (offset by the cumulative makespan
+/// so ticks abut), a `compute` span per kept task from the engine's own
+/// start/finish instants, a `gather` idle tail per server, and
+/// zero-duration `redispatch`/`evict` markers at their recovery
+/// instants. The recorder must be [`Recorder::new_virtual`]; the spans
+/// satisfy the same [`crate::obs::trace::validate`] invariants as a
+/// wall-clock trace, so `distca report` renders both identically.
+pub fn run_elastic_sim_obs(
+    batches: &[Vec<Document>],
+    n_servers: usize,
+    p: &SimParams,
+    fault: &FaultPlan,
+    cfg: &ElasticSimCfg,
+    obs: Option<&Recorder>,
+) -> Result<ElasticSimReport> {
     anyhow::ensure!(n_servers > 0 && !batches.is_empty(), "empty configuration");
     let tp = p.tp as f64;
     let bw = p.cluster.ib_bw * tp;
@@ -2177,6 +2300,26 @@ pub fn run_elastic_sim(
                 let ri = survivors.iter().position(|&v| v == target_v).unwrap();
                 rec.add_task_at(ri, costs[li] + resend, &[], at);
                 redispatched += 1;
+                if let Some(obs) = obs {
+                    // Virtual-time marker at the resend instant
+                    // (total_time is still this tick's offset here).
+                    obs.push_span(Span {
+                        phase: if organic_at.contains_key(&li)
+                            || oomed_virt.contains(&a.server)
+                        {
+                            Phase::Evict
+                        } else {
+                            Phase::Redispatch
+                        },
+                        tick,
+                        wave: 0,
+                        server: Some(view.to_physical(target_v)),
+                        task_tag: Some(li as u64),
+                        start_s: total_time + at,
+                        dur_s: 0.0,
+                    });
+                    obs.counter("sim.redispatched", 1.0);
+                }
             }
             tick_time = rec.run();
         } else {
@@ -2240,6 +2383,63 @@ pub fn run_elastic_sim(
             queue_depth: plan.assignments.len() as f64 / n as f64,
             imbalance: plan.imbalance(),
         });
+        if let Some(obs) = obs {
+            // Virtual-clock trace for this tick, offset by the cumulative
+            // makespan so ticks abut on the simulated timeline. Spans are
+            // clamped to the tick window: when speculation beat wave 0,
+            // a straggler's over-long original finishes past tick end in
+            // the engine but its duplicate's answer already won.
+            let off = total_time;
+            obs.tick_window(tick, off, off + tick_time);
+            let lost_set: HashSet<usize> = lost.iter().copied().collect();
+            let mut last_finish = vec![0.0f64; n];
+            for (i, a) in plan.assignments.iter().enumerate() {
+                if lost_set.contains(&i) {
+                    continue;
+                }
+                let s0 = eng.start_of(i).min(tick_time);
+                let s1 = eng.finish_of(i).min(tick_time);
+                last_finish[a.server] = last_finish[a.server].max(s1);
+                obs.push_span(Span {
+                    phase: Phase::Compute,
+                    tick,
+                    wave: 0,
+                    server: Some(view.to_physical(a.server)),
+                    task_tag: Some(i as u64),
+                    start_s: off + s0,
+                    dur_s: s1 - s0,
+                });
+            }
+            for (v, &done_at) in last_finish.iter().enumerate() {
+                if tick_time > done_at {
+                    obs.push_span(Span {
+                        phase: Phase::Gather,
+                        tick,
+                        wave: 0,
+                        server: Some(view.to_physical(v)),
+                        task_tag: None,
+                        start_s: off + done_at,
+                        dur_s: tick_time - done_at,
+                    });
+                }
+            }
+            for &(v, t, at) in eng.oom_evictions() {
+                obs.push_span(Span {
+                    phase: Phase::Evict,
+                    tick,
+                    wave: 0,
+                    server: Some(view.to_physical(v)),
+                    task_tag: Some(t as u64),
+                    start_s: off + at.min(tick_time),
+                    dur_s: 0.0,
+                });
+                obs.counter("sim.oom_evicted", 1.0);
+            }
+            obs.counter("sim.lost_tasks", lost.len() as f64);
+            for (v, &sp) in speeds.iter().enumerate() {
+                obs.speed_sample(tick, view.to_physical(v), sp, None);
+            }
+        }
         total_time += tick_time;
         fault_free_total += fault_free;
         redispatched_total += redispatched;

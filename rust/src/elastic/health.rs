@@ -250,6 +250,30 @@ impl HealthMonitor {
             _ => fallback,
         }
     }
+
+    /// The *observed* relative speed of `server` against the live-pool
+    /// median: `median / ewma`, clamped to `(0, 1]` — the same
+    /// median-relative estimate [`HealthMonitor::slow_estimate`] demotes
+    /// with, but computed for *every* classifiable server rather than
+    /// only slow ones. This is the observability plane's
+    /// believed-vs-observed divergence feed: the coordinator samples it
+    /// at each tick end next to the pool's believed speed, so a trace
+    /// shows where belief and measurement disagree. `None` when the
+    /// server (or the pool) has no usable data.
+    pub fn observed_speed(&self, server: usize, alive: &[usize]) -> Option<f64> {
+        if !self.live.get(server).copied().unwrap_or(false) {
+            return None;
+        }
+        if self.ewma[server].samples < self.cfg.min_samples {
+            return None;
+        }
+        let med = self.median(alive)?;
+        let e = self.ewma(server)?;
+        if med <= 0.0 || e <= 0.0 {
+            return None;
+        }
+        Some((med / e).min(1.0))
+    }
 }
 
 #[cfg(test)]
@@ -370,6 +394,24 @@ mod tests {
         m.observe(0, 1.0);
         m.observe(1, 1.0);
         assert!((m.speculation_deadline(&[0, 1], 0.5) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn observed_speed_is_median_relative_and_clamped() {
+        let mut m = mon(3);
+        let alive = [0usize, 1, 2];
+        m.observe(0, 1.0);
+        m.observe(1, 1.0);
+        m.observe(2, 4.0); // 4x slower than the median
+        let sp = m.observed_speed(2, &alive).unwrap();
+        assert!((sp - 0.25).abs() < 1e-12, "observed speed {sp}");
+        // Faster-than-median clamps to nominal, never above.
+        assert_eq!(m.observed_speed(0, &alive), Some(1.0));
+        // No data / dead ⇒ unobservable.
+        let fresh = mon(2);
+        assert_eq!(fresh.observed_speed(0, &[0, 1]), None);
+        m.mark_dead(2);
+        assert_eq!(m.observed_speed(2, &alive), None);
     }
 
     #[test]

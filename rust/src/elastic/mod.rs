@@ -135,9 +135,9 @@ pub mod pp;
 pub use autoscale::{AutoscaleCfg, Autoscaler, LoadSignals, ScaleDecision};
 pub use failover::{
     retarget_for_beliefs, run_elastic_exec, run_elastic_exec_pp, run_elastic_sim,
-    run_server_loop, seed_belief_speeds, sim_auto_mem_budget, CaCompute, ElasticCfg,
-    ElasticCoordinator, ElasticSimCfg, ElasticSimReport, ElasticTask, ExecReport,
-    ReferenceCaCompute, SimTick, TickStats,
+    run_elastic_sim_obs, run_server_loop, run_server_loop_obs, seed_belief_speeds,
+    sim_auto_mem_budget, CaCompute, ElasticCfg, ElasticCoordinator, ElasticSimCfg,
+    ElasticSimReport, ElasticTask, ExecReport, ReferenceCaCompute, SimTick, TickStats,
 };
 pub use fault::{partition_mid_tick, FaultEvent, FaultPlan, MidTickFaults};
 pub use health::{HealthCfg, HealthMonitor, Verdict};

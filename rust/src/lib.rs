@@ -23,7 +23,11 @@
 //!   ([`net`]: attention servers as separate OS processes speaking a
 //!   length-prefixed binary protocol over TCP, driven bit-exact by the
 //!   same elastic coordinator through the pluggable
-//!   [`exchange::Transport`]), and a PJRT runtime ([`runtime`]) that
+//!   [`exchange::Transport`]), a unified **tracing & metrics plane**
+//!   ([`obs`]: tick-phase spans with wall and virtual clock sources, a
+//!   Chrome/Perfetto `trace_event` exporter behind `--trace-out`, the
+//!   `distca report` straggler-attribution table, and the `distca
+//!   drift` perf-snapshot checker), and a PJRT runtime ([`runtime`]) that
 //!   executes the AOT-compiled JAX/Pallas artifacts on the real CPU
 //!   backend.
 //!
@@ -71,6 +75,7 @@ pub mod memplan;
 pub mod metrics;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod parallel;
 pub mod runtime;
 pub mod server;

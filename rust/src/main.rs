@@ -7,6 +7,8 @@
 //!   schedule   run the §4.2 scheduler on a sampled batch and dump the
 //!              plan (optionally as JSON)
 //!   train      end-to-end tiny-LM training through the AOT artifacts
+//!   report     straggler attribution from a --trace-out trace file
+//!   drift      compare a regenerated BENCH_*.json against its baseline
 //!   bound      Appendix A max-partition bound for a model/bandwidth
 //!   info       print model/cluster configuration tables
 
@@ -19,10 +21,14 @@ use distca::coordinator::{
 };
 use distca::data::distributions::sampler_for;
 use distca::elastic::{
-    pp_tick_horizon, run_distca_pp_elastic, run_elastic_sim, sim_auto_mem_budget, AutoscaleCfg,
-    ElasticCfg, ElasticCoordinator, ElasticPpCfg, ElasticSimCfg, ElasticTask, FaultPlan,
-    ReferenceCaCompute,
+    pp_tick_horizon, run_distca_pp_elastic, run_elastic_sim, run_elastic_sim_obs,
+    sim_auto_mem_budget, AutoscaleCfg, ElasticCfg, ElasticCoordinator, ElasticPpCfg,
+    ElasticSimCfg, ElasticTask, FaultPlan, ReferenceCaCompute,
 };
+use distca::obs::drift::{compare, wall_clock_keys, DriftCfg};
+use distca::obs::report::breakdown;
+use distca::obs::trace::{read_trace, write_trace};
+use distca::obs::Recorder;
 use distca::memplan::MemReport;
 use distca::model::FlopsModel;
 use distca::runtime::ca_exec::synthetic_task;
@@ -44,6 +50,8 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("serve", "networked coordinator over worker processes (--spawn | --connect a,b,c)"),
     ("soak", "networked soak harness: replay a document-length mix, emit BENCH_net.json"),
     ("train", "train the tiny LM end-to-end via AOT artifacts"),
+    ("report", "straggler attribution from a --trace-out file (Fig. 11-style overlap table)"),
+    ("drift", "compare a regenerated BENCH_*.json snapshot against its committed baseline"),
     ("bound", "Appendix A max-partition bound"),
     ("info", "print model & cluster configs"),
 ];
@@ -112,6 +120,19 @@ fn specs() -> Vec<FlagSpec> {
         FlagSpec::value("stats-out", "per-server per-tick JSONL stats path (serve/soak)", None),
         FlagSpec::value("bench-out", "summary JSON path (soak; default BENCH_net.json)", None),
         FlagSpec::value(
+            "trace-out",
+            "Chrome trace-event JSON output, Perfetto-loadable (elastic, serve/soak)",
+            None,
+        ),
+        FlagSpec::value("trace", "trace file to analyze (report)", None),
+        FlagSpec::value("baseline", "committed BENCH_*.json snapshot (drift)", None),
+        FlagSpec::value("candidate", "freshly regenerated BENCH_*.json (drift)", None),
+        FlagSpec::value(
+            "drift-tolerance",
+            "max relative deviation for numeric leaves (drift)",
+            Some("0.2"),
+        ),
+        FlagSpec::value(
             "hb-ms",
             "worker heartbeat interval in ms (serve/soak; 0 disables)",
             Some("200"),
@@ -144,6 +165,8 @@ fn main() {
         Some("serve") => cmd_net(&args, false),
         Some("soak") => cmd_net(&args, true),
         Some("train") => cmd_train(&args),
+        Some("report") => cmd_report(&args),
+        Some("drift") => cmd_drift(&args),
         Some("bound") => cmd_bound(&args),
         Some("info") => cmd_info(&args),
         _ => {
@@ -722,7 +745,8 @@ fn cmd_elastic_pp_threaded(
     let autoscale = args
         .get_bool("autoscale")
         .then(|| AutoscaleCfg { max_servers: n, ..Default::default() });
-    let (stats, alive) = run_threaded_ticks(n, ticks, seed, fault, true, autoscale)?;
+    let trace_out = args.get("trace-out").map(std::path::Path::new);
+    let (stats, alive) = run_threaded_ticks(n, ticks, seed, fault, true, autoscale, trace_out)?;
     let rows: Vec<Vec<String>> = stats
         .iter()
         .zip(&alive)
@@ -816,7 +840,17 @@ fn cmd_elastic_sim(
         mem_budget,
         ..Default::default()
     };
-    let report = run_elastic_sim(&batches, n, &s.params, fault, &cfg)?;
+    // `--trace-out` on the sim path emits the same trace schema on the
+    // virtual clock: one recorder API, two clock sources.
+    let recorder = args.get("trace-out").map(|_| Recorder::new_virtual());
+    let report = match &recorder {
+        Some(r) => run_elastic_sim_obs(&batches, n, &s.params, fault, &cfg, Some(r))?,
+        None => run_elastic_sim(&batches, n, &s.params, fault, &cfg)?,
+    };
+    if let (Some(r), Some(path)) = (&recorder, args.get("trace-out")) {
+        write_trace(r, std::path::Path::new(path))?;
+        println!("wrote {path}");
+    }
     if args.get_bool("json") {
         println!("{}", report.to_json().to_string_pretty());
         return Ok(());
@@ -860,7 +894,9 @@ fn cmd_elastic_sim(
 /// output bit-for-bit against the monolithic oracle. Returns the tick
 /// stats plus the schedulable-server count each tick saw. `autoscale`
 /// wires wave-clock scaling into `run_pp_tick` (the flat path ignores
-/// it — scaling is decided at ping boundaries only).
+/// it — scaling is decided at ping boundaries only). `trace_out`
+/// attaches a wall-clock recorder and writes the Chrome trace after
+/// shutdown.
 fn run_threaded_ticks(
     n: usize,
     ticks: usize,
@@ -868,6 +904,7 @@ fn run_threaded_ticks(
     fault: &FaultPlan,
     pp: bool,
     autoscale: Option<AutoscaleCfg>,
+    trace_out: Option<&std::path::Path>,
 ) -> anyhow::Result<(Vec<distca::elastic::TickStats>, Vec<usize>)> {
     const H: usize = 4;
     const HKV: usize = 2;
@@ -877,6 +914,10 @@ fn run_threaded_ticks(
     let mut co = ElasticCoordinator::spawn(n, cfg, |_| {
         Box::new(ReferenceCaCompute::new(H, HKV, D))
     });
+    let recorder = trace_out.map(|_| Recorder::new_wall());
+    if let Some(r) = &recorder {
+        co.set_recorder(r.clone());
+    }
     let mut rng = Rng::new(seed);
     let mut alive_per_tick = Vec::with_capacity(ticks);
     for tick in 0..ticks {
@@ -909,7 +950,12 @@ fn run_threaded_ticks(
             anyhow::ensure!(out.o == expect[0], "tick {tick} doc {}: output diverged", out.doc);
         }
     }
-    Ok((co.shutdown()?, alive_per_tick))
+    let stats = co.shutdown()?;
+    if let (Some(r), Some(path)) = (&recorder, trace_out) {
+        write_trace(r, path)?;
+        println!("wrote {}", path.display());
+    }
+    Ok((stats, alive_per_tick))
 }
 
 fn cmd_elastic_threaded(
@@ -924,7 +970,8 @@ fn cmd_elastic_threaded(
         "--autoscale on the threaded runtime requires --pp \
          (scaling decisions happen on the wave clock at ping boundaries)"
     );
-    let (stats, alive) = run_threaded_ticks(n, ticks, seed, fault, false, None)?;
+    let trace_out = args.get("trace-out").map(std::path::Path::new);
+    let (stats, alive) = run_threaded_ticks(n, ticks, seed, fault, false, None, trace_out)?;
     let rows: Vec<Vec<String>> = stats
         .iter()
         .zip(&alive)
@@ -1037,6 +1084,7 @@ fn cmd_net(args: &Args, soak: bool) -> anyhow::Result<()> {
         max_doc: args.get_usize("max-doc-len", 131_072)?,
         fault,
         stats_out: args.get("stats-out").map(std::path::PathBuf::from),
+        trace_out: args.get("trace-out").map(std::path::PathBuf::from),
         bench_out: match args.get("bench-out") {
             Some(p) => Some(std::path::PathBuf::from(p)),
             None if soak => Some(std::path::PathBuf::from("BENCH_net.json")),
@@ -1127,6 +1175,88 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         report.secs_per_step
     );
     Ok(())
+}
+
+/// `distca report` — render the Fig. 11-style straggler-attribution
+/// overlap table from a `--trace-out` trace file (wall or virtual
+/// clock: the breakdown is clock-agnostic).
+fn cmd_report(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .get("trace")
+        .ok_or_else(|| anyhow::anyhow!("report needs --trace <file> (a --trace-out output)"))?;
+    let trace = read_trace(std::path::Path::new(path))?;
+    // Structural validation first: a report over malformed spans would
+    // silently mis-attribute phases.
+    distca::obs::trace::validate(&trace.spans)
+        .map_err(|e| anyhow::anyhow!("{path}: invalid trace: {e}"))?;
+    let report = breakdown(&trace)?;
+    if args.get_bool("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    } else {
+        println!("{}", report.render());
+    }
+    Ok(())
+}
+
+/// `distca drift` — compare a freshly regenerated `BENCH_*.json`
+/// against the committed baseline: exact schema (keys, array shapes,
+/// value kinds) plus a relative tolerance on numeric leaves, with
+/// wall-clock fields exempt from the numeric check. A baseline carrying
+/// a top-level `"provisional"` key (committed before any toolchain run
+/// could measure real numbers) is schema-checked only. Exits non-zero
+/// on violations.
+fn cmd_drift(args: &Args) -> anyhow::Result<()> {
+    let b_path = args
+        .get("baseline")
+        .ok_or_else(|| anyhow::anyhow!("drift needs --baseline <file>"))?;
+    let c_path = args
+        .get("candidate")
+        .ok_or_else(|| anyhow::anyhow!("drift needs --candidate <file>"))?;
+    let mut baseline = distca::util::json::parse_file(std::path::Path::new(b_path))
+        .map_err(|e| anyhow::anyhow!("reading {b_path}: {e}"))?;
+    let mut candidate = distca::util::json::parse_file(std::path::Path::new(c_path))
+        .map_err(|e| anyhow::anyhow!("reading {c_path}: {e}"))?;
+    let mut tolerance = args.get_f64("drift-tolerance", 0.2)?;
+    anyhow::ensure!(tolerance >= 0.0, "--drift-tolerance must be non-negative");
+    // Provisional baselines pin the schema, not the numbers: strip the
+    // marker from both sides and lift the numeric tolerance entirely.
+    let provisional = strip_provisional(&mut baseline);
+    strip_provisional(&mut candidate);
+    if provisional {
+        tolerance = f64::INFINITY;
+        println!(
+            "note: {b_path} is provisional (schema-only check; replace it with a \
+             measured run to arm the numeric tolerance)"
+        );
+    }
+    let cfg = DriftCfg { tolerance, skip_keys: wall_clock_keys() };
+    let violations = compare(&baseline, &candidate, &cfg);
+    if violations.is_empty() {
+        println!(
+            "{c_path}: no drift vs {b_path} ({})",
+            if provisional {
+                "schema only".to_string()
+            } else {
+                format!("±{:.0}% on numeric leaves", 100.0 * tolerance)
+            }
+        );
+        return Ok(());
+    }
+    for v in &violations {
+        eprintln!("drift: {v}");
+    }
+    anyhow::bail!("{} drift violation(s) vs {b_path}", violations.len());
+}
+
+/// Remove a top-level `"provisional"` marker; returns whether one was
+/// present.
+fn strip_provisional(v: &mut Json) -> bool {
+    if let Json::Obj(fields) = v {
+        let n = fields.len();
+        fields.retain(|(k, _)| k != "provisional");
+        return fields.len() != n;
+    }
+    false
 }
 
 fn cmd_bound(args: &Args) -> anyhow::Result<()> {

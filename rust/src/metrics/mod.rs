@@ -5,18 +5,27 @@ use crate::sim::IterationReport;
 use crate::util::tables::{f as fmt_f, Table};
 
 /// Speedup of `ours` over `baseline` — the paper defines it as
-/// "average duration of WLB-LLM runs over DistCA".
+/// "average duration of WLB-LLM runs over DistCA". Degenerate inputs
+/// (zero, negative, or non-finite durations) yield 0.0, never NaN/inf —
+/// these feed committed BENCH snapshots and the drift comparator, which
+/// must stay total.
 pub fn speedup(baseline: &IterationReport, ours: &IterationReport) -> f64 {
-    if ours.iter_time <= 0.0 {
+    if !(ours.iter_time.is_finite() && ours.iter_time > 0.0)
+        || !(baseline.iter_time.is_finite() && baseline.iter_time >= 0.0)
+    {
         return 0.0;
     }
     baseline.iter_time / ours.iter_time
 }
 
 /// Model FLOPs utilization of a run: useful training FLOPs over available
-/// device FLOPs.
+/// device FLOPs. Degenerate inputs (zero/negative/non-finite time, peak,
+/// or FLOPs) yield 0.0, never NaN/inf.
 pub fn mfu(report: &IterationReport, useful_flops: f64, peak_flops_total: f64) -> f64 {
-    if report.iter_time <= 0.0 || peak_flops_total <= 0.0 {
+    if !(report.iter_time.is_finite() && report.iter_time > 0.0)
+        || !(peak_flops_total.is_finite() && peak_flops_total > 0.0)
+        || !(useful_flops.is_finite() && useful_flops >= 0.0)
+    {
         return 0.0;
     }
     useful_flops / (report.iter_time * peak_flops_total)
@@ -108,6 +117,24 @@ mod tests {
         let r = rep(1.0);
         let m = mfu(&r, 0.5e15, 1e15);
         assert!((m - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_inputs_never_produce_nan_or_inf() {
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let s = speedup(&rep(2.0), &rep(bad));
+            assert_eq!(s, 0.0, "speedup over iter_time={bad} must be 0.0");
+            let s = speedup(&rep(bad), &rep(1.0)).max(0.0);
+            assert!(s.is_finite(), "speedup of baseline iter_time={bad} must be finite");
+            let m = mfu(&rep(bad), 1e15, 1e15);
+            assert_eq!(m, 0.0, "mfu at iter_time={bad} must be 0.0");
+            let m = mfu(&rep(1.0), 1e15, bad);
+            assert_eq!(m, 0.0, "mfu at peak={bad} must be 0.0");
+        }
+        assert_eq!(mfu(&rep(1.0), f64::NAN, 1e15), 0.0);
+        assert_eq!(mfu(&rep(1.0), -1.0, 1e15), 0.0);
+        // Zero useful FLOPs is a legitimate (idle) run, not an error.
+        assert_eq!(mfu(&rep(1.0), 0.0, 1e15), 0.0);
     }
 
     #[test]

@@ -74,6 +74,11 @@ pub enum FrameKind {
     /// Worker → coordinator: orderly exit. A connection that drops
     /// *without* a goodbye is a crash — the `kill:` fault kind.
     Goodbye,
+    /// Worker → coordinator: observability stats — per-task compute
+    /// span records piggybacked on the heartbeat path. Payload is a
+    /// repeating 4-word group `[tick, tag_lo, tag_hi, dur_s]` (the
+    /// first three bit-cast header words, the duration a plain f32).
+    Stats,
 }
 
 impl FrameKind {
@@ -85,6 +90,7 @@ impl FrameKind {
             FrameKind::Heartbeat => 4,
             FrameKind::Drain => 5,
             FrameKind::Goodbye => 6,
+            FrameKind::Stats => 7,
         }
     }
 
@@ -96,6 +102,7 @@ impl FrameKind {
             4 => FrameKind::Heartbeat,
             5 => FrameKind::Drain,
             6 => FrameKind::Goodbye,
+            7 => FrameKind::Stats,
             other => {
                 return Err(CodecError(format!(
                     "unknown frame kind {other} (corrupt or desynced stream)"
@@ -309,6 +316,7 @@ mod tests {
             FrameKind::Heartbeat,
             FrameKind::Drain,
             FrameKind::Goodbye,
+            FrameKind::Stats,
         ] {
             let f = Frame::control(kind, 2, vec![5.0]);
             let mut dec = FrameDecoder::new();

@@ -40,7 +40,9 @@ use crate::elastic::{
 };
 use crate::elastic::failover::{COORD_SRC, CTRL_SHUTDOWN};
 use crate::exchange::transport::{Message, Transport};
+use crate::obs::{trace, Recorder};
 use crate::runtime::ca_exec::synthetic_task;
+use crate::server::header_usize;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -75,6 +77,11 @@ pub struct ServeCfg {
     pub stats_out: Option<PathBuf>,
     /// Soak summary JSON (`BENCH_net.json`).
     pub bench_out: Option<PathBuf>,
+    /// Chrome/Perfetto `trace_event` trace sink: arms the wall-clock
+    /// [`Recorder`] on the coordinator, assembles worker STATS frames
+    /// into the cluster-wide timeline, and writes the trace at
+    /// shutdown. `distca report <file>` renders it.
+    pub trace_out: Option<PathBuf>,
     /// Worker heartbeat interval (zero disables heartbeats).
     pub hb_interval: Duration,
     /// Beats older than this mark a schedulable worker dead (zero
@@ -378,6 +385,22 @@ fn drain_events(fabric: &TcpTransport, pending: &mut Vec<NetEvent>) {
     pending.extend(fabric.poll_events());
 }
 
+/// Decode one worker STATS frame — repeating 4-word groups
+/// `[tick, tag_lo, tag_hi, dur_s]` — into the recorder's worker-side
+/// compute observations. A trailing partial group (malformed sender) is
+/// ignored rather than trusted. Public so harnesses driving a
+/// [`TcpTransport`] directly (loopback soaks, integration tests) reuse
+/// the exact production decode path.
+pub fn feed_stats(recorder: &Option<Arc<Recorder>>, rank: usize, payload: &[f32]) {
+    let Some(r) = recorder else { return };
+    for g in payload.chunks_exact(4) {
+        let tick = header_usize(g[0]);
+        let tag = (header_usize(g[2]) as u64) << 32 | header_usize(g[1]) as u64;
+        r.observe_compute(tick, tag, g[3] as f64);
+    }
+    r.counter(&format!("stats.frames.{rank}"), 1.0);
+}
+
 /// Block until rank's HELLO arrives (leaving unrelated events queued).
 /// `pub(super)` so the loopback harness shares the exact registration
 /// barrier the process path uses.
@@ -516,6 +539,10 @@ pub fn run_serve(cfg: &ServeCfg) -> Result<NetRunReport> {
 
     let dyn_fabric: Arc<dyn Transport> = Arc::clone(&fabric) as Arc<dyn Transport>;
     let mut co = ElasticCoordinator::over_transport(dyn_fabric, n, ElasticCfg::default());
+    let recorder: Option<Arc<Recorder>> = cfg.trace_out.as_ref().map(|_| Recorder::new_wall());
+    if let Some(r) = &recorder {
+        co.set_recorder(Arc::clone(r));
+    }
     let (h, hkv, d) = NET_DIMS;
     let oracle = ReferenceCaCompute::new(h, hkv, d);
     let (process_plan, inband) = split_fault_plan(&cfg.fault);
@@ -526,10 +553,12 @@ pub fn run_serve(cfg: &ServeCfg) -> Result<NetRunReport> {
     let mut hb_mon = HealthMonitor::new(n, HealthCfg::default());
     let mut last_beat: Vec<Option<Instant>> = vec![None; n];
 
+    // Buffered: per-server rows every tick add up, and the final flush
+    // record below guarantees nothing is lost at pool shutdown.
     let mut stats_file = match &cfg.stats_out {
-        Some(p) => Some(
+        Some(p) => Some(std::io::BufWriter::new(
             std::fs::File::create(p).with_context(|| format!("creating {}", p.display()))?,
-        ),
+        )),
         None => None,
     };
 
@@ -595,6 +624,7 @@ pub fn run_serve(cfg: &ServeCfg) -> Result<NetRunReport> {
                         drain_pending.push(rank);
                     }
                 }
+                NetEvent::Stats { rank, payload } => feed_stats(&recorder, rank, &payload),
                 NetEvent::Goodbye { .. } | NetEvent::Hello { .. } => {}
             }
         }
@@ -676,10 +706,45 @@ pub fn run_serve(cfg: &ServeCfg) -> Result<NetRunReport> {
         }
     }
 
+    // The JSONL contract: a reader that sees the flush record knows the
+    // file is complete, not truncated by a dying coordinator.
+    if let Some(f) = stats_file.as_mut() {
+        let row = Json::obj(vec![
+            ("flush", Json::Bool(true)),
+            ("ticks", Json::Num(cfg.ticks as f64)),
+            ("rows", Json::Num((cfg.ticks * n) as f64)),
+        ]);
+        writeln!(f, "{}", row.to_string_compact()).context("writing --stats-out flush record")?;
+        f.flush().context("flushing --stats-out")?;
+    }
+
     // Orderly shutdown: broadcast CTRL_SHUTDOWN over the wire, then
     // reap every child — a clean run leaks nothing.
     co.shutdown()?;
     procs.shutdown()?;
+
+    // The workers' final STATS flush rides ahead of their GOODBYE; give
+    // the reader threads a bounded settle window to surface it, then
+    // fold everything into the trace.
+    if recorder.is_some() {
+        let deadline = Instant::now() + Duration::from_secs(1);
+        let mut quiet = 0usize;
+        while Instant::now() < deadline && quiet < 3 {
+            let before = pending.len();
+            drain_events(&fabric, &mut pending);
+            quiet = if pending.len() == before { quiet + 1 } else { 0 };
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        for ev in pending.drain(..) {
+            if let NetEvent::Stats { rank, payload } = ev {
+                feed_stats(&recorder, rank, &payload);
+            }
+        }
+    }
+    if let (Some(r), Some(path)) = (&recorder, &cfg.trace_out) {
+        trace::write_trace(r, path)?;
+        println!("wrote {}", path.display());
+    }
 
     let report = NetRunReport {
         workers: n,

@@ -50,6 +50,11 @@ pub enum NetEvent {
     Goodbye { rank: usize },
     /// The connection dropped without a goodbye (`kill:`).
     Disconnected { rank: usize },
+    /// Observability stats from `rank`: repeating 4-word groups
+    /// `[tick, tag_lo, tag_hi, dur_s]` of per-task compute spans
+    /// (see [`FrameKind::Stats`]). The serve loop feeds these into its
+    /// recorder to refine the compute/wire-wait split.
+    Stats { rank: usize, payload: Vec<f32> },
 }
 
 struct ConnSlot {
@@ -230,6 +235,9 @@ impl TcpTransport {
             }
             FrameKind::Drain => self.push_event(NetEvent::DrainRequest { rank: peer_rank }),
             FrameKind::Goodbye => self.push_event(NetEvent::Goodbye { rank: peer_rank }),
+            FrameKind::Stats => {
+                self.push_event(NetEvent::Stats { rank: peer_rank, payload: f.payload })
+            }
             // CONFIG is consumed during the handshake, before the
             // transport owns the stream; a late one is ignored.
             FrameKind::Config => {}

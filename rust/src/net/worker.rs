@@ -10,28 +10,108 @@
 //!
 //! A heartbeat thread beats on the coordinator connection at the
 //! CONFIG-negotiated interval; the coordinator feeds the inter-beat
-//! gaps into its health EWMAs. The worker exits when it receives
-//! `CTRL_SHUTDOWN`, or when the coordinator connection drops (the
-//! transport synthesizes the same shutdown into its inbox), and sends
-//! a GOODBYE on the way out — a connection that dies *without* a
-//! goodbye is what the coordinator maps to `kill:`.
+//! gaps into its health EWMAs. The same thread piggybacks the worker's
+//! buffered compute-span observations as STATS frames, so the tracing
+//! plane costs no extra connection and no extra wakeups. The worker
+//! exits when it receives `CTRL_SHUTDOWN`, or when the coordinator
+//! connection drops (the transport synthesizes the same shutdown into
+//! its inbox), and sends a final STATS flush plus a GOODBYE on the way
+//! out — a connection that dies *without* a goodbye is what the
+//! coordinator maps to `kill:`.
+//!
+//! In daemon mode (`distca worker`) a `SIGTERM` triggers the *drain*
+//! path, not the kill path: a watcher thread announces DRAIN on the
+//! coordinator connection, the coordinator stops planning onto this
+//! rank and completes the tick, and the worker exits through the normal
+//! shutdown sequence — final stats flush included. `SIGKILL` remains
+//! the scripted crash.
 
 use std::io::Read;
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::elastic::failover::run_server_loop;
+use crate::elastic::failover::run_server_loop_obs;
 use crate::elastic::{CaCompute, ReferenceCaCompute};
 use crate::exchange::transport::Transport;
+use crate::obs::ComputeSink;
 use crate::server::{header_usize, header_word};
 
 use super::codec::{Frame, FrameDecoder, FrameKind};
 use super::transport::TcpTransport;
+
+/// Set by the `SIGTERM` handler; polled by the daemon's drain watcher.
+static SIGTERM_SEEN: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" fn on_sigterm(_sig: i32) {
+    // Async-signal-safe: one relaxed store, nothing else.
+    SIGTERM_SEEN.store(true, Ordering::Relaxed);
+}
+
+#[cfg(unix)]
+const SIGTERM: i32 = 15;
+
+#[cfg(unix)]
+extern "C" {
+    // libc is already linked by std; declaring `signal` directly keeps
+    // the crate dependency-free.
+    fn signal(signum: i32, handler: usize) -> usize;
+}
+
+/// Install the `SIGTERM` → drain flag handler (daemon mode only — a
+/// library embedder must not have its process-wide handlers replaced).
+fn arm_sigterm() {
+    #[cfg(unix)]
+    unsafe {
+        signal(SIGTERM, on_sigterm as usize);
+    }
+}
+
+/// Worker-side compute-span buffer: the [`ComputeSink`] behind
+/// [`run_server_loop_obs`] on the networked path. Observations
+/// accumulate as repeating 4-word groups
+/// `[tick, tag_lo, tag_hi, dur_s]` (header-word bit-casts for the
+/// integers, a plain f32 for the seconds) and ship to the coordinator
+/// as [`FrameKind::Stats`] payloads — on each heartbeat, and once more
+/// at shutdown so the final tick's spans are never lost.
+struct SpanBuffer {
+    words: Mutex<Vec<f32>>,
+}
+
+impl SpanBuffer {
+    fn new() -> Arc<SpanBuffer> {
+        Arc::new(SpanBuffer { words: Mutex::new(Vec::new()) })
+    }
+
+    /// Take everything buffered so far (empty ⇒ nothing to send).
+    fn drain_words(&self) -> Vec<f32> {
+        std::mem::take(&mut *self.words.lock().unwrap())
+    }
+}
+
+impl ComputeSink for SpanBuffer {
+    fn record_compute(&self, tick: usize, tag: u64, dur_s: f64) {
+        let mut w = self.words.lock().unwrap();
+        w.push(header_word(tick));
+        w.push(header_word((tag & 0xFFFF_FFFF) as usize));
+        w.push(header_word((tag >> 32) as usize));
+        w.push(dur_s as f32);
+    }
+}
+
+/// Ship the buffered spans as one STATS frame; a send failure means the
+/// connection is gone, which the main loop detects on its own.
+fn flush_stats(fabric: &TcpTransport, rank: usize, spans: &SpanBuffer) {
+    let words = spans.drain_words();
+    if !words.is_empty() {
+        let _ = fabric.send_frame(0, &Frame::control(FrameKind::Stats, rank, words));
+    }
+}
 
 /// CLI-level knobs for the daemon.
 #[derive(Debug, Clone)]
@@ -99,9 +179,10 @@ pub fn run_worker(cfg: &WorkerCfg) -> Result<()> {
         std::fs::rename(&tmp, pf).with_context(|| format!("publishing {}", pf.display()))?;
     }
     println!("distca worker listening on {addr}");
+    arm_sigterm();
     let (stream, peer) = listener.accept().context("accepting coordinator")?;
     println!("coordinator connected from {peer}");
-    serve_stream(stream)?;
+    serve_session(stream, true)?;
     println!("worker exiting cleanly");
     Ok(())
 }
@@ -111,6 +192,15 @@ pub fn run_worker(cfg: &WorkerCfg) -> Result<()> {
 /// disconnect. Shared by the daemon and the in-process loopback
 /// harness ([`super::loopback`]).
 pub fn serve_stream(stream: TcpStream) -> Result<()> {
+    serve_session(stream, false)
+}
+
+/// [`serve_stream`] with daemon extras: when `daemon` is true, a
+/// watcher thread turns a received `SIGTERM` into one DRAIN frame on
+/// the coordinator connection (graceful departure; the tick completes
+/// and the final stats flush still happens). Non-daemon embedders (the
+/// loopback harness) skip the watcher but keep the stats plane.
+fn serve_session(stream: TcpStream, daemon: bool) -> Result<()> {
     let _ = stream.set_nodelay(true);
     // Bounded handshake: a coordinator that connects and goes silent
     // must not hang the daemon. The timeout is cleared afterwards —
@@ -133,11 +223,14 @@ pub fn serve_stream(stream: TcpStream) -> Result<()> {
         .map_err(|e| anyhow::anyhow!("registration hello: {e}"))?;
 
     // Heartbeat thread: independent of the (possibly busy) compute
-    // loop, so a worker crunching a heavy CA-task still beats.
+    // loop, so a worker crunching a heavy CA-task still beats. Each
+    // beat also flushes the buffered compute spans as a STATS frame.
     let stop = Arc::new(AtomicBool::new(false));
+    let spans = SpanBuffer::new();
     let hb = if cfg.hb_interval > Duration::ZERO {
         let stop = Arc::clone(&stop);
         let fabric = Arc::clone(&fabric);
+        let spans = Arc::clone(&spans);
         let rank = cfg.rank;
         let interval = cfg.hb_interval.max(Duration::from_millis(10));
         Some(std::thread::spawn(move || {
@@ -147,8 +240,29 @@ pub fn serve_stream(stream: TcpStream) -> Result<()> {
                 if fabric.send_frame(0, &beat).is_err() {
                     break; // connection gone; the main loop exits too
                 }
+                flush_stats(&fabric, rank, &spans);
                 seq += 1;
                 std::thread::sleep(interval);
+            }
+        }))
+    } else {
+        None
+    };
+
+    // SIGTERM → DRAIN watcher (daemon only): graceful departure through
+    // the drain path, never the kill path.
+    let term_watch = if daemon {
+        let stop = Arc::clone(&stop);
+        let fabric = Arc::clone(&fabric);
+        let rank = cfg.rank;
+        Some(std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                if SIGTERM_SEEN.load(Ordering::Relaxed) {
+                    let _ = fabric
+                        .send_frame(0, &Frame::control(FrameKind::Drain, rank, vec![]));
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(20));
             }
         }))
     } else {
@@ -158,13 +272,20 @@ pub fn serve_stream(stream: TcpStream) -> Result<()> {
     let compute: Box<dyn CaCompute> =
         Box::new(ReferenceCaCompute::new(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim));
     let fabric_dyn: Arc<dyn Transport> = Arc::clone(&fabric) as Arc<dyn Transport>;
-    let result = run_server_loop(fabric_dyn, cfg.rank, cfg.n_servers, compute);
+    let sink: Arc<dyn ComputeSink> = Arc::clone(&spans) as _;
+    let result = run_server_loop_obs(fabric_dyn, cfg.rank, cfg.n_servers, compute, Some(sink));
 
     stop.store(true, Ordering::Relaxed);
+    // Final stats flush *before* the goodbye: span frames written ahead
+    // of GOODBYE on the same ordered stream are never lost to shutdown.
+    flush_stats(&fabric, cfg.rank, &spans);
     // Best-effort goodbye: a SIGKILLed worker never sends one, and
     // that absence is exactly what the coordinator reads as `kill:`.
     let _ = fabric.send_frame(0, &Frame::control(FrameKind::Goodbye, cfg.rank, vec![]));
     if let Some(h) = hb {
+        let _ = h.join();
+    }
+    if let Some(h) = term_watch {
         let _ = h.join();
     }
     // Close the connection so the coordinator's reader sees EOF right
@@ -223,5 +344,23 @@ mod tests {
     #[test]
     fn short_config_rejected() {
         assert!(WorkerConfig::from_payload(&[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn span_buffer_encodes_four_word_groups() {
+        let spans = SpanBuffer::new();
+        let tag: u64 = (7 << 32) | 42; // exercises both halves
+        spans.record_compute(3, tag, 0.25);
+        spans.record_compute(3, 1, 0.5);
+        let words = spans.drain_words();
+        assert_eq!(words.len(), 8);
+        assert_eq!(header_usize(words[0]), 3);
+        assert_eq!(header_usize(words[1]), 42);
+        assert_eq!(header_usize(words[2]), 7);
+        assert_eq!(words[3], 0.25);
+        let got = (header_usize(words[2]) as u64) << 32 | header_usize(words[1]) as u64;
+        assert_eq!(got, tag);
+        // Drained means drained.
+        assert!(spans.drain_words().is_empty());
     }
 }

@@ -1,0 +1,178 @@
+//! Perf-trajectory drift detection for the committed `BENCH_*.json`
+//! snapshots.
+//!
+//! CI regenerates each snapshot under the pinned `DISTCA_SEED` and
+//! compares it against the committed baseline with
+//! [`compare`]: the *schema* must match exactly (same keys, same array
+//! shapes, same value kinds), and every numeric leaf must stay within
+//! a relative tolerance (default 20%). Keys named in the skip list are
+//! exempt from the numeric check (but not the schema check) — that is
+//! where wall-clock-dependent fields like a soak's `makespan_s` live,
+//! since they legitimately vary run-to-run while everything seeded
+//! stays bit-identical.
+//!
+//! `distca drift --baseline a.json --candidate b.json` is the CLI
+//! front-end; it exits non-zero when violations are found.
+
+use crate::util::json::Json;
+
+/// Drift-comparison knobs.
+#[derive(Debug, Clone)]
+pub struct DriftCfg {
+    /// Max relative deviation for numeric leaves (0.2 = ±20%).
+    pub tolerance: f64,
+    /// Leaf key names exempt from the numeric check (wall-clock
+    /// fields). Schema presence is still enforced.
+    pub skip_keys: Vec<String>,
+}
+
+impl Default for DriftCfg {
+    fn default() -> Self {
+        DriftCfg { tolerance: 0.2, skip_keys: wall_clock_keys() }
+    }
+}
+
+/// The wall-clock-dependent leaf keys present in the repo's committed
+/// snapshots: timing measured on the host, never comparable run-to-run.
+pub fn wall_clock_keys() -> Vec<String> {
+    ["makespan_s", "elapsed_s", "hb_ewma_s", "wall_s", "elapsed_ms"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect()
+}
+
+fn kind(v: &Json) -> &'static str {
+    match v {
+        Json::Null => "null",
+        Json::Bool(_) => "bool",
+        Json::Num(_) => "number",
+        Json::Str(_) => "string",
+        Json::Arr(_) => "array",
+        Json::Obj(_) => "object",
+    }
+}
+
+/// Compare `candidate` against `baseline`; returns human-readable
+/// violations (empty = within tolerance). Never panics on malformed
+/// shapes — mismatches are violations, not errors.
+pub fn compare(baseline: &Json, candidate: &Json, cfg: &DriftCfg) -> Vec<String> {
+    let mut out = Vec::new();
+    walk(baseline, candidate, "$", cfg, &mut out);
+    out
+}
+
+fn walk(b: &Json, c: &Json, path: &str, cfg: &DriftCfg, out: &mut Vec<String>) {
+    if kind(b) != kind(c) {
+        out.push(format!("{path}: kind changed {} -> {}", kind(b), kind(c)));
+        return;
+    }
+    match (b, c) {
+        (Json::Obj(bf), Json::Obj(cf)) => {
+            for (k, bv) in bf {
+                match cf.iter().find(|(ck, _)| ck == k) {
+                    None => out.push(format!("{path}.{k}: missing from candidate")),
+                    Some((_, cv)) => walk(bv, cv, &format!("{path}.{k}"), cfg, out),
+                }
+            }
+            for (k, _) in cf {
+                if !bf.iter().any(|(bk, _)| bk == k) {
+                    out.push(format!("{path}.{k}: not in baseline (schema grew)"));
+                }
+            }
+        }
+        (Json::Arr(ba), Json::Arr(ca)) => {
+            if ba.len() != ca.len() {
+                out.push(format!("{path}: array length {} -> {}", ba.len(), ca.len()));
+                return;
+            }
+            for (i, (bv, cv)) in ba.iter().zip(ca).enumerate() {
+                walk(bv, cv, &format!("{path}[{i}]"), cfg, out);
+            }
+        }
+        (Json::Num(bn), Json::Num(cn)) => {
+            let leaf = path.rsplit('.').next().unwrap_or(path);
+            let leaf = leaf.split('[').next().unwrap_or(leaf);
+            if cfg.skip_keys.iter().any(|k| k == leaf) {
+                return;
+            }
+            let denom = bn.abs().max(cn.abs());
+            let diff = (bn - cn).abs();
+            if diff > cfg.tolerance * denom + 1e-9 {
+                out.push(format!(
+                    "{path}: {bn} -> {cn} ({:+.1}% exceeds ±{:.0}%)",
+                    if bn.abs() > 0.0 { 100.0 * (cn - bn) / bn.abs() } else { f64::INFINITY },
+                    100.0 * cfg.tolerance,
+                ));
+            }
+        }
+        (Json::Str(bs), Json::Str(cs)) => {
+            if bs != cs {
+                out.push(format!("{path}: \"{bs}\" -> \"{cs}\""));
+            }
+        }
+        (Json::Bool(bb), Json::Bool(cb)) => {
+            if bb != cb {
+                out.push(format!("{path}: {bb} -> {cb}"));
+            }
+        }
+        _ => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn identical_documents_have_no_drift() {
+        let v = parse(r#"{"a": 1.0, "b": [1, 2, {"c": "x"}]}"#).unwrap();
+        assert!(compare(&v, &v, &DriftCfg::default()).is_empty());
+    }
+
+    #[test]
+    fn within_tolerance_passes_beyond_fails() {
+        let b = parse(r#"{"t": 100.0}"#).unwrap();
+        let ok = parse(r#"{"t": 115.0}"#).unwrap();
+        let bad = parse(r#"{"t": 130.0}"#).unwrap();
+        let cfg = DriftCfg { tolerance: 0.2, skip_keys: vec![] };
+        assert!(compare(&b, &ok, &cfg).is_empty());
+        let v = compare(&b, &bad, &cfg);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("$.t"), "{v:?}");
+    }
+
+    #[test]
+    fn schema_changes_are_violations() {
+        let b = parse(r#"{"a": 1, "arr": [1, 2]}"#).unwrap();
+        let missing = parse(r#"{"arr": [1, 2]}"#).unwrap();
+        let grew = parse(r#"{"a": 1, "arr": [1, 2], "new": 0}"#).unwrap();
+        let reshaped = parse(r#"{"a": 1, "arr": [1, 2, 3]}"#).unwrap();
+        let retyped = parse(r#"{"a": "1", "arr": [1, 2]}"#).unwrap();
+        let cfg = DriftCfg::default();
+        for (c, what) in
+            [(missing, "missing"), (grew, "grew"), (reshaped, "length"), (retyped, "kind")]
+        {
+            let v = compare(&b, &c, &cfg);
+            assert!(!v.is_empty(), "{what} should be flagged");
+        }
+    }
+
+    #[test]
+    fn wall_clock_keys_are_exempt_from_tolerance_not_schema() {
+        let b = parse(r#"{"makespan_s": 1.0}"#).unwrap();
+        let c = parse(r#"{"makespan_s": 50.0}"#).unwrap();
+        assert!(compare(&b, &c, &DriftCfg::default()).is_empty());
+        // But deleting the key is still a schema violation.
+        let gone = parse(r#"{}"#).unwrap();
+        assert!(!compare(&b, &gone, &DriftCfg::default()).is_empty());
+    }
+
+    #[test]
+    fn array_indexing_does_not_defeat_skip_keys() {
+        // A skipped leaf inside an array of objects stays skipped.
+        let b = parse(r#"{"per_tick": [{"makespan_s": 1.0}, {"makespan_s": 2.0}]}"#).unwrap();
+        let c = parse(r#"{"per_tick": [{"makespan_s": 9.0}, {"makespan_s": 0.1}]}"#).unwrap();
+        assert!(compare(&b, &c, &DriftCfg::default()).is_empty());
+    }
+}

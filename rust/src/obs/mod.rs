@@ -1,0 +1,618 @@
+//! Unified tracing & metrics plane: tick-phase spans, straggler
+//! attribution, and trace-file drift checks.
+//!
+//! Every execution path in the repo — the threaded
+//! [`ElasticCoordinator`](crate::elastic::ElasticCoordinator), the
+//! deterministic exec references, the discrete-event simulators, and
+//! the TCP runtime (`distca worker|serve|soak`) — reports into the same
+//! [`Recorder`]: typed spans ([`Phase`]) and counters keyed by
+//! `(tick, wave, server, task_tag)`. The recorder supports two clock
+//! sources ([`ClockSource`]): monotonic wall-clock for the threaded and
+//! networked paths, and virtual sim-time for the engine-backed
+//! simulators — so one exporter and one report cover all of them.
+//!
+//! On top of the recorder:
+//!
+//! * [`trace`] — a Chrome `trace_event` JSON exporter/importer
+//!   (`--trace-out`, loadable in Perfetto) plus structural validation
+//!   (every span nests inside its tick; `compute` never overlaps
+//!   `wire_wait` on the same thread row);
+//! * [`report`] — the per-tick straggler-attribution report: per-server
+//!   compute vs wire-wait vs gather-idle seconds (summing to the tick
+//!   wall-time by construction), max/mean imbalance, and believed-vs-
+//!   observed speed divergence — the Fig. 11-style overlap table behind
+//!   `distca report`;
+//! * [`drift`] — schema + tolerance comparison of committed
+//!   `BENCH_*.json` perf snapshots against freshly regenerated ones
+//!   (`distca drift`), the repo's committed perf trajectory.
+//!
+//! ## The phase-accounting identity
+//!
+//! Per tick and per server `s`, the recorder tracks the *busy window*
+//! `[first dispatch to s, last receipt from s]` and attributes:
+//!
+//! * `compute_s` — worker-measured per-task compute seconds (in-process
+//!   servers and TCP workers both report them; see
+//!   [`ComputeSink`]), clamped to the window;
+//! * `wire_wait_s = window − compute_s` — serialization, transit, and
+//!   queue time on the wire;
+//! * `gather_idle_s = tick_s − window` — plan/dispatch lead-in plus the
+//!   tail where the coordinator is gathering *other* servers.
+//!
+//! The three phases sum to the measured tick wall-time exactly, which
+//! is what makes the per-server breakdown auditable against the tick
+//! clock (the acceptance bound is ±5%; the identity gives ~0).
+
+pub mod drift;
+pub mod report;
+pub mod trace;
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Span taxonomy. `Tick` is the container every other span nests in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    /// Whole-tick container span (one per tick, coordinator row).
+    Tick,
+    /// Event application, gray demotion, belief-aware planning.
+    Plan,
+    /// Serializing + sending the wave(s) onto the fabric.
+    Dispatch,
+    /// A CA-task's kernel time on its server.
+    Compute,
+    /// Window time on a server not covered by compute: wire + queue.
+    WireWait,
+    /// Tick time outside a server's busy window (coordinator gathers
+    /// others / plan lead-in): idle from that server's perspective.
+    Gather,
+    /// A task cancelled on a suspect and re-sent elsewhere.
+    Redispatch,
+    /// A task evicted by an arena byte-budget overflow.
+    Evict,
+}
+
+impl Phase {
+    /// Stable lowercase name used in trace files.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Tick => "tick",
+            Phase::Plan => "plan",
+            Phase::Dispatch => "dispatch",
+            Phase::Compute => "compute",
+            Phase::WireWait => "wire_wait",
+            Phase::Gather => "gather",
+            Phase::Redispatch => "redispatch",
+            Phase::Evict => "evict",
+        }
+    }
+
+    /// Inverse of [`Phase::name`].
+    pub fn from_name(s: &str) -> Option<Phase> {
+        Some(match s {
+            "tick" => Phase::Tick,
+            "plan" => Phase::Plan,
+            "dispatch" => Phase::Dispatch,
+            "compute" => Phase::Compute,
+            "wire_wait" => Phase::WireWait,
+            "gather" => Phase::Gather,
+            "redispatch" => Phase::Redispatch,
+            "evict" => Phase::Evict,
+            _ => return None,
+        })
+    }
+}
+
+/// One typed span. Times are seconds on the recorder's clock
+/// ([`ClockSource`]); `server == None` means the coordinator row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub phase: Phase,
+    pub tick: usize,
+    pub wave: usize,
+    pub server: Option<usize>,
+    pub task_tag: Option<u64>,
+    pub start_s: f64,
+    pub dur_s: f64,
+}
+
+/// Which clock the recorder's timestamps come from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClockSource {
+    /// Monotonic wall-clock, seconds since recorder creation (threaded
+    /// coordinator, `distca worker|serve|soak`).
+    Wall,
+    /// Virtual sim-time, seconds since simulation start (the
+    /// discrete-event engine and both elastic simulators).
+    Virtual,
+}
+
+impl ClockSource {
+    pub fn name(self) -> &'static str {
+        match self {
+            ClockSource::Wall => "wall",
+            ClockSource::Virtual => "virtual",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<ClockSource> {
+        match s {
+            "wall" => Some(ClockSource::Wall),
+            "virtual" => Some(ClockSource::Virtual),
+            _ => None,
+        }
+    }
+}
+
+/// Anything a server loop can report per-task compute durations into:
+/// the in-process paths hand the recorder itself (via
+/// [`RecorderCell`]); a TCP worker hands a frame buffer that ships the
+/// records over the heartbeat wire (`net::worker`).
+pub trait ComputeSink: Send + Sync {
+    /// `dur_s` seconds of kernel time for `tag` in `tick`.
+    fn record_compute(&self, tick: usize, tag: u64, dur_s: f64);
+}
+
+/// A late-bindable recorder slot: workers spawned before the recorder
+/// exists hold the cell; [`RecorderCell::set`] arms it afterwards.
+#[derive(Default)]
+pub struct RecorderCell {
+    inner: Mutex<Option<Arc<Recorder>>>,
+}
+
+impl RecorderCell {
+    pub fn new() -> Arc<RecorderCell> {
+        Arc::new(RecorderCell::default())
+    }
+
+    pub fn set(&self, r: Arc<Recorder>) {
+        *self.inner.lock().unwrap() = Some(r);
+    }
+
+    pub fn get(&self) -> Option<Arc<Recorder>> {
+        self.inner.lock().unwrap().clone()
+    }
+}
+
+impl ComputeSink for RecorderCell {
+    fn record_compute(&self, tick: usize, tag: u64, dur_s: f64) {
+        if let Some(r) = self.get() {
+            r.observe_compute(tick, tag, dur_s);
+        }
+    }
+}
+
+impl ComputeSink for Recorder {
+    fn record_compute(&self, tick: usize, tag: u64, dur_s: f64) {
+        self.observe_compute(tick, tag, dur_s);
+    }
+}
+
+/// A task completion as the coordinator's gather observed it.
+#[derive(Debug, Clone)]
+pub(crate) struct TaskObs {
+    pub tag: u64,
+    pub server: usize,
+    pub wave: usize,
+    /// Dispatch → receipt latency (coordinator clock).
+    pub latency_s: f64,
+    /// Receipt instant (coordinator clock).
+    pub receipt_s: f64,
+}
+
+/// Per-(tick, server) busy window plus the tick's aggregate phases.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct TickObs {
+    pub start_s: f64,
+    pub end_s: Option<f64>,
+    pub plan_s: f64,
+    pub dispatch_s: f64,
+    pub tasks: Vec<TaskObs>,
+    /// server → (believed speed, observed speed) at plan time.
+    pub speeds: BTreeMap<usize, (f64, Option<f64>)>,
+}
+
+#[derive(Default)]
+struct Inner {
+    ticks: BTreeMap<usize, TickObs>,
+    /// Worker-measured kernel seconds, keyed `(tick, tag)`.
+    compute: BTreeMap<(usize, u64), f64>,
+    /// Freeform spans pushed directly (simulator paths).
+    spans: Vec<Span>,
+    counters: BTreeMap<String, f64>,
+}
+
+/// The tracing/metrics collector every execution path reports into.
+/// All methods take `&self` — share it as `Arc<Recorder>` across the
+/// coordinator, its in-process servers, and the net event loop.
+pub struct Recorder {
+    clock: ClockSource,
+    /// Wall epoch: instants are reported as seconds since creation so
+    /// a trace file is self-contained. `None` for virtual clocks.
+    epoch: Option<Instant>,
+    inner: Mutex<Inner>,
+}
+
+impl Recorder {
+    /// Wall-clock recorder (threaded coordinator, TCP runtime).
+    pub fn new_wall() -> Arc<Recorder> {
+        Arc::new(Recorder {
+            clock: ClockSource::Wall,
+            epoch: Some(Instant::now()),
+            inner: Mutex::new(Inner::default()),
+        })
+    }
+
+    /// Virtual-time recorder (discrete-event simulators).
+    pub fn new_virtual() -> Arc<Recorder> {
+        Arc::new(Recorder {
+            clock: ClockSource::Virtual,
+            epoch: None,
+            inner: Mutex::new(Inner::default()),
+        })
+    }
+
+    pub fn clock(&self) -> ClockSource {
+        self.clock
+    }
+
+    /// Seconds since the wall epoch. Panics on a virtual recorder —
+    /// virtual paths pass explicit sim-times instead.
+    pub fn now(&self) -> f64 {
+        self.epoch.expect("virtual recorder has no wall clock").elapsed().as_secs_f64()
+    }
+
+    /// Open tick `tick` at the current wall time.
+    pub fn tick_begin(&self, tick: usize) {
+        let at = self.now();
+        self.inner.lock().unwrap().ticks.entry(tick).or_default().start_s = at;
+    }
+
+    /// Close tick `tick` at the current wall time.
+    pub fn tick_end(&self, tick: usize) {
+        let at = self.now();
+        self.inner.lock().unwrap().ticks.entry(tick).or_default().end_s = Some(at);
+    }
+
+    /// Virtual-clock variant: the tick's `[start, end)` window in
+    /// sim seconds.
+    pub fn tick_window(&self, tick: usize, start_s: f64, end_s: f64) {
+        let mut g = self.inner.lock().unwrap();
+        let t = g.ticks.entry(tick).or_default();
+        t.start_s = start_s;
+        t.end_s = Some(end_s);
+    }
+
+    /// Aggregate seconds a coordinator-side phase took this tick
+    /// (`Plan` or `Dispatch`; other phases are derived or per-task).
+    pub fn phase_seconds(&self, tick: usize, phase: Phase, dur_s: f64) {
+        let mut g = self.inner.lock().unwrap();
+        let t = g.ticks.entry(tick).or_default();
+        match phase {
+            Phase::Plan => t.plan_s += dur_s,
+            Phase::Dispatch => t.dispatch_s += dur_s,
+            _ => {}
+        }
+    }
+
+    /// A completion as gather saw it: `server` computed `tag`, the
+    /// receipt landed `latency_s` after its dispatch. The per-server
+    /// busy window is derived from these (first dispatch = min over
+    /// `receipt − latency`, window end = max receipt).
+    pub fn task_completed(
+        &self,
+        tick: usize,
+        wave: usize,
+        server: usize,
+        tag: u64,
+        latency_s: f64,
+    ) {
+        let receipt_s = self.now();
+        let mut g = self.inner.lock().unwrap();
+        g.ticks
+            .entry(tick)
+            .or_default()
+            .tasks
+            .push(TaskObs { tag, server, wave, latency_s, receipt_s });
+    }
+
+    /// A suspect's task was cancelled and re-sent `from → to`.
+    pub fn redispatch(&self, tick: usize, wave: usize, from: usize, to: usize, tag: u64) {
+        let at = self.now();
+        let mut g = self.inner.lock().unwrap();
+        g.spans.push(Span {
+            phase: Phase::Redispatch,
+            tick,
+            wave,
+            server: Some(to),
+            task_tag: Some(tag),
+            start_s: at,
+            dur_s: 0.0,
+        });
+        *g.counters.entry(format!("redispatch.from.{from}")).or_insert(0.0) += 1.0;
+    }
+
+    /// Worker-measured kernel seconds for `(tick, tag)` — refines the
+    /// compute/wire split without changing the per-server sum.
+    pub fn observe_compute(&self, tick: usize, tag: u64, dur_s: f64) {
+        if !(dur_s.is_finite() && dur_s >= 0.0) {
+            return;
+        }
+        self.inner.lock().unwrap().compute.insert((tick, tag), dur_s);
+    }
+
+    /// Believed vs observed speed for `server` at `tick` plan time
+    /// (observed from the health EWMA; `None` until it has samples).
+    pub fn speed_sample(&self, tick: usize, server: usize, believed: f64, observed: Option<f64>) {
+        let mut g = self.inner.lock().unwrap();
+        g.ticks.entry(tick).or_default().speeds.insert(server, (believed, observed));
+    }
+
+    /// Push a fully formed span (virtual-clock paths).
+    pub fn push_span(&self, span: Span) {
+        self.inner.lock().unwrap().spans.push(span);
+    }
+
+    /// Bump a named counter.
+    pub fn counter(&self, name: &str, delta: f64) {
+        *self.inner.lock().unwrap().counters.entry(name.to_string()).or_insert(0.0) += delta;
+    }
+
+    /// Counter snapshot (sorted by name).
+    pub fn counters(&self) -> Vec<(String, f64)> {
+        self.inner.lock().unwrap().counters.iter().map(|(k, v)| (k.clone(), *v)).collect()
+    }
+
+    /// Synthesize the full span list: tick containers, coordinator
+    /// plan/dispatch, per-server sequential-packed compute + wire-wait
+    /// + gather-idle, plus every freeform span. Packing is per server
+    /// per tick — computes back-to-back from the first dispatch in
+    /// receipt order, then one wire-wait span to the last receipt, then
+    /// gather-idle to tick end — so nesting and compute/wire
+    /// disjointness hold by construction.
+    pub fn spans(&self) -> Vec<Span> {
+        let g = self.inner.lock().unwrap();
+        let mut out: Vec<Span> = Vec::new();
+        for (&tick, t) in &g.ticks {
+            let end = t.end_s.unwrap_or_else(|| {
+                t.tasks.iter().map(|x| x.receipt_s).fold(t.start_s, f64::max)
+            });
+            let tick_dur = (end - t.start_s).max(0.0);
+            out.push(Span {
+                phase: Phase::Tick,
+                tick,
+                wave: 0,
+                server: None,
+                task_tag: None,
+                start_s: t.start_s,
+                dur_s: tick_dur,
+            });
+            let mut at = t.start_s;
+            for (phase, dur) in [(Phase::Plan, t.plan_s), (Phase::Dispatch, t.dispatch_s)] {
+                if dur > 0.0 {
+                    let dur = dur.min(t.start_s + tick_dur - at).max(0.0);
+                    out.push(Span {
+                        phase,
+                        tick,
+                        wave: 0,
+                        server: None,
+                        task_tag: None,
+                        start_s: at,
+                        dur_s: dur,
+                    });
+                    at += dur;
+                }
+            }
+            // Group completions per server, receipt order.
+            let mut by_srv: BTreeMap<usize, Vec<&TaskObs>> = BTreeMap::new();
+            for task in &t.tasks {
+                by_srv.entry(task.server).or_default().push(task);
+            }
+            for (&srv, tasks) in &mut by_srv {
+                tasks.sort_by(|a, b| a.receipt_s.total_cmp(&b.receipt_s));
+                let first_dispatch = tasks
+                    .iter()
+                    .map(|x| x.receipt_s - x.latency_s)
+                    .fold(f64::INFINITY, f64::min)
+                    .max(t.start_s)
+                    .min(end);
+                let last_receipt = tasks
+                    .iter()
+                    .map(|x| x.receipt_s)
+                    .fold(first_dispatch, f64::max)
+                    .min(end);
+                let window = (last_receipt - first_dispatch).max(0.0);
+                // Attribute per-task compute: worker-measured where
+                // available, else the receipt gap (serialized model).
+                let mut durs: Vec<f64> = Vec::with_capacity(tasks.len());
+                let mut prev = first_dispatch;
+                for task in tasks.iter() {
+                    let gap = (task.receipt_s - prev).max(0.0);
+                    prev = task.receipt_s.max(prev);
+                    let d = match g.compute.get(&(tick, task.tag)) {
+                        Some(&m) => m.min(gap),
+                        None => gap,
+                    };
+                    durs.push(d);
+                }
+                let total: f64 = durs.iter().sum();
+                if total > window && total > 0.0 {
+                    let scale = window / total;
+                    for d in &mut durs {
+                        *d *= scale;
+                    }
+                }
+                let mut cursor = first_dispatch;
+                for (task, &d) in tasks.iter().zip(&durs) {
+                    out.push(Span {
+                        phase: Phase::Compute,
+                        tick,
+                        wave: task.wave,
+                        server: Some(srv),
+                        task_tag: Some(task.tag),
+                        start_s: cursor,
+                        dur_s: d,
+                    });
+                    cursor += d;
+                }
+                if last_receipt > cursor {
+                    out.push(Span {
+                        phase: Phase::WireWait,
+                        tick,
+                        wave: 0,
+                        server: Some(srv),
+                        task_tag: None,
+                        start_s: cursor,
+                        dur_s: last_receipt - cursor,
+                    });
+                }
+                // Idle outside the busy window: lead-in + gather tail.
+                if first_dispatch > t.start_s {
+                    out.push(Span {
+                        phase: Phase::Gather,
+                        tick,
+                        wave: 0,
+                        server: Some(srv),
+                        task_tag: None,
+                        start_s: t.start_s,
+                        dur_s: first_dispatch - t.start_s,
+                    });
+                }
+                if end > last_receipt {
+                    out.push(Span {
+                        phase: Phase::Gather,
+                        tick,
+                        wave: 0,
+                        server: Some(srv),
+                        task_tag: None,
+                        start_s: last_receipt,
+                        dur_s: end - last_receipt,
+                    });
+                }
+            }
+        }
+        out.extend(g.spans.iter().cloned());
+        out
+    }
+
+    /// Believed/observed speed samples: `(tick, server, believed,
+    /// observed)` in tick order.
+    pub fn speed_samples(&self) -> Vec<(usize, usize, f64, Option<f64>)> {
+        let g = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        for (&tick, t) in &g.ticks {
+            for (&srv, &(b, o)) in &t.speeds {
+                out.push((tick, srv, b, o));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_names_roundtrip() {
+        for p in [
+            Phase::Tick,
+            Phase::Plan,
+            Phase::Dispatch,
+            Phase::Compute,
+            Phase::WireWait,
+            Phase::Gather,
+            Phase::Redispatch,
+            Phase::Evict,
+        ] {
+            assert_eq!(Phase::from_name(p.name()), Some(p));
+        }
+        assert_eq!(Phase::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn sequential_packing_preserves_the_tick_sum() {
+        // Virtual-style control over time via direct task observations:
+        // build a wall recorder but synthesize receipts through the
+        // public API, then check compute + wire + gather == tick span
+        // per server.
+        let r = Recorder::new_wall();
+        r.tick_begin(0);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        r.observe_compute(0, 7, 0.001);
+        r.task_completed(0, 0, 1, 7, 0.004);
+        std::thread::sleep(std::time::Duration::from_millis(3));
+        r.task_completed(0, 0, 1, 8, 0.002);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        r.tick_end(0);
+        let spans = r.spans();
+        let tick = spans.iter().find(|s| s.phase == Phase::Tick).unwrap();
+        let sum: f64 = spans
+            .iter()
+            .filter(|s| {
+                s.server == Some(1)
+                    && matches!(s.phase, Phase::Compute | Phase::WireWait | Phase::Gather)
+            })
+            .map(|s| s.dur_s)
+            .sum();
+        assert!(
+            (sum - tick.dur_s).abs() <= 1e-9 + 1e-6 * tick.dur_s,
+            "phases sum {sum} vs tick {}",
+            tick.dur_s
+        );
+        // Compute and wire-wait never overlap on the server row.
+        let mut windows: Vec<(f64, f64, Phase)> = spans
+            .iter()
+            .filter(|s| s.server == Some(1) && matches!(s.phase, Phase::Compute | Phase::WireWait))
+            .map(|s| (s.start_s, s.start_s + s.dur_s, s.phase))
+            .collect();
+        windows.sort_by(|a, b| a.0.total_cmp(&b.0));
+        for pair in windows.windows(2) {
+            assert!(pair[0].1 <= pair[1].0 + 1e-12, "overlap: {pair:?}");
+        }
+    }
+
+    #[test]
+    fn worker_measured_compute_caps_the_attribution() {
+        let r = Recorder::new_wall();
+        r.tick_begin(3);
+        r.observe_compute(3, 1, 0.0); // measured: instant kernel
+        std::thread::sleep(std::time::Duration::from_millis(4));
+        r.task_completed(3, 0, 0, 1, 0.003);
+        r.tick_end(3);
+        let spans = r.spans();
+        let compute: f64 = spans
+            .iter()
+            .filter(|s| s.phase == Phase::Compute)
+            .map(|s| s.dur_s)
+            .sum();
+        let wire: f64 = spans
+            .iter()
+            .filter(|s| s.phase == Phase::WireWait)
+            .map(|s| s.dur_s)
+            .sum();
+        assert!(compute <= 1e-12, "measured 0s kernel, got {compute}");
+        assert!(wire > 0.0, "latency must surface as wire-wait");
+    }
+
+    #[test]
+    fn recorder_cell_binds_late() {
+        let cell = RecorderCell::new();
+        cell.record_compute(0, 1, 0.5); // unarmed: dropped
+        let r = Recorder::new_wall();
+        cell.set(Arc::clone(&r));
+        cell.record_compute(0, 2, 0.25);
+        let g = r.inner.lock().unwrap();
+        assert!(!g.compute.contains_key(&(0, 1)));
+        assert_eq!(g.compute.get(&(0, 2)), Some(&0.25));
+    }
+
+    #[test]
+    fn non_finite_compute_observations_are_dropped() {
+        let r = Recorder::new_wall();
+        r.observe_compute(0, 1, f64::NAN);
+        r.observe_compute(0, 2, -1.0);
+        assert!(r.inner.lock().unwrap().compute.is_empty());
+    }
+}

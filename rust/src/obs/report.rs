@@ -1,0 +1,308 @@
+//! Straggler attribution: turn a trace into the Fig. 11-style per-tick
+//! overlap table.
+//!
+//! For every tick the report breaks each server's share of the tick
+//! wall-time into `compute` / `wire_wait` / `gather_idle` seconds (the
+//! three sum to the tick time by the recorder's phase-accounting
+//! identity — see the [module docs](super)), then derives:
+//!
+//! * **max/mean imbalance** — slowest server's compute over the mean:
+//!   the straggler amplitude the paper's balanced dispatch eliminates;
+//! * **overlap efficiency** — total compute over total busy
+//!   (compute + wire-wait): how much of the wire time is hidden;
+//! * **believed-vs-observed divergence** — how far the coordinator's
+//!   planning beliefs drifted from the health EWMA's observations, the
+//!   quantity that should shrink as `health.rs` demotions converge.
+//!
+//! `distca report --trace f.json` renders this for any trace the
+//! exporter wrote — threaded, networked, or virtual-time simulated.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+use crate::util::tables::{f, secs, Table};
+
+use super::trace::TraceFile;
+use super::{ClockSource, Phase};
+
+/// One server's phase split within one tick.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerPhases {
+    pub server: usize,
+    pub compute_s: f64,
+    pub wire_wait_s: f64,
+    pub gather_idle_s: f64,
+}
+
+impl ServerPhases {
+    /// Total accounted seconds (== tick time on wall traces).
+    pub fn total_s(&self) -> f64 {
+        self.compute_s + self.wire_wait_s + self.gather_idle_s
+    }
+}
+
+/// One tick's attribution.
+#[derive(Debug, Clone)]
+pub struct TickBreakdown {
+    pub tick: usize,
+    pub tick_s: f64,
+    pub servers: Vec<ServerPhases>,
+    pub redispatched: usize,
+    pub evicted: usize,
+    /// max server compute / mean server compute (1.0 = perfectly flat).
+    pub max_imbalance: f64,
+    /// Mean relative |believed − observed| speed error over servers
+    /// with an observation this tick.
+    pub speed_divergence: Option<f64>,
+}
+
+impl TickBreakdown {
+    /// Compute seconds over busy (compute + wire-wait) seconds: the
+    /// fraction of on-wire time hidden behind compute.
+    pub fn overlap_efficiency(&self) -> f64 {
+        let compute: f64 = self.servers.iter().map(|s| s.compute_s).sum();
+        let busy: f64 = self.servers.iter().map(|s| s.compute_s + s.wire_wait_s).sum();
+        if busy <= 0.0 {
+            return 1.0;
+        }
+        compute / busy
+    }
+}
+
+/// The full per-tick attribution of one trace.
+#[derive(Debug, Clone)]
+pub struct TraceReport {
+    pub clock: ClockSource,
+    pub ticks: Vec<TickBreakdown>,
+    pub counters: Vec<(String, f64)>,
+}
+
+/// Aggregate a parsed trace into per-tick, per-server phase seconds.
+pub fn breakdown(trace: &TraceFile) -> Result<TraceReport> {
+    let mut tick_s: BTreeMap<usize, f64> = BTreeMap::new();
+    let mut phases: BTreeMap<usize, BTreeMap<usize, ServerPhases>> = BTreeMap::new();
+    let mut redispatched: BTreeMap<usize, usize> = BTreeMap::new();
+    let mut evicted: BTreeMap<usize, usize> = BTreeMap::new();
+    for s in &trace.spans {
+        match s.phase {
+            Phase::Tick => {
+                tick_s.insert(s.tick, s.dur_s);
+            }
+            Phase::Compute | Phase::WireWait | Phase::Gather => {
+                let Some(srv) = s.server else { continue };
+                let e = phases.entry(s.tick).or_default().entry(srv).or_insert(ServerPhases {
+                    server: srv,
+                    compute_s: 0.0,
+                    wire_wait_s: 0.0,
+                    gather_idle_s: 0.0,
+                });
+                match s.phase {
+                    Phase::Compute => e.compute_s += s.dur_s,
+                    Phase::WireWait => e.wire_wait_s += s.dur_s,
+                    _ => e.gather_idle_s += s.dur_s,
+                }
+            }
+            Phase::Redispatch => *redispatched.entry(s.tick).or_insert(0) += 1,
+            Phase::Evict => *evicted.entry(s.tick).or_insert(0) += 1,
+            Phase::Plan | Phase::Dispatch => {}
+        }
+    }
+    // Divergence per tick from the sidecar speed samples.
+    let mut divergence: BTreeMap<usize, (f64, usize)> = BTreeMap::new();
+    for &(tick, _server, believed, observed) in &trace.speeds {
+        if let Some(obs) = observed {
+            if believed > 0.0 {
+                let d = divergence.entry(tick).or_insert((0.0, 0));
+                d.0 += (believed - obs).abs() / believed;
+                d.1 += 1;
+            }
+        }
+    }
+    let mut ticks = Vec::new();
+    for (&tick, &dur) in &tick_s {
+        let servers: Vec<ServerPhases> =
+            phases.remove(&tick).map(|m| m.into_values().collect()).unwrap_or_default();
+        let computes: Vec<f64> = servers.iter().map(|s| s.compute_s).collect();
+        let mean = if computes.is_empty() {
+            0.0
+        } else {
+            computes.iter().sum::<f64>() / computes.len() as f64
+        };
+        let max = computes.iter().cloned().fold(0.0f64, f64::max);
+        let max_imbalance = if mean > 0.0 { max / mean } else { 1.0 };
+        ticks.push(TickBreakdown {
+            tick,
+            tick_s: dur,
+            servers,
+            redispatched: redispatched.get(&tick).copied().unwrap_or(0),
+            evicted: evicted.get(&tick).copied().unwrap_or(0),
+            max_imbalance,
+            speed_divergence: divergence
+                .get(&tick)
+                .map(|&(sum, n)| if n > 0 { sum / n as f64 } else { 0.0 }),
+        });
+    }
+    Ok(TraceReport { clock: trace.clock, ticks, counters: trace.counters.clone() })
+}
+
+impl TraceReport {
+    /// Render the Fig. 11-style overlap table: one row per
+    /// (tick, server) with the phase split, plus a per-tick summary of
+    /// imbalance, overlap efficiency, and belief divergence.
+    pub fn render(&self) -> String {
+        let mut per_server = Table::new(
+            &format!("Per-server phase attribution ({} clock)", self.clock.name()),
+            &["tick", "server", "compute", "wire_wait", "gather_idle", "compute %"],
+        );
+        for t in &self.ticks {
+            for s in &t.servers {
+                let pct = if t.tick_s > 0.0 { 100.0 * s.compute_s / t.tick_s } else { 0.0 };
+                per_server.row(&[
+                    t.tick.to_string(),
+                    s.server.to_string(),
+                    secs(s.compute_s),
+                    secs(s.wire_wait_s),
+                    secs(s.gather_idle_s),
+                    f(pct, 1),
+                ]);
+            }
+        }
+        let mut summary = Table::new(
+            "Per-tick summary",
+            &["tick", "tick time", "servers", "redisp", "evict", "max/mean", "overlap", "belief err"],
+        );
+        for t in &self.ticks {
+            summary.row(&[
+                t.tick.to_string(),
+                secs(t.tick_s),
+                t.servers.len().to_string(),
+                t.redispatched.to_string(),
+                t.evicted.to_string(),
+                f(t.max_imbalance, 2),
+                f(t.overlap_efficiency(), 3),
+                t.speed_divergence.map(|d| f(d, 3)).unwrap_or_else(|| "-".to_string()),
+            ]);
+        }
+        format!("{}\n{}", per_server.render(), summary.render())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("clock", Json::Str(self.clock.name().to_string())),
+            (
+                "per_tick",
+                Json::Arr(
+                    self.ticks
+                        .iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("tick", Json::Num(t.tick as f64)),
+                                ("tick_s", Json::Num(t.tick_s)),
+                                ("redispatched", Json::Num(t.redispatched as f64)),
+                                ("evicted", Json::Num(t.evicted as f64)),
+                                ("max_imbalance", Json::Num(t.max_imbalance)),
+                                ("overlap_efficiency", Json::Num(t.overlap_efficiency())),
+                                (
+                                    "speed_divergence",
+                                    t.speed_divergence.map(Json::Num).unwrap_or(Json::Null),
+                                ),
+                                (
+                                    "servers",
+                                    Json::Arr(
+                                        t.servers
+                                            .iter()
+                                            .map(|s| {
+                                                Json::obj(vec![
+                                                    ("server", Json::Num(s.server as f64)),
+                                                    ("compute_s", Json::Num(s.compute_s)),
+                                                    ("wire_wait_s", Json::Num(s.wire_wait_s)),
+                                                    (
+                                                        "gather_idle_s",
+                                                        Json::Num(s.gather_idle_s),
+                                                    ),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "counters",
+                Json::Obj(
+                    self.counters.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Span;
+    use super::*;
+
+    fn trace_with(spans: Vec<Span>) -> TraceFile {
+        TraceFile { clock: ClockSource::Wall, spans, counters: vec![], speeds: vec![] }
+    }
+
+    fn span(phase: Phase, tick: usize, server: Option<usize>, start: f64, dur: f64) -> Span {
+        Span { phase, tick, wave: 0, server, task_tag: None, start_s: start, dur_s: dur }
+    }
+
+    #[test]
+    fn phases_sum_to_tick_time() {
+        let t = trace_with(vec![
+            span(Phase::Tick, 0, None, 0.0, 10.0),
+            span(Phase::Compute, 0, Some(0), 1.0, 6.0),
+            span(Phase::WireWait, 0, Some(0), 7.0, 2.0),
+            span(Phase::Gather, 0, Some(0), 0.0, 1.0),
+            span(Phase::Gather, 0, Some(0), 9.0, 1.0),
+        ]);
+        let r = breakdown(&t).unwrap();
+        assert_eq!(r.ticks.len(), 1);
+        let s = &r.ticks[0].servers[0];
+        assert!((s.total_s() - 10.0).abs() < 1e-12);
+        assert!((s.compute_s - 6.0).abs() < 1e-12);
+        assert!((r.ticks[0].overlap_efficiency() - 6.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_is_max_over_mean_compute() {
+        let t = trace_with(vec![
+            span(Phase::Tick, 2, None, 0.0, 4.0),
+            span(Phase::Compute, 2, Some(0), 0.0, 1.0),
+            span(Phase::Compute, 2, Some(1), 0.0, 3.0),
+        ]);
+        let r = breakdown(&t).unwrap();
+        assert!((r.ticks[0].max_imbalance - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn divergence_averages_relative_belief_error() {
+        let mut t = trace_with(vec![span(Phase::Tick, 0, None, 0.0, 1.0)]);
+        t.speeds = vec![(0, 0, 1.0, Some(0.5)), (0, 1, 1.0, None), (0, 2, 0.5, Some(0.5))];
+        let r = breakdown(&t).unwrap();
+        // Only the two observed samples count: (0.5 + 0.0) / 2.
+        assert!((r.ticks[0].speed_divergence.unwrap() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn redispatch_and_evict_are_counted() {
+        let t = trace_with(vec![
+            span(Phase::Tick, 1, None, 0.0, 1.0),
+            span(Phase::Redispatch, 1, Some(0), 0.5, 0.0),
+            span(Phase::Redispatch, 1, Some(1), 0.6, 0.0),
+            span(Phase::Evict, 1, Some(0), 0.7, 0.0),
+        ]);
+        let r = breakdown(&t).unwrap();
+        assert_eq!((r.ticks[0].redispatched, r.ticks[0].evicted), (2, 1));
+        // The table renders without panicking even with no compute.
+        assert!(r.render().contains("Per-tick summary"));
+    }
+}

@@ -1,0 +1,364 @@
+//! Chrome `trace_event` JSON export/import for [`Recorder`] spans.
+//!
+//! The on-disk format is the trace-event "JSON object format":
+//!
+//! ```json
+//! {
+//!   "traceEvents": [
+//!     {"name": "compute 42", "cat": "compute", "ph": "X",
+//!      "ts": 1234.5, "dur": 88.0, "pid": 0, "tid": 3,
+//!      "args": {"tick": 1, "wave": 0, "tag": 42}}
+//!   ],
+//!   "displayTimeUnit": "ms",
+//!   "distca": {"clock": "wall", "counters": {...}, "speeds": [...]}
+//! }
+//! ```
+//!
+//! * one complete event (`ph: "X"`) per span, `ts`/`dur` in
+//!   microseconds (fractional — full f64 precision survives);
+//! * `tid 0` is the coordinator row, `tid s+1` is server `s` —
+//!   `thread_name` metadata events label the rows in Perfetto;
+//! * the `distca` sidecar object carries the clock source, counters,
+//!   and believed/observed speed samples. Perfetto ignores unknown
+//!   top-level keys, so the same file loads in the UI *and*
+//!   round-trips through [`read_trace`] for `distca report`.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+use super::{ClockSource, Phase, Recorder, Span};
+
+const US: f64 = 1e6;
+
+fn tid_of(server: Option<usize>) -> usize {
+    match server {
+        None => 0,
+        Some(s) => s + 1,
+    }
+}
+
+fn server_of(tid: usize) -> Option<usize> {
+    tid.checked_sub(1)
+}
+
+fn span_event(s: &Span) -> Json {
+    let name = match s.task_tag {
+        Some(tag) => format!("{} {tag}", s.phase.name()),
+        None => format!("{} t{}", s.phase.name(), s.tick),
+    };
+    let mut args = vec![
+        ("tick".to_string(), Json::Num(s.tick as f64)),
+        ("wave".to_string(), Json::Num(s.wave as f64)),
+    ];
+    if let Some(tag) = s.task_tag {
+        args.push(("tag".to_string(), Json::Num(tag as f64)));
+    }
+    Json::obj(vec![
+        ("name", Json::Str(name)),
+        ("cat", Json::Str(s.phase.name().to_string())),
+        ("ph", Json::Str("X".to_string())),
+        ("ts", Json::Num(s.start_s * US)),
+        ("dur", Json::Num(s.dur_s * US)),
+        ("pid", Json::Num(0.0)),
+        ("tid", Json::Num(tid_of(s.server) as f64)),
+        ("args", Json::Obj(args)),
+    ])
+}
+
+fn thread_name_event(tid: usize, name: &str) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str("thread_name".to_string())),
+        ("ph", Json::Str("M".to_string())),
+        ("pid", Json::Num(0.0)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", Json::obj(vec![("name", Json::Str(name.to_string()))])),
+    ])
+}
+
+/// Render the recorder into the trace-file JSON value.
+pub fn export(recorder: &Recorder) -> Json {
+    let spans = recorder.spans();
+    let mut events: Vec<Json> = Vec::with_capacity(spans.len() + 8);
+    let mut tids: Vec<usize> = spans.iter().map(|s| tid_of(s.server)).collect();
+    tids.sort_unstable();
+    tids.dedup();
+    for tid in tids {
+        let name = match server_of(tid) {
+            None => "coordinator".to_string(),
+            Some(s) => format!("server {s}"),
+        };
+        events.push(thread_name_event(tid, &name));
+    }
+    events.extend(spans.iter().map(span_event));
+    let counters =
+        Json::Obj(recorder.counters().into_iter().map(|(k, v)| (k, Json::Num(v))).collect());
+    let speeds = Json::Arr(
+        recorder
+            .speed_samples()
+            .into_iter()
+            .map(|(tick, server, believed, observed)| {
+                Json::obj(vec![
+                    ("tick", Json::Num(tick as f64)),
+                    ("server", Json::Num(server as f64)),
+                    ("believed", Json::Num(believed)),
+                    ("observed", observed.map(Json::Num).unwrap_or(Json::Null)),
+                ])
+            })
+            .collect(),
+    );
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+        (
+            "distca",
+            Json::obj(vec![
+                ("clock", Json::Str(recorder.clock().name().to_string())),
+                ("counters", counters),
+                ("speeds", speeds),
+            ]),
+        ),
+    ])
+}
+
+/// Write the trace file (pretty JSON — Perfetto loads it as-is).
+pub fn write_trace(recorder: &Recorder, path: &Path) -> Result<()> {
+    std::fs::write(path, export(recorder).to_string_pretty())
+        .with_context(|| format!("writing trace {}", path.display()))
+}
+
+/// A parsed trace file.
+#[derive(Debug, Clone)]
+pub struct TraceFile {
+    pub clock: ClockSource,
+    pub spans: Vec<Span>,
+    pub counters: Vec<(String, f64)>,
+    /// `(tick, server, believed, observed)` speed samples.
+    pub speeds: Vec<(usize, usize, f64, Option<f64>)>,
+}
+
+/// Parse a trace-file JSON value back into spans + sidecar.
+pub fn parse_trace(v: &Json) -> Result<TraceFile> {
+    let events = v
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .context("trace has no traceEvents array")?;
+    let mut spans = Vec::new();
+    for ev in events {
+        let ph = ev.get("ph").and_then(|p| p.as_str()).unwrap_or("");
+        if ph != "X" {
+            continue; // metadata / instant events carry no phase time
+        }
+        let cat = ev.get("cat").and_then(|c| c.as_str()).context("X event missing cat")?;
+        let Some(phase) = Phase::from_name(cat) else {
+            continue; // foreign category: not ours to account
+        };
+        let ts = ev.get("ts").and_then(|t| t.as_f64()).context("X event missing ts")?;
+        let dur = ev.get("dur").and_then(|d| d.as_f64()).unwrap_or(0.0);
+        let tid = ev.get("tid").and_then(|t| t.as_usize()).unwrap_or(0);
+        let args = ev.get("args");
+        let tick = args
+            .and_then(|a| a.get("tick"))
+            .and_then(|t| t.as_usize())
+            .context("span missing args.tick")?;
+        let wave = args.and_then(|a| a.get("wave")).and_then(|w| w.as_usize()).unwrap_or(0);
+        let task_tag = args.and_then(|a| a.get("tag")).and_then(|t| t.as_u64());
+        spans.push(Span {
+            phase,
+            tick,
+            wave,
+            server: server_of(tid),
+            task_tag,
+            start_s: ts / US,
+            dur_s: dur / US,
+        });
+    }
+    let sidecar = v.get("distca");
+    let clock = sidecar
+        .and_then(|d| d.get("clock"))
+        .and_then(|c| c.as_str())
+        .and_then(ClockSource::from_name)
+        .unwrap_or(ClockSource::Wall);
+    let mut counters = Vec::new();
+    if let Some(Json::Obj(fields)) = sidecar.and_then(|d| d.get("counters")) {
+        for (k, val) in fields {
+            if let Some(n) = val.as_f64() {
+                counters.push((k.clone(), n));
+            }
+        }
+    }
+    let mut speeds = Vec::new();
+    if let Some(arr) = sidecar.and_then(|d| d.get("speeds")).and_then(|s| s.as_arr()) {
+        for row in arr {
+            let (Some(tick), Some(server), Some(believed)) = (
+                row.get("tick").and_then(|x| x.as_usize()),
+                row.get("server").and_then(|x| x.as_usize()),
+                row.get("believed").and_then(|x| x.as_f64()),
+            ) else {
+                continue;
+            };
+            let observed = row.get("observed").and_then(|x| x.as_f64());
+            speeds.push((tick, server, believed, observed));
+        }
+    }
+    Ok(TraceFile { clock, spans, counters, speeds })
+}
+
+/// Read + parse a trace file from disk.
+pub fn read_trace(path: &Path) -> Result<TraceFile> {
+    let v = json::parse_file(path).with_context(|| format!("parsing {}", path.display()))?;
+    parse_trace(&v)
+}
+
+/// Structural validation of a span set: every non-tick span must nest
+/// inside its tick's container span, and on any single thread row no
+/// `compute` span may overlap a `wire_wait` span (nor another
+/// `compute`) — the invariants the sequential-packing exporter
+/// guarantees and CI asserts on real soak traces.
+pub fn validate(spans: &[Span]) -> Result<()> {
+    const EPS: f64 = 1e-9;
+    let mut tick_window: std::collections::BTreeMap<usize, (f64, f64)> = Default::default();
+    for s in spans {
+        if s.phase == Phase::Tick {
+            anyhow::ensure!(
+                tick_window.insert(s.tick, (s.start_s, s.start_s + s.dur_s)).is_none(),
+                "duplicate tick span for tick {}",
+                s.tick
+            );
+        }
+    }
+    let mut busy: std::collections::BTreeMap<usize, Vec<(f64, f64, Phase, usize)>> =
+        Default::default();
+    for s in spans {
+        if s.phase == Phase::Tick {
+            continue;
+        }
+        let (lo, hi) = *tick_window
+            .get(&s.tick)
+            .with_context(|| format!("span in tick {} has no tick container", s.tick))?;
+        anyhow::ensure!(
+            s.start_s + EPS >= lo && s.start_s + s.dur_s <= hi + EPS,
+            "{} span [{:.9}, {:.9}] escapes tick {} [{lo:.9}, {hi:.9}]",
+            s.phase.name(),
+            s.start_s,
+            s.start_s + s.dur_s,
+            s.tick,
+        );
+        if matches!(s.phase, Phase::Compute | Phase::WireWait) {
+            if let Some(srv) = s.server {
+                busy.entry(srv).or_default().push((
+                    s.start_s,
+                    s.start_s + s.dur_s,
+                    s.phase,
+                    s.tick,
+                ));
+            }
+        }
+    }
+    for (srv, mut iv) in busy {
+        iv.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+        for w in iv.windows(2) {
+            anyhow::ensure!(
+                w[0].1 <= w[1].0 + EPS,
+                "server {srv}: {} [{:.9}, {:.9}] (tick {}) overlaps {} [{:.9}, {:.9}] (tick {})",
+                w[0].2.name(),
+                w[0].0,
+                w[0].1,
+                w[0].3,
+                w[1].2.name(),
+                w[1].0,
+                w[1].1,
+                w[1].3,
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(phase: Phase, tick: usize, server: Option<usize>, start: f64, dur: f64) -> Span {
+        Span { phase, tick, wave: 0, server, task_tag: None, start_s: start, dur_s: dur }
+    }
+
+    #[test]
+    fn export_parse_roundtrip_preserves_spans() {
+        let r = Recorder::new_virtual();
+        r.tick_window(0, 0.0, 2.0);
+        r.push_span(Span {
+            phase: Phase::Compute,
+            tick: 0,
+            wave: 1,
+            server: Some(2),
+            task_tag: Some(99),
+            start_s: 0.25,
+            dur_s: 1.0,
+        });
+        r.counter("evictions", 3.0);
+        r.speed_sample(0, 2, 0.5, Some(0.45));
+        let v = export(&r);
+        let parsed = parse_trace(&v).unwrap();
+        assert_eq!(parsed.clock, ClockSource::Virtual);
+        assert_eq!(parsed.counters, vec![("evictions".to_string(), 3.0)]);
+        assert_eq!(parsed.speeds, vec![(0, 2, 0.5, Some(0.45))]);
+        let c = parsed.spans.iter().find(|s| s.phase == Phase::Compute).unwrap();
+        assert_eq!((c.tick, c.wave, c.server, c.task_tag), (0, 1, Some(2), Some(99)));
+        assert!((c.start_s - 0.25).abs() < 1e-12 && (c.dur_s - 1.0).abs() < 1e-12);
+        let t = parsed.spans.iter().find(|s| s.phase == Phase::Tick).unwrap();
+        assert!((t.dur_s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_accepts_nested_disjoint_spans() {
+        let spans = vec![
+            span(Phase::Tick, 0, None, 0.0, 10.0),
+            span(Phase::Compute, 0, Some(0), 1.0, 3.0),
+            span(Phase::WireWait, 0, Some(0), 4.0, 2.0),
+            span(Phase::Gather, 0, Some(0), 6.0, 4.0),
+        ];
+        validate(&spans).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_span_escaping_its_tick() {
+        let spans = vec![
+            span(Phase::Tick, 0, None, 0.0, 1.0),
+            span(Phase::Compute, 0, Some(0), 0.5, 1.0),
+        ];
+        assert!(validate(&spans).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_compute_overlapping_wire_wait() {
+        let spans = vec![
+            span(Phase::Tick, 0, None, 0.0, 10.0),
+            span(Phase::Compute, 0, Some(1), 1.0, 3.0),
+            span(Phase::WireWait, 0, Some(1), 2.0, 3.0),
+        ];
+        assert!(validate(&spans).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_orphan_span() {
+        let spans = vec![span(Phase::Compute, 4, Some(0), 0.0, 1.0)];
+        assert!(validate(&spans).is_err());
+    }
+
+    #[test]
+    fn exported_recorder_spans_validate() {
+        let r = Recorder::new_wall();
+        r.tick_begin(0);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        r.task_completed(0, 0, 0, 11, 0.001);
+        r.task_completed(0, 0, 1, 12, 0.0005);
+        r.tick_end(0);
+        validate(&r.spans()).unwrap();
+        // And they still validate after a disk-format roundtrip.
+        let parsed = parse_trace(&export(&r)).unwrap();
+        validate(&parsed.spans).unwrap();
+    }
+}

@@ -599,6 +599,14 @@ impl Engine {
         self.tasks[id].finish
     }
 
+    /// Start time of a task that ran (after `run`) — with
+    /// [`Engine::finish_of`], the span the tracing plane records for
+    /// virtual-clock compute spans.
+    pub fn start_of(&self, id: TaskId) -> f64 {
+        assert!(self.tasks[id].started, "task {id} never started");
+        self.tasks[id].start
+    }
+
     /// Did the task complete (vs. being revoked)?
     pub fn is_done(&self, id: TaskId) -> bool {
         self.tasks[id].done
@@ -743,6 +751,27 @@ mod tests {
             finals.push(s1);
         }
         assert!((e.run() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn start_and_finish_bound_the_span() {
+        let mut e = Engine::new(1);
+        let a = e.add_task(0, 1.0, &[]);
+        let b = e.add_task(0, 2.0, &[]);
+        e.run();
+        assert_eq!(e.start_of(a), 0.0);
+        assert!((e.start_of(b) - 1.0).abs() < 1e-12);
+        assert!((e.finish_of(b) - e.start_of(b) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn start_of_unstarted_task_panics() {
+        let mut e = Engine::new(1);
+        let a = e.add_task(0, 1.0, &[]);
+        e.revoke_resource(0, 0.0);
+        e.run();
+        e.start_of(a);
     }
 
     #[test]
