@@ -33,7 +33,7 @@
 //! | `--strategy <s>` | simulate | `packed` \| `cp` \| `wlb` \| `distca` |
 //! | `--data <d>` | data-driven | `pretrain` \| `prolong` document-length mix |
 //! | `--tp <n>` | all | tensor-parallel degree (default 8) |
-//! | `--pp [n]` | simulate/elastic | pipeline depth; bare `--pp` is elastic shorthand for PP mode (degree 2) |
+//! | `--pp [n]` | simulate/elastic, serve/soak | pipeline depth; bare `--pp` selects ping-pong PP ticks — elastic: degree 2; serve/soak: each tick runs as two overlapped waves over the wire (wave-epoch frame stamps, mid-wave SIGKILL recovery, overlap columns in the report) |
 //! | `--cp <n>` | simulate | context-parallel degree for the `cp` strategy |
 //! | `--tolerance <ε>` | scheduler paths | §4.2 imbalance tolerance (default 0.10) |
 //! | `--seed <n>` | all | PRNG seed (default `$DISTCA_SEED`, else 42) |

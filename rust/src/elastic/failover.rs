@@ -176,6 +176,13 @@ const DRAIN_SUSPECT_PATIENCE: f64 = 16.0;
 /// runtime, which writes the same control frames over TCP).
 pub const COORD_SRC: usize = usize::MAX;
 
+/// Whether `tag` is a data-plane task tag — no control (bit 63) or
+/// cancel (bit 62) flag set. The networked transport stamps and echoes
+/// wave epochs only on this tag space.
+pub fn is_task_tag(tag: u64) -> bool {
+    tag & (CTRL_BASE | CANCEL_FLAG) == 0
+}
+
 /// A CA-task ready for elastic dispatch: identity, physical target, and
 /// the tensors that make re-dispatch a pure resend.
 #[derive(Debug, Clone)]
@@ -387,8 +394,56 @@ pub struct TickStats {
     pub wave_redispatched: [usize; 2],
     /// Membership epoch each wave was dispatched under.
     pub wave_epochs: [u64; 2],
+    /// Completions gathered while a wave was still being encoded and
+    /// shipped — the dispatch-overlapped share of the gather, i.e. the
+    /// Fig. 11 comm/compute overlap made visible as a count.
+    pub overlap_gathered: usize,
+    /// Connection drops the wave boundary turned into membership fact
+    /// (networked `--pp`: a mid-wave SIGKILL's EOF evidence, applied
+    /// between the ping and pong stamps).
+    pub mid_tick_disconnects: usize,
     /// Wall-clock seconds from dispatch to full gather.
     pub elapsed: f64,
+}
+
+/// Per-tick dispatch/gather bookkeeping, created *before* the first
+/// wave ships so dispatch can overlap-poll completions: wave A's
+/// outputs are collected while wave B's tasks are still being encoded
+/// and sent — the §4.3 comm/compute overlap, over any transport.
+struct GatherState {
+    /// tag → task index (tags are unique within a tick).
+    expected: BTreeMap<u64, usize>,
+    /// tag → server currently holding the task (updated on failover
+    /// and re-dispatch).
+    assigned: BTreeMap<u64, usize>,
+    /// tag → latest dispatch instant (latency measurement).
+    dispatch_at: BTreeMap<u64, Instant>,
+    /// Kept outputs, first-response-wins.
+    outputs: BTreeMap<u64, TaskOutput>,
+    /// Completion latencies (seconds) — deadline-scaling input.
+    completions: Vec<f64>,
+    /// Causal-pair sizes of completed tasks — deadline-scaling input.
+    completed_pairs: Vec<f64>,
+}
+
+impl GatherState {
+    fn new(tasks: &[ElasticTask]) -> GatherState {
+        // Expected set (tags are unique within a tick: a valid plan
+        // covers disjoint (doc, q_start) ranges).
+        let mut expected = BTreeMap::new();
+        for (i, t) in tasks.iter().enumerate() {
+            let prev = expected.insert(t.tag(), i);
+            assert!(prev.is_none(), "duplicate task tag within a tick");
+        }
+        GatherState {
+            expected,
+            assigned: BTreeMap::new(),
+            dispatch_at: BTreeMap::new(),
+            outputs: BTreeMap::new(),
+            completions: Vec::new(),
+            completed_pairs: Vec::new(),
+        }
+    }
 }
 
 /// The threaded elastic runtime: long-lived attention-server worker
@@ -798,6 +853,13 @@ impl ElasticCoordinator {
     /// the per-server dispatched-byte tally this tick, which remap /
     /// drain / OOM targeting consults max-headroom-first
     /// ([`max_headroom_target`]) instead of round-robin.
+    ///
+    /// When `overlap` carries the tick's [`PingPongBuffer`] (whose
+    /// current wave must already be begun), the dispatch pipeline-polls
+    /// the home queues after every send: completions from an earlier
+    /// wave — or fast returns from this one — are gathered while the
+    /// remaining tasks are still being encoded and shipped, so the
+    /// sends never serialize behind the gather.
     #[allow(clippy::too_many_arguments)]
     fn dispatch_wave(
         &mut self,
@@ -806,10 +868,10 @@ impl ElasticCoordinator {
         planned: &[usize],
         idxs: &[usize],
         faults: &MidTickFaults,
-        assigned: &mut BTreeMap<u64, usize>,
-        dispatch_at: &mut BTreeMap<u64, Instant>,
+        gs: &mut GatherState,
         live_bytes: &mut [f64],
         stats: &mut TickStats,
+        mut overlap: Option<&mut PingPongBuffer>,
     ) -> Result<()> {
         let (kills, drains, ooms) = (&faults.kills, &faults.drains, &faults.ooms);
         let targets: Vec<usize> = self
@@ -876,8 +938,11 @@ impl ElasticCoordinator {
                             *c += 1;
                         }
                     }
-                    assigned.insert(tasks[i].tag(), d);
-                    dispatch_at.insert(tasks[i].tag(), Instant::now());
+                    gs.assigned.insert(tasks[i].tag(), d);
+                    gs.dispatch_at.insert(tasks[i].tag(), Instant::now());
+                    if let Some(buf) = overlap.as_deref_mut() {
+                        self.poll_completions(tick, tasks, gs, buf, stats, true);
+                    }
                     continue;
                 }
                 let want = if drained_here && k >= cut {
@@ -898,8 +963,11 @@ impl ElasticCoordinator {
                         *c += 1;
                     }
                 }
-                assigned.insert(tasks[i].tag(), dest);
-                dispatch_at.insert(tasks[i].tag(), Instant::now());
+                gs.assigned.insert(tasks[i].tag(), dest);
+                gs.dispatch_at.insert(tasks[i].tag(), Instant::now());
+                if let Some(buf) = overlap.as_deref_mut() {
+                    self.poll_completions(tick, tasks, gs, buf, stats, true);
+                }
             }
         }
         // Victims without wave tasks still learn their fate.
@@ -942,11 +1010,15 @@ impl ElasticCoordinator {
         }
         stats.server_redispatched = vec![0; self.n_servers];
 
-        let mut assigned: BTreeMap<u64, usize> = BTreeMap::new();
-        let mut dispatch_at: BTreeMap<u64, Instant> = BTreeMap::new();
+        let mut gs = GatherState::new(tasks);
         let all: Vec<usize> = (0..tasks.len()).collect();
         let stamp = self.pool.stamp(tick, Wave::Ping);
         stats.wave_epochs[Wave::Ping.index()] = stamp.epoch;
+        self.fabric.set_wave_stamp(Wave::Ping.index(), stamp.epoch);
+        // The wave is begun *before* dispatch so the pipelined sends can
+        // fold fast completions straight into the gather state.
+        let mut buf = PingPongBuffer::new();
+        buf.begin_wave(Wave::Ping, stamp.epoch, tasks.iter().map(|t| t.tag()));
         let t_dispatch = Instant::now();
         self.dispatch_wave(
             tick,
@@ -954,16 +1026,14 @@ impl ElasticCoordinator {
             &planned,
             &all,
             &faults,
-            &mut assigned,
-            &mut dispatch_at,
+            &mut gs,
             &mut live_bytes,
             &mut stats,
+            Some(&mut buf),
         )?;
         if let Some(obs) = &self.obs {
             obs.phase_seconds(tick, Phase::Dispatch, t_dispatch.elapsed().as_secs_f64());
         }
-        let mut buf = PingPongBuffer::new();
-        buf.begin_wave(Wave::Ping, stamp.epoch, tasks.iter().map(|t| t.tag()));
         for &k in &faults.kills {
             self.pool.kill(k);
             self.health.mark_dead(k);
@@ -979,15 +1049,8 @@ impl ElasticCoordinator {
             self.send_ctrl(o, CTRL_OOM_CLEAR, vec![]);
         }
 
-        let outputs = self.gather(
-            tick,
-            tasks,
-            &mut assigned,
-            &mut dispatch_at,
-            &mut buf,
-            &mut live_bytes,
-            &mut stats,
-        )?;
+        self.gather(tick, tasks, &mut gs, &mut buf, &mut live_bytes, &mut stats)?;
+        let outputs = std::mem::take(&mut gs.outputs);
         debug_assert!(buf.drained(Wave::Ping), "gather returned with tags in flight");
 
         // Drains complete once the tick is fully gathered.
@@ -1031,6 +1094,29 @@ impl ElasticCoordinator {
         tasks: &[ElasticTask],
         fault: &FaultPlan,
     ) -> Result<Vec<TaskOutput>> {
+        let mut no_faults = Vec::new;
+        self.run_pp_tick_with_boundary(tick, tasks, fault, &mut no_faults)
+    }
+
+    /// [`run_pp_tick`] with a caller hook fired at the ping→pong wave
+    /// boundary — while the ping wave is genuinely in flight, before
+    /// any fault becomes membership fact.
+    ///
+    /// This is how the networked serve loop lands a *mid-wave* SIGKILL:
+    /// the hook kills real worker processes and returns the ranks whose
+    /// connections it observed drop (EOF evidence), which this tick
+    /// then applies exactly like an in-band kill — before the pong
+    /// stamp, so the ping stamp goes stale, only the ping wave's
+    /// in-flight tasks re-dispatch, and the pong wave re-plans around
+    /// the victim pre-dispatch. Ranks without EOF evidence yet are
+    /// still caught by the send-failover and gather-deadline paths.
+    pub fn run_pp_tick_with_boundary(
+        &mut self,
+        tick: usize,
+        tasks: &[ElasticTask],
+        fault: &FaultPlan,
+        boundary: &mut dyn FnMut() -> Vec<usize>,
+    ) -> Result<Vec<TaskOutput>> {
         let t_start = Instant::now();
         if let Some(obs) = &self.obs {
             obs.tick_begin(tick);
@@ -1050,14 +1136,21 @@ impl ElasticCoordinator {
         // Two near-equal-weight nano-batch waves.
         let (ping_idx, pong_idx) =
             split_waves(tasks, |t| (t.tensors.q_len * t.tensors.kv_len) as f64);
-        let mut assigned: BTreeMap<u64, usize> = BTreeMap::new();
-        let mut dispatch_at: BTreeMap<u64, Instant> = BTreeMap::new();
+        let mut gs = GatherState::new(tasks);
         let mut buf = PingPongBuffer::new();
 
         // Wave 0 (ping): stamped with the pre-fault membership epoch;
-        // faults bite mid-dispatch.
+        // faults bite mid-dispatch. The wave is begun before its sends
+        // so the pipelined dispatch can fold fast completions into the
+        // gather state as they land.
         let ping_stamp = self.pool.stamp(tick, Wave::Ping);
         stats.wave_epochs[Wave::Ping.index()] = ping_stamp.epoch;
+        self.fabric.set_wave_stamp(Wave::Ping.index(), ping_stamp.epoch);
+        buf.begin_wave(
+            Wave::Ping,
+            ping_stamp.epoch,
+            ping_idx.iter().map(|&i| tasks[i].tag()),
+        );
         let t_ping = Instant::now();
         self.dispatch_wave(
             tick,
@@ -1065,19 +1158,27 @@ impl ElasticCoordinator {
             &planned,
             &ping_idx,
             &faults,
-            &mut assigned,
-            &mut dispatch_at,
+            &mut gs,
             &mut live_bytes,
             &mut stats,
+            Some(&mut buf),
         )?;
         if let Some(obs) = &self.obs {
             obs.phase_seconds(tick, Phase::Dispatch, t_ping.elapsed().as_secs_f64());
         }
-        buf.begin_wave(
-            Wave::Ping,
-            ping_stamp.epoch,
-            ping_idx.iter().map(|&i| tasks[i].tag()),
-        );
+
+        // Wave boundary: the ping wave is in flight. Process-level
+        // faults land *here* on the networked path — the hook SIGKILLs
+        // and reports the ranks whose connections dropped, and that
+        // EOF evidence becomes membership fact below exactly like an
+        // in-band kill.
+        for rank in boundary() {
+            if rank < self.n_servers && self.pool.is_schedulable(rank) {
+                self.pool.kill(rank);
+                self.health.mark_dead(rank);
+                stats.mid_tick_disconnects += 1;
+            }
+        }
 
         // An OOM victim's eviction window closes with the ping wave: the
         // clear is queued behind the dropped tail, so the pong wave —
@@ -1101,9 +1202,17 @@ impl ElasticCoordinator {
             "a mid-tick kill must invalidate the ping wave's stamp"
         );
         // Wave 1 (pong): a fresh stamp — departed targets are remapped
-        // pre-dispatch, nothing of this wave is ever lost.
+        // pre-dispatch, nothing of this wave is ever lost. Its sends
+        // overlap the ping wave's compute: the pipelined dispatch
+        // gathers ping completions between pong frames.
         let pong_stamp = self.pool.stamp(tick, Wave::Pong);
         stats.wave_epochs[Wave::Pong.index()] = pong_stamp.epoch;
+        self.fabric.set_wave_stamp(Wave::Pong.index(), pong_stamp.epoch);
+        buf.begin_wave(
+            Wave::Pong,
+            pong_stamp.epoch,
+            pong_idx.iter().map(|&i| tasks[i].tag()),
+        );
         let t_pong = Instant::now();
         self.dispatch_wave(
             tick,
@@ -1111,29 +1220,17 @@ impl ElasticCoordinator {
             &planned,
             &pong_idx,
             &MidTickFaults::default(),
-            &mut assigned,
-            &mut dispatch_at,
+            &mut gs,
             &mut live_bytes,
             &mut stats,
+            Some(&mut buf),
         )?;
         if let Some(obs) = &self.obs {
             obs.phase_seconds(tick, Phase::Dispatch, t_pong.elapsed().as_secs_f64());
         }
-        buf.begin_wave(
-            Wave::Pong,
-            pong_stamp.epoch,
-            pong_idx.iter().map(|&i| tasks[i].tag()),
-        );
 
-        let outputs = self.gather(
-            tick,
-            tasks,
-            &mut assigned,
-            &mut dispatch_at,
-            &mut buf,
-            &mut live_bytes,
-            &mut stats,
-        )?;
+        self.gather(tick, tasks, &mut gs, &mut buf, &mut live_bytes, &mut stats)?;
+        let outputs = std::mem::take(&mut gs.outputs);
         debug_assert!(
             buf.drained(Wave::Ping) && buf.drained(Wave::Pong),
             "gather returned with a wave still in flight"
@@ -1155,29 +1252,84 @@ impl ElasticCoordinator {
         Ok(outputs.into_values().collect())
     }
 
+    /// Drain every response available *right now*, without blocking,
+    /// folding kept outputs and health/latency observations into `gs`.
+    /// `overlap` marks completions collected while a wave was still
+    /// being dispatched ([`TickStats::overlap_gathered`]). Returns
+    /// whether any expected completion landed.
+    fn poll_completions(
+        &mut self,
+        tick: usize,
+        tasks: &[ElasticTask],
+        gs: &mut GatherState,
+        buf: &mut PingPongBuffer,
+        stats: &mut TickStats,
+        overlap: bool,
+    ) -> bool {
+        let pairs_of =
+            |t: &ElasticTask| (t.tensors.q_len as f64) * (t.tensors.kv_len as f64);
+        let mut progress = false;
+        for home in 0..self.n_servers {
+            while let Some(msg) = self.fabric.try_recv(self.n_servers + home) {
+                if header_usize(msg.payload[0]) != tick {
+                    stats.stale_dropped += 1;
+                    continue;
+                }
+                if !gs.expected.contains_key(&msg.tag) {
+                    stats.stale_dropped += 1;
+                    continue;
+                }
+                if gs.outputs.contains_key(&msg.tag) {
+                    stats.duplicates_suppressed += 1;
+                    continue;
+                }
+                let (doc, q_start) = unpack_tag(msg.tag);
+                let latency = gs
+                    .dispatch_at
+                    .get(&msg.tag)
+                    .map(|t0| t0.elapsed().as_secs_f64())
+                    .unwrap_or(0.0);
+                gs.completions.push(latency);
+                let pairs = pairs_of(&tasks[gs.expected[&msg.tag]]);
+                gs.completed_pairs.push(pairs);
+                // Health sees *size-normalized* latency (seconds per
+                // causal pair), so a server handed the tick's heavy
+                // CA-tasks is not mistaken for a gray straggler.
+                self.health.observe(msg.src, latency / pairs.max(1.0));
+                self.pool.clear_strikes(msg.src);
+                if let Some(obs) = &self.obs {
+                    let wave = buf.wave_of(msg.tag).map(|w| w.index()).unwrap_or(0);
+                    obs.task_completed(tick, wave, msg.src, msg.tag, latency);
+                }
+                buf.complete(msg.tag);
+                gs.outputs.insert(
+                    msg.tag,
+                    TaskOutput { doc, q_start: q_start as usize, o: msg.payload[1..].to_vec() },
+                );
+                if overlap {
+                    stats.overlap_gathered += 1;
+                }
+                progress = true;
+            }
+        }
+        progress
+    }
+
     /// Gather a tick's outputs with deadline-based speculation,
     /// first-response-wins dedup, and per-wave re-dispatch accounting.
     /// Speculative re-dispatch targets the healthy server with the most
-    /// arena headroom (`live_bytes`), not round-robin.
-    #[allow(clippy::too_many_arguments)]
+    /// arena headroom (`live_bytes`), not round-robin. Outputs land in
+    /// `gs.outputs` (some may already be there from overlap polling
+    /// during dispatch).
     fn gather(
         &mut self,
         tick: usize,
         tasks: &[ElasticTask],
-        assigned: &mut BTreeMap<u64, usize>,
-        dispatch_at: &mut BTreeMap<u64, Instant>,
+        gs: &mut GatherState,
         buf: &mut PingPongBuffer,
         live_bytes: &mut [f64],
         stats: &mut TickStats,
-    ) -> Result<BTreeMap<u64, TaskOutput>> {
-        // Expected set (tags are unique within a tick: a valid plan
-        // covers disjoint (doc, q_start) ranges).
-        let mut expected: BTreeMap<u64, usize> = BTreeMap::new();
-        for (i, t) in tasks.iter().enumerate() {
-            let prev = expected.insert(t.tag(), i);
-            assert!(prev.is_none(), "duplicate task tag within a tick");
-        }
-
+    ) -> Result<()> {
         // Deadline-based speculation. The deadline for each
         // outstanding task is scaled by its causal-pair count relative to
         // the median *completed* task, so one legitimately heavy task
@@ -1185,59 +1337,13 @@ impl ElasticCoordinator {
         // healthy server is not struck for doing large work.
         let pairs_of =
             |t: &ElasticTask| (t.tensors.q_len as f64) * (t.tensors.kv_len as f64);
-        let mut outputs: BTreeMap<u64, TaskOutput> = BTreeMap::new();
-        let mut completions: Vec<f64> = Vec::new();
-        let mut completed_pairs: Vec<f64> = Vec::new();
         let mut last_event = Instant::now();
         let mut rounds = 0usize;
         // The buffer is the authority on what is still in flight per
         // wave; it drains exactly when every expected tag has a kept
         // output.
         while buf.outstanding() > 0 {
-            let mut progress = false;
-            for home in 0..self.n_servers {
-                while let Some(msg) = self.fabric.try_recv(self.n_servers + home) {
-                    if header_usize(msg.payload[0]) != tick {
-                        stats.stale_dropped += 1;
-                        continue;
-                    }
-                    if !expected.contains_key(&msg.tag) {
-                        stats.stale_dropped += 1;
-                        continue;
-                    }
-                    if outputs.contains_key(&msg.tag) {
-                        stats.duplicates_suppressed += 1;
-                        continue;
-                    }
-                    let (doc, q_start) = unpack_tag(msg.tag);
-                    let latency = dispatch_at
-                        .get(&msg.tag)
-                        .map(|t0| t0.elapsed().as_secs_f64())
-                        .unwrap_or(0.0);
-                    completions.push(latency);
-                    let pairs = pairs_of(&tasks[expected[&msg.tag]]);
-                    completed_pairs.push(pairs);
-                    // Health sees *size-normalized* latency (seconds per
-                    // causal pair), so a server handed the tick's heavy
-                    // CA-tasks is not mistaken for a gray straggler.
-                    self.health.observe(msg.src, latency / pairs.max(1.0));
-                    self.pool.clear_strikes(msg.src);
-                    if let Some(obs) = &self.obs {
-                        let wave = buf.wave_of(msg.tag).map(|w| w.index()).unwrap_or(0);
-                        obs.task_completed(tick, wave, msg.src, msg.tag, latency);
-                    }
-                    buf.complete(msg.tag);
-                    outputs.insert(
-                        msg.tag,
-                        TaskOutput {
-                            doc,
-                            q_start: q_start as usize,
-                            o: msg.payload[1..].to_vec(),
-                        },
-                    );
-                    progress = true;
-                }
-            }
+            let progress = self.poll_completions(tick, tasks, gs, buf, stats, false);
             if progress {
                 last_event = Instant::now();
                 continue;
@@ -1246,7 +1352,7 @@ impl ElasticCoordinator {
                 break;
             }
             // Quiet: is it time to suspect the laggards?
-            let med_latency = crate::util::stats::percentile(&completions, 50.0);
+            let med_latency = crate::util::stats::percentile(&gs.completions, 50.0);
             let base = if med_latency > 0.0 {
                 self.cfg
                     .grace
@@ -1261,13 +1367,13 @@ impl ElasticCoordinator {
             }
             // Group overdue tags by the server currently holding them,
             // each judged against its own size-scaled deadline.
-            let med_pairs = crate::util::stats::percentile(&completed_pairs, 50.0);
+            let med_pairs = crate::util::stats::percentile(&gs.completed_pairs, 50.0);
             let mut by_srv: BTreeMap<usize, Vec<u64>> = BTreeMap::new();
-            for (&tag, &idx) in &expected {
-                if outputs.contains_key(&tag) {
+            for (&tag, &idx) in &gs.expected {
+                if gs.outputs.contains_key(&tag) {
                     continue;
                 }
-                let holder = assigned[&tag];
+                let holder = gs.assigned[&tag];
                 let mut scale = if med_pairs > 0.0 {
                     (pairs_of(&tasks[idx]) / med_pairs).max(1.0)
                 } else {
@@ -1300,8 +1406,8 @@ impl ElasticCoordinator {
             anyhow::ensure!(
                 rounds <= self.cfg.max_redispatch_rounds,
                 "re-dispatch rounds exhausted with {}/{} outputs",
-                outputs.len(),
-                expected.len()
+                gs.outputs.len(),
+                gs.expected.len()
             );
             for &srv in by_srv.keys() {
                 let strikes = self.pool.strike(srv);
@@ -1339,11 +1445,11 @@ impl ElasticCoordinator {
                         &healthy,
                         live_bytes,
                         0.0,
-                        task_wire_bytes(&tasks[expected[&tag]]),
+                        task_wire_bytes(&tasks[gs.expected[&tag]]),
                     );
                     let target = self.send_task_failover(
                         tick,
-                        &tasks[expected[&tag]],
+                        &tasks[gs.expected[&tag]],
                         want,
                         &healthy,
                         live_bytes,
@@ -1354,8 +1460,8 @@ impl ElasticCoordinator {
                             *c += 1;
                         }
                     }
-                    assigned.insert(tag, target);
-                    dispatch_at.insert(tag, Instant::now());
+                    gs.assigned.insert(tag, target);
+                    gs.dispatch_at.insert(tag, Instant::now());
                     stats.redispatched += 1;
                     if let Some(obs) = &self.obs {
                         let wave = buf.wave_of(tag).map(|w| w.index()).unwrap_or(0);
@@ -1368,7 +1474,7 @@ impl ElasticCoordinator {
             }
             last_event = Instant::now();
         }
-        Ok(outputs)
+        Ok(())
     }
 
     /// Stop all server threads and collect their results.

@@ -7,8 +7,9 @@
 //! either way.
 
 use std::fmt;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 /// A tagged message: raw f32 payload plus an opaque task tag.
 #[derive(Debug, Clone, PartialEq)]
@@ -40,6 +41,19 @@ impl fmt::Display for SendError {
 
 impl std::error::Error for SendError {}
 
+/// Message synthesized by [`Transport::recv`] when the fabric is torn
+/// down while a receive is blocked: an orderly coordinator shutdown
+/// (`CTRL_SHUTDOWN` from `COORD_SRC`) rather than a panic, so a
+/// blocked server loop or gather exits through its normal shutdown
+/// path and in-flight work is recovered by victim re-dispatch.
+pub fn shutdown_sentinel() -> Message {
+    Message {
+        src: crate::elastic::failover::COORD_SRC,
+        tag: crate::elastic::failover::CTRL_SHUTDOWN,
+        payload: vec![],
+    }
+}
+
 /// Point-to-point transport between `n` ranks.
 pub trait Transport: Send + Sync {
     fn n_ranks(&self) -> usize;
@@ -47,10 +61,33 @@ pub trait Transport: Send + Sync {
     /// destination is unreachable (dropped receiver / dead connection);
     /// callers on the dispatch path must fail over, not panic.
     fn send(&self, dst: usize, msg: Message) -> Result<(), SendError>;
-    /// Receive the next message addressed to `rank` (blocking).
+    /// Receive the next message addressed to `rank` (blocking). If the
+    /// fabric is torn down mid-receive, implementations return
+    /// [`shutdown_sentinel`] instead of panicking.
     fn recv(&self, rank: usize) -> Message;
     /// Try to receive without blocking.
     fn try_recv(&self, rank: usize) -> Option<Message>;
+    /// Receive with a deadline: `None` if nothing arrived within
+    /// `timeout`. The default polls [`Transport::try_recv`]; fabrics
+    /// with native timed receives override it.
+    fn try_recv_for(&self, rank: usize, timeout: Duration) -> Option<Message> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(m) = self.try_recv(rank) {
+                return Some(m);
+            }
+            if Instant::now() >= deadline {
+                return None;
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    /// Stamp subsequent outbound data-plane sends with a ping-pong
+    /// wave index and pool membership epoch (the wire form of
+    /// `WaveStamp`). In-process fabrics need no wire stamp — the
+    /// default is a no-op; the TCP fabric carries it in the frame
+    /// header so mid-wave faults are scoped per wave across processes.
+    fn set_wave_stamp(&self, _wave: usize, _epoch: u64) {}
 }
 
 /// In-process channel fabric.
@@ -88,15 +125,25 @@ impl Transport for ChannelTransport {
     }
 
     fn recv(&self, rank: usize) -> Message {
-        self.receivers[rank]
-            .lock()
-            .unwrap()
-            .recv()
-            .expect("all senders dropped")
+        match self.receivers[rank].lock().unwrap().recv() {
+            Ok(m) => m,
+            // Every sender gone mid-receive = the fabric is being torn
+            // down around a blocked receiver: exit via the shutdown
+            // path, don't abort the process.
+            Err(_) => shutdown_sentinel(),
+        }
     }
 
     fn try_recv(&self, rank: usize) -> Option<Message> {
         self.receivers[rank].lock().unwrap().try_recv().ok()
+    }
+
+    fn try_recv_for(&self, rank: usize, timeout: Duration) -> Option<Message> {
+        match self.receivers[rank].lock().unwrap().recv_timeout(timeout) {
+            Ok(m) => Some(m),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => Some(shutdown_sentinel()),
+        }
     }
 }
 

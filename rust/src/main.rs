@@ -67,7 +67,7 @@ fn specs() -> Vec<FlagSpec> {
         FlagSpec::value("tp", "tensor-parallel degree", Some("8")),
         FlagSpec::optional_value(
             "pp",
-            "pipeline-parallel degree; bare --pp is elastic-only shorthand for PP mode (degree 2)",
+            "pipeline-parallel degree; bare --pp selects ping-pong PP ticks (elastic: degree 2; serve/soak: overlapped wire waves)",
             "1",
         ),
         FlagSpec::value("cp", "context-parallel degree (cp strategy)", Some("4")),
@@ -1083,6 +1083,7 @@ fn cmd_net(args: &Args, soak: bool) -> anyhow::Result<()> {
             .ok_or_else(|| anyhow::anyhow!("unknown data distribution"))?,
         max_doc: args.get_usize("max-doc-len", 131_072)?,
         fault,
+        pp: args.get_bool("pp"),
         stats_out: args.get("stats-out").map(std::path::PathBuf::from),
         trace_out: args.get("trace-out").map(std::path::PathBuf::from),
         bench_out: match args.get("bench-out") {
@@ -1104,8 +1105,9 @@ fn cmd_net(args: &Args, soak: bool) -> anyhow::Result<()> {
     }
     let mut t = Table::new(
         &format!(
-            "net {}: {} workers ({}), {} ticks, fault plan [{}] — all outputs bit-exact over TCP",
+            "net {}{}: {} workers ({}), {} ticks, fault plan [{}] — all outputs bit-exact over TCP",
             if soak { "soak" } else { "serve" },
+            if cfg.pp { " --pp" } else { "" },
             report.workers,
             if cfg.spawn { "spawned" } else { "connected" },
             report.per_tick.len(),
@@ -1113,7 +1115,7 @@ fn cmd_net(args: &Args, soak: bool) -> anyhow::Result<()> {
         ),
         &[
             "tick", "alive", "tasks", "redisp", "sendfail", "remap", "conn-kill", "sigkill",
-            "rejoin", "bytes", "makespan",
+            "rejoin", "bytes", "ovl-gather", "ovl-eff", "makespan",
         ],
     );
     for r in &report.per_tick {
@@ -1128,17 +1130,21 @@ fn cmd_net(args: &Args, soak: bool) -> anyhow::Result<()> {
             r.process_kills.to_string(),
             r.rejoins.to_string(),
             bytes(r.bytes_dispatched),
+            r.overlap_gathered.to_string(),
+            format!("{:.0}%", r.overlap_efficiency * 100.0),
             secs(r.elapsed),
         ]);
     }
     t.print();
     println!(
-        "re-dispatched {} | send failovers {} | SIGKILLs {} | connection kills {} | rejoins {} | outputs verified against the monolithic oracle",
+        "re-dispatched {} | send failovers {} | SIGKILLs {} | connection kills {} | rejoins {} | overlap-gathered {} | overlap efficiency {:.0}% | outputs verified against the monolithic oracle",
         report.total_redispatched,
         report.total_send_failovers,
         report.total_process_kills,
         report.total_connection_kills,
         report.total_rejoins,
+        report.total_overlap_gathered,
+        report.overlap_efficiency * 100.0,
     );
     if let Some(p) = &cfg.bench_out {
         println!("wrote {}", p.display());

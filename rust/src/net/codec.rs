@@ -17,8 +17,20 @@
 //! | 5 | 4 | `dst` rank (u32) |
 //! | 9 | 8 | `src` rank (u64; `usize::MAX` = coordinator) |
 //! | 17 | 8 | `tag` (u64: the `(doc, q_start)` / `CTRL_*` tag space) |
-//! | 25 | 4 | payload element count (u32, **count of f32 words**, not bytes) |
-//! | 29 | 4·n | payload: each f32 as its u32 bit pattern, LE |
+//! | 25 | 1 | `wave` (u8: ping-pong wave index, 0 = ping, 1 = pong) |
+//! | 26 | 8 | `epoch` (u64: pool membership epoch the wave was stamped under; 0 = unstamped flat tick) |
+//! | 34 | 4 | payload element count (u32, **count of f32 words**, not bytes) |
+//! | 38 | 4·n | payload: each f32 as its u32 bit pattern, LE |
+//!
+//! The `wave`/`epoch` pair is the wire form of the in-process
+//! [`WaveStamp`](crate::elastic::pool::WaveStamp): the coordinator
+//! stamps every data frame of a `--pp` wave with the membership epoch
+//! the wave was dispatched under, workers echo the request's stamp
+//! onto the matching response, and the coordinator counts responses
+//! whose epoch predates the current stamp — so a mid-wave SIGKILL is
+//! scoped to exactly the in-flight wave, over sockets just as in
+//! process. `0` means the frame predates wave scoping (flat ticks,
+//! control traffic) and is never treated as stale.
 //!
 //! The element count is an integer field, never an f32 — counts above
 //! 2^24 are exact by construction. Frames claiming more than
@@ -34,8 +46,9 @@ use crate::exchange::transport::Message;
 /// Stream magic: every frame starts with these four bytes.
 pub const MAGIC: u32 = 0x4443_4131;
 
-/// Fixed header size in bytes (everything before the payload).
-pub const HEADER_BYTES: usize = 4 + 1 + 4 + 8 + 8 + 4;
+/// Fixed header size in bytes (everything before the payload):
+/// magic, kind, dst, src, tag, wave, epoch, element count.
+pub const HEADER_BYTES: usize = 4 + 1 + 4 + 8 + 8 + 1 + 8 + 4;
 
 /// Hard cap on payload element count (2^28 f32 words = 1 GiB): frames
 /// beyond this are rejected as corrupt rather than allocated.
@@ -119,17 +132,26 @@ pub struct Frame {
     pub dst: u32,
     pub src: u64,
     pub tag: u64,
+    /// Ping-pong wave index this frame belongs to (0 = ping, 1 = pong;
+    /// only meaningful when `epoch != 0`).
+    pub wave: u8,
+    /// Pool membership epoch the frame's wave was stamped under;
+    /// 0 = unstamped (flat tick or control traffic).
+    pub epoch: u64,
     pub payload: Vec<f32>,
 }
 
 impl Frame {
-    /// Wrap a data-plane message bound for rank `dst`.
+    /// Wrap a data-plane message bound for rank `dst` (unstamped; the
+    /// transport applies the current wave stamp on the way out).
     pub fn msg(dst: usize, m: Message) -> Frame {
         Frame {
             kind: FrameKind::Msg,
             dst: dst as u32,
             src: m.src as u64,
             tag: m.tag,
+            wave: 0,
+            epoch: 0,
             payload: m.payload,
         }
     }
@@ -137,7 +159,7 @@ impl Frame {
     /// A control frame from rank `src` (pass `usize::MAX` for the
     /// coordinator).
     pub fn control(kind: FrameKind, src: usize, payload: Vec<f32>) -> Frame {
-        Frame { kind, dst: 0, src: src as u64, tag: 0, payload }
+        Frame { kind, dst: 0, src: src as u64, tag: 0, wave: 0, epoch: 0, payload }
     }
 
     /// Unwrap back into the transport message (data frames).
@@ -167,6 +189,8 @@ impl Frame {
         out.extend_from_slice(&self.dst.to_le_bytes());
         out.extend_from_slice(&self.src.to_le_bytes());
         out.extend_from_slice(&self.tag.to_le_bytes());
+        out.push(self.wave);
+        out.extend_from_slice(&self.epoch.to_le_bytes());
         out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
         for &w in &self.payload {
             // Bit pattern, not value: NaNs, signed zeros, and bit-cast
@@ -234,7 +258,9 @@ impl FrameDecoder {
         let dst = u32::from_le_bytes(b[5..9].try_into().unwrap());
         let src = u64::from_le_bytes(b[9..17].try_into().unwrap());
         let tag = u64::from_le_bytes(b[17..25].try_into().unwrap());
-        let len = u32::from_le_bytes(b[25..29].try_into().unwrap());
+        let wave = b[25];
+        let epoch = u64::from_le_bytes(b[26..34].try_into().unwrap());
+        let len = u32::from_le_bytes(b[34..38].try_into().unwrap());
         if len > MAX_PAYLOAD_ELEMS {
             return Err(CodecError(format!(
                 "oversized frame: header claims {len} payload elements, cap is {MAX_PAYLOAD_ELEMS}"
@@ -253,7 +279,7 @@ impl FrameDecoder {
             off += 4;
         }
         self.read += need;
-        Ok(Some(Frame { kind, dst, src, tag, payload }))
+        Ok(Some(Frame { kind, dst, src, tag, wave, epoch, payload }))
     }
 
     /// Call at stream EOF: leftover bytes mean the peer died mid-write.
@@ -279,6 +305,8 @@ mod tests {
             dst: 3,
             src: 1,
             tag: 0xDEAD_BEEF_CAFE,
+            wave: 1,
+            epoch: 0x0102_0304_0506,
             payload: vec![1.0, -2.5, 0.0, f32::from_bits(0x0123_4567)],
         }
     }
@@ -363,11 +391,29 @@ mod tests {
         hdr.extend_from_slice(&0u32.to_le_bytes());
         hdr.extend_from_slice(&0u64.to_le_bytes());
         hdr.extend_from_slice(&0u64.to_le_bytes());
+        hdr.push(0); // wave
+        hdr.extend_from_slice(&0u64.to_le_bytes()); // epoch
         hdr.extend_from_slice(&(MAX_PAYLOAD_ELEMS + 1).to_le_bytes());
         let mut dec = FrameDecoder::new();
         dec.push(&hdr);
         let err = dec.next_frame().unwrap_err();
         assert!(err.to_string().contains("oversized"), "{err}");
+    }
+
+    #[test]
+    fn wave_stamp_roundtrips_and_defaults_to_unstamped() {
+        // Constructors produce unstamped frames...
+        let f = Frame::msg(2, Message { src: 0, tag: 9, payload: vec![1.0] });
+        assert_eq!((f.wave, f.epoch), (0, 0));
+        // ...and a stamped frame survives the wire bit-exact.
+        let mut g = f;
+        g.wave = 1;
+        g.epoch = u64::MAX >> 8;
+        let mut dec = FrameDecoder::new();
+        dec.push(&g.encode().unwrap());
+        let h = dec.next_frame().unwrap().unwrap();
+        assert_eq!(h.wave, 1);
+        assert_eq!(h.epoch, u64::MAX >> 8);
     }
 
     #[test]

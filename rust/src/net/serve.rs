@@ -23,8 +23,9 @@
 //! crash). `slow:`/`drain:`/`oom:` events stay in-band through the
 //! elastic tick path, identical to the threaded runtime.
 
+use std::collections::BTreeMap;
 use std::io::Write;
-use std::net::TcpStream;
+use std::net::{TcpStream, ToSocketAddrs};
 use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
 use std::sync::Arc;
@@ -36,11 +37,11 @@ use crate::config::run::DataDist;
 use crate::data::distributions::sampler_for;
 use crate::elastic::{
     ElasticCfg, ElasticCoordinator, ElasticTask, FaultEvent, FaultPlan, HealthCfg,
-    HealthMonitor, ReferenceCaCompute,
+    HealthMonitor, ReferenceCaCompute, ServerState,
 };
 use crate::elastic::failover::{COORD_SRC, CTRL_SHUTDOWN};
 use crate::exchange::transport::{Message, Transport};
-use crate::obs::{trace, Recorder};
+use crate::obs::{trace, Phase, Recorder};
 use crate::runtime::ca_exec::synthetic_task;
 use crate::server::header_usize;
 use crate::util::json::Json;
@@ -73,6 +74,11 @@ pub struct ServeCfg {
     /// Scripted faults: kills/rejoins run at the process level,
     /// slows/drains/ooms in-band.
     pub fault: FaultPlan,
+    /// Run each tick as two ping-pong nano-batch waves over the wire
+    /// (§4.3): pipelined sends overlap the gather, frames carry
+    /// wave-scoped epoch stamps, and scripted SIGKILLs land *mid-wave*
+    /// (at the ping→pong boundary) instead of at tick start.
+    pub pp: bool,
     /// Per-server per-tick JSONL stats sink.
     pub stats_out: Option<PathBuf>,
     /// Soak summary JSON (`BENCH_net.json`).
@@ -105,14 +111,41 @@ pub struct NetTickRecord {
     /// Ranks killed this tick from connection evidence (EOF without
     /// goodbye, stale heartbeats).
     pub connection_kills: usize,
-    /// Scripted SIGKILLs applied at this tick's start.
+    /// Scripted SIGKILLs applied this tick (`--pp`: at the ping→pong
+    /// wave boundary; flat ticks: at tick start).
     pub process_kills: usize,
-    /// Scripted respawn+reconnects applied at this tick's start.
+    /// Rejoins applied this tick: scripted respawn+reconnects, plus
+    /// wire re-HELLOs from dead `--connect` ranks whose daemons came
+    /// back.
     pub rejoins: usize,
     /// Total wire bytes dispatched (tensors, recovery included).
     pub bytes_dispatched: f64,
     /// Peak per-server dispatched bytes (arena-pressure proxy).
     pub peak_server_bytes: f64,
+    /// Membership epochs the (ping, pong) waves were stamped under.
+    /// Flat ticks use only the ping slot; a mid-wave kill shows as
+    /// `ping < pong`.
+    pub wave_epochs: [u64; 2],
+    /// Gather re-dispatches attributed to each wave.
+    pub wave_redispatched: [usize; 2],
+    /// Completions gathered while a wave was still being encoded and
+    /// shipped — the comm/compute overlap as a count.
+    pub overlap_gathered: usize,
+    /// Responses whose echoed wire epoch predated the current wave
+    /// stamp ([`TcpTransport::take_stale_epoch_frames`]).
+    pub stale_wave_frames: u64,
+    /// Connection drops turned into membership fact at the wave
+    /// boundary (mid-wave SIGKILL evidence).
+    pub mid_wave_kills: usize,
+    /// Worker-measured kernel seconds summed over this tick's tasks
+    /// (filled post-run from the recorder; 0 when no recorder ran).
+    pub compute_s: f64,
+    /// Server busy-window time not covered by compute — wire + queue
+    /// (filled post-run from the recorder; 0 when no recorder ran).
+    pub wire_wait_s: f64,
+    /// `compute / (compute + wire_wait)` — the measured Fig. 11
+    /// overlap efficiency for this tick (1.0 when nothing measured).
+    pub overlap_efficiency: f64,
     /// Wall-clock seconds from dispatch to full gather (makespan).
     pub elapsed: f64,
 }
@@ -131,6 +164,16 @@ impl NetTickRecord {
             ("rejoins", Json::Num(self.rejoins as f64)),
             ("bytes_dispatched", Json::Num(self.bytes_dispatched)),
             ("peak_server_bytes", Json::Num(self.peak_server_bytes)),
+            ("wave_epoch_ping", Json::Num(self.wave_epochs[0] as f64)),
+            ("wave_epoch_pong", Json::Num(self.wave_epochs[1] as f64)),
+            ("wave_redispatched_ping", Json::Num(self.wave_redispatched[0] as f64)),
+            ("wave_redispatched_pong", Json::Num(self.wave_redispatched[1] as f64)),
+            ("overlap_gathered", Json::Num(self.overlap_gathered as f64)),
+            ("stale_wave_frames", Json::Num(self.stale_wave_frames as f64)),
+            ("mid_wave_kills", Json::Num(self.mid_wave_kills as f64)),
+            ("compute_s", Json::Num(self.compute_s)),
+            ("wire_wait_s", Json::Num(self.wire_wait_s)),
+            ("overlap_efficiency", Json::Num(self.overlap_efficiency)),
             ("makespan_s", Json::Num(self.elapsed)),
         ])
     }
@@ -142,12 +185,22 @@ impl NetTickRecord {
 pub struct NetRunReport {
     pub workers: usize,
     pub seed: u64,
+    /// Whether the run executed ticks as ping-pong waves (`--pp`).
+    pub pp: bool,
     pub per_tick: Vec<NetTickRecord>,
     pub total_redispatched: usize,
     pub total_send_failovers: usize,
     pub total_connection_kills: usize,
     pub total_process_kills: usize,
     pub total_rejoins: usize,
+    /// Completions gathered while a wave was still being dispatched,
+    /// summed over the run.
+    pub total_overlap_gathered: usize,
+    /// Stale-epoch responses observed on the wire, summed over the run.
+    pub total_stale_wave_frames: u64,
+    /// Run-wide `Σcompute / Σ(compute + wire_wait)` (1.0 when no
+    /// recorder measured the split).
+    pub overlap_efficiency: f64,
 }
 
 impl NetRunReport {
@@ -157,12 +210,16 @@ impl NetRunReport {
             ("workers", Json::Num(self.workers as f64)),
             ("ticks", Json::Num(self.per_tick.len() as f64)),
             ("seed", Json::Num(self.seed as f64)),
+            ("pp", Json::Bool(self.pp)),
             ("bit_exact", Json::Bool(true)),
             ("total_redispatched", Json::Num(self.total_redispatched as f64)),
             ("total_send_failovers", Json::Num(self.total_send_failovers as f64)),
             ("total_connection_kills", Json::Num(self.total_connection_kills as f64)),
             ("total_process_kills", Json::Num(self.total_process_kills as f64)),
             ("total_rejoins", Json::Num(self.total_rejoins as f64)),
+            ("total_overlap_gathered", Json::Num(self.total_overlap_gathered as f64)),
+            ("total_stale_wave_frames", Json::Num(self.total_stale_wave_frames as f64)),
+            ("overlap_efficiency", Json::Num(self.overlap_efficiency)),
             ("per_tick", Json::Arr(self.per_tick.iter().map(|r| r.to_json()).collect())),
         ])
     }
@@ -342,6 +399,31 @@ impl Drop for WorkerProcs {
 // The serve loop.
 // ---------------------------------------------------------------------
 
+/// Attach an already-dialed `stream` to the fabric as rank `rank` and
+/// send the CONFIG handshake (the worker answers with HELLO).
+fn attach_and_config(
+    fabric: &Arc<TcpTransport>,
+    rank: usize,
+    n: usize,
+    stream: TcpStream,
+    hb_interval: Duration,
+) -> Result<()> {
+    TcpTransport::attach(fabric, rank, rank, stream, &[])?;
+    let (h, hkv, d) = NET_DIMS;
+    let cfg = WorkerConfig {
+        rank,
+        n_servers: n,
+        n_heads: h,
+        n_kv_heads: hkv,
+        head_dim: d,
+        hb_interval,
+    };
+    fabric
+        .send_frame(rank, &Frame::control(FrameKind::Config, usize::MAX, cfg.to_payload()))
+        .map_err(|e| anyhow::anyhow!("CONFIG to worker {rank}: {e}"))?;
+    Ok(())
+}
+
 /// Dial `addr` (with a short retry window), attach it to the fabric as
 /// rank `rank`, and send the CONFIG handshake.
 fn connect_and_config(
@@ -364,20 +446,29 @@ fn connect_and_config(
             }
         }
     };
-    TcpTransport::attach(fabric, rank, rank, stream, &[])?;
-    let (h, hkv, d) = NET_DIMS;
-    let cfg = WorkerConfig {
-        rank,
-        n_servers: n,
-        n_heads: h,
-        n_kv_heads: hkv,
-        head_dim: d,
-        hb_interval,
+    attach_and_config(fabric, rank, n, stream, hb_interval)
+}
+
+/// One short, non-retrying re-dial of a dead `--connect` rank's daemon
+/// (the reconnect half of the over-the-wire `rejoin:` lifecycle — a
+/// restarted daemon listens again, and only the coordinator can dial).
+/// Returns whether a fresh connection was attached; the daemon's HELLO
+/// then restores the rank through the event loop. A daemon that is
+/// simply gone costs one bounded `connect_timeout` per tick, nothing
+/// more.
+fn try_redial(
+    fabric: &Arc<TcpTransport>,
+    rank: usize,
+    n: usize,
+    addr: &str,
+    hb_interval: Duration,
+) -> bool {
+    let Ok(mut addrs) = addr.to_socket_addrs() else { return false };
+    let Some(sa) = addrs.next() else { return false };
+    let Ok(stream) = TcpStream::connect_timeout(&sa, Duration::from_millis(100)) else {
+        return false;
     };
-    fabric
-        .send_frame(rank, &Frame::control(FrameKind::Config, usize::MAX, cfg.to_payload()))
-        .map_err(|e| anyhow::anyhow!("CONFIG to worker {rank}: {e}"))?;
-    Ok(())
+    attach_and_config(fabric, rank, n, stream, hb_interval).is_ok()
 }
 
 /// Append new transport events to `pending`.
@@ -539,7 +630,11 @@ pub fn run_serve(cfg: &ServeCfg) -> Result<NetRunReport> {
 
     let dyn_fabric: Arc<dyn Transport> = Arc::clone(&fabric) as Arc<dyn Transport>;
     let mut co = ElasticCoordinator::over_transport(dyn_fabric, n, ElasticCfg::default());
-    let recorder: Option<Arc<Recorder>> = cfg.trace_out.as_ref().map(|_| Recorder::new_wall());
+    // `--pp` always arms the recorder: the per-tick compute/wire-wait
+    // split (the measured Fig. 11 number) is part of the bench output
+    // even when no trace file is requested.
+    let recorder: Option<Arc<Recorder>> =
+        (cfg.trace_out.is_some() || cfg.pp).then(Recorder::new_wall);
     if let Some(r) = &recorder {
         co.set_recorder(Arc::clone(r));
     }
@@ -570,14 +665,22 @@ pub fn run_serve(cfg: &ServeCfg) -> Result<NetRunReport> {
     let mut drain_pending: Vec<usize> = Vec::new();
 
     for tick in 0..cfg.ticks {
-        // 1. Scripted process-level faults.
+        // 1. Scripted process-level faults. Under `--pp`, kills are
+        // deferred to the ping→pong wave boundary (the SIGKILL must
+        // land while the ping wave is genuinely in flight); rejoins
+        // always run at tick start.
         let mut process_kills = 0usize;
         let mut rejoins = 0usize;
+        let mut deferred_kills: Vec<usize> = Vec::new();
         for ev in process_plan.events_at(tick) {
             match ev {
                 FaultEvent::Kill { server, .. } if server < n => {
-                    procs.kill(server, &fabric);
-                    process_kills += 1;
+                    if cfg.pp {
+                        deferred_kills.push(server);
+                    } else {
+                        procs.kill(server, &fabric);
+                        process_kills += 1;
+                    }
                 }
                 FaultEvent::Rejoin { server, .. } if server < n => {
                     procs.respawn(server)?;
@@ -592,9 +695,23 @@ pub fn run_serve(cfg: &ServeCfg) -> Result<NetRunReport> {
                     co.health.reset(server);
                     hb_mon.reset(server);
                     last_beat[server] = None;
+                    // A restored rank must not carry a stale honored
+                    // drain: it would be shut down again at tick end.
+                    drain_pending.retain(|&r| r != server);
                     rejoins += 1;
                 }
                 _ => {}
+            }
+        }
+        // Worker-dialed reconnect for `--connect` pools: a dead rank
+        // whose daemon came back up gets one short re-dial per tick;
+        // its re-HELLO below maps to restore + health reset (the same
+        // `rejoin:` lifecycle `--spawn` pools get via respawn).
+        if !cfg.spawn {
+            for rank in 0..n {
+                if co.pool.state(rank) == ServerState::Dead && !fabric.is_connected(rank) {
+                    try_redial(&fabric, rank, n, procs.addr(rank), cfg.hb_interval);
+                }
             }
         }
 
@@ -625,7 +742,22 @@ pub fn run_serve(cfg: &ServeCfg) -> Result<NetRunReport> {
                     }
                 }
                 NetEvent::Stats { rank, payload } => feed_stats(&recorder, rank, &payload),
-                NetEvent::Goodbye { .. } | NetEvent::Hello { .. } => {}
+                // A re-HELLO on a dead rank is the worker-dialed rejoin
+                // completing: the daemon came back (or was re-dialed
+                // above) and re-registered. Restore it exactly like a
+                // scripted rejoin. Draining ranks are left alone — an
+                // honored drain must finish, not resurrect.
+                NetEvent::Hello { rank } => {
+                    if rank < n && co.pool.state(rank) == ServerState::Dead {
+                        co.pool.restore(rank);
+                        co.health.reset(rank);
+                        hb_mon.reset(rank);
+                        last_beat[rank] = None;
+                        drain_pending.retain(|&r| r != rank);
+                        rejoins += 1;
+                    }
+                }
+                NetEvent::Goodbye { .. } => {}
             }
         }
         // Stale heartbeats without an EOF yet: suspect the worker dead.
@@ -648,8 +780,45 @@ pub fn run_serve(cfg: &ServeCfg) -> Result<NetRunReport> {
 
         // 3–5. Sample, run over the wire, verify bit-exactness.
         let tasks = sample_tick_tasks(&mut rng, tick, cfg, &alive);
-        let outputs = co.run_tick(tick, &tasks, &inband)?;
+        let outputs = if cfg.pp {
+            // Ping-pong waves. Scripted SIGKILLs land in the boundary
+            // hook — between the ping dispatch and the pong stamp, while
+            // the ping wave is genuinely in flight — and the EOF
+            // evidence is waited for (bounded) so the kill is membership
+            // fact before the pong wave plans: the ping stamp goes
+            // stale, only its in-flight tasks re-dispatch, and
+            // `wave_epochs[ping] < wave_epochs[pong]` deterministically.
+            let mut boundary = || -> Vec<usize> {
+                let mut dropped = Vec::new();
+                for &server in &deferred_kills {
+                    procs.kill(server, &fabric);
+                    process_kills += 1;
+                    let deadline = Instant::now() + Duration::from_secs(5);
+                    loop {
+                        drain_events(&fabric, &mut pending);
+                        if let Some(pos) = pending.iter().position(
+                            |e| matches!(e, NetEvent::Disconnected { rank } if *rank == server),
+                        ) {
+                            pending.remove(pos);
+                            dropped.push(server);
+                            break;
+                        }
+                        if Instant::now() >= deadline {
+                            // No EOF evidence yet: the send-failover and
+                            // gather-deadline paths still catch it.
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+                dropped
+            };
+            co.run_pp_tick_with_boundary(tick, &tasks, &inband, &mut boundary)?
+        } else {
+            co.run_tick(tick, &tasks, &inband)?
+        };
         verify_outputs(tick, &tasks, &outputs, &oracle)?;
+        let stale_wave_frames = fabric.take_stale_epoch_frames();
 
         // 6. Accounting.
         let st = co.stats.last().expect("run_tick records stats").clone();
@@ -692,14 +861,28 @@ pub fn run_serve(cfg: &ServeCfg) -> Result<NetRunReport> {
             rejoins,
             bytes_dispatched: st.server_bytes.iter().sum(),
             peak_server_bytes: st.server_bytes.iter().cloned().fold(0.0, f64::max),
+            wave_epochs: st.wave_epochs,
+            wave_redispatched: st.wave_redispatched,
+            overlap_gathered: st.overlap_gathered,
+            stale_wave_frames,
+            mid_wave_kills: st.mid_tick_disconnects,
+            compute_s: 0.0,
+            wire_wait_s: 0.0,
+            overlap_efficiency: 1.0,
             elapsed: st.elapsed,
         });
 
         // Complete honored drains: the drainee sat the tick out, now it
         // leaves the pool and its daemon is told to exit. Its upcoming
         // Disconnected event is expected (the rank is Dead by then, so
-        // it is not miscounted as a connection kill).
+        // it is not miscounted as a connection kill). A rank restored
+        // since its drain was honored (rejoin, re-HELLO) is no longer
+        // Draining and is skipped — an honored drain must never shut
+        // down a freshly restored worker.
         for r in drain_pending.drain(..) {
+            if co.pool.state(r) != ServerState::Draining {
+                continue;
+            }
             co.pool.leave(r);
             co.health.mark_dead(r);
             let _ = fabric.send(r, Message { src: COORD_SRC, tag: CTRL_SHUTDOWN, payload: vec![] });
@@ -746,14 +929,47 @@ pub fn run_serve(cfg: &ServeCfg) -> Result<NetRunReport> {
         println!("wrote {}", path.display());
     }
 
+    // Per-tick compute vs wire-wait from the recorder's synthesized
+    // spans (worker STATS refine the split where they arrived): the
+    // measured overlap-efficiency column of `BENCH_net.json` — Fig. 11
+    // on this testbed's wire.
+    if let Some(r) = &recorder {
+        let mut comp: BTreeMap<usize, f64> = BTreeMap::new();
+        let mut wire: BTreeMap<usize, f64> = BTreeMap::new();
+        for s in r.spans() {
+            match s.phase {
+                Phase::Compute => *comp.entry(s.tick).or_insert(0.0) += s.dur_s,
+                Phase::WireWait => *wire.entry(s.tick).or_insert(0.0) += s.dur_s,
+                _ => {}
+            }
+        }
+        for rec in &mut records {
+            let c = comp.get(&rec.tick).copied().unwrap_or(0.0);
+            let w = wire.get(&rec.tick).copied().unwrap_or(0.0);
+            rec.compute_s = c;
+            rec.wire_wait_s = w;
+            rec.overlap_efficiency = if c + w > 0.0 { c / (c + w) } else { 1.0 };
+        }
+    }
+
+    let compute_total: f64 = records.iter().map(|r| r.compute_s).sum();
+    let wire_total: f64 = records.iter().map(|r| r.wire_wait_s).sum();
     let report = NetRunReport {
         workers: n,
         seed: cfg.seed,
+        pp: cfg.pp,
         total_redispatched: records.iter().map(|r| r.redispatched).sum(),
         total_send_failovers: records.iter().map(|r| r.send_failovers).sum(),
         total_connection_kills: records.iter().map(|r| r.connection_kills).sum(),
         total_process_kills: records.iter().map(|r| r.process_kills).sum(),
         total_rejoins: records.iter().map(|r| r.rejoins).sum(),
+        total_overlap_gathered: records.iter().map(|r| r.overlap_gathered).sum(),
+        total_stale_wave_frames: records.iter().map(|r| r.stale_wave_frames).sum(),
+        overlap_efficiency: if compute_total + wire_total > 0.0 {
+            compute_total / (compute_total + wire_total)
+        } else {
+            1.0
+        },
         per_tick: records,
     };
     if let Some(path) = &cfg.bench_out {

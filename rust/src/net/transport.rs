@@ -22,16 +22,16 @@
 //! `CTRL_SHUTDOWN` message into the worker's own inbox so the blocking
 //! [`run_server_loop`](crate::elastic::run_server_loop) exits cleanly.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use crate::elastic::failover::{COORD_SRC, CTRL_SHUTDOWN};
-use crate::exchange::transport::{Message, SendError, Transport};
+use crate::elastic::failover::{is_task_tag, COORD_SRC, CTRL_SHUTDOWN};
+use crate::exchange::transport::{shutdown_sentinel, Message, SendError, Transport};
 
 use super::codec::{Frame, FrameDecoder, FrameKind};
 
@@ -57,12 +57,25 @@ pub enum NetEvent {
     Stats { rank: usize, payload: Vec<f32> },
 }
 
+/// The sending side of one live connection: a queue into the
+/// connection's dedicated writer thread, plus the stream handle kept
+/// for hard closes. Senders enqueue encoded frames and return
+/// immediately — the writer thread owns the blocking `write_all`
+/// syscall, so a slow or stalled peer never serializes the dispatch
+/// loop (the double-buffered send half of the §4.3 overlap).
+struct WriterHandle {
+    tx: Sender<Vec<u8>>,
+    /// Kept so [`TcpTransport::close_conn`] can shut the socket down
+    /// even while the writer thread is blocked mid-syscall.
+    stream: TcpStream,
+}
+
 struct ConnSlot {
-    /// Bumped on every (re)attach; a reader thread may only tear down
-    /// the slot it was spawned for, so a reconnect is never clobbered
-    /// by the previous connection's dying reader.
+    /// Bumped on every (re)attach; a reader or writer thread may only
+    /// tear down the slot it was spawned for, so a reconnect is never
+    /// clobbered by the previous connection's dying threads.
     gen: AtomicU64,
-    writer: Mutex<Option<TcpStream>>,
+    writer: Mutex<Option<WriterHandle>>,
 }
 
 /// Socket-backed [`Transport`]: local mpsc queues for local ranks,
@@ -78,6 +91,22 @@ pub struct TcpTransport {
     /// Worker side: rank whose inbox gets a synthesized
     /// `CTRL_SHUTDOWN` when the coordinator connection drops.
     shutdown_rank_on_eof: Option<usize>,
+    /// Current outbound wave stamp, packed `(epoch << 8) | wave`;
+    /// 0 = unstamped (flat ticks, pre-`--pp` traffic). Set by the
+    /// coordinator via [`Transport::set_wave_stamp`] before each wave's
+    /// dispatch and applied to every outbound task frame.
+    wave_stamp: AtomicU64,
+    /// Worker side: stamp of each inbound task frame, echoed onto the
+    /// matching response so the coordinator can attribute it to the
+    /// wave/epoch it was dispatched under. Keyed by task tag (a re-sent
+    /// tag simply overwrites — per-connection FIFO makes the latest
+    /// request's stamp the one in effect).
+    echo: Mutex<HashMap<u64, (u8, u64)>>,
+    /// Coordinator side: responses whose echoed epoch predates the
+    /// current wave stamp — work from a wave that has since been
+    /// re-dispatched under a fresh epoch (kept only if dedup hasn't
+    /// already seen the tag; counted here either way).
+    stale_epoch_frames: AtomicU64,
 }
 
 impl TcpTransport {
@@ -106,6 +135,9 @@ impl TcpTransport {
             conns,
             events: Mutex::new(VecDeque::new()),
             shutdown_rank_on_eof,
+            wave_stamp: AtomicU64::new(0),
+            echo: Mutex::new(HashMap::new()),
+            stale_epoch_frames: AtomicU64::new(0),
         }
     }
 
@@ -156,16 +188,40 @@ impl TcpTransport {
     ) -> std::io::Result<()> {
         stream.set_nodelay(true)?;
         let read_half = stream.try_clone()?;
+        let write_half = stream.try_clone()?;
+        let (tx, rx) = channel::<Vec<u8>>();
         let gen = {
             let mut w = this.conns[conn].writer.lock().unwrap();
             let g = this.conns[conn].gen.fetch_add(1, Ordering::SeqCst) + 1;
-            *w = Some(stream);
+            *w = Some(WriterHandle { tx, stream });
             g
         };
+        let me = Arc::clone(this);
+        std::thread::spawn(move || me.writer_loop(conn, gen, write_half, rx));
         let me = Arc::clone(this);
         let init = initial.to_vec();
         std::thread::spawn(move || me.reader_loop(conn, peer_rank, gen, read_half, init));
         Ok(())
+    }
+
+    /// Per-connection writer: drains the send queue into the socket so
+    /// callers never block on the syscall. Exits when the queue's
+    /// senders are gone (teardown dropped the [`WriterHandle`]) or on a
+    /// write error — in which case it shuts the socket down (the reader
+    /// unblocks into its EOF path and reports `Disconnected`) and
+    /// clears the slot under the generation check so later sends fail
+    /// fast.
+    fn writer_loop(&self, conn: usize, gen: u64, mut stream: TcpStream, rx: Receiver<Vec<u8>>) {
+        while let Ok(bytes) = rx.recv() {
+            if stream.write_all(&bytes).is_err() {
+                let _ = stream.shutdown(std::net::Shutdown::Both);
+                let mut w = self.conns[conn].writer.lock().unwrap();
+                if self.conns[conn].gen.load(Ordering::SeqCst) == gen {
+                    *w = None;
+                }
+                return;
+            }
+        }
     }
 
     fn reader_loop(
@@ -223,6 +279,28 @@ impl TcpTransport {
     fn dispatch_frame(&self, peer_rank: usize, f: Frame) {
         match f.kind {
             FrameKind::Msg => {
+                if f.epoch != 0 && is_task_tag(f.tag) {
+                    if self.shutdown_rank_on_eof.is_some() {
+                        // Worker side: remember the request's wave stamp
+                        // so the response echoes it. Bounded hygiene: a
+                        // task whose response never leaves (cancelled,
+                        // dead window) would otherwise pin its entry for
+                        // the life of the run.
+                        let mut echo = self.echo.lock().unwrap();
+                        if echo.len() > 65_536 {
+                            echo.clear();
+                        }
+                        echo.insert(f.tag, (f.wave, f.epoch));
+                    } else {
+                        // Coordinator side: a response stamped with an
+                        // epoch older than the current wave's belongs to
+                        // work already re-scoped by a mid-wave fault.
+                        let cur = self.wave_stamp.load(Ordering::SeqCst) >> 8;
+                        if cur != 0 && f.epoch < cur {
+                            self.stale_epoch_frames.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                }
                 let dst = f.dst as usize;
                 if dst < self.senders.len() {
                     let _ = self.senders[dst].send(f.into_message());
@@ -263,34 +341,62 @@ impl TcpTransport {
         self.write_frame(conn, frame).map_err(|reason| SendError { dst: conn, reason })
     }
 
+    /// Enqueue an encoded frame onto the connection's writer thread.
+    /// Non-blocking: the caller returns as soon as the bytes are
+    /// queued. A down connection (no handle, or a writer that already
+    /// died on a broken pipe) fails fast; bytes queued just before a
+    /// peer death are lost with the socket — exactly the in-flight
+    /// window the gather's deadline re-dispatch recovers.
     fn write_frame(&self, conn: usize, frame: &Frame) -> Result<(), String> {
         let bytes = frame.encode().map_err(|e| e.to_string())?;
         let Some(slot) = self.conns.get(conn) else {
             return Err(format!("no connection slot {conn}"));
         };
-        let mut guard = slot.writer.lock().unwrap();
-        let Some(stream) = guard.as_mut() else {
+        let guard = slot.writer.lock().unwrap();
+        let Some(handle) = guard.as_ref() else {
             return Err("connection down".to_string());
         };
-        match stream.write_all(&bytes) {
-            Ok(()) => Ok(()),
-            Err(e) => {
-                // Drop the writer immediately: every later send fails
-                // fast instead of re-discovering the broken pipe. The
-                // reader thread reports the Disconnected event.
-                *guard = None;
-                Err(format!("write failed: {e}"))
+        handle
+            .tx
+            .send(bytes)
+            .map_err(|_| "connection down (writer exited)".to_string())
+    }
+
+    /// Apply the current stamp policy to an outbound data frame: the
+    /// worker echoes the request's stamp onto its response; the
+    /// coordinator stamps with the wave currently being dispatched.
+    fn stamp_outbound(&self, f: &mut Frame) {
+        if !is_task_tag(f.tag) {
+            return;
+        }
+        if self.shutdown_rank_on_eof.is_some() {
+            if let Some((wave, epoch)) = self.echo.lock().unwrap().remove(&f.tag) {
+                f.wave = wave;
+                f.epoch = epoch;
+            }
+        } else {
+            let packed = self.wave_stamp.load(Ordering::SeqCst);
+            if packed != 0 {
+                f.wave = (packed & 0xFF) as u8;
+                f.epoch = packed >> 8;
             }
         }
     }
 
+    /// Responses observed (since the last call) whose echoed epoch
+    /// predated the then-current wave stamp — the wire-visible count of
+    /// work outrun by a mid-wave membership change.
+    pub fn take_stale_epoch_frames(&self) -> u64 {
+        self.stale_epoch_frames.swap(0, Ordering::SeqCst)
+    }
+
     /// Hard-close connection slot `conn` (the peer sees EOF). Used by
     /// the `--connect` fault backend, where there is no child process
-    /// to SIGKILL.
+    /// to SIGKILL. Dropping the handle also ends the writer thread.
     pub fn close_conn(&self, conn: usize) {
         if let Some(slot) = self.conns.get(conn) {
-            if let Some(s) = slot.writer.lock().unwrap().take() {
-                let _ = s.shutdown(std::net::Shutdown::Both);
+            if let Some(h) = slot.writer.lock().unwrap().take() {
+                let _ = h.stream.shutdown(std::net::Shutdown::Both);
             }
         }
     }
@@ -314,22 +420,37 @@ impl Transport for TcpTransport {
                     .map_err(|_| SendError { dst, reason: "local receiver dropped".into() })
             }
             Some(conn) => {
-                let frame = Frame::msg(dst, msg);
+                let mut frame = Frame::msg(dst, msg);
+                self.stamp_outbound(&mut frame);
                 self.write_frame(conn, &frame).map_err(|reason| SendError { dst, reason })
             }
         }
     }
 
     fn recv(&self, rank: usize) -> Message {
-        self.receivers[rank]
-            .lock()
-            .unwrap()
-            .recv()
-            .expect("transport dropped while receiving")
+        match self.receivers[rank].lock().unwrap().recv() {
+            Ok(m) => m,
+            // The fabric was torn down around a blocked receive (pool
+            // shutdown racing a gather): exit through the orderly
+            // shutdown path instead of aborting the process.
+            Err(_) => shutdown_sentinel(),
+        }
     }
 
     fn try_recv(&self, rank: usize) -> Option<Message> {
         self.receivers[rank].lock().unwrap().try_recv().ok()
+    }
+
+    fn try_recv_for(&self, rank: usize, timeout: Duration) -> Option<Message> {
+        match self.receivers[rank].lock().unwrap().recv_timeout(timeout) {
+            Ok(m) => Some(m),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => Some(shutdown_sentinel()),
+        }
+    }
+
+    fn set_wave_stamp(&self, wave: usize, epoch: u64) {
+        self.wave_stamp.store((epoch << 8) | (wave as u64 & 0xFF), Ordering::SeqCst);
     }
 }
 
@@ -395,5 +516,68 @@ mod tests {
         }
         // Sends to the dead connection fail instead of panicking.
         assert!(worker.send(n + 1, Message { src: 0, tag: 1, payload: vec![] }).is_err());
+    }
+
+    /// Wave stamps ride the frame header: the coordinator stamps task
+    /// frames with the current (wave, epoch), the worker echoes the
+    /// request's stamp onto its response, and a response whose epoch
+    /// predates the coordinator's current stamp is counted stale.
+    #[test]
+    fn wave_stamp_is_echoed_and_stale_epochs_counted() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let n = 2;
+
+        let coord = TcpTransport::coordinator(n);
+        let dial = TcpStream::connect(addr).unwrap();
+        let (accepted, _) = listener.accept().unwrap();
+        TcpTransport::attach(&coord, 0, 0, dial, &[]).unwrap();
+        let worker = TcpTransport::worker(0, n, accepted, &[]).unwrap();
+
+        // Ping wave under epoch 5: the task frame to rank 0 is stamped.
+        coord.set_wave_stamp(0, 5);
+        coord.send(0, Message { src: usize::MAX, tag: 100, payload: vec![1.0] }).unwrap();
+        let req = worker.recv(0);
+        assert_eq!(req.tag, 100);
+
+        // A mid-wave fault advances the epoch before the response
+        // lands: anything echoing epoch 5 is now stale.
+        coord.set_wave_stamp(1, 6);
+        worker.send(n, Message { src: 0, tag: 100, payload: vec![2.0] }).unwrap();
+        let resp = coord
+            .try_recv_for(n, Duration::from_secs(5))
+            .expect("response did not arrive");
+        assert_eq!(resp.tag, 100);
+        assert_eq!(resp.payload, vec![2.0]);
+        assert_eq!(coord.take_stale_epoch_frames(), 1, "echoed epoch 5 < current 6");
+        assert_eq!(coord.take_stale_epoch_frames(), 0, "counter drains on take");
+
+        // Control traffic is never stamped, so it is never stale.
+        worker
+            .send(n, Message { src: 0, tag: CTRL_SHUTDOWN, payload: vec![] })
+            .unwrap();
+        let ctrl = coord
+            .try_recv_for(n, Duration::from_secs(5))
+            .expect("control frame did not arrive");
+        assert_eq!(ctrl.tag, CTRL_SHUTDOWN);
+        assert_eq!(coord.take_stale_epoch_frames(), 0);
+    }
+
+    /// Satellite fix: a receiver blocked in `recv` while the transport
+    /// is dropped must get the shutdown sentinel, not a panic.
+    #[test]
+    fn blocked_recv_returns_shutdown_sentinel_when_fabric_drops() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let coord = TcpTransport::coordinator(1);
+        let dial = TcpStream::connect(addr).unwrap();
+        let (accepted, _) = listener.accept().unwrap();
+        TcpTransport::attach(&coord, 0, 0, dial, &[]).unwrap();
+        drop(accepted);
+
+        // The home queue's senders live inside the transport itself, so
+        // exercise the timeout path (the blocking-recv equivalent used
+        // by the gather): nothing arrives, no panic, clean None.
+        assert!(coord.try_recv_for(1, Duration::from_millis(50)).is_none());
     }
 }

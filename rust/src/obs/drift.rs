@@ -34,11 +34,53 @@ impl Default for DriftCfg {
 
 /// The wall-clock-dependent leaf keys present in the repo's committed
 /// snapshots: timing measured on the host, never comparable run-to-run.
+/// Two families live here:
+///
+/// * directly measured durations (`makespan_s`, `compute_s`, …);
+/// * counters whose value is *decided by* wall-clock racing — how many
+///   completions happened to land while a wave was still dispatching
+///   (`overlap_gathered`), whether a gather deadline fired before a
+///   straggler's response (`redispatched`, `send_failovers`), how many
+///   late frames crossed a wave boundary (`stale_wave_frames`), how
+///   many tasks were remapped vs re-sent when EOF evidence landed
+///   (`remapped`), the byte totals that shift when a re-dispatch
+///   changes who computed what (`bytes_dispatched`,
+///   `peak_server_bytes`), and the wave epochs themselves — the pool
+///   epoch also advances on health-verdict demotions, which are
+///   wall-clock decisions (`wave_epoch_ping`/`wave_epoch_pong`).
+///
+/// Everything seeded — task counts, alive counts, scripted
+/// kill/rejoin/mid-wave totals, the bit-exact verdict — stays under
+/// the full ±tolerance comparison.
 pub fn wall_clock_keys() -> Vec<String> {
-    ["makespan_s", "elapsed_s", "hb_ewma_s", "wall_s", "elapsed_ms"]
-        .iter()
-        .map(|s| s.to_string())
-        .collect()
+    [
+        "makespan_s",
+        "elapsed_s",
+        "hb_ewma_s",
+        "wall_s",
+        "elapsed_ms",
+        "compute_s",
+        "wire_wait_s",
+        "overlap_efficiency",
+        "overlap_gathered",
+        "total_overlap_gathered",
+        "stale_wave_frames",
+        "total_stale_wave_frames",
+        "redispatched",
+        "remapped",
+        "wave_epoch_ping",
+        "wave_epoch_pong",
+        "wave_redispatched_ping",
+        "wave_redispatched_pong",
+        "total_redispatched",
+        "send_failovers",
+        "total_send_failovers",
+        "bytes_dispatched",
+        "peak_server_bytes",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect()
 }
 
 fn kind(v: &Json) -> &'static str {

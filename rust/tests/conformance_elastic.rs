@@ -362,6 +362,201 @@ fn net_loopback_matches_oracle_for_seeded_cases() {
     }
 }
 
+/// The `net --pp` column: the seeded cases again, but each tick runs as
+/// two overlapped waves **over real localhost sockets** — pong frames
+/// ship while ping compute is still in flight, wave-epoch stamps ride
+/// the frame header, and scripted kills land between the waves. Gated
+/// like the flat net column.
+#[test]
+fn net_loopback_pp_matches_oracle_for_seeded_cases() {
+    if std::env::var("DISTCA_NET_TESTS").is_err() {
+        eprintln!("skipping net loopback pp conformance (set DISTCA_NET_TESTS=1 to run)");
+        return;
+    }
+    for seed in 0..16u64 {
+        let case = gen_case(seed);
+        let pool = distca::net::loopback::spawn_loopback_pool(case.n_servers, H, HKV, D)
+            .unwrap_or_else(|e| panic!("net-pp seed {seed}: spawning loopback pool: {e}"));
+        let mut co = pool.coordinator(quick_cfg());
+        for (t, tasks) in case.ticks.iter().enumerate() {
+            let outputs = co
+                .run_pp_tick(t, tasks, &case.fault)
+                .unwrap_or_else(|e| panic!("net-pp seed {seed} tick {t}: {e}"));
+            check_tick("net-pp", seed, tasks, &outputs);
+        }
+        let stats = co.shutdown().unwrap();
+        for st in &stats {
+            let kill_tick = case
+                .fault
+                .events_at(st.tick)
+                .iter()
+                .any(|e| matches!(e, distca::elastic::FaultEvent::Kill { .. }));
+            if kill_tick {
+                assert!(
+                    st.wave_epochs[1] > st.wave_epochs[0],
+                    "net-pp seed {seed} tick {}: the kill must land between the waves: {st:?}",
+                    st.tick
+                );
+            }
+        }
+        pool.join().unwrap_or_else(|e| panic!("net-pp seed {seed}: worker join: {e}"));
+    }
+}
+
+/// Mid-wave SIGKILL over the wire (the tentpole's recovery invariant):
+/// the boundary hook drops a worker's connection while the ping wave is
+/// genuinely in flight — the wire-level equivalent of a SIGKILL's EOF —
+/// and the tick must still gather bit-exact, with the membership epoch
+/// bumped *between* the wave stamps and the pong wave (planned under
+/// the post-kill epoch) never needing a re-dispatch. Gated like the
+/// other socket tests.
+#[test]
+fn net_loopback_pp_mid_wave_kill_redispatches_only_inflight_wave() {
+    if std::env::var("DISTCA_NET_TESTS").is_err() {
+        eprintln!("skipping net mid-wave kill conformance (set DISTCA_NET_TESTS=1 to run)");
+        return;
+    }
+    const N: usize = 3;
+    const VICTIM: usize = 1;
+    let mut rng = Rng::new(0xDEAD_5160);
+    let tasks: Vec<ElasticTask> = (0..8)
+        .map(|j| {
+            let len = 2 * (1 + rng.gen_index(0, 8));
+            let server = j % N; // victim owns a share of both waves
+            ElasticTask {
+                doc: j as u32,
+                q_start: 0,
+                server,
+                home: server % 2,
+                tensors: synthetic_task(&mut rng, len, len, H, HKV, D),
+            }
+        })
+        .collect();
+
+    let pool = distca::net::loopback::spawn_loopback_pool(N, H, HKV, D)
+        .unwrap_or_else(|e| panic!("mid-wave kill: spawning loopback pool: {e}"));
+    // Generous grace: the only re-dispatches this test may observe are
+    // the victim's genuinely lost ping tasks, never a spurious deadline
+    // on a healthy worker (which would fail the pong assertion below).
+    let mut co = pool.coordinator(ElasticCfg {
+        grace: Duration::from_millis(500),
+        slow_task_unit: Duration::from_millis(2),
+        ..Default::default()
+    });
+
+    let fabric = std::sync::Arc::clone(&pool.fabric);
+    let mut fired = false;
+    let mut boundary = || -> Vec<usize> {
+        if fired {
+            return Vec::new();
+        }
+        fired = true;
+        // Drop the victim's socket mid-wave: its writer queue dies, its
+        // worker loop sees EOF and exits — exactly the coordinator-side
+        // observable of a SIGKILL'd worker process.
+        fabric.close_conn(VICTIM);
+        vec![VICTIM]
+    };
+    let outputs = co
+        .run_pp_tick_with_boundary(0, &tasks, &FaultPlan::new(), &mut boundary)
+        .unwrap_or_else(|e| panic!("mid-wave kill tick: {e}"));
+    check_tick("net-midwave-kill", 0, &tasks, &outputs);
+
+    let stats = co.shutdown().unwrap();
+    let st = &stats[0];
+    assert_eq!(
+        st.mid_tick_disconnects, 1,
+        "the boundary EOF must be applied as a mid-tick disconnect: {st:?}"
+    );
+    assert!(
+        st.wave_epochs[1] > st.wave_epochs[0],
+        "the mid-wave kill must land between the wave stamps: {st:?}"
+    );
+    assert_eq!(
+        st.wave_redispatched[1], 0,
+        "the pong wave plans around the victim pre-dispatch — only the \
+         in-flight ping wave may re-dispatch: {st:?}"
+    );
+    pool.join().unwrap_or_else(|e| panic!("mid-wave kill: worker join: {e}"));
+}
+
+/// End-to-end `soak --pp` through the shipped binary: spawned worker
+/// processes, a scripted mid-wave SIGKILL at tick 1 and a rejoin at
+/// tick 3, JSON report on stdout. Asserts the report's wave-epoch
+/// ordering on the kill tick and the bit-exact verdict — the CI
+/// net-smoke runs the same shape with a pinned seed. Gated like the
+/// other socket tests.
+#[test]
+fn soak_pp_binary_survives_scripted_sigkill_bit_exact() {
+    if std::env::var("DISTCA_NET_TESTS").is_err() {
+        eprintln!("skipping soak --pp subprocess test (set DISTCA_NET_TESTS=1 to run)");
+        return;
+    }
+    let bench = std::env::temp_dir().join(format!("distca-soak-pp-{}.json", std::process::id()));
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_distca"))
+        .args([
+            "soak",
+            "--pp",
+            "--workers",
+            "4",
+            "--spawn",
+            "--ticks",
+            "4",
+            "--docs-per-tick",
+            "8",
+            "--seed",
+            "7",
+            "--fault",
+            "kill:1@1,rejoin:1@3",
+            "--json",
+            "--bench-out",
+        ])
+        .arg(&bench)
+        .output()
+        .expect("launching distca soak --pp");
+    let _ = std::fs::remove_file(&bench);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "soak --pp exited with {:?}\nstdout:\n{stdout}\nstderr:\n{}",
+        out.status.code(),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    // The JSON report is the last thing on stdout; skip any "wrote …"
+    // progress lines before it.
+    let json_start = stdout.find('{').expect("JSON report on stdout");
+    let report = distca::util::json::parse(&stdout[json_start..])
+        .unwrap_or_else(|e| panic!("parsing soak --pp report: {e}\n{stdout}"));
+    assert_eq!(report.get("pp").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(report.get("bit_exact").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(
+        report.get("total_process_kills").and_then(|v| v.as_usize()),
+        Some(1),
+        "exactly the scripted SIGKILL: {stdout}"
+    );
+    assert_eq!(
+        report.get("total_rejoins").and_then(|v| v.as_usize()),
+        Some(1),
+        "exactly the scripted rejoin: {stdout}"
+    );
+    let ticks = report.get("per_tick").and_then(|v| v.as_arr()).expect("per_tick array");
+    let kill_tick = ticks
+        .iter()
+        .find(|t| t.get("tick").and_then(|v| v.as_usize()) == Some(1))
+        .expect("tick 1 record");
+    let ping = kill_tick.get("wave_epoch_ping").and_then(|v| v.as_u64()).unwrap();
+    let pong = kill_tick.get("wave_epoch_pong").and_then(|v| v.as_u64()).unwrap();
+    assert!(
+        pong > ping,
+        "the scripted SIGKILL must land between the waves (ping {ping}, pong {pong}): {stdout}"
+    );
+    assert_eq!(
+        kill_tick.get("mid_wave_kills").and_then(|v| v.as_usize()),
+        Some(1),
+        "tick 1 must record the kill as mid-wave: {stdout}"
+    );
+}
+
 #[test]
 fn threaded_pp_matches_oracle_for_seeded_cases() {
     for seed in 0..SEEDS {

@@ -38,6 +38,8 @@ fn random_frame(rng: &mut Rng) -> Frame {
         dst: rng.gen_index(0, 64) as u32,
         src: rng.next_u64(),
         tag: rng.next_u64(),
+        wave: rng.gen_index(0, 2) as u8,
+        epoch: rng.next_u64() >> 8,
         payload: (0..len).map(|_| rng.gen_f64(-1e6, 1e6) as f32).collect(),
     }
 }
@@ -100,6 +102,8 @@ fn nan_and_bitcast_header_words_survive_bit_for_bit() {
         dst: 0,
         src: 0,
         tag: 1,
+        wave: 0,
+        epoch: 0,
         payload: patterns.iter().map(|&b| f32::from_bits(b)).collect(),
     };
     let mut dec = FrameDecoder::new();
@@ -116,7 +120,7 @@ fn payload_count_beyond_f32_mantissa_is_exact() {
     let n = (1usize << 24) + 1;
     let mut payload = vec![0.0f32; n];
     payload[n - 1] = 42.5;
-    let f = Frame { kind: FrameKind::Msg, dst: 3, src: 7, tag: 9, payload };
+    let f = Frame { kind: FrameKind::Msg, dst: 3, src: 7, tag: 9, wave: 0, epoch: 0, payload };
     let bytes = f.encode().unwrap();
     assert_eq!(bytes.len(), HEADER_BYTES + 4 * n);
     let mut dec = FrameDecoder::new();
@@ -157,6 +161,8 @@ fn oversized_frame_rejected_with_descriptive_error() {
     hdr.extend_from_slice(&0u32.to_le_bytes());
     hdr.extend_from_slice(&0u64.to_le_bytes());
     hdr.extend_from_slice(&0u64.to_le_bytes());
+    hdr.push(0); // wave
+    hdr.extend_from_slice(&0u64.to_le_bytes()); // epoch
     hdr.extend_from_slice(&(MAX_PAYLOAD_ELEMS + 1).to_le_bytes());
     let mut dec = FrameDecoder::new();
     dec.push(&hdr);
