@@ -16,8 +16,9 @@
 //! | `worker`   | networked attention-server daemon: listen for a coordinator over TCP |
 //! | `serve`    | networked coordinator over separate worker processes (`--spawn` \| `--connect a,b,c`) |
 //! | `soak`     | networked soak/load harness: replay a seeded document-length mix, emit `BENCH_net.json` |
+//! | `gateway`  | multi-tenant serving gateway: seeded tenant streams → WFQ + believed-capacity admission → fused cross-tenant waves over the shared pool (`--soak`: 10k tenants, emits `BENCH_gateway.json`) |
 //! | `train`    | end-to-end tiny-LM training through the AOT artifacts |
-//! | `report`   | straggler attribution from a `--trace-out` trace file (Fig. 11-style overlap table) |
+//! | `report`   | straggler attribution from a `--trace-out` trace file (Fig. 11-style overlap table), or `--gateway` for per-tenant accounting from a gateway JSONL stream |
 //! | `drift`    | compare a regenerated `BENCH_*.json` snapshot against its committed baseline |
 //! | `bound`    | Appendix A max-partition bound for a model/bandwidth |
 //! | `info`     | model & cluster configuration tables |
@@ -39,23 +40,29 @@
 //! | `--seed <n>` | all | PRNG seed (default `$DISTCA_SEED`, else 42) |
 //! | `--batches <n>` | simulate/compare | batches to average (default 5) |
 //! | `--steps <n>` | train | training steps (default 100) |
-//! | `--ticks <n>` | elastic (flat/threaded) | scheduling rounds (default 4) |
+//! | `--ticks <n>` | elastic (flat/threaded), gateway | scheduling rounds (default 4); on `gateway`: arrival waves (default 8, `--soak` 24) |
 //! | `--servers <n>` | elastic (flat/threaded) | pool size (default gpus/tp) |
 //! | `--runtime <r>` | elastic | `sim` (discrete-event) \| `threaded` (real workers, bit-exact) |
-//! | `--fault <spec>` | elastic | compact fault script, e.g. `kill:1@2,slow:2@1x0.25,drain:0@2,oom:1@3,rejoin:1@4` |
-//! | `--fault-plan <file>` | elastic | the same as JSON |
+//! | `--fault <spec>` | elastic, serve/soak, gateway | compact fault script, e.g. `kill:1@2,slow:2@1x0.25,drain:0@2,oom:1@3,rejoin:1@4` (gateway ticks count *dispatched* waves) |
+//! | `--fault-plan <file>` | elastic, serve/soak, gateway | the same as JSON |
 //! | `--mem-budget <bytes\|auto>` | schedule/memory/elastic flat sim | per-server arena byte budget; `auto` = 1.25× the unconstrained peak; on the elastic sim, omitting `--fault` alongside it means a fault-free (organic-eviction-only) run |
 //! | `--speeds <list>` | schedule | believed per-server speeds (`1,0.25,1,…`): plan estimated seconds and report the makespan vs the uniform plan |
 //! | `--belief-speeds <list>` | elastic sim (incl. `--pp`) | slow-from-tick-0 believed speeds seeded before the first plan; omitting `--fault` alongside it means a fault-free run |
 //! | `--autoscale` | elastic | queue/imbalance-driven pool scaling (wave-clock under `--pp`) |
 //! | `--listen <addr>` | worker | listen address (`:0` = kernel-assigned port) |
 //! | `--port-file <path>` | worker | publish the bound address (written atomically) for a spawning coordinator |
-//! | `--workers <n>` | serve/soak | worker process count (default 4) |
-//! | `--spawn` | serve/soak | spawn local `distca worker` children (required for scripted SIGKILL/rejoin faults) |
-//! | `--connect <a,b,c>` | serve/soak | dial externally started worker daemons instead of spawning |
+//! | `--workers <n>` | serve/soak/gateway | worker process count (default 4; gateway default 4, in-process threads unless `--spawn`/`--connect`) |
+//! | `--spawn` | serve/soak/gateway | spawn local `distca worker` children (required for scripted SIGKILL/rejoin faults) |
+//! | `--connect <a,b,c>` | serve/soak/gateway | dial externally started worker daemons instead of spawning |
 //! | `--docs-per-tick <n>` | serve/soak | documents sampled per tick (default 2× workers) |
 //! | `--stats-out <path>` | serve/soak | per-server per-tick JSONL stats (tick, server, believed speed, bytes, re-dispatches) |
-//! | `--bench-out <path>` | soak | summary JSON (default `BENCH_net.json`) |
+//! | `--bench-out <path>` | soak, gateway | summary JSON (soak default `BENCH_net.json`; gateway `--soak` default `BENCH_gateway.json`) |
+//! | `--tenants <n>` | gateway | synthetic tenant count (default 32; `--soak` 10000) |
+//! | `--arrival-rate <λ>` | gateway | pool-wide mean task arrivals per wave before diurnal modulation (default 12× workers) |
+//! | `--diurnal <waves>` | gateway | diurnal load-cycle period in waves (default 24; `0` = flat load) |
+//! | `--soak` | gateway | soak preset: 10k tenants, 24 waves, starvation breaches become a hard error |
+//! | `--accounting-out <path>` | gateway | per-tenant + per-wave accounting JSONL (ends with a `flush` record; feed to `report --gateway`) |
+//! | `--gateway <path>` | report | render per-tenant accounting from a `--accounting-out` JSONL stream (refuses truncated streams) |
 //! | `--trace-out <path>` | elastic, serve/soak | Chrome `trace_event` JSON trace (Perfetto-loadable; wall clock on threaded/net paths, virtual sim-time on `--runtime sim`) |
 //! | `--trace <path>` | report | trace file to analyze (a `--trace-out` output) |
 //! | `--baseline <path>` | drift | committed `BENCH_*.json` snapshot |

@@ -28,4 +28,4 @@ pub use item::{CaTask, Item, BLOCK_TOKENS};
 pub use pingpong::{split_waves, PingPongBuffer, Wave};
 pub use plan::Plan;
 pub use profiler::Profiler;
-pub use scheduler::{schedule, schedule_with_beliefs, SchedulerCfg, ServerBelief};
+pub use scheduler::{schedule, schedule_with_beliefs, PoolCapacity, SchedulerCfg, ServerBelief};

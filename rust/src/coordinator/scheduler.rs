@@ -111,6 +111,69 @@ impl ServerBelief {
     }
 }
 
+/// Aggregate pool capacity under the current beliefs — the supply side
+/// of the gateway's admission decision. Where [`schedule_with_beliefs`]
+/// answers "who runs what", this answers the coarser question the
+/// admission controller needs *before* a wave exists: how much work and
+/// how many bytes can the pool absorb per wave at all.
+///
+/// Both budgets are believed quantities, not measurements: speeds come
+/// from the same [`ServerBelief`]s the planner balances against (gray
+/// demotions and scripted slowdowns shrink them), byte headroom from
+/// the §5 per-server arena budgets. A wave admitted against this
+/// estimate is therefore exactly a wave the planner can place without
+/// repair.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PoolCapacity {
+    /// Sum of believed speed multipliers over schedulable servers — the
+    /// pool's work-per-wave throughput in nominal-server units.
+    pub total_speed: f64,
+    /// Sum of per-server arena byte budgets (`0` entries fall back to
+    /// `uniform_budget`); `0.0` when no budget is in force anywhere,
+    /// meaning byte admission is unbounded.
+    pub total_bytes: f64,
+    /// Servers contributing capacity (believed speed > 0).
+    pub n_servers: usize,
+}
+
+impl PoolCapacity {
+    /// Aggregate `beliefs` (one per schedulable server). `uniform_budget`
+    /// plays the role of [`SchedulerCfg::mem_budget`]: the per-server
+    /// fallback wherever a belief carries no byte budget of its own.
+    pub fn from_beliefs(beliefs: &[ServerBelief], uniform_budget: f64) -> PoolCapacity {
+        let mut cap = PoolCapacity { total_speed: 0.0, total_bytes: 0.0, n_servers: 0 };
+        for b in beliefs {
+            if b.speed <= 0.0 {
+                continue;
+            }
+            cap.total_speed += b.speed;
+            cap.total_bytes += if b.mem_budget > 0.0 { b.mem_budget } else { uniform_budget };
+            cap.n_servers += 1;
+        }
+        cap
+    }
+
+    /// Causal-pair budget of one wave: how much CA work the pool can
+    /// believe-complete inside `wave_seconds`, at `pairs_per_second`
+    /// pairs per nominal server. The admission controller stops
+    /// admitting once a wave's summed `q_len·kv_len` reaches this.
+    pub fn pair_budget(&self, wave_seconds: f64, pairs_per_second: f64) -> f64 {
+        self.total_speed * wave_seconds.max(0.0) * pairs_per_second.max(0.0)
+    }
+
+    /// Byte budget of one wave, scaled by `fill` (a safety factor in
+    /// (0, 1]: admitting to 100% of arena headroom leaves recovery
+    /// re-sends nowhere to land). `f64::INFINITY` when no arena budget
+    /// is in force.
+    pub fn byte_budget(&self, fill: f64) -> f64 {
+        if self.total_bytes <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.total_bytes * fill.clamp(0.0, 1.0)
+        }
+    }
+}
+
 impl Default for SchedulerCfg {
     fn default() -> Self {
         Self {

@@ -40,7 +40,7 @@ use crate::memplan::max_headroom_target;
 use crate::exchange::transport::{ChannelTransport, Message, Transport};
 use crate::obs::{ComputeSink, Phase, Recorder, RecorderCell, Span};
 use crate::runtime::ca_exec::CaTaskTensors;
-use crate::server::{header_usize, header_word, pack_tag, unpack_tag, TaskOutput};
+use crate::server::{doc_tenant, header_usize, header_word, pack_tag, unpack_tag, TaskOutput};
 use crate::sim::engine::Engine;
 use crate::sim::strategies::{distca_placement, SimParams};
 use crate::util::json::Json;
@@ -404,6 +404,37 @@ pub struct TickStats {
     pub mid_tick_disconnects: usize,
     /// Wall-clock seconds from dispatch to full gather.
     pub elapsed: f64,
+    /// Per-tenant dispatch split (gateway traffic only — docs carrying
+    /// [`crate::server::TENANT_DOC_FLAG`]; untenanted docs are absent):
+    /// tasks dispatched this tick, keyed by tenant id.
+    pub tenant_tasks: BTreeMap<u32, usize>,
+    /// Per-tenant wire bytes (f32 Q+K+V) dispatched this tick.
+    pub tenant_bytes: BTreeMap<u32, f64>,
+    /// Per-tenant recovery re-sends (speculative re-dispatch, OOM
+    /// eviction, drain tail, send failover) — which tenants paid for
+    /// this tick's faults.
+    pub tenant_redispatched: BTreeMap<u32, usize>,
+}
+
+impl TickStats {
+    /// Fold a tick's task list into the per-tenant dispatch splits.
+    /// Untenanted docs contribute nothing — single-job runs keep empty
+    /// maps and pay nothing.
+    fn note_tenant_tasks(&mut self, tasks: &[ElasticTask]) {
+        for t in tasks {
+            if let Some(ten) = doc_tenant(t.doc) {
+                *self.tenant_tasks.entry(ten).or_insert(0) += 1;
+                *self.tenant_bytes.entry(ten).or_insert(0.0) += task_wire_bytes(t);
+            }
+        }
+    }
+
+    /// Attribute one recovery re-send to the doc's owning tenant.
+    fn note_tenant_redispatch(&mut self, doc: u32) {
+        if let Some(ten) = doc_tenant(doc) {
+            *self.tenant_redispatched.entry(ten).or_insert(0) += 1;
+        }
+    }
 }
 
 /// Per-tick dispatch/gather bookkeeping, created *before* the first
@@ -649,6 +680,7 @@ impl ElasticCoordinator {
                     }
                     self.health.mark_dead(dest);
                     stats.send_failovers += 1;
+                    stats.note_tenant_redispatch(t.doc);
                     let mut targets: Vec<usize> = eligible
                         .iter()
                         .copied()
@@ -924,6 +956,7 @@ impl ElasticCoordinator {
                     // the server with the most arena headroom.
                     let _ = self.send_data(srv, tick, &tasks[i]);
                     stats.oom_evicted += 1;
+                    stats.note_tenant_redispatch(tasks[i].doc);
                     let want = max_headroom_target(
                         &targets,
                         live_bytes,
@@ -949,6 +982,7 @@ impl ElasticCoordinator {
                     // Partial drain: redirect the unstarted tail,
                     // max-headroom-first.
                     stats.drain_redirected += 1;
+                    stats.note_tenant_redispatch(tasks[i].doc);
                     max_headroom_target(&targets, live_bytes, 0.0, task_wire_bytes(&tasks[i]))
                 } else {
                     if drained_here {
@@ -1002,6 +1036,7 @@ impl ElasticCoordinator {
             obs.tick_begin(tick);
         }
         let mut stats = TickStats { tick, n_tasks: tasks.len(), ..Default::default() };
+        stats.note_tenant_tasks(tasks);
         let faults = self.apply_tick_events(tick, fault);
         self.gray_demote(&mut stats);
         let (planned, mut live_bytes) = self.belief_plan(tasks, &mut stats);
@@ -1122,6 +1157,7 @@ impl ElasticCoordinator {
             obs.tick_begin(tick);
         }
         let mut stats = TickStats { tick, n_tasks: tasks.len(), ..Default::default() };
+        stats.note_tenant_tasks(tasks);
         let faults = self.apply_tick_events(tick, fault);
         self.gray_demote(&mut stats);
         // Wave-clock autoscaling at the ping boundary (the only decision
@@ -1463,6 +1499,7 @@ impl ElasticCoordinator {
                     gs.assigned.insert(tag, target);
                     gs.dispatch_at.insert(tag, Instant::now());
                     stats.redispatched += 1;
+                    stats.note_tenant_redispatch(unpack_tag(tag).0);
                     if let Some(obs) = &self.obs {
                         let wave = buf.wave_of(tag).map(|w| w.index()).unwrap_or(0);
                         obs.redispatch(tick, wave, srv, target, tag);

@@ -1,0 +1,313 @@
+//! Per-tenant accounting: tasks, bytes, estimated FLOPs, queue wait,
+//! and makespan contribution, kept in a ledger whose per-tenant rows
+//! must sum *exactly* to independently-tracked pool totals.
+//!
+//! The ledger double-books on purpose: every `admit`/`complete` call
+//! bumps both the tenant row and a pool-level total that is **not**
+//! derived from the rows. [`Ledger::conservation_errors`] then checks
+//! the two views agree — a structural audit that catches dropped or
+//! double-counted tenant attributions (e.g. a re-dispatched task billed
+//! twice, or a response whose tenant tag was lost on the wire).
+//!
+//! FLOPs use the standard causal-attention estimate `4·h·d·pairs` per
+//! task (QKᵀ + AV, multiply-accumulate = 2 each); makespan contribution
+//! is the tenant's pair-share of each wave's measured wall clock.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::tenant::SloClass;
+
+/// Running totals for one tenant.
+#[derive(Debug, Clone, Default)]
+pub struct TenantAccount {
+    pub slo: Option<SloClass>,
+    /// Docs emitted by the arrival process (admitted + rejected + queued).
+    pub arrived: usize,
+    /// Tasks folded into dispatched waves.
+    pub admitted: usize,
+    /// Tasks whose outputs came back and verified.
+    pub completed: usize,
+    /// Oversize docs refused at enqueue.
+    pub rejected: usize,
+    /// Wire bytes of admitted task tensors.
+    pub bytes: f64,
+    /// Estimated core-attention FLOPs of admitted tasks.
+    pub flops: f64,
+    /// Summed admit-wave − enqueue-wave (for mean wait).
+    pub wait_waves_sum: usize,
+    /// Worst single-task queue wait, in waves.
+    pub max_wait_waves: usize,
+    /// Pair-weighted share of wave wall-clock, in seconds.
+    pub makespan_s: f64,
+    /// Tasks of this tenant the elastic layer had to re-dispatch.
+    pub redispatched: usize,
+}
+
+/// Pool-wide totals tracked independently of the per-tenant rows.
+#[derive(Debug, Clone, Default)]
+pub struct PoolTotals {
+    pub arrived: usize,
+    pub admitted: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    pub bytes: f64,
+    pub flops: f64,
+    pub redispatched: usize,
+}
+
+/// The gateway's double-entry ledger.
+#[derive(Debug, Default)]
+pub struct Ledger {
+    tenants: BTreeMap<u32, TenantAccount>,
+    pool: PoolTotals,
+}
+
+/// FLOPs for one CA task: `4 · h · d · pairs` (per head-dim MAC in
+/// QKᵀ and AV), with `pairs = len²` for self-attention.
+pub fn task_flops(len: usize, h: usize, d: usize) -> f64 {
+    4.0 * (h * d) as f64 * (len * len) as f64
+}
+
+impl Ledger {
+    pub fn new() -> Ledger {
+        Ledger::default()
+    }
+
+    fn row(&mut self, tenant: u32, slo: SloClass) -> &mut TenantAccount {
+        let row = self.tenants.entry(tenant).or_default();
+        row.slo.get_or_insert(slo);
+        row
+    }
+
+    pub fn note_arrival(&mut self, tenant: u32, slo: SloClass) {
+        self.row(tenant, slo).arrived += 1;
+        self.pool.arrived += 1;
+    }
+
+    pub fn note_rejected(&mut self, tenant: u32, slo: SloClass) {
+        self.row(tenant, slo).rejected += 1;
+        self.pool.rejected += 1;
+    }
+
+    pub fn note_admit(&mut self, tenant: u32, slo: SloClass, bytes: f64, flops: f64, wait: usize) {
+        let row = self.row(tenant, slo);
+        row.admitted += 1;
+        row.bytes += bytes;
+        row.flops += flops;
+        row.wait_waves_sum += wait;
+        row.max_wait_waves = row.max_wait_waves.max(wait);
+        self.pool.admitted += 1;
+        self.pool.bytes += bytes;
+        self.pool.flops += flops;
+    }
+
+    pub fn note_complete(&mut self, tenant: u32, slo: SloClass) {
+        self.row(tenant, slo).completed += 1;
+        self.pool.completed += 1;
+    }
+
+    pub fn note_redispatch(&mut self, tenant: u32, slo: SloClass, n: usize) {
+        self.row(tenant, slo).redispatched += n;
+        self.pool.redispatched += n;
+    }
+
+    /// Attribute one wave's wall clock to its tenants by pair share.
+    pub fn note_wave_makespan(&mut self, shares: &[(u32, SloClass, f64)], wall_s: f64) {
+        let total: f64 = shares.iter().map(|&(_, _, p)| p).sum();
+        if total <= 0.0 {
+            return;
+        }
+        for &(tenant, slo, pairs) in shares {
+            self.row(tenant, slo).makespan_s += wall_s * pairs / total;
+        }
+    }
+
+    pub fn tenants(&self) -> &BTreeMap<u32, TenantAccount> {
+        &self.tenants
+    }
+
+    pub fn pool(&self) -> &PoolTotals {
+        &self.pool
+    }
+
+    /// Audit: per-tenant rows must sum exactly to the pool totals, and
+    /// no tenant may have completed more than it admitted. Returns a
+    /// human-readable description per violated invariant.
+    pub fn conservation_errors(&self) -> Vec<String> {
+        let mut errs = Vec::new();
+        let mut sum = PoolTotals::default();
+        for (id, row) in &self.tenants {
+            sum.arrived += row.arrived;
+            sum.admitted += row.admitted;
+            sum.completed += row.completed;
+            sum.rejected += row.rejected;
+            sum.bytes += row.bytes;
+            sum.flops += row.flops;
+            sum.redispatched += row.redispatched;
+            if row.completed > row.admitted {
+                errs.push(format!(
+                    "tenant {id}: completed {} > admitted {}",
+                    row.completed, row.admitted
+                ));
+            }
+            if row.admitted + row.rejected > row.arrived {
+                errs.push(format!(
+                    "tenant {id}: admitted {} + rejected {} > arrived {}",
+                    row.admitted, row.rejected, row.arrived
+                ));
+            }
+        }
+        let checks: [(&str, usize, usize); 5] = [
+            ("arrived", sum.arrived, self.pool.arrived),
+            ("admitted", sum.admitted, self.pool.admitted),
+            ("completed", sum.completed, self.pool.completed),
+            ("rejected", sum.rejected, self.pool.rejected),
+            ("redispatched", sum.redispatched, self.pool.redispatched),
+        ];
+        for (name, rows, pool) in checks {
+            if rows != pool {
+                errs.push(format!("{name}: tenant rows sum to {rows} but pool total is {pool}"));
+            }
+        }
+        // Bytes/FLOPs accumulate in the same order on both sides
+        // (f64 addition per admit), so equality is still exact.
+        if sum.bytes.to_bits() != self.pool.bytes.to_bits() {
+            errs.push(format!(
+                "bytes: tenant rows sum to {} but pool total is {}",
+                sum.bytes, self.pool.bytes
+            ));
+        }
+        if sum.flops.to_bits() != self.pool.flops.to_bits() {
+            errs.push(format!(
+                "flops: tenant rows sum to {} but pool total is {}",
+                sum.flops, self.pool.flops
+            ));
+        }
+        errs
+    }
+
+    /// One JSONL row per tenant (streamed to `--accounting-out`).
+    pub fn tenant_rows(&self) -> Vec<Json> {
+        self.tenants
+            .iter()
+            .map(|(id, row)| {
+                let mean_wait = if row.admitted > 0 {
+                    row.wait_waves_sum as f64 / row.admitted as f64
+                } else {
+                    0.0
+                };
+                Json::obj(vec![
+                    ("kind", Json::Str("tenant".into())),
+                    ("tenant", Json::Num(*id as f64)),
+                    (
+                        "slo",
+                        Json::Str(row.slo.map(|s| s.name()).unwrap_or("unknown").into()),
+                    ),
+                    ("arrived", Json::Num(row.arrived as f64)),
+                    ("admitted", Json::Num(row.admitted as f64)),
+                    ("completed", Json::Num(row.completed as f64)),
+                    ("rejected", Json::Num(row.rejected as f64)),
+                    ("bytes", Json::Num(row.bytes)),
+                    ("flops", Json::Num(row.flops)),
+                    ("mean_wait_waves", Json::Num(mean_wait)),
+                    ("max_wait_waves", Json::Num(row.max_wait_waves as f64)),
+                    ("makespan_s", Json::Num(row.makespan_s)),
+                    ("redispatched", Json::Num(row.redispatched as f64)),
+                ])
+            })
+            .collect()
+    }
+
+    /// Aggregate per SLO class for the bench snapshot: tenant counts,
+    /// task/byte/FLOP totals, and the class's worst queue wait.
+    pub fn class_summary(&self) -> Json {
+        let mut out = Vec::new();
+        for class in SloClass::ALL {
+            let rows: Vec<&TenantAccount> = self
+                .tenants
+                .values()
+                .filter(|r| r.slo == Some(class))
+                .collect();
+            let admitted: usize = rows.iter().map(|r| r.admitted).sum();
+            let wait_sum: usize = rows.iter().map(|r| r.wait_waves_sum).sum();
+            let mean_wait = if admitted > 0 {
+                wait_sum as f64 / admitted as f64
+            } else {
+                0.0
+            };
+            out.push((
+                class.name(),
+                Json::obj(vec![
+                    ("tenants", Json::Num(rows.len() as f64)),
+                    ("admitted", Json::Num(admitted as f64)),
+                    (
+                        "completed",
+                        Json::Num(rows.iter().map(|r| r.completed).sum::<usize>() as f64),
+                    ),
+                    ("bytes", Json::Num(rows.iter().map(|r| r.bytes).sum::<f64>())),
+                    ("flops", Json::Num(rows.iter().map(|r| r.flops).sum::<f64>())),
+                    ("mean_wait_waves", Json::Num(mean_wait)),
+                    (
+                        "max_wait_waves",
+                        Json::Num(rows.iter().map(|r| r.max_wait_waves).max().unwrap_or(0) as f64),
+                    ),
+                    ("wait_bound_waves", Json::Num(class.wait_bound_waves() as f64)),
+                ]),
+            ));
+        }
+        Json::obj(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_sum_to_pool_totals() {
+        let mut l = Ledger::new();
+        for t in 0..20u32 {
+            let slo = SloClass::ALL[(t % 3) as usize];
+            for _ in 0..=t {
+                l.note_arrival(t, slo);
+            }
+            for s in 0..t as usize {
+                l.note_admit(t, slo, 64.0, 1e6, s % 5);
+            }
+            for _ in 0..t as usize / 2 {
+                l.note_complete(t, slo);
+            }
+            if t % 4 == 0 {
+                l.note_rejected(t, slo);
+            }
+        }
+        assert!(l.conservation_errors().is_empty(), "{:?}", l.conservation_errors());
+    }
+
+    #[test]
+    fn imbalance_is_detected() {
+        let mut l = Ledger::new();
+        l.note_arrival(1, SloClass::Standard);
+        l.note_admit(1, SloClass::Standard, 10.0, 1.0, 0);
+        // Complete a task under a tenant that never admitted one: both
+        // the per-tenant invariant and the completed-sum check fire.
+        l.note_complete(2, SloClass::Batch);
+        l.note_complete(2, SloClass::Batch);
+        let errs = l.conservation_errors();
+        assert!(errs.iter().any(|e| e.contains("tenant 2")), "{errs:?}");
+    }
+
+    #[test]
+    fn makespan_attribution_follows_pair_share() {
+        let mut l = Ledger::new();
+        l.note_wave_makespan(
+            &[(0, SloClass::Standard, 75.0), (1, SloClass::Batch, 25.0)],
+            2.0,
+        );
+        let t0 = l.tenants().get(&0).unwrap().makespan_s;
+        let t1 = l.tenants().get(&1).unwrap().makespan_s;
+        assert!((t0 - 1.5).abs() < 1e-12 && (t1 - 0.5).abs() < 1e-12, "{t0} {t1}");
+    }
+}

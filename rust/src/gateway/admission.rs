@@ -1,0 +1,197 @@
+//! Admission control: folds queued tenant work into one fused
+//! cross-tenant wave without overrunning the pool's believed capacity.
+//!
+//! Two budgets bound a wave, both derived from the coordinator's
+//! [`PoolCapacity`](crate::coordinator::PoolCapacity) view of the live
+//! pool (believed per-server speeds × arena byte budgets) or pinned
+//! explicitly for tests:
+//!
+//! * **pair budget** — total causal-pair work (`Σ len²`) the pool is
+//!   believed to finish inside one wave;
+//! * **byte budget** — total Q+K+V wire bytes the pool's arenas can
+//!   hold at the configured fill fraction.
+//!
+//! The admit loop walks the WFQ queue *in order* and stops at the first
+//! task that does not fit — it does **not** skip ahead to smaller
+//! tasks. Skipping would silently starve tenants with long contexts;
+//! stopping preserves the WFQ ordering guarantee, and because
+//! [`Admission::push`] rejects any task that could never fit an *empty*
+//! wave, the head task always fits a fresh wave — so every wave admits
+//! at least one task whenever the queue is backlogged (liveness).
+//! Tasks that don't fit the *remaining* headroom simply wait; that is
+//! the backpressure signal surfaced per wave in [`AdmitStats`].
+
+use super::queue::{QueuedTask, WfqQueue};
+use super::tenant::SloClass;
+
+/// Per-wave capacity limits.
+#[derive(Debug, Clone, Copy)]
+pub struct WaveBudget {
+    /// Max total `len²` causal-pair work per wave.
+    pub pairs: f64,
+    /// Max total task wire bytes per wave.
+    pub bytes: f64,
+}
+
+impl WaveBudget {
+    pub fn new(pairs: f64, bytes: f64) -> WaveBudget {
+        assert!(pairs > 0.0, "pair budget must be positive");
+        assert!(bytes > 0.0, "byte budget must be positive");
+        WaveBudget { pairs, bytes }
+    }
+
+    fn fits_empty(&self, task: &QueuedTask) -> bool {
+        task.cost <= self.pairs && task.bytes <= self.bytes
+    }
+}
+
+/// What happened in one admission round.
+#[derive(Debug, Clone, Default)]
+pub struct AdmitStats {
+    /// Tasks admitted into this wave.
+    pub admitted: usize,
+    /// Causal-pair work admitted.
+    pub admitted_pairs: f64,
+    /// Wire bytes admitted.
+    pub admitted_bytes: f64,
+    /// Tasks still queued after the wave filled (backpressure depth).
+    pub backlog: usize,
+    /// True when the wave closed because a task exceeded remaining
+    /// headroom (as opposed to the queue simply running dry).
+    pub saturated: bool,
+}
+
+/// The gateway's admission gate: a WFQ queue plus a per-wave budget.
+#[derive(Debug)]
+pub struct Admission {
+    queue: WfqQueue,
+    budget: WaveBudget,
+    /// Tasks rejected at enqueue time because they could never fit
+    /// even an empty wave (counted, never queued).
+    pub rejected_oversize: usize,
+}
+
+impl Admission {
+    pub fn new(budget: WaveBudget) -> Admission {
+        Admission {
+            queue: WfqQueue::new(),
+            budget,
+            rejected_oversize: 0,
+        }
+    }
+
+    pub fn queue(&self) -> &WfqQueue {
+        &self.queue
+    }
+
+    /// Re-derive the per-wave budget from fresh pool beliefs (workers
+    /// die, drain, and rejoin mid-run). Applies to subsequent pushes
+    /// and waves; already-queued tasks keep their place.
+    pub fn set_budget(&mut self, budget: WaveBudget) {
+        self.budget = budget;
+    }
+
+    /// Minimum-progress override: pop the WFQ head unconditionally.
+    /// Used only when a *shrunken* budget (capacity lost after the task
+    /// was legally enqueued) no longer fits even an empty wave —
+    /// without it the strict-order admit loop would wedge forever on a
+    /// task admission can neither dispatch nor drop.
+    pub fn force_pop(&mut self) -> Option<QueuedTask> {
+        self.queue.pop()
+    }
+
+    /// Enqueue one task under its tenant's SLO weight. Returns `false`
+    /// (and counts the rejection) if the task exceeds the whole-wave
+    /// budget — such a task could never dispatch and would wedge the
+    /// strict-order admit loop forever.
+    pub fn push(&mut self, task: QueuedTask, slo: SloClass) -> bool {
+        if !self.budget.fits_empty(&task) {
+            self.rejected_oversize += 1;
+            return false;
+        }
+        self.queue.push(task, slo.weight());
+        true
+    }
+
+    /// Pop tasks in WFQ order into one wave until the next task would
+    /// exceed the remaining pair or byte headroom.
+    pub fn admit_wave(&mut self) -> (Vec<QueuedTask>, AdmitStats) {
+        let mut wave = Vec::new();
+        let mut stats = AdmitStats::default();
+        let mut pairs_left = self.budget.pairs;
+        let mut bytes_left = self.budget.bytes;
+        while let Some(head) = self.queue.peek() {
+            if head.cost > pairs_left || head.bytes > bytes_left {
+                stats.saturated = true;
+                break;
+            }
+            let task = self.queue.pop().expect("peeked task pops");
+            pairs_left -= task.cost;
+            bytes_left -= task.bytes;
+            stats.admitted += 1;
+            stats.admitted_pairs += task.cost;
+            stats.admitted_bytes += task.bytes;
+            wave.push(task);
+        }
+        stats.backlog = self.queue.len();
+        (wave, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(tenant: u32, seq: u32, len: usize) -> QueuedTask {
+        // 1 byte per causal pair keeps both budgets easy to reason about.
+        QueuedTask::new(tenant, seq, len, 0, (len * len) as f64)
+    }
+
+    #[test]
+    fn oversize_tasks_are_rejected_at_enqueue() {
+        let mut adm = Admission::new(WaveBudget::new(100.0, 1e9));
+        assert!(adm.push(task(0, 0, 8), SloClass::Standard)); // cost 64
+        assert!(!adm.push(task(0, 1, 16), SloClass::Standard)); // cost 256 > 100
+        assert_eq!(adm.rejected_oversize, 1);
+        assert_eq!(adm.queue().len(), 1);
+    }
+
+    #[test]
+    fn wave_never_exceeds_budget_and_always_admits_head() {
+        let mut adm = Admission::new(WaveBudget::new(200.0, 1e9));
+        for seq in 0..10 {
+            assert!(adm.push(task(seq, 0, 8), SloClass::Standard)); // cost 64 each
+        }
+        let (wave, stats) = adm.admit_wave();
+        // 3×64 = 192 fits, a 4th would hit 256 > 200.
+        assert_eq!(wave.len(), 3);
+        assert!(stats.saturated);
+        assert_eq!(stats.backlog, 7);
+        assert!(stats.admitted_pairs <= 200.0);
+        // Next wave admits again: no wedging.
+        let (wave2, _) = adm.admit_wave();
+        assert_eq!(wave2.len(), 3);
+    }
+
+    #[test]
+    fn byte_headroom_also_closes_the_wave() {
+        let mut adm = Admission::new(WaveBudget::new(1e9, 130.0));
+        for seq in 0..4 {
+            assert!(adm.push(task(0, seq, 8), SloClass::Batch)); // 64 bytes each
+        }
+        let (wave, stats) = adm.admit_wave();
+        assert_eq!(wave.len(), 2); // 128 <= 130, third would be 192
+        assert!(stats.saturated);
+        assert!(stats.admitted_bytes <= 130.0);
+    }
+
+    #[test]
+    fn queue_running_dry_is_not_saturation() {
+        let mut adm = Admission::new(WaveBudget::new(1e9, 1e9));
+        adm.push(task(0, 0, 8), SloClass::Interactive);
+        let (wave, stats) = adm.admit_wave();
+        assert_eq!(wave.len(), 1);
+        assert!(!stats.saturated);
+        assert_eq!(stats.backlog, 0);
+    }
+}

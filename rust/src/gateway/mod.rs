@@ -1,0 +1,652 @@
+//! Multi-tenant serving gateway: continuous cross-tenant batching into
+//! the shared attention-server pool.
+//!
+//! CA-tasks are pure and composable (§4.1): a fused wave may mix tasks
+//! from *any* set of documents — and therefore any set of tenants —
+//! without changing a single output bit. This module exploits that to
+//! put one shared elastic pool behind many tenants:
+//!
+//! ```text
+//!  tenant streams          gateway                      shared pool
+//!  ─────────────   ──────────────────────────   ──────────────────────
+//!  t0 ─ docs ──▶ ┌─────────┐   ┌───────────┐    ┌────────────────────┐
+//!  t1 ─ docs ──▶ │ per-    │   │ admission │    │ ElasticCoordinator │
+//!  t2 ─ docs ──▶ │ tenant  ├──▶│ (pair +   ├──▶ │  dispatch/gather   │
+//!   ⋮            │ WFQ     │   │  byte     │    │  failover, dedup   │
+//!  tN ─ docs ──▶ │ queues  │   │  budgets) │    │  (tenant-blind)    │
+//!                └─────────┘   └───────────┘    └────────────────────┘
+//!                 SCFQ stamps   strict order     fused cross-tenant
+//!                 weight = SLO  stop-at-first-   wave, tenant id in
+//!                               non-fit          every task's doc bits
+//! ```
+//!
+//! * [`tenant`] — seeded synthetic tenant populations: per-tenant
+//!   context-length distributions, Poisson arrival rates under a
+//!   diurnal curve, SLO classes;
+//! * [`queue`] — self-clocked weighted-fair queueing across per-tenant
+//!   queues (starvation-free by construction);
+//! * [`admission`] — backpressure: a wave admits in WFQ order until the
+//!   pool's believed pair/byte capacity
+//!   ([`PoolCapacity`](crate::coordinator::PoolCapacity)) is spent;
+//! * [`accounting`] — the double-entry per-tenant ledger (tasks, bytes,
+//!   FLOPs, queue-wait, makespan share) streamed to `--accounting-out`
+//!   JSONL and aggregated into `BENCH_gateway.json`.
+//!
+//! The elastic layer stays **tenant-blind**: tenancy rides in the doc
+//! id ([`crate::server::tenant_doc`], echoed in every tag), so
+//! first-response-wins dedup, cancel, and re-dispatch are per-tenant-
+//! correct with zero changes to dispatch/gather — and the wire codec
+//! surfaces the same id in the frame header for observability
+//! ([`crate::net::codec`]). Every gathered output is verified bit-exact
+//! against the per-tenant GQA oracle: fused cross-tenant batching must
+//! be invisible in the outputs.
+
+pub mod accounting;
+pub mod admission;
+pub mod queue;
+pub mod tenant;
+
+pub use accounting::{Ledger, PoolTotals, TenantAccount};
+pub use admission::{Admission, AdmitStats, WaveBudget};
+pub use queue::{QueuedTask, WfqQueue};
+pub use tenant::{SloClass, TenantSpec};
+
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{PoolCapacity, ServerBelief};
+use crate::elastic::{
+    ElasticCfg, ElasticCoordinator, ElasticTask, FaultEvent, FaultPlan, ReferenceCaCompute,
+    ServerState,
+};
+use crate::exchange::transport::Transport;
+use crate::net::serve::{
+    connect_and_config, drain_events, split_fault_plan, wait_hello, WorkerProcs,
+};
+use crate::net::{NetEvent, TcpTransport, NET_DIMS};
+use crate::runtime::ca_exec::synthetic_task;
+use crate::server::{tenant_doc, MAX_TENANT_SEQ};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use accounting::task_flops;
+use tenant::{clamp_len, diurnal_factor, poisson, sample_len, synth_tenants};
+
+/// Everything a gateway run needs.
+#[derive(Debug, Clone)]
+pub struct GatewayCfg {
+    /// Synthetic tenant population size.
+    pub tenants: usize,
+    /// Shared pool size.
+    pub workers: usize,
+    /// Arrival waves; the run then drains the backlog (bounded by
+    /// [`GatewayCfg::max_drain_waves`]).
+    pub waves: usize,
+    /// Pool-wide mean doc arrivals per wave at diurnal factor 1.0,
+    /// Pareto-split across tenants.
+    pub arrival_rate: f64,
+    pub seed: u64,
+    /// Scripted faults, indexed by *dispatched-wave* number. Networked
+    /// mode executes kills/rejoins at the process level (SIGKILL /
+    /// respawn); everything else goes in-band through the elastic tick.
+    pub fault: FaultPlan,
+    /// Networked mode: spawn `distca worker` child processes.
+    pub spawn: bool,
+    /// Networked mode: dial externally started daemons (len == workers).
+    pub connect: Vec<String>,
+    /// Diurnal cycle length in waves (≤ 0 disables modulation).
+    pub diurnal_period: f64,
+    /// Believed causal-pair work one nominal server completes per wave
+    /// (the supply half of admission).
+    pub pairs_per_server: f64,
+    /// Per-server transient-arena byte budget (0 = bytes unbounded) —
+    /// the [`crate::memplan`] §5 budget role, applied at admission.
+    pub arena_per_server: f64,
+    /// Fraction of the arena budget admission may fill (< 1 keeps
+    /// headroom for recovery re-sends).
+    pub fill: f64,
+    /// Per-tenant accounting JSONL sink.
+    pub accounting_out: Option<PathBuf>,
+    /// Summary JSON (`BENCH_gateway.json`).
+    pub bench_out: Option<PathBuf>,
+    /// Safety cap on post-arrival drain waves.
+    pub max_drain_waves: usize,
+}
+
+impl Default for GatewayCfg {
+    fn default() -> GatewayCfg {
+        GatewayCfg {
+            tenants: 32,
+            workers: 4,
+            waves: 8,
+            arrival_rate: 48.0,
+            seed: 42,
+            fault: FaultPlan::new(),
+            spawn: false,
+            connect: Vec::new(),
+            diurnal_period: 24.0,
+            pairs_per_server: 40_000.0,
+            arena_per_server: 4.0 * 1024.0 * 1024.0,
+            fill: 0.8,
+            accounting_out: None,
+            bench_out: None,
+            max_drain_waves: 10_000,
+        }
+    }
+}
+
+/// One wave's gateway-level accounting row.
+#[derive(Debug, Clone)]
+pub struct GatewayWaveRecord {
+    pub wave: usize,
+    /// Docs emitted by the arrival processes this wave.
+    pub arrivals: usize,
+    /// Tasks folded into this wave's fused batch.
+    pub admitted: usize,
+    /// Queue depth after admission closed (backpressure signal).
+    pub backlog: usize,
+    /// Tenants with work in this wave's fused batch.
+    pub wave_tenants: usize,
+    /// Whether admission closed on budget (vs the queue running dry).
+    pub saturated: bool,
+    pub admitted_pairs: f64,
+    pub admitted_bytes: f64,
+    pub n_alive: usize,
+    /// Elastic-layer recovery re-sends within the wave.
+    pub redispatched: usize,
+    /// Wall-clock seconds of the dispatched wave (0 for skipped waves).
+    pub elapsed: f64,
+}
+
+impl GatewayWaveRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str("wave".into())),
+            ("wave", Json::Num(self.wave as f64)),
+            ("arrivals", Json::Num(self.arrivals as f64)),
+            ("admitted", Json::Num(self.admitted as f64)),
+            ("backlog", Json::Num(self.backlog as f64)),
+            ("wave_tenants", Json::Num(self.wave_tenants as f64)),
+            ("saturated", Json::Bool(self.saturated)),
+            ("admitted_pairs", Json::Num(self.admitted_pairs)),
+            ("admitted_bytes", Json::Num(self.admitted_bytes)),
+            ("alive", Json::Num(self.n_alive as f64)),
+            ("redispatched", Json::Num(self.redispatched as f64)),
+            ("elapsed_s", Json::Num(self.elapsed)),
+        ])
+    }
+}
+
+/// A tenant whose worst queue wait exceeded its SLO class bound.
+#[derive(Debug, Clone)]
+pub struct StarvationBreach {
+    pub tenant: u32,
+    pub slo: SloClass,
+    pub max_wait_waves: usize,
+    pub bound_waves: usize,
+}
+
+/// Outcome of a gateway run. Construction implies every output of
+/// every wave verified bit-exact against its tenant's oracle and the
+/// ledger passed its conservation audit.
+#[derive(Debug)]
+pub struct GatewayReport {
+    pub tenants: usize,
+    pub workers: usize,
+    pub arrival_waves: usize,
+    /// Arrival waves + drain waves actually run.
+    pub total_waves: usize,
+    /// Waves that dispatched a non-empty fused batch.
+    pub dispatched_waves: usize,
+    pub seed: u64,
+    pub per_wave: Vec<GatewayWaveRecord>,
+    pub ledger: Ledger,
+    /// Oversize docs refused at enqueue (whole-wave-budget misfits).
+    pub rejected_oversize: usize,
+    /// Tenants whose max queue wait broke their SLO bound (a clean
+    /// soak has none).
+    pub starvation_breaches: Vec<StarvationBreach>,
+    /// Deepest backlog any wave closed with.
+    pub max_backlog: usize,
+    /// Waves closed by budget rather than an empty queue.
+    pub saturated_waves: usize,
+    /// Minimum-progress overrides (head force-popped after capacity
+    /// loss shrank the budget below it).
+    pub forced_admissions: usize,
+}
+
+impl GatewayReport {
+    /// The `BENCH_gateway.json` shape: pool-level totals, per-SLO-class
+    /// aggregates, and queueing summary — no per-wave array (the JSONL
+    /// stream carries the per-wave rows; the bench stays drift-friendly).
+    pub fn to_json(&self) -> Json {
+        let p = self.ledger.pool();
+        Json::obj(vec![
+            ("bench", Json::Str("gateway_soak".into())),
+            ("tenants", Json::Num(self.tenants as f64)),
+            ("workers", Json::Num(self.workers as f64)),
+            ("arrival_waves", Json::Num(self.arrival_waves as f64)),
+            ("total_waves", Json::Num(self.total_waves as f64)),
+            ("dispatched_waves", Json::Num(self.dispatched_waves as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("bit_exact", Json::Bool(true)),
+            ("conservation_ok", Json::Bool(true)),
+            (
+                "pool",
+                Json::obj(vec![
+                    ("arrived", Json::Num(p.arrived as f64)),
+                    ("admitted", Json::Num(p.admitted as f64)),
+                    ("completed", Json::Num(p.completed as f64)),
+                    ("rejected", Json::Num(p.rejected as f64)),
+                    ("bytes", Json::Num(p.bytes)),
+                    ("flops", Json::Num(p.flops)),
+                    ("redispatched", Json::Num(p.redispatched as f64)),
+                ]),
+            ),
+            ("classes", self.ledger.class_summary()),
+            ("starvation_breaches", Json::Num(self.starvation_breaches.len() as f64)),
+            ("max_backlog", Json::Num(self.max_backlog as f64)),
+            ("saturated_waves", Json::Num(self.saturated_waves as f64)),
+            ("forced_admissions", Json::Num(self.forced_admissions as f64)),
+            ("rejected_oversize", Json::Num(self.rejected_oversize as f64)),
+        ])
+    }
+}
+
+/// The pool backend: in-process worker threads, or worker processes
+/// over TCP (the [`crate::net`] runtime).
+enum Backend {
+    InProcess,
+    Net { fabric: Arc<TcpTransport>, procs: WorkerProcs, pending: Vec<NetEvent> },
+}
+
+/// Derive this wave's admission budget from the pool's live beliefs:
+/// believed speeds aggregate into pair capacity, per-server arena
+/// budgets into byte capacity.
+fn live_budget(co: &ElasticCoordinator, cfg: &GatewayCfg) -> Option<WaveBudget> {
+    let alive = co.pool.schedulable();
+    if alive.is_empty() {
+        return None;
+    }
+    let view = co.pool.view();
+    let speeds = co.pool.believed_speeds(&view);
+    let beliefs = ServerBelief::from_speeds(&speeds, cfg.arena_per_server);
+    let cap = PoolCapacity::from_beliefs(&beliefs, cfg.arena_per_server);
+    Some(WaveBudget::new(
+        cap.pair_budget(1.0, cfg.pairs_per_server),
+        cap.byte_budget(cfg.fill),
+    ))
+}
+
+/// Wire bytes of one task's f32 Q+K+V at the gateway dims.
+fn task_bytes(len: usize) -> f64 {
+    let (h, hkv, d) = NET_DIMS;
+    (len * (h + 2 * hkv) * d * 4) as f64
+}
+
+/// Deterministic per-doc tensor stream: a fresh generator keyed by the
+/// tenant's seed and the doc's *full* sequence number. Queued work
+/// carries only `(tenant, seq, len)` — the tensors are re-derived here
+/// at dispatch, which is what keeps a 10k-tenant backlog byte-cheap
+/// and the per-tenant oracle comparison exact.
+fn doc_rng(spec: &TenantSpec, seq: u32) -> Rng {
+    Rng::new(spec.seed ^ (seq as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// Run a gateway session. Returns only if every wave's outputs were
+/// bit-exact per tenant, the ledger's per-tenant rows summed exactly to
+/// the pool totals, and (networked mode) shutdown leaked nothing.
+pub fn run_gateway(cfg: &GatewayCfg) -> Result<GatewayReport> {
+    let n = cfg.workers;
+    let (h, hkv, d) = NET_DIMS;
+    anyhow::ensure!(n >= 2, "need at least 2 workers");
+    anyhow::ensure!(cfg.waves >= 1, "need at least 1 arrival wave");
+    anyhow::ensure!(cfg.tenants >= 1, "need at least 1 tenant");
+    anyhow::ensure!(cfg.fill > 0.0 && cfg.fill <= 1.0, "--fill must be in (0, 1]");
+    let networked = cfg.spawn || !cfg.connect.is_empty();
+    anyhow::ensure!(
+        !(cfg.spawn && !cfg.connect.is_empty()),
+        "pass at most one of --spawn and --connect a,b,c"
+    );
+    anyhow::ensure!(
+        cfg.spawn
+            || !networked
+            || !cfg.fault.events.iter().any(|e| matches!(e, FaultEvent::Rejoin { .. })),
+        "scripted rejoin: requires --spawn (a remote daemon cannot be respawned)"
+    );
+
+    // Pool backend + coordinator. In-process mode runs the whole fault
+    // plan in-band (the threaded runtime models kills itself);
+    // networked mode executes kills/rejoins at the process level.
+    let (mut backend, mut co, process_plan, inband) = if networked {
+        let fabric = TcpTransport::coordinator(n);
+        let mut procs = WorkerProcs::start(cfg.spawn, n, &cfg.connect)?;
+        for rank in 0..n {
+            connect_and_config(&fabric, rank, n, procs.addr(rank), Duration::ZERO)?;
+        }
+        let mut pending: Vec<NetEvent> = Vec::new();
+        for rank in 0..n {
+            wait_hello(&fabric, rank, &mut pending, Duration::from_secs(10))?;
+        }
+        let dyn_fabric: Arc<dyn Transport> = Arc::clone(&fabric) as Arc<dyn Transport>;
+        let co = ElasticCoordinator::over_transport(dyn_fabric, n, ElasticCfg::default());
+        let (process_plan, inband) = split_fault_plan(&cfg.fault);
+        (Backend::Net { fabric, procs, pending }, co, process_plan, inband)
+    } else {
+        let co = ElasticCoordinator::spawn(n, ElasticCfg::default(), |_| {
+            Box::new(ReferenceCaCompute::new(h, hkv, d))
+        });
+        (Backend::InProcess, co, FaultPlan::new(), cfg.fault.clone())
+    };
+    let oracle = ReferenceCaCompute::new(h, hkv, d);
+
+    // The tenant population and its per-stream arrival generators.
+    let mut pop_rng = Rng::new(cfg.seed);
+    let specs = synth_tenants(cfg.tenants, cfg.arrival_rate, &mut pop_rng);
+    let mut arrival_rngs: Vec<Rng> = specs.iter().map(|s| Rng::new(s.seed)).collect();
+    let mut seqs: Vec<u32> = vec![0; cfg.tenants];
+
+    let initial = live_budget(&co, cfg).context("pool has no live workers at start")?;
+    let mut adm = Admission::new(initial);
+    let mut ledger = Ledger::new();
+    let mut per_wave: Vec<GatewayWaveRecord> = Vec::new();
+    let mut acct_file = match &cfg.accounting_out {
+        Some(p) => Some(std::io::BufWriter::new(
+            std::fs::File::create(p).with_context(|| format!("creating {}", p.display()))?,
+        )),
+        None => None,
+    };
+
+    let mut dispatch_tick = 0usize; // fault-plan clock: dispatched waves only
+    let mut forced_admissions = 0usize;
+    let mut wave = 0usize;
+    loop {
+        let arriving = wave < cfg.waves;
+        if !arriving && adm.queue().is_empty() {
+            break;
+        }
+        anyhow::ensure!(
+            wave < cfg.waves + cfg.max_drain_waves,
+            "backlog failed to drain within {} extra waves ({} tasks left)",
+            cfg.max_drain_waves,
+            adm.queue().len()
+        );
+
+        // Connection evidence → membership (networked only; cheap).
+        if let Backend::Net { fabric, pending, .. } = &mut backend {
+            drain_events(fabric, pending);
+            for ev in pending.drain(..) {
+                match ev {
+                    NetEvent::Disconnected { rank } => {
+                        if rank < n && co.pool.is_schedulable(rank) {
+                            co.pool.kill(rank);
+                            co.health.mark_dead(rank);
+                        }
+                    }
+                    NetEvent::Hello { rank } => {
+                        if rank < n && co.pool.state(rank) == ServerState::Dead {
+                            co.pool.restore(rank);
+                            co.health.reset(rank);
+                        }
+                    }
+                    // Heartbeats are disabled (interval zero) and the
+                    // gateway runs no recorder; drains are honored as a
+                    // plain in-band graceful leave at the next tick.
+                    _ => {}
+                }
+            }
+        }
+
+        // 1. Arrivals: each tenant's Poisson stream under its diurnal
+        // phase, enqueued under its SLO weight (or refused if the doc
+        // could never fit a whole wave).
+        let mut arrivals = 0usize;
+        if arriving {
+            for (t, spec) in specs.iter().enumerate() {
+                let lambda = spec.rate * diurnal_factor(wave, cfg.diurnal_period, spec.phase);
+                let k = poisson(&mut arrival_rngs[t], lambda);
+                for _ in 0..k {
+                    arrivals += 1;
+                    ledger.note_arrival(spec.id, spec.slo);
+                    let len = clamp_len(sample_len(spec, &mut arrival_rngs[t]));
+                    let task =
+                        QueuedTask::new(spec.id, seqs[t], len, wave, task_bytes(len));
+                    seqs[t] = seqs[t].wrapping_add(1);
+                    if !adm.push(task, spec.slo) {
+                        ledger.note_rejected(spec.id, spec.slo);
+                    }
+                }
+            }
+        }
+
+        // 2. Admission against the pool's *current* believed capacity.
+        let alive = co.pool.schedulable();
+        anyhow::ensure!(!alive.is_empty(), "wave {wave}: no live workers");
+        if let Some(b) = live_budget(&co, cfg) {
+            adm.set_budget(b);
+        }
+        let (mut admitted, mut stats) = adm.admit_wave();
+        if admitted.is_empty() && !adm.queue().is_empty() {
+            // Capacity shrank below the (legally enqueued) head task:
+            // force minimum progress rather than wedging the queue.
+            if let Some(head) = adm.force_pop() {
+                stats.admitted_pairs += head.cost;
+                stats.admitted_bytes += head.bytes;
+                admitted.push(head);
+                forced_admissions += 1;
+            }
+        }
+
+        let mut rec = GatewayWaveRecord {
+            wave,
+            arrivals,
+            admitted: admitted.len(),
+            backlog: adm.queue().len(),
+            wave_tenants: 0,
+            saturated: stats.saturated,
+            admitted_pairs: stats.admitted_pairs,
+            admitted_bytes: stats.admitted_bytes,
+            n_alive: alive.len(),
+            redispatched: 0,
+            elapsed: 0.0,
+        };
+
+        if !admitted.is_empty() {
+            // 3. Scripted faults, keyed on the dispatch clock. Process
+            // kills/rejoins first (networked), in-band events ride into
+            // run_tick below.
+            if let Backend::Net { fabric, procs, pending } = &mut backend {
+                for ev in process_plan.events_at(dispatch_tick) {
+                    match ev {
+                        FaultEvent::Kill { server, .. } if server < n => {
+                            procs.kill(server, fabric);
+                        }
+                        FaultEvent::Rejoin { server, .. } if server < n => {
+                            procs.respawn(server)?;
+                            connect_and_config(
+                                fabric,
+                                server,
+                                n,
+                                procs.addr(server),
+                                Duration::ZERO,
+                            )?;
+                            wait_hello(fabric, server, pending, Duration::from_secs(10))?;
+                            pending.retain(|e| {
+                                !matches!(e, NetEvent::Disconnected { rank } if *rank == server)
+                            });
+                            co.pool.restore(server);
+                            co.health.reset(server);
+                        }
+                        _ => {}
+                    }
+                }
+            }
+
+            // 4. Materialize the fused cross-tenant wave: tenant id in
+            // the doc bits (surviving the wire round-trip in every
+            // tag), tensors re-derived from the per-doc seed chain.
+            let mut tasks = Vec::with_capacity(admitted.len());
+            let mut shares: Vec<(u32, SloClass, f64)> = Vec::new();
+            let mut wave_tenants = std::collections::BTreeSet::new();
+            for (i, qt) in admitted.iter().enumerate() {
+                let spec = &specs[qt.tenant as usize];
+                let mut trng = doc_rng(spec, qt.seq);
+                let server = alive[i % alive.len()];
+                tasks.push(ElasticTask {
+                    doc: tenant_doc(qt.tenant, qt.seq % MAX_TENANT_SEQ),
+                    q_start: 0,
+                    server,
+                    home: server,
+                    tensors: synthetic_task(&mut trng, qt.len, qt.len, h, hkv, d),
+                });
+                ledger.note_admit(
+                    qt.tenant,
+                    spec.slo,
+                    qt.bytes,
+                    task_flops(qt.len, h, d),
+                    wave - qt.enqueued_wave,
+                );
+                shares.push((qt.tenant, spec.slo, qt.cost));
+                wave_tenants.insert(qt.tenant);
+            }
+            rec.wave_tenants = wave_tenants.len();
+
+            // 5. One elastic tick over the shared pool, tenant-blind.
+            let outputs = co.run_tick(dispatch_tick, &tasks, &inband)?;
+            dispatch_tick += 1;
+
+            // 6. Per-tenant bit-exactness: each output must equal its
+            // tenant's own oracle result, regardless of which server
+            // computed it or how many times it was re-dispatched.
+            anyhow::ensure!(
+                outputs.len() == tasks.len(),
+                "wave {wave}: gathered {} of {} outputs",
+                outputs.len(),
+                tasks.len()
+            );
+            for out in &outputs {
+                let (i, task) = tasks
+                    .iter()
+                    .enumerate()
+                    .find(|(_, t)| t.doc == out.doc && t.q_start == out.q_start)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("wave {wave}: unknown output doc {}", out.doc)
+                    })?;
+                let expect = oracle.run_batch(std::slice::from_ref(&task.tensors));
+                let qt = &admitted[i];
+                anyhow::ensure!(
+                    out.o == expect[0],
+                    "wave {wave} tenant {} seq {}: output diverged from the tenant's oracle",
+                    qt.tenant,
+                    qt.seq
+                );
+                ledger.note_complete(qt.tenant, specs[qt.tenant as usize].slo);
+            }
+
+            // 7. Fold the elastic layer's per-tenant splits back into
+            // the ledger (who paid for this wave's faults) and
+            // attribute the wave's wall clock by pair share.
+            let st = co.stats.last().expect("run_tick records stats");
+            for (&t, &k) in &st.tenant_redispatched {
+                ledger.note_redispatch(t, specs[t as usize].slo, k);
+            }
+            ledger.note_wave_makespan(&shares, st.elapsed);
+            rec.redispatched = st.redispatched + st.send_failovers + st.oom_evicted;
+            rec.elapsed = st.elapsed;
+        }
+
+        if let Some(f) = acct_file.as_mut() {
+            writeln!(f, "{}", rec.to_json().to_string_compact())
+                .context("writing --accounting-out wave row")?;
+        }
+        per_wave.push(rec);
+        wave += 1;
+    }
+
+    // Orderly shutdown before the audit: a leaked worker is a failure
+    // even if the numbers balance.
+    co.shutdown()?;
+    if let Backend::Net { procs, .. } = &mut backend {
+        procs.shutdown()?;
+    }
+
+    // Conservation audit: per-tenant rows must sum exactly to the
+    // independently tracked pool totals, and — arrivals having stopped
+    // before the drain — everything admitted must have completed.
+    let errs = ledger.conservation_errors();
+    anyhow::ensure!(
+        errs.is_empty(),
+        "accounting conservation violated:\n  {}",
+        errs.join("\n  ")
+    );
+    let p = ledger.pool();
+    anyhow::ensure!(
+        p.completed == p.admitted,
+        "drained run completed {} of {} admitted tasks",
+        p.completed,
+        p.admitted
+    );
+    anyhow::ensure!(
+        p.admitted + p.rejected == p.arrived,
+        "admitted {} + rejected {} != arrived {}",
+        p.admitted,
+        p.rejected,
+        p.arrived
+    );
+
+    let starvation_breaches: Vec<StarvationBreach> = ledger
+        .tenants()
+        .iter()
+        .filter_map(|(&tenant, row)| {
+            let slo = row.slo?;
+            (row.max_wait_waves > slo.wait_bound_waves()).then(|| StarvationBreach {
+                tenant,
+                slo,
+                max_wait_waves: row.max_wait_waves,
+                bound_waves: slo.wait_bound_waves(),
+            })
+        })
+        .collect();
+
+    // Stream the per-tenant rows, then the completion marker: a reader
+    // that sees the flush record knows the file is whole.
+    if let Some(f) = acct_file.as_mut() {
+        for row in ledger.tenant_rows() {
+            writeln!(f, "{}", row.to_string_compact())
+                .context("writing --accounting-out tenant row")?;
+        }
+        let flush = Json::obj(vec![
+            ("kind", Json::Str("flush".into())),
+            ("waves", Json::Num(wave as f64)),
+            ("tenants", Json::Num(ledger.tenants().len() as f64)),
+        ]);
+        writeln!(f, "{}", flush.to_string_compact())
+            .context("writing --accounting-out flush record")?;
+        f.flush().context("flushing --accounting-out")?;
+    }
+
+    let report = GatewayReport {
+        tenants: cfg.tenants,
+        workers: n,
+        arrival_waves: cfg.waves,
+        total_waves: wave,
+        dispatched_waves: dispatch_tick,
+        seed: cfg.seed,
+        max_backlog: per_wave.iter().map(|r| r.backlog).max().unwrap_or(0),
+        saturated_waves: per_wave.iter().filter(|r| r.saturated).count(),
+        rejected_oversize: adm.rejected_oversize,
+        per_wave,
+        ledger,
+        starvation_breaches,
+        forced_admissions,
+    };
+    if let Some(path) = &cfg.bench_out {
+        std::fs::write(path, report.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))?;
+    }
+    Ok(report)
+}

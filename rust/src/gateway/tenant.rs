@@ -1,0 +1,195 @@
+//! Synthetic tenant population: seeded per-tenant streams of doc
+//! batches, each with its own context-length distribution, arrival
+//! rate, and SLO class, modulated by a shared diurnal load curve.
+//!
+//! Tenants are *specifications*, not state: everything a tenant ever
+//! emits is a deterministic function of `(gateway seed, tenant id,
+//! per-tenant sequence number)`, so a soak with 10k+ tenants carries no
+//! per-tenant tensor state — queued work is described by `(tenant,
+//! seq, len)` and the tensors are re-derived at dispatch (and again by
+//! the per-tenant oracle check, which is what makes the bit-exactness
+//! comparison meaningful end to end).
+
+use crate::util::rng::Rng;
+
+/// Service class: sets the tenant's weighted-fair-queueing weight and
+/// the queue-wait bound the soak holds it to (in waves). Interactive
+/// tenants get 4× the scheduling share of batch tenants and a 8× tighter
+/// wait bound.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SloClass {
+    /// Latency-sensitive: highest WFQ weight, tightest wait bound.
+    Interactive,
+    /// Default class.
+    Standard,
+    /// Throughput-oriented: lowest weight, loosest bound.
+    Batch,
+}
+
+impl SloClass {
+    /// WFQ weight: scheduling share relative to other backlogged
+    /// tenants.
+    pub fn weight(self) -> f64 {
+        match self {
+            SloClass::Interactive => 4.0,
+            SloClass::Standard => 2.0,
+            SloClass::Batch => 1.0,
+        }
+    }
+
+    /// Queue-wait bound in waves: the soak reports a starvation breach
+    /// for any tenant of this class whose max admit-wait exceeds it.
+    pub fn wait_bound_waves(self) -> usize {
+        match self {
+            SloClass::Interactive => 8,
+            SloClass::Standard => 24,
+            SloClass::Batch => 64,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Standard => "standard",
+            SloClass::Batch => "batch",
+        }
+    }
+
+    pub const ALL: [SloClass; 3] = [SloClass::Interactive, SloClass::Standard, SloClass::Batch];
+}
+
+/// One synthetic tenant: a seeded stream specification.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub id: u32,
+    pub slo: SloClass,
+    /// Mean doc arrivals per wave at diurnal factor 1.0.
+    pub rate: f64,
+    /// Lognormal context-length parameters (of the underlying normal):
+    /// each tenant has its *own* length distribution — the cross-tenant
+    /// mix is what the fused waves rebatch.
+    pub len_mu: f64,
+    pub len_sigma: f64,
+    /// Diurnal phase offset: tenants peak at different times of "day".
+    pub phase: f64,
+    /// Per-tenant arrival-stream seed (forked from the gateway seed).
+    pub seed: u64,
+}
+
+/// Clamp bounds for sampled per-doc context lengths (kernel units: the
+/// oracle is O(len²), and the wire ships `len·(h + 2·hkv)·d` floats).
+pub const MIN_LEN: usize = 4;
+pub const MAX_LEN: usize = 96;
+
+/// Build a seeded tenant population whose rates sum to `total_rate`
+/// (mean pool-wide arrivals per wave at diurnal factor 1.0). Rate
+/// shares are Pareto-skewed — a few heavy tenants, a long tail of
+/// light ones — and SLO classes are drawn 20/50/30.
+pub fn synth_tenants(n: usize, total_rate: f64, rng: &mut Rng) -> Vec<TenantSpec> {
+    assert!(n >= 1, "need at least one tenant");
+    assert!(
+        n as u32 <= crate::server::MAX_TENANTS,
+        "{n} tenants exceeds the {}-tenant id space",
+        crate::server::MAX_TENANTS
+    );
+    let shares: Vec<f64> = (0..n).map(|_| rng.gen_pareto(1.0, 1.5)).collect();
+    let share_sum: f64 = shares.iter().sum();
+    let class_weights = [0.2, 0.5, 0.3];
+    (0..n)
+        .map(|i| TenantSpec {
+            id: i as u32,
+            slo: SloClass::ALL[rng.choose_weighted(&class_weights)],
+            rate: total_rate * shares[i] / share_sum,
+            len_mu: rng.gen_f64(2.2, 3.6),   // median length ~9..37
+            len_sigma: rng.gen_f64(0.2, 0.8),
+            phase: rng.gen_f64(0.0, 2.0 * std::f64::consts::PI),
+            seed: rng.fork().next_u64(),
+        })
+        .collect()
+}
+
+/// Diurnal load multiplier at `wave` for a cycle of `period` waves:
+/// `1 + 0.8·sin(2π·wave/period + phase)`, in `[0.2, 1.8]`. `period <=
+/// 0` disables modulation.
+pub fn diurnal_factor(wave: usize, period: f64, phase: f64) -> f64 {
+    if period <= 0.0 {
+        return 1.0;
+    }
+    1.0 + 0.8 * (2.0 * std::f64::consts::PI * wave as f64 / period + phase).sin()
+}
+
+/// Seeded Poisson sample (Knuth): the number of docs a tenant emits in
+/// one wave at mean `lambda`. Exact for the small per-tenant rates a
+/// 10k-tenant soak runs at.
+pub fn poisson(rng: &mut Rng, lambda: f64) -> usize {
+    if lambda <= 0.0 {
+        return 0;
+    }
+    // For large lambda the product-of-uniforms loop underflows; split
+    // off deterministic bulk via the additivity of Poisson.
+    if lambda > 30.0 {
+        return poisson(rng, lambda / 2.0) + poisson(rng, lambda - lambda / 2.0);
+    }
+    let limit = (-lambda).exp();
+    let mut k = 0usize;
+    let mut p = 1.0f64;
+    loop {
+        p *= rng.next_f64();
+        if p <= limit {
+            return k;
+        }
+        k += 1;
+    }
+}
+
+/// Sample one doc's context length from the tenant's distribution.
+pub fn sample_len(spec: &TenantSpec, rng: &mut Rng) -> usize {
+    (spec.len_mu + spec.len_sigma * rng.gen_normal()).exp().round() as usize
+}
+
+/// Clamped kernel-unit length.
+pub fn clamp_len(len: usize) -> usize {
+    len.clamp(MIN_LEN, MAX_LEN)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tenant_population_is_seed_deterministic() {
+        let a = synth_tenants(64, 12.0, &mut Rng::new(7));
+        let b = synth_tenants(64, 12.0, &mut Rng::new(7));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.slo, y.slo);
+            assert_eq!(x.rate.to_bits(), y.rate.to_bits());
+            assert_eq!(x.seed, y.seed);
+        }
+        let total: f64 = a.iter().map(|t| t.rate).sum();
+        assert!((total - 12.0).abs() < 1e-9, "rates sum to the pool rate, got {total}");
+    }
+
+    #[test]
+    fn diurnal_factor_stays_positive_and_cycles() {
+        for w in 0..200 {
+            let f = diurnal_factor(w, 24.0, 1.0);
+            assert!((0.19..=1.81).contains(&f), "wave {w}: {f}");
+        }
+        assert_eq!(diurnal_factor(5, 0.0, 1.0), 1.0);
+    }
+
+    #[test]
+    fn poisson_mean_tracks_lambda() {
+        let mut rng = Rng::new(3);
+        for &lam in &[0.3, 2.0, 50.0] {
+            let n = 4000;
+            let total: usize = (0..n).map(|_| poisson(&mut rng, lam)).sum();
+            let mean = total as f64 / n as f64;
+            assert!(
+                (mean - lam).abs() < 0.15 * lam.max(1.0),
+                "lambda {lam}: sample mean {mean}"
+            );
+        }
+    }
+}

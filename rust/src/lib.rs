@@ -23,7 +23,12 @@
 //!   ([`net`]: attention servers as separate OS processes speaking a
 //!   length-prefixed binary protocol over TCP, driven bit-exact by the
 //!   same elastic coordinator through the pluggable
-//!   [`exchange::Transport`]), a unified **tracing & metrics plane**
+//!   [`exchange::Transport`]), a **multi-tenant serving gateway**
+//!   ([`gateway`]: seeded synthetic tenant streams folded by weighted-
+//!   fair queueing and believed-capacity admission into fused
+//!   cross-tenant waves over the shared pool, with tenant ids riding
+//!   the task tags across the wire and a double-entry per-tenant
+//!   ledger), a unified **tracing & metrics plane**
 //!   ([`obs`]: tick-phase spans with wall and virtual clock sources, a
 //!   Chrome/Perfetto `trace_event` exporter behind `--trace-out`, the
 //!   `distca report` straggler-attribution table, and the `distca
@@ -71,6 +76,7 @@ pub mod coordinator;
 pub mod data;
 pub mod elastic;
 pub mod exchange;
+pub mod gateway;
 pub mod memplan;
 pub mod metrics;
 pub mod model;

@@ -6,8 +6,11 @@
 //!   compare    DistCA vs WLB-ideal on one configuration
 //!   schedule   run the §4.2 scheduler on a sampled batch and dump the
 //!              plan (optionally as JSON)
+//!   gateway    multi-tenant serving gateway over the shared pool
+//!              (WFQ + admission; --soak for a 10k-tenant population)
 //!   train      end-to-end tiny-LM training through the AOT artifacts
-//!   report     straggler attribution from a --trace-out trace file
+//!   report     straggler attribution from a --trace-out trace file,
+//!              or per-tenant accounting from --gateway JSONL
 //!   drift      compare a regenerated BENCH_*.json against its baseline
 //!   bound      Appendix A max-partition bound for a model/bandwidth
 //!   info       print model/cluster configuration tables
@@ -49,6 +52,7 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("worker", "attention-server worker daemon: listen for a coordinator over TCP"),
     ("serve", "networked coordinator over worker processes (--spawn | --connect a,b,c)"),
     ("soak", "networked soak harness: replay a document-length mix, emit BENCH_net.json"),
+    ("gateway", "multi-tenant gateway: WFQ + admission over the shared pool (--soak: 10k tenants)"),
     ("train", "train the tiny LM end-to-end via AOT artifacts"),
     ("report", "straggler attribution from a --trace-out file (Fig. 11-style overlap table)"),
     ("drift", "compare a regenerated BENCH_*.json snapshot against its committed baseline"),
@@ -118,7 +122,33 @@ fn specs() -> Vec<FlagSpec> {
             None,
         ),
         FlagSpec::value("stats-out", "per-server per-tick JSONL stats path (serve/soak)", None),
-        FlagSpec::value("bench-out", "summary JSON path (soak; default BENCH_net.json)", None),
+        FlagSpec::value(
+            "bench-out",
+            "summary JSON path (soak: default BENCH_net.json; gateway --soak: BENCH_gateway.json)",
+            None,
+        ),
+        FlagSpec::value("tenants", "synthetic tenant population (gateway; soak default 10000)", None),
+        FlagSpec::value(
+            "arrival-rate",
+            "pool-wide mean doc arrivals per wave (gateway; default 12x workers)",
+            None,
+        ),
+        FlagSpec::boolean("soak", "gateway soak: 10k-tenant defaults, write BENCH_gateway.json"),
+        FlagSpec::value(
+            "accounting-out",
+            "per-wave + per-tenant accounting JSONL path (gateway)",
+            None,
+        ),
+        FlagSpec::value(
+            "diurnal",
+            "diurnal cycle length in waves, 0 disables (gateway)",
+            Some("24"),
+        ),
+        FlagSpec::value(
+            "gateway",
+            "gateway --accounting-out JSONL to render as a per-tenant table (report)",
+            None,
+        ),
         FlagSpec::value(
             "trace-out",
             "Chrome trace-event JSON output, Perfetto-loadable (elastic, serve/soak)",
@@ -164,6 +194,7 @@ fn main() {
         Some("worker") => cmd_worker(&args),
         Some("serve") => cmd_net(&args, false),
         Some("soak") => cmd_net(&args, true),
+        Some("gateway") => cmd_gateway(&args),
         Some("train") => cmd_train(&args),
         Some("report") => cmd_report(&args),
         Some("drift") => cmd_drift(&args),
@@ -1155,6 +1186,165 @@ fn cmd_net(args: &Args, soak: bool) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `distca gateway` — multi-tenant serving over the shared pool: seeded
+/// tenant streams, weighted-fair queueing, believed-capacity admission,
+/// fused cross-tenant waves, per-tenant bit-exactness, and a
+/// double-entry accounting audit. `--soak` scales the defaults to a
+/// 10k-tenant diurnal population and writes `BENCH_gateway.json`.
+fn cmd_gateway(args: &Args) -> anyhow::Result<()> {
+    let soak = args.get_bool("soak");
+    let workers = args.get_usize("workers", 4)?;
+    anyhow::ensure!(workers >= 2, "--workers must be at least 2");
+    let spawn = args.get_bool("spawn");
+    let connect: Vec<String> = args
+        .get("connect")
+        .map(|s| {
+            s.split(',')
+                .map(|a| a.trim().to_string())
+                .filter(|a| !a.is_empty())
+                .collect()
+        })
+        .unwrap_or_default();
+    let waves = args.get_usize("ticks", if soak { 24 } else { 8 })?;
+    let tenants = args.get_usize("tenants", if soak { 10_000 } else { 32 })?;
+    let seed = match args.get_parse::<u64>("seed")? {
+        Some(s) => s,
+        None => distca::util::rng::seed_from_env(42),
+    };
+    // Explicit-only faults, as on the net paths. The plan indexes
+    // *dispatched* waves; under any backlog every arrival wave
+    // dispatches, so the arrival horizon is the scope to validate.
+    let fault = match (args.get("fault-plan"), args.get("fault")) {
+        (Some(path), _) => {
+            let j = distca::util::json::parse_file(std::path::Path::new(path))
+                .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+            FaultPlan::from_json(&j).map_err(|e| anyhow::anyhow!("{path}: {e}"))?
+        }
+        (None, Some(spec)) => FaultPlan::parse_spec(spec).map_err(|e| anyhow::anyhow!(e))?,
+        (None, None) => FaultPlan::new(),
+    };
+    ensure_fault_in_scope(&fault, workers, waves)?;
+    let cfg = distca::gateway::GatewayCfg {
+        tenants,
+        workers,
+        waves,
+        arrival_rate: args.get_f64("arrival-rate", 12.0 * workers as f64)?,
+        seed,
+        fault,
+        spawn,
+        connect,
+        diurnal_period: args.get_f64("diurnal", 24.0)?,
+        accounting_out: args.get("accounting-out").map(std::path::PathBuf::from),
+        bench_out: match args.get("bench-out") {
+            Some(p) => Some(std::path::PathBuf::from(p)),
+            None if soak => Some(std::path::PathBuf::from("BENCH_gateway.json")),
+            None => None,
+        },
+        ..Default::default()
+    };
+    let report = distca::gateway::run_gateway(&cfg)?;
+    if args.get_bool("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    } else {
+        let mut t = Table::new(
+            &format!(
+                "gateway: {} tenants -> {} workers ({}), {} arrival waves (+{} drain), fault plan [{}] — all outputs bit-exact per tenant",
+                report.tenants,
+                report.workers,
+                if cfg.spawn {
+                    "spawned"
+                } else if cfg.connect.is_empty() {
+                    "in-process"
+                } else {
+                    "connected"
+                },
+                report.arrival_waves,
+                report.total_waves - report.arrival_waves,
+                if cfg.fault.is_empty() { "none".to_string() } else { cfg.fault.to_spec() }
+            ),
+            &[
+                "wave", "arrivals", "admit", "backlog", "tenants", "sat", "pairs", "bytes",
+                "alive", "redisp", "elapsed",
+            ],
+        );
+        for r in &report.per_wave {
+            t.row(&[
+                r.wave.to_string(),
+                r.arrivals.to_string(),
+                r.admitted.to_string(),
+                r.backlog.to_string(),
+                r.wave_tenants.to_string(),
+                if r.saturated { "yes".into() } else { "-".into() },
+                fmt_f(r.admitted_pairs, 0),
+                bytes(r.admitted_bytes),
+                r.n_alive.to_string(),
+                r.redispatched.to_string(),
+                secs(r.elapsed),
+            ]);
+        }
+        t.print();
+        let mut ct = Table::new(
+            "per-SLO-class accounting (tenant rows sum exactly to pool totals)",
+            &["class", "tenants", "admitted", "completed", "bytes", "flops", "mean wait", "max wait", "bound"],
+        );
+        for class in distca::gateway::SloClass::ALL {
+            let rows: Vec<&distca::gateway::TenantAccount> = report
+                .ledger
+                .tenants()
+                .values()
+                .filter(|r| r.slo == Some(class))
+                .collect();
+            let admitted: usize = rows.iter().map(|r| r.admitted).sum();
+            let wait_sum: usize = rows.iter().map(|r| r.wait_waves_sum).sum();
+            ct.row(&[
+                class.name().to_string(),
+                rows.len().to_string(),
+                admitted.to_string(),
+                rows.iter().map(|r| r.completed).sum::<usize>().to_string(),
+                bytes(rows.iter().map(|r| r.bytes).sum::<f64>()),
+                format!("{:.2e}", rows.iter().map(|r| r.flops).sum::<f64>()),
+                fmt_f(if admitted > 0 { wait_sum as f64 / admitted as f64 } else { 0.0 }, 2),
+                rows.iter().map(|r| r.max_wait_waves).max().unwrap_or(0).to_string(),
+                class.wait_bound_waves().to_string(),
+            ]);
+        }
+        ct.print();
+        let p = report.ledger.pool();
+        println!(
+            "arrived {} | admitted {} | completed {} | rejected oversize {} | re-dispatched {} | max backlog {} | saturated waves {} | forced admissions {}",
+            p.arrived,
+            p.admitted,
+            p.completed,
+            report.rejected_oversize,
+            p.redispatched,
+            report.max_backlog,
+            report.saturated_waves,
+            report.forced_admissions,
+        );
+    }
+    for b in &report.starvation_breaches {
+        eprintln!(
+            "starvation: tenant {} ({}) waited {} waves, bound {}",
+            b.tenant,
+            b.slo.name(),
+            b.max_wait_waves,
+            b.bound_waves
+        );
+    }
+    if let Some(p) = &cfg.bench_out {
+        println!("wrote {}", p.display());
+    }
+    if let Some(p) = &cfg.accounting_out {
+        println!("wrote {}", p.display());
+    }
+    anyhow::ensure!(
+        !soak || report.starvation_breaches.is_empty(),
+        "{} tenant(s) exceeded their SLO wait bound during the soak",
+        report.starvation_breaches.len()
+    );
+    Ok(())
+}
+
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let steps = args.get_usize("steps", 100)?;
     anyhow::ensure!(
@@ -1185,8 +1375,30 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
 
 /// `distca report` — render the Fig. 11-style straggler-attribution
 /// overlap table from a `--trace-out` trace file (wall or virtual
-/// clock: the breakdown is clock-agnostic).
+/// clock: the breakdown is clock-agnostic), or the per-tenant
+/// accounting table from a gateway `--accounting-out` JSONL stream.
 fn cmd_report(args: &Args) -> anyhow::Result<()> {
+    if let Some(path) = args.get("gateway") {
+        anyhow::ensure!(
+            args.get("trace").is_none(),
+            "pass one of --trace and --gateway, not both"
+        );
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        let rows: Vec<Json> = text
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(|l| {
+                distca::util::json::parse(l).map_err(|e| anyhow::anyhow!("{path}: {e}"))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        if args.get_bool("json") {
+            println!("{}", Json::Arr(rows).to_string_pretty());
+        } else {
+            println!("{}", distca::obs::report::render_gateway_accounting(&rows, 20)?);
+        }
+        return Ok(());
+    }
     let path = args
         .get("trace")
         .ok_or_else(|| anyhow::anyhow!("report needs --trace <file> (a --trace-out output)"))?;

@@ -12,15 +12,30 @@
 //!
 //! | offset | size | field |
 //! |---|---|---|
-//! | 0 | 4 | magic `0x44434131` (`"1ACD"` on the wire — `"DCA1"` read big-endian) |
+//! | 0 | 4 | magic `0x44434132` (`"2ACD"` on the wire — `"DCA2"` read big-endian) |
 //! | 4 | 1 | frame kind ([`FrameKind`]) |
 //! | 5 | 4 | `dst` rank (u32) |
 //! | 9 | 8 | `src` rank (u64; `usize::MAX` = coordinator) |
 //! | 17 | 8 | `tag` (u64: the `(doc, q_start)` / `CTRL_*` tag space) |
 //! | 25 | 1 | `wave` (u8: ping-pong wave index, 0 = ping, 1 = pong) |
 //! | 26 | 8 | `epoch` (u64: pool membership epoch the wave was stamped under; 0 = unstamped flat tick) |
-//! | 34 | 4 | payload element count (u32, **count of f32 words**, not bytes) |
-//! | 38 | 4·n | payload: each f32 as its u32 bit pattern, LE |
+//! | 34 | 4 | `tenant` (u32: `0` = untenanted/control, else tenant id + 1 — the gateway's stream id) |
+//! | 38 | 4 | payload element count (u32, **count of f32 words**, not bytes) |
+//! | 42 | 4·n | payload: each f32 as its u32 bit pattern, LE |
+//!
+//! ## Version history
+//!
+//! `DCA2` added the `tenant` field (the multi-tenant gateway's stream
+//! id, [`crate::server::tag_wire_tenant`]); a peer still speaking
+//! `DCA1` is rejected with a descriptive version-mismatch error rather
+//! than desyncing four bytes into the first frame. The tenant field is
+//! *derived* from the tag on encode and *validated* against the tag on
+//! decode: a `Msg` frame whose header tenant disagrees with its
+//! tag-encoded tenant — or any frame claiming a tenant id beyond the
+//! 15-bit tenant space — is malformed and rejected descriptively.
+//! Because workers echo the request tag onto the matching response,
+//! the tenant field survives the round-trip structurally: no worker
+//! code handles tenants at all.
 //!
 //! The `wave`/`epoch` pair is the wire form of the in-process
 //! [`WaveStamp`](crate::elastic::pool::WaveStamp): the coordinator
@@ -43,12 +58,20 @@ use std::fmt;
 
 use crate::exchange::transport::Message;
 
-/// Stream magic: every frame starts with these four bytes.
-pub const MAGIC: u32 = 0x4443_4131;
+/// Stream magic: every frame starts with these four bytes (`"DCA2"`).
+pub const MAGIC: u32 = 0x4443_4132;
+
+/// The pre-tenant-field wire version (`"DCA1"`): recognized only to
+/// reject it descriptively as a version mismatch.
+pub const MAGIC_V1: u32 = 0x4443_4131;
 
 /// Fixed header size in bytes (everything before the payload):
-/// magic, kind, dst, src, tag, wave, epoch, element count.
-pub const HEADER_BYTES: usize = 4 + 1 + 4 + 8 + 8 + 1 + 8 + 4;
+/// magic, kind, dst, src, tag, wave, epoch, tenant, element count.
+pub const HEADER_BYTES: usize = 4 + 1 + 4 + 8 + 8 + 1 + 8 + 4 + 4;
+
+/// Exclusive cap on the wire tenant field: `0` (untenanted) plus the
+/// 15-bit tenant id space shifted by one.
+pub const MAX_WIRE_TENANT: u32 = crate::server::MAX_TENANTS;
 
 /// Hard cap on payload element count (2^28 f32 words = 1 GiB): frames
 /// beyond this are rejected as corrupt rather than allocated.
@@ -138,17 +161,26 @@ pub struct Frame {
     /// Pool membership epoch the frame's wave was stamped under;
     /// 0 = unstamped (flat tick or control traffic).
     pub epoch: u64,
+    /// Gateway tenant/stream id in wire form: `0` = untenanted or
+    /// control traffic, else tenant id + 1. Always derived from the
+    /// tag ([`crate::server::tag_wire_tenant`]); the decoder rejects
+    /// frames where the two disagree.
+    pub tenant: u32,
     pub payload: Vec<f32>,
 }
 
 impl Frame {
     /// Wrap a data-plane message bound for rank `dst` (unstamped; the
-    /// transport applies the current wave stamp on the way out).
+    /// transport applies the current wave stamp on the way out). The
+    /// tenant field is derived from the tag, so a worker echoing a
+    /// request tag onto its response re-derives the same tenant — the
+    /// id survives the round-trip with no tenant-aware worker code.
     pub fn msg(dst: usize, m: Message) -> Frame {
         Frame {
             kind: FrameKind::Msg,
             dst: dst as u32,
             src: m.src as u64,
+            tenant: crate::server::tag_wire_tenant(m.tag),
             tag: m.tag,
             wave: 0,
             epoch: 0,
@@ -159,7 +191,7 @@ impl Frame {
     /// A control frame from rank `src` (pass `usize::MAX` for the
     /// coordinator).
     pub fn control(kind: FrameKind, src: usize, payload: Vec<f32>) -> Frame {
-        Frame { kind, dst: 0, src: src as u64, tag: 0, wave: 0, epoch: 0, payload }
+        Frame { kind, dst: 0, src: src as u64, tag: 0, wave: 0, epoch: 0, tenant: 0, payload }
     }
 
     /// Unwrap back into the transport message (data frames).
@@ -191,6 +223,7 @@ impl Frame {
         out.extend_from_slice(&self.tag.to_le_bytes());
         out.push(self.wave);
         out.extend_from_slice(&self.epoch.to_le_bytes());
+        out.extend_from_slice(&self.tenant.to_le_bytes());
         out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
         for &w in &self.payload {
             // Bit pattern, not value: NaNs, signed zeros, and bit-cast
@@ -249,6 +282,12 @@ impl FrameDecoder {
             return Ok(None);
         }
         let magic = u32::from_le_bytes(b[0..4].try_into().unwrap());
+        if magic == MAGIC_V1 {
+            return Err(CodecError(format!(
+                "wire version mismatch: peer sent a DCA1 frame (magic 0x{MAGIC_V1:08x}, \
+                 no tenant field); this build speaks DCA2 (0x{MAGIC:08x})"
+            )));
+        }
         if magic != MAGIC {
             return Err(CodecError(format!(
                 "bad magic 0x{magic:08x} (expected 0x{MAGIC:08x}; corrupt or non-DistCA stream)"
@@ -260,7 +299,22 @@ impl FrameDecoder {
         let tag = u64::from_le_bytes(b[17..25].try_into().unwrap());
         let wave = b[25];
         let epoch = u64::from_le_bytes(b[26..34].try_into().unwrap());
-        let len = u32::from_le_bytes(b[34..38].try_into().unwrap());
+        let tenant = u32::from_le_bytes(b[34..38].try_into().unwrap());
+        if tenant > MAX_WIRE_TENANT {
+            return Err(CodecError(format!(
+                "malformed tenant field: wire tenant {tenant} exceeds the \
+                 {MAX_WIRE_TENANT} cap (15-bit tenant space)"
+            )));
+        }
+        let expect_tenant =
+            if kind == FrameKind::Msg { crate::server::tag_wire_tenant(tag) } else { 0 };
+        if tenant != expect_tenant {
+            return Err(CodecError(format!(
+                "malformed tenant field: header claims wire tenant {tenant} but the \
+                 {kind:?} frame's tag 0x{tag:016x} encodes wire tenant {expect_tenant}"
+            )));
+        }
+        let len = u32::from_le_bytes(b[38..42].try_into().unwrap());
         if len > MAX_PAYLOAD_ELEMS {
             return Err(CodecError(format!(
                 "oversized frame: header claims {len} payload elements, cap is {MAX_PAYLOAD_ELEMS}"
@@ -279,7 +333,7 @@ impl FrameDecoder {
             off += 4;
         }
         self.read += need;
-        Ok(Some(Frame { kind, dst, src, tag, wave, epoch, payload }))
+        Ok(Some(Frame { kind, dst, src, tag, wave, epoch, tenant, payload }))
     }
 
     /// Call at stream EOF: leftover bytes mean the peer died mid-write.
@@ -307,6 +361,7 @@ mod tests {
             tag: 0xDEAD_BEEF_CAFE,
             wave: 1,
             epoch: 0x0102_0304_0506,
+            tenant: 0,
             payload: vec![1.0, -2.5, 0.0, f32::from_bits(0x0123_4567)],
         }
     }
@@ -393,6 +448,7 @@ mod tests {
         hdr.extend_from_slice(&0u64.to_le_bytes());
         hdr.push(0); // wave
         hdr.extend_from_slice(&0u64.to_le_bytes()); // epoch
+        hdr.extend_from_slice(&0u32.to_le_bytes()); // tenant
         hdr.extend_from_slice(&(MAX_PAYLOAD_ELEMS + 1).to_le_bytes());
         let mut dec = FrameDecoder::new();
         dec.push(&hdr);
@@ -414,6 +470,63 @@ mod tests {
         let h = dec.next_frame().unwrap().unwrap();
         assert_eq!(h.wave, 1);
         assert_eq!(h.epoch, u64::MAX >> 8);
+    }
+
+    #[test]
+    fn tenant_derived_from_tag_and_roundtripped() {
+        use crate::server::{tag_wire_tenant, tenant_doc};
+        let doc = tenant_doc(1234, 7);
+        let tag = ((doc as u64) << 32) | 16;
+        let f = Frame::msg(2, Message { src: 0, tag, payload: vec![1.0] });
+        assert_eq!(f.tenant, 1235, "wire tenant is tenant id + 1");
+        assert_eq!(f.tenant, tag_wire_tenant(tag));
+        let mut dec = FrameDecoder::new();
+        dec.push(&f.encode().unwrap());
+        let g = dec.next_frame().unwrap().unwrap();
+        assert_eq!(g.tenant, 1235);
+        assert_eq!(g, f);
+    }
+
+    #[test]
+    fn v1_magic_rejected_as_version_mismatch() {
+        let mut bytes = sample().encode().unwrap();
+        bytes[0..4].copy_from_slice(&MAGIC_V1.to_le_bytes());
+        let mut dec = FrameDecoder::new();
+        dec.push(&bytes);
+        let err = dec.next_frame().unwrap_err();
+        assert!(err.to_string().contains("version mismatch"), "{err}");
+        assert!(err.to_string().contains("DCA1"), "{err}");
+    }
+
+    #[test]
+    fn tenant_tag_mismatch_rejected() {
+        // Header claims tenant 5 but the tag encodes no tenant at all.
+        let mut f = sample();
+        f.tenant = 5;
+        let mut dec = FrameDecoder::new();
+        dec.push(&f.encode().unwrap());
+        let err = dec.next_frame().unwrap_err();
+        assert!(err.to_string().contains("malformed tenant"), "{err}");
+    }
+
+    #[test]
+    fn out_of_range_tenant_rejected() {
+        let mut f = sample();
+        f.tenant = MAX_WIRE_TENANT + 1;
+        let mut dec = FrameDecoder::new();
+        dec.push(&f.encode().unwrap());
+        let err = dec.next_frame().unwrap_err();
+        assert!(err.to_string().contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn control_frames_must_carry_zero_tenant() {
+        let mut f = Frame::control(FrameKind::Heartbeat, 2, vec![1.0]);
+        f.tenant = 3;
+        let mut dec = FrameDecoder::new();
+        dec.push(&f.encode().unwrap());
+        let err = dec.next_frame().unwrap_err();
+        assert!(err.to_string().contains("malformed tenant"), "{err}");
     }
 
     #[test]

@@ -229,7 +229,10 @@ impl NetRunReport {
 // Worker process management (the fault injector's process backend).
 // ---------------------------------------------------------------------
 
-struct WorkerProcs {
+/// `pub(crate)` so the multi-tenant gateway ([`crate::gateway`]) reuses
+/// the exact process backend — same SIGKILL semantics, same leak-free
+/// shutdown — instead of growing a second one.
+pub(crate) struct WorkerProcs {
     spawn: bool,
     dir: PathBuf,
     addrs: Vec<String>,
@@ -237,7 +240,7 @@ struct WorkerProcs {
 }
 
 impl WorkerProcs {
-    fn start(spawn: bool, n: usize, connect: &[String]) -> Result<WorkerProcs> {
+    pub(crate) fn start(spawn: bool, n: usize, connect: &[String]) -> Result<WorkerProcs> {
         if spawn {
             let dir = std::env::temp_dir().join(format!("distca-net-{}", std::process::id()));
             std::fs::create_dir_all(&dir)
@@ -316,7 +319,7 @@ impl WorkerProcs {
         }
     }
 
-    fn addr(&self, i: usize) -> &str {
+    pub(crate) fn addr(&self, i: usize) -> &str {
         &self.addrs[i]
     }
 
@@ -326,7 +329,7 @@ impl WorkerProcs {
     /// own satisfies the fault vacuously (the elastic machinery exists
     /// to recover from exactly that); any connection remnant is
     /// severed either way.
-    fn kill(&mut self, i: usize, fabric: &TcpTransport) {
+    pub(crate) fn kill(&mut self, i: usize, fabric: &TcpTransport) {
         if let Some(child) = self.children[i].as_mut() {
             let _ = child.kill();
             let _ = child.wait(); // reap the zombie
@@ -338,7 +341,7 @@ impl WorkerProcs {
         fabric.close_conn(i);
     }
 
-    fn respawn(&mut self, i: usize) -> Result<()> {
+    pub(crate) fn respawn(&mut self, i: usize) -> Result<()> {
         anyhow::ensure!(
             self.spawn,
             "rejoin:{i} needs --spawn (cannot restart a remote worker daemon)"
@@ -348,7 +351,7 @@ impl WorkerProcs {
 
     /// Reap every child after the shutdown broadcast; hard-kill
     /// stragglers and report them — a clean run leaks nothing.
-    fn shutdown(&mut self) -> Result<()> {
+    pub(crate) fn shutdown(&mut self) -> Result<()> {
         let deadline = Instant::now() + Duration::from_secs(10);
         let mut hard_killed = 0usize;
         for (i, slot) in self.children.iter_mut().enumerate() {
@@ -426,7 +429,7 @@ fn attach_and_config(
 
 /// Dial `addr` (with a short retry window), attach it to the fabric as
 /// rank `rank`, and send the CONFIG handshake.
-fn connect_and_config(
+pub(crate) fn connect_and_config(
     fabric: &Arc<TcpTransport>,
     rank: usize,
     n: usize,
@@ -472,7 +475,7 @@ fn try_redial(
 }
 
 /// Append new transport events to `pending`.
-fn drain_events(fabric: &TcpTransport, pending: &mut Vec<NetEvent>) {
+pub(crate) fn drain_events(fabric: &TcpTransport, pending: &mut Vec<NetEvent>) {
     pending.extend(fabric.poll_events());
 }
 
@@ -493,9 +496,9 @@ pub fn feed_stats(recorder: &Option<Arc<Recorder>>, rank: usize, payload: &[f32]
 }
 
 /// Block until rank's HELLO arrives (leaving unrelated events queued).
-/// `pub(super)` so the loopback harness shares the exact registration
-/// barrier the process path uses.
-pub(super) fn wait_hello(
+/// `pub(crate)` so the loopback harness and the gateway share the exact
+/// registration barrier the process path uses.
+pub(crate) fn wait_hello(
     fabric: &TcpTransport,
     rank: usize,
     pending: &mut Vec<NetEvent>,
@@ -521,7 +524,7 @@ pub(super) fn wait_hello(
 
 /// Split scripted faults: kills/rejoins execute at the process level,
 /// everything else stays in-band through the elastic tick path.
-fn split_fault_plan(plan: &FaultPlan) -> (FaultPlan, FaultPlan) {
+pub(crate) fn split_fault_plan(plan: &FaultPlan) -> (FaultPlan, FaultPlan) {
     let mut process_plan = FaultPlan::new();
     let mut inband = FaultPlan::new();
     for ev in &plan.events {

@@ -16,13 +16,18 @@
 //!
 //! `distca report --trace f.json` renders this for any trace the
 //! exporter wrote — threaded, networked, or virtual-time simulated.
+//!
+//! The report command's second input is the gateway's accounting
+//! stream: `distca report --gateway acct.jsonl` renders the per-tenant
+//! table ([`render_gateway_accounting`]) from a `--accounting-out`
+//! file, refusing truncated streams (no trailing `flush` record).
 
 use std::collections::BTreeMap;
 
 use anyhow::Result;
 
 use crate::util::json::Json;
-use crate::util::tables::{f, secs, Table};
+use crate::util::tables::{bytes, f, secs, Table};
 
 use super::trace::TraceFile;
 use super::{ClockSource, Phase};
@@ -242,6 +247,81 @@ impl TraceReport {
     }
 }
 
+/// Render the per-tenant accounting table from a gateway
+/// `--accounting-out` JSONL stream: the top-`top` tenants by admitted
+/// tasks, plus the wave-level backpressure summary. The stream must end
+/// with its `flush` record — a file without one came from a run that
+/// died mid-write, and a partial table would silently under-report.
+pub fn render_gateway_accounting(rows: &[Json], top: usize) -> Result<String> {
+    fn num(r: &Json, k: &str) -> Result<f64> {
+        r.get(k)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("accounting row missing numeric `{k}`"))
+    }
+    anyhow::ensure!(
+        rows.last().and_then(|r| r.get("kind")).and_then(Json::as_str) == Some("flush"),
+        "accounting stream ends without a flush record (truncated run?)"
+    );
+    let mut tenants: Vec<&Json> = Vec::new();
+    let mut waves = 0usize;
+    let mut saturated = 0usize;
+    let mut max_backlog = 0.0f64;
+    let mut admitted_total = 0.0f64;
+    for r in rows {
+        match r.get("kind").and_then(Json::as_str) {
+            Some("tenant") => tenants.push(r),
+            Some("wave") => {
+                waves += 1;
+                if r.get("saturated").and_then(Json::as_bool).unwrap_or(false) {
+                    saturated += 1;
+                }
+                max_backlog = max_backlog.max(num(r, "backlog")?);
+                admitted_total += num(r, "admitted")?;
+            }
+            Some("flush") => {}
+            other => anyhow::bail!("unknown accounting row kind {other:?}"),
+        }
+    }
+    let mut order: Vec<(f64, &Json)> = tenants
+        .iter()
+        .map(|r| Ok((num(r, "admitted")?, *r)))
+        .collect::<Result<_>>()?;
+    order.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+    let shown = order.len().min(top);
+    let mut t = Table::new(
+        &format!(
+            "gateway per-tenant accounting: top {shown} of {} tenants by admitted tasks",
+            order.len()
+        ),
+        &[
+            "tenant", "slo", "arrived", "admitted", "completed", "rejected", "bytes",
+            "flops", "mean wait", "max wait", "makespan", "redisp",
+        ],
+    );
+    for (_, r) in order.iter().take(top) {
+        t.row(&[
+            format!("{}", num(r, "tenant")? as u64),
+            r.get("slo").and_then(Json::as_str).unwrap_or("?").to_string(),
+            format!("{}", num(r, "arrived")? as u64),
+            format!("{}", num(r, "admitted")? as u64),
+            format!("{}", num(r, "completed")? as u64),
+            format!("{}", num(r, "rejected")? as u64),
+            bytes(num(r, "bytes")?),
+            format!("{:.2e}", num(r, "flops")?),
+            f(num(r, "mean_wait_waves")?, 2),
+            format!("{}", num(r, "max_wait_waves")? as u64),
+            secs(num(r, "makespan_s")?),
+            format!("{}", num(r, "redispatched")? as u64),
+        ]);
+    }
+    Ok(format!(
+        "{}\n{waves} waves ({saturated} saturated, max backlog {}) | {} tasks admitted",
+        t.render(),
+        max_backlog as u64,
+        admitted_total as u64,
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::Span;
@@ -304,5 +384,49 @@ mod tests {
         assert_eq!((r.ticks[0].redispatched, r.ticks[0].evicted), (2, 1));
         // The table renders without panicking even with no compute.
         assert!(r.render().contains("Per-tick summary"));
+    }
+
+    fn tenant_row(id: f64, admitted: f64) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str("tenant".into())),
+            ("tenant", Json::Num(id)),
+            ("slo", Json::Str("standard".into())),
+            ("arrived", Json::Num(admitted)),
+            ("admitted", Json::Num(admitted)),
+            ("completed", Json::Num(admitted)),
+            ("rejected", Json::Num(0.0)),
+            ("bytes", Json::Num(64.0 * admitted)),
+            ("flops", Json::Num(1e6 * admitted)),
+            ("mean_wait_waves", Json::Num(0.5)),
+            ("max_wait_waves", Json::Num(2.0)),
+            ("makespan_s", Json::Num(0.25)),
+            ("redispatched", Json::Num(0.0)),
+        ])
+    }
+
+    #[test]
+    fn gateway_accounting_renders_top_tenants() {
+        let rows = vec![
+            Json::obj(vec![
+                ("kind", Json::Str("wave".into())),
+                ("saturated", Json::Bool(true)),
+                ("backlog", Json::Num(7.0)),
+                ("admitted", Json::Num(11.0)),
+            ]),
+            tenant_row(3.0, 5.0),
+            tenant_row(9.0, 6.0),
+            Json::obj(vec![("kind", Json::Str("flush".into()))]),
+        ];
+        let out = render_gateway_accounting(&rows, 1).unwrap();
+        // Top-1 by admitted is tenant 9; tenant 3 is summarized only.
+        assert!(out.contains("top 1 of 2"), "{out}");
+        assert!(out.contains("1 waves (1 saturated, max backlog 7)"), "{out}");
+    }
+
+    #[test]
+    fn gateway_accounting_rejects_truncated_streams() {
+        let rows = vec![tenant_row(0.0, 1.0)];
+        let err = render_gateway_accounting(&rows, 10).unwrap_err();
+        assert!(err.to_string().contains("flush"), "{err}");
     }
 }

@@ -44,6 +44,64 @@ pub(crate) fn unpack_tag(tag: u64) -> (u32, u32) {
     ((tag >> 32) as u32, tag as u32)
 }
 
+// ---------------------------------------------------------------------
+// Tenant-tagged document ids (the multi-tenant gateway).
+//
+// The elastic tag space gives the doc id 30 usable bits (bits 62/63 of
+// the packed tag are the CANCEL/CTRL flags). The gateway claims bit 29
+// of that space as a marker and packs `(tenant, seq)` below it:
+//
+//   doc = [bit 29 = 1][15 tenant bits][14 per-tenant sequence bits]
+//
+// Because the tenant lives *inside* the doc id — and therefore inside
+// the message tag that every dispatch, response, cancel, dedup, and
+// re-dispatch keys on — per-tenant attribution survives the wire
+// round-trip with no extra state anywhere: first-response-wins dedup
+// and speculative re-dispatch are per-tenant-correct by construction.
+// ---------------------------------------------------------------------
+
+/// Doc-id bit marking a gateway (tenant-tagged) document.
+pub const TENANT_DOC_FLAG: u32 = 1 << 29;
+
+/// Tenant id space: 15 bits, ids `0..MAX_TENANTS`.
+pub const MAX_TENANTS: u32 = 1 << 15;
+
+/// Per-tenant document sequence space: 14 bits.
+pub const MAX_TENANT_SEQ: u32 = 1 << 14;
+
+/// Pack a tenant id and its per-tenant document sequence number into a
+/// tenant-tagged doc id. Panics on out-of-range inputs — the gateway
+/// enforces both bounds at admission, so a violation here is a bug.
+pub fn tenant_doc(tenant: u32, seq: u32) -> u32 {
+    assert!(tenant < MAX_TENANTS, "tenant {tenant} >= {MAX_TENANTS}");
+    assert!(seq < MAX_TENANT_SEQ, "tenant seq {seq} >= {MAX_TENANT_SEQ}");
+    TENANT_DOC_FLAG | (tenant << 14) | seq
+}
+
+/// The tenant id carried by a doc id, `None` for untenanted docs.
+pub fn doc_tenant(doc: u32) -> Option<u32> {
+    (doc & TENANT_DOC_FLAG != 0).then_some((doc >> 14) & (MAX_TENANTS - 1))
+}
+
+/// Split a tenant-tagged doc id back into `(tenant, seq)`.
+pub fn doc_tenant_seq(doc: u32) -> Option<(u32, u32)> {
+    doc_tenant(doc).map(|t| (t, doc & (MAX_TENANT_SEQ - 1)))
+}
+
+/// The wire form of a tag's tenant: `0` for control/cancel traffic and
+/// untenanted docs, `tenant id + 1` for tenant-tagged docs. This is
+/// what the frame header's tenant field must equal — the codec derives
+/// it on encode and validates it on decode, so a frame whose header
+/// tenant disagrees with its tag is rejected as malformed.
+pub fn tag_wire_tenant(tag: u64) -> u32 {
+    // Bits 62/63 are the elastic CANCEL/CTRL flags: control traffic
+    // carries no doc id and is never tenant-attributed.
+    if tag & ((1 << 63) | (1 << 62)) != 0 {
+        return 0;
+    }
+    doc_tenant((tag >> 32) as u32).map(|t| t + 1).unwrap_or(0)
+}
+
 /// Ship an integer header word inside an f32 payload slot *bit-cast*, not
 /// value-cast: `as f32` is exact only below 2^24, which long-context
 /// lengths exceed. The bit pattern round-trips any u32 losslessly.

@@ -557,6 +557,62 @@ fn soak_pp_binary_survives_scripted_sigkill_bit_exact() {
     );
 }
 
+/// The gateway column: seeded multi-tenant mixes folded into fused
+/// cross-tenant waves over the same threaded pool, under kill:/drain:/
+/// oom: fault plans. `run_gateway` verifies every gathered output
+/// bit-exact against the *tenant's own* GQA oracle stream and audits
+/// the double-entry ledger internally — a mis-attributed re-dispatch, a
+/// cross-tenant tensor mixup, or a dropped tenant tag fails the run.
+/// This column re-asserts the external invariants on the report so a
+/// future soft-failure refactor of `run_gateway` cannot go unnoticed.
+#[test]
+fn gateway_multi_tenant_mixes_match_oracle_under_faults() {
+    for seed in 0..20u64 {
+        let workers = 2 + (seed as usize % 3); // 2..=4
+        // Never fault server 0 (the pool must survive); faults land on
+        // dispatched waves >= 1. Rotate through the three fault kinds
+        // plus a fault-free control case.
+        let fault = match seed % 4 {
+            0 => FaultPlan::new(),
+            1 => FaultPlan::new().kill(1, 1),
+            2 => FaultPlan::new().drain(1, 1),
+            _ => FaultPlan::new().oom(1, 1),
+        };
+        let cfg = distca::gateway::GatewayCfg {
+            tenants: 8 + (seed as usize % 40),
+            workers,
+            waves: 3,
+            arrival_rate: 24.0,
+            seed: 0x6A7E_0000 ^ seed,
+            fault,
+            // Flat load: every arrival wave dispatches, so a fault at
+            // dispatch tick 1 always has a later wave to observe it in.
+            diurnal_period: 0.0,
+            ..Default::default()
+        };
+        let report = distca::gateway::run_gateway(&cfg)
+            .unwrap_or_else(|e| panic!("gateway seed {seed}: {e}"));
+        let pool = report.ledger.pool();
+        assert!(pool.admitted > 0, "gateway seed {seed}: vacuous case (nothing admitted)");
+        assert_eq!(
+            pool.completed, pool.admitted,
+            "gateway seed {seed}: drained run left work incomplete"
+        );
+        assert!(
+            report.ledger.conservation_errors().is_empty(),
+            "gateway seed {seed}: ledger audit failed"
+        );
+        // A killed worker shrinks the pool: some wave must have seen
+        // fewer live workers than it started with.
+        if seed % 4 == 1 {
+            assert!(
+                report.per_wave.iter().any(|r| r.n_alive < workers),
+                "gateway seed {seed}: the scripted kill never surfaced"
+            );
+        }
+    }
+}
+
 #[test]
 fn threaded_pp_matches_oracle_for_seeded_cases() {
     for seed in 0..SEEDS {

@@ -13,9 +13,16 @@
 //! 3. **Descriptive rejection**: truncated streams and frames claiming
 //!    more than the payload cap fail loudly, with errors naming the
 //!    problem, never a silent drop or a bogus frame.
+//! 4. **Tenant integrity** (DCA2): the header's tenant field is derived
+//!    from the tag on encode, validated against the tag on decode, and
+//!    survives any split boundary — including one inside the tenant
+//!    field itself.
 
 use distca::exchange::transport::Message;
-use distca::net::codec::{Frame, FrameDecoder, FrameKind, HEADER_BYTES, MAGIC, MAX_PAYLOAD_ELEMS};
+use distca::net::codec::{
+    Frame, FrameDecoder, FrameKind, HEADER_BYTES, MAGIC, MAX_PAYLOAD_ELEMS, MAX_WIRE_TENANT,
+};
+use distca::server::{tag_wire_tenant, tenant_doc, MAX_TENANTS, MAX_TENANT_SEQ};
 use distca::util::rng::Rng;
 
 fn random_kind(rng: &mut Rng) -> FrameKind {
@@ -31,13 +38,28 @@ fn random_kind(rng: &mut Rng) -> FrameKind {
 
 /// Finite payloads only: the equality assertion uses `PartialEq`, and
 /// NaN bit-patterns get their own dedicated test below.
+/// Roughly half the `Msg` frames carry a tenant-tagged doc in the tag's
+/// high bits, so every split-boundary sweep also exercises the DCA2
+/// tenant field; the header tenant is always the tag-derived value
+/// (anything else is malformed by design and tested separately).
 fn random_frame(rng: &mut Rng) -> Frame {
     let len = rng.gen_index(0, 40);
+    let kind = random_kind(rng);
+    let tag = if kind == FrameKind::Msg && rng.gen_index(0, 2) == 0 {
+        let doc = tenant_doc(
+            rng.gen_index(0, MAX_TENANTS as usize) as u32,
+            rng.gen_index(0, MAX_TENANT_SEQ as usize) as u32,
+        );
+        ((doc as u64) << 32) | rng.gen_index(0, 4096) as u64
+    } else {
+        rng.next_u64()
+    };
     Frame {
-        kind: random_kind(rng),
+        kind,
         dst: rng.gen_index(0, 64) as u32,
         src: rng.next_u64(),
-        tag: rng.next_u64(),
+        tenant: if kind == FrameKind::Msg { tag_wire_tenant(tag) } else { 0 },
+        tag,
         wave: rng.gen_index(0, 2) as u8,
         epoch: rng.next_u64() >> 8,
         payload: (0..len).map(|_| rng.gen_f64(-1e6, 1e6) as f32).collect(),
@@ -163,6 +185,7 @@ fn oversized_frame_rejected_with_descriptive_error() {
     hdr.extend_from_slice(&0u64.to_le_bytes());
     hdr.push(0); // wave
     hdr.extend_from_slice(&0u64.to_le_bytes()); // epoch
+    hdr.extend_from_slice(&0u32.to_le_bytes()); // tenant
     hdr.extend_from_slice(&(MAX_PAYLOAD_ELEMS + 1).to_le_bytes());
     let mut dec = FrameDecoder::new();
     dec.push(&hdr);
@@ -182,6 +205,69 @@ fn garbage_prefix_rejected_not_skipped() {
     // A length-prefixed stream has no resync point: corrupt magic is a
     // hard error, never a silent scan-forward.
     assert!(dec.next_frame().is_err());
+}
+
+#[test]
+fn tenant_field_survives_splits_inside_the_tenant_bytes() {
+    // A tenant-tagged frame chopped at every possible boundary —
+    // including offsets 34..38, *inside* the tenant field — decodes to
+    // the same frame, tenant included.
+    let doc = tenant_doc(MAX_TENANTS - 1, MAX_TENANT_SEQ - 1);
+    let tag = ((doc as u64) << 32) | 17;
+    let f = Frame::msg(3, Message { src: 1, tag, payload: vec![1.5, -2.5] });
+    assert_eq!(f.tenant, MAX_TENANTS, "max tenant id maps to the max wire tenant");
+    let bytes = f.encode().unwrap();
+    for cut in 1..bytes.len() {
+        let mut dec = FrameDecoder::new();
+        dec.push(&bytes[..cut]);
+        assert!(dec.next_frame().unwrap().is_none(), "cut {cut}: early frame");
+        dec.push(&bytes[cut..]);
+        let g = dec.next_frame().unwrap().unwrap();
+        assert_eq!(g, f, "cut {cut}: tenant frame diverged");
+        assert_eq!(g.tenant, MAX_TENANTS);
+        dec.finish().unwrap();
+    }
+}
+
+#[test]
+fn corrupted_tenant_field_rejected_descriptively() {
+    // Flip the wire tenant of an untenanted Msg frame to a nonzero
+    // value: the decoder must call out the tag/header disagreement.
+    let f = Frame::msg(0, Message { src: 2, tag: 5, payload: vec![1.0] });
+    let mut bytes = f.encode().unwrap();
+    bytes[34] = 9; // tenant field little-endian low byte
+    let mut dec = FrameDecoder::new();
+    dec.push(&bytes);
+    let err = dec.next_frame().unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("malformed tenant"), "{msg}");
+    assert!(msg.contains("9"), "claimed tenant not named: {msg}");
+}
+
+#[test]
+fn out_of_range_tenant_field_rejected_before_payload() {
+    // A header claiming a tenant beyond the 15-bit space is rejected
+    // from the header alone — no payload bytes needed.
+    let f = Frame::msg(0, Message { src: 2, tag: 5, payload: vec![1.0; 8] });
+    let mut bytes = f.encode().unwrap();
+    bytes[34..38].copy_from_slice(&(MAX_WIRE_TENANT + 1).to_le_bytes());
+    let mut dec = FrameDecoder::new();
+    dec.push(&bytes[..HEADER_BYTES]);
+    let err = dec.next_frame().unwrap_err();
+    assert!(err.to_string().contains("exceeds"), "{err}");
+}
+
+#[test]
+fn truncation_inside_the_tenant_field_is_flagged_at_eof() {
+    let f = Frame::msg(1, Message { src: 0, tag: 3, payload: vec![2.0] });
+    let bytes = f.encode().unwrap();
+    for cut in 34..38 {
+        let mut dec = FrameDecoder::new();
+        dec.push(&bytes[..cut]);
+        assert!(dec.next_frame().unwrap().is_none(), "cut {cut}: frame from partial header");
+        let err = dec.finish().unwrap_err();
+        assert!(err.to_string().contains("truncated"), "cut {cut}: {err}");
+    }
 }
 
 #[test]
