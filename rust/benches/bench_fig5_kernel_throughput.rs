@@ -6,12 +6,67 @@
 //! series from the analytic profiler (H200-calibrated) and — when
 //! `artifacts/profiler_grid.json` exists — from the measured
 //! interpret-mode Pallas grid.
+//!
+//! Then the *real* kernels: the oracle (`ReferenceCaCompute`) against
+//! the fast path (`kernel::FastCaCompute`, scalar and AVX2 renderings,
+//! then thread scaling) on a fixed Fig. 5-flavoured fused batch. The
+//! shape is deterministic — same tasks in quick and full mode, only the
+//! iteration counts differ — so the emitted `BENCH_kernel.json` has a
+//! hand-auditable schema for the `distca drift` gate: `bit_exact` and
+//! the shape leaves are seeded facts, every timing-derived number is a
+//! wall-clock key. Machine-readable output: `BENCH_kernel.json` in the
+//! working directory.
 
+use distca::bench::BenchRunner;
 use distca::config::{ClusterConfig, ModelConfig};
 use distca::coordinator::Profiler;
+use distca::elastic::ReferenceCaCompute;
+use distca::kernel::{avx2_available, FastCaCompute, KernelBackend};
 use distca::model::FlopsModel;
+use distca::runtime::ca_exec::{synthetic_task, CaTaskTensors};
+use distca::util::json::Json;
 use distca::util::rng::{seed_from_env, Rng};
 use distca::util::tables::Table;
+
+/// The measured fused batch: 4 CA-tasks of 64 query rows over context
+/// ramps 128/256/384/512 at llama-ish GQA dims. Shapes are fixed (not
+/// sampled) so `flops_per_iter` is a committed constant the drift gate
+/// can check exactly.
+const KB_TASKS: usize = 4;
+const KB_Q: usize = 64;
+const KB_KV_BASE: usize = 128;
+const KB_H: usize = 8;
+const KB_HKV: usize = 2;
+const KB_D: usize = 64;
+
+fn kernel_batch(seed: u64) -> Vec<CaTaskTensors> {
+    let mut rng = Rng::new(seed ^ 0xF16_5);
+    (0..KB_TASKS)
+        .map(|i| {
+            let kv = KB_KV_BASE * (1 + (i % 4));
+            synthetic_task(&mut rng, KB_Q, kv, KB_H, KB_HKV, KB_D)
+        })
+        .collect()
+}
+
+/// Nominal FLOPs of one batch pass (4·h·d per (q, kv) pair, causality
+/// ignored): a fixed label for throughput math, identical in quick and
+/// full mode.
+fn kernel_batch_flops() -> f64 {
+    (0..KB_TASKS)
+        .map(|i| {
+            let kv = KB_KV_BASE * (1 + (i % 4));
+            4.0 * (KB_H * KB_D * KB_Q * kv) as f64
+        })
+        .sum()
+}
+
+fn bits_equal(a: &[Vec<f32>], b: &[Vec<f32>]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.len() == y.len() && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+        })
+}
 
 fn main() {
     let model = ModelConfig::llama3_8b();
@@ -87,4 +142,120 @@ fn main() {
     } else {
         println!("(no artifacts/profiler_grid.json — run `make artifacts PROFILE=1` for measured Pallas numbers)");
     }
+
+    // ── Measured: oracle vs fast-path kernel on a fixed fused batch ──
+    let seed = seed_from_env(7);
+    let batch = kernel_batch(seed);
+    let flops_per_iter = kernel_batch_flops();
+    let avx2 = avx2_available();
+
+    let (h, hkv, d) = (KB_H, KB_HKV, KB_D);
+    let oracle = ReferenceCaCompute::new(h, hkv, d);
+    let want = oracle.run_batch(&batch);
+
+    // Admission check before timing anything: every fast rendering must
+    // reproduce the oracle's bytes exactly, or the numbers below would
+    // describe a different function.
+    let scalar1 = FastCaCompute::new(h, hkv, d).backend(KernelBackend::Scalar).threads(1);
+    assert!(
+        bits_equal(&want, &scalar1.run_batch(&batch).expect("scalar run")),
+        "fast scalar kernel diverged from oracle bytes"
+    );
+    let scalar8 = FastCaCompute::new(h, hkv, d).backend(KernelBackend::Scalar).threads(8);
+    assert!(
+        bits_equal(&want, &scalar8.run_batch(&batch).expect("scalar 8t run")),
+        "threaded partition changed kernel bytes"
+    );
+    if avx2 {
+        let v1 = FastCaCompute::new(h, hkv, d).backend(KernelBackend::Avx2).threads(1);
+        assert!(
+            bits_equal(&want, &v1.run_batch(&batch).expect("avx2 run")),
+            "fast AVX2 kernel diverged from oracle bytes"
+        );
+    }
+
+    let mut r = BenchRunner::new("fig5 kernel — oracle vs fast path (4 tasks, 64q, kv 128..512)");
+    let m = r.bench("oracle 1t", || oracle.run_batch(&batch));
+    let oracle_mean = m.mean_s;
+    let m = r.bench("fast scalar 1t", || scalar1.run_batch(&batch).unwrap());
+    let scalar_mean = m.mean_s;
+    let avx2_mean = if avx2 {
+        let v1 = FastCaCompute::new(h, hkv, d).backend(KernelBackend::Avx2).threads(1);
+        let m = r.bench("fast avx2 1t", || v1.run_batch(&batch).unwrap());
+        m.mean_s
+    } else {
+        0.0
+    };
+
+    // Thread scaling on the auto-detected backend. Thread counts are
+    // pinned (not host-derived) so the emitted array keeps a fixed
+    // length for the drift gate.
+    let mut thread_rows = Vec::new();
+    let mut t1_mean = 0.0_f64;
+    for &n in &[1usize, 2, 4] {
+        let k = FastCaCompute::new(h, hkv, d).threads(n);
+        let m = r.bench(&format!("fast auto {n}t"), || k.run_batch(&batch).unwrap());
+        let mean = m.mean_s;
+        if n == 1 {
+            t1_mean = mean;
+        }
+        let speedup = if mean > 0.0 { t1_mean / mean } else { 0.0 };
+        thread_rows.push(Json::obj(vec![
+            ("threads", Json::Num(n as f64)),
+            ("mean_s", Json::Num(mean)),
+            ("tasks_per_s", Json::Num(if mean > 0.0 { KB_TASKS as f64 / mean } else { 0.0 })),
+            ("speedup_vs_1t", Json::Num(speedup)),
+            ("parallel_efficiency", Json::Num(speedup / n as f64)),
+        ]));
+    }
+    r.finish();
+
+    let gflops = |mean: f64| if mean > 0.0 { flops_per_iter / mean / 1e9 } else { 0.0 };
+    let speedup = |mean: f64| if mean > 0.0 { oracle_mean / mean } else { 0.0 };
+    println!(
+        "fast path vs oracle (bit-exact): scalar {:.2}x, avx2 {} ({})",
+        speedup(scalar_mean),
+        if avx2 { format!("{:.2}x", speedup(avx2_mean)) } else { "n/a".into() },
+        distca::kernel::kernel_label(),
+    );
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("kernel_throughput".into())),
+        ("seed", Json::Num(seed as f64)),
+        ("n_tasks", Json::Num(KB_TASKS as f64)),
+        ("q_len", Json::Num(KB_Q as f64)),
+        ("n_heads", Json::Num(KB_H as f64)),
+        ("n_kv_heads", Json::Num(KB_HKV as f64)),
+        ("head_dim", Json::Num(KB_D as f64)),
+        ("flops_per_iter", Json::Num(flops_per_iter)),
+        ("bit_exact", Json::Bool(true)),
+        ("avx2_detected", Json::Num(if avx2 { 1.0 } else { 0.0 })),
+        (
+            "oracle",
+            Json::obj(vec![
+                ("mean_s", Json::Num(oracle_mean)),
+                ("gflops", Json::Num(gflops(oracle_mean))),
+            ]),
+        ),
+        (
+            "scalar",
+            Json::obj(vec![
+                ("mean_s", Json::Num(scalar_mean)),
+                ("gflops", Json::Num(gflops(scalar_mean))),
+                ("speedup_vs_oracle", Json::Num(speedup(scalar_mean))),
+            ]),
+        ),
+        (
+            "avx2",
+            Json::obj(vec![
+                ("mean_s", Json::Num(avx2_mean)),
+                ("gflops", Json::Num(gflops(avx2_mean))),
+                ("speedup_vs_oracle", Json::Num(speedup(avx2_mean))),
+            ]),
+        ),
+        ("threads", Json::Arr(thread_rows)),
+    ]);
+    let path = "BENCH_kernel.json";
+    std::fs::write(path, out.to_string_pretty()).expect("write BENCH_kernel.json");
+    println!("\nwrote {path}");
 }

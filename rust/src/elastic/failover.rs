@@ -59,87 +59,228 @@ use super::pool::{ServerPool, ServerState};
 /// so it can run on the pure-Rust reference kernel without artifacts.
 pub trait CaCompute: Send {
     fn run(&mut self, task: &CaTaskTensors) -> Result<Vec<f32>>;
+
+    /// Zero-copy entry: compute directly from borrowed payload slices
+    /// (a [`CaTaskView`] over a pooled recv buffer). The default copies
+    /// into owned tensors and calls [`CaCompute::run`]; computes that
+    /// can work from slices override it to skip the copy.
+    fn run_view(&mut self, task: &CaTaskView<'_>) -> Result<Vec<f32>> {
+        self.run(&task.to_tensors())
+    }
+}
+
+/// Borrowed view of one CA-task's tensors: the zero-copy twin of
+/// [`CaTaskTensors`], pointing straight into a decoded payload buffer
+/// so task bytes are touched once between socket and kernel.
+#[derive(Debug, Clone, Copy)]
+pub struct CaTaskView<'a> {
+    /// `[q_len, n_heads, d]` flattened.
+    pub q: &'a [f32],
+    /// `[kv_len, n_kv_heads, d]` flattened (K).
+    pub k: &'a [f32],
+    /// same shape as `k` (V).
+    pub v: &'a [f32],
+    pub q_len: usize,
+    pub kv_len: usize,
+}
+
+impl<'a> CaTaskView<'a> {
+    pub fn from_tensors(t: &'a CaTaskTensors) -> CaTaskView<'a> {
+        CaTaskView { q: &t.q, k: &t.k, v: &t.v, q_len: t.q_len, kv_len: t.kv_len }
+    }
+
+    /// Materialize owned tensors (the copying fallback).
+    pub fn to_tensors(&self) -> CaTaskTensors {
+        CaTaskTensors {
+            q: self.q.to_vec(),
+            k: self.k.to_vec(),
+            v: self.v.to_vec(),
+            q_len: self.q_len,
+            kv_len: self.kv_len,
+        }
+    }
 }
 
 /// Pure-Rust causal GQA attention — the bit-exact oracle. Each task is
 /// computed independently with identical arithmetic whether invoked
 /// monolithically or per-dispatch, so disaggregated output equals the
 /// monolithic call *exactly* (not just to tolerance).
+///
+/// The oracle executes the repo's **pinned reduction order** (see
+/// `docs/ARCHITECTURE.md`, "The fast-path GQA kernel"): chunked
+/// streaming softmax with an always-evaluated rescale, pinned 4-lane
+/// FMA dot products, and the shared [`crate::kernel::math::pexp`]
+/// exponential. [`crate::kernel::FastCaCompute`] (scalar and AVX2)
+/// replays the same IEEE-754 op sequence, which is what makes the fast
+/// paths bit-exact vs this reference rather than merely close.
 #[derive(Debug, Clone)]
 pub struct ReferenceCaCompute {
     pub n_heads: usize,
     pub n_kv_heads: usize,
     pub head_dim: usize,
+    /// Hoisted accumulator scratch (`head_dim` f64s), reused across
+    /// tasks so oracle-column conformance runs don't churn the
+    /// allocator once per task.
+    scratch: std::cell::RefCell<Vec<f64>>,
 }
 
 impl ReferenceCaCompute {
     pub fn new(n_heads: usize, n_kv_heads: usize, head_dim: usize) -> ReferenceCaCompute {
         assert!(n_heads % n_kv_heads == 0, "heads {n_heads} not grouped by {n_kv_heads}");
-        ReferenceCaCompute { n_heads, n_kv_heads, head_dim }
+        ReferenceCaCompute {
+            n_heads,
+            n_kv_heads,
+            head_dim,
+            scratch: std::cell::RefCell::new(Vec::new()),
+        }
     }
 
     /// Monolithic oracle: run a whole batch in one call.
     pub fn run_batch(&self, tasks: &[CaTaskTensors]) -> Vec<Vec<f32>> {
-        tasks.iter().map(|t| reference_attention(t, self)).collect()
+        let mut scratch = self.scratch.borrow_mut();
+        tasks
+            .iter()
+            .map(|t| {
+                let mut out = vec![0.0f32; t.q_len * self.n_heads * self.head_dim];
+                reference_attention_into(
+                    &CaTaskView::from_tensors(t),
+                    self.n_heads,
+                    self.n_kv_heads,
+                    self.head_dim,
+                    &mut scratch,
+                    &mut out,
+                );
+                out
+            })
+            .collect()
     }
 }
 
 impl CaCompute for ReferenceCaCompute {
     fn run(&mut self, task: &CaTaskTensors) -> Result<Vec<f32>> {
-        Ok(reference_attention(task, self))
+        self.run_view(&CaTaskView::from_tensors(task))
+    }
+
+    fn run_view(&mut self, t: &CaTaskView<'_>) -> Result<Vec<f32>> {
+        let (h, hkv, d) = (self.n_heads, self.n_kv_heads, self.head_dim);
+        let mut out = vec![0.0f32; t.q_len * h * d];
+        let mut scratch = self.scratch.borrow_mut();
+        reference_attention_into(t, h, hkv, d, &mut scratch, &mut out);
+        Ok(out)
     }
 }
 
 /// Causal grouped-query attention over one CA-task. Query row `i` sits at
 /// absolute position `kv_len - q_len + i` and attends keys `0..=pos`
 /// (the §4.1 task contract: `kv(t)` is the full causal context of
-/// `q(t)`). Scores and accumulation are f64 for a stable, deterministic
-/// reference; the output is cast to f32 at the end.
+/// `q(t)`). Scores and accumulation are f64 in the pinned reduction
+/// order; the output is cast to f32 at the end.
 pub fn reference_attention(t: &CaTaskTensors, dims: &ReferenceCaCompute) -> Vec<f32> {
-    let (h, hkv, d) = (dims.n_heads, dims.n_kv_heads, dims.head_dim);
+    let mut scratch = Vec::new();
+    let mut out = vec![0.0f32; t.q_len * dims.n_heads * dims.head_dim];
+    reference_attention_into(
+        &CaTaskView::from_tensors(t),
+        dims.n_heads,
+        dims.n_kv_heads,
+        dims.head_dim,
+        &mut scratch,
+        &mut out,
+    );
+    out
+}
+
+/// The oracle body: an independent scalar rendering of the pinned
+/// reduction order (the fast backends in [`crate::kernel::flash`] are
+/// the other renderings — differential tests compare all of them).
+fn reference_attention_into(
+    t: &CaTaskView<'_>,
+    h: usize,
+    hkv: usize,
+    d: usize,
+    acc: &mut Vec<f64>,
+    out: &mut [f32],
+) {
+    use crate::kernel::flash::KV_CHUNK;
+    use crate::kernel::math::pexp;
     let group = h / hkv;
     assert_eq!(t.q.len(), t.q_len * h * d, "q shape");
     assert_eq!(t.k.len(), t.kv_len * hkv * d, "k shape");
     assert_eq!(t.v.len(), t.kv_len * hkv * d, "v shape");
     assert!(t.q_len <= t.kv_len, "q_len > kv_len");
+    assert_eq!(out.len(), t.q_len * h * d, "o shape");
+    acc.clear();
+    acc.resize(d, 0.0);
     let scale = 1.0 / (d as f64).sqrt();
     let offset = t.kv_len - t.q_len;
-    let mut out = vec![0.0f32; t.q_len * h * d];
-    let mut scores = vec![0.0f64; t.kv_len];
+    let mut probs = [0.0f64; KV_CHUNK];
     for i in 0..t.q_len {
         let causal = offset + i; // attends keys 0..=causal
         for head in 0..h {
             let kvh = head / group;
-            let q_base = (i * h + head) * d;
+            let q_row = &t.q[(i * h + head) * d..][..d];
             let mut max_s = f64::NEG_INFINITY;
-            for j in 0..=causal {
-                let k_base = (j * hkv + kvh) * d;
-                let mut s = 0.0f64;
-                for x in 0..d {
-                    s += t.q[q_base + x] as f64 * t.k[k_base + x] as f64;
-                }
-                let s = s * scale;
-                scores[j] = s;
-                if s > max_s {
-                    max_s = s;
-                }
-            }
             let mut denom = 0.0f64;
-            for score in scores.iter_mut().take(causal + 1) {
-                *score = (*score - max_s).exp();
-                denom += *score;
+            for a in acc.iter_mut() {
+                *a = 0.0;
+            }
+            let mut lo = 0usize;
+            while lo <= causal {
+                let hi = (lo + KV_CHUNK).min(causal + 1); // exclusive
+                // Chunk scores: pinned 4-lane FMA dot (lane l sums
+                // x ≡ l mod 4, combine (a0+a2)+(a1+a3), scalar FMA
+                // tail) and the chunk's running max.
+                let mut chunk_max = f64::NEG_INFINITY;
+                for j in lo..hi {
+                    let k_row = &t.k[(j * hkv + kvh) * d..][..d];
+                    let mut lanes = [0.0f64; 4];
+                    let mut x = 0;
+                    while x + 4 <= d {
+                        for (l, lane) in lanes.iter_mut().enumerate() {
+                            *lane = (q_row[x + l] as f64).mul_add(k_row[x + l] as f64, *lane);
+                        }
+                        x += 4;
+                    }
+                    let mut s = (lanes[0] + lanes[2]) + (lanes[1] + lanes[3]);
+                    while x < d {
+                        s = (q_row[x] as f64).mul_add(k_row[x] as f64, s);
+                        x += 1;
+                    }
+                    let s = s * scale;
+                    probs[j - lo] = s;
+                    if s > chunk_max {
+                        chunk_max = s;
+                    }
+                }
+                // Streaming update: the rescale factor is *always*
+                // evaluated (pexp(0) == 1 when the max stands still),
+                // so every backend performs the identical op sequence.
+                let m_new = if chunk_max > max_s { chunk_max } else { max_s };
+                let alpha = pexp(max_s - m_new);
+                for a in acc.iter_mut() {
+                    *a = alpha * *a;
+                }
+                let mut csum = 0.0f64;
+                for p in probs.iter_mut().take(hi - lo) {
+                    *p = pexp(*p - m_new);
+                    csum += *p;
+                }
+                denom = alpha.mul_add(denom, csum);
+                for j in lo..hi {
+                    let p = probs[j - lo];
+                    let v_row = &t.v[(j * hkv + kvh) * d..][..d];
+                    for (a, &vx) in acc.iter_mut().zip(v_row) {
+                        *a = p.mul_add(vx as f64, *a);
+                    }
+                }
+                max_s = m_new;
+                lo = hi;
             }
             let o_base = (i * h + head) * d;
-            for x in 0..d {
-                let mut acc = 0.0f64;
-                for (j, &p) in scores.iter().enumerate().take(causal + 1) {
-                    acc += p * t.v[(j * hkv + kvh) * d + x] as f64;
-                }
-                out[o_base + x] = (acc / denom) as f32;
+            for (x, &a) in acc.iter().enumerate() {
+                out[o_base + x] = (a / denom) as f32;
             }
         }
     }
-    out
 }
 
 // ---------------------------------------------------------------------
@@ -1579,6 +1720,12 @@ pub fn run_server_loop_obs(
     let mut dead = false;
     let mut task_delay = Duration::ZERO;
     let mut cancelled: HashSet<(usize, u64)> = HashSet::new();
+    // §5 byte accounting for the zero-copy data plane: Q and KV "live"
+    // for the duration of a task, O overwrites Q's slot in place, KV
+    // frees after compute. The arena is virtual (the pooled recv buffer
+    // is the actual storage), but the alias/drain invariants it checks
+    // are the real ones.
+    let mut arena = crate::memplan::Arena::unbounded();
     loop {
         let msg = fabric.recv(s);
         match msg.tag {
@@ -1614,20 +1761,39 @@ pub fn run_server_loop_obs(
                     continue;
                 }
                 let home = msg.src;
-                let t = decode_elastic(&msg, q_len, kv_len)
-                    .with_context(|| format!("server {s}: bad payload"))?;
-                let t_run = Instant::now();
-                if !task_delay.is_zero() {
-                    // The injected slowdown is part of this server's
-                    // compute as the coordinator experiences it, so it
-                    // lands inside the measured span — a straggler's
-                    // trace shows its compute ballooning.
-                    std::thread::sleep(task_delay);
-                }
-                let o = compute.run(&t)?;
-                if let Some(sink) = &sink {
-                    sink.record_compute(tick, tag, t_run.elapsed().as_secs_f64());
-                }
+                let o = {
+                    // Zero-copy: the view borrows the recv buffer; the
+                    // kernel reads Q/K/V straight out of it.
+                    let t = decode_elastic_view(&msg.payload, q_len, kv_len)
+                        .with_context(|| format!("server {s}: bad payload"))?;
+                    let q_bytes = (t.q.len() * 4) as u64;
+                    let kv_bytes = ((t.k.len() + t.v.len()) * 4) as u64;
+                    let q_slot = arena.alloc(q_bytes).expect("unbounded arena");
+                    let kv_slot = arena.alloc(kv_bytes).expect("unbounded arena");
+                    let t_run = Instant::now();
+                    if !task_delay.is_zero() {
+                        // The injected slowdown is part of this server's
+                        // compute as the coordinator experiences it, so it
+                        // lands inside the measured span — a straggler's
+                        // trace shows its compute ballooning.
+                        std::thread::sleep(task_delay);
+                    }
+                    let o = compute.run_view(&t)?;
+                    if let Some(sink) = &sink {
+                        sink.record_compute(tick, tag, t_run.elapsed().as_secs_f64());
+                    }
+                    // O overwrites Q's slot (O is Q-shaped); KV frees
+                    // after the kernel, O after the send-off below.
+                    let o_slot = arena.write_in_place(q_slot, (o.len() * 4) as u64);
+                    arena.free(kv_slot);
+                    debug_assert!(arena.check_no_alias().is_ok());
+                    arena.free(o_slot);
+                    debug_assert!(arena.check_drained().is_ok());
+                    o
+                };
+                // The recv buffer's bytes were consumed exactly once
+                // (socket → kernel); hand it back to the fabric's pool.
+                fabric.recycle_payload(msg.payload);
                 let mut payload = Vec::with_capacity(1 + o.len());
                 payload.push(header_word(tick));
                 payload.extend_from_slice(&o);
@@ -2611,24 +2777,26 @@ pub fn run_elastic_sim_obs(
     })
 }
 
-/// Split an elastic DATA payload back into task tensors. The header is
-/// self-describing — `[q_len, kv_len, tick, q_sz]` — so the server needs
-/// no out-of-band shape agreement with the coordinator: `q` is the next
-/// `q_sz` words and the remainder splits evenly into `k` and `v`.
-fn decode_elastic(msg: &Message, q_len: usize, kv_len: usize) -> Result<CaTaskTensors> {
-    anyhow::ensure!(msg.payload.len() >= 4, "truncated header");
+/// Split an elastic DATA payload into a borrowed task view — the
+/// zero-copy decode. The header is self-describing —
+/// `[q_len, kv_len, tick, q_sz]` — so the server needs no out-of-band
+/// shape agreement with the coordinator: `q` is the next `q_sz` words
+/// and the remainder splits evenly into `k` and `v`. The returned view
+/// borrows `payload` directly; nothing is copied.
+pub fn decode_elastic_view(payload: &[f32], q_len: usize, kv_len: usize) -> Result<CaTaskView<'_>> {
+    anyhow::ensure!(payload.len() >= 4, "truncated header");
     anyhow::ensure!(q_len > 0 && kv_len >= q_len, "bad header lengths");
-    let q_sz = header_usize(msg.payload[3]);
-    let body = &msg.payload[4..];
+    let q_sz = header_usize(payload[3]);
+    let body = &payload[4..];
     anyhow::ensure!(q_sz <= body.len(), "q overruns payload");
     let rest = body.len() - q_sz;
     anyhow::ensure!(rest % 2 == 0, "k/v remainder not even");
     let kv_sz = rest / 2;
     anyhow::ensure!(q_sz % q_len == 0 && kv_sz % kv_len == 0, "rows not aligned");
-    Ok(CaTaskTensors {
-        q: body[..q_sz].to_vec(),
-        k: body[q_sz..q_sz + kv_sz].to_vec(),
-        v: body[q_sz + kv_sz..].to_vec(),
+    Ok(CaTaskView {
+        q: &body[..q_sz],
+        k: &body[q_sz..q_sz + kv_sz],
+        v: &body[q_sz + kv_sz..],
         q_len,
         kv_len,
     })
@@ -3410,9 +3578,9 @@ mod tests {
 
     #[test]
     fn decode_elastic_rejects_garbage() {
-        let msg = Message { src: 0, tag: 1, payload: vec![header_word(4); 4] };
-        assert!(decode_elastic(&msg, 4, 2).is_err()); // kv < q
-        let msg2 = Message { src: 0, tag: 1, payload: vec![header_word(1); 2] };
-        assert!(decode_elastic(&msg2, 1, 1).is_err()); // truncated
+        let payload = vec![header_word(4); 4];
+        assert!(decode_elastic_view(&payload, 4, 2).is_err()); // kv < q
+        let payload2 = vec![header_word(1); 2];
+        assert!(decode_elastic_view(&payload2, 1, 1).is_err()); // truncated
     }
 }

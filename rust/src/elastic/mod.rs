@@ -134,10 +134,11 @@ pub mod pp;
 
 pub use autoscale::{AutoscaleCfg, Autoscaler, LoadSignals, ScaleDecision};
 pub use failover::{
-    retarget_for_beliefs, run_elastic_exec, run_elastic_exec_pp, run_elastic_sim,
-    run_elastic_sim_obs, run_server_loop, run_server_loop_obs, seed_belief_speeds,
-    sim_auto_mem_budget, CaCompute, ElasticCfg, ElasticCoordinator, ElasticSimCfg,
-    ElasticSimReport, ElasticTask, ExecReport, ReferenceCaCompute, SimTick, TickStats,
+    decode_elastic_view, retarget_for_beliefs, run_elastic_exec, run_elastic_exec_pp,
+    run_elastic_sim, run_elastic_sim_obs, run_server_loop, run_server_loop_obs,
+    seed_belief_speeds, sim_auto_mem_budget, CaCompute, CaTaskView, ElasticCfg,
+    ElasticCoordinator, ElasticSimCfg, ElasticSimReport, ElasticTask, ExecReport,
+    ReferenceCaCompute, SimTick, TickStats,
 };
 pub use fault::{partition_mid_tick, FaultEvent, FaultPlan, MidTickFaults};
 pub use health::{HealthCfg, HealthMonitor, Verdict};

@@ -88,6 +88,12 @@ pub trait Transport: Send + Sync {
     /// default is a no-op; the TCP fabric carries it in the frame
     /// header so mid-wave faults are scoped per wave across processes.
     fn set_wave_stamp(&self, _wave: usize, _epoch: u64) {}
+    /// Return a spent recv-payload buffer to the fabric's pool so the
+    /// next inbound frame decodes into it instead of a fresh
+    /// allocation (the zero-copy data plane). In-process fabrics move
+    /// payload `Vec`s end-to-end and have nothing to pool — the
+    /// default just drops the buffer.
+    fn recycle_payload(&self, _buf: Vec<f32>) {}
 }
 
 /// In-process channel fabric.

@@ -337,9 +337,10 @@ pub fn run_gateway(cfg: &GatewayCfg) -> Result<GatewayReport> {
         let (process_plan, inband) = split_fault_plan(&cfg.fault);
         (Backend::Net { fabric, procs, pending }, co, process_plan, inband)
     } else {
-        let co = ElasticCoordinator::spawn(n, ElasticCfg::default(), |_| {
-            Box::new(ReferenceCaCompute::new(h, hkv, d))
-        });
+        let co =
+            ElasticCoordinator::spawn(n, ElasticCfg::default(), |_| {
+                crate::kernel::compute_from_env(h, hkv, d)
+            });
         (Backend::InProcess, co, FaultPlan::new(), cfg.fault.clone())
     };
     let oracle = ReferenceCaCompute::new(h, hkv, d);

@@ -1,0 +1,335 @@
+//! The blocked streaming-softmax attention backends (scalar + AVX2).
+//!
+//! Both backends execute the **pinned reduction order** — the exact
+//! IEEE-754 op sequence the oracle in `elastic::failover` also follows
+//! (see `docs/ARCHITECTURE.md`, "The fast-path GQA kernel"), per
+//! `(query row i, head)`:
+//!
+//! 1. the causal KV span `0..=kv_len-q_len+i` is walked in chunks of
+//!    [`KV_CHUNK`] keys;
+//! 2. scores are pinned 4-lane FMA dot products ([`dot_pinned_scalar`]):
+//!    lane `l` accumulates elements `x ≡ l (mod 4)`, the horizontal
+//!    combine is `(a0+a2) + (a1+a3)`, the `d % 4` tail is scalar FMA;
+//! 3. the running max uses `if s > m` selection (NaN never wins —
+//!    `_mm256_max_pd` semantics) and the rescale factor
+//!    `α = pexp(m_old - m_new)` is **always** evaluated, even when the
+//!    max did not move (`pexp(0) == 1` exactly);
+//! 4. `p_j = pexp(s_j - m_new)` is element-wise (lane-pure, so the
+//!    4-wide [`pexp4`][super::math::pexp4] form is bit-identical),
+//!    the chunk sum is a sequential scalar add chain in `j` order, and
+//!    `denom = fma(α, denom, chunk_sum)`;
+//! 5. the accumulator rescale is an element-wise multiply and the V
+//!    accumulation is `acc[x] = fma(p_j, v[j][x], acc[x])` with `j`
+//!    outer-sequential (the order-dependent chain) and `x` inner
+//!    (element-wise, vectorizable);
+//! 6. `out[x] = (acc[x] / denom) as f32` — division and the f64→f32
+//!    cast are correctly rounded in both scalar and packed forms.
+//!
+//! Every op in the sequence is either correctly rounded (FMA, add, mul,
+//! div, casts, `pexp`) or an order-pinned selection, so any backend
+//! that replays the sequence reproduces the oracle's output bytes
+//! exactly. `tests/prop_kernel.rs` enforces it differentially.
+
+use super::math::pexp;
+
+/// Keys per streaming chunk. 64 keys × `d` floats keeps one chunk of K
+/// (and of V) inside L1/L2 for realistic head dims while the score
+/// scratch stays a fixed 512-byte stack array.
+pub const KV_CHUNK: usize = 64;
+
+/// Pinned 4-lane dot product of two `d`-length f32 rows, accumulated in
+/// f64. This is the scalar rendering of the AVX2 sequence: four
+/// independent FMA accumulator lanes over aligned quads, the pinned
+/// horizontal combine, then a scalar FMA tail for `d % 4`.
+#[inline]
+pub fn dot_pinned_scalar(q: &[f32], k: &[f32]) -> f64 {
+    debug_assert_eq!(q.len(), k.len());
+    let d = q.len();
+    let quads = d / 4 * 4;
+    let mut a = [0.0f64; 4];
+    let mut x = 0;
+    while x < quads {
+        a[0] = (q[x] as f64).mul_add(k[x] as f64, a[0]);
+        a[1] = (q[x + 1] as f64).mul_add(k[x + 1] as f64, a[1]);
+        a[2] = (q[x + 2] as f64).mul_add(k[x + 2] as f64, a[2]);
+        a[3] = (q[x + 3] as f64).mul_add(k[x + 3] as f64, a[3]);
+        x += 4;
+    }
+    let mut s = (a[0] + a[2]) + (a[1] + a[3]);
+    while x < d {
+        s = (q[x] as f64).mul_add(k[x] as f64, s);
+        x += 1;
+    }
+    s
+}
+
+/// One `(task, head)` of causal GQA attention, scalar backend.
+///
+/// Writes rows `(i, head)` of the task's `[q_len, h, d]` output through
+/// `out`. `acc` is caller-provided scratch of exactly `d` f64s.
+///
+/// # Safety
+/// `out` must be valid for `q_len * h * d` f32 writes, and no other
+/// thread may concurrently write the `(i, head)` rows this call owns
+/// (disjoint heads of the same task are fine — that is the threading
+/// contract of [`FastCaCompute`][super::FastCaCompute]).
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn attn_head_scalar(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    q_len: usize,
+    kv_len: usize,
+    h: usize,
+    hkv: usize,
+    d: usize,
+    head: usize,
+    out: *mut f32,
+    acc: &mut [f64],
+) {
+    debug_assert_eq!(acc.len(), d);
+    let group = h / hkv;
+    let kvh = head / group;
+    let scale = 1.0 / (d as f64).sqrt();
+    let offset = kv_len - q_len;
+    let mut scores = [0.0f64; KV_CHUNK];
+    for i in 0..q_len {
+        let causal = offset + i; // this row attends keys 0..=causal
+        let q_base = (i * h + head) * d;
+        let q_row = &q[q_base..q_base + d];
+        let mut m = f64::NEG_INFINITY;
+        let mut denom = 0.0f64;
+        for a in acc.iter_mut() {
+            *a = 0.0;
+        }
+        let mut start = 0usize;
+        while start <= causal {
+            let n = (causal + 1 - start).min(KV_CHUNK);
+            // (2) chunk scores + chunk max.
+            let mut m_c = f64::NEG_INFINITY;
+            for jj in 0..n {
+                let k_base = ((start + jj) * hkv + kvh) * d;
+                let s = dot_pinned_scalar(q_row, &k[k_base..k_base + d]) * scale;
+                scores[jj] = s;
+                if s > m_c {
+                    m_c = s;
+                }
+            }
+            // (3) running max + unconditional rescale factor.
+            let m_new = if m_c > m { m_c } else { m };
+            let alpha = pexp(m - m_new);
+            for a in acc.iter_mut() {
+                *a = alpha * *a;
+            }
+            // (4) probabilities, sequential chunk sum, denominator.
+            for s in scores.iter_mut().take(n) {
+                *s = pexp(*s - m_new);
+            }
+            let mut csum = 0.0f64;
+            for &p in scores.iter().take(n) {
+                csum += p;
+            }
+            denom = alpha.mul_add(denom, csum);
+            // (5) V accumulation: j outer (the pinned chain), x inner.
+            for jj in 0..n {
+                let p = scores[jj];
+                let v_base = ((start + jj) * hkv + kvh) * d;
+                for (x, a) in acc.iter_mut().enumerate() {
+                    *a = p.mul_add(v[v_base + x] as f64, *a);
+                }
+            }
+            m = m_new;
+            start += n;
+        }
+        // (6) finalize.
+        for (x, &a) in acc.iter().enumerate() {
+            *out.add(q_base + x) = (a / denom) as f32;
+        }
+    }
+}
+
+/// Pinned 4-lane dot product, AVX2/FMA rendering — bit-identical to
+/// [`dot_pinned_scalar`] by construction (same lanes, same combine,
+/// same scalar-FMA tail).
+///
+/// # Safety
+/// Caller verified `avx2`+`fma`; `q` and `k` are valid for `d` reads.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_pinned_avx2(q: *const f32, k: *const f32, d: usize) -> f64 {
+    use core::arch::x86_64::*;
+    let quads = d / 4 * 4;
+    let mut acc = _mm256_setzero_pd();
+    let mut x = 0;
+    while x < quads {
+        let qv = _mm256_cvtps_pd(_mm_loadu_ps(q.add(x)));
+        let kv = _mm256_cvtps_pd(_mm_loadu_ps(k.add(x)));
+        acc = _mm256_fmadd_pd(qv, kv, acc);
+        x += 4;
+    }
+    // Horizontal combine pinned as (a0+a2) + (a1+a3).
+    let lo = _mm256_castpd256_pd128(acc); // [a0, a1]
+    let hi = _mm256_extractf128_pd::<1>(acc); // [a2, a3]
+    let pair = _mm_add_pd(lo, hi); // [a0+a2, a1+a3]
+    let swap = _mm_unpackhi_pd(pair, pair);
+    let mut s = _mm_cvtsd_f64(_mm_add_sd(pair, swap));
+    while x < d {
+        s = (*q.add(x) as f64).mul_add(*k.add(x) as f64, s);
+        x += 1;
+    }
+    s
+}
+
+/// One `(task, head)`, AVX2/FMA backend — the same pinned sequence as
+/// [`attn_head_scalar`], vector ops only where they are element-wise or
+/// lane-pure (dot lanes, `pexp4`, rescale, V quads); every
+/// order-dependent chain (running max, chunk sum, denominator, the `j`
+/// accumulation order) stays scalar-sequential.
+///
+/// # Safety
+/// As [`attn_head_scalar`], plus the caller must have verified
+/// `avx2`+`fma` via `is_x86_feature_detected!`.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(crate) unsafe fn attn_head_avx2(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    q_len: usize,
+    kv_len: usize,
+    h: usize,
+    hkv: usize,
+    d: usize,
+    head: usize,
+    out: *mut f32,
+    acc: &mut [f64],
+) {
+    use core::arch::x86_64::*;
+    use super::math::pexp4;
+    debug_assert_eq!(acc.len(), d);
+    let group = h / hkv;
+    let kvh = head / group;
+    let scale = 1.0 / (d as f64).sqrt();
+    let offset = kv_len - q_len;
+    let quads = d / 4 * 4;
+    let mut scores = [0.0f64; KV_CHUNK];
+    for i in 0..q_len {
+        let causal = offset + i;
+        let q_base = (i * h + head) * d;
+        let q_ptr = q.as_ptr().add(q_base);
+        let mut m = f64::NEG_INFINITY;
+        let mut denom = 0.0f64;
+        for a in acc.iter_mut() {
+            *a = 0.0;
+        }
+        let mut start = 0usize;
+        while start <= causal {
+            let n = (causal + 1 - start).min(KV_CHUNK);
+            let mut m_c = f64::NEG_INFINITY;
+            for jj in 0..n {
+                let k_base = ((start + jj) * hkv + kvh) * d;
+                let s = dot_pinned_avx2(q_ptr, k.as_ptr().add(k_base), d) * scale;
+                scores[jj] = s;
+                if s > m_c {
+                    m_c = s;
+                }
+            }
+            let m_new = if m_c > m { m_c } else { m };
+            let alpha = pexp(m - m_new);
+            let al = _mm256_set1_pd(alpha);
+            let mut x = 0;
+            while x < quads {
+                let av = _mm256_loadu_pd(acc.as_ptr().add(x));
+                _mm256_storeu_pd(acc.as_mut_ptr().add(x), _mm256_mul_pd(al, av));
+                x += 4;
+            }
+            while x < d {
+                acc[x] = alpha * acc[x];
+                x += 1;
+            }
+            let mv = _mm256_set1_pd(m_new);
+            let mut jj = 0;
+            while jj + 4 <= n {
+                let sv = _mm256_loadu_pd(scores.as_ptr().add(jj));
+                let pv = pexp4(_mm256_sub_pd(sv, mv));
+                _mm256_storeu_pd(scores.as_mut_ptr().add(jj), pv);
+                jj += 4;
+            }
+            while jj < n {
+                scores[jj] = pexp(scores[jj] - m_new);
+                jj += 1;
+            }
+            let mut csum = 0.0f64;
+            for &p in scores.iter().take(n) {
+                csum += p;
+            }
+            denom = alpha.mul_add(denom, csum);
+            for jj in 0..n {
+                let p = _mm256_set1_pd(scores[jj]);
+                let v_base = ((start + jj) * hkv + kvh) * d;
+                let mut x = 0;
+                while x < quads {
+                    let vv = _mm256_cvtps_pd(_mm_loadu_ps(v.as_ptr().add(v_base + x)));
+                    let av = _mm256_loadu_pd(acc.as_ptr().add(x));
+                    _mm256_storeu_pd(acc.as_mut_ptr().add(x), _mm256_fmadd_pd(p, vv, av));
+                    x += 4;
+                }
+                while x < d {
+                    acc[x] = scores[jj].mul_add(v[v_base + x] as f64, acc[x]);
+                    x += 1;
+                }
+            }
+            m = m_new;
+            start += n;
+        }
+        let dv = _mm256_set1_pd(denom);
+        let mut x = 0;
+        while x < quads {
+            let av = _mm256_loadu_pd(acc.as_ptr().add(x));
+            let ov = _mm256_cvtpd_ps(_mm256_div_pd(av, dv));
+            _mm_storeu_ps(out.add(q_base + x), ov);
+            x += 4;
+        }
+        while x < d {
+            *out.add(q_base + x) = (acc[x] / denom) as f32;
+            x += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_pinned_matches_naive_closely() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        for d in [1usize, 3, 4, 7, 8, 16, 63, 64, 65] {
+            let q: Vec<f32> = (0..d).map(|_| rng.gen_f64(-1.0, 1.0) as f32).collect();
+            let k: Vec<f32> = (0..d).map(|_| rng.gen_f64(-1.0, 1.0) as f32).collect();
+            let naive: f64 = q.iter().zip(&k).map(|(&a, &b)| a as f64 * b as f64).sum();
+            let got = dot_pinned_scalar(&q, &k);
+            assert!((got - naive).abs() < 1e-12, "d={d}: {got} vs {naive}");
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn dot_pinned_avx2_is_bit_exact_vs_scalar() {
+        if !(is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")) {
+            eprintln!("skipping: no AVX2/FMA on this host");
+            return;
+        }
+        let mut rng = crate::util::rng::Rng::new(12);
+        for d in [1usize, 2, 4, 5, 8, 15, 16, 64, 65, 127] {
+            for _ in 0..50 {
+                let q: Vec<f32> = (0..d).map(|_| rng.gen_f64(-3.0, 3.0) as f32).collect();
+                let k: Vec<f32> = (0..d).map(|_| rng.gen_f64(-3.0, 3.0) as f32).collect();
+                let want = dot_pinned_scalar(&q, &k);
+                let got = unsafe { dot_pinned_avx2(q.as_ptr(), k.as_ptr(), d) };
+                assert_eq!(got.to_bits(), want.to_bits(), "d={d}");
+            }
+        }
+    }
+}

@@ -1,0 +1,218 @@
+//! The pinned exponential: one `exp` definition shared by every
+//! attention backend.
+//!
+//! Bit-exactness across the oracle, the scalar fast path, and the AVX2
+//! fast path hinges on every backend evaluating *the same IEEE-754
+//! operation sequence*. `libm`'s `exp` is out: its result can differ
+//! between libm versions, and there is no 4-wide form guaranteed to
+//! match it lane-for-lane. So the repo pins its own: [`pexp`] (scalar)
+//! and [`pexp4`] (AVX2, 4 lanes) evaluate the identical chain of
+//! correctly-rounded ops — FMA range reduction against a hi/lo split of
+//! `ln 2`, a degree-13 Taylor polynomial in Horner form (all FMA), and
+//! a `2^n` scale built directly from the rounding-shift bit trick — so
+//! `pexp4(x)[l] == pexp(x[l])` for **every** input bit pattern,
+//! including NaN, ±inf, and the clamp boundaries.
+//!
+//! Accuracy is ~1 ulp over the clamped range, but accuracy is not the
+//! contract — *identity between backends* is. `prop_kernel.rs` holds
+//! the backends to it differentially.
+
+/// Inputs above this return `+inf`. Chosen (rather than `ln(f64::MAX)`)
+/// so the rounded exponent `n` stays ≤ 1023 and `2^n` is a normal f64.
+pub const PEXP_OVERFLOW: f64 = 709.0;
+/// Inputs below this (including `-inf`) return `+0.0`. Chosen so the
+/// scale `2^n` stays normal (`exp(-708) ≈ 3.3e-308 > f64::MIN_POSITIVE`);
+/// true results between `2^-1022` and `exp(-708)` are flushed to zero,
+/// which softmax never notices (the max score always maps to `exp(0)`).
+pub const PEXP_UNDERFLOW: f64 = -708.0;
+
+const LOG2_E: f64 = std::f64::consts::LOG2_E;
+/// `1.5 * 2^52`: adding it forces round-to-nearest-integer in the
+/// low mantissa bits ("magic rounding shift").
+const SHIFT: f64 = 6_755_399_441_055_744.0;
+/// Bit pattern of [`SHIFT`]; `to_bits(SHIFT + n) - SHIFT_BITS == n`
+/// (two's complement) for `|n| < 2^51`.
+const SHIFT_BITS: u64 = 0x4338_0000_0000_0000;
+/// `ln 2` split hi/lo (Cody–Waite): `LN2_HI + LN2_LO == ln 2` to
+/// ~106 bits, and with FMA each reduction step is a single rounding.
+const LN2_HI: f64 = 0.693_147_180_559_945_3;
+const LN2_LO: f64 = 2.319_046_813_846_299_6e-17;
+
+/// Taylor coefficients `1/13!, 1/12!, …, 1/1!, 1/0!` for Horner
+/// evaluation (highest degree first). Written as literals so the scalar
+/// and AVX2 paths load bit-identical constants.
+pub(crate) const POLY: [f64; 14] = [
+    1.605_904_383_682_161_3e-10, // 1/13!
+    2.087_675_698_786_81e-9,     // 1/12!
+    2.505_210_838_544_172e-8,    // 1/11!
+    2.755_731_922_398_589e-7,    // 1/10!
+    2.755_731_922_398_589_3e-6,  // 1/9!
+    2.480_158_730_158_73e-5,     // 1/8!
+    1.984_126_984_126_984e-4,    // 1/7!
+    1.388_888_888_888_888_9e-3,  // 1/6!
+    8.333_333_333_333_333e-3,    // 1/5!
+    4.166_666_666_666_666_4e-2,  // 1/4!
+    1.666_666_666_666_666_6e-1,  // 1/3!
+    0.5,                         // 1/2!
+    1.0,                         // 1/1!
+    1.0,                         // 1/0!
+];
+
+/// Pinned `exp(x)`: the reduction-order contract's exponential.
+///
+/// Special cases (the AVX2 twin blends the same three masks):
+/// NaN → canonical NaN, `x > PEXP_OVERFLOW` → `+inf`,
+/// `x < PEXP_UNDERFLOW` (including `-inf`) → `0.0`.
+#[inline]
+pub fn pexp(x: f64) -> f64 {
+    if x.is_nan() {
+        return f64::NAN;
+    }
+    if x > PEXP_OVERFLOW {
+        return f64::INFINITY;
+    }
+    if x < PEXP_UNDERFLOW {
+        return 0.0;
+    }
+    // n = round(x / ln 2) via the magic shift; `t - SHIFT` recovers n
+    // exactly as an f64, and the low bits of `t` hold n as an integer.
+    let t = x.mul_add(LOG2_E, SHIFT);
+    let n = t - SHIFT;
+    // r = x - n*ln2, Cody-Waite two-step; r ∈ ~[-0.347, 0.347].
+    let r = n.mul_add(-LN2_HI, x);
+    let r = n.mul_add(-LN2_LO, r);
+    // exp(r) by Horner, all FMA.
+    let mut p = POLY[0];
+    for &c in &POLY[1..] {
+        p = p.mul_add(r, c);
+    }
+    // 2^n assembled from n's integer bits; n ∈ [-1021, 1023] here, so
+    // the biased exponent is a normal f64.
+    let n_i = t.to_bits().wrapping_sub(SHIFT_BITS) as i64;
+    let scale = f64::from_bits(((n_i + 1023) as u64) << 52);
+    p * scale
+}
+
+/// AVX2 twin of [`pexp`]: per-lane identical results for every input.
+///
+/// # Safety
+/// Caller must have verified `avx2` and `fma` via
+/// `is_x86_feature_detected!`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn pexp4(x: core::arch::x86_64::__m256d) -> core::arch::x86_64::__m256d {
+    use core::arch::x86_64::*;
+    // Masks first: the main path runs unconditionally on all lanes and
+    // produces garbage where a mask is set; the blends discard it.
+    let nan = _mm256_cmp_pd::<_CMP_UNORD_Q>(x, x);
+    let over = _mm256_cmp_pd::<_CMP_GT_OQ>(x, _mm256_set1_pd(PEXP_OVERFLOW));
+    let under = _mm256_cmp_pd::<_CMP_LT_OQ>(x, _mm256_set1_pd(PEXP_UNDERFLOW));
+
+    let shift = _mm256_set1_pd(SHIFT);
+    let t = _mm256_fmadd_pd(x, _mm256_set1_pd(LOG2_E), shift);
+    let n = _mm256_sub_pd(t, shift);
+    let r = _mm256_fmadd_pd(n, _mm256_set1_pd(-LN2_HI), x);
+    let r = _mm256_fmadd_pd(n, _mm256_set1_pd(-LN2_LO), r);
+    let mut p = _mm256_set1_pd(POLY[0]);
+    for &c in &POLY[1..] {
+        p = _mm256_fmadd_pd(p, r, _mm256_set1_pd(c));
+    }
+    // 2^n from t's integer bits: bits(t) - bits(SHIFT) = n, then bias
+    // and shift into the exponent field — same trick as the scalar path.
+    let n_i = _mm256_sub_epi64(_mm256_castpd_si256(t), _mm256_set1_epi64x(SHIFT_BITS as i64));
+    let scale = _mm256_castsi256_pd(_mm256_slli_epi64::<52>(_mm256_add_epi64(
+        n_i,
+        _mm256_set1_epi64x(1023),
+    )));
+    let y = _mm256_mul_pd(p, scale);
+
+    let y = _mm256_blendv_pd(y, _mm256_set1_pd(f64::INFINITY), over);
+    let y = _mm256_blendv_pd(y, _mm256_setzero_pd(), under);
+    _mm256_blendv_pd(y, _mm256_set1_pd(f64::NAN), nan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pexp_specials_are_pinned() {
+        assert!(pexp(f64::NAN).is_nan());
+        assert_eq!(pexp(f64::NAN).to_bits(), f64::NAN.to_bits(), "canonical NaN");
+        assert_eq!(pexp(f64::INFINITY), f64::INFINITY);
+        assert_eq!(pexp(f64::NEG_INFINITY), 0.0);
+        assert_eq!(pexp(PEXP_OVERFLOW + 1.0), f64::INFINITY);
+        assert_eq!(pexp(PEXP_UNDERFLOW - 1.0), 0.0);
+        assert_eq!(pexp(0.0), 1.0, "exp(0) must be exactly 1 for softmax");
+        assert_eq!(pexp(-0.0), 1.0);
+    }
+
+    #[test]
+    fn pexp_tracks_libm_closely() {
+        // Accuracy is not the contract, but a gross error would still be
+        // a bug: stay within a few ulps of libm over the softmax range.
+        let mut x = -40.0f64;
+        while x < 40.0 {
+            let want = x.exp();
+            let got = pexp(x);
+            let rel = ((got - want) / want).abs();
+            assert!(rel < 1e-14, "pexp({x}) = {got:e}, libm {want:e}, rel {rel:e}");
+            x += 0.003_7;
+        }
+    }
+
+    #[test]
+    fn pexp_boundaries_stay_finite_normal() {
+        assert!(pexp(PEXP_OVERFLOW).is_finite());
+        assert!(pexp(PEXP_UNDERFLOW) > 0.0);
+        assert!(pexp(PEXP_UNDERFLOW).is_normal());
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn pexp4_matches_pexp_lane_for_lane() {
+        if !(is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")) {
+            eprintln!("skipping: no AVX2/FMA on this host");
+            return;
+        }
+        use core::arch::x86_64::*;
+        let mut rng = crate::util::rng::Rng::new(0xE9);
+        let mut cases: Vec<f64> = vec![
+            f64::NAN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            0.0,
+            -0.0,
+            PEXP_OVERFLOW,
+            PEXP_UNDERFLOW,
+            709.1,
+            -708.1,
+            f64::MIN_POSITIVE / 2.0, // subnormal
+            f64::from_bits(0x7FF0_0000_0000_0001), // signaling-ish NaN payload
+        ];
+        for _ in 0..4000 {
+            cases.push(rng.gen_f64(-760.0, 760.0));
+            cases.push(rng.gen_f64(-2.0, 2.0));
+        }
+        while cases.len() % 4 != 0 {
+            cases.push(0.0);
+        }
+        for quad in cases.chunks_exact(4) {
+            let got = unsafe {
+                let v = pexp4(_mm256_loadu_pd(quad.as_ptr()));
+                let mut out = [0.0f64; 4];
+                _mm256_storeu_pd(out.as_mut_ptr(), v);
+                out
+            };
+            for l in 0..4 {
+                let want = pexp(quad[l]);
+                assert_eq!(
+                    got[l].to_bits(),
+                    want.to_bits(),
+                    "lane {l} of {quad:?}: {:e} vs {want:e}",
+                    got[l]
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,348 @@
+//! Fast-path GQA core attention: blocked streaming softmax,
+//! thread-parallel across `(task, head)` pairs, AVX2/FMA inner loops
+//! behind runtime feature detection — **bit-exact vs the oracle**.
+//!
+//! The repo's correctness story is "every execution path reproduces
+//! [`ReferenceCaCompute`] byte-for-byte", so a fast kernel is only
+//! admissible if it reproduces the oracle's bytes exactly. All three
+//! implementations (oracle, scalar fast path, AVX2 fast path) therefore
+//! execute the *pinned reduction order* documented in [`flash`] and in
+//! `docs/ARCHITECTURE.md`: the same chunked streaming-softmax op
+//! sequence built exclusively from correctly-rounded IEEE-754
+//! operations (FMA everywhere, one shared [`math::pexp`] exponential),
+//! which makes bit-equality a property of the *contract*, not of any
+//! particular instruction selection. `tests/prop_kernel.rs` and the
+//! `fastkernel` conformance column hold all backends to it.
+//!
+//! Backend selection is environmental, so any run of any binary can be
+//! pinned for debugging or differential testing:
+//!
+//! | `DISTCA_KERNEL` | compute                                          |
+//! |-----------------|--------------------------------------------------|
+//! | unset / `fast`  | [`FastCaCompute`], AVX2 if detected else scalar  |
+//! | `avx2`          | [`FastCaCompute`], AVX2 (panics if undetected)   |
+//! | `scalar`        | [`FastCaCompute`], scalar fallback               |
+//! | `oracle`        | [`ReferenceCaCompute`] (single-thread reference) |
+//!
+//! Thread count comes from `DISTCA_KERNEL_THREADS` (0/unset = all
+//! available cores); small batches run inline regardless, so the tiny
+//! CA-tasks of the conformance suites never pay thread-spawn overhead
+//! under the already-threaded elastic coordinator.
+
+pub mod flash;
+pub mod math;
+
+use anyhow::Result;
+
+use crate::elastic::failover::{CaCompute, CaTaskView, ReferenceCaCompute};
+use crate::runtime::ca_exec::CaTaskTensors;
+
+pub use flash::{dot_pinned_scalar, KV_CHUNK};
+pub use math::{pexp, PEXP_OVERFLOW, PEXP_UNDERFLOW};
+
+/// Below this estimated FLOP count a batch runs inline on the calling
+/// thread: conformance-sized tasks (tens of rows, d ≤ 16) are far
+/// cheaper than a thread spawn, and the elastic runtime already runs
+/// one server per thread.
+const PAR_MIN_FLOPS: f64 = 4.0e6;
+
+/// Is the AVX2/FMA backend usable on this machine?
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Which backend a [`FastCaCompute`] executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelBackend {
+    /// Portable scalar rendering of the pinned reduction order.
+    Scalar,
+    /// AVX2/FMA rendering; requires [`avx2_available`].
+    Avx2,
+}
+
+/// The `DISTCA_KERNEL` selection, including the oracle escape hatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelChoice {
+    Oracle,
+    Scalar,
+    Avx2,
+    /// AVX2 when detected, scalar otherwise (the default).
+    Fast,
+}
+
+/// Parse `DISTCA_KERNEL` (unset = `fast`). Panics on an unknown value —
+/// a silently ignored kernel override would defeat the differential
+/// testing the variable exists for.
+pub fn choice_from_env() -> KernelChoice {
+    match std::env::var("DISTCA_KERNEL") {
+        Err(_) => KernelChoice::Fast,
+        Ok(s) => match s.trim() {
+            "" | "fast" => KernelChoice::Fast,
+            "oracle" => KernelChoice::Oracle,
+            "scalar" => KernelChoice::Scalar,
+            "avx2" => KernelChoice::Avx2,
+            other => panic!("DISTCA_KERNEL must be fast|oracle|scalar|avx2, got `{other}`"),
+        },
+    }
+}
+
+/// Build the compute plug `DISTCA_KERNEL` asks for. This is the single
+/// factory every runtime wire-in point uses (`distca worker`, the
+/// threaded elastic coordinator, the gateway's in-process backend), so
+/// one environment variable switches them all.
+pub fn compute_from_env(n_heads: usize, n_kv_heads: usize, head_dim: usize) -> Box<dyn CaCompute> {
+    match choice_from_env() {
+        KernelChoice::Oracle => Box::new(ReferenceCaCompute::new(n_heads, n_kv_heads, head_dim)),
+        KernelChoice::Scalar => Box::new(
+            FastCaCompute::new(n_heads, n_kv_heads, head_dim).backend(KernelBackend::Scalar),
+        ),
+        KernelChoice::Avx2 => {
+            assert!(avx2_available(), "DISTCA_KERNEL=avx2 but this CPU lacks AVX2/FMA");
+            Box::new(FastCaCompute::new(n_heads, n_kv_heads, head_dim).backend(KernelBackend::Avx2))
+        }
+        KernelChoice::Fast => Box::new(FastCaCompute::new(n_heads, n_kv_heads, head_dim)),
+    }
+}
+
+/// Short label of the backend [`compute_from_env`] would build — for
+/// run banners and bench tables.
+pub fn kernel_label() -> &'static str {
+    match choice_from_env() {
+        KernelChoice::Oracle => "oracle",
+        KernelChoice::Scalar => "scalar",
+        KernelChoice::Avx2 => "avx2",
+        KernelChoice::Fast => {
+            if avx2_available() {
+                "avx2"
+            } else {
+                "scalar"
+            }
+        }
+    }
+}
+
+fn threads_from_env() -> usize {
+    let n = match std::env::var("DISTCA_KERNEL_THREADS") {
+        Err(_) => 0,
+        Ok(s) => s
+            .trim()
+            .parse::<usize>()
+            .unwrap_or_else(|_| panic!("DISTCA_KERNEL_THREADS must be a usize, got `{s}`")),
+    };
+    if n > 0 {
+        n
+    } else {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    }
+}
+
+/// Raw output base pointer smuggled across the scoped-thread boundary.
+/// Safety rests on the work partition: every `(task, head)` item owns a
+/// disjoint set of output rows, so concurrent writers never overlap.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// The fast GQA attention compute plug: pinned-order streaming softmax
+/// ([`flash`]), thread-parallel over the `(task, head)` pairs of a
+/// fused batch, AVX2 when the host has it. Bit-exact vs
+/// [`ReferenceCaCompute`] on every input, including NaN/±inf payloads.
+#[derive(Debug, Clone)]
+pub struct FastCaCompute {
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    backend: KernelBackend,
+    threads: usize,
+}
+
+impl FastCaCompute {
+    /// Auto backend (AVX2 when detected), `DISTCA_KERNEL_THREADS`
+    /// threads (default: all cores).
+    pub fn new(n_heads: usize, n_kv_heads: usize, head_dim: usize) -> FastCaCompute {
+        assert!(n_heads % n_kv_heads == 0, "heads {n_heads} not grouped by {n_kv_heads}");
+        FastCaCompute {
+            n_heads,
+            n_kv_heads,
+            head_dim,
+            backend: if avx2_available() { KernelBackend::Avx2 } else { KernelBackend::Scalar },
+            threads: threads_from_env(),
+        }
+    }
+
+    /// Pin the backend (panics if AVX2 is requested but unavailable).
+    pub fn backend(mut self, b: KernelBackend) -> FastCaCompute {
+        if b == KernelBackend::Avx2 {
+            assert!(avx2_available(), "AVX2 backend requested but this CPU lacks AVX2/FMA");
+        }
+        self.backend = b;
+        self
+    }
+
+    /// Pin the thread count (1 = always inline).
+    pub fn threads(mut self, n: usize) -> FastCaCompute {
+        assert!(n > 0, "thread count must be positive");
+        self.threads = n;
+        self
+    }
+
+    pub fn backend_kind(&self) -> KernelBackend {
+        self.backend
+    }
+
+    fn validate(&self, t: &CaTaskView<'_>) -> Result<()> {
+        let (h, hkv, d) = (self.n_heads, self.n_kv_heads, self.head_dim);
+        anyhow::ensure!(t.q_len > 0 && t.q_len <= t.kv_len, "bad task lengths");
+        anyhow::ensure!(t.q.len() == t.q_len * h * d, "q shape");
+        anyhow::ensure!(t.k.len() == t.kv_len * hkv * d, "k shape");
+        anyhow::ensure!(t.v.len() == t.kv_len * hkv * d, "v shape");
+        Ok(())
+    }
+
+    /// One `(task, head)` item through the selected backend.
+    ///
+    /// # Safety
+    /// `out` must be valid for the task's `q_len * h * d` f32 writes and
+    /// no other thread may write this `(task, head)`'s rows.
+    unsafe fn run_item(&self, t: &CaTaskView<'_>, head: usize, out: *mut f32, acc: &mut [f64]) {
+        let (h, hkv, d) = (self.n_heads, self.n_kv_heads, self.head_dim);
+        match self.backend {
+            #[cfg(target_arch = "x86_64")]
+            KernelBackend::Avx2 => {
+                flash::attn_head_avx2(t.q, t.k, t.v, t.q_len, t.kv_len, h, hkv, d, head, out, acc)
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            KernelBackend::Avx2 => unreachable!("AVX2 backend on non-x86_64"),
+            KernelBackend::Scalar => {
+                flash::attn_head_scalar(t.q, t.k, t.v, t.q_len, t.kv_len, h, hkv, d, head, out, acc)
+            }
+        }
+    }
+
+    /// Execute a fused batch of borrowed task views into preallocated
+    /// outputs (one `[q_len, h, d]` vec per task).
+    fn run_views_into(&self, tasks: &[CaTaskView<'_>], outs: &mut [Vec<f32>]) {
+        debug_assert_eq!(tasks.len(), outs.len());
+        let h = self.n_heads;
+        let d = self.head_dim;
+        let bases: Vec<SendPtr> = outs.iter_mut().map(|o| SendPtr(o.as_mut_ptr())).collect();
+        let n_items = tasks.len() * h;
+        let est_flops: f64 = tasks
+            .iter()
+            .map(|t| 2.0 * (t.q_len * t.kv_len * h * d) as f64)
+            .sum();
+        let n_threads = self.threads.min(n_items);
+        if n_threads <= 1 || est_flops < PAR_MIN_FLOPS {
+            let mut acc = vec![0.0f64; d];
+            for item in 0..n_items {
+                let (ti, head) = (item / h, item % h);
+                // SAFETY: single thread, outs[ti] holds q_len*h*d f32s
+                // (allocated by the callers below, shape-checked).
+                unsafe { self.run_item(&tasks[ti], head, bases[ti].0, &mut acc) };
+            }
+            return;
+        }
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..n_threads {
+                scope.spawn(|| {
+                    let mut acc = vec![0.0f64; d];
+                    loop {
+                        let item = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if item >= n_items {
+                            break;
+                        }
+                        let (ti, head) = (item / h, item % h);
+                        // SAFETY: the counter hands each (task, head) to
+                        // exactly one worker, and distinct items write
+                        // disjoint output rows.
+                        unsafe { self.run_item(&tasks[ti], head, bases[ti].0, &mut acc) };
+                    }
+                });
+            }
+        });
+    }
+
+    /// Monolithic fused-batch entry (bench + conformance convenience):
+    /// the batch-level twin of [`ReferenceCaCompute::run_batch`].
+    pub fn run_batch(&self, tasks: &[CaTaskTensors]) -> Result<Vec<Vec<f32>>> {
+        let views: Vec<CaTaskView<'_>> = tasks.iter().map(CaTaskView::from_tensors).collect();
+        for v in &views {
+            self.validate(v)?;
+        }
+        let mut outs: Vec<Vec<f32>> = tasks
+            .iter()
+            .map(|t| vec![0.0f32; t.q_len * self.n_heads * self.head_dim])
+            .collect();
+        self.run_views_into(&views, &mut outs);
+        Ok(outs)
+    }
+}
+
+impl CaCompute for FastCaCompute {
+    fn run(&mut self, task: &CaTaskTensors) -> Result<Vec<f32>> {
+        CaCompute::run_view(self, &CaTaskView::from_tensors(task))
+    }
+
+    /// Zero-copy entry: computes straight from the borrowed payload
+    /// slices a pooled recv buffer exposes — no Q/K/V copies.
+    fn run_view(&mut self, task: &CaTaskView<'_>) -> Result<Vec<f32>> {
+        self.validate(task)?;
+        let mut outs = vec![vec![0.0f32; task.q_len * self.n_heads * self.head_dim]];
+        self.run_views_into(std::slice::from_ref(task), &mut outs);
+        Ok(outs.pop().expect("one output"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ca_exec::synthetic_task;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fast_scalar_matches_oracle_bitwise() {
+        let (h, hkv, d) = (4usize, 2usize, 16usize);
+        let oracle = ReferenceCaCompute::new(h, hkv, d);
+        let fast = FastCaCompute::new(h, hkv, d).backend(KernelBackend::Scalar).threads(1);
+        let mut rng = Rng::new(21);
+        for (q_len, kv_len) in [(1, 1), (3, 9), (16, 16), (65, 130)] {
+            let t = synthetic_task(&mut rng, q_len, kv_len, h, hkv, d);
+            let want = oracle.run_batch(std::slice::from_ref(&t));
+            let got = fast.run_batch(std::slice::from_ref(&t)).unwrap();
+            assert_eq!(want.len(), got.len());
+            for (a, b) in want[0].iter().zip(&got[0]) {
+                assert_eq!(a.to_bits(), b.to_bits(), "q{q_len}/kv{kv_len}");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_equals_inline_bitwise() {
+        let (h, hkv, d) = (4usize, 2usize, 16usize);
+        let mut rng = Rng::new(22);
+        // Big enough to clear PAR_MIN_FLOPS so threads actually engage.
+        let tasks: Vec<_> =
+            (0..6).map(|_| synthetic_task(&mut rng, 64, 128, h, hkv, d)).collect();
+        let one = FastCaCompute::new(h, hkv, d).threads(1).run_batch(&tasks).unwrap();
+        let four = FastCaCompute::new(h, hkv, d).threads(4).run_batch(&tasks).unwrap();
+        assert_eq!(one, four, "thread count must not change a single byte");
+    }
+
+    #[test]
+    fn rejects_malformed_shapes() {
+        let fast = FastCaCompute::new(2, 1, 8);
+        let mut rng = Rng::new(23);
+        let mut t = synthetic_task(&mut rng, 4, 8, 2, 1, 8);
+        t.q.pop();
+        assert!(fast.run_batch(std::slice::from_ref(&t)).is_err());
+    }
+}

@@ -32,7 +32,11 @@
 //!   ([`obs`]: tick-phase spans with wall and virtual clock sources, a
 //!   Chrome/Perfetto `trace_event` exporter behind `--trace-out`, the
 //!   `distca report` straggler-attribution table, and the `distca
-//!   drift` perf-snapshot checker), and a PJRT runtime ([`runtime`]) that
+//!   drift` perf-snapshot checker), a **fast-path CPU kernel**
+//!   ([`kernel`]: blocked streaming-softmax GQA core attention,
+//!   thread-parallel across (task, head) pairs with an AVX2/FMA inner
+//!   loop, bit-exact against the scalar oracle under a pinned reduction
+//!   order, selected via `DISTCA_KERNEL`), and a PJRT runtime ([`runtime`]) that
 //!   executes the AOT-compiled JAX/Pallas artifacts on the real CPU
 //!   backend.
 //!
@@ -77,6 +81,7 @@ pub mod data;
 pub mod elastic;
 pub mod exchange;
 pub mod gateway;
+pub mod kernel;
 pub mod memplan;
 pub mod metrics;
 pub mod model;

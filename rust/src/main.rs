@@ -942,9 +942,8 @@ fn run_threaded_ticks(
     const D: usize = 16;
     let oracle = ReferenceCaCompute::new(H, HKV, D);
     let cfg = ElasticCfg { autoscale, ..Default::default() };
-    let mut co = ElasticCoordinator::spawn(n, cfg, |_| {
-        Box::new(ReferenceCaCompute::new(H, HKV, D))
-    });
+    let mut co =
+        ElasticCoordinator::spawn(n, cfg, |_| distca::kernel::compute_from_env(H, HKV, D));
     let recorder = trace_out.map(|_| Recorder::new_wall());
     if let Some(r) = &recorder {
         co.set_recorder(r.clone());
@@ -1168,7 +1167,7 @@ fn cmd_net(args: &Args, soak: bool) -> anyhow::Result<()> {
     }
     t.print();
     println!(
-        "re-dispatched {} | send failovers {} | SIGKILLs {} | connection kills {} | rejoins {} | overlap-gathered {} | overlap efficiency {:.0}% | outputs verified against the monolithic oracle",
+        "re-dispatched {} | send failovers {} | SIGKILLs {} | connection kills {} | rejoins {} | overlap-gathered {} | overlap efficiency {:.0}% | {:.0} tokens/s end-to-end ({} kernel) | outputs verified against the monolithic oracle",
         report.total_redispatched,
         report.total_send_failovers,
         report.total_process_kills,
@@ -1176,6 +1175,8 @@ fn cmd_net(args: &Args, soak: bool) -> anyhow::Result<()> {
         report.total_rejoins,
         report.total_overlap_gathered,
         report.overlap_efficiency * 100.0,
+        report.tokens_per_s,
+        distca::kernel::kernel_label(),
     );
     if let Some(p) = &cfg.bench_out {
         println!("wrote {}", p.display());

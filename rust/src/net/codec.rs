@@ -234,6 +234,73 @@ impl Frame {
     }
 }
 
+/// Free-list of recv payload buffers: the zero-copy data plane's
+/// allocator. The reader loop decodes each inbound frame's payload into
+/// a recycled `Vec<f32>` ([`FrameDecoder::next_frame_pooled`]), the
+/// server loop computes straight from a borrowed view of it, and
+/// `Transport::recycle_payload` returns it here — so steady-state
+/// serving allocates no payload buffers at all, and a task's bytes are
+/// touched exactly once between socket and kernel.
+///
+/// A buffer is taken from the pool only once a frame's header has been
+/// validated *and* its payload is fully buffered, so decode errors and
+/// partial reads never strand a buffer ([`PayloadPool::outstanding`] is
+/// the leak-check counter the codec property tests assert on).
+#[derive(Debug)]
+pub struct PayloadPool {
+    free: std::sync::Mutex<Vec<Vec<f32>>>,
+    outstanding: std::sync::atomic::AtomicIsize,
+    max_pooled: usize,
+}
+
+impl PayloadPool {
+    /// A pool that retains at most `max_pooled` free buffers (excess
+    /// returns are simply dropped).
+    pub fn new(max_pooled: usize) -> PayloadPool {
+        PayloadPool {
+            free: std::sync::Mutex::new(Vec::new()),
+            outstanding: std::sync::atomic::AtomicIsize::new(0),
+            max_pooled,
+        }
+    }
+
+    /// Take a cleared buffer with at least `capacity` reserved —
+    /// recycled when possible, freshly allocated when the pool is dry.
+    pub fn get(&self, capacity: usize) -> Vec<f32> {
+        self.outstanding.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let recycled = self.free.lock().unwrap().pop();
+        match recycled {
+            Some(mut b) => {
+                b.clear();
+                b.reserve(capacity);
+                b
+            }
+            None => Vec::with_capacity(capacity),
+        }
+    }
+
+    /// Return a spent buffer. Accepts buffers of any provenance (the
+    /// server loop recycles whatever the fabric delivered).
+    pub fn put(&self, mut buf: Vec<f32>) {
+        self.outstanding.fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
+        buf.clear();
+        let mut free = self.free.lock().unwrap();
+        if free.len() < self.max_pooled {
+            free.push(buf);
+        }
+    }
+
+    /// `get`s minus `put`s: zero when every taken buffer came back.
+    pub fn outstanding(&self) -> isize {
+        self.outstanding.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Free buffers currently parked in the pool.
+    pub fn pooled(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
+
 /// Incremental frame decoder: push bytes in whatever chunks the socket
 /// yields, pop complete frames. Split read boundaries — mid-header,
 /// mid-payload, many frames per chunk — never change the decoded
@@ -277,6 +344,21 @@ impl FrameDecoder {
 
     /// Decode the next complete frame, `None` if more bytes are needed.
     pub fn next_frame(&mut self) -> Result<Option<Frame>, CodecError> {
+        self.next_frame_with(Vec::with_capacity)
+    }
+
+    /// [`FrameDecoder::next_frame`], decoding the payload into a buffer
+    /// recycled from `pool`. The buffer is requested only after the
+    /// header validates and the payload is fully buffered, so no error
+    /// or partial-read path can leak one.
+    pub fn next_frame_pooled(&mut self, pool: &PayloadPool) -> Result<Option<Frame>, CodecError> {
+        self.next_frame_with(|cap| pool.get(cap))
+    }
+
+    fn next_frame_with(
+        &mut self,
+        make_buf: impl FnOnce(usize) -> Vec<f32>,
+    ) -> Result<Option<Frame>, CodecError> {
         let b = &self.buf[self.read..];
         if b.len() < HEADER_BYTES {
             return Ok(None);
@@ -324,14 +406,15 @@ impl FrameDecoder {
         if b.len() < need {
             return Ok(None);
         }
-        let mut payload = Vec::with_capacity(len as usize);
-        let mut off = HEADER_BYTES;
-        for _ in 0..len {
-            payload.push(f32::from_bits(u32::from_le_bytes(
-                b[off..off + 4].try_into().unwrap(),
-            )));
-            off += 4;
-        }
+        // Bulk bit-cast decode in one pass — the only time these bytes
+        // are touched before the kernel reads them.
+        let mut payload = make_buf(len as usize);
+        debug_assert!(payload.is_empty(), "pool must hand out cleared buffers");
+        payload.extend(
+            b[HEADER_BYTES..need]
+                .chunks_exact(4)
+                .map(|w| f32::from_bits(u32::from_le_bytes(w.try_into().unwrap()))),
+        );
         self.read += need;
         Ok(Some(Frame { kind, dst, src, tag, wave, epoch, tenant, payload }))
     }

@@ -148,6 +148,12 @@ pub struct NetTickRecord {
     pub overlap_efficiency: f64,
     /// Wall-clock seconds from dispatch to full gather (makespan).
     pub elapsed: f64,
+    /// Query tokens processed this tick (Σ q_len over dispatched
+    /// tasks). Deliberately *not* serialized per-tick — the seeded
+    /// lengths would make the committed `BENCH_net.json` baseline
+    /// impossible to hand-audit; only the run-wide end-to-end
+    /// `tokens_per_s` rate is emitted (wall-clock-exempt in drift).
+    pub tokens: usize,
 }
 
 impl NetTickRecord {
@@ -201,6 +207,10 @@ pub struct NetRunReport {
     /// Run-wide `Σcompute / Σ(compute + wire_wait)` (1.0 when no
     /// recorder measured the split).
     pub overlap_efficiency: f64,
+    /// End-to-end throughput: Σ query tokens over all ticks divided by
+    /// Σ tick makespans — the soak summary's tokens/sec line. Wall
+    /// clock, so exempt from the drift gate's numeric comparison.
+    pub tokens_per_s: f64,
 }
 
 impl NetRunReport {
@@ -220,6 +230,7 @@ impl NetRunReport {
             ("total_overlap_gathered", Json::Num(self.total_overlap_gathered as f64)),
             ("total_stale_wave_frames", Json::Num(self.total_stale_wave_frames as f64)),
             ("overlap_efficiency", Json::Num(self.overlap_efficiency)),
+            ("tokens_per_s", Json::Num(self.tokens_per_s)),
             ("per_tick", Json::Arr(self.per_tick.iter().map(|r| r.to_json()).collect())),
         ])
     }
@@ -873,6 +884,7 @@ pub fn run_serve(cfg: &ServeCfg) -> Result<NetRunReport> {
             wire_wait_s: 0.0,
             overlap_efficiency: 1.0,
             elapsed: st.elapsed,
+            tokens: tasks.iter().map(|t| t.tensors.q_len).sum(),
         });
 
         // Complete honored drains: the drainee sat the tick out, now it
@@ -957,6 +969,8 @@ pub fn run_serve(cfg: &ServeCfg) -> Result<NetRunReport> {
 
     let compute_total: f64 = records.iter().map(|r| r.compute_s).sum();
     let wire_total: f64 = records.iter().map(|r| r.wire_wait_s).sum();
+    let tokens_total: f64 = records.iter().map(|r| r.tokens as f64).sum();
+    let makespan_total: f64 = records.iter().map(|r| r.elapsed).sum();
     let report = NetRunReport {
         workers: n,
         seed: cfg.seed,
@@ -973,6 +987,7 @@ pub fn run_serve(cfg: &ServeCfg) -> Result<NetRunReport> {
         } else {
             1.0
         },
+        tokens_per_s: if makespan_total > 0.0 { tokens_total / makespan_total } else { 0.0 },
         per_tick: records,
     };
     if let Some(path) = &cfg.bench_out {

@@ -33,7 +33,7 @@ use std::time::{Duration, Instant};
 use crate::elastic::failover::{is_task_tag, COORD_SRC, CTRL_SHUTDOWN};
 use crate::exchange::transport::{shutdown_sentinel, Message, SendError, Transport};
 
-use super::codec::{Frame, FrameDecoder, FrameKind};
+use super::codec::{Frame, FrameDecoder, FrameKind, PayloadPool};
 
 /// Control-plane event observed on a connection. Drained via
 /// [`TcpTransport::poll_events`]; the serve loop maps these onto
@@ -107,6 +107,13 @@ pub struct TcpTransport {
     /// re-dispatched under a fresh epoch (kept only if dedup hasn't
     /// already seen the tag; counted here either way).
     stale_epoch_frames: AtomicU64,
+    /// Recv-payload buffer pool shared by every reader thread: inbound
+    /// frames decode into recycled `Vec<f32>`s (via
+    /// [`FrameDecoder::next_frame_pooled`]) and consumers hand spent
+    /// payloads back through [`Transport::recycle_payload`], so steady
+    /// state task traffic reuses a fixed set of buffers instead of
+    /// allocating per frame.
+    pool: PayloadPool,
 }
 
 impl TcpTransport {
@@ -138,6 +145,7 @@ impl TcpTransport {
             wave_stamp: AtomicU64::new(0),
             echo: Mutex::new(HashMap::new()),
             stale_epoch_frames: AtomicU64::new(0),
+            pool: PayloadPool::new(64),
         }
     }
 
@@ -238,7 +246,7 @@ impl TcpTransport {
         'stream: loop {
             // Drain everything decodable before the next blocking read.
             loop {
-                match dec.next_frame() {
+                match dec.next_frame_pooled(&self.pool) {
                     Ok(Some(f)) => self.dispatch_frame(peer_rank, f),
                     Ok(None) => break,
                     // Corrupt/desynced stream: there is no resync point
@@ -451,6 +459,10 @@ impl Transport for TcpTransport {
 
     fn set_wave_stamp(&self, wave: usize, epoch: u64) {
         self.wave_stamp.store((epoch << 8) | (wave as u64 & 0xFF), Ordering::SeqCst);
+    }
+
+    fn recycle_payload(&self, buf: Vec<f32>) {
+        self.pool.put(buf);
     }
 }
 

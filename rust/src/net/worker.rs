@@ -36,7 +36,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::elastic::failover::run_server_loop_obs;
-use crate::elastic::{CaCompute, ReferenceCaCompute};
+use crate::elastic::CaCompute;
 use crate::exchange::transport::Transport;
 use crate::obs::ComputeSink;
 use crate::server::{header_usize, header_word};
@@ -269,8 +269,11 @@ fn serve_session(stream: TcpStream, daemon: bool) -> Result<()> {
         None
     };
 
+    // Fast-path GQA kernel by default; `DISTCA_KERNEL=oracle` swaps the
+    // reference back in (the coordinator's verify oracle stays the
+    // reference either way, so bit-exactness is checked live).
     let compute: Box<dyn CaCompute> =
-        Box::new(ReferenceCaCompute::new(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim));
+        crate::kernel::compute_from_env(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim);
     let fabric_dyn: Arc<dyn Transport> = Arc::clone(&fabric) as Arc<dyn Transport>;
     let sink: Arc<dyn ComputeSink> = Arc::clone(&spans) as _;
     let result = run_server_loop_obs(fabric_dyn, cfg.rank, cfg.n_servers, compute, Some(sink));

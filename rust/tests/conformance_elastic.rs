@@ -27,6 +27,7 @@ use distca::elastic::{
     run_elastic_exec, run_elastic_exec_pp, ElasticCfg, ElasticCoordinator, ElasticTask,
     FaultPlan, ReferenceCaCompute, ServerPool,
 };
+use distca::kernel::{avx2_available, FastCaCompute};
 use distca::runtime::ca_exec::synthetic_task;
 use distca::server::TaskOutput;
 use distca::sim::strategies::{distca_placement, SimParams};
@@ -610,6 +611,66 @@ fn gateway_multi_tenant_mixes_match_oracle_under_faults() {
                 "gateway seed {seed}: the scripted kill never surfaced"
             );
         }
+    }
+}
+
+/// The `fastkernel` column: the same seeded `(docs, fault-plan)` cases
+/// — kills, drains, OOM evictions — on all four execution paths, with
+/// the fast-path GQA kernel (`kernel::FastCaCompute`, AVX2 when the
+/// host has it, scalar otherwise) as the servers' compute instead of
+/// the reference. `check_tick` compares every output against the
+/// oracle's bytes, so this column *is* the kernel's admission bar under
+/// recovery: re-dispatch, drain hand-off, and eviction replay must all
+/// reproduce `ReferenceCaCompute` bit-for-bit through the fast path.
+#[test]
+fn fastkernel_matches_oracle_on_all_four_paths() {
+    let note = if avx2_available() { "avx2" } else { "scalar" };
+    for seed in 0..24u64 {
+        let case = gen_case(seed);
+
+        // Deterministic exec, flat.
+        let mut pool = ServerPool::new(case.n_servers);
+        let mut compute = FastCaCompute::new(H, HKV, D);
+        for (t, tasks) in case.ticks.iter().enumerate() {
+            let rep = run_elastic_exec(&mut pool, t, tasks, &case.fault, &mut compute)
+                .unwrap_or_else(|e| panic!("fastkernel({note}) exec seed {seed} tick {t}: {e}"));
+            check_tick("fastkernel-exec", seed, tasks, &rep.outputs);
+        }
+
+        // Deterministic exec, PP waves.
+        let mut pool = ServerPool::new(case.n_servers);
+        let mut compute = FastCaCompute::new(H, HKV, D);
+        for (t, tasks) in case.ticks.iter().enumerate() {
+            let rep = run_elastic_exec_pp(&mut pool, t, tasks, &case.fault, &mut compute)
+                .unwrap_or_else(|e| {
+                    panic!("fastkernel({note}) exec-pp seed {seed} tick {t}: {e}")
+                });
+            check_tick("fastkernel-exec-pp", seed, tasks, &rep.outputs);
+        }
+
+        // Threaded coordinator, flat ticks.
+        let mut co = ElasticCoordinator::spawn(case.n_servers, quick_cfg(), |_| {
+            Box::new(FastCaCompute::new(H, HKV, D))
+        });
+        for (t, tasks) in case.ticks.iter().enumerate() {
+            let outputs = co.run_tick(t, tasks, &case.fault).unwrap_or_else(|e| {
+                panic!("fastkernel({note}) threaded seed {seed} tick {t}: {e}")
+            });
+            check_tick("fastkernel-threaded", seed, tasks, &outputs);
+        }
+        co.shutdown().unwrap();
+
+        // Threaded coordinator, PP ping-pong waves.
+        let mut co = ElasticCoordinator::spawn(case.n_servers, quick_cfg(), |_| {
+            Box::new(FastCaCompute::new(H, HKV, D))
+        });
+        for (t, tasks) in case.ticks.iter().enumerate() {
+            let outputs = co.run_pp_tick(t, tasks, &case.fault).unwrap_or_else(|e| {
+                panic!("fastkernel({note}) threaded-pp seed {seed} tick {t}: {e}")
+            });
+            check_tick("fastkernel-threaded-pp", seed, tasks, &outputs);
+        }
+        co.shutdown().unwrap();
     }
 }
 

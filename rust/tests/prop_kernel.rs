@@ -1,0 +1,256 @@
+//! Differential property suite for the fast-path GQA kernel: the
+//! harness that keeps `kernel::FastCaCompute` honest.
+//!
+//! The kernel's admission contract is *bit-exactness* against
+//! [`ReferenceCaCompute`] — not closeness, equality of every output
+//! f32's bit pattern. All backends render one pinned reduction order
+//! (see `kernel::flash`), so any divergence is a bug in a backend, not
+//! an accepted rounding difference. The suite sweeps:
+//!
+//! * **GQA ratios** `h/hkv ∈ {1, 2, 4, 8}` — the K/V-head sharing the
+//!   `(task, head)` work partition must index correctly;
+//! * **ragged lengths** — `q_len`/`kv_len` from 1 through multiples of
+//!   the KV chunk, sitting exactly on, one short of, and one past every
+//!   block boundary (the streaming-softmax chunk loop's edge cases);
+//! * **head dims** with and without a `% 4` SIMD tail;
+//! * **adversarial floats** — NaNs (payloads included), ±inf,
+//!   subnormals, −0.0 injected into Q/K/V: specials must *propagate*
+//!   identically, because the elastic wire ships bit-cast header words
+//!   that are NaNs, and a backend that canonicalizes would pass value
+//!   comparisons while corrupting bytes;
+//! * **thread counts** — the dynamic `(task, head)` partition must be
+//!   invisible in the bytes;
+//! * **`DISTCA_KERNEL` selection** — every env value must build the
+//!   backend it names, and all of them must agree bitwise.
+
+use distca::elastic::{CaCompute, ReferenceCaCompute};
+use distca::kernel::{
+    avx2_available, choice_from_env, FastCaCompute, KernelBackend, KernelChoice, KV_CHUNK,
+};
+use distca::runtime::ca_exec::{synthetic_task, CaTaskTensors};
+use distca::util::rng::Rng;
+
+/// Length pairs covering the chunk-boundary lattice: singletons, exact
+/// chunk multiples, one-off-each-side, and ragged interiors.
+fn length_grid() -> Vec<(usize, usize)> {
+    vec![
+        (1, 1),
+        (1, 2),
+        (2, 2),
+        (1, KV_CHUNK),
+        (3, 7),
+        (5, KV_CHUNK - 1),
+        (KV_CHUNK - 1, KV_CHUNK - 1),
+        (KV_CHUNK, KV_CHUNK),
+        (KV_CHUNK + 1, KV_CHUNK + 1),
+        (7, KV_CHUNK + 1),
+        (KV_CHUNK, 2 * KV_CHUNK),
+        (33, 2 * KV_CHUNK + 5),
+    ]
+}
+
+/// The GQA sweep: `(h, hkv)` pairs at ratios 1, 2, 4, 8.
+fn gqa_grid() -> Vec<(usize, usize)> {
+    vec![(2, 2), (2, 1), (4, 2), (8, 2), (8, 1), (4, 1)]
+}
+
+fn assert_outputs_bit_eq(want: &[Vec<f32>], got: &[Vec<f32>], ctx: &str) {
+    assert_eq!(want.len(), got.len(), "{ctx}: batch size diverged");
+    for (ti, (w, g)) in want.iter().zip(got).enumerate() {
+        assert_eq!(w.len(), g.len(), "{ctx}: task {ti} output length");
+        for (i, (a, b)) in w.iter().zip(g).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{ctx}: task {ti} elem {i}: {a:?} ({:#010x}) vs {b:?} ({:#010x})",
+                a.to_bits(),
+                b.to_bits(),
+            );
+        }
+    }
+}
+
+#[test]
+fn scalar_fast_path_is_bit_exact_over_gqa_ratios_and_ragged_lengths() {
+    let mut rng = Rng::new(0xFA57);
+    for (h, hkv) in gqa_grid() {
+        // d = 10 exercises the 4-lane dot's scalar tail; d = 16 is the
+        // tail-free path.
+        for d in [10usize, 16] {
+            let oracle = ReferenceCaCompute::new(h, hkv, d);
+            let fast = FastCaCompute::new(h, hkv, d).backend(KernelBackend::Scalar).threads(1);
+            for (q_len, kv_len) in length_grid() {
+                let t = synthetic_task(&mut rng, q_len, kv_len, h, hkv, d);
+                let want = oracle.run_batch(std::slice::from_ref(&t));
+                let got = fast.run_batch(std::slice::from_ref(&t)).unwrap();
+                let ctx = format!("h{h}/hkv{hkv}/d{d} q{q_len}/kv{kv_len}");
+                assert_outputs_bit_eq(&want, &got, &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn avx2_equals_scalar_and_oracle_bitwise() {
+    if !avx2_available() {
+        eprintln!("skipping: no AVX2/FMA on this host");
+        return;
+    }
+    let mut rng = Rng::new(0xA5A5);
+    for (h, hkv) in gqa_grid() {
+        for d in [10usize, 16] {
+            let oracle = ReferenceCaCompute::new(h, hkv, d);
+            let scalar = FastCaCompute::new(h, hkv, d).backend(KernelBackend::Scalar).threads(1);
+            let avx2 = FastCaCompute::new(h, hkv, d).backend(KernelBackend::Avx2).threads(1);
+            for (q_len, kv_len) in length_grid() {
+                let t = synthetic_task(&mut rng, q_len, kv_len, h, hkv, d);
+                let want = oracle.run_batch(std::slice::from_ref(&t));
+                let s = scalar.run_batch(std::slice::from_ref(&t)).unwrap();
+                let a = avx2.run_batch(std::slice::from_ref(&t)).unwrap();
+                let ctx = format!("h{h}/hkv{hkv}/d{d} q{q_len}/kv{kv_len}");
+                assert_outputs_bit_eq(&s, &a, &format!("{ctx} [avx2 vs scalar]"));
+                assert_outputs_bit_eq(&want, &a, &format!("{ctx} [avx2 vs oracle]"));
+            }
+        }
+    }
+}
+
+/// Special-value f32 bit patterns, payloaded NaNs included.
+const SPECIALS: [u32; 9] = [
+    0x7FC0_0000, // canonical quiet NaN
+    0xFFC0_1234, // negative NaN with payload bits
+    0x7F80_0000, // +inf
+    0xFF80_0000, // -inf
+    0x0000_0001, // smallest positive subnormal
+    0x8000_0001, // smallest negative subnormal
+    0x8000_0000, // -0.0
+    0x7F7F_FFFF, // f32::MAX
+    0x0080_0000, // smallest positive normal
+];
+
+fn inject_specials(t: &mut CaTaskTensors, rng: &mut Rng) {
+    for buf in [&mut t.q, &mut t.k, &mut t.v] {
+        let n = 1 + rng.gen_index(0, 4);
+        for _ in 0..n {
+            let i = rng.gen_index(0, buf.len());
+            buf[i] = f32::from_bits(SPECIALS[rng.gen_index(0, SPECIALS.len())]);
+        }
+    }
+}
+
+#[test]
+fn adversarial_float_payloads_propagate_identically() {
+    let (h, hkv, d) = (4usize, 2usize, 16usize);
+    let oracle = ReferenceCaCompute::new(h, hkv, d);
+    let scalar = FastCaCompute::new(h, hkv, d).backend(KernelBackend::Scalar).threads(1);
+    let avx2 = avx2_available()
+        .then(|| FastCaCompute::new(h, hkv, d).backend(KernelBackend::Avx2).threads(1));
+    let mut rng = Rng::new(0xBAD_F00D);
+    for round in 0..40 {
+        let (q_len, kv_len) = length_grid()[round % length_grid().len()];
+        let mut t = synthetic_task(&mut rng, q_len, kv_len, h, hkv, d);
+        inject_specials(&mut t, &mut rng);
+        let want = oracle.run_batch(std::slice::from_ref(&t));
+        let got = scalar.run_batch(std::slice::from_ref(&t)).unwrap();
+        let ctx = format!("round {round} q{q_len}/kv{kv_len}");
+        assert_outputs_bit_eq(&want, &got, &format!("{ctx} [scalar]"));
+        if let Some(avx2) = &avx2 {
+            let a = avx2.run_batch(std::slice::from_ref(&t)).unwrap();
+            assert_outputs_bit_eq(&want, &a, &format!("{ctx} [avx2]"));
+        }
+    }
+}
+
+#[test]
+fn fully_poisoned_tensors_agree_with_the_oracle() {
+    // Whole-tensor pathologies: every score -inf (softmax over an empty
+    // effective support), every Q NaN (total poisoning). The *value* is
+    // garbage by construction; what matters is that every backend emits
+    // the same garbage bits.
+    let (h, hkv, d) = (2usize, 1usize, 8usize);
+    let oracle = ReferenceCaCompute::new(h, hkv, d);
+    let scalar = FastCaCompute::new(h, hkv, d).backend(KernelBackend::Scalar).threads(1);
+    let avx2 = avx2_available()
+        .then(|| FastCaCompute::new(h, hkv, d).backend(KernelBackend::Avx2).threads(1));
+    let mut rng = Rng::new(5);
+    for pattern in [0xFF80_0000u32, 0x7FC0_0000, 0x7F80_0000] {
+        for target in 0..3usize {
+            let mut t = synthetic_task(&mut rng, 5, 9, h, hkv, d);
+            let buf = match target {
+                0 => &mut t.q,
+                1 => &mut t.k,
+                _ => &mut t.v,
+            };
+            for w in buf.iter_mut() {
+                *w = f32::from_bits(pattern);
+            }
+            let want = oracle.run_batch(std::slice::from_ref(&t));
+            let got = scalar.run_batch(std::slice::from_ref(&t)).unwrap();
+            let ctx = format!("pattern {pattern:#010x} target {target}");
+            assert_outputs_bit_eq(&want, &got, &format!("{ctx} [scalar]"));
+            if let Some(avx2) = &avx2 {
+                let a = avx2.run_batch(std::slice::from_ref(&t)).unwrap();
+                assert_outputs_bit_eq(&want, &a, &format!("{ctx} [avx2]"));
+            }
+        }
+    }
+}
+
+#[test]
+fn thread_partition_never_changes_bytes() {
+    let (h, hkv, d) = (8usize, 2usize, 16usize);
+    let oracle = ReferenceCaCompute::new(h, hkv, d);
+    let mut rng = Rng::new(0x7EAD);
+    // Mixed-size batch large enough to clear the inline threshold, so
+    // the scoped pool genuinely engages.
+    let tasks: Vec<CaTaskTensors> = (0..8)
+        .map(|i| {
+            let kv = 64 + 32 * i;
+            synthetic_task(&mut rng, 48 + i, kv, h, hkv, d)
+        })
+        .collect();
+    let want = oracle.run_batch(&tasks);
+    for backend in [Some(KernelBackend::Scalar), avx2_available().then_some(KernelBackend::Avx2)]
+        .into_iter()
+        .flatten()
+    {
+        let one = FastCaCompute::new(h, hkv, d).backend(backend).threads(1);
+        let many = FastCaCompute::new(h, hkv, d).backend(backend).threads(8);
+        let a = one.run_batch(&tasks).unwrap();
+        let b = many.run_batch(&tasks).unwrap();
+        assert_outputs_bit_eq(&a, &b, &format!("{backend:?} 1 vs 8 threads"));
+        assert_outputs_bit_eq(&want, &b, &format!("{backend:?} threaded vs oracle"));
+    }
+}
+
+/// The env selector drives everything (`distca worker`, the threaded
+/// coordinator, the gateway): each value must map to the backend it
+/// names and produce oracle bytes. One test fn mutates the env var so
+/// the cases can't race each other under the parallel test runner; no
+/// other test in this binary reads `DISTCA_KERNEL`.
+#[test]
+fn distca_kernel_env_selects_and_all_choices_agree() {
+    let (h, hkv, d) = (4usize, 2usize, 16usize);
+    let mut rng = Rng::new(0xE47);
+    let t = synthetic_task(&mut rng, 37, 90, h, hkv, d);
+    let oracle = ReferenceCaCompute::new(h, hkv, d);
+    let want = oracle.run_batch(std::slice::from_ref(&t));
+
+    let mut cases = vec![
+        ("oracle", KernelChoice::Oracle),
+        ("scalar", KernelChoice::Scalar),
+        ("fast", KernelChoice::Fast),
+    ];
+    if avx2_available() {
+        cases.push(("avx2", KernelChoice::Avx2));
+    }
+    for (val, expect) in cases {
+        std::env::set_var("DISTCA_KERNEL", val);
+        assert_eq!(choice_from_env(), expect, "DISTCA_KERNEL={val}");
+        let mut compute = distca::kernel::compute_from_env(h, hkv, d);
+        let got = vec![compute.run(&t).unwrap()];
+        assert_outputs_bit_eq(&want, &got, &format!("DISTCA_KERNEL={val}"));
+    }
+    std::env::remove_var("DISTCA_KERNEL");
+    assert_eq!(choice_from_env(), KernelChoice::Fast, "unset defaults to fast");
+}

@@ -17,10 +17,17 @@
 //!    from the tag on encode, validated against the tag on decode, and
 //!    survives any split boundary — including one inside the tenant
 //!    field itself.
+//! 5. **Zero-copy discipline**: decoding into pooled recv buffers
+//!    changes no bits, strands no buffers on error paths, and the
+//!    borrowed task views it feeds keep the worker's in-place arena
+//!    writes alias-free.
 
+use distca::elastic::decode_elastic_view;
 use distca::exchange::transport::Message;
+use distca::memplan::Arena;
 use distca::net::codec::{
-    Frame, FrameDecoder, FrameKind, HEADER_BYTES, MAGIC, MAX_PAYLOAD_ELEMS, MAX_WIRE_TENANT,
+    Frame, FrameDecoder, FrameKind, PayloadPool, HEADER_BYTES, MAGIC, MAX_PAYLOAD_ELEMS,
+    MAX_WIRE_TENANT,
 };
 use distca::server::{tag_wire_tenant, tenant_doc, MAX_TENANTS, MAX_TENANT_SEQ};
 use distca::util::rng::Rng;
@@ -123,6 +130,7 @@ fn nan_and_bitcast_header_words_survive_bit_for_bit() {
         kind: FrameKind::Msg,
         dst: 0,
         src: 0,
+        tenant: 0,
         tag: 1,
         wave: 0,
         epoch: 0,
@@ -142,7 +150,16 @@ fn payload_count_beyond_f32_mantissa_is_exact() {
     let n = (1usize << 24) + 1;
     let mut payload = vec![0.0f32; n];
     payload[n - 1] = 42.5;
-    let f = Frame { kind: FrameKind::Msg, dst: 3, src: 7, tag: 9, wave: 0, epoch: 0, payload };
+    let f = Frame {
+        kind: FrameKind::Msg,
+        dst: 3,
+        src: 7,
+        tenant: 0,
+        tag: 9,
+        wave: 0,
+        epoch: 0,
+        payload,
+    };
     let bytes = f.encode().unwrap();
     assert_eq!(bytes.len(), HEADER_BYTES + 4 * n);
     let mut dec = FrameDecoder::new();
@@ -279,4 +296,183 @@ fn coordinator_src_sentinel_roundtrips_through_message() {
     let g = dec.next_frame().unwrap().unwrap();
     assert_eq!(g.dst, 9);
     assert_eq!(g.into_message(), m);
+}
+
+// ---------------------------------------------------------------------
+// Zero-copy data plane: pooled recv buffers and in-place arena writes.
+// ---------------------------------------------------------------------
+
+/// Pooled decode is byte-for-byte the same decode: frames read into
+/// recycled buffers across arbitrary split boundaries carry identical
+/// f32 bit patterns (NaN payloads included), and every handed-out
+/// buffer is accounted for — recycling them all brings `outstanding`
+/// back to zero and parks them on the free list for the next pass.
+#[test]
+fn pooled_decode_preserves_bits_across_splits_and_recycles_buffers() {
+    let pool = PayloadPool::new(64);
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(0xB00F ^ seed);
+        let mut frames: Vec<Frame> =
+            (0..2 + rng.gen_index(0, 5)).map(|_| random_frame(&mut rng)).collect();
+        // One frame of adversarial bit patterns per round: value-level
+        // equality would pass a decoder that canonicalizes NaNs; the
+        // to_bits comparison below must not.
+        frames.push(Frame {
+            kind: FrameKind::Msg,
+            dst: 1,
+            src: 2,
+            tenant: 0,
+            tag: 11,
+            wave: 0,
+            epoch: 0,
+            payload: [0x7FC0_1234u32, 0xFFC0_0000, 0x0000_0001, 0x8000_0000, u32::MAX]
+                .iter()
+                .map(|&b| f32::from_bits(b))
+                .collect(),
+        });
+        let mut bytes = Vec::new();
+        for f in &frames {
+            bytes.extend_from_slice(&f.encode().unwrap());
+        }
+
+        let mut dec = FrameDecoder::new();
+        let mut got = Vec::new();
+        let mut off = 0usize;
+        while off < bytes.len() {
+            let step = 1 + rng.gen_index(0, 97);
+            let end = (off + step).min(bytes.len());
+            dec.push(&bytes[off..end]);
+            off = end;
+            while let Some(f) = dec.next_frame_pooled(&pool).unwrap() {
+                got.push(f);
+            }
+        }
+        dec.finish().unwrap();
+
+        assert_eq!(got.len(), frames.len(), "seed {seed}: frame count diverged");
+        assert_eq!(pool.outstanding(), got.len() as isize, "seed {seed}: pool accounting");
+        for (g, f) in got.iter().zip(&frames) {
+            let gb: Vec<u32> = g.payload.iter().map(|w| w.to_bits()).collect();
+            let fb: Vec<u32> = f.payload.iter().map(|w| w.to_bits()).collect();
+            assert_eq!(gb, fb, "seed {seed}: pooled decode changed payload bits");
+        }
+        // Consumer done: recycle every payload. The pool must balance
+        // exactly — a leak here is a buffer allocated per frame forever.
+        for g in got {
+            pool.put(g.payload);
+        }
+        assert_eq!(pool.outstanding(), 0, "seed {seed}: leaked pooled buffers");
+        assert!(pool.pooled() > 0, "seed {seed}: nothing parked for reuse");
+    }
+}
+
+/// Decode-error and partial-frame paths must never strand a pool
+/// buffer: the decoder only takes one once the header has validated
+/// AND the payload bytes are fully buffered, so truncation, oversized
+/// claims, corrupt magic, and malformed tenants all leave the pool
+/// untouched.
+#[test]
+fn pool_buffers_are_not_stranded_on_decode_error_paths() {
+    let pool = PayloadPool::new(8);
+
+    // Partial frame: header present, payload incomplete.
+    let f = Frame::msg(0, Message { src: 1, tag: 3, payload: vec![1.0, 2.0, 3.0] });
+    let bytes = f.encode().unwrap();
+    let mut dec = FrameDecoder::new();
+    dec.push(&bytes[..bytes.len() - 1]);
+    assert!(dec.next_frame_pooled(&pool).unwrap().is_none());
+    assert_eq!(pool.outstanding(), 0, "partial frame took a buffer early");
+
+    // Oversized claim: rejected from the header, before any get().
+    let mut hdr = Vec::new();
+    hdr.extend_from_slice(&MAGIC.to_le_bytes());
+    hdr.push(1); // Msg
+    hdr.extend_from_slice(&0u32.to_le_bytes());
+    hdr.extend_from_slice(&0u64.to_le_bytes());
+    hdr.extend_from_slice(&0u64.to_le_bytes());
+    hdr.push(0); // wave
+    hdr.extend_from_slice(&0u64.to_le_bytes()); // epoch
+    hdr.extend_from_slice(&0u32.to_le_bytes()); // tenant
+    hdr.extend_from_slice(&(MAX_PAYLOAD_ELEMS + 1).to_le_bytes());
+    let mut dec = FrameDecoder::new();
+    dec.push(&hdr);
+    assert!(dec.next_frame_pooled(&pool).is_err());
+    assert_eq!(pool.outstanding(), 0, "oversized reject stranded a buffer");
+
+    // Corrupt magic: hard error, no resync, no buffer.
+    let mut dec = FrameDecoder::new();
+    dec.push(&[0xDE, 0xAD, 0xBE, 0xEF, 0, 0, 0, 0]);
+    assert!(dec.next_frame_pooled(&pool).is_err());
+    assert_eq!(pool.outstanding(), 0, "corrupt magic stranded a buffer");
+
+    // Malformed tenant: full frame buffered, rejected at validation —
+    // still before the buffer is taken.
+    let f = Frame::msg(0, Message { src: 2, tag: 5, payload: vec![1.0] });
+    let mut bytes = f.encode().unwrap();
+    bytes[34] = 9;
+    let mut dec = FrameDecoder::new();
+    dec.push(&bytes);
+    assert!(dec.next_frame_pooled(&pool).is_err());
+    assert_eq!(pool.outstanding(), 0, "tenant reject stranded a buffer");
+
+    // And a clean decode through the same pool still balances.
+    let f = Frame::msg(0, Message { src: 1, tag: 3, payload: vec![4.0, 5.0] });
+    let mut dec = FrameDecoder::new();
+    dec.push(&f.encode().unwrap());
+    let g = dec.next_frame_pooled(&pool).unwrap().unwrap();
+    assert_eq!(pool.outstanding(), 1);
+    pool.put(g.payload);
+    assert_eq!(pool.outstanding(), 0);
+    assert_eq!(pool.pooled(), 1);
+}
+
+/// The borrowed-view decode plus the worker's in-place arena sequence:
+/// `decode_elastic_view` yields slices into the recv buffer (no copy —
+/// checked by pointer identity), and the §5 buffer lifecycle the
+/// worker mirrors (alloc Q, alloc KV, O overwrites Q in place, KV
+/// freed) never aliases live Q bytes.
+#[test]
+fn elastic_view_is_zero_copy_and_in_place_o_never_aliases_live_q() {
+    let (q_len, kv_len, h, hkv, d) = (4usize, 8usize, 2usize, 1usize, 8usize);
+    let q_sz = q_len * h * d;
+    let kv_sz = kv_len * hkv * d;
+    let mut rng = Rng::new(99);
+    // Wire layout: [q_len, kv_len, tick, q_sz] bit-cast header words,
+    // then Q, K, V flattened.
+    let mut payload = vec![
+        f32::from_bits(q_len as u32),
+        f32::from_bits(kv_len as u32),
+        f32::from_bits(0),
+        f32::from_bits(q_sz as u32),
+    ];
+    for _ in 0..q_sz + 2 * kv_sz {
+        payload.push(rng.gen_f64(-1.0, 1.0) as f32);
+    }
+
+    let view = decode_elastic_view(&payload, q_len, kv_len).unwrap();
+    assert_eq!(view.q.len(), q_sz);
+    assert_eq!(view.k.len(), kv_sz);
+    assert_eq!(view.v.len(), kv_sz);
+    // Zero-copy: the view's slices are the payload's own bytes.
+    assert!(std::ptr::eq(view.q.as_ptr(), payload[4..].as_ptr()));
+    assert!(std::ptr::eq(view.k.as_ptr(), payload[4 + q_sz..].as_ptr()));
+    assert!(std::ptr::eq(view.v.as_ptr(), payload[4 + q_sz + kv_sz..].as_ptr()));
+
+    // The worker's byte lifecycle against a real arena: O lands in the
+    // Q slot (in place), never overlapping anything still live.
+    let mut arena = Arena::unbounded();
+    let q_slot = arena.alloc((q_sz * 4) as u64).unwrap();
+    let kv_slot = arena.alloc((2 * kv_sz * 4) as u64).unwrap();
+    let o_slot = arena.write_in_place(q_slot, (q_sz * 4) as u64);
+    arena.free(kv_slot);
+    arena.check_no_alias().expect("in-place O aliased a live slot");
+    arena.free(o_slot);
+    arena.check_drained().expect("task left bytes live");
+
+    // Malformed payloads still reject cleanly through the view path.
+    assert!(decode_elastic_view(&payload[..3], q_len, kv_len).is_err());
+    assert!(decode_elastic_view(&payload, 0, kv_len).is_err());
+    let mut bad = payload.clone();
+    bad[3] = f32::from_bits((q_sz + 1) as u32); // odd k/v remainder
+    assert!(decode_elastic_view(&bad, q_len, kv_len).is_err());
 }
