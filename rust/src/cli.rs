@@ -18,7 +18,9 @@
 //! | `soak`     | networked soak/load harness: replay a seeded document-length mix, emit `BENCH_net.json` |
 //! | `gateway`  | multi-tenant serving gateway: seeded tenant streams → WFQ + believed-capacity admission → fused cross-tenant waves over the shared pool (`--soak`: 10k tenants, emits `BENCH_gateway.json`) |
 //! | `train`    | end-to-end tiny-LM training through the AOT artifacts |
-//! | `report`   | straggler attribution from a `--trace-out` trace file (Fig. 11-style overlap table), or `--gateway` for per-tenant accounting from a gateway JSONL stream |
+//! | `report`   | straggler attribution from a `--trace-out` trace file (Fig. 11-style overlap table), `--lineage` for the per-task re-dispatch chain table, or `--gateway` for per-tenant accounting from a gateway JSONL stream |
+//! | `top`      | live dashboard: poll a `--metrics-listen` endpoint and render quantile/gauge tables in place |
+//! | `obsbench` | recorder/lineage/live-hub overhead microbench; emits `BENCH_obs.json` |
 //! | `drift`    | compare a regenerated `BENCH_*.json` snapshot against its committed baseline |
 //! | `bound`    | Appendix A max-partition bound for a model/bandwidth |
 //! | `info`     | model & cluster configuration tables |
@@ -69,6 +71,11 @@
 //! | `--candidate <path>` | drift | freshly regenerated `BENCH_*.json` |
 //! | `--drift-tolerance <ε>` | drift | max relative deviation for numeric leaves (default 0.2; schema-only when the baseline is `"provisional"`) |
 //! | `--hb-ms <n>` | serve/soak | worker heartbeat interval in ms (0 disables; staleness ≈ 10× feeds kill verdicts) |
+//! | `--metrics-listen <addr>` | serve/soak, gateway | serve live Prometheus text metrics at `http://addr/metrics` while the run is hot (`:0` = kernel-assigned port) |
+//! | `--metrics-addr <host:port>` | top | the `--metrics-listen` endpoint to poll |
+//! | `--interval-ms <n>` | top | dashboard refresh interval (default 1000) |
+//! | `--iterations <n>` | top | frames to render before exiting (0 = run until interrupted; `1` = one pipeable snapshot) |
+//! | `--lineage` | report | render the per-task lineage table (re-dispatch chains, reasons, winning hop) from the trace's lineage log |
 //! | `--json` | most | machine-readable output |
 //! | `--verbose` | all | debug logging |
 //!

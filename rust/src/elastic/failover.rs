@@ -28,6 +28,7 @@
 //!   partial drain to model the same fault plans at cluster scale.
 
 use std::collections::{BTreeMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -38,6 +39,7 @@ use crate::coordinator::{schedule, schedule_with_beliefs, SchedulerCfg, ServerBe
 use crate::data::Document;
 use crate::memplan::max_headroom_target;
 use crate::exchange::transport::{ChannelTransport, Message, Transport};
+use crate::obs::lineage::{LineageEvent, LineageStage, RedispatchReason};
 use crate::obs::{ComputeSink, Phase, Recorder, RecorderCell, Span};
 use crate::runtime::ca_exec::CaTaskTensors;
 use crate::server::{doc_tenant, header_usize, header_word, pack_tag, unpack_tag, TaskOutput};
@@ -555,6 +557,12 @@ pub struct TickStats {
     /// eviction, drain tail, send failover) — which tenants paid for
     /// this tick's faults.
     pub tenant_redispatched: BTreeMap<u32, usize>,
+    /// Worker STATS span frames reported dropped on disconnect
+    /// (networked runtime only: a worker that lost its connection
+    /// before its buffered spans flushed reports the loss on
+    /// reconnect, so the observability plane's own gaps are counted
+    /// rather than silent).
+    pub stats_dropped: u64,
 }
 
 impl TickStats {
@@ -644,6 +652,12 @@ pub struct ElasticCoordinator {
     /// armed by [`ElasticCoordinator::set_recorder`], possibly after
     /// the threads already exist.
     obs_cell: Arc<RecorderCell>,
+    /// Monotonic dispatch sequence: every physical [`send_data`] under
+    /// an armed recorder gets a unique trace id, stamped into the DCA3
+    /// frame header on the networked fabric and recorded as the
+    /// lineage `dispatched` event — so a task's winning response can
+    /// be attributed to the exact dispatch hop that produced it.
+    trace_seq: AtomicU64,
 }
 
 impl ElasticCoordinator {
@@ -680,6 +694,7 @@ impl ElasticCoordinator {
             stats: Vec::new(),
             obs: None,
             obs_cell,
+            trace_seq: AtomicU64::new(0),
         }
     }
 
@@ -717,6 +732,7 @@ impl ElasticCoordinator {
             stats: Vec::new(),
             obs: None,
             obs_cell: RecorderCell::new(),
+            trace_seq: AtomicU64::new(0),
         }
     }
 
@@ -753,6 +769,15 @@ impl ElasticCoordinator {
             tag & (CTRL_BASE | CANCEL_FLAG) == 0,
             "doc id too large for the tag scheme (doc < 2^30 required)"
         );
+        // Every *physical* send — first dispatch, failover re-send,
+        // speculative re-dispatch — is one lineage `dispatched` event
+        // under a fresh trace id, stamped into the DCA3 frame header so
+        // the worker's echoed response names the hop that won.
+        if let Some(obs) = &self.obs {
+            let trace = self.trace_seq.fetch_add(1, Ordering::Relaxed) + 1;
+            self.fabric.set_trace_stamp(tag, trace);
+            obs.lineage_dispatched(tick, 0, tag, server, trace);
+        }
         let mut payload =
             Vec::with_capacity(4 + t.tensors.q.len() + 2 * t.tensors.k.len());
         payload.push(header_word(t.tensors.q_len));
@@ -834,7 +859,20 @@ impl ElasticCoordinator {
                         !targets.is_empty(),
                         "no live servers left to fail over to ({e})"
                     );
+                    let from = dest;
                     dest = max_headroom_target(&targets, live_bytes, 0.0, task_wire_bytes(t));
+                    // Adjacent to the send_failovers bump above: one
+                    // Kill-reason lineage hop per counted failover.
+                    if let Some(obs) = &self.obs {
+                        obs.lineage_redispatched(
+                            tick,
+                            0,
+                            t.tag(),
+                            from,
+                            dest,
+                            RedispatchReason::Kill,
+                        );
+                    }
                 }
             }
         }
@@ -1112,6 +1150,18 @@ impl ElasticCoordinator {
                             *c += 1;
                         }
                     }
+                    // Adjacent to the oom_evicted bump above: one
+                    // Oom-reason lineage hop per counted eviction.
+                    if let Some(obs) = &self.obs {
+                        obs.lineage_redispatched(
+                            tick,
+                            0,
+                            tasks[i].tag(),
+                            srv,
+                            d,
+                            RedispatchReason::Oom,
+                        );
+                    }
                     gs.assigned.insert(tasks[i].tag(), d);
                     gs.dispatch_at.insert(tasks[i].tag(), Instant::now());
                     if let Some(buf) = overlap.as_deref_mut() {
@@ -1133,9 +1183,23 @@ impl ElasticCoordinator {
                 };
                 let dest =
                     self.send_task_failover(tick, &tasks[i], want, &targets, live_bytes, stats)?;
-                if drained_here && k >= cut && dest == want {
-                    if let Some(c) = stats.server_redispatched.get_mut(dest) {
-                        *c += 1;
+                if drained_here && k >= cut {
+                    if dest == want {
+                        if let Some(c) = stats.server_redispatched.get_mut(dest) {
+                            *c += 1;
+                        }
+                    }
+                    // Adjacent to the drain_redirected bump above: one
+                    // Drain-reason lineage hop per redirected tail task.
+                    if let Some(obs) = &self.obs {
+                        obs.lineage_redispatched(
+                            tick,
+                            0,
+                            tasks[i].tag(),
+                            srv,
+                            dest,
+                            RedispatchReason::Drain,
+                        );
                     }
                 }
                 gs.assigned.insert(tasks[i].tag(), dest);
@@ -1182,6 +1246,10 @@ impl ElasticCoordinator {
         self.gray_demote(&mut stats);
         let (planned, mut live_bytes) = self.belief_plan(tasks, &mut stats);
         if let Some(obs) = &self.obs {
+            for (i, t) in tasks.iter().enumerate() {
+                let pairs = (t.tensors.q_len * t.tensors.kv_len) as f64;
+                obs.lineage_planned(tick, t.tag(), planned[i], pairs);
+            }
             obs.phase_seconds(tick, Phase::Plan, t_start.elapsed().as_secs_f64());
         }
         stats.server_redispatched = vec![0; self.n_servers];
@@ -1306,6 +1374,10 @@ impl ElasticCoordinator {
         let scale_drained = self.autoscale_boundary(tick, &mut stats);
         let (planned, mut live_bytes) = self.belief_plan(tasks, &mut stats);
         if let Some(obs) = &self.obs {
+            for (i, t) in tasks.iter().enumerate() {
+                let pairs = (t.tensors.q_len * t.tensors.kv_len) as f64;
+                obs.lineage_planned(tick, t.tag(), planned[i], pairs);
+            }
             obs.phase_seconds(tick, Phase::Plan, t_start.elapsed().as_secs_f64());
         }
         stats.server_redispatched = vec![0; self.n_servers];
@@ -1458,6 +1530,10 @@ impl ElasticCoordinator {
                 }
                 if gs.outputs.contains_key(&msg.tag) {
                     stats.duplicates_suppressed += 1;
+                    if let Some(obs) = &self.obs {
+                        let wave = buf.wave_of(msg.tag).map(|w| w.index()).unwrap_or(0);
+                        obs.lineage_stale(tick, wave, msg.tag, msg.src);
+                    }
                     continue;
                 }
                 let (doc, q_start) = unpack_tag(msg.tag);
@@ -1644,6 +1720,17 @@ impl ElasticCoordinator {
                     if let Some(obs) = &self.obs {
                         let wave = buf.wave_of(tag).map(|w| w.index()).unwrap_or(0);
                         obs.redispatch(tick, wave, srv, target, tag);
+                        // Adjacent to the redispatched bump above: one
+                        // Speculative-reason lineage hop per counted
+                        // deadline re-dispatch.
+                        obs.lineage_redispatched(
+                            tick,
+                            wave,
+                            tag,
+                            srv,
+                            target,
+                            RedispatchReason::Speculative,
+                        );
                     }
                     if let Some(w) = buf.wave_of(tag) {
                         stats.wave_redispatched[w.index()] += 1;
@@ -1889,15 +1976,32 @@ fn exec_complete(
     compute: &mut dyn CaCompute,
     outputs: &mut BTreeMap<u64, TaskOutput>,
     report: &mut ExecReport,
+    tick: usize,
+    obs: Option<&Recorder>,
 ) -> Result<()> {
     let t = &tasks[i];
     let o = compute.run(&t.tensors)?;
     if outputs.contains_key(&t.tag()) {
         report.duplicates += 1;
+        if let Some(obs) = obs {
+            obs.lineage_stale(tick, 0, t.tag(), server);
+        }
         return Ok(());
     }
     outputs.insert(t.tag(), TaskOutput { doc: t.doc, q_start: t.q_start, o });
     report.computed_by.insert(t.tag(), server);
+    if let Some(obs) = obs {
+        // Synchronous reference: completion is instantaneous in this
+        // flavor, so the journey carries structure (who computed it),
+        // not timing.
+        obs.lineage(LineageEvent {
+            tick,
+            wave: 0,
+            tag: t.tag(),
+            t_s: 0.0,
+            stage: LineageStage::Completed { server, latency_s: 0.0 },
+        });
+    }
     Ok(())
 }
 
@@ -1921,6 +2025,8 @@ fn exec_wave(
     outputs: &mut BTreeMap<u64, TaskOutput>,
     report: &mut ExecReport,
     live_bytes: &mut [f64],
+    tick: usize,
+    obs: Option<&Recorder>,
 ) -> Result<()> {
     let (kills, drains, ooms) = (&faults.kills, &faults.drains, &faults.ooms);
     let targets: Vec<usize> = pool
@@ -1953,14 +2059,17 @@ fn exec_wave(
                 if drained {
                     report.drain_kept.push(tag);
                 }
-                exec_complete(tasks, i, srv, compute, outputs, report)?;
+                exec_complete(tasks, i, srv, compute, outputs, report, tick, obs)?;
             } else if drained {
                 // Partial drain: the unstarted tail is redirected — never
                 // a task the drainee already started.
                 report.drain_redirected.push(tag);
                 let d =
                     max_headroom_target(&targets, live_bytes, 0.0, task_wire_bytes(&tasks[i]));
-                exec_complete(tasks, i, d, compute, outputs, report)?;
+                if let Some(obs) = obs {
+                    obs.lineage_redispatched(tick, 0, tag, srv, d, RedispatchReason::Drain);
+                }
+                exec_complete(tasks, i, d, compute, outputs, report, tick, obs)?;
             } else if oomed {
                 // Arena overflow: the shipped tail is evicted and
                 // re-sent to the server with the most headroom (§5;
@@ -1968,14 +2077,20 @@ fn exec_wave(
                 report.oom_evicted.push(tag);
                 let d =
                     max_headroom_target(&targets, live_bytes, 0.0, task_wire_bytes(&tasks[i]));
-                exec_complete(tasks, i, d, compute, outputs, report)?;
+                if let Some(obs) = obs {
+                    obs.lineage_redispatched(tick, 0, tag, srv, d, RedispatchReason::Oom);
+                }
+                exec_complete(tasks, i, d, compute, outputs, report, tick, obs)?;
             } else {
                 // Killed: shipped after the kill, genuinely lost; the
                 // recovery is one resend of the same bytes (§3).
                 report.redispatched.push(tag);
                 let d =
                     max_headroom_target(&targets, live_bytes, 0.0, task_wire_bytes(&tasks[i]));
-                exec_complete(tasks, i, d, compute, outputs, report)?;
+                if let Some(obs) = obs {
+                    obs.lineage_redispatched(tick, 0, tag, srv, d, RedispatchReason::Kill);
+                }
+                exec_complete(tasks, i, d, compute, outputs, report, tick, obs)?;
             }
         }
     }
@@ -2023,11 +2138,32 @@ pub fn run_elastic_exec(
     fault: &FaultPlan,
     compute: &mut dyn CaCompute,
 ) -> Result<ExecReport> {
+    run_elastic_exec_obs(pool, tick, tasks, fault, compute, None)
+}
+
+/// [`run_elastic_exec`] with an optional lineage recorder: the
+/// reference flavor emits the same `planned → redispatched →
+/// completed | stale-deduped` event stream as the threaded runtime, so
+/// lineage conformance can be differential-tested against it.
+pub fn run_elastic_exec_obs(
+    pool: &mut ServerPool,
+    tick: usize,
+    tasks: &[ElasticTask],
+    fault: &FaultPlan,
+    compute: &mut dyn CaCompute,
+    obs: Option<&Recorder>,
+) -> Result<ExecReport> {
     let deferred = fault.apply_tick(tick, pool);
     let faults = partition_mid_tick(&deferred, pool.capacity());
     let mut outputs: BTreeMap<u64, TaskOutput> = BTreeMap::new();
     let mut report = ExecReport::default();
     let (planned, mut live_bytes) = exec_belief_plan(pool, tasks, &mut report);
+    if let Some(obs) = obs {
+        for (i, t) in tasks.iter().enumerate() {
+            let pairs = (t.tensors.q_len * t.tensors.kv_len) as f64;
+            obs.lineage_planned(tick, t.tag(), planned[i], pairs);
+        }
+    }
     let all: Vec<usize> = (0..tasks.len()).collect();
     exec_wave(
         pool,
@@ -2039,6 +2175,8 @@ pub fn run_elastic_exec(
         &mut outputs,
         &mut report,
         &mut live_bytes,
+        tick,
+        obs,
     )?;
     for &k in &faults.kills {
         pool.kill(k);
@@ -2065,6 +2203,19 @@ pub fn run_elastic_exec_pp(
     fault: &FaultPlan,
     compute: &mut dyn CaCompute,
 ) -> Result<ExecReport> {
+    run_elastic_exec_pp_obs(pool, tick, tasks, fault, compute, None)
+}
+
+/// [`run_elastic_exec_pp`] with an optional lineage recorder (see
+/// [`run_elastic_exec_obs`]).
+pub fn run_elastic_exec_pp_obs(
+    pool: &mut ServerPool,
+    tick: usize,
+    tasks: &[ElasticTask],
+    fault: &FaultPlan,
+    compute: &mut dyn CaCompute,
+    obs: Option<&Recorder>,
+) -> Result<ExecReport> {
     let deferred = fault.apply_tick(tick, pool);
     let faults = partition_mid_tick(&deferred, pool.capacity());
     let (ping_idx, pong_idx) =
@@ -2072,6 +2223,12 @@ pub fn run_elastic_exec_pp(
     let mut outputs: BTreeMap<u64, TaskOutput> = BTreeMap::new();
     let mut report = ExecReport::default();
     let (planned, mut live_bytes) = exec_belief_plan(pool, tasks, &mut report);
+    if let Some(obs) = obs {
+        for (i, t) in tasks.iter().enumerate() {
+            let pairs = (t.tensors.q_len * t.tensors.kv_len) as f64;
+            obs.lineage_planned(tick, t.tag(), planned[i], pairs);
+        }
+    }
     exec_wave(
         pool,
         tasks,
@@ -2082,6 +2239,8 @@ pub fn run_elastic_exec_pp(
         &mut outputs,
         &mut report,
         &mut live_bytes,
+        tick,
+        obs,
     )?;
     for &k in &faults.kills {
         pool.kill(k);
@@ -2101,6 +2260,8 @@ pub fn run_elastic_exec_pp(
         &mut outputs,
         &mut report,
         &mut live_bytes,
+        tick,
+        obs,
     )?;
     for &d in &faults.drains {
         pool.leave(d);
@@ -2440,6 +2601,19 @@ pub fn run_elastic_sim_obs(
             .iter()
             .map(|a| crate::memplan::item_arena_bytes(&a.item, &p.model) / tp)
             .collect();
+        if let Some(obs) = obs {
+            // Lineage: one planned event per assignment, tagged by
+            // assignment index (the sim's task identity).
+            for (i, a) in plan.assignments.iter().enumerate() {
+                let pairs: f64 = a
+                    .item
+                    .ca_tasks()
+                    .iter()
+                    .map(|ct| ct.q_len as f64 * ct.kv_len as f64)
+                    .sum();
+                obs.lineage_planned(tick, i as u64, view.to_physical(a.server), pairs);
+            }
+        }
 
         // Wave 0: the tick as dispatched, with faults biting. A
         // configured byte budget is enforced by the engine itself, so
@@ -2628,6 +2802,23 @@ pub fn run_elastic_sim_obs(
                         dur_s: 0.0,
                     });
                     obs.counter("sim.redispatched", 1.0);
+                    let reason = if organic_at.contains_key(&li)
+                        || oomed_virt.contains(&a.server)
+                    {
+                        RedispatchReason::Oom
+                    } else if killed_virt.contains(&a.server) {
+                        RedispatchReason::Kill
+                    } else {
+                        RedispatchReason::Drain
+                    };
+                    obs.lineage_redispatched(
+                        tick,
+                        0,
+                        li as u64,
+                        view.to_physical(a.server),
+                        view.to_physical(target_v),
+                        reason,
+                    );
                 }
             }
             tick_time = rec.run();
@@ -2717,6 +2908,16 @@ pub fn run_elastic_sim_obs(
                     task_tag: Some(i as u64),
                     start_s: off + s0,
                     dur_s: s1 - s0,
+                });
+                obs.lineage(LineageEvent {
+                    tick,
+                    wave: 0,
+                    tag: i as u64,
+                    t_s: off + s1,
+                    stage: LineageStage::Completed {
+                        server: view.to_physical(a.server),
+                        latency_s: s1,
+                    },
                 });
             }
             for (v, &done_at) in last_finish.iter().enumerate() {

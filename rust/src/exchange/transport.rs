@@ -88,6 +88,21 @@ pub trait Transport: Send + Sync {
     /// default is a no-op; the TCP fabric carries it in the frame
     /// header so mid-wave faults are scoped per wave across processes.
     fn set_wave_stamp(&self, _wave: usize, _epoch: u64) {}
+    /// Stamp the next outbound data frame carrying `tag` with the
+    /// lineage trace id of the dispatch that produced it (DCA3 `trace`
+    /// header field, [`crate::obs::lineage`]). Workers echo the
+    /// request's trace onto the matching response, so the coordinator
+    /// can attribute which dispatch hop won under first-response-wins
+    /// dedup. In-process fabrics deliver the same `Message` end-to-end
+    /// and need no wire stamp — the default is a no-op.
+    fn set_trace_stamp(&self, _tag: u64, _trace: u64) {}
+    /// Drain the `(tag, trace)` pairs echoed on responses since the
+    /// last call (coordinator side of [`Transport::set_trace_stamp`]).
+    /// Fabrics without a wire trace field have nothing to report — the
+    /// default returns an empty vec.
+    fn take_trace_echoes(&self) -> Vec<(u64, u64)> {
+        Vec::new()
+    }
     /// Return a spent recv-payload buffer to the fabric's pool so the
     /// next inbound frame decodes into it instead of a fresh
     /// allocation (the zero-copy data plane). In-process fabrics move

@@ -57,11 +57,48 @@ pub struct PoolTotals {
     pub redispatched: usize,
 }
 
+/// Fraction of a class's completed tasks allowed to miss its latency
+/// target before the error budget is spent: burn rate 1.0 means
+/// breaches are arriving at exactly the budgeted rate.
+pub const SLO_BUDGET: f64 = 0.01;
+
+/// One SLO class's latency accounting against its
+/// [`SloClass::latency_target_s`] target.
+#[derive(Debug, Clone, Default)]
+pub struct ClassSlo {
+    /// Completed tasks whose end-to-end latency was observed.
+    pub tasks: usize,
+    /// Observations that exceeded the class target.
+    pub breaches: usize,
+    pub latency_sum_s: f64,
+    pub max_latency_s: f64,
+}
+
+impl ClassSlo {
+    /// Breach fraction over the error budget: 0 = no breaches, 1.0 =
+    /// budget exactly spent, >1 = the class is burning faster than the
+    /// SLO allows.
+    pub fn burn_rate(&self) -> f64 {
+        if self.tasks == 0 {
+            return 0.0;
+        }
+        (self.breaches as f64 / self.tasks as f64) / SLO_BUDGET
+    }
+
+    pub fn mean_latency_s(&self) -> f64 {
+        if self.tasks == 0 {
+            return 0.0;
+        }
+        self.latency_sum_s / self.tasks as f64
+    }
+}
+
 /// The gateway's double-entry ledger.
 #[derive(Debug, Default)]
 pub struct Ledger {
     tenants: BTreeMap<u32, TenantAccount>,
     pool: PoolTotals,
+    slo: BTreeMap<SloClass, ClassSlo>,
 }
 
 /// FLOPs for one CA task: `4 · h · d · pairs` (per head-dim MAC in
@@ -111,6 +148,31 @@ impl Ledger {
     pub fn note_redispatch(&mut self, tenant: u32, slo: SloClass, n: usize) {
         self.row(tenant, slo).redispatched += n;
         self.pool.redispatched += n;
+    }
+
+    /// Record one completed task's end-to-end latency against its
+    /// class target. Returns `true` if the observation breached the
+    /// target (burning error budget) so the caller can emit a breach
+    /// event.
+    pub fn note_latency(&mut self, slo: SloClass, latency_s: f64) -> bool {
+        let cell = self.slo.entry(slo).or_default();
+        cell.tasks += 1;
+        cell.latency_sum_s += latency_s;
+        cell.max_latency_s = cell.max_latency_s.max(latency_s);
+        let breached = latency_s > slo.latency_target_s();
+        if breached {
+            cell.breaches += 1;
+        }
+        breached
+    }
+
+    /// Current burn rate for one class (0.0 before any observation).
+    pub fn burn_rate(&self, slo: SloClass) -> f64 {
+        self.slo.get(&slo).map(ClassSlo::burn_rate).unwrap_or(0.0)
+    }
+
+    pub fn slo(&self) -> &BTreeMap<SloClass, ClassSlo> {
+        &self.slo
     }
 
     /// Attribute one wave's wall clock to its tenants by pair share.
@@ -230,6 +292,7 @@ impl Ledger {
                 .values()
                 .filter(|r| r.slo == Some(class))
                 .collect();
+            let slo = self.slo.get(&class).cloned().unwrap_or_default();
             let admitted: usize = rows.iter().map(|r| r.admitted).sum();
             let wait_sum: usize = rows.iter().map(|r| r.wait_waves_sum).sum();
             let mean_wait = if admitted > 0 {
@@ -254,6 +317,12 @@ impl Ledger {
                         Json::Num(rows.iter().map(|r| r.max_wait_waves).max().unwrap_or(0) as f64),
                     ),
                     ("wait_bound_waves", Json::Num(class.wait_bound_waves() as f64)),
+                    ("latency_target_s", Json::Num(class.latency_target_s())),
+                    ("latency_tasks", Json::Num(slo.tasks as f64)),
+                    ("latency_breaches", Json::Num(slo.breaches as f64)),
+                    ("burn_rate", Json::Num(slo.burn_rate())),
+                    ("mean_latency_s", Json::Num(slo.mean_latency_s())),
+                    ("max_latency_s", Json::Num(slo.max_latency_s)),
                 ]),
             ));
         }
@@ -297,6 +366,27 @@ mod tests {
         l.note_complete(2, SloClass::Batch);
         let errs = l.conservation_errors();
         assert!(errs.iter().any(|e| e.contains("tenant 2")), "{errs:?}");
+    }
+
+    #[test]
+    fn latency_breaches_burn_the_class_budget() {
+        let mut l = Ledger::new();
+        // 99 in-target observations, one breach: exactly the 1% budget.
+        for _ in 0..99 {
+            assert!(!l.note_latency(SloClass::Interactive, 0.5));
+        }
+        assert!(l.note_latency(SloClass::Interactive, 2.0));
+        let cell = &l.slo()[&SloClass::Interactive];
+        assert_eq!((cell.tasks, cell.breaches), (100, 1));
+        assert!((l.burn_rate(SloClass::Interactive) - 1.0).abs() < 1e-12);
+        assert!((cell.max_latency_s - 2.0).abs() < 1e-12);
+        // Untouched classes report zero burn, and the summary carries
+        // the new keys.
+        assert_eq!(l.burn_rate(SloClass::Batch), 0.0);
+        let summary = l.class_summary().to_string_compact();
+        for key in ["burn_rate", "latency_breaches", "latency_target_s"] {
+            assert!(summary.contains(key), "missing {key} in {summary}");
+        }
     }
 
     #[test]

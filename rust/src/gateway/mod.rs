@@ -54,7 +54,7 @@ pub use tenant::{SloClass, TenantSpec};
 use std::io::Write;
 use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -68,6 +68,7 @@ use crate::net::serve::{
     connect_and_config, drain_events, split_fault_plan, wait_hello, WorkerProcs,
 };
 use crate::net::{NetEvent, TcpTransport, NET_DIMS};
+use crate::obs::export::MetricsHub;
 use crate::runtime::ca_exec::synthetic_task;
 use crate::server::{tenant_doc, MAX_TENANT_SEQ};
 use crate::util::json::Json;
@@ -115,6 +116,8 @@ pub struct GatewayCfg {
     pub bench_out: Option<PathBuf>,
     /// Safety cap on post-arrival drain waves.
     pub max_drain_waves: usize,
+    /// Live Prometheus-text metrics endpoint (`--metrics-listen`).
+    pub metrics_listen: Option<String>,
 }
 
 impl Default for GatewayCfg {
@@ -135,6 +138,7 @@ impl Default for GatewayCfg {
             accounting_out: None,
             bench_out: None,
             max_drain_waves: 10_000,
+            metrics_listen: None,
         }
     }
 }
@@ -362,10 +366,28 @@ pub fn run_gateway(cfg: &GatewayCfg) -> Result<GatewayReport> {
         None => None,
     };
 
+    // Live metrics: the gateway runs no recorder, so it feeds the hub
+    // directly (task latency, queue delay, breach counters, burn-rate
+    // gauges).
+    let hub = match &cfg.metrics_listen {
+        Some(addr) => {
+            let hub = MetricsHub::new();
+            let bound = hub.serve(addr)?;
+            println!("metrics: http://{bound}/metrics");
+            Some(hub)
+        }
+        None => None,
+    };
+
     let mut dispatch_tick = 0usize; // fault-plan clock: dispatched waves only
     let mut forced_admissions = 0usize;
     let mut wave = 0usize;
+    // Wall-clock start of each wave, indexed by wave number: a task's
+    // end-to-end latency is measured from the start of the wave it was
+    // *enqueued* in (the SLO clock starts at arrival, not admission).
+    let mut wave_started: Vec<Instant> = Vec::new();
     loop {
+        wave_started.push(Instant::now());
         let arriving = wave < cfg.waves;
         if !arriving && adm.queue().is_empty() {
             break;
@@ -511,6 +533,12 @@ pub fn run_gateway(cfg: &GatewayCfg) -> Result<GatewayReport> {
                     task_flops(qt.len, h, d),
                     wave - qt.enqueued_wave,
                 );
+                if let Some(hub) = &hub {
+                    hub.observe(
+                        &format!("distca_queue_delay_waves|class={}", spec.slo.name()),
+                        (wave - qt.enqueued_wave) as f64,
+                    );
+                }
                 shares.push((qt.tenant, spec.slo, qt.cost));
                 wave_tenants.insert(qt.tenant);
             }
@@ -545,7 +573,38 @@ pub fn run_gateway(cfg: &GatewayCfg) -> Result<GatewayReport> {
                     qt.tenant,
                     qt.seq
                 );
-                ledger.note_complete(qt.tenant, specs[qt.tenant as usize].slo);
+                let slo = specs[qt.tenant as usize].slo;
+                ledger.note_complete(qt.tenant, slo);
+
+                // End-to-end latency (enqueue-wave start → verified
+                // completion) against the class target; a breach burns
+                // error budget and emits an observable event.
+                let latency_s = wave_started[qt.enqueued_wave].elapsed().as_secs_f64();
+                let breached = ledger.note_latency(slo, latency_s);
+                if let Some(hub) = &hub {
+                    hub.observe("distca_task_latency_seconds", latency_s);
+                    hub.observe(
+                        &format!("distca_task_latency_seconds|tenant={}", qt.tenant),
+                        latency_s,
+                    );
+                    if breached {
+                        hub.add(&format!("distca_slo_breach_total|class={}", slo.name()), 1.0);
+                    }
+                }
+                if breached {
+                    if let Some(f) = acct_file.as_mut() {
+                        let row = Json::obj(vec![
+                            ("kind", Json::Str("breach".into())),
+                            ("wave", Json::Num(wave as f64)),
+                            ("tenant", Json::Num(qt.tenant as f64)),
+                            ("slo", Json::Str(slo.name().into())),
+                            ("latency_s", Json::Num(latency_s)),
+                            ("target_s", Json::Num(slo.latency_target_s())),
+                        ]);
+                        writeln!(f, "{}", row.to_string_compact())
+                            .context("writing --accounting-out breach row")?;
+                    }
+                }
             }
 
             // 7. Fold the elastic layer's per-tenant splits back into
@@ -563,6 +622,15 @@ pub fn run_gateway(cfg: &GatewayCfg) -> Result<GatewayReport> {
         if let Some(f) = acct_file.as_mut() {
             writeln!(f, "{}", rec.to_json().to_string_compact())
                 .context("writing --accounting-out wave row")?;
+        }
+        if let Some(hub) = &hub {
+            for class in SloClass::ALL {
+                hub.set(
+                    &format!("distca_slo_burn_rate|class={}", class.name()),
+                    ledger.burn_rate(class),
+                );
+            }
+            hub.set("distca_gateway_backlog", adm.queue().len() as f64);
         }
         per_wave.push(rec);
         wave += 1;

@@ -47,6 +47,18 @@ impl SloClass {
         }
     }
 
+    /// End-to-end latency target (enqueue → verified completion),
+    /// testbed-scaled: a completed task slower than this burns its
+    /// class's error budget ([`super::accounting::SLO_BUDGET`]). The
+    /// ratios mirror the wait bounds (8/24/64 waves → 1/3/8 seconds).
+    pub fn latency_target_s(self) -> f64 {
+        match self {
+            SloClass::Interactive => 1.0,
+            SloClass::Standard => 3.0,
+            SloClass::Batch => 8.0,
+        }
+    }
+
     pub fn name(self) -> &'static str {
         match self {
             SloClass::Interactive => "interactive",

@@ -55,6 +55,8 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("gateway", "multi-tenant gateway: WFQ + admission over the shared pool (--soak: 10k tenants)"),
     ("train", "train the tiny LM end-to-end via AOT artifacts"),
     ("report", "straggler attribution from a --trace-out file (Fig. 11-style overlap table)"),
+    ("top", "live dashboard: poll a --metrics-listen endpoint, render quantiles + gauges"),
+    ("obsbench", "recorder/lineage overhead microbench; write BENCH_obs.json"),
     ("drift", "compare a regenerated BENCH_*.json snapshot against its committed baseline"),
     ("bound", "Appendix A max-partition bound"),
     ("info", "print model & cluster configs"),
@@ -167,6 +169,26 @@ fn specs() -> Vec<FlagSpec> {
             "worker heartbeat interval in ms (serve/soak; 0 disables)",
             Some("200"),
         ),
+        FlagSpec::value(
+            "metrics-listen",
+            "live Prometheus-text metrics endpoint, e.g. 127.0.0.1:9464 or :0 (serve/soak/gateway)",
+            None,
+        ),
+        FlagSpec::value(
+            "metrics-addr",
+            "metrics endpoint to poll, host:port (top)",
+            None,
+        ),
+        FlagSpec::value("interval-ms", "dashboard refresh interval in ms (top)", Some("1000")),
+        FlagSpec::value(
+            "iterations",
+            "dashboard refresh count, 0 = until interrupted (top)",
+            Some("0"),
+        ),
+        FlagSpec::boolean(
+            "lineage",
+            "render the straggler root-cause table from the trace's lineage sidecar (report)",
+        ),
         FlagSpec::boolean("json", "emit JSON instead of tables"),
         FlagSpec::boolean("verbose", "debug logging"),
     ]
@@ -197,6 +219,8 @@ fn main() {
         Some("gateway") => cmd_gateway(&args),
         Some("train") => cmd_train(&args),
         Some("report") => cmd_report(&args),
+        Some("top") => cmd_top(&args),
+        Some("obsbench") => cmd_obsbench(&args),
         Some("drift") => cmd_drift(&args),
         Some("bound") => cmd_bound(&args),
         Some("info") => cmd_info(&args),
@@ -1127,6 +1151,7 @@ fn cmd_net(args: &Args, soak: bool) -> anyhow::Result<()> {
         } else {
             (hb_ms * 10).max(2000)
         }),
+        metrics_listen: args.get("metrics-listen").map(String::from),
     };
     let report = distca::net::run_serve(&cfg)?;
     if args.get_bool("json") {
@@ -1235,6 +1260,7 @@ fn cmd_gateway(args: &Args) -> anyhow::Result<()> {
         spawn,
         connect,
         diurnal_period: args.get_f64("diurnal", 24.0)?,
+        metrics_listen: args.get("metrics-listen").map(String::from),
         accounting_out: args.get("accounting-out").map(std::path::PathBuf::from),
         bench_out: match args.get("bench-out") {
             Some(p) => Some(std::path::PathBuf::from(p)),
@@ -1286,7 +1312,10 @@ fn cmd_gateway(args: &Args) -> anyhow::Result<()> {
         t.print();
         let mut ct = Table::new(
             "per-SLO-class accounting (tenant rows sum exactly to pool totals)",
-            &["class", "tenants", "admitted", "completed", "bytes", "flops", "mean wait", "max wait", "bound"],
+            &[
+                "class", "tenants", "admitted", "completed", "bytes", "flops", "mean wait",
+                "max wait", "bound", "target", "breaches", "burn",
+            ],
         );
         for class in distca::gateway::SloClass::ALL {
             let rows: Vec<&distca::gateway::TenantAccount> = report
@@ -1297,6 +1326,7 @@ fn cmd_gateway(args: &Args) -> anyhow::Result<()> {
                 .collect();
             let admitted: usize = rows.iter().map(|r| r.admitted).sum();
             let wait_sum: usize = rows.iter().map(|r| r.wait_waves_sum).sum();
+            let slo = report.ledger.slo().get(&class).cloned().unwrap_or_default();
             ct.row(&[
                 class.name().to_string(),
                 rows.len().to_string(),
@@ -1307,6 +1337,9 @@ fn cmd_gateway(args: &Args) -> anyhow::Result<()> {
                 fmt_f(if admitted > 0 { wait_sum as f64 / admitted as f64 } else { 0.0 }, 2),
                 rows.iter().map(|r| r.max_wait_waves).max().unwrap_or(0).to_string(),
                 class.wait_bound_waves().to_string(),
+                secs(class.latency_target_s()),
+                format!("{}/{}", slo.breaches, slo.tasks),
+                fmt_f(slo.burn_rate(), 2),
             ]);
         }
         ct.print();
@@ -1408,12 +1441,187 @@ fn cmd_report(args: &Args) -> anyhow::Result<()> {
     // silently mis-attribute phases.
     distca::obs::trace::validate(&trace.spans)
         .map_err(|e| anyhow::anyhow!("{path}: invalid trace: {e}"))?;
+    if args.get_bool("lineage") {
+        println!("{}", distca::obs::report::render_lineage(&trace, 20)?);
+        return Ok(());
+    }
     let report = breakdown(&trace)?;
     if args.get_bool("json") {
         println!("{}", report.to_json().to_string_pretty());
     } else {
         println!("{}", report.render());
     }
+    Ok(())
+}
+
+/// `distca top` — live terminal dashboard over a `--metrics-listen`
+/// endpoint: poll `/metrics`, regroup the summary quantiles per family
+/// + label set, and render a refreshing table. `--iterations 0` polls
+/// until interrupted; a finite count (CI, scripting) renders that many
+/// frames and exits.
+fn cmd_top(args: &Args) -> anyhow::Result<()> {
+    let addr = args.get("metrics-addr").ok_or_else(|| {
+        anyhow::anyhow!("top needs --metrics-addr <host:port> (a --metrics-listen endpoint)")
+    })?;
+    let interval = args.get_u64("interval-ms", 1000)?;
+    let iterations = args.get_usize("iterations", 0)?;
+    let mut frame = 0usize;
+    loop {
+        let body = distca::obs::export::fetch_metrics(addr)?;
+        let samples = distca::obs::export::parse_prometheus(&body);
+        // Regroup: summary series (quantile label + _sum/_count) fold
+        // into one row per (family, labels); everything else is a gauge.
+        let strip = |ls: &[(String, String)]| -> String {
+            ls.iter()
+                .filter(|(k, _)| k != "quantile")
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect::<Vec<_>>()
+                .join(",")
+        };
+        let mut summaries: std::collections::BTreeMap<(String, String), [f64; 5]> =
+            Default::default();
+        let mut gauges: Vec<(String, String, f64)> = Vec::new();
+        for (fam, labels, v) in &samples {
+            if let Some((_, q)) = labels.iter().find(|(k, _)| k == "quantile") {
+                let e = summaries.entry((fam.clone(), strip(labels))).or_insert([0.0; 5]);
+                match q.as_str() {
+                    "0.5" => e[0] = *v,
+                    "0.95" => e[1] = *v,
+                    "0.99" => e[2] = *v,
+                    _ => {}
+                }
+            } else if let Some(base) = fam.strip_suffix("_count") {
+                summaries.entry((base.to_string(), strip(labels))).or_insert([0.0; 5])[3] = *v;
+            } else if let Some(base) = fam.strip_suffix("_sum") {
+                summaries.entry((base.to_string(), strip(labels))).or_insert([0.0; 5])[4] = *v;
+            } else {
+                gauges.push((fam.clone(), strip(labels), *v));
+            }
+        }
+        if frame > 0 {
+            // ANSI clear + home between refreshes, not before the first
+            // frame (keeps one-shot output pipeable).
+            print!("\x1b[2J\x1b[H");
+        }
+        let mut t = Table::new(
+            &format!("distca top — {addr} (frame {frame})"),
+            &["family", "labels", "p50", "p95", "p99", "count", "sum"],
+        );
+        for ((fam, labels), q) in &summaries {
+            t.row(&[
+                fam.clone(),
+                if labels.is_empty() { "-".into() } else { labels.clone() },
+                format!("{:.6}", q[0]),
+                format!("{:.6}", q[1]),
+                format!("{:.6}", q[2]),
+                format!("{}", q[3] as u64),
+                format!("{:.3}", q[4]),
+            ]);
+        }
+        t.print();
+        if !gauges.is_empty() {
+            let mut g = Table::new("gauges & counters", &["family", "labels", "value"]);
+            for (fam, labels, v) in &gauges {
+                g.row(&[
+                    fam.clone(),
+                    if labels.is_empty() { "-".into() } else { labels.clone() },
+                    fmt_f(*v, 3),
+                ]);
+            }
+            g.print();
+        }
+        frame += 1;
+        if iterations > 0 && frame >= iterations {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(interval));
+    }
+}
+
+/// `distca obsbench` — measure what the observability plane costs: the
+/// same seeded stream of small reference-GQA tasks is run twice, once
+/// bare and once with a wall-clock recorder absorbing the full
+/// per-task event load (planned/dispatched/completed lineage, phase
+/// span, hub histogram sample). Emits `BENCH_obs.json`; the drift gate
+/// arms its schema, and CI asserts `overhead_pct` stays small — the
+/// tracing plane must never become the straggler it exists to find.
+fn cmd_obsbench(args: &Args) -> anyhow::Result<()> {
+    const H: usize = 4;
+    const HKV: usize = 2;
+    const D: usize = 16;
+    const LEN: usize = 48;
+    let seed = match args.get_parse::<u64>("seed")? {
+        Some(s) => s,
+        None => distca::util::rng::seed_from_env(42),
+    };
+    let quick = std::env::var("DISTCA_BENCH_QUICK").is_ok();
+    let tasks = args.get_usize("ticks", if quick { 200 } else { 2000 })?;
+    let oracle = ReferenceCaCompute::new(H, HKV, D);
+    // One shared task batch: identical compute on both sides.
+    let mut rng = Rng::new(seed);
+    let batch: Vec<_> =
+        (0..tasks).map(|_| synthetic_task(&mut rng, LEN, LEN, H, HKV, D)).collect();
+
+    // Bare pass: compute only.
+    let t0 = std::time::Instant::now();
+    for tensors in &batch {
+        std::hint::black_box(oracle.run_batch(std::slice::from_ref(tensors)));
+    }
+    let off_s = t0.elapsed().as_secs_f64();
+
+    // Instrumented pass: full recorder + lineage + live-hub load per
+    // task, the same event mix serve/soak generates.
+    let recorder = Recorder::new_wall();
+    let hub = distca::obs::export::MetricsHub::new();
+    recorder.set_hub(std::sync::Arc::clone(&hub));
+    let t1 = std::time::Instant::now();
+    for (i, tensors) in batch.iter().enumerate() {
+        let tag = i as u64;
+        recorder.lineage_planned(0, tag, i % 4, (LEN * LEN) as f64);
+        recorder.lineage_dispatched(0, 0, tag, i % 4, tag + 1);
+        let c0 = std::time::Instant::now();
+        std::hint::black_box(oracle.run_batch(std::slice::from_ref(tensors)));
+        let dt = c0.elapsed().as_secs_f64();
+        recorder.phase_seconds(0, distca::obs::Phase::Compute, dt);
+        recorder.task_completed(0, 0, i % 4, tag, dt);
+    }
+    let on_s = t1.elapsed().as_secs_f64();
+
+    let overhead_pct = if off_s > 0.0 { (on_s - off_s) / off_s * 100.0 } else { 0.0 };
+    let events = recorder.lineage_events().len();
+    let hist_count = hub
+        .hist("distca_task_latency_seconds")
+        .map(|h| h.count())
+        .unwrap_or(0);
+    anyhow::ensure!(
+        events == 3 * tasks,
+        "lineage event count {events} != 3 x {tasks} tasks"
+    );
+    anyhow::ensure!(
+        hist_count == tasks as u64,
+        "hub histogram holds {hist_count} samples, expected {tasks}"
+    );
+    let j = Json::obj(vec![
+        ("bench", Json::Str("obs_overhead".into())),
+        ("seed", Json::Num(seed as f64)),
+        ("tasks", Json::Num(tasks as f64)),
+        ("lineage_events_per_task", Json::Num(3.0)),
+        ("lineage_events", Json::Num(events as f64)),
+        ("hist_samples", Json::Num(hist_count as f64)),
+        ("obs_off_s", Json::Num(off_s)),
+        ("obs_on_s", Json::Num(on_s)),
+        ("overhead_pct", Json::Num(overhead_pct)),
+    ]);
+    let out = args.get("bench-out").unwrap_or("BENCH_obs.json");
+    std::fs::write(out, j.to_string_pretty())
+        .map_err(|e| anyhow::anyhow!("writing {out}: {e}"))?;
+    println!(
+        "obs overhead: {tasks} tasks | bare {} | instrumented {} | overhead {overhead_pct:.2}% \
+         | {events} lineage events, {hist_count} live histogram samples",
+        secs(off_s),
+        secs(on_s),
+    );
+    println!("wrote {out}");
     Ok(())
 }
 

@@ -12,7 +12,7 @@
 //!
 //! | offset | size | field |
 //! |---|---|---|
-//! | 0 | 4 | magic `0x44434132` (`"2ACD"` on the wire — `"DCA2"` read big-endian) |
+//! | 0 | 4 | magic `0x44434133` (`"3ACD"` on the wire — `"DCA3"` read big-endian) |
 //! | 4 | 1 | frame kind ([`FrameKind`]) |
 //! | 5 | 4 | `dst` rank (u32) |
 //! | 9 | 8 | `src` rank (u64; `usize::MAX` = coordinator) |
@@ -20,15 +20,26 @@
 //! | 25 | 1 | `wave` (u8: ping-pong wave index, 0 = ping, 1 = pong) |
 //! | 26 | 8 | `epoch` (u64: pool membership epoch the wave was stamped under; 0 = unstamped flat tick) |
 //! | 34 | 4 | `tenant` (u32: `0` = untenanted/control, else tenant id + 1 — the gateway's stream id) |
-//! | 38 | 4 | payload element count (u32, **count of f32 words**, not bytes) |
-//! | 42 | 4·n | payload: each f32 as its u32 bit pattern, LE |
+//! | 38 | 8 | `trace` (u64: lineage trace id of the dispatch that sent this frame; 0 = untraced) |
+//! | 46 | 4 | payload element count (u32, **count of f32 words**, not bytes) |
+//! | 50 | 4·n | payload: each f32 as its u32 bit pattern, LE |
 //!
 //! ## Version history
 //!
+//! `DCA3` added the `trace` field: the coordinator stamps every
+//! outbound data frame with the lineage trace id of the dispatch that
+//! produced it ([`crate::obs::lineage`]), workers echo the request's
+//! trace onto the matching response exactly as they echo the wave
+//! stamp, and the coordinator can therefore attribute which dispatch
+//! hop won under first-response-wins dedup. `0` means untraced
+//! (control traffic, or observability disarmed) and is never
+//! interpreted.
+//!
 //! `DCA2` added the `tenant` field (the multi-tenant gateway's stream
 //! id, [`crate::server::tag_wire_tenant`]); a peer still speaking
-//! `DCA1` is rejected with a descriptive version-mismatch error rather
-//! than desyncing four bytes into the first frame. The tenant field is
+//! `DCA1` or `DCA2` is rejected with a descriptive version-mismatch
+//! error rather than desyncing bytes into the first frame. The tenant
+//! field is
 //! *derived* from the tag on encode and *validated* against the tag on
 //! decode: a `Msg` frame whose header tenant disagrees with its
 //! tag-encoded tenant — or any frame claiming a tenant id beyond the
@@ -58,16 +69,20 @@ use std::fmt;
 
 use crate::exchange::transport::Message;
 
-/// Stream magic: every frame starts with these four bytes (`"DCA2"`).
-pub const MAGIC: u32 = 0x4443_4132;
+/// Stream magic: every frame starts with these four bytes (`"DCA3"`).
+pub const MAGIC: u32 = 0x4443_4133;
 
 /// The pre-tenant-field wire version (`"DCA1"`): recognized only to
 /// reject it descriptively as a version mismatch.
 pub const MAGIC_V1: u32 = 0x4443_4131;
 
+/// The pre-trace-field wire version (`"DCA2"`): recognized only to
+/// reject it descriptively as a version mismatch.
+pub const MAGIC_V2: u32 = 0x4443_4132;
+
 /// Fixed header size in bytes (everything before the payload):
-/// magic, kind, dst, src, tag, wave, epoch, tenant, element count.
-pub const HEADER_BYTES: usize = 4 + 1 + 4 + 8 + 8 + 1 + 8 + 4 + 4;
+/// magic, kind, dst, src, tag, wave, epoch, tenant, trace, element count.
+pub const HEADER_BYTES: usize = 4 + 1 + 4 + 8 + 8 + 1 + 8 + 4 + 8 + 4;
 
 /// Exclusive cap on the wire tenant field: `0` (untenanted) plus the
 /// 15-bit tenant id space shifted by one.
@@ -166,6 +181,11 @@ pub struct Frame {
     /// tag ([`crate::server::tag_wire_tenant`]); the decoder rejects
     /// frames where the two disagree.
     pub tenant: u32,
+    /// Lineage trace id of the dispatch that sent this frame
+    /// ([`crate::obs::lineage`]): stamped by the coordinator on
+    /// outbound data frames, echoed by workers onto the matching
+    /// response. `0` = untraced (control traffic, obs disarmed).
+    pub trace: u64,
     pub payload: Vec<f32>,
 }
 
@@ -184,6 +204,7 @@ impl Frame {
             tag: m.tag,
             wave: 0,
             epoch: 0,
+            trace: 0,
             payload: m.payload,
         }
     }
@@ -191,7 +212,7 @@ impl Frame {
     /// A control frame from rank `src` (pass `usize::MAX` for the
     /// coordinator).
     pub fn control(kind: FrameKind, src: usize, payload: Vec<f32>) -> Frame {
-        Frame { kind, dst: 0, src: src as u64, tag: 0, wave: 0, epoch: 0, tenant: 0, payload }
+        Frame { kind, dst: 0, src: src as u64, tag: 0, wave: 0, epoch: 0, tenant: 0, trace: 0, payload }
     }
 
     /// Unwrap back into the transport message (data frames).
@@ -224,6 +245,7 @@ impl Frame {
         out.push(self.wave);
         out.extend_from_slice(&self.epoch.to_le_bytes());
         out.extend_from_slice(&self.tenant.to_le_bytes());
+        out.extend_from_slice(&self.trace.to_le_bytes());
         out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
         for &w in &self.payload {
             // Bit pattern, not value: NaNs, signed zeros, and bit-cast
@@ -367,7 +389,13 @@ impl FrameDecoder {
         if magic == MAGIC_V1 {
             return Err(CodecError(format!(
                 "wire version mismatch: peer sent a DCA1 frame (magic 0x{MAGIC_V1:08x}, \
-                 no tenant field); this build speaks DCA2 (0x{MAGIC:08x})"
+                 no tenant field); this build speaks DCA3 (0x{MAGIC:08x})"
+            )));
+        }
+        if magic == MAGIC_V2 {
+            return Err(CodecError(format!(
+                "wire version mismatch: peer sent a DCA2 frame (magic 0x{MAGIC_V2:08x}, \
+                 no trace field); this build speaks DCA3 (0x{MAGIC:08x})"
             )));
         }
         if magic != MAGIC {
@@ -396,7 +424,8 @@ impl FrameDecoder {
                  {kind:?} frame's tag 0x{tag:016x} encodes wire tenant {expect_tenant}"
             )));
         }
-        let len = u32::from_le_bytes(b[38..42].try_into().unwrap());
+        let trace = u64::from_le_bytes(b[38..46].try_into().unwrap());
+        let len = u32::from_le_bytes(b[46..50].try_into().unwrap());
         if len > MAX_PAYLOAD_ELEMS {
             return Err(CodecError(format!(
                 "oversized frame: header claims {len} payload elements, cap is {MAX_PAYLOAD_ELEMS}"
@@ -416,7 +445,7 @@ impl FrameDecoder {
                 .map(|w| f32::from_bits(u32::from_le_bytes(w.try_into().unwrap()))),
         );
         self.read += need;
-        Ok(Some(Frame { kind, dst, src, tag, wave, epoch, tenant, payload }))
+        Ok(Some(Frame { kind, dst, src, tag, wave, epoch, tenant, trace, payload }))
     }
 
     /// Call at stream EOF: leftover bytes mean the peer died mid-write.
@@ -445,6 +474,7 @@ mod tests {
             wave: 1,
             epoch: 0x0102_0304_0506,
             tenant: 0,
+            trace: 0x0A0B_0C0D_0E0F,
             payload: vec![1.0, -2.5, 0.0, f32::from_bits(0x0123_4567)],
         }
     }
@@ -532,6 +562,7 @@ mod tests {
         hdr.push(0); // wave
         hdr.extend_from_slice(&0u64.to_le_bytes()); // epoch
         hdr.extend_from_slice(&0u32.to_le_bytes()); // tenant
+        hdr.extend_from_slice(&0u64.to_le_bytes()); // trace
         hdr.extend_from_slice(&(MAX_PAYLOAD_ELEMS + 1).to_le_bytes());
         let mut dec = FrameDecoder::new();
         dec.push(&hdr);
@@ -579,6 +610,31 @@ mod tests {
         let err = dec.next_frame().unwrap_err();
         assert!(err.to_string().contains("version mismatch"), "{err}");
         assert!(err.to_string().contains("DCA1"), "{err}");
+    }
+
+    #[test]
+    fn v2_magic_rejected_as_version_mismatch() {
+        let mut bytes = sample().encode().unwrap();
+        bytes[0..4].copy_from_slice(&MAGIC_V2.to_le_bytes());
+        let mut dec = FrameDecoder::new();
+        dec.push(&bytes);
+        let err = dec.next_frame().unwrap_err();
+        assert!(err.to_string().contains("version mismatch"), "{err}");
+        assert!(err.to_string().contains("DCA2"), "{err}");
+    }
+
+    #[test]
+    fn trace_stamp_roundtrips_and_defaults_to_untraced() {
+        // Constructors produce untraced frames...
+        let f = Frame::msg(2, Message { src: 0, tag: 9, payload: vec![1.0] });
+        assert_eq!(f.trace, 0);
+        // ...and a stamped trace id survives the wire bit-exact.
+        let mut g = f;
+        g.trace = u64::MAX - 7;
+        let mut dec = FrameDecoder::new();
+        dec.push(&g.encode().unwrap());
+        let h = dec.next_frame().unwrap().unwrap();
+        assert_eq!(h.trace, u64::MAX - 7);
     }
 
     #[test]

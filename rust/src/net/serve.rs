@@ -41,6 +41,7 @@ use crate::elastic::{
 };
 use crate::elastic::failover::{COORD_SRC, CTRL_SHUTDOWN};
 use crate::exchange::transport::{Message, Transport};
+use crate::obs::export::MetricsHub;
 use crate::obs::{trace, Phase, Recorder};
 use crate::runtime::ca_exec::synthetic_task;
 use crate::server::header_usize;
@@ -49,7 +50,7 @@ use crate::util::rng::Rng;
 
 use super::codec::{Frame, FrameKind};
 use super::transport::{NetEvent, TcpTransport};
-use super::worker::WorkerConfig;
+use super::worker::{WorkerConfig, STATS_DROPPED_MARKER};
 
 /// Attention dims of the networked reference compute — kept equal to
 /// the threaded CLI demo so cross-path comparisons are like-for-like.
@@ -93,6 +94,11 @@ pub struct ServeCfg {
     /// Beats older than this mark a schedulable worker dead (zero
     /// disables the staleness check).
     pub hb_timeout: Duration,
+    /// Bind a live Prometheus-text `/metrics` endpoint here (e.g.
+    /// `127.0.0.1:9464`; port 0 = kernel-assigned). Arms the recorder
+    /// (like `--trace-out`) and feeds a [`MetricsHub`] with live
+    /// counters + latency histograms; `distca top` renders it.
+    pub metrics_listen: Option<String>,
 }
 
 /// One tick's accounting, network-level fields included.
@@ -493,17 +499,29 @@ pub(crate) fn drain_events(fabric: &TcpTransport, pending: &mut Vec<NetEvent>) {
 /// Decode one worker STATS frame — repeating 4-word groups
 /// `[tick, tag_lo, tag_hi, dur_s]` — into the recorder's worker-side
 /// compute observations. A trailing partial group (malformed sender) is
-/// ignored rather than trusted. Public so harnesses driving a
+/// ignored rather than trusted. A [`STATS_DROPPED_MARKER`] sentinel
+/// group carries the worker's count of span groups lost to a dead
+/// connection; the count is returned (and mirrored to the `stats.
+/// dropped` counter) so the serve loop can fold it into
+/// `TickStats::stats_dropped`. Public so harnesses driving a
 /// [`TcpTransport`] directly (loopback soaks, integration tests) reuse
 /// the exact production decode path.
-pub fn feed_stats(recorder: &Option<Arc<Recorder>>, rank: usize, payload: &[f32]) {
-    let Some(r) = recorder else { return };
+pub fn feed_stats(recorder: &Option<Arc<Recorder>>, rank: usize, payload: &[f32]) -> u64 {
+    let Some(r) = recorder else { return 0 };
+    let mut dropped = 0u64;
     for g in payload.chunks_exact(4) {
         let tick = header_usize(g[0]);
+        if tick == STATS_DROPPED_MARKER {
+            let count = (header_usize(g[2]) as u64) << 32 | header_usize(g[1]) as u64;
+            dropped += count;
+            r.counter("stats.dropped", count as f64);
+            continue;
+        }
         let tag = (header_usize(g[2]) as u64) << 32 | header_usize(g[1]) as u64;
         r.observe_compute(tick, tag, g[3] as f64);
     }
     r.counter(&format!("stats.frames.{rank}"), 1.0);
+    dropped
 }
 
 /// Block until rank's HELLO arrives (leaving unrelated events queued).
@@ -646,12 +664,24 @@ pub fn run_serve(cfg: &ServeCfg) -> Result<NetRunReport> {
     let mut co = ElasticCoordinator::over_transport(dyn_fabric, n, ElasticCfg::default());
     // `--pp` always arms the recorder: the per-tick compute/wire-wait
     // split (the measured Fig. 11 number) is part of the bench output
-    // even when no trace file is requested.
+    // even when no trace file is requested. `--metrics-listen` arms it
+    // too — the live hub is fed through the recorder's mirrors.
     let recorder: Option<Arc<Recorder>> =
-        (cfg.trace_out.is_some() || cfg.pp).then(Recorder::new_wall);
+        (cfg.trace_out.is_some() || cfg.pp || cfg.metrics_listen.is_some())
+            .then(Recorder::new_wall);
     if let Some(r) = &recorder {
         co.set_recorder(Arc::clone(r));
     }
+    let hub = match (&recorder, &cfg.metrics_listen) {
+        (Some(r), Some(addr)) => {
+            let hub = MetricsHub::new();
+            r.set_hub(Arc::clone(&hub));
+            let bound = hub.serve(addr)?;
+            println!("metrics: http://{bound}/metrics");
+            Some(hub)
+        }
+        _ => None,
+    };
     let (h, hkv, d) = NET_DIMS;
     let oracle = ReferenceCaCompute::new(h, hkv, d);
     let (process_plan, inband) = split_fault_plan(&cfg.fault);
@@ -731,6 +761,7 @@ pub fn run_serve(cfg: &ServeCfg) -> Result<NetRunReport> {
 
         // 2. Connection evidence → membership.
         let mut connection_kills = 0usize;
+        let mut stats_dropped_tick = 0u64;
         drain_events(&fabric, &mut pending);
         for ev in pending.drain(..) {
             match ev {
@@ -755,7 +786,9 @@ pub fn run_serve(cfg: &ServeCfg) -> Result<NetRunReport> {
                         drain_pending.push(rank);
                     }
                 }
-                NetEvent::Stats { rank, payload } => feed_stats(&recorder, rank, &payload),
+                NetEvent::Stats { rank, payload } => {
+                    stats_dropped_tick += feed_stats(&recorder, rank, &payload);
+                }
                 // A re-HELLO on a dead rank is the worker-dialed rejoin
                 // completing: the daemon came back (or was re-dialed
                 // above) and re-registered. Restore it exactly like a
@@ -833,6 +866,20 @@ pub fn run_serve(cfg: &ServeCfg) -> Result<NetRunReport> {
         };
         verify_outputs(tick, &tasks, &outputs, &oracle)?;
         let stale_wave_frames = fabric.take_stale_epoch_frames();
+        // Worker-echoed DCA3 trace ids: which dispatch hop actually won
+        // under first-response-wins dedup — the lineage's wire evidence.
+        if let Some(r) = &recorder {
+            for (tag, trace_id) in fabric.take_trace_echoes() {
+                r.lineage_wire_echo(tick, tag, trace_id);
+            }
+        }
+        // STATS groups a worker lost to a dead connection (reported via
+        // the reconnect-flush sentinel) are this tick's accounting.
+        if stats_dropped_tick > 0 {
+            if let Some(st) = co.stats.last_mut() {
+                st.stats_dropped += stats_dropped_tick;
+            }
+        }
 
         // 6. Accounting.
         let st = co.stats.last().expect("run_tick records stats").clone();
@@ -942,6 +989,17 @@ pub fn run_serve(cfg: &ServeCfg) -> Result<NetRunReport> {
     if let (Some(r), Some(path)) = (&recorder, &cfg.trace_out) {
         trace::write_trace(r, path)?;
         println!("wrote {}", path.display());
+    }
+    // Post-run quantile summary from the live hub — the same numbers
+    // the /metrics endpoint served while the run was hot.
+    if let Some(hub) = &hub {
+        if let Some(h) = hub.hist("distca_task_latency_seconds") {
+            let (p50, p95, p99) = h.p50_p95_p99();
+            println!(
+                "task latency over {} tasks: p50 {p50:.6}s p95 {p95:.6}s p99 {p99:.6}s",
+                h.count()
+            );
+        }
     }
 
     // Per-tick compute vs wire-wait from the recorder's synthesized

@@ -96,12 +96,23 @@ pub struct TcpTransport {
     /// coordinator via [`Transport::set_wave_stamp`] before each wave's
     /// dispatch and applied to every outbound task frame.
     wave_stamp: AtomicU64,
-    /// Worker side: stamp of each inbound task frame, echoed onto the
-    /// matching response so the coordinator can attribute it to the
-    /// wave/epoch it was dispatched under. Keyed by task tag (a re-sent
-    /// tag simply overwrites — per-connection FIFO makes the latest
-    /// request's stamp the one in effect).
-    echo: Mutex<HashMap<u64, (u8, u64)>>,
+    /// Worker side: stamp of each inbound task frame — `(wave, epoch,
+    /// trace)` — echoed onto the matching response so the coordinator
+    /// can attribute it to the wave/epoch it was dispatched under and
+    /// to the dispatch hop that produced it. Keyed by task tag (a
+    /// re-sent tag simply overwrites — per-connection FIFO makes the
+    /// latest request's stamp the one in effect).
+    echo: Mutex<HashMap<u64, (u8, u64, u64)>>,
+    /// Coordinator side: the lineage trace id to stamp onto the next
+    /// outbound data frame carrying each tag, set per physical send via
+    /// [`Transport::set_trace_stamp`] and consumed (removed) by the
+    /// stamp so a failover re-send under a fresh trace never reuses a
+    /// stale id.
+    trace_stamp: Mutex<HashMap<u64, u64>>,
+    /// Coordinator side: `(tag, trace)` pairs echoed on inbound
+    /// responses, drained per tick via [`Transport::take_trace_echoes`]
+    /// so the recorder can mark which dispatch won the race.
+    trace_echoes: Mutex<Vec<(u64, u64)>>,
     /// Coordinator side: responses whose echoed epoch predates the
     /// current wave stamp — work from a wave that has since been
     /// re-dispatched under a fresh epoch (kept only if dedup hasn't
@@ -144,6 +155,8 @@ impl TcpTransport {
             shutdown_rank_on_eof,
             wave_stamp: AtomicU64::new(0),
             echo: Mutex::new(HashMap::new()),
+            trace_stamp: Mutex::new(HashMap::new()),
+            trace_echoes: Mutex::new(Vec::new()),
             stale_epoch_frames: AtomicU64::new(0),
             pool: PayloadPool::new(64),
         }
@@ -287,25 +300,33 @@ impl TcpTransport {
     fn dispatch_frame(&self, peer_rank: usize, f: Frame) {
         match f.kind {
             FrameKind::Msg => {
-                if f.epoch != 0 && is_task_tag(f.tag) {
+                if (f.epoch != 0 || f.trace != 0) && is_task_tag(f.tag) {
                     if self.shutdown_rank_on_eof.is_some() {
-                        // Worker side: remember the request's wave stamp
-                        // so the response echoes it. Bounded hygiene: a
-                        // task whose response never leaves (cancelled,
-                        // dead window) would otherwise pin its entry for
-                        // the life of the run.
+                        // Worker side: remember the request's wave and
+                        // trace stamps so the response echoes them.
+                        // Bounded hygiene: a task whose response never
+                        // leaves (cancelled, dead window) would
+                        // otherwise pin its entry for the life of the
+                        // run.
                         let mut echo = self.echo.lock().unwrap();
                         if echo.len() > 65_536 {
                             echo.clear();
                         }
-                        echo.insert(f.tag, (f.wave, f.epoch));
+                        echo.insert(f.tag, (f.wave, f.epoch, f.trace));
                     } else {
                         // Coordinator side: a response stamped with an
                         // epoch older than the current wave's belongs to
                         // work already re-scoped by a mid-wave fault.
                         let cur = self.wave_stamp.load(Ordering::SeqCst) >> 8;
-                        if cur != 0 && f.epoch < cur {
+                        if f.epoch != 0 && cur != 0 && f.epoch < cur {
                             self.stale_epoch_frames.fetch_add(1, Ordering::SeqCst);
+                        }
+                        // An echoed trace names the dispatch hop this
+                        // response answers — collected for the lineage
+                        // recorder regardless of staleness (the stale
+                        // path is exactly the interesting one).
+                        if f.trace != 0 {
+                            self.trace_echoes.lock().unwrap().push((f.tag, f.trace));
                         }
                     }
                 }
@@ -378,15 +399,21 @@ impl TcpTransport {
             return;
         }
         if self.shutdown_rank_on_eof.is_some() {
-            if let Some((wave, epoch)) = self.echo.lock().unwrap().remove(&f.tag) {
+            if let Some((wave, epoch, trace)) = self.echo.lock().unwrap().remove(&f.tag) {
                 f.wave = wave;
                 f.epoch = epoch;
+                f.trace = trace;
             }
         } else {
             let packed = self.wave_stamp.load(Ordering::SeqCst);
             if packed != 0 {
                 f.wave = (packed & 0xFF) as u8;
                 f.epoch = packed >> 8;
+            }
+            // Consume the per-send trace stamp: a failover re-send sets
+            // a fresh one, so a leftover id can never leak onto it.
+            if let Some(trace) = self.trace_stamp.lock().unwrap().remove(&f.tag) {
+                f.trace = trace;
             }
         }
     }
@@ -459,6 +486,20 @@ impl Transport for TcpTransport {
 
     fn set_wave_stamp(&self, wave: usize, epoch: u64) {
         self.wave_stamp.store((epoch << 8) | (wave as u64 & 0xFF), Ordering::SeqCst);
+    }
+
+    fn set_trace_stamp(&self, tag: u64, trace: u64) {
+        let mut stamps = self.trace_stamp.lock().unwrap();
+        // Same bounded hygiene as the worker echo map: entries for
+        // sends that failed before stamping must not pin memory.
+        if stamps.len() > 65_536 {
+            stamps.clear();
+        }
+        stamps.insert(tag, trace);
+    }
+
+    fn take_trace_echoes(&self) -> Vec<(u64, u64)> {
+        std::mem::take(&mut *self.trace_echoes.lock().unwrap())
     }
 
     fn recycle_payload(&self, buf: Vec<f32>) {
@@ -573,6 +614,46 @@ mod tests {
             .expect("control frame did not arrive");
         assert_eq!(ctrl.tag, CTRL_SHUTDOWN);
         assert_eq!(coord.take_stale_epoch_frames(), 0);
+    }
+
+    /// Trace stamps ride the DCA3 frame header: the coordinator stamps
+    /// the next send of a tag with the dispatch's trace id, the worker
+    /// echoes the request's trace onto its response, and the
+    /// coordinator collects the `(tag, trace)` echo — even for flat
+    /// (epoch-0) ticks, where wave stamping is inactive.
+    #[test]
+    fn trace_stamp_is_echoed_and_collected() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let n = 2;
+
+        let coord = TcpTransport::coordinator(n);
+        let dial = TcpStream::connect(addr).unwrap();
+        let (accepted, _) = listener.accept().unwrap();
+        TcpTransport::attach(&coord, 0, 0, dial, &[]).unwrap();
+        let worker = TcpTransport::worker(0, n, accepted, &[]).unwrap();
+
+        coord.set_trace_stamp(100, 77);
+        coord.send(0, Message { src: usize::MAX, tag: 100, payload: vec![1.0] }).unwrap();
+        let req = worker.recv(0);
+        assert_eq!(req.tag, 100);
+
+        worker.send(n, Message { src: 0, tag: 100, payload: vec![2.0] }).unwrap();
+        let resp = coord
+            .try_recv_for(n, Duration::from_secs(5))
+            .expect("response did not arrive");
+        assert_eq!(resp.tag, 100);
+        assert_eq!(coord.take_trace_echoes(), vec![(100, 77)]);
+        assert_eq!(coord.take_trace_echoes(), Vec::new(), "echoes drain on take");
+
+        // The stamp is consumed by its send: an unstamped re-send of
+        // the same tag goes out untraced and echoes nothing.
+        coord.send(0, Message { src: usize::MAX, tag: 100, payload: vec![3.0] }).unwrap();
+        let req2 = worker.recv(0);
+        assert_eq!(req2.tag, 100);
+        worker.send(n, Message { src: 0, tag: 100, payload: vec![4.0] }).unwrap();
+        let _ = coord.try_recv_for(n, Duration::from_secs(5)).expect("second response");
+        assert_eq!(coord.take_trace_echoes(), Vec::new());
     }
 
     /// Satellite fix: a receiver blocked in `recv` while the transport

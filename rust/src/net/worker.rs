@@ -29,7 +29,7 @@
 use std::io::Read;
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -81,16 +81,36 @@ fn arm_sigterm() {
 /// at shutdown so the final tick's spans are never lost.
 struct SpanBuffer {
     words: Mutex<Vec<f32>>,
+    /// Span groups lost to a dead connection (a STATS send that
+    /// failed): reported to the *next* coordinator session as a
+    /// [`STATS_DROPPED_MARKER`] sentinel group, and surfaced there as
+    /// `TickStats::stats_dropped`.
+    dropped: AtomicU64,
 }
+
+/// Sentinel tick value opening a dropped-count STATS group
+/// `[MARKER, count_lo, count_hi, 0.0]` — no real tick reaches
+/// `u32::MAX`, so the decoder can't confuse it with a span group.
+pub(crate) const STATS_DROPPED_MARKER: usize = 0xFFFF_FFFF;
 
 impl SpanBuffer {
     fn new() -> Arc<SpanBuffer> {
-        Arc::new(SpanBuffer { words: Mutex::new(Vec::new()) })
+        Arc::new(SpanBuffer { words: Mutex::new(Vec::new()), dropped: AtomicU64::new(0) })
     }
 
     /// Take everything buffered so far (empty ⇒ nothing to send).
     fn drain_words(&self) -> Vec<f32> {
         std::mem::take(&mut *self.words.lock().unwrap())
+    }
+
+    /// Record `groups` span groups lost to a failed STATS send.
+    fn note_dropped(&self, groups: u64) {
+        self.dropped.fetch_add(groups, Ordering::Relaxed);
+    }
+
+    /// Take (and reset) the dropped-group count.
+    fn take_dropped(&self) -> u64 {
+        self.dropped.swap(0, Ordering::Relaxed)
     }
 }
 
@@ -105,11 +125,32 @@ impl ComputeSink for SpanBuffer {
 }
 
 /// Ship the buffered spans as one STATS frame; a send failure means the
-/// connection is gone, which the main loop detects on its own.
+/// connection is gone, which the main loop detects on its own. Groups
+/// lost to a failed send are *counted* (not silently forgotten) and
+/// the count rides the next successful flush as a sentinel group, so
+/// the coordinator's `stats_dropped` accounting stays honest across a
+/// reconnect.
 fn flush_stats(fabric: &TcpTransport, rank: usize, spans: &SpanBuffer) {
-    let words = spans.drain_words();
-    if !words.is_empty() {
-        let _ = fabric.send_frame(0, &Frame::control(FrameKind::Stats, rank, words));
+    let mut words = Vec::new();
+    let dropped = spans.take_dropped();
+    if dropped > 0 {
+        words.push(header_word(STATS_DROPPED_MARKER));
+        words.push(header_word((dropped & 0xFFFF_FFFF) as usize));
+        words.push(header_word((dropped >> 32) as usize));
+        words.push(0.0);
+    }
+    let data = spans.drain_words();
+    let data_groups = (data.len() / 4) as u64;
+    words.extend_from_slice(&data);
+    if words.is_empty() {
+        return;
+    }
+    if fabric.send_frame(0, &Frame::control(FrameKind::Stats, rank, words)).is_err() {
+        // The batch never reached the coordinator. Re-buffering could
+        // duplicate observations if the frame was partially written, so
+        // the groups are gone — account for them, and carry any not-yet
+        // reported drop count forward for the next session to report.
+        spans.note_dropped(dropped + data_groups);
     }
 }
 
@@ -163,9 +204,14 @@ impl WorkerConfig {
     }
 }
 
-/// Run the daemon: bind, publish the address, accept one coordinator,
-/// serve until shutdown/disconnect. Returns cleanly in both cases so
-/// a scripted run never leaks worker processes.
+/// Run the daemon: bind, publish the address, accept a coordinator,
+/// serve until shutdown. A session that ends in a *disconnect* (no
+/// orderly `CTRL_SHUTDOWN`) loops back to `accept` so a coordinator
+/// re-dialing a dead `--connect` rank mid-soak finds the daemon still
+/// there — and the span buffer (plus any dropped-frame count) carries
+/// across sessions, flushed right after the re-registration HELLO.
+/// Returns cleanly in all cases so a scripted run never leaks worker
+/// processes.
 pub fn run_worker(cfg: &WorkerCfg) -> Result<()> {
     let listener =
         TcpListener::bind(&cfg.listen).with_context(|| format!("binding {}", cfg.listen))?;
@@ -180,9 +226,16 @@ pub fn run_worker(cfg: &WorkerCfg) -> Result<()> {
     }
     println!("distca worker listening on {addr}");
     arm_sigterm();
-    let (stream, peer) = listener.accept().context("accepting coordinator")?;
-    println!("coordinator connected from {peer}");
-    serve_session(stream, true)?;
+    let spans = SpanBuffer::new();
+    loop {
+        let (stream, peer) = listener.accept().context("accepting coordinator")?;
+        println!("coordinator connected from {peer}");
+        let orderly = serve_session(stream, true, &spans)?;
+        if orderly || SIGTERM_SEEN.load(Ordering::Relaxed) {
+            break;
+        }
+        println!("coordinator disconnected; awaiting reconnect on {addr}");
+    }
     println!("worker exiting cleanly");
     Ok(())
 }
@@ -192,7 +245,7 @@ pub fn run_worker(cfg: &WorkerCfg) -> Result<()> {
 /// disconnect. Shared by the daemon and the in-process loopback
 /// harness ([`super::loopback`]).
 pub fn serve_stream(stream: TcpStream) -> Result<()> {
-    serve_session(stream, false)
+    serve_session(stream, false, &SpanBuffer::new()).map(|_| ())
 }
 
 /// [`serve_stream`] with daemon extras: when `daemon` is true, a
@@ -200,7 +253,14 @@ pub fn serve_stream(stream: TcpStream) -> Result<()> {
 /// the coordinator connection (graceful departure; the tick completes
 /// and the final stats flush still happens). Non-daemon embedders (the
 /// loopback harness) skip the watcher but keep the stats plane.
-fn serve_session(stream: TcpStream, daemon: bool) -> Result<()> {
+///
+/// `spans` is owned by the caller so buffered observations survive a
+/// session teardown; the daemon reuses one buffer across reconnects.
+/// Returns `true` when the session ended in an orderly shutdown (the
+/// coordinator connection was still up when the server loop exited)
+/// and `false` on a disconnect, so the daemon knows whether to await
+/// a reconnect.
+fn serve_session(stream: TcpStream, daemon: bool, spans: &Arc<SpanBuffer>) -> Result<bool> {
     let _ = stream.set_nodelay(true);
     // Bounded handshake: a coordinator that connects and goes silent
     // must not hang the daemon. The timeout is cleared afterwards —
@@ -221,16 +281,20 @@ fn serve_session(stream: TcpStream, daemon: bool) -> Result<()> {
     fabric
         .send_frame(0, &Frame::control(FrameKind::Hello, cfg.rank, vec![]))
         .map_err(|e| anyhow::anyhow!("registration hello: {e}"))?;
+    // Reconnect flush: anything buffered before the previous session
+    // died (plus the dropped-frame count) ships right behind the HELLO,
+    // not only before GOODBYE — a re-dialed mid-soak worker loses no
+    // buffered STATS.
+    flush_stats(&fabric, cfg.rank, spans);
 
     // Heartbeat thread: independent of the (possibly busy) compute
     // loop, so a worker crunching a heavy CA-task still beats. Each
     // beat also flushes the buffered compute spans as a STATS frame.
     let stop = Arc::new(AtomicBool::new(false));
-    let spans = SpanBuffer::new();
     let hb = if cfg.hb_interval > Duration::ZERO {
         let stop = Arc::clone(&stop);
         let fabric = Arc::clone(&fabric);
-        let spans = Arc::clone(&spans);
+        let spans = Arc::clone(spans);
         let rank = cfg.rank;
         let interval = cfg.hb_interval.max(Duration::from_millis(10));
         Some(std::thread::spawn(move || {
@@ -275,13 +339,16 @@ fn serve_session(stream: TcpStream, daemon: bool) -> Result<()> {
     let compute: Box<dyn CaCompute> =
         crate::kernel::compute_from_env(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim);
     let fabric_dyn: Arc<dyn Transport> = Arc::clone(&fabric) as Arc<dyn Transport>;
-    let sink: Arc<dyn ComputeSink> = Arc::clone(&spans) as _;
+    let sink: Arc<dyn ComputeSink> = Arc::clone(spans) as _;
     let result = run_server_loop_obs(fabric_dyn, cfg.rank, cfg.n_servers, compute, Some(sink));
 
     stop.store(true, Ordering::Relaxed);
+    // Orderly shutdown leaves the coordinator connection up (we close
+    // it below); a disconnect tore it down before the loop exited.
+    let orderly = fabric.is_connected(0);
     // Final stats flush *before* the goodbye: span frames written ahead
     // of GOODBYE on the same ordered stream are never lost to shutdown.
-    flush_stats(&fabric, cfg.rank, &spans);
+    flush_stats(&fabric, cfg.rank, spans);
     // Best-effort goodbye: a SIGKILLed worker never sends one, and
     // that absence is exactly what the coordinator reads as `kill:`.
     let _ = fabric.send_frame(0, &Frame::control(FrameKind::Goodbye, cfg.rank, vec![]));
@@ -295,7 +362,7 @@ fn serve_session(stream: TcpStream, daemon: bool) -> Result<()> {
     // away (matters for the in-process loopback harness, where no
     // process exit closes the socket for us).
     fabric.close_conn(0);
-    result
+    result.map(|()| orderly)
 }
 
 /// Read frames off the raw stream until the CONFIG arrives. Returns the
@@ -365,5 +432,22 @@ mod tests {
         assert_eq!(got, tag);
         // Drained means drained.
         assert!(spans.drain_words().is_empty());
+    }
+
+    #[test]
+    fn dropped_groups_accumulate_and_drain() {
+        let spans = SpanBuffer::new();
+        assert_eq!(spans.take_dropped(), 0);
+        spans.note_dropped(3);
+        spans.note_dropped(2);
+        assert_eq!(spans.take_dropped(), 5);
+        assert_eq!(spans.take_dropped(), 0);
+    }
+
+    #[test]
+    fn dropped_marker_roundtrips_as_header_word() {
+        // The sentinel tick marker must survive the f32 bit-cast that
+        // carries STATS words over the wire.
+        assert_eq!(header_usize(header_word(STATS_DROPPED_MARKER)), STATS_DROPPED_MARKER);
     }
 }

@@ -1,0 +1,371 @@
+//! Zero-dependency live metrics: a Prometheus-text-format HTTP
+//! exporter over `std::net::TcpListener`.
+//!
+//! `serve|soak|gateway --metrics-listen ADDR` arm a shared
+//! [`MetricsHub`] — counters, gauges, and [`LogHistogram`] families —
+//! and serve it at `GET /metrics` in Prometheus text exposition format
+//! 0.0.4. Histogram families render as *summaries* (`quantile` labels
+//! p50/p95/p99 plus `_sum`/`_count`), computed from the same log
+//! buckets the post-hoc report reads, so the live p99 and the
+//! post-run p99 agree within the documented
+//! [`super::hist::QUANTILE_REL_ERROR`] by construction.
+//!
+//! `distca top` is the matching client: it polls the endpoint with a
+//! hand-rolled HTTP GET ([`fetch_metrics`]) and renders a refreshing
+//! terminal dashboard — no HTTP library on either side (the vendor set
+//! has none).
+//!
+//! ## Metric keys
+//!
+//! A hub key is `family` or `family|k=v,k2=v2` — the part after `|` is
+//! rendered as Prometheus labels. Family names must match
+//! `[a-zA-Z_:][a-zA-Z0-9_:]*`; [`MetricsHub`] sanitizes on insert so
+//! dotted recorder counter names are safe to forward.
+
+use super::hist::LogHistogram;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Shared live-metrics registry: scalar gauges/counters plus histogram
+/// families, all keyed by `family` or `family|label=value,...`.
+#[derive(Default)]
+pub struct MetricsHub {
+    scalars: Mutex<BTreeMap<String, f64>>,
+    hists: Mutex<BTreeMap<String, LogHistogram>>,
+}
+
+/// Replace every character Prometheus disallows in a metric name with
+/// `_` (labels keep their value text — only names are constrained).
+fn sanitize_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    for (i, c) in name.chars().enumerate() {
+        let ok = c.is_ascii_alphabetic()
+            || c == '_'
+            || c == ':'
+            || (i > 0 && c.is_ascii_digit());
+        out.push(if ok { c } else { '_' });
+    }
+    out
+}
+
+/// Split a hub key into (sanitized family, raw label part).
+fn split_key(key: &str) -> (String, Option<&str>) {
+    match key.split_once('|') {
+        Some((fam, labels)) => (sanitize_name(fam), Some(labels)),
+        None => (sanitize_name(key), None),
+    }
+}
+
+/// Render `k=v,k2=v2` as `{k="v",k2="v2"}` with `extra` appended.
+fn render_labels(labels: Option<&str>, extra: Option<(&str, &str)>) -> String {
+    let mut parts: Vec<String> = Vec::new();
+    if let Some(l) = labels {
+        for pair in l.split(',').filter(|p| !p.is_empty()) {
+            let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+            parts.push(format!("{}=\"{}\"", sanitize_name(k), v.replace('"', "'")));
+        }
+    }
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{v}\""));
+    }
+    if parts.is_empty() { String::new() } else { format!("{{{}}}", parts.join(",")) }
+}
+
+impl MetricsHub {
+    pub fn new() -> Arc<MetricsHub> {
+        Arc::new(MetricsHub::default())
+    }
+
+    /// Add to a scalar (counter semantics).
+    pub fn add(&self, key: &str, v: f64) {
+        *self.scalars.lock().unwrap().entry(key.to_string()).or_insert(0.0) += v;
+    }
+
+    /// Overwrite a scalar (gauge semantics).
+    pub fn set(&self, key: &str, v: f64) {
+        self.scalars.lock().unwrap().insert(key.to_string(), v);
+    }
+
+    /// Record a sample into a histogram family.
+    pub fn observe(&self, key: &str, v: f64) {
+        self.hists.lock().unwrap().entry(key.to_string()).or_default().observe(v);
+    }
+
+    /// Merge a pre-aggregated shard (e.g. decoded from a worker STATS
+    /// frame) into a histogram family.
+    pub fn merge_hist(&self, key: &str, shard: &LogHistogram) {
+        self.hists.lock().unwrap().entry(key.to_string()).or_default().merge(shard);
+    }
+
+    /// Snapshot one histogram family (exact key match).
+    pub fn hist(&self, key: &str) -> Option<LogHistogram> {
+        self.hists.lock().unwrap().get(key).cloned()
+    }
+
+    /// Snapshot one scalar.
+    pub fn scalar(&self, key: &str) -> Option<f64> {
+        self.scalars.lock().unwrap().get(key).copied()
+    }
+
+    /// All histogram keys, sorted.
+    pub fn hist_keys(&self) -> Vec<String> {
+        self.hists.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Render the whole registry in Prometheus text exposition format
+    /// 0.0.4 (scalars as gauges, histogram families as summaries).
+    /// Keys are regrouped by family first so each `# TYPE` header is
+    /// emitted exactly once, with its series contiguous.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        let scalars = self.scalars.lock().unwrap().clone();
+        let mut by_fam: BTreeMap<String, Vec<(String, f64)>> = BTreeMap::new();
+        for (key, v) in &scalars {
+            let (fam, labels) = split_key(key);
+            by_fam.entry(fam).or_default().push((render_labels(labels, None), *v));
+        }
+        for (fam, series) in &by_fam {
+            out.push_str(&format!("# TYPE {fam} gauge\n"));
+            for (labels, v) in series {
+                out.push_str(&format!("{fam}{labels} {v}\n"));
+            }
+        }
+        let hists = self.hists.lock().unwrap().clone();
+        let mut by_fam: BTreeMap<String, Vec<(Option<String>, LogHistogram)>> = BTreeMap::new();
+        for (key, h) in &hists {
+            let (fam, labels) = split_key(key);
+            by_fam.entry(fam).or_default().push((labels.map(|s| s.to_string()), h.clone()));
+        }
+        for (fam, series) in &by_fam {
+            out.push_str(&format!("# TYPE {fam} summary\n"));
+            for (labels, h) in series {
+                let labels = labels.as_deref();
+                for q in [0.5, 0.95, 0.99] {
+                    out.push_str(&format!(
+                        "{fam}{} {}\n",
+                        render_labels(labels, Some(("quantile", &format!("{q}")))),
+                        h.quantile(q).unwrap_or(0.0),
+                    ));
+                }
+                let plain = render_labels(labels, None);
+                out.push_str(&format!("{fam}_sum{plain} {}\n", h.sum()));
+                out.push_str(&format!("{fam}_count{plain} {}\n", h.count()));
+            }
+        }
+        out
+    }
+
+    /// Post-hoc JSON snapshot of every histogram family's quantiles —
+    /// what the soak summary and `BENCH_obs.json` read.
+    pub fn quantile_snapshot(&self) -> Json {
+        let hists = self.hists.lock().unwrap();
+        let fields = hists
+            .iter()
+            .map(|(k, h)| {
+                let (p50, p95, p99) = h.p50_p95_p99();
+                (
+                    k.clone(),
+                    Json::obj(vec![
+                        ("count", Json::Num(h.count() as f64)),
+                        ("p50", Json::Num(p50)),
+                        ("p95", Json::Num(p95)),
+                        ("p99", Json::Num(p99)),
+                        ("max", Json::Num(h.max())),
+                    ]),
+                )
+            })
+            .collect();
+        Json::Obj(fields)
+    }
+
+    /// Bind `addr` (e.g. `127.0.0.1:9464`, port 0 for ephemeral) and
+    /// serve `GET /metrics` from a detached thread for the life of the
+    /// process. Returns the bound address.
+    pub fn serve(self: &Arc<Self>, addr: &str) -> Result<SocketAddr> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("metrics listener bind {addr}"))?;
+        let bound = listener.local_addr()?;
+        let hub = Arc::clone(self);
+        std::thread::Builder::new()
+            .name("distca-metrics".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    let Ok(stream) = conn else { continue };
+                    let hub = Arc::clone(&hub);
+                    // One short-lived thread per scrape: scrapers are
+                    // rare (CI curl, `distca top`) and a stuck client
+                    // must not stall the accept loop.
+                    std::thread::spawn(move || {
+                        let _ = serve_one(stream, &hub);
+                    });
+                }
+            })
+            .context("spawn metrics thread")?;
+        Ok(bound)
+    }
+}
+
+/// Handle one HTTP exchange: minimal request parse, text response.
+fn serve_one(mut stream: TcpStream, hub: &MetricsHub) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(5)))?;
+    let mut buf = [0u8; 4096];
+    let mut req = Vec::new();
+    loop {
+        let n = stream.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        req.extend_from_slice(&buf[..n]);
+        if req.windows(4).any(|w| w == b"\r\n\r\n") || req.len() > 65536 {
+            break;
+        }
+    }
+    let line = String::from_utf8_lossy(&req);
+    let path = line.split_whitespace().nth(1).unwrap_or("/");
+    let (status, body) = if path == "/metrics" || path == "/" {
+        ("200 OK", hub.render_prometheus())
+    } else {
+        ("404 Not Found", "not found\n".to_string())
+    };
+    let resp = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len(),
+    );
+    stream.write_all(resp.as_bytes())
+}
+
+/// Fetch `/metrics` from `addr` (`host:port`) with a hand-rolled HTTP
+/// GET; returns the response body.
+pub fn fetch_metrics(addr: &str) -> Result<String> {
+    let addr = addr.trim_start_matches("http://").trim_end_matches('/');
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("connect to metrics endpoint {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(5)))?;
+    stream.write_all(
+        format!("GET /metrics HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n").as_bytes(),
+    )?;
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw)?;
+    let (head, body) = raw
+        .split_once("\r\n\r\n")
+        .context("malformed HTTP response (no header/body split)")?;
+    let status = head.lines().next().unwrap_or("");
+    if !status.contains("200") {
+        bail!("metrics endpoint returned {status:?}");
+    }
+    Ok(body.to_string())
+}
+
+/// One parsed sample line: `(family, labels, value)`.
+pub type Sample = (String, Vec<(String, String)>, f64);
+
+/// Minimal Prometheus text-format parser — enough for `distca top` and
+/// the CI format check: comment lines skipped, `name{labels} value`
+/// lines decoded.
+pub fn parse_prometheus(text: &str) -> Vec<Sample> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (name_part, value_part) = match line.rsplit_once(' ') {
+            Some(p) => p,
+            None => continue,
+        };
+        let Ok(value) = value_part.trim().parse::<f64>() else { continue };
+        let (family, labels) = match name_part.split_once('{') {
+            Some((fam, rest)) => {
+                let rest = rest.trim_end_matches('}');
+                let labels = rest
+                    .split(',')
+                    .filter(|p| !p.is_empty())
+                    .filter_map(|p| {
+                        let (k, v) = p.split_once('=')?;
+                        Some((k.trim().to_string(), v.trim().trim_matches('"').to_string()))
+                    })
+                    .collect();
+                (fam.trim().to_string(), labels)
+            }
+            None => (name_part.trim().to_string(), Vec::new()),
+        };
+        out.push((family, labels, value));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_and_parse_roundtrip() {
+        let hub = MetricsHub::new();
+        hub.add("distca_ticks_total", 3.0);
+        hub.set("distca_alive_servers", 4.0);
+        for i in 1..=100 {
+            hub.observe("distca_task_latency_seconds|tenant=3", i as f64 * 1e-3);
+        }
+        let text = hub.render_prometheus();
+        assert!(text.contains("# TYPE distca_task_latency_seconds summary"), "{text}");
+        assert!(text.contains("# TYPE distca_ticks_total gauge"), "{text}");
+        let samples = parse_prometheus(&text);
+        let p99 = samples
+            .iter()
+            .find(|(f, l, _)| {
+                f == "distca_task_latency_seconds"
+                    && l.contains(&("tenant".into(), "3".into()))
+                    && l.contains(&("quantile".into(), "0.99".into()))
+            })
+            .map(|(_, _, v)| *v)
+            .unwrap();
+        assert!((p99 - 0.099).abs() / 0.099 < 0.02, "p99 {p99}");
+        let count = samples
+            .iter()
+            .find(|(f, _, _)| f == "distca_task_latency_seconds_count")
+            .map(|(_, _, v)| *v)
+            .unwrap();
+        assert_eq!(count, 100.0);
+    }
+
+    #[test]
+    fn dotted_names_are_sanitized() {
+        let hub = MetricsHub::new();
+        hub.add("stats.frames.3", 1.0);
+        let text = hub.render_prometheus();
+        assert!(text.contains("stats_frames_3 1"), "{text}");
+    }
+
+    #[test]
+    fn http_server_serves_the_registry() {
+        let hub = MetricsHub::new();
+        hub.observe("distca_phase_seconds|phase=compute", 0.25);
+        let addr = hub.serve("127.0.0.1:0").unwrap();
+        let body = fetch_metrics(&addr.to_string()).unwrap();
+        assert!(body.contains("distca_phase_seconds_count"), "{body}");
+        // Unknown paths 404 without killing the accept loop.
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"GET /nope HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        s.read_to_string(&mut resp).unwrap();
+        assert!(resp.contains("404"), "{resp}");
+        assert!(fetch_metrics(&addr.to_string()).is_ok());
+    }
+
+    #[test]
+    fn quantile_snapshot_lists_families() {
+        let hub = MetricsHub::new();
+        hub.observe("a", 1.0);
+        hub.observe("a", 2.0);
+        let snap = hub.quantile_snapshot();
+        assert_eq!(snap.get("a").unwrap().get("count").unwrap().as_u64(), Some(2));
+    }
+}

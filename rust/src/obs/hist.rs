@@ -1,0 +1,335 @@
+//! Mergeable log-bucketed latency histograms (HDR/DDSketch-style).
+//!
+//! The repo's distributional claims — "eliminates stragglers", per-class
+//! SLO latency — need percentiles, not means, and they need them both
+//! *live* (the `/metrics` exporter) and *post hoc* (merged across worker
+//! STATS frames after a run). A [`LogHistogram`] supports both from one
+//! representation:
+//!
+//! * **Log-spaced buckets.** Bucket `i >= 1` covers the half-open
+//!   interval `(MIN_V * GAMMA^(i-1), MIN_V * GAMMA^i]`; bucket `0`
+//!   absorbs everything at or below [`MIN_V`] (including zeros and
+//!   negatives, which physical durations never are). With
+//!   `GAMMA = 1.02` and 1408 buckets the range spans ~1 ns to ~20 min —
+//!   every duration the system measures, from an AVX2 inner-loop span
+//!   to a full soak.
+//! * **Bounded relative error.** A quantile query returns the geometric
+//!   midpoint of the selected bucket, clamped into the observed
+//!   `[min, max]`; the true quantile lies inside the same bucket, so the
+//!   relative error is at most `sqrt(GAMMA) - 1 ≈ 1%`. The documented
+//!   (and tested) bound is the conservative [`QUANTILE_REL_ERROR`] = 2%.
+//! * **Exact mergeability.** Buckets are fixed and global, so merging is
+//!   element-wise addition: a histogram merged from per-worker shards is
+//!   *identical* (bit-for-bit, see `tests/prop_obs_hist.rs`) to the
+//!   histogram of the concatenated samples. That is what lets per-worker
+//!   STATS shards roll up into one truthful tail.
+//! * **Bit-exact serialization.** `sum`/`min`/`max` travel as f64 bit
+//!   patterns (hex strings — JSON `f64` numbers cannot carry 2^53+
+//!   integers or NaN payloads), counts as sparse `[bucket, count]`
+//!   pairs; `to_json` → [`LogHistogram::from_json`] round-trips exactly.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// Bucket growth factor: consecutive bucket bounds differ by 2%.
+pub const GAMMA: f64 = 1.02;
+
+/// Lower edge of the tracked range (seconds): 1 ns.
+pub const MIN_V: f64 = 1e-9;
+
+/// Bucket count. `MIN_V * GAMMA^1407 ≈ 1.2e3 s`, so the top regular
+/// bucket ends around 20 minutes; anything larger clamps into it.
+pub const N_BUCKETS: usize = 1408;
+
+/// The documented quantile relative-error bound. The geometric-midpoint
+/// estimate is within `sqrt(GAMMA) - 1 ≈ 0.995%` of the true quantile
+/// for in-range values; 2% leaves headroom and is the bound the
+/// property tests enforce across magnitudes.
+pub const QUANTILE_REL_ERROR: f64 = 0.02;
+
+/// A mergeable log-bucketed histogram of non-negative samples
+/// (seconds, by convention — but any unit works, the buckets are
+/// relative).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Bucket index for a sample value.
+fn bucket_index(v: f64) -> usize {
+    if !(v > MIN_V) {
+        // NaN, negatives, zero, and sub-ns all land in the floor bucket.
+        return 0;
+    }
+    let i = ((v / MIN_V).ln() / GAMMA.ln()).ceil() as isize;
+    (i.max(1) as usize).min(N_BUCKETS - 1)
+}
+
+/// Representative value for a bucket: the geometric midpoint of its
+/// bounds (the floor bucket reports its upper edge, `MIN_V`).
+fn bucket_value(i: usize) -> f64 {
+    if i == 0 {
+        MIN_V
+    } else {
+        MIN_V * GAMMA.powi(i as i32) / GAMMA.sqrt()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        LogHistogram {
+            counts: vec![0; N_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Record one sample.
+    pub fn observe(&mut self, v: f64) {
+        let v = if v.is_finite() { v.max(0.0) } else { 0.0 };
+        self.counts[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Fold `other` into `self`. Because buckets are fixed and global,
+    /// this is exact: merge(shard_a, shard_b) == histogram(a ++ b).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum / self.count as f64 }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.max }
+    }
+
+    /// The `q`-quantile (`q` in `[0, 1]`), or `None` when empty. The
+    /// estimate is within [`QUANTILE_REL_ERROR`] of the true sample
+    /// quantile (nearest-rank definition) for values above [`MIN_V`].
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        let q = q.clamp(0.0, 1.0);
+        // Nearest-rank: the smallest value whose cumulative count
+        // reaches ceil(q * N) (rank >= 1).
+        let target = ((q * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Some(bucket_value(i).clamp(self.min, self.max));
+            }
+        }
+        Some(self.max)
+    }
+
+    /// Convenience: `(p50, p95, p99)`, zeros when empty.
+    pub fn p50_p95_p99(&self) -> (f64, f64, f64) {
+        (
+            self.quantile(0.50).unwrap_or(0.0),
+            self.quantile(0.95).unwrap_or(0.0),
+            self.quantile(0.99).unwrap_or(0.0),
+        )
+    }
+
+    /// Bit-exact serialization: sparse `[bucket, count]` pairs plus the
+    /// f64 bit patterns of `sum`/`min`/`max` as 16-digit hex strings.
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| {
+                Json::Arr(vec![Json::Num(i as f64), Json::Num(c as f64)])
+            })
+            .collect();
+        Json::obj(vec![
+            ("v", Json::Num(1.0)),
+            ("count", Json::Num(self.count as f64)),
+            ("sum_bits", Json::Str(format!("{:016x}", self.sum.to_bits()))),
+            ("min_bits", Json::Str(format!("{:016x}", self.min.to_bits()))),
+            ("max_bits", Json::Str(format!("{:016x}", self.max.to_bits()))),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+
+    /// Inverse of [`LogHistogram::to_json`].
+    pub fn from_json(v: &Json) -> Result<LogHistogram> {
+        let ver = v.get("v").and_then(Json::as_u64).unwrap_or(0);
+        if ver != 1 {
+            bail!("unsupported histogram version {ver}");
+        }
+        let bits = |key: &str| -> Result<f64> {
+            let s = v
+                .get(key)
+                .and_then(Json::as_str)
+                .with_context(|| format!("histogram missing `{key}`"))?;
+            let b = u64::from_str_radix(s, 16)
+                .with_context(|| format!("bad hex in `{key}`: {s:?}"))?;
+            Ok(f64::from_bits(b))
+        };
+        let mut h = LogHistogram::new();
+        h.count = v
+            .get("count")
+            .and_then(Json::as_u64)
+            .context("histogram missing `count`")?;
+        h.sum = bits("sum_bits")?;
+        h.min = bits("min_bits")?;
+        h.max = bits("max_bits")?;
+        let buckets = v
+            .get("buckets")
+            .and_then(Json::as_arr)
+            .context("histogram missing `buckets`")?;
+        let mut folded = 0u64;
+        for b in buckets {
+            let pair = b.as_arr().context("bucket entry is not a pair")?;
+            let (i, c) = match pair {
+                [i, c] => (
+                    i.as_usize().context("bucket index")?,
+                    c.as_u64().context("bucket count")?,
+                ),
+                _ => bail!("bucket entry is not a [index, count] pair"),
+            };
+            if i >= N_BUCKETS {
+                bail!("bucket index {i} out of range");
+            }
+            h.counts[i] += c;
+            folded += c;
+        }
+        if folded != h.count {
+            bail!("histogram count {} != bucket total {folded}", h.count);
+        }
+        Ok(h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_is_well_behaved() {
+        let h = LogHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), None);
+        assert_eq!(h.p50_p95_p99(), (0.0, 0.0, 0.0));
+        assert_eq!(h.mean(), 0.0);
+        let back = LogHistogram::from_json(&h.to_json()).unwrap();
+        assert_eq!(back, h);
+    }
+
+    #[test]
+    fn single_sample_quantiles_hit_the_sample() {
+        let mut h = LogHistogram::new();
+        h.observe(0.125);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            let est = h.quantile(q).unwrap();
+            let rel = (est - 0.125).abs() / 0.125;
+            assert!(rel <= QUANTILE_REL_ERROR, "q={q}: est {est}, rel {rel}");
+        }
+    }
+
+    #[test]
+    fn quantile_error_bound_on_a_known_ladder() {
+        // 1..=1000 ms: true p50 = 0.500 s, p99 = 0.990 s.
+        let mut h = LogHistogram::new();
+        for i in 1..=1000 {
+            h.observe(i as f64 * 1e-3);
+        }
+        for (q, truth) in [(0.50, 0.500), (0.95, 0.950), (0.99, 0.990)] {
+            let est = h.quantile(q).unwrap();
+            assert!(
+                (est - truth).abs() / truth <= QUANTILE_REL_ERROR,
+                "q={q}: est {est} vs {truth}"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_is_elementwise_exact() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut whole = LogHistogram::new();
+        for i in 0..100 {
+            let v = 1e-6 * (i + 1) as f64;
+            if i % 2 == 0 { a.observe(v) } else { b.observe(v) }
+            whole.observe(v);
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged.counts, whole.counts);
+        assert_eq!(merged.count, whole.count);
+        assert_eq!(merged.min.to_bits(), whole.min.to_bits());
+        assert_eq!(merged.max.to_bits(), whole.max.to_bits());
+    }
+
+    #[test]
+    fn zeros_and_subnormal_values_hit_the_floor_bucket() {
+        let mut h = LogHistogram::new();
+        h.observe(0.0);
+        h.observe(-3.0); // clamped: durations are never negative
+        h.observe(1e-12);
+        h.observe(f64::NAN);
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.counts[0], 4);
+    }
+
+    #[test]
+    fn huge_values_clamp_into_the_top_bucket() {
+        let mut h = LogHistogram::new();
+        h.observe(1e9); // ~31 years, way past the 20-min top edge
+        assert_eq!(h.counts[N_BUCKETS - 1], 1);
+        // The clamp into [min, max] keeps the estimate truthful even
+        // for out-of-range samples.
+        assert_eq!(h.quantile(1.0), Some(1e9));
+    }
+
+    #[test]
+    fn serialization_rejects_malformed_documents() {
+        let mut h = LogHistogram::new();
+        h.observe(1.0);
+        let good = h.to_json();
+        assert_eq!(LogHistogram::from_json(&good).unwrap(), h);
+        let bad = crate::util::json::parse(r#"{"v":1,"count":5,"buckets":[]}"#).unwrap();
+        assert!(LogHistogram::from_json(&bad).is_err());
+        let wrong_ver = crate::util::json::parse(r#"{"v":9}"#).unwrap();
+        assert!(LogHistogram::from_json(&wrong_ver).is_err());
+    }
+}

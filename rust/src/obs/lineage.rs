@@ -1,0 +1,418 @@
+//! Per-CA-task causal lineage: the event trail that answers *why* a
+//! specific task was slow.
+//!
+//! The PR-6 span plane aggregates per tick; the paper's straggler claim
+//! is per *task*. Every task now leaves a causal trace through the
+//! recorder:
+//!
+//! ```text
+//! planned(server, cost)
+//!   → dispatched(server, trace_id)          // one per physical send
+//!   → redispatched(from, to, reason, hop)   // reason: kill|drain|oom|speculative
+//!   → completed(server, latency) | stale-deduped(server)
+//! ```
+//!
+//! Events are recorded at exactly the sites that bump the corresponding
+//! [`crate::elastic::failover::TickStats`] counters, so per-tick hop
+//! totals by reason equal `oom_evicted` / `drain_redirected` /
+//! `send_failovers` / `redispatched` by construction — the conformance
+//! suite holds that equality.
+//!
+//! On the TCP fabric each physical dispatch additionally carries a
+//! compact wire **trace id** in the DCA3 frame header, echoed by the
+//! worker on its response ([`crate::net::codec`]); the serve loop feeds
+//! the echoes back as [`LineageStage::WireEcho`] events, attributing a
+//! completion to the exact dispatch hop that produced it (under
+//! first-response-wins dedup the *original* dispatch can win even after
+//! a speculative re-dispatch — the echo is how the report can tell).
+//!
+//! The whole log serializes into the Chrome-trace sidecar
+//! ([`crate::obs::trace`]), and `distca report --lineage` reconstructs
+//! each task's journey ([`journeys`]) into a straggler root-cause
+//! table.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Why a task was sent a second (or third…) time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RedispatchReason {
+    /// A dead connection surfaced by a failed send (the send-failover
+    /// path): the destination was killed under the task.
+    Kill,
+    /// The planned server is draining; the unstarted tail of its queue
+    /// is redirected.
+    Drain,
+    /// The destination's arena overflowed; the evicted tail is re-sent
+    /// to servers with headroom.
+    Oom,
+    /// A gather-deadline suspicion: the holder went quiet past its
+    /// size-scaled deadline and the task was speculatively re-sent.
+    Speculative,
+}
+
+impl RedispatchReason {
+    pub fn name(self) -> &'static str {
+        match self {
+            RedispatchReason::Kill => "kill",
+            RedispatchReason::Drain => "drain",
+            RedispatchReason::Oom => "oom",
+            RedispatchReason::Speculative => "speculative",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        Some(match s {
+            "kill" => RedispatchReason::Kill,
+            "drain" => RedispatchReason::Drain,
+            "oom" => RedispatchReason::Oom,
+            "speculative" => RedispatchReason::Speculative,
+            _ => return None,
+        })
+    }
+
+    pub const ALL: [RedispatchReason; 4] = [
+        RedispatchReason::Kill,
+        RedispatchReason::Drain,
+        RedispatchReason::Oom,
+        RedispatchReason::Speculative,
+    ];
+}
+
+/// One step in a task's journey.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LineageStage {
+    /// The plan assigned this task to `server`; `cost_pairs` is the
+    /// predicted cost (`q_len × kv_len` causal pairs) the balancer
+    /// planned against.
+    Planned { server: usize, cost_pairs: f64 },
+    /// One physical send landed the task's bytes at `server`. `trace`
+    /// is the wire trace id stamped into the DCA3 frame header (0 on
+    /// in-process fabrics, which need no wire stamp).
+    Dispatched { server: usize, trace: u64 },
+    /// The task was sent again: `hop` is 1 for the first re-dispatch
+    /// of the task within its tick, 2 for the second, …
+    Redispatched { from: usize, to: usize, reason: RedispatchReason, hop: u32 },
+    /// First kept response, from `server`, `latency_s` after the
+    /// task's most recent dispatch.
+    Completed { server: usize, latency_s: f64 },
+    /// A duplicate response suppressed by first-response-wins dedup.
+    StaleDeduped { server: usize },
+    /// The worker-echoed wire trace id observed on the winning
+    /// response frame (TCP path only): names the dispatch that won.
+    WireEcho { trace: u64 },
+}
+
+impl LineageStage {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LineageStage::Planned { .. } => "planned",
+            LineageStage::Dispatched { .. } => "dispatched",
+            LineageStage::Redispatched { .. } => "redispatched",
+            LineageStage::Completed { .. } => "completed",
+            LineageStage::StaleDeduped { .. } => "stale-deduped",
+            LineageStage::WireEcho { .. } => "wire-echo",
+        }
+    }
+}
+
+/// One lineage event: a task (`tag`) hit `stage` at recorder time
+/// `t_s`, during `tick`/`wave`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LineageEvent {
+    pub tick: usize,
+    pub wave: usize,
+    pub tag: u64,
+    pub t_s: f64,
+    pub stage: LineageStage,
+}
+
+impl LineageEvent {
+    /// Sidecar serialization. The tag is hex — task tags use up to 62
+    /// bits and a JSON `f64` is exact only to 2^53.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("ev", Json::Str(self.stage.name().into())),
+            ("tick", Json::Num(self.tick as f64)),
+            ("wave", Json::Num(self.wave as f64)),
+            ("tag", Json::Str(format!("{:016x}", self.tag))),
+            ("t_s", Json::Num(self.t_s)),
+        ];
+        match &self.stage {
+            LineageStage::Planned { server, cost_pairs } => {
+                fields.push(("server", Json::Num(*server as f64)));
+                fields.push(("cost_pairs", Json::Num(*cost_pairs)));
+            }
+            LineageStage::Dispatched { server, trace } => {
+                fields.push(("server", Json::Num(*server as f64)));
+                fields.push(("trace", Json::Str(format!("{trace:016x}"))));
+            }
+            LineageStage::Redispatched { from, to, reason, hop } => {
+                fields.push(("from", Json::Num(*from as f64)));
+                fields.push(("to", Json::Num(*to as f64)));
+                fields.push(("reason", Json::Str(reason.name().into())));
+                fields.push(("hop", Json::Num(*hop as f64)));
+            }
+            LineageStage::Completed { server, latency_s } => {
+                fields.push(("server", Json::Num(*server as f64)));
+                fields.push(("latency_s", Json::Num(*latency_s)));
+            }
+            LineageStage::StaleDeduped { server } => {
+                fields.push(("server", Json::Num(*server as f64)));
+            }
+            LineageStage::WireEcho { trace } => {
+                fields.push(("trace", Json::Str(format!("{trace:016x}"))));
+            }
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(v: &Json) -> Result<LineageEvent> {
+        let ev = v.req("ev")?.as_str().context("`ev` is not a string")?.to_string();
+        let num = |key: &str| -> Result<f64> {
+            v.req(key)?.as_f64().with_context(|| format!("`{key}` is not a number"))
+        };
+        let srv = |key: &str| -> Result<usize> { Ok(num(key)? as usize) };
+        let hex = |key: &str| -> Result<u64> {
+            let s = v.req(key)?.as_str().with_context(|| format!("`{key}` is not a string"))?;
+            u64::from_str_radix(s, 16).with_context(|| format!("bad hex in `{key}`: {s:?}"))
+        };
+        let stage = match ev.as_str() {
+            "planned" => LineageStage::Planned {
+                server: srv("server")?,
+                cost_pairs: num("cost_pairs")?,
+            },
+            "dispatched" => {
+                LineageStage::Dispatched { server: srv("server")?, trace: hex("trace")? }
+            }
+            "redispatched" => LineageStage::Redispatched {
+                from: srv("from")?,
+                to: srv("to")?,
+                reason: RedispatchReason::from_name(
+                    v.req("reason")?.as_str().context("`reason` is not a string")?,
+                )
+                .context("unknown redispatch reason")?,
+                hop: num("hop")? as u32,
+            },
+            "completed" => LineageStage::Completed {
+                server: srv("server")?,
+                latency_s: num("latency_s")?,
+            },
+            "stale-deduped" => LineageStage::StaleDeduped { server: srv("server")? },
+            "wire-echo" => LineageStage::WireEcho { trace: hex("trace")? },
+            other => bail!("unknown lineage event kind {other:?}"),
+        };
+        Ok(LineageEvent {
+            tick: num("tick")? as usize,
+            wave: num("wave")? as usize,
+            tag: hex("tag")?,
+            t_s: num("t_s")?,
+            stage,
+        })
+    }
+}
+
+/// A task's reconstructed journey: the per-task row `report --lineage`
+/// renders and the conformance suite audits against `TickStats`.
+#[derive(Debug, Clone, Default)]
+pub struct TaskJourney {
+    pub tick: usize,
+    pub wave: usize,
+    pub tag: u64,
+    /// Plan-time assignment (first `planned` event), if recorded.
+    pub planned_server: Option<usize>,
+    pub cost_pairs: f64,
+    /// Every physical send, in order: `(server, wire trace id)`.
+    pub dispatches: Vec<(usize, u64)>,
+    /// Every re-dispatch, in order.
+    pub redispatches: Vec<(RedispatchReason, usize, usize, u32)>,
+    /// `(server, latency_s)` of the first kept response.
+    pub completed: Option<(usize, f64)>,
+    /// Duplicate responses suppressed by dedup.
+    pub stale_duplicates: u32,
+    /// Worker-echoed trace id on the winning response (TCP path).
+    pub winning_trace: Option<u64>,
+}
+
+impl TaskJourney {
+    /// Hop count: number of re-dispatches this task suffered.
+    pub fn hops(&self) -> u32 {
+        self.redispatches.len() as u32
+    }
+
+    /// Short human rendering of the re-dispatch chain, e.g.
+    /// `"kill→speculative"`.
+    pub fn reason_chain(&self) -> String {
+        if self.redispatches.is_empty() {
+            return "-".into();
+        }
+        self.redispatches
+            .iter()
+            .map(|(r, _, _, _)| r.name())
+            .collect::<Vec<_>>()
+            .join("\u{2192}")
+    }
+
+    /// Which dispatch won, if the wire echo identified it: index into
+    /// `dispatches` (0 = the original send).
+    pub fn winning_hop(&self) -> Option<usize> {
+        let t = self.winning_trace?;
+        self.dispatches.iter().position(|&(_, tr)| tr == t)
+    }
+}
+
+/// Group a lineage log into per-`(tick, tag)` journeys, ordered by
+/// (tick, tag).
+pub fn journeys(events: &[LineageEvent]) -> Vec<TaskJourney> {
+    let mut map: BTreeMap<(usize, u64), TaskJourney> = BTreeMap::new();
+    for ev in events {
+        let j = map.entry((ev.tick, ev.tag)).or_insert_with(|| TaskJourney {
+            tick: ev.tick,
+            wave: ev.wave,
+            tag: ev.tag,
+            ..TaskJourney::default()
+        });
+        match &ev.stage {
+            LineageStage::Planned { server, cost_pairs } => {
+                if j.planned_server.is_none() {
+                    j.planned_server = Some(*server);
+                }
+                j.cost_pairs = *cost_pairs;
+            }
+            LineageStage::Dispatched { server, trace } => {
+                j.dispatches.push((*server, *trace));
+            }
+            LineageStage::Redispatched { from, to, reason, hop } => {
+                j.wave = ev.wave;
+                j.redispatches.push((*reason, *from, *to, *hop));
+            }
+            LineageStage::Completed { server, latency_s } => {
+                if j.completed.is_none() {
+                    j.completed = Some((*server, *latency_s));
+                }
+            }
+            LineageStage::StaleDeduped { .. } => j.stale_duplicates += 1,
+            LineageStage::WireEcho { trace } => {
+                if j.winning_trace.is_none() && *trace != 0 {
+                    j.winning_trace = Some(*trace);
+                }
+            }
+        }
+    }
+    map.into_values().collect()
+}
+
+/// Per-tick re-dispatch totals by reason, derived from the lineage log
+/// — the numbers that must equal the `TickStats` counters.
+pub fn hop_totals(events: &[LineageEvent]) -> BTreeMap<usize, BTreeMap<RedispatchReason, u64>> {
+    let mut out: BTreeMap<usize, BTreeMap<RedispatchReason, u64>> = BTreeMap::new();
+    for ev in events {
+        if let LineageStage::Redispatched { reason, .. } = ev.stage {
+            *out.entry(ev.tick).or_default().entry(reason).or_insert(0) += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<LineageEvent> {
+        vec![
+            LineageEvent {
+                tick: 3,
+                wave: 0,
+                tag: 0x2000_0001_0000_0040,
+                t_s: 0.001,
+                stage: LineageStage::Planned { server: 1, cost_pairs: 4096.0 },
+            },
+            LineageEvent {
+                tick: 3,
+                wave: 0,
+                tag: 0x2000_0001_0000_0040,
+                t_s: 0.002,
+                stage: LineageStage::Dispatched { server: 1, trace: 7 },
+            },
+            LineageEvent {
+                tick: 3,
+                wave: 0,
+                tag: 0x2000_0001_0000_0040,
+                t_s: 0.050,
+                stage: LineageStage::Redispatched {
+                    from: 1,
+                    to: 2,
+                    reason: RedispatchReason::Speculative,
+                    hop: 1,
+                },
+            },
+            LineageEvent {
+                tick: 3,
+                wave: 0,
+                tag: 0x2000_0001_0000_0040,
+                t_s: 0.051,
+                stage: LineageStage::Dispatched { server: 2, trace: 8 },
+            },
+            LineageEvent {
+                tick: 3,
+                wave: 0,
+                tag: 0x2000_0001_0000_0040,
+                t_s: 0.060,
+                stage: LineageStage::Completed { server: 2, latency_s: 0.009 },
+            },
+            LineageEvent {
+                tick: 3,
+                wave: 0,
+                tag: 0x2000_0001_0000_0040,
+                t_s: 0.070,
+                stage: LineageStage::StaleDeduped { server: 1 },
+            },
+            LineageEvent {
+                tick: 3,
+                wave: 0,
+                tag: 0x2000_0001_0000_0040,
+                t_s: 0.061,
+                stage: LineageStage::WireEcho { trace: 8 },
+            },
+        ]
+    }
+
+    #[test]
+    fn events_roundtrip_through_json() {
+        for ev in sample_events() {
+            let back = LineageEvent::from_json(&ev.to_json()).unwrap();
+            assert_eq!(back, ev);
+        }
+    }
+
+    #[test]
+    fn journeys_reconstruct_the_chain() {
+        let js = journeys(&sample_events());
+        assert_eq!(js.len(), 1);
+        let j = &js[0];
+        assert_eq!(j.planned_server, Some(1));
+        assert_eq!(j.dispatches, vec![(1, 7), (2, 8)]);
+        assert_eq!(j.hops(), 1);
+        assert_eq!(j.reason_chain(), "speculative");
+        assert_eq!(j.completed, Some((2, 0.009)));
+        assert_eq!(j.stale_duplicates, 1);
+        assert_eq!(j.winning_hop(), Some(1));
+    }
+
+    #[test]
+    fn hop_totals_group_by_tick_and_reason() {
+        let totals = hop_totals(&sample_events());
+        assert_eq!(totals[&3][&RedispatchReason::Speculative], 1);
+        assert_eq!(totals[&3].get(&RedispatchReason::Kill), None);
+    }
+
+    #[test]
+    fn unknown_event_kinds_are_rejected() {
+        let v = crate::util::json::parse(
+            r#"{"ev":"teleported","tick":0,"wave":0,"tag":"00","t_s":0}"#,
+        )
+        .unwrap();
+        assert!(LineageEvent::from_json(&v).is_err());
+    }
+}

@@ -44,9 +44,13 @@
 //! clock (the acceptance bound is ±5%; the identity gives ~0).
 
 pub mod drift;
+pub mod export;
+pub mod hist;
+pub mod lineage;
 pub mod report;
 pub mod trace;
 
+use lineage::{LineageEvent, LineageStage, RedispatchReason};
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -221,6 +225,11 @@ struct Inner {
     /// Freeform spans pushed directly (simulator paths).
     spans: Vec<Span>,
     counters: BTreeMap<String, f64>,
+    /// Per-task causal trace ([`lineage`]).
+    lineage: Vec<LineageEvent>,
+    /// Re-dispatch hop counters keyed `(tick, tag)` — assigns the `hop`
+    /// ordinal so callers don't have to thread per-task state.
+    hops: BTreeMap<(usize, u64), u32>,
 }
 
 /// The tracing/metrics collector every execution path reports into.
@@ -232,6 +241,10 @@ pub struct Recorder {
     /// a trace file is self-contained. `None` for virtual clocks.
     epoch: Option<Instant>,
     inner: Mutex<Inner>,
+    /// Optional live-metrics hub ([`export::MetricsHub`]): when armed,
+    /// completions, phase durations, and counters are mirrored into
+    /// the Prometheus registry as they happen.
+    hub: Mutex<Option<Arc<export::MetricsHub>>>,
 }
 
 impl Recorder {
@@ -241,6 +254,7 @@ impl Recorder {
             clock: ClockSource::Wall,
             epoch: Some(Instant::now()),
             inner: Mutex::new(Inner::default()),
+            hub: Mutex::new(None),
         })
     }
 
@@ -250,7 +264,24 @@ impl Recorder {
             clock: ClockSource::Virtual,
             epoch: None,
             inner: Mutex::new(Inner::default()),
+            hub: Mutex::new(None),
         })
+    }
+
+    /// Mirror subsequent observations into a live-metrics hub.
+    pub fn set_hub(&self, hub: Arc<export::MetricsHub>) {
+        *self.hub.lock().unwrap() = Some(hub);
+    }
+
+    /// The attached hub, if any.
+    pub fn hub(&self) -> Option<Arc<export::MetricsHub>> {
+        self.hub.lock().unwrap().clone()
+    }
+
+    /// Lineage timestamp: wall seconds since the epoch, or `0.0` on a
+    /// virtual recorder (sim paths order events by sequence, not time).
+    fn t_now(&self) -> f64 {
+        self.epoch.map(|e| e.elapsed().as_secs_f64()).unwrap_or(0.0)
     }
 
     pub fn clock(&self) -> ClockSource {
@@ -287,12 +318,17 @@ impl Recorder {
     /// Aggregate seconds a coordinator-side phase took this tick
     /// (`Plan` or `Dispatch`; other phases are derived or per-task).
     pub fn phase_seconds(&self, tick: usize, phase: Phase, dur_s: f64) {
-        let mut g = self.inner.lock().unwrap();
-        let t = g.ticks.entry(tick).or_default();
-        match phase {
-            Phase::Plan => t.plan_s += dur_s,
-            Phase::Dispatch => t.dispatch_s += dur_s,
-            _ => {}
+        {
+            let mut g = self.inner.lock().unwrap();
+            let t = g.ticks.entry(tick).or_default();
+            match phase {
+                Phase::Plan => t.plan_s += dur_s,
+                Phase::Dispatch => t.dispatch_s += dur_s,
+                _ => {}
+            }
+        }
+        if let Some(hub) = self.hub() {
+            hub.observe(&format!("distca_phase_seconds|phase={}", phase.name()), dur_s);
         }
     }
 
@@ -309,12 +345,31 @@ impl Recorder {
         latency_s: f64,
     ) {
         let receipt_s = self.now();
-        let mut g = self.inner.lock().unwrap();
-        g.ticks
-            .entry(tick)
-            .or_default()
-            .tasks
-            .push(TaskObs { tag, server, wave, latency_s, receipt_s });
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.ticks
+                .entry(tick)
+                .or_default()
+                .tasks
+                .push(TaskObs { tag, server, wave, latency_s, receipt_s });
+        }
+        self.lineage(LineageEvent {
+            tick,
+            wave,
+            tag,
+            t_s: receipt_s,
+            stage: LineageStage::Completed { server, latency_s },
+        });
+        if let Some(hub) = self.hub() {
+            hub.observe("distca_task_latency_seconds", latency_s);
+            let tenant = crate::server::tag_wire_tenant(tag);
+            if tenant > 0 {
+                hub.observe(
+                    &format!("distca_task_latency_seconds|tenant={}", tenant - 1),
+                    latency_s,
+                );
+            }
+        }
     }
 
     /// A suspect's task was cancelled and re-sent `from → to`.
@@ -331,6 +386,97 @@ impl Recorder {
             dur_s: 0.0,
         });
         *g.counters.entry(format!("redispatch.from.{from}")).or_insert(0.0) += 1.0;
+    }
+
+    /// Append a raw lineage event ([`lineage`]).
+    pub fn lineage(&self, ev: LineageEvent) {
+        self.inner.lock().unwrap().lineage.push(ev);
+    }
+
+    /// `planned(server, cost)` — the balancer assigned `tag` to
+    /// `server` with predicted cost `cost_pairs` causal pairs.
+    pub fn lineage_planned(&self, tick: usize, tag: u64, server: usize, cost_pairs: f64) {
+        self.lineage(LineageEvent {
+            tick,
+            wave: 0,
+            tag,
+            t_s: self.t_now(),
+            stage: LineageStage::Planned { server, cost_pairs },
+        });
+    }
+
+    /// `dispatched(server)` — one physical send landed `tag`'s bytes at
+    /// `server`, stamped with wire trace id `trace` (0 off-wire).
+    pub fn lineage_dispatched(&self, tick: usize, wave: usize, tag: u64, server: usize, trace: u64) {
+        self.lineage(LineageEvent {
+            tick,
+            wave,
+            tag,
+            t_s: self.t_now(),
+            stage: LineageStage::Dispatched { server, trace },
+        });
+    }
+
+    /// `redispatched(reason, hop)` — `tag` was sent again `from → to`.
+    /// The hop ordinal (1 = first re-dispatch of this task within its
+    /// tick) is assigned here, so call sites stay stateless; every call
+    /// MUST be adjacent to the `TickStats` counter bump for `reason`,
+    /// which is what keeps lineage hop totals equal to the counters.
+    pub fn lineage_redispatched(
+        &self,
+        tick: usize,
+        wave: usize,
+        tag: u64,
+        from: usize,
+        to: usize,
+        reason: RedispatchReason,
+    ) -> u32 {
+        let (hop, t_s) = {
+            let mut g = self.inner.lock().unwrap();
+            let hop = g.hops.entry((tick, tag)).or_insert(0);
+            *hop += 1;
+            (*hop, self.t_now())
+        };
+        self.lineage(LineageEvent {
+            tick,
+            wave,
+            tag,
+            t_s,
+            stage: LineageStage::Redispatched { from, to, reason, hop },
+        });
+        if let Some(hub) = self.hub() {
+            hub.add(&format!("distca_redispatch_total|reason={}", reason.name()), 1.0);
+        }
+        hop
+    }
+
+    /// `stale-deduped` — a duplicate response from `server` suppressed
+    /// by first-response-wins dedup.
+    pub fn lineage_stale(&self, tick: usize, wave: usize, tag: u64, server: usize) {
+        self.lineage(LineageEvent {
+            tick,
+            wave,
+            tag,
+            t_s: self.t_now(),
+            stage: LineageStage::StaleDeduped { server },
+        });
+    }
+
+    /// The worker-echoed wire trace id observed on `tag`'s winning
+    /// response (TCP path; see [`crate::net::codec`]).
+    pub fn lineage_wire_echo(&self, tick: usize, tag: u64, trace: u64) {
+        self.lineage(LineageEvent {
+            tick,
+            wave: 0,
+            tag,
+            t_s: self.t_now(),
+            stage: LineageStage::WireEcho { trace },
+        });
+    }
+
+    /// Snapshot of the lineage log, in recording order.
+    pub fn lineage_events(&self) -> Vec<LineageEvent> {
+        self.inner.lock().unwrap().lineage.clone()
     }
 
     /// Worker-measured kernel seconds for `(tick, tag)` — refines the
@@ -357,6 +503,9 @@ impl Recorder {
     /// Bump a named counter.
     pub fn counter(&self, name: &str, delta: f64) {
         *self.inner.lock().unwrap().counters.entry(name.to_string()).or_insert(0.0) += delta;
+        if let Some(hub) = self.hub() {
+            hub.add(&format!("distca_counter_total|name={name}"), delta);
+        }
     }
 
     /// Counter snapshot (sorted by name).
@@ -606,6 +755,36 @@ mod tests {
         let g = r.inner.lock().unwrap();
         assert!(!g.compute.contains_key(&(0, 1)));
         assert_eq!(g.compute.get(&(0, 2)), Some(&0.25));
+    }
+
+    #[test]
+    fn lineage_hops_are_assigned_per_task_per_tick() {
+        let r = Recorder::new_wall();
+        let tag = 0x40u64;
+        r.lineage_planned(0, tag, 1, 64.0);
+        r.lineage_dispatched(0, 0, tag, 1, 0);
+        assert_eq!(r.lineage_redispatched(0, 0, tag, 1, 2, RedispatchReason::Speculative), 1);
+        assert_eq!(r.lineage_redispatched(0, 0, tag, 2, 3, RedispatchReason::Kill), 2);
+        // A different tick restarts the ordinal.
+        assert_eq!(r.lineage_redispatched(1, 0, tag, 1, 2, RedispatchReason::Oom), 1);
+        let events = r.lineage_events();
+        assert_eq!(events.len(), 5);
+        let js = lineage::journeys(&events);
+        assert_eq!(js.len(), 2);
+        assert_eq!(js[0].hops(), 2);
+        assert_eq!(js[0].reason_chain(), "speculative\u{2192}kill");
+    }
+
+    #[test]
+    fn completions_feed_the_metrics_hub() {
+        let r = Recorder::new_wall();
+        let hub = export::MetricsHub::new();
+        r.set_hub(Arc::clone(&hub));
+        r.tick_begin(0);
+        r.task_completed(0, 0, 1, 0x40, 0.002);
+        r.counter("stats.frames.1", 1.0);
+        assert_eq!(hub.hist("distca_task_latency_seconds").unwrap().count(), 1);
+        assert_eq!(hub.scalar("distca_counter_total|name=stats.frames.1"), Some(1.0));
     }
 
     #[test]

@@ -29,6 +29,7 @@ use anyhow::Result;
 use crate::util::json::Json;
 use crate::util::tables::{bytes, f, secs, Table};
 
+use super::lineage::{self, RedispatchReason};
 use super::trace::TraceFile;
 use super::{ClockSource, Phase};
 
@@ -125,6 +126,15 @@ pub fn breakdown(trace: &TraceFile) -> Result<TraceReport> {
             }
         }
     }
+    // A trace with zero complete ticks (no `tick` container spans)
+    // would render an empty table that reads as "nothing was slow".
+    // Refuse it instead: the run died before its first tick completed,
+    // or the wrong file was passed.
+    anyhow::ensure!(
+        !tick_s.is_empty(),
+        "trace contains no complete ticks — the run exited before its first tick \
+         finished (or this is not a distca trace file); nothing to report"
+    );
     let mut ticks = Vec::new();
     for (&tick, &dur) in &tick_s {
         let servers: Vec<ServerPhases> =
@@ -267,6 +277,7 @@ pub fn render_gateway_accounting(rows: &[Json], top: usize) -> Result<String> {
     let mut saturated = 0usize;
     let mut max_backlog = 0.0f64;
     let mut admitted_total = 0.0f64;
+    let mut breaches = 0usize;
     for r in rows {
         match r.get("kind").and_then(Json::as_str) {
             Some("tenant") => tenants.push(r),
@@ -278,6 +289,7 @@ pub fn render_gateway_accounting(rows: &[Json], top: usize) -> Result<String> {
                 max_backlog = max_backlog.max(num(r, "backlog")?);
                 admitted_total += num(r, "admitted")?;
             }
+            Some("breach") => breaches += 1,
             Some("flush") => {}
             other => anyhow::bail!("unknown accounting row kind {other:?}"),
         }
@@ -315,10 +327,144 @@ pub fn render_gateway_accounting(rows: &[Json], top: usize) -> Result<String> {
         ]);
     }
     Ok(format!(
-        "{}\n{waves} waves ({saturated} saturated, max backlog {}) | {} tasks admitted",
+        "{}\n{waves} waves ({saturated} saturated, max backlog {}) | {} tasks admitted \
+         | {breaches} SLO latency breaches",
         t.render(),
         max_backlog as u64,
         admitted_total as u64,
+    ))
+}
+
+/// Render the straggler root-cause table from the trace's lineage
+/// sidecar: the top-`top` most troubled task journeys (sorted by hop
+/// count, then by how far the actual latency overran the size-predicted
+/// share), each attributed to a root cause — re-dispatch chain, gray
+/// server (observed speed well under belief), wire-wait domination, or
+/// an under-predicting cost model — plus per-tick re-dispatch totals by
+/// reason, which must equal the `TickStats` counters.
+pub fn render_lineage(trace: &TraceFile, top: usize) -> Result<String> {
+    anyhow::ensure!(
+        !trace.lineage.is_empty(),
+        "trace has no lineage events — the run predates the lineage sidecar, or tracing \
+         was not armed; re-run serve/soak with --trace-out to record task lineage"
+    );
+    let js = lineage::journeys(&trace.lineage);
+    // Per-(tick, server) wire-wait seconds from the span log.
+    let mut wire: BTreeMap<(usize, usize), f64> = BTreeMap::new();
+    for s in &trace.spans {
+        if s.phase == Phase::WireWait {
+            if let Some(srv) = s.server {
+                *wire.entry((s.tick, srv)).or_insert(0.0) += s.dur_s;
+            }
+        }
+    }
+    // Gray servers: a sidecar speed sample whose observation fell well
+    // below the coordinator's belief marks the rank gray for that tick.
+    let mut gray: std::collections::BTreeSet<(usize, usize)> = Default::default();
+    for &(tick, server, believed, observed) in &trace.speeds {
+        if let Some(obs) = observed {
+            if believed > 0.0 && obs < 0.75 * believed {
+                gray.insert((tick, server));
+            }
+        }
+    }
+    // Per-tick totals for the predicted-vs-actual cost ratio: a task's
+    // fair share of the tick's completed latency is proportional to its
+    // planned q·kv pairs.
+    let mut norm: BTreeMap<usize, (f64, f64, usize)> = BTreeMap::new();
+    for j in &js {
+        if let Some((_, lat)) = j.completed {
+            let e = norm.entry(j.tick).or_insert((0.0, 0.0, 0));
+            e.0 += lat;
+            e.1 += j.cost_pairs;
+            e.2 += 1;
+        }
+    }
+    let ratio_of = |j: &lineage::TaskJourney| -> Option<f64> {
+        let (_, lat) = j.completed?;
+        let &(lat_sum, pairs_sum, n) = norm.get(&j.tick)?;
+        let expected = if pairs_sum > 0.0 && j.cost_pairs > 0.0 {
+            lat_sum * j.cost_pairs / pairs_sum
+        } else if n > 0 {
+            lat_sum / n as f64
+        } else {
+            return None;
+        };
+        (expected > 0.0).then(|| lat / expected)
+    };
+    let mut order: Vec<&lineage::TaskJourney> = js.iter().collect();
+    order.sort_by(|a, b| {
+        b.hops().cmp(&a.hops()).then_with(|| {
+            ratio_of(b)
+                .unwrap_or(0.0)
+                .total_cmp(&ratio_of(a).unwrap_or(0.0))
+        })
+    });
+    let shown = order.len().min(top);
+    let mut t = Table::new(
+        &format!("Straggler root causes: top {shown} of {} task journeys", order.len()),
+        &[
+            "tick", "tag", "chain", "hops", "won", "server", "latency", "act/pred",
+            "wire wait", "stale", "root cause",
+        ],
+    );
+    for j in order.iter().take(top) {
+        let (server, latency) = match j.completed {
+            Some((s, l)) => (Some(s), Some(l)),
+            None => (None, None),
+        };
+        let wire_s = server.and_then(|s| wire.get(&(j.tick, s)).copied()).unwrap_or(0.0);
+        let is_gray = server.map(|s| gray.contains(&(j.tick, s))).unwrap_or(false);
+        let ratio = ratio_of(j);
+        let cause = if j.hops() > 0 {
+            format!("re-dispatch: {}", j.reason_chain())
+        } else if is_gray {
+            "gray server".to_string()
+        } else if latency.map(|l| wire_s > l).unwrap_or(false) {
+            "wire wait".to_string()
+        } else if ratio.map(|r| r > 1.5).unwrap_or(false) {
+            "under-predicted cost".to_string()
+        } else {
+            "-".to_string()
+        };
+        t.row(&[
+            j.tick.to_string(),
+            j.tag.to_string(),
+            j.reason_chain(),
+            j.hops().to_string(),
+            j.winning_hop().map(|h| h.to_string()).unwrap_or_else(|| "-".to_string()),
+            server.map(|s| s.to_string()).unwrap_or_else(|| "-".to_string()),
+            latency.map(secs).unwrap_or_else(|| "-".to_string()),
+            ratio.map(|r| f(r, 2)).unwrap_or_else(|| "-".to_string()),
+            secs(wire_s),
+            j.stale_duplicates.to_string(),
+            cause,
+        ]);
+    }
+    let totals = lineage::hop_totals(&trace.lineage);
+    let mut reasons = Table::new(
+        "Re-dispatch totals by reason (must equal TickStats counters)",
+        &["tick", "kill", "drain", "oom", "speculative", "total"],
+    );
+    for (tick, by) in &totals {
+        let g = |r: RedispatchReason| by.get(&r).copied().unwrap_or(0);
+        let total: u64 = by.values().sum();
+        reasons.row(&[
+            tick.to_string(),
+            g(RedispatchReason::Kill).to_string(),
+            g(RedispatchReason::Drain).to_string(),
+            g(RedispatchReason::Oom).to_string(),
+            g(RedispatchReason::Speculative).to_string(),
+            total.to_string(),
+        ]);
+    }
+    let hopped = js.iter().filter(|j| j.hops() > 0).count();
+    let stale: u32 = js.iter().map(|j| j.stale_duplicates).sum();
+    Ok(format!(
+        "{}\n{}\n{} tasks | {hopped} re-dispatched | {stale} stale duplicates deduped",
+        t.render(),
+        reasons.render(),
+        js.len(),
     ))
 }
 
@@ -328,7 +474,13 @@ mod tests {
     use super::*;
 
     fn trace_with(spans: Vec<Span>) -> TraceFile {
-        TraceFile { clock: ClockSource::Wall, spans, counters: vec![], speeds: vec![] }
+        TraceFile {
+            clock: ClockSource::Wall,
+            spans,
+            counters: vec![],
+            speeds: vec![],
+            lineage: vec![],
+        }
     }
 
     fn span(phase: Phase, tick: usize, server: Option<usize>, start: f64, dur: f64) -> Span {
@@ -415,12 +567,21 @@ mod tests {
             ]),
             tenant_row(3.0, 5.0),
             tenant_row(9.0, 6.0),
+            Json::obj(vec![
+                ("kind", Json::Str("breach".into())),
+                ("wave", Json::Num(0.0)),
+                ("tenant", Json::Num(9.0)),
+                ("slo", Json::Str("standard".into())),
+                ("latency_s", Json::Num(4.5)),
+                ("target_s", Json::Num(3.0)),
+            ]),
             Json::obj(vec![("kind", Json::Str("flush".into()))]),
         ];
         let out = render_gateway_accounting(&rows, 1).unwrap();
         // Top-1 by admitted is tenant 9; tenant 3 is summarized only.
         assert!(out.contains("top 1 of 2"), "{out}");
         assert!(out.contains("1 waves (1 saturated, max backlog 7)"), "{out}");
+        assert!(out.contains("1 SLO latency breaches"), "{out}");
     }
 
     #[test]
@@ -428,5 +589,57 @@ mod tests {
         let rows = vec![tenant_row(0.0, 1.0)];
         let err = render_gateway_accounting(&rows, 10).unwrap_err();
         assert!(err.to_string().contains("flush"), "{err}");
+    }
+
+    #[test]
+    fn breakdown_rejects_trace_with_zero_complete_ticks() {
+        // A run killed before its first tick completes leaves phase
+        // spans but no tick container — the report must refuse, not
+        // print an empty table.
+        let t = trace_with(vec![span(Phase::Compute, 0, Some(0), 0.0, 1.0)]);
+        let err = breakdown(&t).unwrap_err();
+        assert!(err.to_string().contains("no complete ticks"), "{err}");
+        assert!(breakdown(&trace_with(vec![])).is_err());
+    }
+
+    #[test]
+    fn lineage_report_requires_a_lineage_sidecar() {
+        let t = trace_with(vec![span(Phase::Tick, 0, None, 0.0, 1.0)]);
+        let err = render_lineage(&t, 10).unwrap_err();
+        assert!(err.to_string().contains("lineage"), "{err}");
+    }
+
+    #[test]
+    fn lineage_report_attributes_redispatch_chains() {
+        use super::super::lineage::{LineageEvent, LineageStage};
+        let mut t = trace_with(vec![span(Phase::Tick, 0, None, 0.0, 1.0)]);
+        let ev = |tag: u64, stage: LineageStage| LineageEvent {
+            tick: 0,
+            wave: 0,
+            tag,
+            t_s: 0.0,
+            stage,
+        };
+        t.lineage = vec![
+            ev(7, LineageStage::Planned { server: 0, cost_pairs: 100.0 }),
+            ev(7, LineageStage::Dispatched { server: 0, trace: 1 }),
+            ev(7, LineageStage::Redispatched {
+                from: 0,
+                to: 1,
+                reason: RedispatchReason::Kill,
+                hop: 1,
+            }),
+            ev(7, LineageStage::Dispatched { server: 1, trace: 2 }),
+            ev(7, LineageStage::Completed { server: 1, latency_s: 0.5 }),
+            ev(7, LineageStage::WireEcho { trace: 2 }),
+            ev(8, LineageStage::Planned { server: 1, cost_pairs: 100.0 }),
+            ev(8, LineageStage::Completed { server: 1, latency_s: 0.1 }),
+        ];
+        let out = render_lineage(&t, 10).unwrap();
+        assert!(out.contains("re-dispatch: kill"), "{out}");
+        // The winning hop is dispatch index 1 (the re-send's echo won).
+        assert!(out.contains("2 tasks | 1 re-dispatched"), "{out}");
+        let kill_row = out.lines().find(|l| l.contains("kill") && l.contains("0.5")).unwrap();
+        assert!(kill_row.contains('1'), "{kill_row}");
     }
 }

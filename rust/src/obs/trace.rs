@@ -29,6 +29,7 @@ use anyhow::{Context, Result};
 
 use crate::util::json::{self, Json};
 
+use super::lineage::LineageEvent;
 use super::{ClockSource, Phase, Recorder, Span};
 
 const US: f64 = 1e6;
@@ -109,6 +110,8 @@ pub fn export(recorder: &Recorder) -> Json {
             })
             .collect(),
     );
+    let lineage =
+        Json::Arr(recorder.lineage_events().iter().map(LineageEvent::to_json).collect());
     Json::obj(vec![
         ("traceEvents", Json::Arr(events)),
         ("displayTimeUnit", Json::Str("ms".to_string())),
@@ -118,6 +121,7 @@ pub fn export(recorder: &Recorder) -> Json {
                 ("clock", Json::Str(recorder.clock().name().to_string())),
                 ("counters", counters),
                 ("speeds", speeds),
+                ("lineage", lineage),
             ]),
         ),
     ])
@@ -137,6 +141,9 @@ pub struct TraceFile {
     pub counters: Vec<(String, f64)>,
     /// `(tick, server, believed, observed)` speed samples.
     pub speeds: Vec<(usize, usize, f64, Option<f64>)>,
+    /// Per-task causal lineage log (empty for traces written before
+    /// the lineage sidecar existed).
+    pub lineage: Vec<LineageEvent>,
 }
 
 /// Parse a trace-file JSON value back into spans + sidecar.
@@ -203,7 +210,15 @@ pub fn parse_trace(v: &Json) -> Result<TraceFile> {
             speeds.push((tick, server, believed, observed));
         }
     }
-    Ok(TraceFile { clock, spans, counters, speeds })
+    let mut lineage = Vec::new();
+    if let Some(arr) = sidecar.and_then(|d| d.get("lineage")).and_then(|s| s.as_arr()) {
+        for row in arr {
+            lineage.push(
+                LineageEvent::from_json(row).context("malformed lineage sidecar row")?,
+            );
+        }
+    }
+    Ok(TraceFile { clock, spans, counters, speeds, lineage })
 }
 
 /// Read + parse a trace file from disk.
@@ -310,6 +325,27 @@ mod tests {
         assert!((c.start_s - 0.25).abs() < 1e-12 && (c.dur_s - 1.0).abs() < 1e-12);
         let t = parsed.spans.iter().find(|s| s.phase == Phase::Tick).unwrap();
         assert!((t.dur_s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lineage_sidecar_roundtrips_and_is_optional() {
+        use crate::obs::lineage::{LineageStage, RedispatchReason};
+        let r = Recorder::new_virtual();
+        r.tick_window(0, 0.0, 1.0);
+        r.lineage_planned(0, 42, 1, 1024.0);
+        r.lineage_dispatched(0, 0, 42, 1, 7);
+        let hop = r.lineage_redispatched(0, 0, 42, 1, 2, RedispatchReason::Kill);
+        assert_eq!(hop, 1);
+        let parsed = parse_trace(&export(&r)).unwrap();
+        assert_eq!(parsed.lineage.len(), 3);
+        assert_eq!(parsed.lineage, r.lineage_events());
+        assert!(matches!(
+            parsed.lineage[2].stage,
+            LineageStage::Redispatched { from: 1, to: 2, reason: RedispatchReason::Kill, hop: 1 }
+        ));
+        // Pre-lineage trace files parse with an empty log.
+        let legacy = Json::obj(vec![("traceEvents", Json::Arr(vec![]))]);
+        assert!(parse_trace(&legacy).unwrap().lineage.is_empty());
     }
 
     #[test]

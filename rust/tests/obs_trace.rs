@@ -10,7 +10,10 @@
 //!   the socket suite;
 //! * the discrete-event simulator drives the *same* recorder API on the
 //!   virtual clock and yields a trace that validates, abuts tick
-//!   windows, and renders through `distca report`'s breakdown.
+//!   windows, and renders through `distca report`'s breakdown;
+//! * the lineage log is an exact audit of recovery: per-tick hop totals
+//!   by reason equal the `TickStats` counters bump-for-bump, and the
+//!   reconstructed journeys carry the re-dispatch chains.
 
 use std::sync::Arc;
 
@@ -120,6 +123,105 @@ fn threaded_trace_validates_and_phases_sum_to_tick_time() {
     let report = breakdown(&parsed).expect("breakdown");
     assert_eq!(report.ticks.len(), TICKS);
     assert!(report.render().contains("Per-tick summary"));
+}
+
+/// The lineage acceptance bar: every recovery counter the coordinator
+/// bumps has exactly one adjacent lineage hop with the matching reason,
+/// so for any faulted run the per-tick [`hop_totals`] derived from the
+/// lineage log must equal the `TickStats` counters *exactly* —
+/// `Speculative` ↔ `redispatched`, `Kill` ↔ `send_failovers`,
+/// `Oom` ↔ `oom_evicted`, `Drain` ↔ `drain_redirected` — and the
+/// stale-dedup events must equal `duplicates_suppressed`. The journeys
+/// reconstructed from the same log must carry the re-dispatch chains
+/// `report --lineage` renders.
+#[test]
+fn lineage_hops_match_tick_stats_counters_exactly() {
+    use distca::obs::lineage::{hop_totals, journeys, RedispatchReason};
+
+    const N: usize = 3;
+    const TICKS: usize = 4;
+    let mut co = ElasticCoordinator::spawn(N, ElasticCfg::default(), |_| {
+        Box::new(ReferenceCaCompute::new(H, HKV, D))
+    });
+    let recorder = Recorder::new_wall();
+    co.set_recorder(Arc::clone(&recorder));
+    // Kill server 1 mid-tick 1 (deadline re-dispatch and/or send
+    // failover), then overflow server 2's arena at tick 2 (OOM
+    // eviction). Server 0 is never faulted, so the pool survives.
+    let fault = FaultPlan::new().kill(1, 1).oom(2, 2);
+    let mut rng = Rng::new(23);
+    for tick in 0..TICKS {
+        let alive = co.pool.schedulable();
+        let tasks = synthetic_tick(&mut rng, tick, N, &alive);
+        let outputs = co.run_tick(tick, &tasks, &fault).expect("tick");
+        assert_eq!(outputs.len(), tasks.len(), "tick {tick}: incomplete gather");
+    }
+    let stats = co.shutdown().expect("shutdown");
+    assert_eq!(stats.len(), TICKS);
+
+    let events = recorder.lineage_events();
+    assert!(!events.is_empty(), "a faulted run must leave a lineage log");
+    let hops = hop_totals(&events);
+    let mut stale_by_tick = std::collections::BTreeMap::<usize, u64>::new();
+    for ev in &events {
+        if matches!(ev.stage, distca::obs::lineage::LineageStage::StaleDeduped { .. }) {
+            *stale_by_tick.entry(ev.tick).or_insert(0) += 1;
+        }
+    }
+
+    let mut total_hops = 0u64;
+    for st in &stats {
+        let empty = std::collections::BTreeMap::new();
+        let by_reason = hops.get(&st.tick).unwrap_or(&empty);
+        let get = |r: RedispatchReason| by_reason.get(&r).copied().unwrap_or(0);
+        assert_eq!(
+            get(RedispatchReason::Speculative),
+            st.redispatched as u64,
+            "tick {}: speculative hops vs redispatched",
+            st.tick
+        );
+        assert_eq!(
+            get(RedispatchReason::Kill),
+            st.send_failovers as u64,
+            "tick {}: kill hops vs send_failovers",
+            st.tick
+        );
+        assert_eq!(
+            get(RedispatchReason::Oom),
+            st.oom_evicted as u64,
+            "tick {}: oom hops vs oom_evicted",
+            st.tick
+        );
+        assert_eq!(
+            get(RedispatchReason::Drain),
+            st.drain_redirected as u64,
+            "tick {}: drain hops vs drain_redirected",
+            st.tick
+        );
+        assert_eq!(
+            stale_by_tick.get(&st.tick).copied().unwrap_or(0),
+            st.duplicates_suppressed as u64,
+            "tick {}: stale-dedup events vs duplicates_suppressed",
+            st.tick
+        );
+        total_hops += by_reason.values().sum::<u64>();
+    }
+    // The scripted faults must actually have forced recovery somewhere —
+    // otherwise the equalities above are vacuous.
+    assert!(total_hops > 0, "scripted kill/oom produced no lineage hops");
+
+    // Journey reconstruction: every hop shows up in exactly one task's
+    // chain, and a faulted tick's chain names the reason.
+    let js = journeys(&events);
+    let chained: u64 = js.iter().map(|j| u64::from(j.hops())).sum();
+    assert_eq!(chained, total_hops, "journeys must account for every hop");
+    let faulted = js.iter().find(|j| j.hops() > 0).expect("a re-dispatched journey");
+    assert_ne!(faulted.reason_chain(), "-", "chain must name its reasons");
+    assert!(
+        faulted.completed.is_some(),
+        "re-dispatched task {:#x} never completed",
+        faulted.tag
+    );
 }
 
 /// The networked acceptance case: a loopback soak over real TCP

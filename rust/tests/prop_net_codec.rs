@@ -16,7 +16,9 @@
 //! 4. **Tenant integrity** (DCA2): the header's tenant field is derived
 //!    from the tag on encode, validated against the tag on decode, and
 //!    survives any split boundary — including one inside the tenant
-//!    field itself.
+//!    field itself. The DCA3 `trace` field rides the same sweeps: every
+//!    random frame carries a random 64-bit trace id that must survive
+//!    bit-exact.
 //! 5. **Zero-copy discipline**: decoding into pooled recv buffers
 //!    changes no bits, strands no buffers on error paths, and the
 //!    borrowed task views it feeds keep the worker's in-place arena
@@ -69,6 +71,7 @@ fn random_frame(rng: &mut Rng) -> Frame {
         tag,
         wave: rng.gen_index(0, 2) as u8,
         epoch: rng.next_u64() >> 8,
+        trace: rng.next_u64(),
         payload: (0..len).map(|_| rng.gen_f64(-1e6, 1e6) as f32).collect(),
     }
 }
@@ -134,6 +137,7 @@ fn nan_and_bitcast_header_words_survive_bit_for_bit() {
         tag: 1,
         wave: 0,
         epoch: 0,
+        trace: 0,
         payload: patterns.iter().map(|&b| f32::from_bits(b)).collect(),
     };
     let mut dec = FrameDecoder::new();
@@ -158,6 +162,7 @@ fn payload_count_beyond_f32_mantissa_is_exact() {
         tag: 9,
         wave: 0,
         epoch: 0,
+        trace: 0,
         payload,
     };
     let bytes = f.encode().unwrap();
@@ -203,6 +208,7 @@ fn oversized_frame_rejected_with_descriptive_error() {
     hdr.push(0); // wave
     hdr.extend_from_slice(&0u64.to_le_bytes()); // epoch
     hdr.extend_from_slice(&0u32.to_le_bytes()); // tenant
+    hdr.extend_from_slice(&0u64.to_le_bytes()); // trace
     hdr.extend_from_slice(&(MAX_PAYLOAD_ELEMS + 1).to_le_bytes());
     let mut dec = FrameDecoder::new();
     dec.push(&hdr);
@@ -325,6 +331,7 @@ fn pooled_decode_preserves_bits_across_splits_and_recycles_buffers() {
             tag: 11,
             wave: 0,
             epoch: 0,
+            trace: 0,
             payload: [0x7FC0_1234u32, 0xFFC0_0000, 0x0000_0001, 0x8000_0000, u32::MAX]
                 .iter()
                 .map(|&b| f32::from_bits(b))
@@ -393,6 +400,7 @@ fn pool_buffers_are_not_stranded_on_decode_error_paths() {
     hdr.push(0); // wave
     hdr.extend_from_slice(&0u64.to_le_bytes()); // epoch
     hdr.extend_from_slice(&0u32.to_le_bytes()); // tenant
+    hdr.extend_from_slice(&0u64.to_le_bytes()); // trace
     hdr.extend_from_slice(&(MAX_PAYLOAD_ELEMS + 1).to_le_bytes());
     let mut dec = FrameDecoder::new();
     dec.push(&hdr);

@@ -1,0 +1,136 @@
+//! Property tests for the mergeable log-bucketed histograms
+//! (`obs::hist`) — the invariants the live `/metrics` quantiles and the
+//! post-hoc merged STATS roll-ups rest on:
+//!
+//! 1. **Merge exactness**: a histogram merged from randomly-split
+//!    shards has *identical* bucket counts, total count, and min/max
+//!    bit patterns to the histogram of the concatenated samples, for
+//!    any shard split — so every quantile query agrees exactly. (The
+//!    running `sum` is f64 and addition order differs across shard
+//!    splits, so it is checked to relative epsilon, not bits.) This is
+//!    what makes per-worker shards roll up into one truthful tail.
+//! 2. **Quantile error bound across magnitudes**: for samples anywhere
+//!    from ~10 ns to minutes, the estimated quantile is within the
+//!    documented [`QUANTILE_REL_ERROR`] of the true nearest-rank sample
+//!    quantile.
+//! 3. **Bit-exact serialization**: `to_json` → JSON text → parse →
+//!    `from_json` reproduces the histogram exactly, including the
+//!    sum/min/max bit patterns that plain JSON numbers cannot carry.
+
+use distca::obs::hist::{LogHistogram, MIN_V, QUANTILE_REL_ERROR};
+use distca::util::json::parse;
+use distca::util::rng::Rng;
+
+/// Random positive duration spanning ~9 decades (log-uniform).
+fn random_duration(rng: &mut Rng) -> f64 {
+    let exp = rng.gen_f64(-8.0, 2.8); // 10 ns .. ~10 min
+    10f64.powf(exp)
+}
+
+#[test]
+fn merged_shards_equal_the_concatenated_histogram() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(0xB16_B00B5 ^ seed);
+        let n = rng.gen_index(1, 500);
+        let n_shards = rng.gen_index(1, 8);
+        let mut whole = LogHistogram::new();
+        let mut shards: Vec<LogHistogram> = (0..n_shards).map(|_| LogHistogram::new()).collect();
+        for _ in 0..n {
+            let v = random_duration(&mut rng);
+            whole.observe(v);
+            shards[rng.gen_index(0, n_shards)].observe(v);
+        }
+        let mut merged = LogHistogram::new();
+        for s in &shards {
+            merged.merge(s);
+        }
+        // Every quantile-relevant field is exact: counts, min/max bits.
+        assert_eq!(merged.count(), whole.count(), "seed {seed}: count");
+        assert_eq!(
+            merged.min().to_bits(),
+            whole.min().to_bits(),
+            "seed {seed}: min bits"
+        );
+        assert_eq!(
+            merged.max().to_bits(),
+            whole.max().to_bits(),
+            "seed {seed}: max bits"
+        );
+        assert_eq!(
+            merged.to_json().get("buckets").unwrap().to_string_compact(),
+            whole.to_json().get("buckets").unwrap().to_string_compact(),
+            "seed {seed}: bucket counts differ"
+        );
+        for q in [0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            assert_eq!(
+                merged.quantile(q).map(f64::to_bits),
+                whole.quantile(q).map(f64::to_bits),
+                "seed {seed}: quantile {q} differs"
+            );
+        }
+        // f64 addition is order-sensitive, so the running sum is only
+        // epsilon-equal across shard splits.
+        let rel = (merged.sum() - whole.sum()).abs() / whole.sum().max(f64::MIN_POSITIVE);
+        assert!(rel < 1e-9, "seed {seed}: sum rel err {rel}");
+    }
+}
+
+#[test]
+fn quantile_error_bound_holds_across_magnitudes() {
+    // One decade-wide sample cloud per magnitude, ns to minutes: the
+    // relative-error bound must hold at every scale the system measures
+    // (kernel inner loops through full soaks).
+    for (m, &mag) in [1e-7, 1e-5, 1e-3, 1e-1, 10.0, 600.0].iter().enumerate() {
+        let mut rng = Rng::new(0xC0FFEE ^ m as u64);
+        let n = 2000;
+        let mut h = LogHistogram::new();
+        let mut samples: Vec<f64> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let v = mag * rng.gen_f64(0.3, 3.0);
+            assert!(v > MIN_V, "test samples must sit above the floor bucket");
+            h.observe(v);
+            samples.push(v);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.01, 0.25, 0.50, 0.90, 0.95, 0.99, 1.0] {
+            // Nearest-rank truth: smallest sample at cumulative rank
+            // >= ceil(q * n).
+            let rank = ((q * n as f64).ceil() as usize).max(1);
+            let truth = samples[rank - 1];
+            let est = h.quantile(q).unwrap();
+            let rel = (est - truth).abs() / truth;
+            assert!(
+                rel <= QUANTILE_REL_ERROR,
+                "magnitude {mag}: q={q} est {est} vs true {truth} (rel {rel})"
+            );
+        }
+    }
+}
+
+#[test]
+fn serialization_roundtrips_bit_exact_through_json_text() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(0x5E_12_1A_11 ^ seed);
+        let mut h = LogHistogram::new();
+        for _ in 0..rng.gen_index(0, 300) {
+            h.observe(random_duration(&mut rng));
+        }
+        // Include degenerate observations: zeros and clamped values all
+        // have to survive the wire form too.
+        if rng.gen_index(0, 2) == 0 {
+            h.observe(0.0);
+            h.observe(1e9);
+        }
+        let text = h.to_json().to_string_compact();
+        let back = LogHistogram::from_json(&parse(&text).unwrap()).unwrap();
+        assert_eq!(back, h, "seed {seed}");
+        assert_eq!(back.sum().to_bits(), h.sum().to_bits(), "seed {seed}: sum bits");
+        assert_eq!(back.min().to_bits(), h.min().to_bits(), "seed {seed}: min bits");
+        assert_eq!(back.max().to_bits(), h.max().to_bits(), "seed {seed}: max bits");
+        assert_eq!(
+            back.to_json().to_string_compact(),
+            text,
+            "seed {seed}: re-serialization differs"
+        );
+    }
+}
